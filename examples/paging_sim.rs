@@ -1,0 +1,159 @@
+//! END-TO-END DRIVER — the paper's motivating application (ref [1]):
+//! paging in a cellular core network.
+//!
+//! Full-system composition: a synthetic mobility workload streams handover
+//! events through the serving coordinator (bounded ingestion queue + ingest
+//! workers + decay scheduler) into MCPrioQ, while a paging policy queries
+//! `infer_threshold` concurrently to locate "idle" users. We report the
+//! paper's headline quantities:
+//!
+//! * paging success probability vs cells paged (threshold sweep),
+//! * inference scan depth — the measured O(CDF⁻¹(t)) cost,
+//! * online update throughput while queries run,
+//! * behaviour across a topology change with decay on (adaptation).
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example paging_sim`
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mcprioq::config::ServerConfig;
+use mcprioq::coordinator::{DecayScheduler, Engine};
+use mcprioq::testutil::Rng64;
+use mcprioq::workload::{MobilityConfig, MobilityTrace, TransitionStream};
+
+const WARMUP_EVENTS: usize = 200_000;
+const PHASE_EVENTS: usize = 150_000;
+const PAGE_PROBES: usize = 4_000;
+
+fn main() {
+    let mob_cfg = MobilityConfig {
+        width: 24,
+        height: 24,
+        users: 400,
+        skew: 1.1,
+        explore: 0.05,
+        seed: 42,
+    };
+    println!("== mcprioq paging simulation ==");
+    println!(
+        "topology: {}x{} cells, {} users, skew {}, explore {}",
+        mob_cfg.width, mob_cfg.height, mob_cfg.users, mob_cfg.skew, mob_cfg.explore
+    );
+
+    let config = ServerConfig { shards: 1, queue_capacity: 65_536, ..Default::default() };
+    let engine = Engine::new(&config, 2);
+    let decay = DecayScheduler::start(Arc::clone(&engine), Duration::from_millis(400));
+
+    let mut trace = MobilityTrace::new(mob_cfg);
+
+    // ---- Phase 1: online learning under live queries ----
+    let queries_done = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let engine = Arc::clone(&engine);
+        let queries_done = Arc::clone(&queries_done);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut rng = Rng64::new(7);
+            while !stop.load(Ordering::Relaxed) {
+                let cell = rng.next_below(24 * 24);
+                let _ = engine.infer_threshold(cell, 0.9);
+                queries_done.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+    };
+
+    let t0 = Instant::now();
+    for _ in 0..WARMUP_EVENTS {
+        let (from, to) = trace.next_transition();
+        engine.observe(from, to); // through the bounded queue, like prod
+    }
+    engine.quiesce();
+    let learn_dt = t0.elapsed();
+    stop.store(true, Ordering::SeqCst);
+    reader.join().unwrap();
+    println!(
+        "\nphase 1 — online learning: {} handovers in {:.2?} ({:.0} updates/s) \
+         with {} concurrent queries served",
+        WARMUP_EVENTS,
+        learn_dt,
+        WARMUP_EVENTS as f64 / learn_dt.as_secs_f64(),
+        queries_done.load(Ordering::Relaxed),
+    );
+    let s = engine.stats();
+    println!(
+        "model: {} cells, {} edges, query p50={}ns p99={}ns",
+        s.nodes, s.edges, s.query_ns_p50, s.query_ns_p99
+    );
+
+    // ---- Phase 2: paging accuracy sweep ----
+    println!("\nphase 2 — paging policy sweep (true next cell vs paged set):");
+    println!("{:>9} {:>10} {:>12} {:>12} {:>10}", "threshold", "success", "cells/page", "scan depth", "scan p99");
+    for &t in &[0.5, 0.8, 0.9, 0.95, 0.99] {
+        let (success, avg_cells, avg_scan, p99_scan) = paging_accuracy(&engine, &mut trace, t);
+        println!(
+            "{t:>9.2} {:>9.1}% {avg_cells:>12.2} {avg_scan:>12.2} {p99_scan:>10}",
+            success * 100.0
+        );
+    }
+
+    // ---- Phase 3: topology change + decay adaptation ----
+    println!("\nphase 3 — topology flip (commuter corridors move), decay adapts:");
+    trace.flip_topology();
+    let (s0, _, _, _) = paging_accuracy(&engine, &mut trace, 0.9);
+    println!("  success@0.9 immediately after flip: {:.1}%", s0 * 100.0);
+    for round in 1..=4 {
+        for _ in 0..PHASE_EVENTS {
+            let (from, to) = trace.next_transition();
+            engine.observe(from, to);
+        }
+        engine.quiesce();
+        let (sr, _, _, _) = paging_accuracy(&engine, &mut trace, 0.9);
+        println!(
+            "  after {} more events (+decay every 400ms): {:.1}%",
+            round * PHASE_EVENTS,
+            sr * 100.0
+        );
+    }
+    let s = engine.stats();
+    println!("\nfinal: {} edges (decay pruned stale corridors), {} decay runs", s.edges, decay.runs());
+    engine.shutdown();
+    println!("\nOK — full stack (workload -> queue -> workers -> MCPrioQ -> inference) exercised.");
+}
+
+/// Simulate paging: a user's *true* next move is drawn from the mobility
+/// model; the policy pages cells from `infer_threshold(from, t)` and
+/// succeeds if the true destination is in the paged set.
+fn paging_accuracy(
+    engine: &Engine,
+    trace: &mut MobilityTrace,
+    t: f64,
+) -> (f64, f64, f64, usize) {
+    let mut hits = 0usize;
+    let mut cells_paged = 0usize;
+    let mut scans = Vec::with_capacity(PAGE_PROBES);
+    for _ in 0..PAGE_PROBES {
+        // Draw a real movement from the model (also advances the world).
+        let (from, to) = trace.next_transition();
+        let rec = engine.infer_threshold(from, t);
+        if rec.items.iter().any(|&(cell, _)| cell == to) {
+            hits += 1;
+        }
+        cells_paged += rec.items.len();
+        scans.push(rec.scanned);
+        // Feed the event back (the system keeps learning while paging).
+        engine.observe_direct(from, to);
+    }
+    scans.sort_unstable();
+    let p99 = scans[(scans.len() * 99) / 100];
+    (
+        hits as f64 / PAGE_PROBES as f64,
+        cells_paged as f64 / PAGE_PROBES as f64,
+        scans.iter().sum::<usize>() as f64 / scans.len() as f64,
+        p99,
+    )
+}

@@ -1,0 +1,69 @@
+//! §Perf probe: observe/inference cost vs working-set size and the
+//! component breakdown (stream, rcu pin, full observe). Regenerates the
+//! EXPERIMENTS.md §Perf table.
+//!
+//! Run: `cargo run --release --example perf_probe`
+
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::workload::{TransitionStream, ZipfChainStream};
+use std::time::Instant;
+
+fn main() {
+    // Component breakdown at a converged, cache-resident size.
+    let chain = McPrioQ::new(ChainConfig::default());
+    let mut s = ZipfChainStream::new(1_000, 24, 1.1, 99);
+    for _ in 0..1_000_000 {
+        let (a, b) = s.next_transition();
+        chain.observe(a, b);
+    }
+    let n = 2_000_000u64;
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..n {
+        let (a, b) = s.next_transition();
+        acc = acc.wrapping_add(a ^ b);
+    }
+    println!("stream only:  {:>4.0} ns", t0.elapsed().as_nanos() as f64 / n as f64);
+    std::hint::black_box(acc);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        std::hint::black_box(mcprioq::rcu::pin());
+    }
+    println!("rcu pin:      {:>4.0} ns", t0.elapsed().as_nanos() as f64 / n as f64);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let (a, b) = s.next_transition();
+        chain.observe(a, b);
+    }
+    println!("full observe: {:>4.0} ns (converged, cache-resident)", t0.elapsed().as_nanos() as f64 / n as f64);
+    let t0 = Instant::now();
+    for i in 0..n {
+        std::hint::black_box(chain.infer_threshold(i % 1_000, 0.9));
+    }
+    println!("infer t=0.9:  {:>4.0} ns", t0.elapsed().as_nanos() as f64 / n as f64);
+
+    // Working-set sweep: the memory wall, not the structure, dominates at
+    // large graphs on this host.
+    println!("\nobserve vs working set:");
+    for &(nodes, fanout) in &[(100u64, 16u64), (1_000, 24), (10_000, 32), (50_000, 32)] {
+        let chain = McPrioQ::new(ChainConfig::default());
+        let mut s = ZipfChainStream::new(nodes, fanout, 1.1, 99);
+        let warm = (nodes * 400).max(1_000_000);
+        for _ in 0..warm {
+            let (a, b) = s.next_transition();
+            chain.observe(a, b);
+        }
+        let n = 2_000_000u64;
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let (a, b) = s.next_transition();
+            chain.observe(a, b);
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / n as f64;
+        println!(
+            "  nodes={nodes:>6} edges={:>8} ~{:>7} KiB: {ns:>4.0} ns/observe",
+            chain.edge_count(),
+            chain.stats().approx_bytes / 1024
+        );
+    }
+}

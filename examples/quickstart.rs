@@ -1,0 +1,64 @@
+//! Quickstart: build a small markov chain online, query it while it
+//! learns, and run a decay cycle — the whole public API in 80 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mcprioq::chain::{ChainConfig, McPrioQ};
+
+fn main() {
+    // A chain with default settings (dst hash table on, decay 1/2).
+    let chain = McPrioQ::new(ChainConfig::default());
+
+    // Feed transitions: user journeys through a tiny site.
+    // home(0) -> search(1) mostly; search -> product(2); product -> cart(3).
+    let journeys: &[&[u64]] = &[
+        &[0, 1, 2, 3],
+        &[0, 1, 2, 0],
+        &[0, 1, 2, 3],
+        &[0, 2, 3],
+        &[0, 1, 0],
+        &[0, 1, 2, 3],
+    ];
+    for j in journeys {
+        for w in j.windows(2) {
+            chain.observe(w[0], w[1]);
+        }
+    }
+
+    // "Which pages follow home(0), with 90% confidence?"
+    let rec = chain.infer_threshold(0, 0.9);
+    println!("after home(0), 90% of the time users go to:");
+    for (page, p) in &rec.items {
+        println!("  page {page}  p={p:.2}");
+    }
+    println!("(scanned {} of {} edges; cum={:.2})\n", rec.scanned, chain.edge_count(), rec.cumulative);
+
+    // Top-1 from search(1).
+    let top = chain.infer_topk(1, 1);
+    println!("most likely after search(1): page {} (p={:.2})", top.items[0].0, top.items[0].1);
+
+    // Single-edge probability.
+    println!("P(2 -> 3) = {:.2}", chain.probability(2, 3).unwrap());
+
+    // Model decay (§II.C): halve all counters, prune dead edges.
+    let before = chain.edge_count();
+    let (surviving, pruned) = chain.decay();
+    println!("\ndecay: {before} edges -> {} (pruned {pruned}, surviving mass {surviving})", chain.edge_count());
+
+    // The distribution shape survives decay.
+    let rec = chain.infer_threshold(0, 0.9);
+    println!("after decay, home(0) still recommends {:?}", rec.items.iter().map(|&(d, _)| d).collect::<Vec<_>>());
+
+    // Structure invariants hold whenever quiesced.
+    chain.check_invariants().expect("invariants");
+    let stats = chain.stats();
+    println!(
+        "\nstats: {} nodes, {} edges, {} observations, {} swaps ({} skipped), ~{} KiB",
+        stats.nodes,
+        stats.edges,
+        stats.observes,
+        stats.swaps,
+        stats.swap_skips,
+        stats.approx_bytes / 1024
+    );
+}

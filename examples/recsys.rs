@@ -1,0 +1,122 @@
+//! Recommender-system example — the paper's introductory use case:
+//! "recommend products such that the probability of a match is above a
+//! threshold" over live user sessions, including the sparse-vs-dense
+//! engine comparison when AOT artifacts are available.
+//!
+//! Run: `make artifacts && cargo run --release --example recsys`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mcprioq::baselines::MarkovModel;
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::runtime::{default_artifacts_dir, DenseXlaChain, XlaRuntime};
+use mcprioq::workload::{RecsysConfig, SessionStream, TransitionStream};
+
+const ITEMS: u64 = 1_000;
+const TRAIN: usize = 300_000;
+const EVAL: usize = 20_000;
+
+fn main() {
+    let cfg = RecsysConfig { items: ITEMS, fanout: 24, skew: 1.1, continue_p: 0.85, seed: 9 };
+    let mut stream = SessionStream::new(cfg);
+    let chain = McPrioQ::new(ChainConfig::default());
+
+    // ---- online training ----
+    let t0 = Instant::now();
+    for _ in 0..TRAIN {
+        let (prev, item) = stream.next_transition();
+        chain.observe(prev, item);
+    }
+    let dt = t0.elapsed();
+    println!("== mcprioq recsys ==");
+    println!(
+        "trained on {TRAIN} session transitions in {dt:.2?} ({:.2}M updates/s)",
+        TRAIN as f64 / dt.as_secs_f64() / 1e6
+    );
+    let s = chain.stats();
+    println!("catalog: {} items with behaviour, {} co-view edges, ~{} KiB\n", s.nodes, s.edges, s.approx_bytes / 1024);
+
+    // ---- hit-rate evaluation: does the next real view appear in the
+    //      recommended set? ----
+    println!("{:>10} {:>10} {:>12} {:>12}", "threshold", "hit-rate", "items/rec", "scan depth");
+    for &t in &[0.3, 0.5, 0.7, 0.9] {
+        let mut hits = 0;
+        let mut shown = 0;
+        let mut scanned = 0;
+        for _ in 0..EVAL {
+            let (prev, actual) = stream.next_transition();
+            let rec = chain.infer_threshold(prev, t);
+            if rec.items.iter().any(|&(i, _)| i == actual) {
+                hits += 1;
+            }
+            shown += rec.items.len();
+            scanned += rec.scanned;
+            chain.observe(prev, actual); // keep learning online
+        }
+        println!(
+            "{t:>10.1} {:>9.1}% {:>12.2} {:>12.2}",
+            100.0 * hits as f64 / EVAL as f64,
+            shown as f64 / EVAL as f64,
+            scanned as f64 / EVAL as f64
+        );
+    }
+
+    // ---- sparse vs dense engine (three-layer path) ----
+    match XlaRuntime::new(&default_artifacts_dir()) {
+        Ok(rt) => {
+            println!("\nsparse vs dense (XLA/PJRT on {}):", rt.platform());
+            let dense = DenseXlaChain::new(Arc::new(rt), 512).expect("dense engine");
+            // Train the dense engine on the same distribution (smaller id
+            // space: dense capacity is compiled in).
+            let cfg = RecsysConfig { items: 500, fanout: 24, skew: 1.1, continue_p: 0.85, seed: 9 };
+            let mut stream = SessionStream::new(cfg);
+            let sparse = McPrioQ::new(ChainConfig::default());
+            let pairs: Vec<(u64, u64)> = (0..50_000).map(|_| stream.next_transition()).collect();
+            let t0 = Instant::now();
+            for &(a, b) in &pairs {
+                sparse.observe(a, b);
+            }
+            let sparse_dt = t0.elapsed();
+            let t0 = Instant::now();
+            for &(a, b) in &pairs {
+                dense.observe(a, b);
+            }
+            let dense_dt = t0.elapsed();
+            let t0 = Instant::now();
+            for i in 0..2_000u64 {
+                let _ = sparse.infer_topk(pairs[i as usize % pairs.len()].0, 8);
+            }
+            let sparse_q = t0.elapsed();
+            let t0 = Instant::now();
+            for i in 0..2_000u64 {
+                let _ = dense.infer_topk(pairs[i as usize % pairs.len()].0, 8);
+            }
+            let dense_q = t0.elapsed();
+            println!(
+                "  updates: sparse {:.2?} vs dense {:.2?} ({:.0}x)",
+                sparse_dt,
+                dense_dt,
+                dense_dt.as_secs_f64() / sparse_dt.as_secs_f64()
+            );
+            println!(
+                "  queries: sparse {:.2?} vs dense {:.2?} ({:.0}x) for 2000 top-8",
+                sparse_q,
+                dense_q,
+                dense_q.as_secs_f64() / sparse_q.as_secs_f64()
+            );
+            println!(
+                "  memory:  sparse ~{} KiB vs dense {} KiB (capacity {})",
+                sparse.stats().approx_bytes / 1024,
+                dense.resident_bytes() / 1024,
+                dense.capacity()
+            );
+            // Answers agree.
+            let a = sparse.infer_topk(pairs[0].0, 4);
+            let b = dense.infer_topk(pairs[0].0, 4);
+            assert_eq!(a.items.len(), b.items.len());
+            println!("  answers agree on spot-check (src {}): {:?}", pairs[0].0, a.items);
+        }
+        Err(e) => println!("\n(dense comparison skipped: {e:#})"),
+    }
+}

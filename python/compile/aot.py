@@ -1,0 +1,93 @@
+"""AOT compile path: lower the Layer-2 JAX entry points to HLO *text*
+artifacts the rust runtime loads via the `xla` crate.
+
+HLO text — NOT `lowered.compile()` / serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the published xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; python never appears on the request path.
+
+Outputs, per (n, b, k) variant in VARIANTS:
+    artifacts/dense_infer_n{n}_b{b}_k{k}.hlo.txt
+    artifacts/dense_update_n{n}_b{b}.hlo.txt
+    artifacts/dense_decay_n{n}.hlo.txt
+    artifacts/manifest.txt   (one line per artifact: kind n b k filename)
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import decay_fn, infer_fn, update_fn
+
+# (n, b, k) variants compiled ahead of time. n is the dense node capacity;
+# rust picks the smallest variant that fits the live graph (E6 sweeps all).
+VARIANTS = [
+    (64, 8, 8),
+    (256, 8, 16),
+    (1024, 8, 16),
+]
+
+
+def to_hlo_text(lowered, return_tuple) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    `return_tuple=False` is used for the single-output update/decay entry
+    points: the PJRT result is then a plain array buffer that rust feeds
+    straight back as the next call's `counts` argument, keeping the dense
+    state resident on the device with zero host round-trips.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, path, return_tuple=True):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered, return_tuple)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build(outdir):
+    os.makedirs(outdir, exist_ok=True)
+    manifest = []
+    for n, b, k in VARIANTS:
+        fn, args = infer_fn(n, b, k)
+        name = f"dense_infer_n{n}_b{b}_k{k}.hlo.txt"
+        size = lower_to_file(fn, args, os.path.join(outdir, name))
+        manifest.append(f"infer {n} {b} {k} {name}")
+        print(f"  {name}: {size} chars")
+
+        fn, args = update_fn(n, b)
+        name = f"dense_update_n{n}_b{b}.hlo.txt"
+        size = lower_to_file(fn, args, os.path.join(outdir, name), return_tuple=False)
+        manifest.append(f"update {n} {b} 0 {name}")
+        print(f"  {name}: {size} chars")
+
+        fn, args = decay_fn(n)
+        name = f"dense_decay_n{n}.hlo.txt"
+        size = lower_to_file(fn, args, os.path.join(outdir, name), return_tuple=False)
+        manifest.append(f"decay {n} 0 0 {name}")
+        print(f"  {name}: {size} chars")
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts + manifest to {outdir}")
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Layer-1 Pallas kernel: model decay (§II.C) for the dense engine —
+floor-halve every counter, tiled through VMEM.
+
+Element-wise and embarrassingly parallel: the BlockSpec streams row tiles
+HBM -> VMEM -> HBM; the arithmetic is two VPU ops per element, so the op is
+pure memory bandwidth (the roofline note in DESIGN.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(counts_ref, out_ref):
+    out_ref[...] = jnp.floor(counts_ref[...] * 0.5)
+
+
+def decay(counts, block_rows=64):
+    """Floor-halve a [n, n] counts matrix (integer decay semantics)."""
+    n, m = counts.shape
+    block = min(block_rows, n)
+    assert n % block == 0, f"rows {n} not a multiple of block {block}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(counts)

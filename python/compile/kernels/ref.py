@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the dense markov-chain engine.
+
+This is the correctness ground truth (invariant P7): the Pallas kernels in
+`topk_cumprob.py` / `decay.py` must match these functions exactly on ids
+and to float tolerance on probabilities, across the shape/dtype sweep in
+python/tests/.
+
+Tie-breaking contract: equal probabilities resolve to the LOWEST dst index
+first. Both the iterative-argmax kernel (argmax returns the first maximum)
+and the stable descending sort here honour it, so id comparisons are exact.
+"""
+
+import jax.numpy as jnp
+
+
+def normalize_rows(counts):
+    """Row-normalize a counts matrix into transition probabilities.
+
+    Zero rows (no observations out of a node) normalize to all-zero
+    probabilities rather than NaN.
+    """
+    totals = counts.sum(axis=-1, keepdims=True)
+    return jnp.where(totals > 0, counts / jnp.maximum(totals, 1), 0.0)
+
+
+def topk_cumprob(counts, k):
+    """Reference dense inference.
+
+    Args:
+      counts: f32[b, n] gathered transition-count rows.
+      k: static number of items to return.
+
+    Returns:
+      ids:   i32[b, k] destination indices, descending probability,
+             ties broken toward the lower index.
+      probs: f32[b, k] their probabilities.
+      cum:   f32[b, k] inclusive cumulative probabilities (the quantity the
+             threshold test in rust compares against t).
+    """
+    probs_full = normalize_rows(counts)
+    # Stable argsort of -p gives descending order with lowest-index-first
+    # ties — identical to k successive argmaxes.
+    order = jnp.argsort(-probs_full, axis=-1, stable=True)
+    ids = order[:, :k].astype(jnp.int32)
+    probs = jnp.take_along_axis(probs_full, order[:, :k], axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    return ids, probs, cum
+
+
+def decay(counts):
+    """Reference decay: floor-halve every counter (integer semantics, to
+    match the rust sparse engine's `c / 2`)."""
+    return jnp.floor(counts * 0.5)
+
+
+def update(counts, srcs, dsts):
+    """Reference batched update: scatter-add 1 to each (src, dst) pair."""
+    return counts.at[srcs, dsts].add(1.0)

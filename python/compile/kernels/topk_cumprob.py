@@ -1,0 +1,87 @@
+"""Layer-1 Pallas kernel: batched row-normalize + top-k + cumulative
+probability — the compute hot-spot of the dense markov-chain engine.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+CPUs, so there is no GPU kernel to port; this kernel implements the *dense
+comparator* the introduction motivates against, designed TPU-natively:
+
+* BlockSpec tiles `block_b` query rows into VMEM per grid step; the row
+  length `n` stays resident (n <= 4096 rows of f32 = 16 KiB/row, well
+  under the ~16 MiB VMEM budget at the shapes we compile).
+* Selection is k rounds of (argmax, mask) over the row block — pure VPU
+  element-wise/reduction work with NO data-dependent control flow, which
+  is what the TPU vector unit wants. A sort network would be k·log²n
+  comparators for the same result; the k·n scan is memory-bound and
+  saturates the same roofline. The MXU is deliberately idle: there is no
+  contraction in this op.
+* Everything is f32: transition counts are integers < 2^24, so f32 is
+  exact (the rust engine asserts this bound on ingest).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the rust
+runtime loads. On a real TPU the same `pallas_call` compiles natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = jnp.float32(-1.0)  # probabilities live in [0, 1]; -1 masks a slot
+
+
+def _kernel(counts_ref, ids_ref, probs_ref, cum_ref, *, k):
+    """One grid step: a [block_b, n] tile of gathered count rows."""
+    counts = counts_ref[...]
+    totals = jnp.sum(counts, axis=-1, keepdims=True)
+    probs = jnp.where(totals > 0, counts / jnp.maximum(totals, 1.0), 0.0)
+
+    def body(i, carry):
+        probs, cum = carry
+        idx = jnp.argmax(probs, axis=-1)  # first max == lowest-index tie
+        p = jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0]
+        cum = cum + p
+        ids_ref[:, i] = idx.astype(jnp.int32)
+        probs_ref[:, i] = p
+        cum_ref[:, i] = cum
+        # Mask the selected column out of contention.
+        onehot = jax.nn.one_hot(idx, probs.shape[-1], dtype=probs.dtype)
+        probs = probs - (probs + 1.0) * onehot  # selected slot -> -1
+        return probs, cum
+
+    b = counts.shape[0]
+    jax.lax.fori_loop(0, k, body, (probs, jnp.zeros((b,), jnp.float32)), unroll=False)
+
+
+def topk_cumprob(counts, k, block_b=8):
+    """Pallas dense inference over gathered rows.
+
+    Args:
+      counts: f32[b, n]; b must be a multiple of block_b (the AOT wrapper
+        pads queries, so compiled artifacts always satisfy this).
+      k: static item count.
+      block_b: rows per grid step (VMEM tile height).
+
+    Returns (ids i32[b, k], probs f32[b, k], cum f32[b, k]).
+    """
+    b, n = counts.shape
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    assert 1 <= k <= n, f"k={k} out of range for n={n}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=True,
+    )(counts)

@@ -1,0 +1,87 @@
+"""Layer-2 JAX model: the dense markov-chain engine.
+
+Composes the Layer-1 Pallas kernels into the three jitted entry points the
+rust runtime executes via PJRT:
+
+* `dense_infer(counts, queries)` — gather query rows, then the Pallas
+  top-k/cum-prob kernel. The *whole* inference (gather + normalize +
+  select) lowers into one HLO module, so the rust hot path is a single
+  `execute` per batch.
+* `dense_update(counts, srcs, dsts)` — batched scatter-add of observed
+  transitions. Functional: returns the new counts buffer (the rust engine
+  keeps the live buffer on the PJRT device and feeds it back — no host
+  round-trip; see rust/src/runtime/).
+* `dense_decay(counts)` — §II.C decay through the Pallas halving kernel.
+
+The contrast this engine exists for (experiment E6): every update/decay
+touches O(n²) dense state and inference pays O(n) per row regardless of
+sparsity, whereas MCPrioQ pays O(1) per update and O(CDF⁻¹(t)) per query.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.decay import decay as decay_kernel
+from .kernels.topk_cumprob import topk_cumprob
+
+
+def dense_infer(counts, queries, *, k, block_b=8):
+    """Dense inference: top-k next nodes for each queried src row.
+
+    Args:
+      counts: f32[n, n] transition-count matrix.
+      queries: i32[b] src node indices (b a multiple of block_b; rust pads
+        with repeats and ignores the padded outputs).
+      k: static items per query.
+
+    Returns (ids i32[b,k], probs f32[b,k], cum f32[b,k], totals f32[b]).
+    """
+    rows = jnp.take(counts, queries, axis=0)  # [b, n] gather
+    ids, probs, cum = topk_cumprob(rows, k, block_b=block_b)
+    totals = rows.sum(axis=-1)  # [b] per-src transition mass
+    return ids, probs, cum, totals
+
+
+def dense_update(counts, srcs, dsts):
+    """Scatter-add one observation per (src, dst) pair. Returns new counts."""
+    return counts.at[srcs, dsts].add(1.0)
+
+
+def dense_decay(counts):
+    """Floor-halve all counters (matches sparse integer decay)."""
+    return decay_kernel(counts)
+
+
+def infer_fn(n, b, k):
+    """The jittable inference entry point for AOT lowering."""
+
+    def fn(counts, queries):
+        ids, probs, cum, totals = dense_infer(counts, queries, k=k)
+        return (ids, probs, cum, totals)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+
+
+def update_fn(n, b):
+    """The jittable update entry point for AOT lowering."""
+
+    def fn(counts, srcs, dsts):
+        return dense_update(counts, srcs, dsts)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+
+
+def decay_fn(n):
+    """The jittable decay entry point for AOT lowering."""
+
+    def fn(counts):
+        return dense_decay(counts)
+
+    return fn, (jax.ShapeDtypeStruct((n, n), jnp.float32),)

@@ -1,0 +1,155 @@
+"""Pallas kernel vs pure-jnp oracle (invariant P7) — the core correctness
+signal of the accelerator layers, including hypothesis sweeps over shapes,
+values and degenerate inputs."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.decay import decay as pallas_decay
+from compile.kernels.topk_cumprob import topk_cumprob
+
+
+def make_counts(rng, b, n, max_count=50, zero_rows=0):
+    counts = rng.integers(0, max_count, size=(b, n)).astype(np.float32)
+    for r in range(zero_rows):
+        counts[r % b] = 0.0
+    return counts
+
+
+def assert_matches_ref(counts, k, block_b=8):
+    ids, probs, cum = topk_cumprob(jnp.array(counts), k, block_b=block_b)
+    rid, rp, rc = ref.topk_cumprob(jnp.array(counts), k)
+    np.testing.assert_array_equal(np.array(ids), np.array(rid))
+    np.testing.assert_allclose(np.array(probs), np.array(rp), atol=1e-6)
+    np.testing.assert_allclose(np.array(cum), np.array(rc), atol=1e-6)
+
+
+class TestTopkCumprob:
+    def test_basic(self):
+        rng = np.random.default_rng(0)
+        assert_matches_ref(make_counts(rng, 8, 64), k=8)
+
+    def test_zero_rows_give_zero_probs(self):
+        counts = np.zeros((8, 32), np.float32)
+        ids, probs, cum = topk_cumprob(jnp.array(counts), 4)
+        assert np.all(np.array(probs) == 0.0)
+        assert np.all(np.array(cum) == 0.0)
+        # Ties at p=0 resolve to lowest indices: 0..k-1.
+        np.testing.assert_array_equal(np.array(ids), np.tile(np.arange(4), (8, 1)))
+
+    def test_single_hot_item(self):
+        counts = np.zeros((8, 16), np.float32)
+        counts[:, 5] = 7.0
+        ids, probs, cum = topk_cumprob(jnp.array(counts), 3)
+        assert np.all(np.array(ids)[:, 0] == 5)
+        np.testing.assert_allclose(np.array(probs)[:, 0], 1.0)
+        np.testing.assert_allclose(np.array(cum)[:, 1:], 1.0, atol=1e-6)
+
+    def test_k_equals_n(self):
+        rng = np.random.default_rng(1)
+        counts = make_counts(rng, 8, 16)
+        assert_matches_ref(counts, k=16)
+        # Full scan must cover probability 1 for nonzero rows.
+        _, _, cum = topk_cumprob(jnp.array(counts), 16)
+        np.testing.assert_allclose(np.array(cum)[:, -1], 1.0, atol=1e-5)
+
+    def test_tie_breaking_prefers_low_index(self):
+        counts = np.full((8, 12), 3.0, np.float32)
+        ids, _, _ = topk_cumprob(jnp.array(counts), 5)
+        np.testing.assert_array_equal(np.array(ids), np.tile(np.arange(5), (8, 1)))
+
+    def test_multiple_grid_blocks(self):
+        rng = np.random.default_rng(2)
+        # 32 rows with block_b=8 -> 4 grid steps.
+        assert_matches_ref(make_counts(rng, 32, 64, zero_rows=3), k=8)
+
+    def test_block_b_one(self):
+        rng = np.random.default_rng(3)
+        assert_matches_ref(make_counts(rng, 4, 32), k=4, block_b=1)
+
+    def test_cumulative_is_monotone(self):
+        rng = np.random.default_rng(4)
+        counts = make_counts(rng, 8, 128)
+        _, _, cum = topk_cumprob(jnp.array(counts), 16)
+        cum = np.array(cum)
+        assert np.all(np.diff(cum, axis=1) >= -1e-7)
+        assert np.all(cum <= 1.0 + 1e-6)
+
+    def test_rejects_bad_shapes(self):
+        counts = np.zeros((7, 16), np.float32)  # 7 % 8 != 0
+        with pytest.raises(AssertionError):
+            topk_cumprob(jnp.array(counts), 4)
+        with pytest.raises(AssertionError):
+            topk_cumprob(jnp.zeros((8, 16), jnp.float32), 17)  # k > n
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b_blocks=st.integers(1, 3),
+        n=st.sampled_from([8, 16, 33, 64, 100]),
+        k_frac=st.floats(0.1, 1.0),
+        max_count=st.sampled_from([1, 2, 50, 1000, 2**20]),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_hypothesis_sweep(self, b_blocks, n, k_frac, max_count, seed):
+        rng = np.random.default_rng(seed)
+        b = 8 * b_blocks
+        k = max(1, int(n * k_frac))
+        counts = make_counts(rng, b, n, max_count=max_count, zero_rows=seed % 3)
+        assert_matches_ref(counts, k=k)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1))
+    def test_hypothesis_heavy_ties(self, seed):
+        # Small count alphabet -> dense ties, stressing tie-break order.
+        rng = np.random.default_rng(seed)
+        counts = rng.integers(0, 3, size=(8, 24)).astype(np.float32)
+        assert_matches_ref(counts, k=8)
+
+
+class TestDecay:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(5)
+        counts = rng.integers(0, 100, size=(64, 64)).astype(np.float32)
+        out = pallas_decay(jnp.array(counts))
+        np.testing.assert_array_equal(np.array(out), np.array(ref.decay(jnp.array(counts))))
+
+    def test_integer_floor_semantics(self):
+        counts = np.array([[0, 1, 2, 3, 4, 5, 6, 7]] * 8, np.float32)
+        out = np.array(pallas_decay(jnp.array(counts)))
+        np.testing.assert_array_equal(out[0], [0, 0, 1, 1, 2, 2, 3, 3])
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([8, 64, 128]),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_hypothesis_sweep(self, n, seed):
+        rng = np.random.default_rng(seed)
+        counts = rng.integers(0, 2**20, size=(n, n)).astype(np.float32)
+        out = pallas_decay(jnp.array(counts))
+        np.testing.assert_array_equal(np.array(out), np.floor(counts * 0.5))
+
+    def test_repeated_decay_reaches_zero(self):
+        counts = jnp.full((8, 8), 100.0, jnp.float32)
+        for _ in range(8):
+            counts = pallas_decay(counts)
+        assert np.all(np.array(counts) == 0.0)
+
+
+class TestRefProperties:
+    """Sanity of the oracle itself."""
+
+    def test_normalize_handles_zero_rows(self):
+        m = jnp.array([[0.0, 0.0], [1.0, 3.0]])
+        p = np.array(ref.normalize_rows(m))
+        np.testing.assert_allclose(p, [[0.0, 0.0], [0.25, 0.75]])
+
+    def test_update_scatter_adds(self):
+        c = jnp.zeros((4, 4), jnp.float32)
+        c = ref.update(c, jnp.array([1, 1, 2]), jnp.array([0, 0, 3]))
+        c = np.array(c)
+        assert c[1, 0] == 2.0 and c[2, 3] == 1.0
+        assert c.sum() == 3.0

@@ -1,0 +1,118 @@
+"""Layer-2 model tests + AOT artifact shape checks: the jitted entry points
+compose correctly and every lowered artifact is valid HLO text with the
+expected parameter/result shapes."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.kernels import ref
+from compile.model import decay_fn, dense_infer, dense_update, infer_fn, update_fn
+
+
+class TestDenseModel:
+    def test_infer_gathers_correct_rows(self):
+        n = 32
+        rng = np.random.default_rng(0)
+        counts = rng.integers(0, 9, size=(n, n)).astype(np.float32)
+        queries = np.array([3, 7, 3, 0, 31, 1, 2, 2], np.int32)
+        ids, probs, cum, totals = dense_infer(jnp.array(counts), jnp.array(queries), k=4)
+        rid, rp, rc = ref.topk_cumprob(jnp.array(counts[queries]), 4)
+        np.testing.assert_array_equal(np.array(ids), np.array(rid))
+        np.testing.assert_allclose(np.array(probs), np.array(rp), atol=1e-6)
+        np.testing.assert_allclose(np.array(cum), np.array(rc), atol=1e-6)
+        np.testing.assert_allclose(np.array(totals), counts[queries].sum(axis=1))
+
+    def test_update_then_infer_roundtrip(self):
+        n = 16
+        counts = jnp.zeros((n, n), jnp.float32)
+        srcs = jnp.array([1] * 6 + [2] * 2, jnp.int32)
+        dsts = jnp.array([5, 5, 5, 9, 9, 3, 0, 0], jnp.int32)
+        counts = dense_update(counts, srcs, dsts)
+        ids, probs, _, _ = dense_infer(counts, jnp.array([1] * 8, jnp.int32), k=3)
+        assert np.array(ids)[0, 0] == 5  # 3/6
+        np.testing.assert_allclose(np.array(probs)[0, 0], 0.5)
+        assert np.array(ids)[0, 1] == 9  # 2/6
+
+    def test_update_accumulates_duplicates(self):
+        counts = jnp.zeros((8, 8), jnp.float32)
+        counts = dense_update(
+            counts, jnp.array([0, 0, 0], jnp.int32), jnp.array([1, 1, 1], jnp.int32)
+        )
+        assert np.array(counts)[0, 1] == 3.0
+
+    def test_jit_entry_points_execute(self):
+        for n, b, k in [(64, 8, 8)]:
+            fn, args = infer_fn(n, b, k)
+            jitted = jax.jit(fn)
+            counts = jnp.ones((n, n), jnp.float32)
+            queries = jnp.zeros((b,), jnp.int32)
+            ids, probs, cum, totals = jitted(counts, queries)
+            assert totals.shape == (b,)
+            assert ids.shape == (b, k)
+            assert probs.shape == (b, k)
+            assert cum.shape == (b, k)
+
+            ufn, _ = update_fn(n, b)
+            new_counts = jax.jit(ufn)(counts, queries, queries)
+            assert new_counts.shape == (n, n)
+
+            dfn, _ = decay_fn(n)
+            decayed = jax.jit(dfn)(counts)
+            assert np.all(np.array(decayed) == 0.0)  # floor(0.5) == 0
+
+
+@pytest.fixture(scope="module")
+def artifacts_dir(tmp_path_factory):
+    """Build artifacts into a temp dir (keeps the test hermetic); reuses the
+    checked-in artifacts/ when already present to save time."""
+    repo_artifacts = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if os.path.exists(os.path.join(repo_artifacts, "manifest.txt")):
+        return repo_artifacts
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out)
+    return out
+
+
+class TestAotArtifacts:
+    def test_manifest_lists_all_variants(self, artifacts_dir):
+        with open(os.path.join(artifacts_dir, "manifest.txt")) as f:
+            lines = [l.split() for l in f.read().splitlines() if l]
+        kinds = {l[0] for l in lines}
+        assert kinds == {"infer", "update", "decay"}
+        assert len(lines) == 3 * len(aot.VARIANTS)
+        for parts in lines:
+            assert len(parts) == 5
+            assert os.path.exists(os.path.join(artifacts_dir, parts[4])), parts[4]
+
+    def test_hlo_text_is_parseable_hlo(self, artifacts_dir):
+        with open(os.path.join(artifacts_dir, "manifest.txt")) as f:
+            names = [l.split()[4] for l in f.read().splitlines() if l]
+        for name in names:
+            text = open(os.path.join(artifacts_dir, name)).read()
+            assert text.startswith("HloModule"), f"{name} is not HLO text"
+            assert "ENTRY" in text, name
+
+    def test_infer_artifact_signature(self, artifacts_dir):
+        n, b, k = aot.VARIANTS[0]
+        name = f"dense_infer_n{n}_b{b}_k{k}.hlo.txt"
+        text = open(os.path.join(artifacts_dir, name)).read()
+        # Parameters: counts f32[n,n] and queries s32[b].
+        assert f"f32[{n},{n}]" in text
+        assert f"s32[{b}]" in text
+        # Results include the [b, k] outputs.
+        assert f"s32[{b},{k}]" in text
+        assert f"f32[{b},{k}]" in text
+
+    def test_no_custom_calls_in_artifacts(self, artifacts_dir):
+        """interpret=True must lower to plain HLO ops — a Mosaic custom-call
+        would make the artifact unloadable on the CPU PJRT plugin."""
+        with open(os.path.join(artifacts_dir, "manifest.txt")) as f:
+            names = [l.split()[4] for l in f.read().splitlines() if l]
+        for name in names:
+            text = open(os.path.join(artifacts_dir, name)).read()
+            assert "custom-call" not in text, f"{name} contains a custom-call"

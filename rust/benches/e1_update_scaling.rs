@@ -1,0 +1,73 @@
+//! E1 — "O(1), lock-free updates": update-only throughput vs thread count,
+//! MCPrioQ against every baseline (DESIGN.md §3).
+//!
+//! Claim shape to reproduce: MCPrioQ scales near-linearly with threads
+//! (wait-free increments on disjoint cache lines), the coarse mutex
+//! collapses, sharded/rwlock sits in between, skip-list pays pop-insert.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mcprioq::baselines::{HeapChain, MarkovModel, MutexChain, ShardedChain, SkipListChain};
+use mcprioq::bench_harness::{bench_mode_from_env, fmt_rate, Table};
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::workload::{TransitionStream, ZipfChainStream};
+
+// Cache-resident working set (~3 MiB): measures the *structures*, not
+// DRAM latency. The DRAM-bound regime is characterized separately in
+// EXPERIMENTS.md §Perf (observe cost vs working-set size).
+const NODES: u64 = 1_000;
+const FANOUT: u64 = 24;
+const SKEW: f64 = 1.1;
+
+fn main() {
+    let bench = bench_mode_from_env();
+    let duration = if bench.samples <= 3 { Duration::from_millis(150) } else { Duration::from_millis(500) };
+    let threads_list = [1usize, 2, 4, 8];
+
+    let mut table = Table::new("e1_update_scaling", &["model", "threads", "updates_per_s", "speedup_vs_1t"]);
+    let models: Vec<(&str, Box<dyn Fn() -> Arc<dyn MarkovModel>>)> = vec![
+        ("mcprioq", Box::new(|| Arc::new(McPrioQ::new(ChainConfig::default())))),
+        ("mutex", Box::new(|| Arc::new(MutexChain::new()))),
+        ("sharded-rwlock", Box::new(|| Arc::new(ShardedChain::new(64)))),
+        ("skiplist", Box::new(|| Arc::new(SkipListChain::new()))),
+        ("heap-lazy", Box::new(|| Arc::new(HeapChain::new()))),
+    ];
+
+    for (name, make) in &models {
+        let mut base = 0.0;
+        for &threads in &threads_list {
+            let model = make();
+            // Pre-warm the graph so steady-state is existing-edge updates
+            // (the paper's normal case).
+            {
+                let mut s = ZipfChainStream::new(NODES, FANOUT, SKEW, 99);
+                for _ in 0..1_000_000 {
+                    let (a, b) = s.next_transition();
+                    model.observe(a, b);
+                }
+            }
+            let rate = bench.run_threads(threads, duration, |t| {
+                let model = Arc::clone(&model);
+                let mut stream =
+                    ZipfChainStream::with_topology(NODES, FANOUT, SKEW, t as u64 + 1, 99);
+                move || {
+                    let (a, b) = stream.next_transition();
+                    model.observe(a, b);
+                    1
+                }
+            });
+            if threads == 1 {
+                base = rate;
+            }
+            table.row(&[
+                name.to_string(),
+                threads.to_string(),
+                format!("{rate:.0}"),
+                format!("{:.2}", rate / base),
+            ]);
+            println!("  {name:>15} {threads}t: {}", fmt_rate(rate));
+        }
+    }
+    table.finish();
+}

@@ -1,0 +1,105 @@
+//! E2 — "O(CDF⁻¹(t)) inference": measured scan depth + latency vs the
+//! threshold t, across edge-distribution skews, against the analytic
+//! quantile function of the generating Zipf (DESIGN.md §3).
+//!
+//! Claim shape to reproduce: scan depth ≈ Zipf quantile(t); tiny for
+//! skewed distributions, ≈ fanout·t for the uniform worst case (s = 0).
+//! Includes the skip-list and heap comparison (§II.2's structure debate)
+//! and the no-dst-table ablation for update cost.
+
+use std::time::Instant;
+
+use mcprioq::baselines::{HeapChain, MarkovModel, SkipListChain};
+use mcprioq::bench_harness::{bench_mode_from_env, fmt_ns, Table};
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::workload::{TransitionStream, Zipf, ZipfChainStream};
+
+const NODES: u64 = 2_000;
+const FANOUT: u64 = 64;
+const TRAIN: usize = 2_000_000;
+
+fn main() {
+    let bench = bench_mode_from_env();
+    let train = if bench.samples <= 3 { TRAIN / 10 } else { TRAIN };
+
+    let mut table = Table::new(
+        "e2_inference_cdf",
+        &["skew", "threshold", "predicted_cdf_inv", "measured_scan", "latency_ns", "skiplist_scan", "heap_latency_ns"],
+    );
+
+    for &skew in &[0.0, 0.8, 1.2] {
+        let chain = McPrioQ::new(ChainConfig::default());
+        let skiplist = SkipListChain::new();
+        let heap = HeapChain::new();
+        let mut stream = ZipfChainStream::new(NODES, FANOUT, skew, 7);
+        for _ in 0..train {
+            let (a, b) = stream.next_transition();
+            chain.observe(a, b);
+            skiplist.observe(a, b);
+            heap.observe(a, b);
+        }
+        chain.repair();
+        let zipf = Zipf::new(FANOUT as usize, skew);
+        // Query the busiest sources for stable statistics.
+        let hot_srcs: Vec<u64> = (0..NODES).filter(|&s| chain.node_stats(s).map_or(0, |st| st.total) > (train as u64 / NODES as u64) / 2).take(256).collect();
+        assert!(!hot_srcs.is_empty());
+
+        for &t in &[0.5, 0.8, 0.9, 0.95, 0.99] {
+            let mut scans = 0usize;
+            let mut sl_scans = 0usize;
+            let t0 = Instant::now();
+            for &s in &hot_srcs {
+                scans += chain.infer_threshold(s, t).scanned;
+            }
+            let lat = t0.elapsed().as_nanos() as f64 / hot_srcs.len() as f64;
+            for &s in &hot_srcs {
+                sl_scans += skiplist.infer_threshold(s, t).scanned;
+            }
+            let t0 = Instant::now();
+            for &s in &hot_srcs {
+                let _ = heap.infer_threshold(s, t);
+                // Touch the counts so the lazy sort re-dirties: emulate the
+                // online setting where every query pays the sort.
+                heap.observe(s, s % FANOUT);
+            }
+            let heap_lat = t0.elapsed().as_nanos() as f64 / hot_srcs.len() as f64;
+
+            let measured = scans as f64 / hot_srcs.len() as f64;
+            let predicted = zipf.quantile(t);
+            table.row(&[
+                format!("{skew}"),
+                format!("{t}"),
+                predicted.to_string(),
+                format!("{measured:.2}"),
+                format!("{lat:.0}"),
+                format!("{:.2}", sl_scans as f64 / hot_srcs.len() as f64),
+                format!("{heap_lat:.0}"),
+            ]);
+            println!(
+                "  s={skew} t={t}: predicted {predicted}, measured {measured:.1}, {} per query",
+                fmt_ns(lat)
+            );
+        }
+    }
+    table.finish();
+
+    // Ablation: update cost with vs without the dst hash table (§II.2).
+    let mut ab = Table::new("e2b_dst_table_ablation", &["variant", "skew", "update_ns"]);
+    for &skew in &[0.0, 1.2] {
+        for (variant, use_dst) in [("with-dst-table", true), ("list-only", false)] {
+            let chain = McPrioQ::new(ChainConfig { use_dst_table: use_dst, ..Default::default() });
+            let mut stream = ZipfChainStream::new(64, FANOUT, skew, 3);
+            for _ in 0..100_000 {
+                let (a, b) = stream.next_transition();
+                chain.observe(a, b);
+            }
+            let m = bench.run("update", 1, || {
+                let (a, b) = stream.next_transition();
+                chain.observe(a, b);
+            });
+            ab.row(&[variant.to_string(), format!("{skew}"), format!("{:.0}", m.median_ns())]);
+            println!("  {variant} s={skew}: {} per update", fmt_ns(m.median_ns()));
+        }
+    }
+    ab.finish();
+}

@@ -1,0 +1,69 @@
+//! E3 — "construct the graph while simultaneously querying it": mixed
+//! read/write throughput vs thread count (DESIGN.md §3).
+//!
+//! Claim shape to reproduce: MCPrioQ's throughput is insensitive to the
+//! read fraction (reads are wait-free RCU scans) and scales with threads;
+//! lock-based baselines degrade as writers serialize readers.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mcprioq::baselines::{MarkovModel, MutexChain, ShardedChain, SkipListChain};
+use mcprioq::bench_harness::{bench_mode_from_env, fmt_rate, Table};
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::testutil::Rng64;
+use mcprioq::workload::{TransitionStream, ZipfChainStream};
+
+const NODES: u64 = 1_000;
+const FANOUT: u64 = 24;
+
+fn main() {
+    let bench = bench_mode_from_env();
+    let duration = if bench.samples <= 3 { Duration::from_millis(150) } else { Duration::from_millis(500) };
+
+    let mut table = Table::new("e3_mixed", &["model", "read_frac", "threads", "ops_per_s"]);
+    let models: Vec<(&str, Box<dyn Fn() -> Arc<dyn MarkovModel>>)> = vec![
+        ("mcprioq", Box::new(|| Arc::new(McPrioQ::new(ChainConfig::default())))),
+        ("mutex", Box::new(|| Arc::new(MutexChain::new()))),
+        ("sharded-rwlock", Box::new(|| Arc::new(ShardedChain::new(64)))),
+        ("skiplist", Box::new(|| Arc::new(SkipListChain::new()))),
+    ];
+
+    for (name, make) in &models {
+        for &read_frac in &[0.5f64, 0.9, 0.99] {
+            for &threads in &[1usize, 4, 8] {
+                let model = make();
+                {
+                    let mut s = ZipfChainStream::new(NODES, FANOUT, 1.1, 5);
+                    for _ in 0..1_000_000 {
+                        let (a, b) = s.next_transition();
+                        model.observe(a, b);
+                    }
+                }
+                let rate = bench.run_threads(threads, duration, |t| {
+                    let model = Arc::clone(&model);
+                    let mut stream =
+                        ZipfChainStream::with_topology(NODES, FANOUT, 1.1, t as u64 + 10, 5);
+                    let mut rng = Rng64::new(t as u64 + 77);
+                    move || {
+                        let (a, b) = stream.next_transition();
+                        if rng.next_bool(read_frac) {
+                            std::hint::black_box(model.infer_threshold(a, 0.9));
+                        } else {
+                            model.observe(a, b);
+                        }
+                        1
+                    }
+                });
+                table.row(&[
+                    name.to_string(),
+                    format!("{read_frac}"),
+                    threads.to_string(),
+                    format!("{rate:.0}"),
+                ]);
+                println!("  {name:>15} r={read_frac} {threads}t: {}", fmt_rate(rate));
+            }
+        }
+    }
+    table.finish();
+}

@@ -1,0 +1,88 @@
+//! E5 — model decay (§II.C): after a topology change, a decaying model
+//! re-converges to the new distribution and prunes dead edges, while a
+//! non-decaying model is stuck averaging both worlds and grows forever
+//! (DESIGN.md §3).
+//!
+//! Claim shape to reproduce: with decay, top-1 accuracy on the *new*
+//! distribution recovers within a few decay cycles and the edge count
+//! stays bounded; without decay, recovery is much slower (old mass must
+//! be out-voted) and edges accumulate.
+
+use mcprioq::bench_harness::{bench_mode_from_env, Table};
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::workload::{TransitionStream, ZipfChainStream};
+
+const NODES: u64 = 400;
+const FANOUT: u64 = 16;
+const PHASE: usize = 400_000;
+const ROUNDS: usize = 8;
+
+/// Top-1 accuracy against the stream's true rank-0 successor.
+fn top1_accuracy(chain: &McPrioQ, stream: &ZipfChainStream) -> f64 {
+    let mut hits = 0;
+    for src in 0..NODES {
+        let rec = chain.infer_topk(src, 1);
+        if let Some(&(dst, _)) = rec.items.first() {
+            if dst == stream.dst_at_rank(src, 0) {
+                hits += 1;
+            }
+        }
+    }
+    hits as f64 / NODES as f64
+}
+
+fn main() {
+    let bench = bench_mode_from_env();
+    let phase = if bench.samples <= 3 { PHASE / 10 } else { PHASE };
+
+    let mut table = Table::new(
+        "e5_decay",
+        &["round", "variant", "top1_acc_new_world", "edges", "total_mass"],
+    );
+
+    for (variant, decay_on) in [("decay", true), ("no-decay", false)] {
+        let chain = McPrioQ::new(ChainConfig::default());
+        // World A: seed 1. Train to convergence.
+        let mut world_a = ZipfChainStream::new(NODES, FANOUT, 1.1, 1);
+        for _ in 0..phase * 2 {
+            let (a, b) = world_a.next_transition();
+            chain.observe(a, b);
+        }
+        // World B: same nodes, different successor mapping (seed change
+        // re-permutes `dst_at_rank` via the stream's internal mixing).
+        let world_b = ZipfChainStream::new(NODES, FANOUT, 1.1, 0xB0B);
+        let mut world_b_run = ZipfChainStream::new(NODES, FANOUT, 1.1, 0xB0B);
+
+        let acc0 = top1_accuracy(&chain, &world_b);
+        table.row(&[
+            "0".into(),
+            variant.into(),
+            format!("{acc0:.3}"),
+            chain.edge_count().to_string(),
+            chain.stats().observes.to_string(),
+        ]);
+        for round in 1..=ROUNDS {
+            for _ in 0..phase / 2 {
+                let (a, b) = world_b_run.next_transition();
+                chain.observe(a, b);
+            }
+            if decay_on {
+                chain.decay();
+            }
+            let acc = top1_accuracy(&chain, &world_b);
+            let mass: u64 = chain.export().iter().map(|(_, t, _)| *t).sum();
+            table.row(&[
+                round.to_string(),
+                variant.into(),
+                format!("{acc:.3}"),
+                chain.edge_count().to_string(),
+                mass.to_string(),
+            ]);
+            println!(
+                "  {variant} round {round}: top1(new)={acc:.3} edges={} mass={mass}",
+                chain.edge_count()
+            );
+        }
+    }
+    table.finish();
+}

@@ -1,0 +1,97 @@
+//! E6 — the introduction's motivation: "in high performance systems it is
+//! sometimes hard to build very large graphs that are efficient both with
+//! respect to memory and compute." Sparse MCPrioQ vs the dense-matrix
+//! XLA engine (the full three-layer artifact path) across graph size and
+//! fill factor (DESIGN.md §3).
+//!
+//! Claim shape to reproduce: dense update/query cost and memory grow with
+//! the *capacity* n (O(n²) state, O(n) per row) regardless of how sparse
+//! the real graph is; MCPrioQ costs grow only with live edges. Requires
+//! `make artifacts`; skips gracefully otherwise.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mcprioq::baselines::MarkovModel;
+use mcprioq::bench_harness::Table;
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::runtime::{default_artifacts_dir, DenseXlaChain, XlaRuntime};
+use mcprioq::workload::{TransitionStream, ZipfChainStream};
+
+const QUERIES: usize = 500;
+
+fn main() {
+    let rt = match XlaRuntime::new(&default_artifacts_dir()) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("e6 skipped: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+
+    let mut table = Table::new(
+        "e6_sparse_vs_dense",
+        &[
+            "nodes", "fanout", "live_edges",
+            "sparse_update_ns", "dense_update_ns",
+            "sparse_query_ns", "dense_query_ns",
+            "sparse_kib", "dense_kib",
+        ],
+    );
+
+    for &(nodes, fanout) in &[(48u64, 4u64), (48, 16), (240, 4), (240, 16), (1000, 8), (1000, 32)] {
+        let sparse = McPrioQ::new(ChainConfig::default());
+        let dense = DenseXlaChain::new(Arc::clone(&rt), nodes as usize).expect("dense");
+        let mut stream = ZipfChainStream::new(nodes, fanout, 1.1, 6);
+        let train = 40_000usize;
+        let pairs: Vec<(u64, u64)> = (0..train).map(|_| stream.next_transition()).collect();
+
+        let t0 = Instant::now();
+        for &(a, b) in &pairs {
+            sparse.observe(a, b);
+        }
+        let sparse_up = t0.elapsed().as_nanos() as f64 / train as f64;
+        let t0 = Instant::now();
+        for &(a, b) in &pairs {
+            dense.observe(a, b);
+        }
+        let dense_up = t0.elapsed().as_nanos() as f64 / train as f64;
+
+        let t0 = Instant::now();
+        for i in 0..QUERIES {
+            std::hint::black_box(sparse.infer_topk(pairs[i].0, 8));
+        }
+        let sparse_q = t0.elapsed().as_nanos() as f64 / QUERIES as f64;
+        let t0 = Instant::now();
+        for i in 0..QUERIES {
+            std::hint::black_box(dense.infer_topk(pairs[i].0, 8));
+        }
+        let dense_q = t0.elapsed().as_nanos() as f64 / QUERIES as f64;
+
+        // Same answers (sanity before trusting the numbers).
+        let a = sparse.infer_topk(pairs[0].0, 4);
+        let b = dense.infer_topk(pairs[0].0, 4);
+        assert_eq!(a.items.len(), b.items.len(), "engines disagree");
+
+        let row = [
+            nodes.to_string(),
+            fanout.to_string(),
+            sparse.edge_count().to_string(),
+            format!("{sparse_up:.0}"),
+            format!("{dense_up:.0}"),
+            format!("{sparse_q:.0}"),
+            format!("{dense_q:.0}"),
+            (sparse.stats().approx_bytes / 1024).to_string(),
+            (dense.resident_bytes() / 1024).to_string(),
+        ];
+        println!(
+            "  n={nodes} f={fanout}: update {sparse_up:.0}ns vs {dense_up:.0}ns, \
+             query {sparse_q:.0}ns vs {dense_q:.0}ns, mem {}KiB vs {}KiB",
+            sparse.stats().approx_bytes / 1024,
+            dense.resident_bytes() / 1024
+        );
+        table.row(&row);
+    }
+    table.finish();
+}

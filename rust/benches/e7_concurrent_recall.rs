@@ -1,0 +1,111 @@
+//! E7 — "approximately correct results even during concurrent updates":
+//! quantify the approximation. Readers scan while writers update; recall,
+//! order inversions, and complete-scan rate are measured against the
+//! quiesced ground truth (DESIGN.md §3).
+//!
+//! Claim shape to reproduce: recall stays ≈ 1 and inversions per scan
+//! stay O(1) even under maximal churn (uniform counts); the skewed
+//! normal case is essentially indistinguishable from quiesced reads.
+//! This is the measured counterpart of the swap design in Fig. 2.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use mcprioq::bench_harness::{bench_mode_from_env, Table};
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::workload::{TransitionStream, ZipfChainStream};
+
+const FANOUT: u64 = 64;
+const SCANS: usize = 5_000;
+
+fn main() {
+    let bench = bench_mode_from_env();
+    let scans = if bench.samples <= 3 { SCANS / 5 } else { SCANS };
+
+    let mut table = Table::new(
+        "e7_concurrent_recall",
+        &["writers", "skew", "mean_recall", "min_recall", "complete_scan_pct", "mean_inversions", "phantom_keys"],
+    );
+
+    for &writers in &[0usize, 2, 4] {
+        for &skew in &[0.0, 1.1] {
+            let chain = Arc::new(McPrioQ::new(ChainConfig::default()));
+            // One hot src node with FANOUT edges — the worst case is all
+            // the churn concentrated in one queue.
+            const SRC: u64 = 0;
+            {
+                let mut s = ZipfChainStream::new(FANOUT + 1, FANOUT, skew, 2);
+                for _ in 0..50_000 {
+                    let (_, b) = s.next_transition();
+                    chain.observe(SRC, b);
+                }
+            }
+            // Ground truth membership while quiesced.
+            chain.repair();
+            let truth: HashSet<u64> =
+                chain.infer_topk(SRC, usize::MAX).items.iter().map(|&(d, _)| d).collect();
+
+            let stop = Arc::new(AtomicBool::new(false));
+            let handles: Vec<_> = (0..writers)
+                .map(|w| {
+                    let chain = Arc::clone(&chain);
+                    let stop = Arc::clone(&stop);
+                    std::thread::spawn(move || {
+                        let mut s = ZipfChainStream::new(FANOUT + 1, FANOUT, skew, w as u64 + 3);
+                        while !stop.load(Ordering::Relaxed) {
+                            let (_, b) = s.next_transition();
+                            chain.observe(SRC, b);
+                        }
+                    })
+                })
+                .collect();
+
+            let mut recall_sum = 0.0;
+            let mut min_recall = 1.0f64;
+            let mut complete = 0usize;
+            let mut inversions = 0u64;
+            let mut phantoms = 0u64;
+            for _ in 0..scans {
+                let rec = chain.infer_topk(SRC, usize::MAX);
+                let seen: HashSet<u64> = rec.items.iter().map(|&(d, _)| d).collect();
+                let recall = seen.intersection(&truth).count() as f64 / truth.len() as f64;
+                recall_sum += recall;
+                min_recall = min_recall.min(recall);
+                if recall >= 1.0 {
+                    complete += 1;
+                }
+                phantoms += seen.difference(&truth).count() as u64;
+                // Order inversions in the returned snapshot.
+                inversions += rec
+                    .items
+                    .windows(2)
+                    .filter(|w| w[0].1 < w[1].1 - 1e-12)
+                    .count() as u64;
+            }
+            stop.store(true, Ordering::SeqCst);
+            for h in handles {
+                h.join().unwrap();
+            }
+            table.row(&[
+                writers.to_string(),
+                format!("{skew}"),
+                format!("{:.5}", recall_sum / scans as f64),
+                format!("{min_recall:.5}"),
+                format!("{:.2}", 100.0 * complete as f64 / scans as f64),
+                format!("{:.4}", inversions as f64 / scans as f64),
+                phantoms.to_string(),
+            ]);
+            println!(
+                "  {writers} writers s={skew}: recall mean {:.4} min {:.4}, {:.1}% complete, {:.3} inversions/scan",
+                recall_sum / scans as f64,
+                min_recall,
+                100.0 * complete as f64 / scans as f64,
+                inversions as f64 / scans as f64
+            );
+            chain.repair();
+            chain.check_invariants().expect("invariants");
+        }
+    }
+    table.finish();
+}

@@ -1,0 +1,115 @@
+//! Heap-style baseline: O(1) counter updates into a hash map, full
+//! re-sort at (dirty) inference time — §II.2's observation that heaps are
+//! "optimized for fast insert and finding the top most important element",
+//! not for cumulative-probability scans.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+use super::{recommend_threshold, recommend_topk, MarkovModel};
+use crate::chain::Recommendation;
+
+#[derive(Default)]
+struct HeapNode {
+    total: u64,
+    counts: HashMap<u64, u64>,
+    sorted: Vec<(u64, u64)>,
+    dirty: bool,
+}
+
+impl HeapNode {
+    fn rebuild(&mut self) {
+        if self.dirty {
+            // The "pay at query" step: O(E log E) sort of the whole edge set.
+            self.sorted = self.counts.iter().map(|(&d, &c)| (d, c)).collect();
+            self.sorted.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            self.dirty = false;
+        }
+    }
+}
+
+/// See module docs.
+pub struct HeapChain {
+    nodes: RwLock<HashMap<u64, RwLock<HeapNode>>>,
+    edges: AtomicUsize,
+}
+
+impl Default for HeapChain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HeapChain {
+    pub fn new() -> Self {
+        HeapChain { nodes: RwLock::new(HashMap::new()), edges: AtomicUsize::new(0) }
+    }
+
+    fn with_node<R>(&self, src: u64, f: impl FnOnce(&mut HeapNode) -> R) -> Option<R> {
+        let map = self.nodes.read().unwrap();
+        map.get(&src).map(|n| f(&mut n.write().unwrap()))
+    }
+}
+
+impl MarkovModel for HeapChain {
+    fn name(&self) -> &'static str {
+        "heap-lazy"
+    }
+
+    fn observe(&self, src: u64, dst: u64) {
+        let done = self.with_node(src, |node| {
+            let is_new = !node.counts.contains_key(&dst);
+            *node.counts.entry(dst).or_insert(0) += 1;
+            node.total += 1;
+            node.dirty = true;
+            if is_new {
+                self.edges.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        if done.is_none() {
+            self.nodes.write().unwrap().entry(src).or_default();
+            self.observe(src, dst);
+        }
+    }
+
+    fn infer_threshold(&self, src: u64, threshold: f64) -> Recommendation {
+        self.with_node(src, |node| {
+            node.rebuild();
+            recommend_threshold(&node.sorted, node.total, threshold)
+        })
+        .unwrap_or_else(|| recommend_threshold(&[], 0, threshold))
+    }
+
+    fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        self.with_node(src, |node| {
+            node.rebuild();
+            recommend_topk(&node.sorted, node.total, k)
+        })
+        .unwrap_or_else(|| recommend_topk(&[], 0, k))
+    }
+
+    fn decay(&self) -> (u64, usize) {
+        let map = self.nodes.read().unwrap();
+        let mut total = 0;
+        let mut pruned = 0;
+        for node in map.values() {
+            let mut n = node.write().unwrap();
+            let before = n.counts.len();
+            n.counts.retain(|_, c| {
+                *c /= 2;
+                *c > 0
+            });
+            pruned += before - n.counts.len();
+            n.total = n.counts.values().sum();
+            n.dirty = true;
+            total += n.total;
+        }
+        self.edges.fetch_sub(pruned, Ordering::Relaxed);
+        (total, pruned)
+    }
+
+    fn edge_count(&self) -> usize {
+        self.edges.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,203 @@
+//! Lock-based baselines: the textbook coarse-mutex chain and the sharded
+//! reader-writer-lock chain.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use super::{recommend_threshold, recommend_topk, MarkovModel};
+use crate::chain::Recommendation;
+
+/// Per-node state used by both locked baselines: counts map + a sorted view
+/// rebuilt lazily (dirty flag) so inference matches MCPrioQ's head-first
+/// scan order.
+#[derive(Default)]
+struct NodeEntry {
+    total: u64,
+    counts: HashMap<u64, u64>,
+    /// Descending (count, dst); rebuilt when dirty.
+    sorted: Vec<(u64, u64)>,
+    dirty: bool,
+}
+
+impl NodeEntry {
+    fn observe(&mut self, dst: u64) {
+        *self.counts.entry(dst).or_insert(0) += 1;
+        self.total += 1;
+        self.dirty = true;
+    }
+
+    fn rebuild(&mut self) {
+        if self.dirty {
+            self.sorted = self.counts.iter().map(|(&d, &c)| (d, c)).collect();
+            self.sorted.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            self.dirty = false;
+        }
+    }
+
+    fn decay(&mut self) -> (u64, usize) {
+        let before = self.counts.len();
+        self.counts.retain(|_, c| {
+            *c /= 2;
+            *c > 0
+        });
+        self.total = self.counts.values().sum();
+        self.dirty = true;
+        (self.total, before - self.counts.len())
+    }
+}
+
+/// Coarse-grained baseline: one global mutex around everything. O(1)-ish
+/// single-threaded; collapses under concurrency (E1/E3's lower bound).
+pub struct MutexChain {
+    inner: Mutex<HashMap<u64, NodeEntry>>,
+    edges: AtomicUsize,
+}
+
+impl Default for MutexChain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MutexChain {
+    pub fn new() -> Self {
+        MutexChain { inner: Mutex::new(HashMap::new()), edges: AtomicUsize::new(0) }
+    }
+}
+
+impl MarkovModel for MutexChain {
+    fn name(&self) -> &'static str {
+        "mutex"
+    }
+
+    fn observe(&self, src: u64, dst: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let node = g.entry(src).or_default();
+        let before = node.counts.len();
+        node.observe(dst);
+        if node.counts.len() > before {
+            self.edges.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn infer_threshold(&self, src: u64, threshold: f64) -> Recommendation {
+        let mut g = self.inner.lock().unwrap();
+        match g.get_mut(&src) {
+            Some(node) => {
+                node.rebuild();
+                recommend_threshold(&node.sorted, node.total, threshold)
+            }
+            None => recommend_threshold(&[], 0, threshold),
+        }
+    }
+
+    fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        let mut g = self.inner.lock().unwrap();
+        match g.get_mut(&src) {
+            Some(node) => {
+                node.rebuild();
+                recommend_topk(&node.sorted, node.total, k)
+            }
+            None => recommend_topk(&[], 0, k),
+        }
+    }
+
+    fn decay(&self) -> (u64, usize) {
+        let mut g = self.inner.lock().unwrap();
+        let mut total = 0;
+        let mut pruned = 0;
+        for node in g.values_mut() {
+            let (t, p) = node.decay();
+            total += t;
+            pruned += p;
+        }
+        self.edges.fetch_sub(pruned, Ordering::Relaxed);
+        (total, pruned)
+    }
+
+    fn edge_count(&self) -> usize {
+        self.edges.load(Ordering::Relaxed)
+    }
+}
+
+/// Sharded baseline: `RwLock<HashMap>` per shard — the "industry default"
+/// answer to MutexChain. Readers scale until a writer appears in their
+/// shard; updates serialize per shard.
+pub struct ShardedChain {
+    shards: Vec<RwLock<HashMap<u64, NodeEntry>>>,
+    edges: AtomicUsize,
+}
+
+impl ShardedChain {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards > 0);
+        ShardedChain {
+            shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
+            edges: AtomicUsize::new(0),
+        }
+    }
+
+    fn shard(&self, src: u64) -> &RwLock<HashMap<u64, NodeEntry>> {
+        let h = src.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+        &self.shards[h as usize % self.shards.len()]
+    }
+}
+
+impl MarkovModel for ShardedChain {
+    fn name(&self) -> &'static str {
+        "sharded-rwlock"
+    }
+
+    fn observe(&self, src: u64, dst: u64) {
+        let mut g = self.shard(src).write().unwrap();
+        let node = g.entry(src).or_default();
+        let before = node.counts.len();
+        node.observe(dst);
+        if node.counts.len() > before {
+            self.edges.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn infer_threshold(&self, src: u64, threshold: f64) -> Recommendation {
+        // Write lock: inference may rebuild the sorted view.
+        let mut g = self.shard(src).write().unwrap();
+        match g.get_mut(&src) {
+            Some(node) => {
+                node.rebuild();
+                recommend_threshold(&node.sorted, node.total, threshold)
+            }
+            None => recommend_threshold(&[], 0, threshold),
+        }
+    }
+
+    fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        let mut g = self.shard(src).write().unwrap();
+        match g.get_mut(&src) {
+            Some(node) => {
+                node.rebuild();
+                recommend_topk(&node.sorted, node.total, k)
+            }
+            None => recommend_topk(&[], 0, k),
+        }
+    }
+
+    fn decay(&self) -> (u64, usize) {
+        let mut total = 0;
+        let mut pruned = 0;
+        for shard in &self.shards {
+            let mut g = shard.write().unwrap();
+            for node in g.values_mut() {
+                let (t, p) = node.decay();
+                total += t;
+                pruned += p;
+            }
+        }
+        self.edges.fetch_sub(pruned, Ordering::Relaxed);
+        (total, pruned)
+    }
+
+    fn edge_count(&self) -> usize {
+        self.edges.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,118 @@
+//! Baseline markov-chain implementations the paper argues against or
+//! discusses as alternatives (§II.2), all behind one trait so every
+//! benchmark can sweep implementations:
+//!
+//! * [`MutexChain`] — coarse global `Mutex` around a plain map-of-maps; the
+//!   textbook non-lock-free construction.
+//! * [`ShardedChain`] — `RwLock`-per-shard map with per-node sorted edge
+//!   vectors; the "just shard it" industry default.
+//! * [`SkipListChain`] — per-node *skip-list* priority queue (Sundell &
+//!   Tsigas [3] is the paper's cited alternative; ours is the structural
+//!   equivalent guarded by a per-node `RwLock`, so E2 compares *search
+//!   depth/structure*, while E1/E3 compare against its locking overhead).
+//! * [`HeapChain`] — heap-style "fast insert, pay at query": O(1) updates
+//!   into a hash map, full sort on (dirty) inference — the §II.2 point that
+//!   heaps optimize top-1 insert, not cumulative-probability scans.
+//! * `DenseXlaChain` (in [`crate::runtime`]) — the dense-matrix engine the
+//!   introduction motivates against, running on the AOT-compiled JAX/Pallas
+//!   artifact.
+//!
+//! All baselines implement *the same semantics* (two-counter probabilities,
+//! halving decay with zero-pruning) so experiment outputs are comparable.
+
+mod heap;
+mod locked;
+mod skiplist;
+
+pub use heap::HeapChain;
+pub use locked::{MutexChain, ShardedChain};
+pub use skiplist::{SkipList, SkipListChain};
+
+use crate::chain::{McPrioQ, Recommendation};
+
+/// The common surface of every markov-chain implementation in this crate.
+pub trait MarkovModel: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn observe(&self, src: u64, dst: u64);
+    fn infer_threshold(&self, src: u64, threshold: f64) -> Recommendation;
+    fn infer_topk(&self, src: u64, k: usize) -> Recommendation;
+    /// Halve all counters, prune zeros. Returns (surviving mass, pruned).
+    fn decay(&self) -> (u64, usize);
+    fn edge_count(&self) -> usize;
+}
+
+impl MarkovModel for McPrioQ {
+    fn name(&self) -> &'static str {
+        "mcprioq"
+    }
+
+    fn observe(&self, src: u64, dst: u64) {
+        McPrioQ::observe(self, src, dst);
+    }
+
+    fn infer_threshold(&self, src: u64, threshold: f64) -> Recommendation {
+        McPrioQ::infer_threshold(self, src, threshold)
+    }
+
+    fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        McPrioQ::infer_topk(self, src, k)
+    }
+
+    fn decay(&self) -> (u64, usize) {
+        McPrioQ::decay(self)
+    }
+
+    fn edge_count(&self) -> usize {
+        McPrioQ::edge_count(self)
+    }
+}
+
+/// Shared helper: build a `Recommendation` from a descending-sorted slice
+/// of `(dst, count)` with a cumulative-probability threshold.
+pub(crate) fn recommend_threshold(
+    sorted: &[(u64, u64)],
+    total: u64,
+    threshold: f64,
+) -> Recommendation {
+    if total == 0 {
+        return Recommendation { items: Vec::new(), cumulative: 0.0, scanned: 0, total: 0 };
+    }
+    let threshold = threshold.clamp(0.0, 1.0);
+    let totf = total as f64;
+    let mut items = Vec::new();
+    let mut cum = 0u64;
+    let mut scanned = 0;
+    if threshold > 0.0 {
+        for &(dst, count) in sorted {
+            scanned += 1;
+            cum += count;
+            items.push((dst, count as f64 / totf));
+            if cum as f64 >= threshold * totf {
+                break;
+            }
+        }
+    }
+    Recommendation { items, cumulative: cum as f64 / totf, scanned, total }
+}
+
+/// Shared helper: top-k version.
+pub(crate) fn recommend_topk(sorted: &[(u64, u64)], total: u64, k: usize) -> Recommendation {
+    if total == 0 || k == 0 {
+        return Recommendation { items: Vec::new(), cumulative: 0.0, scanned: 0, total };
+    }
+    let totf = total as f64;
+    let mut cum = 0u64;
+    let items: Vec<(u64, f64)> = sorted
+        .iter()
+        .take(k)
+        .map(|&(dst, count)| {
+            cum += count;
+            (dst, count as f64 / totf)
+        })
+        .collect();
+    let scanned = items.len();
+    Recommendation { items, cumulative: cum as f64 / totf, scanned, total }
+}
+
+#[cfg(test)]
+mod tests;

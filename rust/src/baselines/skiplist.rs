@@ -1,0 +1,342 @@
+//! Skip-list priority queue baseline (§II.2 discusses Sundell & Tsigas [3]
+//! as the natural lock-free alternative).
+//!
+//! [`SkipList`] is a textbook multi-level list ordered by
+//! `(count desc, dst asc)` with deterministic pseudo-random tower heights.
+//! [`SkipListChain`] wraps one skip-list + dst→count map per src node
+//! behind a per-node `RwLock`: counter updates are remove+reinsert (the
+//! pop-insert scheme the paper's swap replaces), so E2/E4 compare the
+//! *structural* costs and E1/E3 the locking overhead.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+use super::{recommend_threshold, recommend_topk, MarkovModel};
+use crate::chain::Recommendation;
+
+const MAX_LEVEL: usize = 12;
+
+/// Key ordering: higher count first, then dst ascending (total order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Key {
+    count: u64,
+    dst: u64,
+}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.count.cmp(&self.count).then(self.dst.cmp(&other.dst))
+    }
+}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct SkipNode {
+    key: Key,
+    next: Vec<usize>, // arena indices; usize::MAX = null
+}
+
+const NIL: usize = usize::MAX;
+
+/// Arena-backed skip list (indices instead of pointers: cache-friendly and
+/// no unsafe).
+pub struct SkipList {
+    arena: Vec<SkipNode>,
+    head: Vec<usize>, // per-level first node
+    free: Vec<usize>,
+    len: usize,
+    rng_state: u64,
+}
+
+impl Default for SkipList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SkipList {
+    pub fn new() -> Self {
+        SkipList {
+            arena: Vec::new(),
+            head: vec![NIL; MAX_LEVEL],
+            free: Vec::new(),
+            len: 0,
+            rng_state: 0x853C_49E6_748F_EA9B,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn random_level(&mut self) -> usize {
+        // xorshift; geometric(1/2) heights capped at MAX_LEVEL.
+        self.rng_state ^= self.rng_state << 13;
+        self.rng_state ^= self.rng_state >> 7;
+        self.rng_state ^= self.rng_state << 17;
+        ((self.rng_state.trailing_ones() as usize) + 1).min(MAX_LEVEL)
+    }
+
+    /// Find per-level predecessors of `key` (NIL = head).
+    fn predecessors(&self, key: Key) -> [usize; MAX_LEVEL] {
+        let mut preds = [NIL; MAX_LEVEL];
+        let mut cur = NIL; // virtual head
+        for level in (0..MAX_LEVEL).rev() {
+            loop {
+                let next = if cur == NIL { self.head[level] } else { self.arena[cur].next[level] };
+                if next != NIL && self.arena[next].key < key {
+                    cur = next;
+                } else {
+                    break;
+                }
+            }
+            preds[level] = cur;
+        }
+        preds
+    }
+
+    pub fn insert(&mut self, count: u64, dst: u64) {
+        let key = Key { count, dst };
+        let preds = self.predecessors(key);
+        let level = self.random_level();
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.arena[i] = SkipNode { key, next: vec![NIL; level] };
+                i
+            }
+            None => {
+                self.arena.push(SkipNode { key, next: vec![NIL; level] });
+                self.arena.len() - 1
+            }
+        };
+        for l in 0..level {
+            let succ = if preds[l] == NIL { self.head[l] } else { self.arena[preds[l]].next[l] };
+            self.arena[idx].next[l] = succ;
+            if preds[l] == NIL {
+                self.head[l] = idx;
+            } else {
+                self.arena[preds[l]].next[l] = idx;
+            }
+        }
+        self.len += 1;
+    }
+
+    /// Remove the exact `(count, dst)` entry; true if present.
+    pub fn remove(&mut self, count: u64, dst: u64) -> bool {
+        let key = Key { count, dst };
+        let preds = self.predecessors(key);
+        let target = if preds[0] == NIL { self.head[0] } else { self.arena[preds[0]].next[0] };
+        if target == NIL || self.arena[target].key != key {
+            return false;
+        }
+        let height = self.arena[target].next.len();
+        for l in 0..height {
+            let pred_next =
+                if preds[l] == NIL { self.head[l] } else { self.arena[preds[l]].next[l] };
+            if pred_next == target {
+                let succ = self.arena[target].next[l];
+                if preds[l] == NIL {
+                    self.head[l] = succ;
+                } else {
+                    self.arena[preds[l]].next[l] = succ;
+                }
+            }
+        }
+        self.free.push(target);
+        self.len -= 1;
+        true
+    }
+
+    /// Iterate `(dst, count)` in priority order; `f` returns false to stop.
+    /// Returns nodes visited (comparable to EdgeList::scan).
+    pub fn scan<F: FnMut(u64, u64) -> bool>(&self, mut f: F) -> usize {
+        let mut cur = self.head[0];
+        let mut visited = 0;
+        while cur != NIL {
+            let n = &self.arena[cur];
+            visited += 1;
+            if !f(n.key.dst, n.key.count) {
+                break;
+            }
+            cur = n.next[0];
+        }
+        visited
+    }
+
+    /// Comparison-depth of locating `key`'s position (search cost metric
+    /// for E2 structure comparisons).
+    pub fn search_depth(&self, count: u64, dst: u64) -> usize {
+        let key = Key { count, dst };
+        let mut depth = 0;
+        let mut cur = NIL;
+        for level in (0..MAX_LEVEL).rev() {
+            loop {
+                let next = if cur == NIL { self.head[level] } else { self.arena[cur].next[level] };
+                depth += 1;
+                if next != NIL && self.arena[next].key < key {
+                    cur = next;
+                } else {
+                    break;
+                }
+            }
+        }
+        depth
+    }
+
+    /// Verify ordering and level monotonicity (test helper).
+    pub fn check(&self) -> Result<(), String> {
+        let mut cur = self.head[0];
+        let mut last: Option<Key> = None;
+        let mut n = 0;
+        while cur != NIL {
+            let k = self.arena[cur].key;
+            if let Some(l) = last {
+                if k < l {
+                    return Err(format!("order violation at dst {}", k.dst));
+                }
+            }
+            last = Some(k);
+            cur = self.arena[cur].next[0];
+            n += 1;
+            if n > self.len {
+                return Err("cycle".to_string());
+            }
+        }
+        if n != self.len {
+            return Err(format!("len {} but saw {n}", self.len));
+        }
+        Ok(())
+    }
+}
+
+struct SkipNodeState {
+    total: u64,
+    counts: HashMap<u64, u64>,
+    list: SkipList,
+}
+
+/// Markov chain over per-node skip-lists (see module docs).
+pub struct SkipListChain {
+    nodes: RwLock<HashMap<u64, RwLock<SkipNodeState>>>,
+    edges: AtomicUsize,
+}
+
+impl Default for SkipListChain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SkipListChain {
+    pub fn new() -> Self {
+        SkipListChain { nodes: RwLock::new(HashMap::new()), edges: AtomicUsize::new(0) }
+    }
+
+    fn with_node<R>(&self, src: u64, f: impl FnOnce(&mut SkipNodeState) -> R) -> Option<R> {
+        let map = self.nodes.read().unwrap();
+        map.get(&src).map(|n| f(&mut n.write().unwrap()))
+    }
+}
+
+impl MarkovModel for SkipListChain {
+    fn name(&self) -> &'static str {
+        "skiplist"
+    }
+
+    fn observe(&self, src: u64, dst: u64) {
+        // Fast path: node exists.
+        let updated = self.with_node(src, |state| {
+            let old = state.counts.get(&dst).copied();
+            match old {
+                Some(c) => {
+                    // Pop-insert: the scheme the paper's swap avoids.
+                    state.list.remove(c, dst);
+                    state.list.insert(c + 1, dst);
+                    state.counts.insert(dst, c + 1);
+                }
+                None => {
+                    state.counts.insert(dst, 1);
+                    state.list.insert(1, dst);
+                    self.edges.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            state.total += 1;
+        });
+        if updated.is_none() {
+            // Slow path: create the node, then retry.
+            {
+                let mut map = self.nodes.write().unwrap();
+                map.entry(src).or_insert_with(|| {
+                    RwLock::new(SkipNodeState {
+                        total: 0,
+                        counts: HashMap::new(),
+                        list: SkipList::new(),
+                    })
+                });
+            }
+            self.observe(src, dst);
+        }
+    }
+
+    fn infer_threshold(&self, src: u64, threshold: f64) -> Recommendation {
+        self.with_node(src, |state| {
+            let mut sorted = Vec::new();
+            state.list.scan(|d, c| {
+                sorted.push((d, c));
+                true
+            });
+            recommend_threshold(&sorted, state.total, threshold)
+        })
+        .unwrap_or_else(|| recommend_threshold(&[], 0, threshold))
+    }
+
+    fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        self.with_node(src, |state| {
+            let mut sorted = Vec::new();
+            state.list.scan(|d, c| {
+                sorted.push((d, c));
+                sorted.len() < k
+            });
+            recommend_topk(&sorted, state.total, k)
+        })
+        .unwrap_or_else(|| recommend_topk(&[], 0, k))
+    }
+
+    fn decay(&self) -> (u64, usize) {
+        let map = self.nodes.read().unwrap();
+        let mut total = 0;
+        let mut pruned = 0;
+        for node in map.values() {
+            let mut state = node.write().unwrap();
+            let old: Vec<(u64, u64)> = state.counts.iter().map(|(&d, &c)| (d, c)).collect();
+            for (dst, c) in old {
+                state.list.remove(c, dst);
+                let nc = c / 2;
+                if nc == 0 {
+                    state.counts.remove(&dst);
+                    pruned += 1;
+                } else {
+                    state.counts.insert(dst, nc);
+                    state.list.insert(nc, dst);
+                }
+            }
+            state.total = state.counts.values().sum();
+            total += state.total;
+        }
+        self.edges.fetch_sub(pruned, Ordering::Relaxed);
+        (total, pruned)
+    }
+
+    fn edge_count(&self) -> usize {
+        self.edges.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,281 @@
+//! Measurement harness for the E1-E8 benchmarks (criterion is unavailable
+//! offline). Provides warmed-up, multi-sample timing with percentile
+//! reporting, throughput runs over thread pools, an aligned table printer,
+//! and CSV output under `target/bench_results/` for EXPERIMENTS.md.
+
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+/// One measured series: per-sample wall times for a fixed op count.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// ns per op for each sample.
+    pub samples_ns: Vec<f64>,
+    pub ops_per_sample: u64,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        let mut v = self.samples_ns.clone();
+        v.sort_by(f64::total_cmp);
+        v[v.len() / 2]
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Ops/second at the median sample.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.median_ns()
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_sample_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            samples: 7,
+            min_sample_time: Duration::from_millis(120),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            samples: 3,
+            min_sample_time: Duration::from_millis(40),
+        }
+    }
+
+    /// Measure `f` (which performs `ops` operations per call): warm up,
+    /// then collect samples, auto-scaling iterations per sample so each
+    /// sample runs at least `min_sample_time`.
+    pub fn run<F: FnMut()>(&self, name: &str, ops: u64, mut f: F) -> Measurement {
+        // Warmup + calibration.
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.warmup || calls == 0 {
+            f();
+            calls += 1;
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / calls as f64;
+        let iters =
+            ((self.min_sample_time.as_secs_f64() / per_call.max(1e-9)).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            samples_ns.push(dt / (iters * ops) as f64);
+        }
+        Measurement { name: name.to_string(), samples_ns, ops_per_sample: iters * ops }
+    }
+
+    /// Throughput of `threads` workers running `make_worker()` closures for
+    /// `duration`; returns total ops/sec. Each worker closure performs one
+    /// op per call and is polled until the deadline.
+    pub fn run_threads<W, F>(&self, threads: usize, duration: Duration, make_worker: W) -> f64
+    where
+        W: Fn(usize) -> F,
+        F: FnMut() -> u64 + Send,
+    {
+        std::thread::scope(|scope| {
+            let deadline = Instant::now() + duration;
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let mut w = make_worker(t);
+                    scope.spawn(move || {
+                        let mut ops = 0u64;
+                        while Instant::now() < deadline {
+                            // Batch the clock check to keep overhead low.
+                            for _ in 0..64 {
+                                ops += w();
+                            }
+                        }
+                        ops
+                    })
+                })
+                .collect();
+            let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            total as f64 / duration.as_secs_f64()
+        })
+    }
+}
+
+/// Format `n` ops/sec human-readably.
+pub fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}K/s", r / 1e3)
+    } else {
+        format!("{r:.1}/s")
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Aligned plain-text table, printed to stdout and appended to a CSV file
+/// under `target/bench_results/<bench>.csv` (for EXPERIMENTS.md).
+pub struct Table {
+    bench: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(bench: &str, headers: &[&str]) -> Self {
+        Table {
+            bench: bench.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Print the table and write the CSV artifact. Returns the CSV path.
+    pub fn finish(&self) -> std::path::PathBuf {
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows.iter().map(|r| r[i].len()).chain([h.len()]).max().unwrap_or(0)
+            })
+            .collect();
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("\n== {} ==", self.bench);
+        println!("{}", line(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+
+        let dir = std::path::Path::new("target/bench_results");
+        std::fs::create_dir_all(dir).expect("create bench_results dir");
+        let path = dir.join(format!("{}.csv", self.bench));
+        let mut f = std::fs::File::create(&path).expect("create csv");
+        writeln!(f, "{}", self.headers.join(",")).unwrap();
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(",")).unwrap();
+        }
+        path
+    }
+}
+
+/// `--quick` support for bench binaries: scale down when iterating locally.
+pub fn bench_mode_from_env() -> Bench {
+    if std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_sane_measurement() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            min_sample_time: Duration::from_millis(5),
+        };
+        let mut x = 0u64;
+        let m = b.run("noop", 1, || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert_eq!(m.samples_ns.len(), 3);
+        assert!(m.mean_ns() > 0.0);
+        assert!(m.min_ns() <= m.mean_ns());
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn run_threads_counts_ops() {
+        let b = Bench::quick();
+        let rate = b.run_threads(2, Duration::from_millis(20), |_| {
+            let mut x = 0u64;
+            move || {
+                x = x.wrapping_add(1);
+                std::hint::black_box(x);
+                1
+            }
+        });
+        assert!(rate > 1000.0, "rate {rate}");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_rate(2_500_000.0), "2.50M/s");
+        assert_eq!(fmt_rate(3_200.0), "3.20K/s");
+        assert_eq!(fmt_rate(1.5e9), "1.50G/s");
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50µs");
+        assert_eq!(fmt_ns(3.1e6), "3.10ms");
+    }
+
+    #[test]
+    fn table_writes_csv() {
+        let mut t = Table::new("test_table", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let path = t.finish();
+        let content = std::fs::read_to_string(path).unwrap();
+        assert_eq!(content, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn median_of_known_samples() {
+        let m = Measurement {
+            name: "x".into(),
+            samples_ns: vec![3.0, 1.0, 2.0],
+            ops_per_sample: 1,
+        };
+        assert_eq!(m.median_ns(), 2.0);
+        assert_eq!(m.min_ns(), 1.0);
+    }
+}

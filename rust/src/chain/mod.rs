@@ -1,0 +1,343 @@
+//! The MCPrioQ markov chain (Fig. 1): src-node hash table → per-node state
+//! (total counter + dst hash table + priority-queue edge list).
+//!
+//! Public API (all operations are safe, concurrent, and run under internal
+//! RCU guards):
+//!
+//! ```
+//! use mcprioq::chain::{ChainConfig, McPrioQ};
+//! let chain = McPrioQ::new(ChainConfig::default());
+//! chain.observe(1, 2);                       // user moved 1 -> 2
+//! chain.observe(1, 3);
+//! chain.observe(1, 2);
+//! let rec = chain.infer_threshold(1, 0.9);   // items until cum-prob >= 0.9
+//! assert_eq!(rec.items[0].0, 2);             // most likely next node
+//! let (sum, pruned) = chain.decay();         // §II.C maintenance
+//! # let _ = (sum, pruned);
+//! ```
+//!
+//! Complexity (paper §II.A/§II.B): `observe` of an existing edge is two O(1)
+//! hash lookups + one wait-free increment (+ rare bubble swaps); `observe`
+//! of a new edge additionally takes the lock-free pending-insert path;
+//! `infer_threshold` is O(1) to the queue head plus O(CDF⁻¹(t)) scanned
+//! items. Probabilities are computed at read time from the two counters
+//! (§II.3), so updates never touch sibling edges.
+
+mod state;
+
+pub use state::NodeStats;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::metrics::StripedCounter;
+
+use crate::hashtable::PtrTable;
+use crate::prioq::IncrementOutcome;
+use crate::rcu;
+use state::NodeState;
+
+/// Configuration for a [`McPrioQ`] chain.
+#[derive(Debug, Clone)]
+pub struct ChainConfig {
+    /// Initial capacity of the src-node table.
+    pub src_capacity: usize,
+    /// Initial capacity of each per-node dst table.
+    pub dst_capacity: usize,
+    /// §II.2: the dst-node hash table is an *optional optimization* — with
+    /// it, edge updates are O(1); without it, updates search the edge list
+    /// (cost = the edge probability distribution's lookup depth). Keep it
+    /// on in production; turn it off to reproduce the paper's ablation.
+    pub use_dst_table: bool,
+    /// Decay multiplier as (numerator, denominator); the paper suggests 1/2.
+    pub decay_num: u64,
+    pub decay_den: u64,
+}
+
+impl Default for ChainConfig {
+    fn default() -> Self {
+        ChainConfig {
+            src_capacity: 1024,
+            dst_capacity: 8,
+            use_dst_table: true,
+            decay_num: 1,
+            decay_den: 2,
+        }
+    }
+}
+
+/// Result of one `observe` call (consumed by E4's swap-rate experiment).
+#[derive(Debug, Clone, Copy)]
+pub struct ObserveOutcome {
+    /// True if this was the first observation out of `src`.
+    pub new_src: bool,
+    /// True if the edge `src -> dst` was created by this call.
+    pub new_edge: bool,
+    /// Counter/reorder outcome for existing-edge updates.
+    pub increment: IncrementOutcome,
+}
+
+/// An inference answer: items in (approximately) descending probability.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recommendation {
+    /// `(dst, probability)` pairs, head of the queue first.
+    pub items: Vec<(u64, f64)>,
+    /// Cumulative probability covered by `items`.
+    pub cumulative: f64,
+    /// Queue elements visited to produce the answer — the paper's
+    /// O(CDF⁻¹(t)) inference cost, measured (E2).
+    pub scanned: usize,
+    /// Total transition count out of the src node at read time.
+    pub total: u64,
+}
+
+impl Recommendation {
+    fn empty() -> Self {
+        Recommendation { items: Vec::new(), cumulative: 0.0, scanned: 0, total: 0 }
+    }
+}
+
+/// Aggregate structure statistics (metrics endpoint, EXPERIMENTS.md).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ChainStats {
+    pub nodes: usize,
+    pub edges: usize,
+    pub observes: u64,
+    pub swaps: u64,
+    pub swap_skips: u64,
+    pub decays: u64,
+    pub pruned_edges: u64,
+    /// Approximate resident bytes of all nodes/edges/tables.
+    pub approx_bytes: usize,
+}
+
+/// The lock-free online sparse markov chain.
+///
+/// Thread-safe: share it via `Arc` (or plain references with scoped
+/// threads); every method takes `&self`.
+pub struct McPrioQ {
+    src: PtrTable<NodeState>,
+    config: ChainConfig,
+    /// Striped: `observe` is the hottest path in the system; a single
+    /// global counter line would serialize writers (§Perf).
+    observes: StripedCounter,
+    decays: AtomicU64,
+    pruned: AtomicU64,
+    edges: AtomicUsize,
+}
+
+impl McPrioQ {
+    pub fn new(config: ChainConfig) -> Self {
+        McPrioQ {
+            src: PtrTable::with_capacity(config.src_capacity),
+            config,
+            observes: StripedCounter::new(),
+            decays: AtomicU64::new(0),
+            pruned: AtomicU64::new(0),
+            edges: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &ChainConfig {
+        &self.config
+    }
+
+    /// Record one transition `src -> dst` with weight 1.
+    #[inline]
+    pub fn observe(&self, src: u64, dst: u64) -> ObserveOutcome {
+        self.observe_weighted(src, dst, 1)
+    }
+
+    /// Record a transition with an arbitrary positive weight (§II.3: "the
+    /// counter could be anything").
+    pub fn observe_weighted(&self, src: u64, dst: u64, weight: u64) -> ObserveOutcome {
+        assert!(weight > 0, "weight must be positive");
+        self.observes.inc();
+        let guard = rcu::pin();
+
+        // --- src-node lookup / creation (O(1) common case) ---
+        let mut new_src = false;
+        let state_ptr = match self.src.get(&guard, src) {
+            Some(p) => p,
+            None => {
+                let fresh = NodeState::boxed(src, &self.config);
+                let (winner, inserted) = self.src.insert_or_get(&guard, src, fresh);
+                if inserted {
+                    new_src = true;
+                } else {
+                    // Lost the publish race; the fresh state was never shared.
+                    unsafe { NodeState::free_unshared(fresh) };
+                }
+                winner
+            }
+        };
+        let state = unsafe { &*state_ptr };
+
+        // --- edge lookup / creation + increment ---
+        let (new_edge, increment) = state.observe(&guard, dst, weight, &self.config);
+        if new_edge {
+            self.edges.fetch_add(1, Ordering::Relaxed);
+        }
+        ObserveOutcome { new_src, new_edge, increment }
+    }
+
+    /// Items in descending probability until the cumulative probability
+    /// reaches `threshold` (§II.B). `threshold` in `[0, 1]`.
+    pub fn infer_threshold(&self, src: u64, threshold: f64) -> Recommendation {
+        let guard = rcu::pin();
+        let Some(state) = (unsafe { self.src.get(&guard, src).map(|p| &*p) }) else {
+            return Recommendation::empty();
+        };
+        state.infer_threshold(&guard, threshold)
+    }
+
+    /// The `k` most probable next nodes.
+    pub fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        let guard = rcu::pin();
+        let Some(state) = (unsafe { self.src.get(&guard, src).map(|p| &*p) }) else {
+            return Recommendation::empty();
+        };
+        state.infer_topk(&guard, k)
+    }
+
+    /// Probability of the single transition `src -> dst` (None if the edge
+    /// does not exist). O(1) with the dst table enabled.
+    pub fn probability(&self, src: u64, dst: u64) -> Option<f64> {
+        let guard = rcu::pin();
+        let state = unsafe { self.src.get(&guard, src).map(|p| &*p) }?;
+        state.probability(&guard, dst)
+    }
+
+    /// Uniform model decay (§II.C): multiply every edge counter by
+    /// `decay_num / decay_den`, prune edges that reach zero, and refresh
+    /// each node's total. Runs concurrently with observers and readers.
+    /// Returns (surviving total count, pruned edge count).
+    pub fn decay(&self) -> (u64, usize) {
+        self.decays.fetch_add(1, Ordering::Relaxed);
+        let guard = rcu::pin();
+        let mut total = 0u64;
+        let mut pruned = 0usize;
+        self.src.for_each(&guard, |_, state_ptr| {
+            let state = unsafe { &*state_ptr };
+            let (sum, p) = state.decay(&guard, self.config.decay_num, self.config.decay_den);
+            total += sum;
+            pruned += p;
+        });
+        self.pruned.fetch_add(pruned as u64, Ordering::Relaxed);
+        self.edges.fetch_sub(pruned, Ordering::Relaxed);
+        (total, pruned)
+    }
+
+    /// Maintenance sweep: restore exact sort order in every edge list
+    /// (residual inversions from skipped/raced reorders). Piggybacked on
+    /// decay in production; exposed for tests and quiesce points.
+    pub fn repair(&self) -> u64 {
+        let guard = rcu::pin();
+        let mut swaps = 0u64;
+        self.src.for_each(&guard, |_, state_ptr| {
+            swaps += unsafe { &*state_ptr }.repair(&guard);
+        });
+        swaps
+    }
+
+    /// Verify P1/P3 on every node (quiesced-only; test helper).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let guard = rcu::pin();
+        let mut err = None;
+        self.src.for_each(&guard, |id, state_ptr| {
+            if err.is_some() {
+                return;
+            }
+            if let Err(e) = unsafe { &*state_ptr }.check_invariants() {
+                err = Some(format!("node {id}: {e}"));
+            }
+        });
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Per-node statistics (None if the src node is unknown).
+    pub fn node_stats(&self, src: u64) -> Option<NodeStats> {
+        let guard = rcu::pin();
+        let state = unsafe { self.src.get(&guard, src).map(|p| &*p) }?;
+        Some(state.stats())
+    }
+
+    /// Number of distinct src nodes.
+    pub fn node_count(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Number of live edges (approximate under concurrency).
+    pub fn edge_count(&self) -> usize {
+        self.edges.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> ChainStats {
+        let guard = rcu::pin();
+        let mut swaps = 0u64;
+        let mut skips = 0u64;
+        let mut edges = 0usize;
+        let mut bytes = std::mem::size_of::<Self>();
+        self.src.for_each(&guard, |_, state_ptr| {
+            let s = unsafe { &*state_ptr }.stats();
+            swaps += s.swaps;
+            skips += s.swap_skips;
+            edges += s.edges;
+            bytes += s.approx_bytes;
+        });
+        ChainStats {
+            nodes: self.src.len(),
+            edges,
+            observes: self.observes.get(),
+            swaps,
+            swap_skips: skips,
+            decays: self.decays.load(Ordering::Relaxed),
+            pruned_edges: self.pruned.load(Ordering::Relaxed),
+            approx_bytes: bytes,
+        }
+    }
+
+    /// Export a quiesced snapshot: `(src, total, [(dst, count)])` per node,
+    /// edge lists head-first. Used by examples (model save) and by the
+    /// dense-engine comparison (E6).
+    pub fn export(&self) -> Vec<(u64, u64, Vec<(u64, u64)>)> {
+        let guard = rcu::pin();
+        let mut out = Vec::with_capacity(self.src.len());
+        self.src.for_each(&guard, |id, state_ptr| {
+            let state = unsafe { &*state_ptr };
+            out.push((id, state.total(), state.edges_snapshot(&guard)));
+        });
+        out.sort_unstable_by_key(|&(id, _, _)| id);
+        out
+    }
+
+    /// Rebuild a chain from an exported snapshot.
+    pub fn import(config: ChainConfig, snapshot: &[(u64, u64, Vec<(u64, u64)>)]) -> Self {
+        let chain = McPrioQ::new(config);
+        for (src, _total, edges) in snapshot {
+            for &(dst, count) in edges {
+                chain.observe_weighted(*src, dst, count);
+            }
+        }
+        chain
+    }
+}
+
+impl Drop for McPrioQ {
+    fn drop(&mut self) {
+        // Exclusive access: free every NodeState (PtrTable does not own its
+        // values). The NodeState drop frees its edge list and dst table.
+        let guard = rcu::pin();
+        let mut ptrs = Vec::new();
+        self.src.for_each(&guard, |_, p| ptrs.push(p));
+        drop(guard);
+        for p in ptrs {
+            drop(unsafe { Box::from_raw(p) });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

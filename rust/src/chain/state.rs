@@ -1,0 +1,252 @@
+//! Per-src-node state: total counter + optional dst table + edge list.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{ChainConfig, Recommendation};
+use crate::hashtable::PtrTable;
+use crate::prioq::{EdgeList, IncrementOutcome, Node};
+use crate::rcu::Guard;
+use crate::sync::CachePadded;
+
+/// Statistics for one src node.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeStats {
+    pub id: u64,
+    pub total: u64,
+    pub edges: usize,
+    pub swaps: u64,
+    pub swap_skips: u64,
+    pub approx_bytes: usize,
+}
+
+pub(super) struct NodeState {
+    id: u64,
+    /// Total transitions out of this node (§II.3's second counter).
+    /// Cache-padded: it is the hottest write target of the whole structure.
+    total: CachePadded<AtomicU64>,
+    edges: EdgeList,
+    /// dst -> list-node index; `None` reproduces the paper's "skip the
+    /// dst-hash-table" ablation (§II.2).
+    dst: Option<PtrTable<Node>>,
+}
+
+impl NodeState {
+    pub(super) fn boxed(id: u64, config: &ChainConfig) -> *mut NodeState {
+        Box::into_raw(Box::new(NodeState {
+            id,
+            total: CachePadded::new(AtomicU64::new(0)),
+            edges: EdgeList::new(),
+            dst: config.use_dst_table.then(|| PtrTable::with_capacity(config.dst_capacity)),
+        }))
+    }
+
+    /// # Safety
+    /// Only for states that lost the src-table publish race and were never
+    /// shared with other threads.
+    pub(super) unsafe fn free_unshared(ptr: *mut NodeState) {
+        drop(Box::from_raw(ptr));
+    }
+
+    pub(super) fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Find-or-create the edge to `dst` and add `weight`. Returns
+    /// `(new_edge, increment outcome)`.
+    pub(super) fn observe(
+        &self,
+        guard: &Guard,
+        dst: u64,
+        weight: u64,
+        _config: &ChainConfig,
+    ) -> (bool, IncrementOutcome) {
+        let result = match &self.dst {
+            Some(table) => {
+                match table.get(guard, dst) {
+                    Some(node) => {
+                        // Normal case (§II.A.2): two O(1) lookups + one
+                        // wait-free increment, reorder only on inversion.
+                        let out = unsafe { self.edges.increment(guard, node, weight) };
+                        (false, out)
+                    }
+                    None => {
+                        // New edge (§II.A.1): race to publish in the dst
+                        // table; the winner links the node into the queue.
+                        let fresh = EdgeList::alloc_node(dst, weight);
+                        let (winner, inserted) = table.insert_or_get(guard, dst, fresh);
+                        if inserted {
+                            self.edges.insert_node(guard, fresh);
+                            (true, IncrementOutcome { count: weight, swaps: 0, skipped: false })
+                        } else {
+                            unsafe { EdgeList::free_unshared(fresh) };
+                            let out = unsafe { self.edges.increment(guard, winner, weight) };
+                            (false, out)
+                        }
+                    }
+                }
+            }
+            None => {
+                // Ablation: the list is the only index. Existing edges are
+                // found by a (ticketed) list search whose expected depth is
+                // the edge's probability rank — the tradeoff §II.2 debates.
+                let (node, inserted) = self.edges.find_or_insert(guard, dst, weight);
+                if inserted {
+                    (true, IncrementOutcome { count: weight, swaps: 0, skipped: false })
+                } else {
+                    let out = unsafe { self.edges.increment(guard, node, weight) };
+                    (false, out)
+                }
+            }
+        };
+        self.total.fetch_add(weight, Ordering::AcqRel);
+        result
+    }
+
+    pub(super) fn infer_threshold(&self, guard: &Guard, threshold: f64) -> Recommendation {
+        let total = self.total.load(Ordering::Acquire);
+        if total == 0 {
+            return Recommendation::empty();
+        }
+        let threshold = threshold.clamp(0.0, 1.0);
+        if threshold == 0.0 {
+            // The empty prefix already satisfies cum >= 0 (minimality, P4).
+            return Recommendation { items: Vec::new(), cumulative: 0.0, scanned: 0, total };
+        }
+        let totf = total as f64;
+        let mut items = Vec::new();
+        let mut cum = 0u64;
+        let scanned = self.edges.scan(guard, |dst, count| {
+            cum += count;
+            items.push((dst, count as f64 / totf));
+            // Integer comparison: cum/total >= threshold.
+            (cum as f64) < threshold * totf
+        });
+        Recommendation { items, cumulative: cum as f64 / totf, scanned, total }
+    }
+
+    pub(super) fn infer_topk(&self, guard: &Guard, k: usize) -> Recommendation {
+        let total = self.total.load(Ordering::Acquire);
+        if total == 0 || k == 0 {
+            return Recommendation::empty();
+        }
+        let totf = total as f64;
+        let mut items = Vec::with_capacity(k.min(64));
+        let mut cum = 0u64;
+        let scanned = self.edges.scan(guard, |dst, count| {
+            cum += count;
+            items.push((dst, count as f64 / totf));
+            items.len() < k
+        });
+        Recommendation { items, cumulative: cum as f64 / totf, scanned, total }
+    }
+
+    pub(super) fn probability(&self, guard: &Guard, dst: u64) -> Option<f64> {
+        let total = self.total.load(Ordering::Acquire);
+        if total == 0 {
+            return None;
+        }
+        match &self.dst {
+            Some(table) => {
+                let node = table.get(guard, dst)?;
+                Some(unsafe { &*node }.count() as f64 / total as f64)
+            }
+            None => {
+                let mut found = None;
+                self.edges.scan(guard, |k, c| {
+                    if k == dst {
+                        found = Some(c);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                found.map(|c| c as f64 / total as f64)
+            }
+        }
+    }
+
+    pub(super) fn decay(&self, guard: &Guard, num: u64, den: u64) -> (u64, usize) {
+        let (sum, pruned) = self.edges.decay(guard, num, den, |key, _node| {
+            // Unpublish before the node is retired: readers inside the
+            // current grace period may still see it via either route.
+            if let Some(table) = &self.dst {
+                table.remove(guard, key);
+            }
+        });
+        // Refresh the total from the surviving mass. Racing observers may
+        // add to `total` between the sum and this store; their edge
+        // contribution was either halved with the edge or added after — the
+        // discrepancy is transient and bounded by in-flight updates
+        // (approximately correct; exact at quiescence, invariant P3).
+        self.total.store(sum, Ordering::Release);
+        // Piggyback the order-repair sweep on the maintenance pass.
+        self.edges.repair(guard);
+        (sum, pruned)
+    }
+
+    pub(super) fn repair(&self, guard: &Guard) -> u64 {
+        let swaps = self.edges.repair(guard);
+        // Re-base the total from the edge sum: an increment racing a decay
+        // can land after the decay summed its edge but before the total was
+        // stored, leaving a small permanent skew that no later update
+        // corrects. The maintenance sweep is the quiesce point that restores
+        // exactness (P3); under concurrency the rebased value is just a
+        // fresher approximation.
+        let mut sum = 0u64;
+        self.edges.scan(guard, |_, c| {
+            sum += c;
+            true
+        });
+        self.total.store(sum, Ordering::Release);
+        swaps
+    }
+
+    pub(super) fn check_invariants(&self) -> Result<(), String> {
+        self.edges.check_sorted()?;
+        // P3: sum of edge counters == node total (quiesced).
+        let guard = crate::rcu::pin();
+        let mut sum = 0u64;
+        self.edges.scan(&guard, |_, c| {
+            sum += c;
+            true
+        });
+        let total = self.total.load(Ordering::Acquire);
+        if sum != total {
+            return Err(format!("edge sum {sum} != total {total}"));
+        }
+        // Dst table and list must agree.
+        if let Some(table) = &self.dst {
+            if table.len() != self.edges.len() {
+                return Err(format!(
+                    "dst table len {} != list len {}",
+                    table.len(),
+                    self.edges.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub(super) fn edges_snapshot(&self, guard: &Guard) -> Vec<(u64, u64)> {
+        self.edges.top(guard, usize::MAX)
+    }
+
+    pub(super) fn stats(&self) -> NodeStats {
+        let ls = self.edges.stats();
+        let bytes = std::mem::size_of::<NodeState>()
+            + ls.len * (std::mem::size_of::<Node>() + 48) // node + table entry
+            + self.dst.as_ref().map_or(0, |t| t.stats().capacity * 8);
+        NodeStats {
+            id: self.id,
+            total: self.total.load(Ordering::Relaxed),
+            edges: ls.len,
+            swaps: ls.swaps,
+            swap_skips: ls.swap_skips,
+            approx_bytes: bytes,
+        }
+    }
+}
+
+// NodeState owns its EdgeList (which frees the list nodes) and its dst
+// table (which frees only its entry shells — the values are the same list
+// nodes, freed exactly once by the EdgeList). Default Drop is correct.

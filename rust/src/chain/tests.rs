@@ -1,0 +1,376 @@
+//! Chain-level tests: behaviour of the public API, invariants P1-P5, and
+//! concurrent stress over the full structure (tables + queue + counters).
+
+use super::*;
+use crate::testutil::{forall, PropConfig, Rng64, U64Range, VecGen};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn default_chain() -> McPrioQ {
+    McPrioQ::new(ChainConfig::default())
+}
+
+fn no_dst_chain() -> McPrioQ {
+    McPrioQ::new(ChainConfig { use_dst_table: false, ..Default::default() })
+}
+
+#[test]
+fn observe_creates_nodes_and_edges() {
+    let c = default_chain();
+    let o1 = c.observe(1, 2);
+    assert!(o1.new_src && o1.new_edge);
+    let o2 = c.observe(1, 2);
+    assert!(!o2.new_src && !o2.new_edge);
+    assert_eq!(o2.increment.count, 2);
+    let o3 = c.observe(1, 3);
+    assert!(!o3.new_src && o3.new_edge);
+    assert_eq!(c.node_count(), 1);
+    assert_eq!(c.edge_count(), 2);
+}
+
+#[test]
+fn probability_is_count_over_total() {
+    let c = default_chain();
+    for _ in 0..3 {
+        c.observe(1, 2);
+    }
+    c.observe(1, 3);
+    assert_eq!(c.probability(1, 2), Some(0.75));
+    assert_eq!(c.probability(1, 3), Some(0.25));
+    assert_eq!(c.probability(1, 4), None);
+    assert_eq!(c.probability(9, 2), None);
+}
+
+#[test]
+fn infer_threshold_returns_minimal_prefix() {
+    let c = default_chain();
+    // probabilities: 2 -> 0.5, 3 -> 0.3, 4 -> 0.2
+    for _ in 0..5 {
+        c.observe(1, 2);
+    }
+    for _ in 0..3 {
+        c.observe(1, 3);
+    }
+    for _ in 0..2 {
+        c.observe(1, 4);
+    }
+    let r = c.infer_threshold(1, 0.5);
+    assert_eq!(r.items.len(), 1);
+    assert_eq!(r.items[0], (2, 0.5));
+    let r = c.infer_threshold(1, 0.75);
+    assert_eq!(r.items.len(), 2);
+    assert!((r.cumulative - 0.8).abs() < 1e-9);
+    let r = c.infer_threshold(1, 1.0);
+    assert_eq!(r.items.len(), 3);
+    assert!((r.cumulative - 1.0).abs() < 1e-9);
+    // P4 minimality: dropping the last item falls below t.
+    let r = c.infer_threshold(1, 0.75);
+    let without_last: f64 = r.items[..r.items.len() - 1].iter().map(|&(_, p)| p).sum();
+    assert!(without_last < 0.75);
+}
+
+#[test]
+fn infer_threshold_edge_cases() {
+    let c = default_chain();
+    assert_eq!(c.infer_threshold(1, 0.9), Recommendation::empty()); // unknown src
+    c.observe(1, 2);
+    assert!(c.infer_threshold(1, 0.0).items.is_empty()); // empty prefix suffices
+    let r = c.infer_threshold(1, 1.5); // clamped to 1.0
+    assert_eq!(r.items.len(), 1);
+    let r = c.infer_threshold(1, -0.5); // clamped to 0.0
+    assert!(r.items.is_empty());
+}
+
+#[test]
+fn infer_topk_orders_by_probability() {
+    let c = default_chain();
+    for (dst, n) in [(10u64, 7), (20, 3), (30, 9), (40, 1)] {
+        for _ in 0..n {
+            c.observe(5, dst);
+        }
+    }
+    let r = c.infer_topk(5, 3);
+    let keys: Vec<u64> = r.items.iter().map(|&(k, _)| k).collect();
+    assert_eq!(keys, vec![30, 10, 20]);
+    assert_eq!(r.scanned, 3);
+    // k > edges: everything, in order.
+    let r = c.infer_topk(5, 100);
+    assert_eq!(r.items.len(), 4);
+    assert!((r.cumulative - 1.0).abs() < 1e-9);
+    assert!(c.infer_topk(5, 0).items.is_empty());
+}
+
+#[test]
+fn hot_item_bubbles_to_front() {
+    let c = default_chain();
+    c.observe(1, 100);
+    c.observe(1, 200);
+    c.observe(1, 300);
+    // Make 300 the hottest.
+    for _ in 0..10 {
+        c.observe(1, 300);
+    }
+    let r = c.infer_topk(1, 1);
+    assert_eq!(r.items[0].0, 300);
+    c.check_invariants().unwrap();
+}
+
+#[test]
+fn decay_halves_and_prunes_and_keeps_distribution() {
+    let c = default_chain();
+    for _ in 0..8 {
+        c.observe(1, 2);
+    }
+    for _ in 0..4 {
+        c.observe(1, 3);
+    }
+    c.observe(1, 4); // count 1: pruned by first decay
+    let p2_before = c.probability(1, 2).unwrap();
+    let (total, pruned) = c.decay();
+    assert_eq!(pruned, 1);
+    assert_eq!(total, 4 + 2);
+    assert_eq!(c.edge_count(), 2);
+    assert_eq!(c.probability(1, 4), None);
+    // Probability ordering (and roughly the values) survive decay (P5).
+    let p2_after = c.probability(1, 2).unwrap();
+    assert!((p2_before - 8.0 / 13.0).abs() < 1e-9);
+    assert!((p2_after - 4.0 / 6.0).abs() < 1e-9);
+    c.check_invariants().unwrap();
+}
+
+#[test]
+fn decay_to_extinction_empties_graph() {
+    let c = default_chain();
+    for _ in 0..7 {
+        c.observe(1, 2);
+    }
+    for _ in 0..10 {
+        c.decay();
+    }
+    assert_eq!(c.edge_count(), 0);
+    assert!(c.infer_threshold(1, 0.9).items.is_empty());
+    // The graph still works after extinction.
+    c.observe(1, 2);
+    assert_eq!(c.probability(1, 2), Some(1.0));
+    c.check_invariants().unwrap();
+}
+
+#[test]
+fn multiple_src_nodes_are_independent() {
+    let c = default_chain();
+    c.observe(1, 10);
+    c.observe(2, 20);
+    c.observe(2, 20);
+    assert_eq!(c.node_count(), 2);
+    assert_eq!(c.probability(1, 10), Some(1.0));
+    assert_eq!(c.probability(2, 20), Some(1.0));
+    assert_eq!(c.infer_topk(1, 10).items.len(), 1);
+    c.check_invariants().unwrap();
+}
+
+#[test]
+fn no_dst_table_variant_behaves_identically() {
+    let with = default_chain();
+    let without = no_dst_chain();
+    let mut rng = Rng64::new(11);
+    for _ in 0..2_000 {
+        let src = rng.next_below(5);
+        let dst = rng.next_below(20);
+        with.observe(src, dst);
+        without.observe(src, dst);
+    }
+    for src in 0..5 {
+        let a = with.infer_threshold(src, 0.9);
+        let b = without.infer_threshold(src, 0.9);
+        assert_eq!(a.total, b.total, "src {src}");
+        assert_eq!(a.items.len(), b.items.len(), "src {src}");
+        // Same multiset of items (tie order may differ).
+        let mut ka: Vec<u64> = a.items.iter().map(|&(k, _)| k).collect();
+        let mut kb: Vec<u64> = b.items.iter().map(|&(k, _)| k).collect();
+        ka.sort_unstable();
+        kb.sort_unstable();
+        assert_eq!(ka, kb, "src {src}");
+    }
+    with.check_invariants().unwrap();
+    without.check_invariants().unwrap();
+}
+
+#[test]
+fn export_import_roundtrip() {
+    let c = default_chain();
+    let mut rng = Rng64::new(3);
+    for _ in 0..1_000 {
+        c.observe(rng.next_below(8), rng.next_below(30));
+    }
+    let snap = c.export();
+    let c2 = McPrioQ::import(ChainConfig::default(), &snap);
+    assert_eq!(c2.export(), snap);
+}
+
+#[test]
+fn stats_accumulate() {
+    let c = default_chain();
+    for i in 0..100 {
+        c.observe(i % 3, i % 7);
+    }
+    let s = c.stats();
+    assert_eq!(s.observes, 100);
+    assert_eq!(s.nodes, 3);
+    assert!(s.edges > 0 && s.edges <= 21);
+    assert!(s.approx_bytes > 0);
+    c.decay();
+    assert_eq!(c.stats().decays, 1);
+}
+
+/// P3/P1 under full concurrency: many writers over shared src nodes; after
+/// quiescing + repair, totals match edge sums exactly and order is exact.
+#[test]
+fn concurrent_observe_preserves_counts() {
+    const THREADS: u64 = 8;
+    const OPS: u64 = 10_000;
+    let c = Arc::new(default_chain());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                let mut rng = Rng64::new(t + 0x99);
+                for _ in 0..OPS {
+                    // Zipf-ish: skewed dst choice, few srcs — maximal sharing.
+                    let src = rng.next_below(4);
+                    let u = rng.next_f64();
+                    let dst = ((u * u) * 50.0) as u64;
+                    c.observe(src, dst);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    c.repair();
+    c.check_invariants().unwrap();
+    let s = c.stats();
+    assert_eq!(s.observes, THREADS * OPS);
+    // Total mass across all nodes must equal the number of observations.
+    let mass: u64 = c.export().iter().map(|(_, total, _)| *total).sum();
+    assert_eq!(mass, THREADS * OPS);
+}
+
+/// Readers running during a write+decay storm always get well-formed
+/// answers (descending-ish probabilities, cumulative <= 1 + eps).
+#[test]
+fn concurrent_read_write_decay() {
+    let c = Arc::new(default_chain());
+    let stop = Arc::new(AtomicBool::new(false));
+    // Seed.
+    for i in 0..50 {
+        c.observe(1, i);
+    }
+    let writers: Vec<_> = (0..3)
+        .map(|t| {
+            let c = Arc::clone(&c);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut rng = Rng64::new(t);
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let u = rng.next_f64();
+                    c.observe(1, ((u * u * u) * 50.0) as u64);
+                }
+            })
+        })
+        .collect();
+    let decayer = {
+        let c = Arc::clone(&c);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                c.decay();
+                std::thread::yield_now();
+            }
+        })
+    };
+    for _ in 0..3_000 {
+        let r = c.infer_threshold(1, 0.9);
+        // Well-formed: probabilities positive and finite. No numeric bound
+        // on the cumulative: a slow reader racing decays and writers sums
+        // edge counts that moved after the total was snapshotted, so the
+        // ratio is transiently unbounded (approximately correct, §II.B/C);
+        // exactness at quiescence is asserted below via check_invariants.
+        assert!(r.items.iter().all(|&(_, p)| p > 0.0 && p.is_finite()));
+        assert!(r.cumulative.is_finite());
+        let rt = c.infer_topk(1, 5);
+        assert!(rt.items.len() <= 5);
+    }
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    for w in writers {
+        w.join().unwrap();
+    }
+    decayer.join().unwrap();
+    c.repair();
+    c.check_invariants().unwrap();
+}
+
+/// Property: for any observation sequence, infer_threshold(t) returns a
+/// minimal prefix with cumulative >= t (P4), and the prefix is sorted by
+/// descending probability (P1).
+#[test]
+fn prop_threshold_minimal_sorted_prefix() {
+    forall(
+        PropConfig { cases: 128, ..Default::default() },
+        &VecGen { elem: U64Range { lo: 0, hi: 15 }, max_len: 200 },
+        |dsts| {
+            let c = default_chain();
+            for &d in dsts {
+                c.observe(0, d);
+            }
+            if dsts.is_empty() {
+                return c.infer_threshold(0, 0.5).items.is_empty();
+            }
+            for t in [0.1, 0.5, 0.9, 1.0] {
+                let r = c.infer_threshold(0, t);
+                // Sorted descending.
+                if !r.items.windows(2).all(|w| w[0].1 >= w[1].1 - 1e-12) {
+                    return false;
+                }
+                // Covers t.
+                if r.cumulative + 1e-12 < t {
+                    return false;
+                }
+                // Minimal.
+                if r.items.len() > 1 {
+                    let without: f64 = r.cumulative - r.items.last().unwrap().1;
+                    if without >= t + 1e-12 {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Property: decay never increases any probability-ordering inversions and
+/// preserves relative order of surviving edges (P5).
+#[test]
+fn prop_decay_preserves_order() {
+    forall(
+        PropConfig { cases: 128, ..Default::default() },
+        &VecGen { elem: U64Range { lo: 0, hi: 9 }, max_len: 300 },
+        |dsts| {
+            let c = default_chain();
+            for &d in dsts {
+                c.observe(0, d);
+            }
+            let before: Vec<u64> =
+                c.infer_topk(0, 100).items.iter().map(|&(k, _)| k).collect();
+            c.decay();
+            if c.check_invariants().is_err() {
+                return false;
+            }
+            let after: Vec<u64> = c.infer_topk(0, 100).items.iter().map(|&(k, _)| k).collect();
+            // Surviving edges appear in the same relative order.
+            let mut bi = before.iter();
+            after.iter().all(|a| bi.any(|b| b == a))
+        },
+    );
+}

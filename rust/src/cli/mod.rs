@@ -1,0 +1,227 @@
+//! Command-line argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None = boolean flag; Some(default) = valued option.
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<Opt>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().map_err(|_| format!("--{key}: expected integer, got {v:?}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().map_err(|_| format!("--{key}: expected number, got {v:?}")))
+            .transpose()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+}
+
+/// Top-level application parser.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn parse(&self, args: &[String]) -> Result<Matches, String> {
+        if args.is_empty() || args[0] == "--help" || args[0] == "-h" || args[0] == "help" {
+            return Err(self.usage());
+        }
+        let cmd_name = &args[0];
+        let Some(cmd) = self.commands.iter().find(|c| c.name == cmd_name) else {
+            return Err(format!("unknown command {cmd_name:?}\n\n{}", self.usage()));
+        };
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positionals = Vec::new();
+        // Seed defaults.
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.command_usage(cmd));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let Some(opt) = cmd.opts.iter().find(|o| o.name == key) else {
+                    return Err(format!("unknown option --{key}\n\n{}", self.command_usage(cmd)));
+                };
+                match (opt.default.is_some(), inline_val) {
+                    (false, None) => flags.push(key.to_string()),
+                    (false, Some(_)) => {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    (true, Some(v)) => {
+                        values.insert(key.to_string(), v);
+                    }
+                    (true, None) => {
+                        i += 1;
+                        let Some(v) = args.get(i) else {
+                            return Err(format!("--{key} requires a value"));
+                        };
+                        values.insert(key.to_string(), v.clone());
+                    }
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        if positionals.len() > cmd.positionals.len() {
+            return Err(format!(
+                "too many positional arguments for {}: expected at most {}",
+                cmd.name,
+                cmd.positionals.len()
+            ));
+        }
+        Ok(Matches { command: cmd.name.to_string(), values, flags, positionals })
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<12} {}\n", c.name, c.help));
+        }
+        s.push_str("\nRun '<command> --help' for command options.\n");
+        s
+    }
+
+    fn command_usage(&self, cmd: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, cmd.name, cmd.help);
+        for o in &cmd.opts {
+            let head = match o.default {
+                Some(d) => format!("--{} <v> [default: {}]", o.name, d),
+                None => format!("--{}", o.name),
+            };
+            s.push_str(&format!("  {head:<40} {}\n", o.help));
+        }
+        for (p, h) in &cmd.positionals {
+            s.push_str(&format!("  <{p}>  {h}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "mcprioq",
+            about: "test",
+            commands: vec![Command {
+                name: "serve",
+                help: "run server",
+                opts: vec![
+                    Opt { name: "config", help: "config path", default: Some("") },
+                    Opt { name: "threads", help: "worker count", default: Some("4") },
+                    Opt { name: "verbose", help: "log more", default: None },
+                ],
+                positionals: vec![("address", "bind address")],
+            }],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let m = app()
+            .parse(&argv(&["serve", "--config", "/tmp/c.toml", "--verbose", "0.0.0.0:1"]))
+            .unwrap();
+        assert_eq!(m.get("config"), Some("/tmp/c.toml"));
+        assert_eq!(m.get("threads"), Some("4")); // default
+        assert!(m.flag("verbose"));
+        assert_eq!(m.positional(0), Some("0.0.0.0:1"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = app().parse(&argv(&["serve", "--threads=8"])).unwrap();
+        assert_eq!(m.get_u64("threads").unwrap(), Some(8));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(app().parse(&argv(&["bogus"])).is_err());
+        assert!(app().parse(&argv(&["serve", "--nope"])).is_err());
+        assert!(app().parse(&argv(&["serve", "--config"])).is_err());
+        assert!(app().parse(&argv(&["serve", "--verbose=1"])).is_err());
+        assert!(app().parse(&argv(&["serve", "a", "b"])).is_err());
+        assert!(app().parse(&argv(&[])).is_err()); // usage
+    }
+
+    #[test]
+    fn help_lists_commands_and_options() {
+        let u = app().usage();
+        assert!(u.contains("serve"));
+        let err = app().parse(&argv(&["serve", "--help"])).unwrap_err();
+        assert!(err.contains("--threads"));
+        assert!(err.contains("default: 4"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let m = app().parse(&argv(&["serve", "--threads", "abc"])).unwrap();
+        assert!(m.get_u64("threads").is_err());
+        let m = app().parse(&argv(&["serve", "--threads", "2.5"])).unwrap();
+        assert_eq!(m.get_f64("threads").unwrap(), Some(2.5));
+        assert_eq!(m.get_u64("missing").unwrap(), None);
+    }
+}

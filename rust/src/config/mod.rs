@@ -1,0 +1,158 @@
+//! Configuration substrate: a TOML-subset parser plus the typed configs of
+//! the serving system (serde is unavailable offline; built from scratch).
+//!
+//! Supported syntax: `[section.sub]` headers, `key = value` with string
+//! (`"..."`), integer, float, boolean and flat-array (`[1, 2, 3]`) values,
+//! `#` comments, and blank lines.
+
+mod toml;
+
+pub use toml::{ParseError, TomlValue, TomlDoc};
+
+use std::time::Duration;
+
+/// Top-level configuration of the `mcprioq` server binary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// TCP bind address for the line protocol front-end.
+    pub listen: String,
+    /// Number of chain shards (0 = number of CPUs).
+    pub shards: usize,
+    /// Update-ingestion queue capacity per shard (backpressure bound).
+    pub queue_capacity: usize,
+    /// Decay cadence; None disables the decay scheduler.
+    pub decay_interval: Option<Duration>,
+    /// Chain parameters.
+    pub chain: ChainSection,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainSection {
+    pub src_capacity: usize,
+    pub dst_capacity: usize,
+    pub use_dst_table: bool,
+    pub decay_num: u64,
+    pub decay_den: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:7171".to_string(),
+            shards: 0,
+            queue_capacity: 65_536,
+            decay_interval: Some(Duration::from_secs(60)),
+            chain: ChainSection {
+                src_capacity: 1024,
+                dst_capacity: 8,
+                use_dst_table: true,
+                decay_num: 1,
+                decay_den: 2,
+            },
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Parse from TOML text; unknown keys are an error (typo protection).
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = ServerConfig::default();
+        for (key, value) in doc.entries() {
+            match key.as_str() {
+                "server.listen" => cfg.listen = value.as_str()?.to_string(),
+                "server.shards" => cfg.shards = value.as_usize()?,
+                "server.queue_capacity" => cfg.queue_capacity = value.as_usize()?,
+                "server.decay_interval_ms" => {
+                    let ms = value.as_u64()?;
+                    cfg.decay_interval =
+                        (ms > 0).then(|| Duration::from_millis(ms));
+                }
+                "chain.src_capacity" => cfg.chain.src_capacity = value.as_usize()?,
+                "chain.dst_capacity" => cfg.chain.dst_capacity = value.as_usize()?,
+                "chain.use_dst_table" => cfg.chain.use_dst_table = value.as_bool()?,
+                "chain.decay_num" => cfg.chain.decay_num = value.as_u64()?,
+                "chain.decay_den" => cfg.chain.decay_den = value.as_u64()?,
+                other => return Err(format!("unknown config key: {other}")),
+            }
+        }
+        if cfg.chain.decay_num >= cfg.chain.decay_den {
+            return Err("chain.decay_num must be < chain.decay_den".to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn to_chain_config(&self) -> crate::chain::ChainConfig {
+        crate::chain::ChainConfig {
+            src_capacity: self.chain.src_capacity,
+            dst_capacity: self.chain.dst_capacity,
+            use_dst_table: self.chain.use_dst_table,
+            decay_num: self.chain.decay_num,
+            decay_den: self.chain.decay_den,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip_empty_toml() {
+        let cfg = ServerConfig::from_toml("").unwrap();
+        assert_eq!(cfg, ServerConfig::default());
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let text = r#"
+# serving config
+[server]
+listen = "0.0.0.0:9999"
+shards = 4
+queue_capacity = 1024
+decay_interval_ms = 5000
+
+[chain]
+src_capacity = 2048
+dst_capacity = 16
+use_dst_table = false
+decay_num = 3
+decay_den = 4
+"#;
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.listen, "0.0.0.0:9999");
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.queue_capacity, 1024);
+        assert_eq!(cfg.decay_interval, Some(Duration::from_millis(5000)));
+        assert!(!cfg.chain.use_dst_table);
+        assert_eq!(cfg.chain.decay_num, 3);
+    }
+
+    #[test]
+    fn decay_zero_disables() {
+        let cfg = ServerConfig::from_toml("[server]\ndecay_interval_ms = 0\n").unwrap();
+        assert_eq!(cfg.decay_interval, None);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ServerConfig::from_toml("[server]\nlisten_addr = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn invalid_decay_rejected() {
+        let e = ServerConfig::from_toml("[chain]\ndecay_num = 2\ndecay_den = 2\n");
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        assert!(ServerConfig::from_toml("[server]\nshards = \"four\"\n").is_err());
+    }
+}

@@ -1,0 +1,264 @@
+//! Minimal TOML-subset parser (see mod.rs for the supported grammar).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str, String> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(format!("expected string, got {other:?}")),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64, String> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            other => Err(format!("expected non-negative integer, got {other:?}")),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, String> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64, String> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => Err(format!("expected integer, got {other:?}")),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => Err(format!("expected float, got {other:?}")),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {other:?}")),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[TomlValue], String> {
+        match self {
+            TomlValue::Array(a) => Ok(a),
+            other => Err(format!("expected array, got {other:?}")),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: flat map from `section.key` to value.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    return Err(ParseError { line: lineno, message: "unterminated section".into() });
+                };
+                let name = name.trim();
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+                {
+                    return Err(ParseError {
+                        line: lineno,
+                        message: format!("bad section name {name:?}"),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(ParseError { line: lineno, message: format!("expected key = value, got {line:?}") });
+            };
+            let key = line[..eq].trim();
+            if key.is_empty()
+                || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return Err(ParseError { line: lineno, message: format!("bad key {key:?}") });
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|message| ParseError { line: lineno, message })?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            if entries.insert(full.clone(), value).is_some() {
+                return Err(ParseError { line: lineno, message: format!("duplicate key {full}") });
+            }
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&String, &TomlValue)> {
+        self.entries.iter()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return Err(format!("unterminated string {s:?}"));
+        };
+        if inner.contains('"') {
+            return Err("escaped quotes are not supported".into());
+        }
+        // Minimal escapes.
+        let unescaped = inner.replace("\\n", "\n").replace("\\t", "\t").replace("\\\\", "\\");
+        return Ok(TomlValue::Str(unescaped));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            return Err(format!("unterminated array {s:?}"));
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        if s.contains('.') || s.contains('e') || s.contains('E') {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = \"two\"\nc = 3.5\nd = true\ne = -7\nf = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Str("two".into())));
+        assert_eq!(doc.get("c"), Some(&TomlValue::Float(3.5)));
+        assert_eq!(doc.get("d"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.get("e"), Some(&TomlValue::Int(-7)));
+        assert_eq!(doc.get("f"), Some(&TomlValue::Int(1000)));
+    }
+
+    #[test]
+    fn sections_prefix_keys() {
+        let doc = TomlDoc::parse("[x.y]\nk = 2\n[z]\nk = 3\n").unwrap();
+        assert_eq!(doc.get("x.y.k"), Some(&TomlValue::Int(2)));
+        assert_eq!(doc.get("z.k"), Some(&TomlValue::Int(3)));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = TomlDoc::parse("# hi\n\na = 1 # trailing\nb = \"x # not a comment\"\n").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Str("x # not a comment".into())));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = TomlDoc::parse("a = [1, 2, 3]\nb = []\nc = [\"x\", \"y\"]\n").unwrap();
+        assert_eq!(
+            doc.get("a"),
+            Some(&TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+        assert_eq!(doc.get("b").unwrap().as_array().unwrap().len(), 0);
+        assert_eq!(doc.get("c").unwrap().as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = TomlDoc::parse("a = 1\na = 2\n").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn value_accessors_enforce_types() {
+        let v = TomlValue::Int(-1);
+        assert!(v.as_u64().is_err());
+        assert_eq!(v.as_i64().unwrap(), -1);
+        assert_eq!(TomlValue::Int(3).as_f64().unwrap(), 3.0);
+        assert!(TomlValue::Bool(true).as_str().is_err());
+    }
+}

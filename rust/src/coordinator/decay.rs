@@ -1,0 +1,71 @@
+//! The maintenance scheduler: periodic model decay (§II.C) plus the order
+//! repair sweep, on a dedicated thread.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::engine::Engine;
+
+pub struct DecayScheduler {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    runs: Arc<AtomicU64>,
+    running: Arc<AtomicBool>,
+}
+
+impl DecayScheduler {
+    /// Decay every `interval`; stops when the handle drops.
+    pub fn start(engine: Arc<Engine>, interval: Duration) -> DecayScheduler {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let runs = Arc::new(AtomicU64::new(0));
+        let running = Arc::new(AtomicBool::new(true));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let runs = Arc::clone(&runs);
+            let running = Arc::clone(&running);
+            std::thread::spawn(move || {
+                let (lock, cvar) = &*stop;
+                loop {
+                    // Interruptible sleep.
+                    let mut stopped = lock.lock().unwrap();
+                    let (guard, timeout) = cvar.wait_timeout(stopped, interval).unwrap();
+                    stopped = guard;
+                    if *stopped {
+                        break;
+                    }
+                    drop(stopped);
+                    if timeout.timed_out() {
+                        engine.decay();
+                        runs.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                running.store(false, Ordering::SeqCst);
+            })
+        };
+        DecayScheduler { stop, handle: Some(handle), runs, running }
+    }
+
+    pub fn runs(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
+    }
+
+    pub fn stop(&self) {
+        let (lock, cvar) = &*self.stop;
+        *lock.lock().unwrap() = true;
+        cvar.notify_all();
+    }
+}
+
+impl Drop for DecayScheduler {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

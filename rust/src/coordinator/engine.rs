@@ -1,0 +1,212 @@
+//! The sharded serving engine: chain shards + ingestion queue + workers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::chain::{ChainConfig, McPrioQ, Recommendation};
+use crate::config::ServerConfig;
+use crate::metrics::{Counter, Histogram, Meter};
+use crate::rcu;
+
+use super::queue::BoundedQueue;
+
+const FIB: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Aggregated serving metrics (the STATS response / EXPERIMENTS.md rows).
+#[derive(Debug, Clone)]
+pub struct EngineStats {
+    pub shards: usize,
+    pub nodes: usize,
+    pub edges: usize,
+    pub observes: u64,
+    pub queries: u64,
+    pub dropped_updates: u64,
+    pub decays: u64,
+    pub queue_depth: usize,
+    pub query_ns_p50: u64,
+    pub query_ns_p99: u64,
+    pub update_rate: f64,
+}
+
+/// One MCPrioQ per shard; srcs are hash-routed so every shard sees a
+/// disjoint key space (a single shard is the paper's plain design; more
+/// shards are the E3 scaling ablation).
+pub struct Engine {
+    shards: Vec<McPrioQ>,
+    queue: Arc<BoundedQueue<(u64, u64)>>,
+    workers: std::sync::Mutex<Vec<JoinHandle<u64>>>,
+    stop: Arc<AtomicBool>,
+    queries: Counter,
+    dropped: Counter,
+    query_lat: Histogram,
+    update_meter: Meter,
+}
+
+impl Engine {
+    /// Build an engine with `shards` chains (0 = available parallelism)
+    /// and `workers` ingest threads draining the update queue.
+    pub fn new(config: &ServerConfig, workers: usize) -> Arc<Engine> {
+        let nshards = if config.shards == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            config.shards
+        };
+        let chain_cfg: ChainConfig = config.to_chain_config();
+        let queue = Arc::new(BoundedQueue::new(config.queue_capacity));
+        let engine = Arc::new(Engine {
+            shards: (0..nshards).map(|_| McPrioQ::new(chain_cfg.clone())).collect(),
+            queue,
+            workers: std::sync::Mutex::new(Vec::new()),
+            stop: Arc::new(AtomicBool::new(false)),
+            queries: Counter::new(),
+            dropped: Counter::new(),
+            query_lat: Histogram::new(),
+            update_meter: Meter::new(),
+        });
+        // Spawn ingest workers. They hold the queue Arc plus a Weak to the
+        // engine, so dropping the last user Arc tears everything down:
+        // Engine::drop closes the queue, workers wake, fail the upgrade,
+        // and exit; drop then joins them.
+        {
+            let mut ws = engine.workers.lock().unwrap();
+            for _ in 0..workers {
+                let weak = Arc::downgrade(&engine);
+                let queue = Arc::clone(&engine.queue);
+                ws.push(std::thread::spawn(move || Engine::ingest_loop(weak, queue)));
+            }
+        }
+        engine
+    }
+
+    fn ingest_loop(weak: std::sync::Weak<Engine>, queue: Arc<BoundedQueue<(u64, u64)>>) -> u64 {
+        let mut applied = 0u64;
+        loop {
+            let batch = queue.pop_batch(256);
+            if batch.is_empty() {
+                return applied; // queue closed and drained
+            }
+            let Some(engine) = weak.upgrade() else {
+                return applied; // engine gone mid-shutdown; drop the batch
+            };
+            for (src, dst) in batch {
+                engine.shard(src).observe(src, dst);
+                applied += 1;
+            }
+            engine.update_meter.mark_n(1); // per batch; rate() scales anyway
+        }
+    }
+
+    #[inline]
+    pub fn shard(&self, src: u64) -> &McPrioQ {
+        &self.shards[(src.wrapping_mul(FIB) >> 33) as usize % self.shards.len()]
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Enqueue an update (blocking backpressure). False if shutting down.
+    pub fn observe(&self, src: u64, dst: u64) -> bool {
+        self.queue.push((src, dst))
+    }
+
+    /// Enqueue without blocking; drops (and counts) on overflow — the
+    /// load-shedding policy for best-effort telemetry feeds.
+    pub fn observe_lossy(&self, src: u64, dst: u64) {
+        if self.queue.try_push((src, dst)).is_err() {
+            self.dropped.inc();
+        }
+    }
+
+    /// Apply an update on the caller thread, bypassing the queue (embedded
+    /// / benchmark use; this is the raw wait-free path).
+    pub fn observe_direct(&self, src: u64, dst: u64) {
+        self.shard(src).observe(src, dst);
+    }
+
+    pub fn infer_threshold(&self, src: u64, t: f64) -> Recommendation {
+        self.queries.inc();
+        let timer = crate::metrics::Timer::start(&self.query_lat);
+        let r = self.shard(src).infer_threshold(src, t);
+        drop(timer);
+        r
+    }
+
+    pub fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        self.queries.inc();
+        let timer = crate::metrics::Timer::start(&self.query_lat);
+        let r = self.shard(src).infer_topk(src, k);
+        drop(timer);
+        r
+    }
+
+    /// Run one decay + repair pass over every shard (§II.C maintenance).
+    pub fn decay(&self) -> (u64, usize) {
+        let mut total = 0;
+        let mut pruned = 0;
+        for s in &self.shards {
+            let (t, p) = s.decay();
+            total += t;
+            pruned += p;
+        }
+        (total, pruned)
+    }
+
+    /// Wait until every update enqueued *before this call* is applied.
+    pub fn quiesce(&self) {
+        while !self.queue.is_empty() {
+            std::thread::yield_now();
+        }
+        // One grace period so applied updates are fully visible.
+        rcu::synchronize();
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let mut nodes = 0;
+        let mut edges = 0;
+        let mut observes = 0;
+        let mut decays = 0;
+        for s in &self.shards {
+            let st = s.stats();
+            nodes += st.nodes;
+            edges += st.edges;
+            observes += st.observes;
+            decays = decays.max(st.decays);
+        }
+        let snap = self.query_lat.snapshot();
+        EngineStats {
+            shards: self.shards.len(),
+            nodes,
+            edges,
+            observes,
+            queries: self.queries.get(),
+            dropped_updates: self.dropped.get(),
+            decays,
+            queue_depth: self.queue.len(),
+            query_ns_p50: snap.p50,
+            query_ns_p99: snap.p99,
+            update_rate: 0.0, // filled by callers that track intervals
+        }
+    }
+
+    /// Stop ingest workers after draining the queue. Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+
+    /// Direct access to a shard's chain for tests/benches.
+    pub fn chains(&self) -> &[McPrioQ] {
+        &self.shards
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}

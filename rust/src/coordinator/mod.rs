@@ -1,0 +1,37 @@
+//! Serving coordinator: the L3 layer that turns the MCPrioQ data structure
+//! into a deployable online-recommendation service (vLLM-router-style
+//! shape: ingestion queues, shard routing, maintenance scheduling, a TCP
+//! front-end, and metrics).
+//!
+//! Data flow:
+//!
+//! ```text
+//!   TCP clients ── OBS ──▶ BoundedQueue ──▶ ingest workers ─▶ McPrioQ shard
+//!              └── REC/TOPK ───────────────(direct, RCU read)──────▲
+//!   decay scheduler ── every decay_interval ── decay()+repair() ───┘
+//! ```
+//!
+//! * **Updates** are enqueued (bounded, with backpressure) and applied by
+//!   dedicated ingest workers, decoupling network jitter from the
+//!   structure's wait-free update path. `observe_direct` bypasses the queue
+//!   for embedded use (benches use both).
+//! * **Queries** run directly on the caller thread: inference is a
+//!   wait-free RCU scan, so there is nothing to schedule around — this is
+//!   the paper's "query while building" property, operationalized.
+//! * **Decay** runs on the maintenance thread (§II.C), which also performs
+//!   the order-repair sweep.
+
+mod decay;
+mod engine;
+mod protocol;
+mod queue;
+mod server;
+
+pub use decay::DecayScheduler;
+pub use engine::{Engine, EngineStats};
+pub use protocol::{Request, Response};
+pub use queue::BoundedQueue;
+pub use server::{Client, Server};
+
+#[cfg(test)]
+mod tests;

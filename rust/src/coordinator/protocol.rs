@@ -1,0 +1,146 @@
+//! The line protocol of the TCP front-end.
+//!
+//! Requests (one per line, space-separated, `\n`-terminated):
+//!
+//! ```text
+//! OBS <src> <dst>          record a transition (async, queued)
+//! REC <src> <threshold>    items until cumulative probability >= threshold
+//! TOPK <src> <k>           the k most probable next nodes
+//! PROB <src> <dst>         single-edge probability
+//! DECAY                    force a decay + repair pass
+//! STATS                    engine statistics
+//! PING                     liveness check
+//! QUIT                     close the connection
+//! ```
+//!
+//! Responses: `OK ...`, `ITEMS <n> <dst>:<prob> ... cum=<c> scanned=<s>`,
+//! or `ERR <message>`.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Observe { src: u64, dst: u64 },
+    Recommend { src: u64, threshold: f64 },
+    TopK { src: u64, k: usize },
+    Prob { src: u64, dst: u64 },
+    Decay,
+    Stats,
+    Ping,
+    Quit,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let mut it = line.split_ascii_whitespace();
+        let cmd = it.next().ok_or("empty request")?;
+        let mut num = |name: &str| -> Result<u64, String> {
+            it.next()
+                .ok_or(format!("{cmd}: missing {name}"))?
+                .parse::<u64>()
+                .map_err(|_| format!("{cmd}: bad {name}"))
+        };
+        let req = match cmd {
+            "OBS" => Request::Observe { src: num("src")?, dst: num("dst")? },
+            "TOPK" => Request::TopK { src: num("src")?, k: num("k")? as usize },
+            "PROB" => Request::Prob { src: num("src")?, dst: num("dst")? },
+            "REC" => {
+                let src = num("src")?;
+                let t: f64 = it
+                    .next()
+                    .ok_or("REC: missing threshold")?
+                    .parse()
+                    .map_err(|_| "REC: bad threshold")?;
+                if !(0.0..=1.0).contains(&t) {
+                    return Err("REC: threshold must be in [0, 1]".into());
+                }
+                Request::Recommend { src, threshold: t }
+            }
+            "DECAY" => Request::Decay,
+            "STATS" => Request::Stats,
+            "PING" => Request::Ping,
+            "QUIT" => Request::Quit,
+            other => return Err(format!("unknown command {other:?}")),
+        };
+        if it.next().is_some() {
+            return Err(format!("{cmd}: trailing arguments"));
+        }
+        Ok(req)
+    }
+
+    pub fn encode(&self) -> String {
+        match self {
+            Request::Observe { src, dst } => format!("OBS {src} {dst}"),
+            Request::Recommend { src, threshold } => format!("REC {src} {threshold}"),
+            Request::TopK { src, k } => format!("TOPK {src} {k}"),
+            Request::Prob { src, dst } => format!("PROB {src} {dst}"),
+            Request::Decay => "DECAY".into(),
+            Request::Stats => "STATS".into(),
+            Request::Ping => "PING".into(),
+            Request::Quit => "QUIT".into(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok(String),
+    Items { items: Vec<(u64, f64)>, cumulative: f64, scanned: usize },
+    Err(String),
+}
+
+impl Response {
+    pub fn parse(line: &str) -> Result<Response, String> {
+        if let Some(rest) = line.strip_prefix("OK") {
+            return Ok(Response::Ok(rest.trim().to_string()));
+        }
+        if let Some(rest) = line.strip_prefix("ERR ") {
+            return Ok(Response::Err(rest.to_string()));
+        }
+        if let Some(rest) = line.strip_prefix("ITEMS ") {
+            let mut it = rest.split_ascii_whitespace();
+            let n: usize =
+                it.next().ok_or("ITEMS: missing count")?.parse().map_err(|_| "bad count")?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                let tok = it.next().ok_or("ITEMS: truncated")?;
+                let (d, p) = tok.split_once(':').ok_or("ITEMS: bad pair")?;
+                items.push((
+                    d.parse().map_err(|_| "bad dst")?,
+                    p.parse().map_err(|_| "bad prob")?,
+                ));
+            }
+            let cum = it
+                .next()
+                .and_then(|s| s.strip_prefix("cum="))
+                .ok_or("ITEMS: missing cum")?
+                .parse()
+                .map_err(|_| "bad cum")?;
+            let scanned = it
+                .next()
+                .and_then(|s| s.strip_prefix("scanned="))
+                .ok_or("ITEMS: missing scanned")?
+                .parse()
+                .map_err(|_| "bad scanned")?;
+            return Ok(Response::Items { items, cumulative: cum, scanned });
+        }
+        Err(format!("unparseable response {line:?}"))
+    }
+}
+
+impl fmt::Display for Response {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Response::Ok(msg) if msg.is_empty() => write!(f, "OK"),
+            Response::Ok(msg) => write!(f, "OK {msg}"),
+            Response::Err(msg) => write!(f, "ERR {msg}"),
+            Response::Items { items, cumulative, scanned } => {
+                write!(f, "ITEMS {}", items.len())?;
+                for (d, p) in items {
+                    write!(f, " {d}:{p:.6}")?;
+                }
+                write!(f, " cum={cumulative:.6} scanned={scanned}")
+            }
+        }
+    }
+}

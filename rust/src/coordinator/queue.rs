@@ -1,0 +1,119 @@
+//! Bounded MPMC queue (Mutex + Condvar) for update ingestion.
+//!
+//! Deliberately *not* lock-free: ingestion sits between the network and
+//! the chain, where backpressure — blocking producers when consumers lag —
+//! is the desired behaviour. The lock-free guarantees the paper cares
+//! about apply to the *data structure* operations, which happen on the
+//! consumer side of this queue (or bypass it entirely via
+//! `Engine::observe_direct`).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push; returns false if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return false;
+            }
+            if s.items.len() < self.capacity {
+                s.items.push_back(item);
+                self.not_empty.notify_one();
+                return true;
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking push; `Err(item)` when full or closed (caller applies
+    /// backpressure policy: drop, retry, or surface an error).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed || s.items.len() >= self.capacity {
+            return Err(item);
+        }
+        s.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Pop up to `max` items in one lock acquisition (batch drain).
+    pub fn pop_batch(&self, max: usize) -> Vec<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.items.is_empty() {
+                let take = s.items.len().min(max);
+                let out: Vec<T> = s.items.drain(..take).collect();
+                self.not_full.notify_all();
+                return out;
+            }
+            if s.closed {
+                return Vec::new();
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail fast, consumers drain then stop.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}

@@ -1,0 +1,228 @@
+//! TCP front-end (thread-per-connection; no async runtime offline) and the
+//! matching client.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::engine::Engine;
+use super::protocol::{Request, Response};
+
+pub struct Server {
+    engine: Arc<Engine>,
+    listener: TcpListener,
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    connections: Arc<AtomicUsize>,
+}
+
+impl Server {
+    /// Bind to `addr` (use port 0 for an ephemeral port in tests).
+    pub fn bind(engine: Arc<Engine>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            engine,
+            listener,
+            addr,
+            stop: Arc::new(AtomicBool::new(false)),
+            connections: Arc::new(AtomicUsize::new(0)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Spawn the accept loop; returns a handle that stops it on drop.
+    pub fn spawn(self) -> ServerHandle {
+        let stop = Arc::clone(&self.stop);
+        let addr = self.addr;
+        let handle = std::thread::spawn(move || self.accept_loop());
+        ServerHandle { stop, addr, handle: Some(handle) }
+    }
+
+    fn accept_loop(self) {
+        // Nonblocking accept + sleep keeps the loop stoppable without
+        // platform-specific socket shenanigans.
+        self.listener.set_nonblocking(true).expect("nonblocking listener");
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).ok();
+                    let engine = Arc::clone(&self.engine);
+                    let stop = Arc::clone(&self.stop);
+                    let conns = Arc::clone(&self.connections);
+                    conns.fetch_add(1, Ordering::Relaxed);
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(engine, stream, stop);
+                        conns.fetch_sub(1, Ordering::Relaxed);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// Keeps the accept loop alive; stops and joins it on drop.
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(
+    engine: Arc<Engine>,
+    stream: TcpStream,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 || stop.load(Ordering::SeqCst) {
+            return Ok(()); // peer closed / shutting down
+        }
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let resp = match Request::parse(trimmed) {
+            Err(e) => Response::Err(e),
+            Ok(Request::Quit) => {
+                writeln!(writer, "OK bye")?;
+                writer.flush()?;
+                return Ok(());
+            }
+            Ok(req) => dispatch(&engine, req),
+        };
+        writeln!(writer, "{resp}")?;
+        writer.flush()?;
+    }
+}
+
+fn dispatch(engine: &Engine, req: Request) -> Response {
+    match req {
+        Request::Observe { src, dst } => {
+            if engine.observe(src, dst) {
+                Response::Ok(String::new())
+            } else {
+                Response::Err("shutting down".into())
+            }
+        }
+        Request::Recommend { src, threshold } => {
+            let r = engine.infer_threshold(src, threshold);
+            Response::Items { items: r.items, cumulative: r.cumulative, scanned: r.scanned }
+        }
+        Request::TopK { src, k } => {
+            let r = engine.infer_topk(src, k);
+            Response::Items { items: r.items, cumulative: r.cumulative, scanned: r.scanned }
+        }
+        Request::Prob { src, dst } => match engine.shard(src).probability(src, dst) {
+            Some(p) => Response::Ok(format!("{p:.6}")),
+            None => Response::Err("no such edge".into()),
+        },
+        Request::Decay => {
+            let (total, pruned) = engine.decay();
+            Response::Ok(format!("total={total} pruned={pruned}"))
+        }
+        Request::Stats => {
+            let s = engine.stats();
+            Response::Ok(format!(
+                "shards={} nodes={} edges={} observes={} queries={} dropped={} \
+                 queue_depth={} q_p50_ns={} q_p99_ns={}",
+                s.shards,
+                s.nodes,
+                s.edges,
+                s.observes,
+                s.queries,
+                s.dropped_updates,
+                s.queue_depth,
+                s.query_ns_p50,
+                s.query_ns_p99
+            ))
+        }
+        Request::Ping => Response::Ok("pong".into()),
+        Request::Quit => unreachable!("handled by caller"),
+    }
+}
+
+/// Blocking line-protocol client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: BufWriter::new(stream) })
+    }
+
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        writeln!(self.writer, "{}", req.encode())?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed connection");
+        }
+        Response::parse(line.trim_end()).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    pub fn observe(&mut self, src: u64, dst: u64) -> Result<()> {
+        match self.request(&Request::Observe { src, dst })? {
+            Response::Ok(_) => Ok(()),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn recommend(&mut self, src: u64, threshold: f64) -> Result<Vec<(u64, f64)>> {
+        match self.request(&Request::Recommend { src, threshold })? {
+            Response::Items { items, .. } => Ok(items),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn topk(&mut self, src: u64, k: usize) -> Result<Vec<(u64, f64)>> {
+        match self.request(&Request::TopK { src, k })? {
+            Response::Items { items, .. } => Ok(items),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        match self.request(&Request::Stats)? {
+            Response::Ok(s) => Ok(s),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+}

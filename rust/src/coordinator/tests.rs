@@ -1,0 +1,324 @@
+//! Coordinator tests: queue semantics, engine routing/ingestion, protocol
+//! round-trips, and end-to-end TCP serving.
+
+use super::*;
+use crate::config::ServerConfig;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn test_config() -> ServerConfig {
+    ServerConfig { shards: 2, queue_capacity: 1024, ..Default::default() }
+}
+
+// ---- queue ----
+
+#[test]
+fn queue_fifo_and_len() {
+    let q = BoundedQueue::new(4);
+    assert!(q.try_push(1).is_ok());
+    assert!(q.try_push(2).is_ok());
+    assert_eq!(q.len(), 2);
+    assert_eq!(q.pop(), Some(1));
+    assert_eq!(q.pop(), Some(2));
+    assert!(q.is_empty());
+}
+
+#[test]
+fn queue_try_push_full() {
+    let q = BoundedQueue::new(2);
+    assert!(q.try_push(1).is_ok());
+    assert!(q.try_push(2).is_ok());
+    assert_eq!(q.try_push(3), Err(3));
+    q.pop();
+    assert!(q.try_push(3).is_ok());
+}
+
+#[test]
+fn queue_close_drains_then_none() {
+    let q = BoundedQueue::new(4);
+    q.push(7);
+    q.close();
+    assert!(!q.push(8));
+    assert_eq!(q.try_push(9), Err(9));
+    assert_eq!(q.pop(), Some(7));
+    assert_eq!(q.pop(), None);
+    assert!(q.is_closed());
+}
+
+#[test]
+fn queue_blocking_push_waits_for_space() {
+    let q = Arc::new(BoundedQueue::new(1));
+    q.push(1);
+    let q2 = Arc::clone(&q);
+    let t = std::thread::spawn(move || q2.push(2));
+    std::thread::sleep(Duration::from_millis(20));
+    assert_eq!(q.pop(), Some(1)); // unblocks the pusher
+    assert!(t.join().unwrap());
+    assert_eq!(q.pop(), Some(2));
+}
+
+#[test]
+fn queue_pop_batch() {
+    let q = BoundedQueue::new(16);
+    for i in 0..10 {
+        q.push(i);
+    }
+    let b = q.pop_batch(4);
+    assert_eq!(b, vec![0, 1, 2, 3]);
+    let b = q.pop_batch(100);
+    assert_eq!(b.len(), 6);
+    q.close();
+    assert!(q.pop_batch(4).is_empty());
+}
+
+#[test]
+fn queue_mpmc_stress() {
+    let q = Arc::new(BoundedQueue::new(64));
+    let sum = Arc::new(AtomicU64::new(0));
+    const PER: u64 = 10_000;
+    let consumers: Vec<_> = (0..3)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            let sum = Arc::clone(&sum);
+            std::thread::spawn(move || {
+                while let Some(v) = q.pop() {
+                    sum.fetch_add(v, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    let producers: Vec<_> = (0..3)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 1..=PER {
+                    assert!(q.push(i));
+                }
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    q.close();
+    for c in consumers {
+        c.join().unwrap();
+    }
+    assert_eq!(sum.load(Ordering::Relaxed), 3 * PER * (PER + 1) / 2);
+}
+
+// ---- engine ----
+
+#[test]
+fn engine_routes_and_applies_queued_updates() {
+    let engine = Engine::new(&test_config(), 2);
+    for i in 0..100u64 {
+        assert!(engine.observe(i % 10, i % 7));
+    }
+    engine.quiesce();
+    let s = engine.stats();
+    assert_eq!(s.observes, 100);
+    assert_eq!(s.shards, 2);
+    assert!(s.nodes > 0);
+    // Shard routing is consistent.
+    let shard_a = engine.shard(3) as *const _;
+    let shard_b = engine.shard(3) as *const _;
+    assert_eq!(shard_a, shard_b);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_direct_and_query_paths() {
+    let engine = Engine::new(&test_config(), 1);
+    for _ in 0..8 {
+        engine.observe_direct(5, 50);
+    }
+    engine.observe_direct(5, 60);
+    let r = engine.infer_topk(5, 2);
+    assert_eq!(r.items[0].0, 50);
+    let r = engine.infer_threshold(5, 0.8);
+    assert!(!r.items.is_empty());
+    assert!(engine.stats().queries >= 2);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_decay_runs_over_all_shards() {
+    let engine = Engine::new(&test_config(), 1);
+    for src in 0..20u64 {
+        engine.observe_direct(src, 1);
+        engine.observe_direct(src, 1);
+    }
+    let (total, pruned) = engine.decay();
+    assert_eq!(total, 20); // each edge 2 -> 1
+    assert_eq!(pruned, 0);
+    let (total, pruned) = engine.decay();
+    assert_eq!(total, 0);
+    assert_eq!(pruned, 20);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_lossy_observe_counts_drops() {
+    let cfg = ServerConfig { shards: 1, queue_capacity: 4, ..Default::default() };
+    // No workers: the queue can only fill up.
+    let engine = Engine::new(&cfg, 0);
+    for i in 0..100 {
+        engine.observe_lossy(i, i);
+    }
+    assert_eq!(engine.stats().dropped_updates, 96);
+    engine.shutdown();
+}
+
+// ---- protocol ----
+
+#[test]
+fn protocol_request_roundtrip() {
+    for req in [
+        Request::Observe { src: 1, dst: 2 },
+        Request::Recommend { src: 3, threshold: 0.9 },
+        Request::TopK { src: 4, k: 7 },
+        Request::Prob { src: 1, dst: 9 },
+        Request::Decay,
+        Request::Stats,
+        Request::Ping,
+        Request::Quit,
+    ] {
+        assert_eq!(Request::parse(&req.encode()).unwrap(), req, "{req:?}");
+    }
+}
+
+#[test]
+fn protocol_rejects_malformed() {
+    for bad in [
+        "",
+        "NOPE",
+        "OBS 1",
+        "OBS x y",
+        "OBS 1 2 3",
+        "REC 1",
+        "REC 1 1.5",
+        "REC 1 -0.1",
+        "TOPK 1",
+    ] {
+        assert!(Request::parse(bad).is_err(), "{bad:?} should fail");
+    }
+}
+
+#[test]
+fn protocol_response_roundtrip() {
+    let r = Response::Items {
+        items: vec![(5, 0.5), (9, 0.25)],
+        cumulative: 0.75,
+        scanned: 2,
+    };
+    let parsed = Response::parse(&r.to_string()).unwrap();
+    match parsed {
+        Response::Items { items, cumulative, scanned } => {
+            assert_eq!(items.len(), 2);
+            assert_eq!(items[0].0, 5);
+            assert!((items[0].1 - 0.5).abs() < 1e-6);
+            assert!((cumulative - 0.75).abs() < 1e-6);
+            assert_eq!(scanned, 2);
+        }
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(Response::parse("OK pong").unwrap(), Response::Ok("pong".into()));
+    assert_eq!(Response::parse("ERR nope").unwrap(), Response::Err("nope".into()));
+    assert!(Response::parse("GARBAGE").is_err());
+}
+
+// ---- decay scheduler ----
+
+#[test]
+fn decay_scheduler_fires_and_stops() {
+    let engine = Engine::new(&test_config(), 1);
+    for _ in 0..16 {
+        engine.observe_direct(1, 2);
+    }
+    let sched = DecayScheduler::start(Arc::clone(&engine), Duration::from_millis(10));
+    std::thread::sleep(Duration::from_millis(80));
+    sched.stop();
+    let runs = sched.runs();
+    assert!(runs >= 2, "scheduler ran {runs} times");
+    drop(sched);
+    // Counter halved at least twice: 16 -> <= 4.
+    let r = engine.infer_topk(1, 1);
+    assert!(r.total <= 4, "total {}", r.total);
+    engine.shutdown();
+}
+
+// ---- end-to-end TCP ----
+
+#[test]
+fn tcp_server_end_to_end() {
+    let engine = Engine::new(&test_config(), 2);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut client = Client::connect(addr).unwrap();
+    // Liveness.
+    assert_eq!(client.request(&Request::Ping).unwrap(), Response::Ok("pong".into()));
+    // Feed transitions: 1 -> 2 (x3), 1 -> 3 (x1).
+    for _ in 0..3 {
+        client.observe(1, 2).unwrap();
+    }
+    client.observe(1, 3).unwrap();
+    engine.quiesce();
+
+    let items = client.topk(1, 2).unwrap();
+    assert_eq!(items[0].0, 2);
+    assert!((items[0].1 - 0.75).abs() < 1e-6);
+    let rec = client.recommend(1, 0.7).unwrap();
+    assert_eq!(rec.len(), 1);
+
+    // PROB + STATS + DECAY.
+    match client.request(&Request::Prob { src: 1, dst: 2 }).unwrap() {
+        Response::Ok(p) => assert!((p.parse::<f64>().unwrap() - 0.75).abs() < 1e-6),
+        other => panic!("{other:?}"),
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("observes=4"), "{stats}");
+    match client.request(&Request::Decay).unwrap() {
+        Response::Ok(msg) => assert!(msg.contains("pruned=1"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    // Unknown command surfaces as ERR, connection stays usable.
+    assert!(matches!(
+        client.request(&Request::Recommend { src: 999, threshold: 0.5 }).unwrap(),
+        Response::Items { items, .. } if items.is_empty()
+    ));
+    // Clean shutdown.
+    assert_eq!(client.request(&Request::Quit).unwrap(), Response::Ok("bye".into()));
+    drop(handle);
+    engine.shutdown();
+}
+
+#[test]
+fn tcp_concurrent_clients() {
+    let engine = Engine::new(&test_config(), 2);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for i in 0..200u64 {
+                    c.observe(t, i % 5).unwrap();
+                }
+                c.topk(t, 3).unwrap()
+            })
+        })
+        .collect();
+    for t in threads {
+        let items = t.join().unwrap();
+        assert!(items.len() <= 3);
+    }
+    engine.quiesce();
+    assert_eq!(engine.stats().observes, 800);
+    engine.shutdown();
+}

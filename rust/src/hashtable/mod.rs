@@ -1,0 +1,86 @@
+//! RCU hash table — the src-node / dst-node lookup tables of §II.1.
+//!
+//! Requirements from the paper:
+//! * O(1) lock-free lookups that share the RCU grace period with the
+//!   priority-queue list (readers traverse table + list under one guard);
+//! * inserts for *new* edges/nodes (the rare path);
+//! * removals driven by model decay (§II.C), reclaimed after a grace period.
+//!
+//! Design: chained buckets (`AtomicPtr<Entry>` heads), power-of-two sizing,
+//! fibonacci hashing of the caller-supplied 64-bit key hash.
+//!
+//! Progress guarantees (documented deviation from liburcu's `cds_lfht`):
+//! * `get` — wait-free: a bounded walk of one chain under the guard.
+//! * `insert` — lock-free via CAS on the bucket head with duplicate
+//!   re-check; resize is cooperative: the thread that trips the load factor
+//!   takes a spinlock and migrates, while concurrent inserts CAS into the
+//!   *new* array (entries are re-checked against both arrays during the
+//!   migration window).
+//! * `remove` — single-remover discipline (enforced by the caller: only the
+//!   decay/maintenance path removes), unlinks with plain CAS and retires the
+//!   entry through [`crate::rcu`].
+//!
+//! Values are `u64` (the chain stores raw pointers cast to u64); a thin
+//! typed wrapper [`PtrTable`] provides a pointer-typed view.
+
+mod raw;
+
+pub use raw::{HashTable, TableStats};
+
+use crate::rcu::Guard;
+
+/// Typed convenience wrapper storing `*mut T` values.
+pub struct PtrTable<T> {
+    inner: HashTable,
+    _marker: std::marker::PhantomData<*mut T>,
+}
+
+unsafe impl<T> Send for PtrTable<T> {}
+unsafe impl<T> Sync for PtrTable<T> {}
+
+impl<T> PtrTable<T> {
+    pub fn with_capacity(cap: usize) -> Self {
+        PtrTable { inner: HashTable::with_capacity(cap), _marker: std::marker::PhantomData }
+    }
+
+    #[inline]
+    pub fn get(&self, guard: &Guard, key: u64) -> Option<*mut T> {
+        self.inner.get(guard, key).map(|v| v as *mut T)
+    }
+
+    /// Insert `key -> ptr` if absent; returns the winning pointer (either
+    /// `ptr` or the pre-existing one).
+    #[inline]
+    pub fn insert_or_get(&self, guard: &Guard, key: u64, ptr: *mut T) -> (*mut T, bool) {
+        let (v, inserted) = self.inner.insert_or_get(guard, key, ptr as u64);
+        (v as *mut T, inserted)
+    }
+
+    #[inline]
+    pub fn remove(&self, guard: &Guard, key: u64) -> Option<*mut T> {
+        self.inner.remove(guard, key).map(|v| v as *mut T)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.inner.len() == 0
+    }
+
+    pub fn stats(&self) -> TableStats {
+        self.inner.stats()
+    }
+
+    /// Iterate over all `(key, value)` pairs under the guard. Concurrent
+    /// inserts may or may not be observed (approximately-correct snapshot).
+    pub fn for_each<F: FnMut(u64, *mut T)>(&self, guard: &Guard, mut f: F) {
+        self.inner.for_each(guard, |k, v| f(k, v as *mut T));
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,381 @@
+//! The untyped (u64 -> u64) RCU hash table.
+//!
+//! Concurrency protocol (see mod.rs for the guarantee summary):
+//!
+//! * Buckets are singly-linked chains; inserts always CAS onto the bucket
+//!   head. A successful head-CAS proves the chain gained no entries since
+//!   the duplicate-check walk began (inserts only land at the head), so the
+//!   insert-if-absent check cannot be defeated by a racing insert.
+//! * Removal (decay path only) takes the table lock — this enforces the
+//!   single-remover discipline that makes mid-chain unlink safe without
+//!   Harris-style marked pointers — then unlinks with a CAS (racing only
+//!   against head inserts) and retires the entry through RCU.
+//! * Resize uses a seqlock around the array pointer: the migrating thread
+//!   bumps `seq` to odd, copies every entry into fresh shells in a 2× array,
+//!   publishes the new array, bumps `seq` to even, and defer-frees the old
+//!   array *and* its shells wholesale. Writers re-validate `seq` after their
+//!   CAS and redo the operation against the new array if a migration raced;
+//!   readers are oblivious (the old array stays intact until the grace
+//!   period expires — they merely miss entries inserted after migration,
+//!   which is the paper's "approximately correct" contract).
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+
+use crate::rcu::{self, Guard};
+use crate::sync::{Backoff, SpinLock};
+
+const FIB: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIN_CAP: usize = 8;
+/// Resize when len * 4 > cap * 3 (load factor 0.75).
+const LOAD_NUM: usize = 3;
+const LOAD_DEN: usize = 4;
+
+struct Entry {
+    key: u64,
+    value: AtomicU64,
+    next: AtomicPtr<Entry>,
+}
+
+struct Array {
+    shift: u32,
+    buckets: Box<[AtomicPtr<Entry>]>,
+}
+
+impl Array {
+    fn new(cap: usize) -> Box<Array> {
+        debug_assert!(cap.is_power_of_two());
+        let buckets: Vec<AtomicPtr<Entry>> =
+            (0..cap).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect();
+        Box::new(Array { shift: 64 - cap.trailing_zeros(), buckets: buckets.into_boxed_slice() })
+    }
+
+    #[inline]
+    fn bucket(&self, key: u64) -> &AtomicPtr<Entry> {
+        let idx = (key.wrapping_mul(FIB) >> self.shift) as usize;
+        &self.buckets[idx]
+    }
+
+    fn cap(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+pub struct HashTable {
+    array: AtomicPtr<Array>,
+    len: AtomicUsize,
+    /// Even = stable; odd = migration in progress.
+    seq: AtomicU64,
+    /// Serializes resize and remove (cold paths only).
+    lock: SpinLock<()>,
+    resizes: AtomicUsize,
+}
+
+unsafe impl Send for HashTable {}
+unsafe impl Sync for HashTable {}
+
+/// Counters exposed for tests and the metrics endpoint.
+#[derive(Debug, Clone, Copy)]
+pub struct TableStats {
+    pub capacity: usize,
+    pub len: usize,
+    pub resizes: usize,
+    pub max_chain: usize,
+}
+
+impl HashTable {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(MIN_CAP).next_power_of_two();
+        HashTable {
+            array: AtomicPtr::new(Box::into_raw(Array::new(cap))),
+            len: AtomicUsize::new(0),
+            seq: AtomicU64::new(0),
+            lock: SpinLock::new(()),
+            resizes: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Wait-free lookup under the RCU guard.
+    #[inline]
+    pub fn get(&self, _guard: &Guard, key: u64) -> Option<u64> {
+        // The guard keeps both the array and the entry shells alive.
+        let arr = unsafe { &*self.array.load(Ordering::Acquire) };
+        let mut cur = arr.bucket(key).load(Ordering::Acquire);
+        while !cur.is_null() {
+            let e = unsafe { &*cur };
+            if e.key == key {
+                return Some(e.value.load(Ordering::Acquire));
+            }
+            cur = e.next.load(Ordering::Acquire);
+        }
+        None
+    }
+
+    /// Insert `key -> value` if absent. Returns `(winning_value, inserted)`.
+    pub fn insert_or_get(&self, guard: &Guard, key: u64, value: u64) -> (u64, bool) {
+        let mut shell: *mut Entry = std::ptr::null_mut();
+        let mut backoff = Backoff::new();
+        loop {
+            // Wait out any in-flight migration so we operate on a stable array.
+            let s1 = self.stable_seq(&mut backoff);
+            let arr = unsafe { &*self.array.load(Ordering::Acquire) };
+            let bucket = arr.bucket(key);
+            let head = bucket.load(Ordering::Acquire);
+
+            // Duplicate check: walk the chain as of `head`.
+            let mut cur = head;
+            let mut found = None;
+            while !cur.is_null() {
+                let e = unsafe { &*cur };
+                if e.key == key {
+                    found = Some(e.value.load(Ordering::Acquire));
+                    break;
+                }
+                cur = e.next.load(Ordering::Acquire);
+            }
+            if let Some(v) = found {
+                // Racing migration can't invalidate a *positive* result: the
+                // entry existed, so its copy (same key/value) exists after
+                // migration too.
+                if !shell.is_null() {
+                    // We allocated on a previous iteration; nobody has seen it.
+                    drop(unsafe { Box::from_raw(shell) });
+                }
+                return (v, false);
+            }
+
+            if shell.is_null() {
+                shell = Box::into_raw(Box::new(Entry {
+                    key,
+                    value: AtomicU64::new(value),
+                    next: AtomicPtr::new(head),
+                }));
+            } else {
+                unsafe { (*shell).next.store(head, Ordering::Relaxed) };
+            }
+            if bucket
+                .compare_exchange(head, shell, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                backoff.spin();
+                continue; // head changed under us: re-walk
+            }
+
+            // CAS landed. If no migration raced, we're done.
+            let s2 = self.seq.load(Ordering::SeqCst);
+            if s1 == s2 {
+                self.len.fetch_add(1, Ordering::Relaxed);
+                self.maybe_resize(guard);
+                return (value, true);
+            }
+
+            // A migration raced with our CAS: our shell may or may not have
+            // been copied into the new array. Re-resolve against the new
+            // array; the old array (and our orphaned shell, if missed) is
+            // freed wholesale by the migrator's deferred closure.
+            loop {
+                let s1b = self.stable_seq(&mut backoff);
+                let arr2 = unsafe { &*self.array.load(Ordering::Acquire) };
+                let mut cur = arr2.bucket(key).load(Ordering::Acquire);
+                let mut winner = None;
+                while !cur.is_null() {
+                    let e = unsafe { &*cur };
+                    if e.key == key {
+                        winner = Some(e.value.load(Ordering::Acquire));
+                        break;
+                    }
+                    cur = e.next.load(Ordering::Acquire);
+                }
+                if self.seq.load(Ordering::SeqCst) != s1b {
+                    continue; // another migration; re-walk
+                }
+                match winner {
+                    // Our value was migrated (or another thread won with the
+                    // same key). Either way `w` is the canonical value now.
+                    Some(w) => {
+                        if w == value {
+                            self.len.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return (w, w == value);
+                    }
+                    // Migrator scanned our bucket before our CAS landed: the
+                    // shell exists only in the doomed old array. Retry from
+                    // scratch with a fresh shell.
+                    None => {
+                        shell = std::ptr::null_mut();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Remove `key`, retiring its entry through RCU. Takes the table lock
+    /// (cold path: decay/prune only).
+    pub fn remove(&self, guard: &Guard, key: u64) -> Option<u64> {
+        let _l = self.lock.lock();
+        // Holding the lock excludes resize, so the array is stable.
+        let arr = unsafe { &*self.array.load(Ordering::Acquire) };
+        let bucket = arr.bucket(key);
+        'retry: loop {
+            let mut prev: Option<&Entry> = None;
+            let mut cur = bucket.load(Ordering::Acquire);
+            while !cur.is_null() {
+                let e = unsafe { &*cur };
+                if e.key == key {
+                    let next = e.next.load(Ordering::Acquire);
+                    let cas_target = match prev {
+                        Some(p) => &p.next,
+                        None => bucket,
+                    };
+                    if cas_target
+                        .compare_exchange(cur, next, Ordering::AcqRel, Ordering::Acquire)
+                        .is_err()
+                    {
+                        // Only head inserts race with us; re-walk.
+                        continue 'retry;
+                    }
+                    let v = e.value.load(Ordering::Acquire);
+                    self.len.fetch_sub(1, Ordering::Relaxed);
+                    unsafe { rcu::defer_free(guard, cur) };
+                    return Some(v);
+                }
+                prev = Some(e);
+                cur = e.next.load(Ordering::Acquire);
+            }
+            return None;
+        }
+    }
+
+    /// Iterate all live entries (approximately-correct snapshot).
+    pub fn for_each<F: FnMut(u64, u64)>(&self, _guard: &Guard, mut f: F) {
+        let arr = unsafe { &*self.array.load(Ordering::Acquire) };
+        for b in arr.buckets.iter() {
+            let mut cur = b.load(Ordering::Acquire);
+            while !cur.is_null() {
+                let e = unsafe { &*cur };
+                f(e.key, e.value.load(Ordering::Acquire));
+                cur = e.next.load(Ordering::Acquire);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> TableStats {
+        let guard = rcu::pin();
+        let arr = unsafe { &*self.array.load(Ordering::Acquire) };
+        let mut max_chain = 0;
+        for b in arr.buckets.iter() {
+            let mut n = 0;
+            let mut cur = b.load(Ordering::Acquire);
+            while !cur.is_null() {
+                n += 1;
+                cur = unsafe { &*cur }.next.load(Ordering::Acquire);
+            }
+            max_chain = max_chain.max(n);
+        }
+        drop(guard);
+        TableStats {
+            capacity: arr.cap(),
+            len: self.len(),
+            resizes: self.resizes.load(Ordering::Relaxed),
+            max_chain,
+        }
+    }
+
+    /// Spin until `seq` is even; returns the observed stable value.
+    #[inline]
+    fn stable_seq(&self, backoff: &mut Backoff) -> u64 {
+        loop {
+            let s = self.seq.load(Ordering::SeqCst);
+            if s % 2 == 0 {
+                return s;
+            }
+            backoff.snooze();
+        }
+    }
+
+    fn maybe_resize(&self, guard: &Guard) {
+        let arr = unsafe { &*self.array.load(Ordering::Acquire) };
+        if self.len() * LOAD_DEN <= arr.cap() * LOAD_NUM {
+            return;
+        }
+        let Some(_l) = self.lock.try_lock() else {
+            return; // someone else is resizing or removing; they'll get to it
+        };
+        // Re-check under the lock.
+        let old_ptr = self.array.load(Ordering::Acquire);
+        let old = unsafe { &*old_ptr };
+        if self.len() * LOAD_DEN <= old.cap() * LOAD_NUM {
+            return;
+        }
+
+        // Begin migration: writers observing odd `seq` hold off.
+        self.seq.fetch_add(1, Ordering::SeqCst);
+        let new = Array::new(old.cap() * 2);
+        let mut migrated = 0usize;
+        for b in old.buckets.iter() {
+            let mut cur = b.load(Ordering::Acquire);
+            while !cur.is_null() {
+                let e = unsafe { &*cur };
+                // Fresh shell: readers keep traversing the intact old chains.
+                let shell = Box::into_raw(Box::new(Entry {
+                    key: e.key,
+                    value: AtomicU64::new(e.value.load(Ordering::Acquire)),
+                    next: AtomicPtr::new(std::ptr::null_mut()),
+                }));
+                let nb = new.bucket(e.key);
+                unsafe { (*shell).next.store(nb.load(Ordering::Relaxed), Ordering::Relaxed) };
+                nb.store(shell, Ordering::Relaxed);
+                migrated += 1;
+                cur = e.next.load(Ordering::Acquire);
+            }
+        }
+        let new_ptr = Box::into_raw(new);
+        self.array.store(new_ptr, Ordering::Release);
+        self.seq.fetch_add(1, Ordering::SeqCst);
+        self.resizes.fetch_add(1, Ordering::Relaxed);
+        let _ = migrated;
+
+        // Retire the old array and every shell it owns after a grace period.
+        let old_addr = old_ptr as usize;
+        rcu::defer(guard, move || unsafe {
+            let old = Box::from_raw(old_addr as *mut Array);
+            for b in old.buckets.iter() {
+                let mut cur = b.load(Ordering::Relaxed);
+                while !cur.is_null() {
+                    let e = Box::from_raw(cur);
+                    cur = e.next.load(Ordering::Relaxed);
+                }
+            }
+        });
+    }
+}
+
+impl Drop for HashTable {
+    fn drop(&mut self) {
+        // Exclusive access: free the current array and chains directly.
+        let arr_ptr = *self.array.get_mut();
+        if arr_ptr.is_null() {
+            return;
+        }
+        unsafe {
+            let arr = Box::from_raw(arr_ptr);
+            for b in arr.buckets.iter() {
+                let mut cur = b.load(Ordering::Relaxed);
+                while !cur.is_null() {
+                    let e = Box::from_raw(cur);
+                    cur = e.next.load(Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}

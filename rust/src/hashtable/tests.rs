@@ -1,0 +1,214 @@
+//! Unit, stress and invariant tests for the RCU hash table (invariant P6).
+
+use super::*;
+use crate::rcu;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn insert_then_get() {
+    let t = HashTable::with_capacity(8);
+    let g = rcu::pin();
+    assert_eq!(t.get(&g, 42), None);
+    assert_eq!(t.insert_or_get(&g, 42, 1000), (1000, true));
+    assert_eq!(t.get(&g, 42), Some(1000));
+    assert_eq!(t.len(), 1);
+}
+
+#[test]
+fn insert_or_get_dedups() {
+    let t = HashTable::with_capacity(8);
+    let g = rcu::pin();
+    assert_eq!(t.insert_or_get(&g, 7, 100), (100, true));
+    assert_eq!(t.insert_or_get(&g, 7, 200), (100, false));
+    assert_eq!(t.len(), 1);
+}
+
+#[test]
+fn remove_returns_value_and_unlinks() {
+    let t = HashTable::with_capacity(8);
+    let g = rcu::pin();
+    for k in 0..20u64 {
+        t.insert_or_get(&g, k, k * 10);
+    }
+    assert_eq!(t.remove(&g, 13), Some(130));
+    assert_eq!(t.get(&g, 13), None);
+    assert_eq!(t.remove(&g, 13), None);
+    assert_eq!(t.len(), 19);
+    // Every other key survives the unlink (P6).
+    for k in 0..20u64 {
+        if k != 13 {
+            assert_eq!(t.get(&g, k), Some(k * 10), "key {k} lost");
+        }
+    }
+}
+
+#[test]
+fn resize_preserves_all_entries() {
+    let t = HashTable::with_capacity(8);
+    let g = rcu::pin();
+    const N: u64 = 10_000;
+    for k in 0..N {
+        t.insert_or_get(&g, k, !k);
+    }
+    let s = t.stats();
+    assert!(s.resizes >= 1, "expected at least one resize, got {s:?}");
+    assert!(s.capacity >= (N as usize * LOAD_NUM_TEST / LOAD_DEN_TEST));
+    for k in 0..N {
+        assert_eq!(t.get(&g, k), Some(!k), "key {k} lost across resize");
+    }
+    assert_eq!(t.len(), N as usize);
+}
+const LOAD_NUM_TEST: usize = 1; // capacity must at least exceed len
+const LOAD_DEN_TEST: usize = 1;
+
+#[test]
+fn for_each_sees_every_entry() {
+    let t = HashTable::with_capacity(8);
+    let g = rcu::pin();
+    for k in 0..100u64 {
+        t.insert_or_get(&g, k, k + 1);
+    }
+    let mut seen = vec![false; 100];
+    t.for_each(&g, |k, v| {
+        assert_eq!(v, k + 1);
+        seen[k as usize] = true;
+    });
+    assert!(seen.iter().all(|&s| s));
+}
+
+#[test]
+fn keys_with_extreme_values() {
+    let t = HashTable::with_capacity(8);
+    let g = rcu::pin();
+    for k in [0u64, 1, u64::MAX, u64::MAX - 1, 1 << 63, 0xFFFF_FFFF] {
+        assert_eq!(t.insert_or_get(&g, k, k ^ 0xABCD), (k ^ 0xABCD, true));
+    }
+    for k in [0u64, 1, u64::MAX, u64::MAX - 1, 1 << 63, 0xFFFF_FFFF] {
+        assert_eq!(t.get(&g, k), Some(k ^ 0xABCD));
+    }
+}
+
+#[test]
+fn concurrent_inserts_no_loss_no_dup() {
+    const THREADS: u64 = 8;
+    const PER: u64 = 4_000;
+    let t = Arc::new(HashTable::with_capacity(8));
+    let handles: Vec<_> = (0..THREADS)
+        .map(|tid| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                let g = rcu::pin();
+                for i in 0..PER {
+                    let k = tid * PER + i;
+                    let (v, ins) = t.insert_or_get(&g, k, k + 1);
+                    assert!(ins, "disjoint key {k} already present");
+                    assert_eq!(v, k + 1);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let g = rcu::pin();
+    assert_eq!(t.len(), (THREADS * PER) as usize);
+    for k in 0..THREADS * PER {
+        assert_eq!(t.get(&g, k), Some(k + 1), "key {k} lost");
+    }
+}
+
+#[test]
+fn concurrent_same_key_single_winner() {
+    const THREADS: usize = 8;
+    for round in 0..50u64 {
+        let t = Arc::new(HashTable::with_capacity(8));
+        let winners: Vec<u64> = {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|tid| {
+                    let t = Arc::clone(&t);
+                    std::thread::spawn(move || {
+                        let g = rcu::pin();
+                        t.insert_or_get(&g, round, 1000 + tid as u64).0
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        };
+        // All participants must agree on one canonical value.
+        assert!(winners.windows(2).all(|w| w[0] == w[1]), "split winners: {winners:?}");
+        assert_eq!(t.len(), 1);
+    }
+}
+
+#[test]
+fn readers_survive_concurrent_resize() {
+    let t = Arc::new(HashTable::with_capacity(8));
+    {
+        let g = rcu::pin();
+        for k in 0..64u64 {
+            t.insert_or_get(&g, k, k);
+        }
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let t = Arc::clone(&t);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut reads = 0u64;
+                while reads == 0 || !stop.load(Ordering::Relaxed) {
+                    let g = rcu::pin();
+                    for k in 0..64u64 {
+                        // Keys inserted before the readers started must
+                        // always be visible, across any number of resizes.
+                        assert_eq!(t.get(&g, k), Some(k), "pre-existing key {k} vanished");
+                    }
+                    reads += 1;
+                }
+            })
+        })
+        .collect();
+    // Writer: grow the table through several resizes.
+    {
+        let g = rcu::pin();
+        for k in 64..20_000u64 {
+            t.insert_or_get(&g, k, k);
+        }
+    }
+    stop.store(true, Ordering::SeqCst);
+    for r in readers {
+        r.join().unwrap();
+    }
+    assert!(t.stats().resizes >= 3);
+}
+
+#[test]
+fn ptr_table_roundtrip() {
+    let t: PtrTable<String> = PtrTable::with_capacity(8);
+    let g = rcu::pin();
+    let p = Box::into_raw(Box::new("hello".to_string()));
+    let (w, ins) = t.insert_or_get(&g, 5, p);
+    assert!(ins);
+    assert_eq!(w, p);
+    assert_eq!(t.get(&g, 5), Some(p));
+    let r = t.remove(&g, 5).unwrap();
+    assert_eq!(r, p);
+    // The table retired the Entry; the value itself is ours to free.
+    drop(unsafe { Box::from_raw(p) });
+    assert!(t.is_empty());
+}
+
+#[test]
+fn stats_shape() {
+    let t = HashTable::with_capacity(64);
+    let g = rcu::pin();
+    for k in 0..32u64 {
+        t.insert_or_get(&g, k, 0);
+    }
+    drop(g);
+    let s = t.stats();
+    assert_eq!(s.len, 32);
+    assert!(s.capacity >= 64);
+    assert!(s.max_chain >= 1);
+}

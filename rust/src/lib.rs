@@ -1,0 +1,20 @@
+//! # mcprioq — lock-free online sparse markov-chains
+//!
+//! Reproduction of *"MCPrioQ: A lock-free algorithm for online sparse
+//! markov-chains"* (Derehag & Johansson, 2023). See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for the measured reproduction of every claim.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod chain;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod hashtable;
+pub mod metrics;
+pub mod prioq;
+pub mod rcu;
+pub mod runtime;
+pub mod sync;
+pub mod testutil;
+pub mod workload;

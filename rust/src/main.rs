@@ -1,0 +1,132 @@
+//! `mcprioq` — the serving binary: run the recommendation server, poke it
+//! as a client, or print build/runtime info.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mcprioq::cli::{App, Command, Matches, Opt};
+use mcprioq::config::ServerConfig;
+use mcprioq::coordinator::{Client, DecayScheduler, Engine, Request, Server};
+
+fn app() -> App {
+    App {
+        name: "mcprioq",
+        about: "lock-free online sparse markov-chain server (Derehag & Johansson, 2023)",
+        commands: vec![
+            Command {
+                name: "serve",
+                help: "run the recommendation server",
+                opts: vec![
+                    Opt { name: "config", help: "TOML config path", default: Some("") },
+                    Opt { name: "listen", help: "bind address (overrides config)", default: Some("") },
+                    Opt { name: "workers", help: "ingest worker threads", default: Some("2") },
+                    Opt { name: "no-decay", help: "disable the decay scheduler", default: None },
+                ],
+                positionals: vec![],
+            },
+            Command {
+                name: "client",
+                help: "send one request to a running server",
+                opts: vec![Opt {
+                    name: "addr",
+                    help: "server address",
+                    default: Some("127.0.0.1:7171"),
+                }],
+                positionals: vec![("request", "e.g. 'TOPK 5 3' or 'STATS'")],
+            },
+            Command {
+                name: "info",
+                help: "print artifact/runtime information",
+                opts: vec![],
+                positionals: vec![],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let matches = match app().parse(&args) {
+        Ok(m) => m,
+        Err(usage) => {
+            eprintln!("{usage}");
+            std::process::exit(2);
+        }
+    };
+    let result = match matches.command.as_str() {
+        "serve" => serve(&matches),
+        "client" => client(&matches),
+        "info" => info(),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn serve(m: &Matches) -> anyhow::Result<()> {
+    let mut config = match m.get("config") {
+        Some("") | None => ServerConfig::default(),
+        Some(path) => ServerConfig::load(path).map_err(|e| anyhow::anyhow!(e))?,
+    };
+    if let Some(listen) = m.get("listen") {
+        if !listen.is_empty() {
+            config.listen = listen.to_string();
+        }
+    }
+    let workers = m.get_u64("workers").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(2) as usize;
+
+    let engine = Engine::new(&config, workers);
+    let _decay = match config.decay_interval {
+        Some(interval) if !m.flag("no-decay") => {
+            Some(DecayScheduler::start(Arc::clone(&engine), interval))
+        }
+        _ => None,
+    };
+    let server = Server::bind(Arc::clone(&engine), &config.listen)?;
+    println!(
+        "mcprioq serving on {} ({} shards, {} ingest workers, decay {:?})",
+        server.local_addr(),
+        engine.shard_count(),
+        workers,
+        config.decay_interval
+    );
+    let handle = server.spawn();
+
+    // Periodic stats until ^C.
+    loop {
+        std::thread::sleep(Duration::from_secs(10));
+        let s = engine.stats();
+        println!(
+            "[stats] nodes={} edges={} observes={} queries={} queue={} p50={}ns p99={}ns",
+            s.nodes, s.edges, s.observes, s.queries, s.queue_depth, s.query_ns_p50, s.query_ns_p99
+        );
+        let _ = &handle;
+    }
+}
+
+fn client(m: &Matches) -> anyhow::Result<()> {
+    let addr = m.get_or("addr", "127.0.0.1:7171");
+    let line = m.positional(0).ok_or_else(|| anyhow::anyhow!("missing request argument"))?;
+    let req = Request::parse(line).map_err(|e| anyhow::anyhow!(e))?;
+    let mut client = Client::connect(addr)?;
+    println!("{}", client.request(&req)?);
+    Ok(())
+}
+
+fn info() -> anyhow::Result<()> {
+    println!("mcprioq {} — three-layer build", env!("CARGO_PKG_VERSION"));
+    let dir = mcprioq::runtime::default_artifacts_dir();
+    match mcprioq::runtime::XlaRuntime::new(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts dir: {dir:?}");
+            for e in &rt.manifest().entries {
+                println!("  {:?} n={} b={} k={} ({})", e.kind, e.n, e.b, e.k, e.file);
+            }
+        }
+        Err(e) => println!("dense engine unavailable: {e:#} (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,228 @@
+//! Log-bucketed concurrent histogram (HdrHistogram-lite): 2.5%-precision
+//! buckets over the full u64 range, lock-free recording, mergeable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per power of two (higher = finer percentiles).
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS; // 32
+/// 64 exponents x 32 sub-buckets.
+const BUCKETS: usize = 64 * SUB;
+
+pub struct Histogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+/// Point-in-time summary of a histogram.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Snapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub p999: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // Box<[AtomicU64; N]> without transmute gymnastics: vec -> try_into.
+        let v: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let buckets: Box<[AtomicU64; BUCKETS]> = v.into_boxed_slice().try_into().ok().unwrap();
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        let v = value.max(1);
+        let exp = 63 - v.leading_zeros() as usize;
+        if exp < SUB_BITS as usize {
+            // Values below 2^SUB_BITS map 1:1.
+            return v as usize;
+        }
+        let sub = ((v >> (exp - SUB_BITS as usize)) as usize) & (SUB - 1);
+        (exp << SUB_BITS) as usize + sub
+    }
+
+    /// Representative (upper-bound) value of a bucket.
+    fn bucket_value(idx: usize) -> u64 {
+        let exp = idx >> SUB_BITS;
+        let sub = idx & (SUB - 1);
+        if exp < 1 {
+            return idx as u64;
+        }
+        let base = 1u64 << exp;
+        base + ((sub as u64 + 1) << exp >> SUB_BITS).saturating_sub(1)
+    }
+
+    #[inline]
+    pub fn record(&self, value: u64) {
+        self.buckets[Self::index(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.min.fetch_min(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn merge_from(&self, other: &Histogram) {
+        for i in 0..BUCKETS {
+            let v = other.buckets[i].load(Ordering::Relaxed);
+            if v > 0 {
+                self.buckets[i].fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min.fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for i in 0..BUCKETS {
+            acc += self.buckets[i].load(Ordering::Relaxed);
+            if acc >= target {
+                return Self::bucket_value(i).min(self.max.load(Ordering::Relaxed));
+            }
+        }
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let sum = self.sum.load(Ordering::Relaxed);
+        Snapshot {
+            count,
+            sum,
+            min: if count == 0 { 0 } else { self.min.load(Ordering::Relaxed) },
+            max: self.max.load(Ordering::Relaxed),
+            mean: if count == 0 { 0.0 } else { sum as f64 / count as f64 },
+            p50: self.percentile(50.0),
+            p90: self.percentile(90.0),
+            p99: self.percentile(99.0),
+            p999: self.percentile(99.9),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0);
+        assert_eq!(s.min, 0);
+    }
+
+    #[test]
+    fn single_value() {
+        let h = Histogram::new();
+        h.record(1000);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.min, 1000);
+        assert_eq!(s.max, 1000);
+        assert_eq!(s.mean, 1000.0);
+        // Bucketed percentile within 2x of the true value (log buckets).
+        assert!(s.p50 >= 1000 && s.p50 <= 1064, "p50 {}", s.p50);
+    }
+
+    #[test]
+    fn percentiles_of_uniform_range() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10_000);
+        // Log-bucket precision: within ~4% of truth.
+        assert!((s.p50 as f64 - 5_000.0).abs() / 5_000.0 < 0.05, "p50 {}", s.p50);
+        assert!((s.p90 as f64 - 9_000.0).abs() / 9_000.0 < 0.05, "p90 {}", s.p90);
+        assert!((s.p99 as f64 - 9_900.0).abs() / 9_900.0 < 0.05, "p99 {}", s.p99);
+        assert_eq!(s.max, 10_000);
+        assert_eq!(s.min, 1);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 3, 3] {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(100.0), 3);
+        assert_eq!(h.snapshot().min, 0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(10);
+        b.record(1_000_000);
+        a.merge_from(&b);
+        let s = a.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.min, 10);
+        assert_eq!(s.max, 1_000_000);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1000 + i % 100);
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn huge_values_do_not_panic() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX / 2);
+        assert_eq!(h.snapshot().max, u64::MAX);
+    }
+}

@@ -1,0 +1,175 @@
+//! Metrics substrate: counters, log-bucketed histograms, latency/throughput
+//! recorders. Lock-free recording (atomics only) so metrics can sit on the
+//! serving hot path.
+
+mod histogram;
+mod striped;
+
+pub use histogram::{Histogram, Snapshot};
+pub use striped::StripedCounter;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous gauge (set/get).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn max_update(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+}
+
+/// Times a scope and records nanoseconds into a histogram on drop.
+pub struct Timer<'a> {
+    hist: &'a Histogram,
+    start: Instant,
+}
+
+impl<'a> Timer<'a> {
+    pub fn start(hist: &'a Histogram) -> Self {
+        Timer { hist, start: Instant::now() }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Windowed throughput meter: count events, read events/sec since the last
+/// `rate()` call.
+pub struct Meter {
+    count: AtomicU64,
+    last_count: AtomicU64,
+    last_at_nanos: AtomicU64,
+    epoch: Instant,
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Meter {
+            count: AtomicU64::new(0),
+            last_count: AtomicU64::new(0),
+            last_at_nanos: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    #[inline]
+    pub fn mark(&self) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn mark_n(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Events/sec since the previous `rate()` call (or since creation).
+    pub fn rate(&self) -> f64 {
+        let now = self.epoch.elapsed().as_nanos() as u64;
+        let prev_t = self.last_at_nanos.swap(now, Ordering::Relaxed);
+        let cur = self.count.load(Ordering::Relaxed);
+        let prev_c = self.last_count.swap(cur, Ordering::Relaxed);
+        let dt = now.saturating_sub(prev_t) as f64 / 1e9;
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        (cur - prev_c) as f64 / dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(10);
+        g.max_update(7);
+        assert_eq!(g.get(), 10);
+        g.max_update(12);
+        assert_eq!(g.get(), 12);
+    }
+
+    #[test]
+    fn timer_records() {
+        let h = Histogram::new();
+        {
+            let _t = Timer::start(&h);
+            std::hint::black_box(0);
+        }
+        assert_eq!(h.snapshot().count, 1);
+    }
+
+    #[test]
+    fn meter_counts_and_rates() {
+        let m = Meter::new();
+        m.mark_n(100);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let r = m.rate();
+        assert!(r > 0.0);
+        assert_eq!(m.total(), 100);
+        // Second window with no events.
+        let r2 = m.rate();
+        assert_eq!(r2, 0.0);
+    }
+}

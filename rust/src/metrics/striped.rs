@@ -1,0 +1,75 @@
+//! Thread-striped counter: `add` touches a per-thread-striped cache line
+//! instead of one global line, so hot-path accounting never serializes
+//! writers (perf-pass finding, EXPERIMENTS.md §Perf).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::sync::CachePadded;
+
+const STRIPES: usize = 16;
+
+static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Each thread gets a home stripe round-robin at first use.
+    static STRIPE: usize = NEXT_STRIPE.fetch_add(1, Ordering::Relaxed) % STRIPES;
+}
+
+#[derive(Default)]
+pub struct StripedCounter {
+    stripes: [CachePadded<AtomicU64>; STRIPES],
+}
+
+impl StripedCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        let s = STRIPE.with(|s| *s);
+        self.stripes[s].fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.stripes.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counts_across_threads() {
+        let c = Arc::new(StripedCounter::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn add_batches() {
+        let c = StripedCounter::new();
+        c.add(5);
+        c.add(7);
+        assert_eq!(c.get(), 12);
+    }
+}

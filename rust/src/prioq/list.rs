@@ -1,0 +1,619 @@
+//! Implementation of the sorted doubly-linked edge list.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+
+use crate::rcu::{self, Guard};
+use crate::sync::{Backoff, SpinLock};
+
+/// Link state of a node.
+const LINK_PENDING: u8 = 0;
+const LINK_LINKED: u8 = 1;
+const LINK_UNLINKED: u8 = 2;
+
+/// One edge of the markov chain: destination id + transition counter
+/// (§II.3), threaded on the sorted list and on the pending stack.
+pub struct Node {
+    /// Destination node id (the "item" returned by inference).
+    pub key: u64,
+    /// Transition counter; incremented wait-free, halved by decay.
+    pub count: AtomicU64,
+    /// Order ceiling: a conservative lower bound on the predecessor's
+    /// count. Counts are monotone between decays, so while
+    /// `count <= ceil` an increment provably cannot create an inversion —
+    /// the hot no-swap path (§II.A.2) then skips the dependent-load cache
+    /// miss of dereferencing `prev` entirely (see EXPERIMENTS.md §Perf).
+    /// Maintained: exact under the ticket (swap/splice/decay), best-effort
+    /// from the increment slow path; staleness only causes extra checks or
+    /// a bounded missed swap repaired by the maintenance sweep.
+    ceil: AtomicU64,
+    next: AtomicPtr<Node>,
+    prev: AtomicPtr<Node>,
+    /// Treiber-stack link while the node waits to be spliced.
+    stack: AtomicPtr<Node>,
+    link: AtomicU8,
+}
+
+impl Node {
+    fn boxed(key: u64, count: u64) -> *mut Node {
+        Box::into_raw(Box::new(Node {
+            key,
+            count: AtomicU64::new(count),
+            ceil: AtomicU64::new(0),
+            next: AtomicPtr::new(std::ptr::null_mut()),
+            prev: AtomicPtr::new(std::ptr::null_mut()),
+            stack: AtomicPtr::new(std::ptr::null_mut()),
+            link: AtomicU8::new(LINK_PENDING),
+        }))
+    }
+
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn is_linked(&self) -> bool {
+        self.link.load(Ordering::Acquire) == LINK_LINKED
+    }
+}
+
+/// Outcome of [`EdgeList::increment`], used by E4 (swap-rate experiment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IncrementOutcome {
+    /// New value of the edge counter.
+    pub count: u64,
+    /// Number of adjacent swaps performed to restore order.
+    pub swaps: u32,
+    /// True if a reorder was warranted but skipped because another thread
+    /// held the structural ticket (the list stays approximately sorted).
+    pub skipped: bool,
+}
+
+/// Counters exposed for tests/metrics (all monotonically increasing).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ListStats {
+    pub len: usize,
+    pub swaps: u64,
+    pub swap_skips: u64,
+    pub splices: u64,
+}
+
+/// The per-src-node priority queue. See module docs for the protocol.
+pub struct EdgeList {
+    head: AtomicPtr<Node>,
+    tail: AtomicPtr<Node>,
+    /// Single-flight ticket for structural mutations (splice/swap/unlink).
+    ticket: SpinLock<()>,
+    /// Treiber stack of freshly inserted nodes awaiting splice.
+    pending: AtomicPtr<Node>,
+    len: AtomicUsize,
+    swaps: AtomicU64,
+    swap_skips: AtomicU64,
+    splices: AtomicU64,
+}
+
+unsafe impl Send for EdgeList {}
+unsafe impl Sync for EdgeList {}
+
+impl Default for EdgeList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EdgeList {
+    pub fn new() -> Self {
+        EdgeList {
+            head: AtomicPtr::new(std::ptr::null_mut()),
+            tail: AtomicPtr::new(std::ptr::null_mut()),
+            ticket: SpinLock::new(()),
+            pending: AtomicPtr::new(std::ptr::null_mut()),
+            len: AtomicUsize::new(0),
+            swaps: AtomicU64::new(0),
+            swap_skips: AtomicU64::new(0),
+            splices: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of *linked* nodes (pending nodes are counted once spliced).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Allocate a node for `key` with an initial count and enqueue it for
+    /// splicing at the tail. Lock-free (one CAS loop on the pending stack).
+    /// Returns the node pointer, which the caller typically publishes in the
+    /// dst hash table; the node becomes visible to list readers after at
+    /// most one ticket hand-over.
+    pub fn insert(&self, _guard: &Guard, key: u64, count: u64) -> *mut Node {
+        let node = Node::boxed(key, count);
+        self.push_pending(node);
+        self.try_maintain();
+        node
+    }
+
+    /// Enqueue an externally allocated node (used by the chain when it wins
+    /// the dst-table race and must link the node it already published).
+    pub fn insert_node(&self, _guard: &Guard, node: *mut Node) {
+        self.push_pending(node);
+        self.try_maintain();
+    }
+
+    /// Allocate a node without linking it anywhere (the chain uses this to
+    /// race on the dst table; losers are freed without ever being shared).
+    pub fn alloc_node(key: u64, count: u64) -> *mut Node {
+        Node::boxed(key, count)
+    }
+
+    /// Find `key` in the list or insert it with `count`, deduplicating
+    /// *within the list itself*. Used when the optional dst hash table
+    /// (§II.2) is disabled: the list is then the only index, so uniqueness
+    /// must be enforced under the structural ticket (this path blocks —
+    /// the measured cost of dropping the optimization, see bench E6/E2
+    /// ablations). Returns `(node, inserted)`.
+    pub fn find_or_insert(&self, _guard: &Guard, key: u64, count: u64) -> (*mut Node, bool) {
+        let t = self.ticket.lock();
+        self.drain_pending();
+        // Writer-side scan (ticket held, so the chain is stable).
+        let mut cur = self.head.load(Ordering::Acquire);
+        while !cur.is_null() {
+            let n = unsafe { &*cur };
+            if n.key == key {
+                drop(t);
+                return (cur, false);
+            }
+            cur = n.next.load(Ordering::Acquire);
+        }
+        let node = Node::boxed(key, count);
+        self.splice_tail(node);
+        self.splices.fetch_add(1, Ordering::Relaxed);
+        self.bubble_up_ptr(node);
+        drop(t);
+        self.try_maintain();
+        (node, true)
+    }
+
+    /// Free a node that was never shared (lost a publish race).
+    ///
+    /// # Safety
+    /// The node must have come from [`EdgeList::alloc_node`] and must never
+    /// have been passed to [`EdgeList::insert_node`] or published anywhere.
+    pub unsafe fn free_unshared(node: *mut Node) {
+        drop(Box::from_raw(node));
+    }
+
+    fn push_pending(&self, node: *mut Node) {
+        let mut backoff = Backoff::new();
+        let mut head = self.pending.load(Ordering::Acquire);
+        loop {
+            unsafe { (*node).stack.store(head, Ordering::Relaxed) };
+            match self
+                .pending
+                .compare_exchange_weak(head, node, Ordering::AcqRel, Ordering::Acquire)
+            {
+                Ok(_) => return,
+                Err(h) => {
+                    head = h;
+                    backoff.spin();
+                }
+            }
+        }
+    }
+
+    /// Try to acquire the ticket and drain pending inserts. Never blocks.
+    fn try_maintain(&self) {
+        loop {
+            let Some(t) = self.ticket.try_lock() else { return };
+            self.drain_pending();
+            drop(t);
+            // Close the push-after-drain race: if new nodes arrived while we
+            // held the ticket's tail end, loop and try again (helping).
+            if self.pending.load(Ordering::Acquire).is_null() {
+                return;
+            }
+        }
+    }
+
+    /// Splice every pending node at the tail. Caller holds the ticket.
+    fn drain_pending(&self) {
+        let mut top = self.pending.swap(std::ptr::null_mut(), Ordering::AcqRel);
+        // The stack yields newest-first; reverse so earlier inserts land
+        // closer to the head (stable FIFO splice order).
+        let mut nodes: Vec<*mut Node> = Vec::new();
+        while !top.is_null() {
+            nodes.push(top);
+            top = unsafe { &*top }.stack.load(Ordering::Acquire);
+        }
+        for &node in nodes.iter().rev() {
+            self.splice_tail(node);
+            self.splices.fetch_add(1, Ordering::Relaxed);
+            // New edges normally start at count 1 and belong at the tail,
+            // but the API allows arbitrary initial counts (and the count may
+            // have been incremented while the node waited on the stack) —
+            // restore order immediately. Free when already sorted.
+            self.bubble_up_ptr(node);
+        }
+    }
+
+    /// Append `node` at the tail. Caller holds the ticket.
+    fn splice_tail(&self, node: *mut Node) {
+        let n = unsafe { &*node };
+        n.next.store(std::ptr::null_mut(), Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Relaxed);
+        n.ceil.store(
+            if tail.is_null() { u64::MAX } else { unsafe { &*tail }.count.load(Ordering::Acquire) },
+            Ordering::Relaxed,
+        );
+        n.prev.store(tail, Ordering::Relaxed);
+        n.link.store(LINK_LINKED, Ordering::Release);
+        if tail.is_null() {
+            // Empty list: publish as head; readers acquire through `head`.
+            self.head.store(node, Ordering::Release);
+        } else {
+            unsafe { &*tail }.next.store(node, Ordering::Release);
+        }
+        self.tail.store(node, Ordering::Release);
+        self.len.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Wait-free counter increment plus opportunistic reorder (§II.A.2).
+    ///
+    /// # Safety
+    /// `node` must be a node of *this* list, protected by `guard`.
+    pub unsafe fn increment(&self, guard: &Guard, node: *mut Node, delta: u64) -> IncrementOutcome {
+        let n = &*node;
+        let count = n.count.fetch_add(delta, Ordering::AcqRel) + delta;
+
+        // Fast path: under the order ceiling we provably cannot have
+        // overtaken the predecessor — no pointer chase at all.
+        if count <= n.ceil.load(Ordering::Relaxed) {
+            return IncrementOutcome { count, swaps: 0, skipped: false };
+        }
+
+        // Heuristic pre-check (racy by design; revalidated under ticket).
+        let prev = n.prev.load(Ordering::Acquire);
+        if prev.is_null() {
+            n.ceil.store(u64::MAX, Ordering::Relaxed); // at head
+            return IncrementOutcome { count, swaps: 0, skipped: false };
+        }
+        let pc = (*prev).count.load(Ordering::Acquire);
+        if pc >= count {
+            // Refresh the ceiling so future increments up to `pc` stay on
+            // the fast path.
+            n.ceil.store(pc, Ordering::Relaxed);
+            return IncrementOutcome { count, swaps: 0, skipped: false };
+        }
+        match self.ticket.try_lock() {
+            Some(t) => {
+                let swaps = self.bubble_up(guard, node);
+                self.drain_pending();
+                drop(t);
+                // Close the push-after-drain window (helping protocol).
+                self.try_maintain();
+                IncrementOutcome { count, swaps, skipped: false }
+            }
+            None => {
+                self.swap_skips.fetch_add(1, Ordering::Relaxed);
+                IncrementOutcome { count, swaps: 0, skipped: true }
+            }
+        }
+    }
+
+    /// Force a reorder of `node` (used by tests and by repair sweeps).
+    /// Blocks on the ticket.
+    ///
+    /// # Safety
+    /// `node` must be a node of this list, protected by `guard`.
+    pub unsafe fn reorder(&self, guard: &Guard, node: *mut Node) -> u32 {
+        let t = self.ticket.lock();
+        let swaps = self.bubble_up(guard, node);
+        self.drain_pending();
+        drop(t);
+        self.try_maintain();
+        swaps
+    }
+
+    /// Guard-less variant for internal use while holding the ticket.
+    fn bubble_up_ptr(&self, node: *mut Node) -> u32 {
+        let n = unsafe { &*node };
+        if n.link.load(Ordering::Acquire) != LINK_LINKED {
+            return 0;
+        }
+        let mut swaps = 0u32;
+        loop {
+            let prev = n.prev.load(Ordering::Relaxed);
+            if prev.is_null() {
+                break;
+            }
+            let p = unsafe { &*prev };
+            if p.count.load(Ordering::Acquire) >= n.count.load(Ordering::Acquire) {
+                break;
+            }
+            self.swap_with_prev(node, prev);
+            swaps += 1;
+        }
+        if swaps > 0 {
+            self.swaps.fetch_add(swaps as u64, Ordering::Relaxed);
+        }
+        swaps
+    }
+
+    /// Bubble `node` toward the head while it outranks its predecessor
+    /// (ties keep arrival order — stable). Caller holds the ticket.
+    /// Returns the number of swaps performed.
+    fn bubble_up(&self, _guard: &Guard, node: *mut Node) -> u32 {
+        self.bubble_up_ptr(node)
+    }
+
+    /// The Fig.-2 swap: move `node` (E) above its predecessor `prev` (P).
+    /// Chain before: Q → P → E → N. After: Q → E → P → N.
+    /// Caller holds the ticket; store order is the reader-safe sequence
+    /// proven in the module docs (hides only P, never cycles).
+    fn swap_with_prev(&self, node: *mut Node, prev: *mut Node) {
+        let e = unsafe { &*node };
+        let p = unsafe { &*prev };
+        let q = p.prev.load(Ordering::Relaxed);
+        let next = e.next.load(Ordering::Relaxed);
+
+        // --- reader-visible `next` chain, in the safe order ---
+        // 1. Q.next = E   (or head = E if P was the head)
+        if q.is_null() {
+            self.head.store(node, Ordering::Release);
+        } else {
+            unsafe { &*q }.next.store(node, Ordering::Release);
+        }
+        // 2. P.next = N
+        p.next.store(next, Ordering::Release);
+        // 3. E.next = P
+        e.next.store(prev, Ordering::Release);
+
+        // --- writer-side `prev` chain (ticket holder only) ---
+        e.prev.store(q, Ordering::Relaxed);
+        p.prev.store(node, Ordering::Relaxed);
+        if next.is_null() {
+            // E was the tail; P is now.
+            self.tail.store(prev, Ordering::Release);
+        } else {
+            unsafe { &*next }.prev.store(prev, Ordering::Relaxed);
+        }
+
+        // --- order ceilings (see Node::ceil) ---
+        e.ceil.store(
+            if q.is_null() { u64::MAX } else { unsafe { &*q }.count.load(Ordering::Acquire) },
+            Ordering::Relaxed,
+        );
+        p.ceil.store(e.count.load(Ordering::Acquire), Ordering::Relaxed);
+        if !next.is_null() {
+            // N's predecessor weakened from E to P: the ceiling must drop.
+            unsafe { &*next }.ceil.store(p.count.load(Ordering::Acquire), Ordering::Relaxed);
+        }
+    }
+
+    /// Unlink `node` from the list and retire it through RCU. Blocks on the
+    /// ticket (cold path: decay/prune). The caller must already have removed
+    /// every *other* route to the node (e.g. the dst hash table) — readers
+    /// inside the current grace period may still traverse it.
+    ///
+    /// # Safety
+    /// `node` must be a linked node of this list, not retired twice.
+    pub unsafe fn unlink(&self, guard: &Guard, node: *mut Node) {
+        let t = self.ticket.lock();
+        self.unlink_locked(node);
+        self.drain_pending();
+        drop(t);
+        self.try_maintain();
+        rcu::defer_free(guard, node);
+    }
+
+    fn unlink_locked(&self, node: *mut Node) {
+        let n = unsafe { &*node };
+        debug_assert_eq!(n.link.load(Ordering::Acquire), LINK_LINKED);
+        let prev = n.prev.load(Ordering::Relaxed);
+        let next = n.next.load(Ordering::Relaxed);
+        // Readers parked on `node` keep following `node.next` (unchanged),
+        // so the unlink is invisible to them — classic RCU list removal.
+        if prev.is_null() {
+            self.head.store(next, Ordering::Release);
+        } else {
+            unsafe { &*prev }.next.store(next, Ordering::Release);
+        }
+        if next.is_null() {
+            self.tail.store(prev, Ordering::Release);
+        } else {
+            let nx = unsafe { &*next };
+            nx.prev.store(prev, Ordering::Relaxed);
+            nx.ceil.store(
+                if prev.is_null() {
+                    u64::MAX
+                } else {
+                    unsafe { &*prev }.count.load(Ordering::Acquire)
+                },
+                Ordering::Relaxed,
+            );
+        }
+        n.link.store(LINK_UNLINKED, Ordering::Release);
+        self.len.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Halve every counter (model decay, §II.C); unlink nodes that reach 0
+    /// and pass them to `on_prune` *before* they are retired (the chain
+    /// removes them from the dst table inside the callback). Blocks on the
+    /// ticket. Returns (surviving_sum, pruned_count).
+    pub fn decay<F: FnMut(u64, *mut Node)>(
+        &self,
+        guard: &Guard,
+        factor_num: u64,
+        factor_den: u64,
+        mut on_prune: F,
+    ) -> (u64, usize) {
+        assert!(factor_num < factor_den && factor_den > 0);
+        let t = self.ticket.lock();
+        self.drain_pending();
+        let mut sum = 0u64;
+        let mut pruned = 0usize;
+        let mut prev_new_count = u64::MAX; // head has no predecessor
+        let mut cur = self.head.load(Ordering::Acquire);
+        while !cur.is_null() {
+            let n = unsafe { &*cur };
+            let next = n.next.load(Ordering::Acquire);
+            // fetch_update so racing increments are not lost (they may be
+            // scaled along with the old value — acceptable approximation).
+            let new = n
+                .count
+                .fetch_update(Ordering::AcqRel, Ordering::Acquire, |c| {
+                    Some(c * factor_num / factor_den)
+                })
+                .map(|old| old * factor_num / factor_den)
+                .unwrap_or(0);
+            if new == 0 {
+                self.unlink_locked(cur);
+                on_prune(n.key, cur);
+                unsafe { rcu::defer_free(guard, cur) };
+                pruned += 1;
+            } else {
+                // Counts shrank: re-anchor the ceiling to the new
+                // predecessor value (stale-high ceilings would mask swaps).
+                n.ceil.store(prev_new_count, Ordering::Relaxed);
+                prev_new_count = new;
+                sum += new;
+            }
+            cur = next;
+        }
+        // Splice inserts that arrived during the walk before releasing.
+        self.drain_pending();
+        drop(t);
+        self.try_maintain();
+        (sum, pruned)
+    }
+
+    /// Repair sweep: one insertion-sort pass that bubbles every out-of-order
+    /// node into place. Blocks on the ticket; O(n + inversions).
+    ///
+    /// Needed because order maintenance is opportunistic: an increment may
+    /// *skip* its reorder when the ticket is busy, and a rare race (the
+    /// increment's pre-check reading `prev` just before a concurrent swap
+    /// demotes a hotter node above it) can leave a residual inversion that
+    /// no later update repairs. Both are bounded, local inversions — the
+    /// paper's "approximately correct" state. The chain piggybacks this
+    /// sweep on model decay (§II.C), its periodic maintenance pass, making
+    /// the order *eventually exact* at quiescence. Returns swaps performed.
+    pub fn repair(&self, _guard: &Guard) -> u64 {
+        let t = self.ticket.lock();
+        self.drain_pending();
+        let mut swaps = 0u64;
+        let mut cur = self.head.load(Ordering::Acquire);
+        while !cur.is_null() {
+            // Save the successor before bubbling (bubbling moves `cur`
+            // toward the head, never past its old successor).
+            let next = unsafe { &*cur }.next.load(Ordering::Acquire);
+            swaps += self.bubble_up_ptr(cur) as u64;
+            cur = next;
+        }
+        self.drain_pending();
+        drop(t);
+        self.try_maintain();
+        swaps
+    }
+
+    /// Walk the list head→tail under the guard, calling `f(key, count)`;
+    /// stop when `f` returns false. Wait-free; sees an approximately
+    /// correct snapshot during concurrent restructuring.
+    pub fn scan<F: FnMut(u64, u64) -> bool>(&self, _guard: &Guard, mut f: F) -> usize {
+        let mut visited = 0usize;
+        // Safety bound: the no-cycle proof makes unbounded walks impossible,
+        // but a bound costs nothing and turns a hypothetical bug into a
+        // truncated (approximately correct) answer instead of a hang.
+        let bound = 4 * self.len.load(Ordering::Relaxed) + 64;
+        let mut cur = self.head.load(Ordering::Acquire);
+        while !cur.is_null() && visited < bound {
+            let n = unsafe { &*cur };
+            visited += 1;
+            if !f(n.key, n.count.load(Ordering::Acquire)) {
+                break;
+            }
+            cur = n.next.load(Ordering::Acquire);
+        }
+        visited
+    }
+
+    /// Collect up to `limit` `(key, count)` pairs from the head.
+    pub fn top(&self, guard: &Guard, limit: usize) -> Vec<(u64, u64)> {
+        if limit == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(limit.min(64));
+        self.scan(guard, |k, c| {
+            out.push((k, c));
+            out.len() < limit
+        });
+        out
+    }
+
+    pub fn stats(&self) -> ListStats {
+        ListStats {
+            len: self.len(),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            swap_skips: self.swap_skips.load(Ordering::Relaxed),
+            splices: self.splices.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Check the writer-side invariants (P1): descending counts and
+    /// consistent prev links. Only meaningful when quiesced; takes the
+    /// ticket to exclude mutators.
+    pub fn check_sorted(&self) -> Result<(), String> {
+        let _t = self.ticket.lock();
+        let mut cur = self.head.load(Ordering::Acquire);
+        let mut prev: *mut Node = std::ptr::null_mut();
+        let mut last = u64::MAX;
+        let mut n_seen = 0usize;
+        while !cur.is_null() {
+            let n = unsafe { &*cur };
+            let c = n.count.load(Ordering::Acquire);
+            if c > last {
+                return Err(format!("inversion at key {}: {} > {}", n.key, c, last));
+            }
+            if n.prev.load(Ordering::Relaxed) != prev {
+                return Err(format!("broken prev link at key {}", n.key));
+            }
+            last = c;
+            prev = cur;
+            cur = n.next.load(Ordering::Acquire);
+            n_seen += 1;
+            if n_seen > self.len() + 1 {
+                return Err("cycle detected".into());
+            }
+        }
+        if prev != self.tail.load(Ordering::Acquire) {
+            return Err("tail pointer stale".into());
+        }
+        if n_seen != self.len() {
+            return Err(format!("len {} but saw {}", self.len(), n_seen));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for EdgeList {
+    fn drop(&mut self) {
+        // Exclusive access: free linked chain and pending stack directly.
+        let mut cur = *self.head.get_mut();
+        while !cur.is_null() {
+            let next = unsafe { &*cur }.next.load(Ordering::Relaxed);
+            drop(unsafe { Box::from_raw(cur) });
+            cur = next;
+        }
+        let mut cur = *self.pending.get_mut();
+        while !cur.is_null() {
+            let next = unsafe { &*cur }.stack.load(Ordering::Relaxed);
+            drop(unsafe { Box::from_raw(cur) });
+            cur = next;
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! The Markov-chain priority queue (§II.2) — the paper's core contribution.
+//!
+//! A *sorted doubly-linked list* of edges, ordered by transition count
+//! (head = largest). Three properties the paper demands:
+//!
+//! 1. **Wait-free readers.** Inference walks `head -> next -> …` inside an
+//!    RCU read-side critical section. Elements are reordered by *swapping*
+//!    (Fig. 2), never by pop+insert, so a reader can never be left holding a
+//!    node that was unlinked-and-freed mid-scan, and — unlike pop+insert —
+//!    there is no window in which an element is absent from the list while
+//!    a grace period elapses.
+//! 2. **Wait-free counter updates.** The common case (§II.A.2) is a plain
+//!    `fetch_add` on the edge counter. Order maintenance is *opportunistic*:
+//!    if the element now outranks its predecessor, the updater tries to
+//!    bubble it toward the head. The attempt is try-lock single-flight per
+//!    list: if another thread is restructuring, the update simply skips —
+//!    the list stays *approximately* sorted and a later update repairs it.
+//!    Updates therefore never block (measured in E4: no-swap is the normal
+//!    case for skewed input, exactly as the paper argues).
+//! 3. **Lock-free inserts.** New edges are pushed onto a Treiber stack of
+//!    pending entries (one CAS, always succeeds in bounded retries); the
+//!    next structural operation splices them at the tail. The splice is
+//!    performed by whoever holds the single-flight ticket, and the release
+//!    protocol re-checks the stack, so a pending edge becomes visible after
+//!    at most one ticket hand-over (helping pattern).
+//!
+//! ## The swap (Fig. 2), concretely
+//!
+//! To move `E` above its predecessor `P` in the chain `Q → P → E → N`
+//! (arrows are `next`, head-to-tail, descending count), the ticket holder
+//! stores, in this order:
+//!
+//! ```text
+//!   1. Q.next = E     readers from Q now see  Q → E → N   (P hidden)
+//!   2. P.next = N     readers at P      see       P → N
+//!   3. E.next = P     readers from Q now see  Q → E → P → N   (done)
+//! ```
+//!
+//! No ordering of single-word stores can keep both nodes visible to a
+//! *fresh* traversal at every instant (that would need a DCAS); the scheme
+//! above hides only the *demoted* node `P`, for a window of two stores, and
+//! never creates a cycle in the `next` chain — readers always terminate and
+//! always see the *promoted* (hotter) element. This is the concrete meaning
+//! of the paper's "approximately correct results even during concurrent
+//! updates"; E7 measures the observable effect (reader recall under write
+//! storms).
+//!
+//! `prev` pointers are consulted and mutated only by the ticket holder (and
+//! by `increment`'s heuristic pre-check, which tolerates staleness), so
+//! they need no reader-safe ordering discipline.
+
+mod list;
+
+pub use list::{EdgeList, IncrementOutcome, ListStats, Node};
+
+#[cfg(test)]
+mod tests;

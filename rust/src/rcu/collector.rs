@@ -1,0 +1,209 @@
+//! Global epoch state and participant registry.
+//!
+//! Participants (one per OS thread that has ever pinned) live in a global
+//! intrusive singly-linked list. Registration CASes onto the head
+//! (lock-free); participants are never physically removed — a dead thread's
+//! record is marked DEAD and recycled by the next new thread. This keeps
+//! `try_advance`'s registry scan simple and safe without reclamation cycles
+//! in the reclaimer itself.
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::sync::CachePadded;
+
+/// Local-epoch encoding: `epoch << 1 | ACTIVE`.
+const ACTIVE: u64 = 1;
+
+/// One record per OS thread that has ever entered a read-side critical
+/// section.
+pub(super) struct Participant {
+    /// `observed_epoch << 1 | active`.
+    pub(super) local: CachePadded<AtomicU64>,
+    /// Set while an OS thread owns this record.
+    pub(super) owned: AtomicBool,
+    /// Intrusive registry link (immutable after registration).
+    next: AtomicPtr<Participant>,
+    /// Garbage bags, indexed by `epoch % 3`. Only the owning thread pushes;
+    /// the global orphan path takes the whole record under `owned=false`.
+    pub(super) bags: [Mutex<Vec<(u64, Box<dyn FnOnce() + Send>)>>; 3],
+}
+
+// SAFETY: all fields are Sync; bag contents are Send closures.
+unsafe impl Send for Participant {}
+unsafe impl Sync for Participant {}
+
+impl Participant {
+    fn new() -> Self {
+        Participant {
+            local: CachePadded::new(AtomicU64::new(0)),
+            owned: AtomicBool::new(true),
+            next: AtomicPtr::new(std::ptr::null_mut()),
+            bags: [Mutex::new(Vec::new()), Mutex::new(Vec::new()), Mutex::new(Vec::new())],
+        }
+    }
+
+    pub(super) fn is_pinned(&self) -> bool {
+        self.local.load(Ordering::SeqCst) & ACTIVE != 0
+    }
+
+    pub(super) fn pin(&self, global: u64) {
+        // Publish "I am reading at epoch `global`". The SeqCst store + the
+        // SeqCst load of the global epoch in the caller forms the fence that
+        // try_advance relies on.
+        self.local.store(global << 1 | ACTIVE, Ordering::SeqCst);
+    }
+
+    pub(super) fn repin(&self, global: u64) {
+        self.local.store(global << 1 | ACTIVE, Ordering::SeqCst);
+    }
+
+    pub(super) fn unpin(&self) {
+        let e = self.local.load(Ordering::Relaxed) >> 1;
+        self.local.store(e << 1, Ordering::Release);
+    }
+
+    pub(super) fn observed_epoch(&self) -> u64 {
+        self.local.load(Ordering::SeqCst) >> 1
+    }
+}
+
+static GLOBAL_EPOCH: AtomicU64 = AtomicU64::new(2);
+static REGISTRY: AtomicPtr<Participant> = AtomicPtr::new(std::ptr::null_mut());
+static PENDING: AtomicUsize = AtomicUsize::new(0);
+static FREED: AtomicUsize = AtomicUsize::new(0);
+static ADVANCES: AtomicU64 = AtomicU64::new(0);
+
+pub(super) fn global_epoch(order: Ordering) -> u64 {
+    GLOBAL_EPOCH.load(order)
+}
+
+/// Acquire a participant record for the current thread: recycle a dead one
+/// or allocate + CAS-push a fresh record. Lock-free.
+pub(super) fn register() -> &'static Participant {
+    // Try to adopt an abandoned record first.
+    let mut cur = REGISTRY.load(Ordering::Acquire);
+    while !cur.is_null() {
+        let p = unsafe { &*cur };
+        if !p.owned.load(Ordering::Acquire)
+            && p.owned
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+        {
+            return p;
+        }
+        cur = p.next.load(Ordering::Acquire);
+    }
+    // Allocate a new record and push it onto the registry head.
+    let rec = Box::into_raw(Box::new(Participant::new()));
+    let mut head = REGISTRY.load(Ordering::Acquire);
+    loop {
+        unsafe { (*rec).next.store(head, Ordering::Relaxed) };
+        match REGISTRY.compare_exchange_weak(head, rec, Ordering::AcqRel, Ordering::Acquire) {
+            Ok(_) => return unsafe { &*rec },
+            Err(h) => head = h,
+        }
+    }
+}
+
+/// Release the current thread's record so a future thread can adopt it.
+/// Outstanding garbage stays in its bags and is reclaimed by whoever adopts
+/// the record (or by `flush` calls from other threads via epoch advance —
+/// bags are only drained by their owner, so adoption is the mechanism).
+pub(super) fn unregister(p: &'static Participant) {
+    p.unpin();
+    p.owned.store(false, Ordering::Release);
+}
+
+/// Record garbage retired at `epoch` in the participant's bag.
+pub(super) fn retire(p: &Participant, epoch: u64, f: Box<dyn FnOnce() + Send>) {
+    p.bags[(epoch % 3) as usize].lock().unwrap().push((epoch, f));
+    PENDING.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Free every closure in `p`'s bags that was retired two or more epochs ago.
+pub(super) fn collect(p: &Participant) {
+    let global = GLOBAL_EPOCH.load(Ordering::SeqCst);
+    for bag in &p.bags {
+        let ready: Vec<_> = {
+            let mut g = bag.lock().unwrap();
+            if g.is_empty() || g[0].0 + 2 > global {
+                continue;
+            }
+            std::mem::take(&mut *g)
+        };
+        let mut keep = Vec::new();
+        for (e, f) in ready {
+            if e + 2 <= global {
+                f();
+                FREED.fetch_add(1, Ordering::Relaxed);
+                PENDING.fetch_sub(1, Ordering::Relaxed);
+            } else {
+                keep.push((e, f));
+            }
+        }
+        if !keep.is_empty() {
+            bag.lock().unwrap().extend(keep);
+        }
+    }
+}
+
+/// Try to advance the global epoch: succeeds iff every *pinned* participant
+/// has observed the current epoch. Lock-free: a failure means someone else
+/// advanced or a reader is still on the previous epoch.
+pub fn try_advance() -> bool {
+    let global = GLOBAL_EPOCH.load(Ordering::SeqCst);
+    let mut cur = REGISTRY.load(Ordering::Acquire);
+    while !cur.is_null() {
+        let p = unsafe { &*cur };
+        let local = p.local.load(Ordering::SeqCst);
+        if local & ACTIVE != 0 && (local >> 1) != global {
+            return false; // a reader still runs in the previous epoch
+        }
+        cur = p.next.load(Ordering::Acquire);
+    }
+    let ok = GLOBAL_EPOCH
+        .compare_exchange(global, global + 1, Ordering::SeqCst, Ordering::SeqCst)
+        .is_ok();
+    if ok {
+        ADVANCES.fetch_add(1, Ordering::Relaxed);
+    }
+    ok
+}
+
+/// Snapshot of collector counters (tests, metrics endpoint).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CollectorStats {
+    pub epoch: u64,
+    pub pending: usize,
+    pub freed: usize,
+    pub advances: u64,
+    pub participants: usize,
+}
+
+pub fn collector_stats() -> CollectorStats {
+    let mut participants = 0;
+    let mut cur = REGISTRY.load(Ordering::Acquire);
+    while !cur.is_null() {
+        participants += 1;
+        cur = unsafe { &*cur }.next.load(Ordering::Acquire);
+    }
+    CollectorStats {
+        epoch: GLOBAL_EPOCH.load(Ordering::SeqCst),
+        pending: PENDING.load(Ordering::Relaxed),
+        freed: FREED.load(Ordering::Relaxed),
+        advances: ADVANCES.load(Ordering::Relaxed),
+        participants,
+    }
+}
+
+/// Walk every registry record and collect ready garbage (used by
+/// `synchronize`/`drain` so orphaned bags of dead threads still get freed).
+pub(super) fn collect_all() {
+    let mut cur = REGISTRY.load(Ordering::Acquire);
+    while !cur.is_null() {
+        let p = unsafe { &*cur };
+        collect(p);
+        cur = p.next.load(Ordering::Acquire);
+    }
+}

@@ -1,0 +1,140 @@
+//! Thread-local handles and read-side critical-section guards.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::Ordering;
+
+use super::collector::{self, Participant};
+
+/// How many pins between housekeeping attempts (epoch advance + collect).
+const PIN_HOUSEKEEP_MASK: u64 = 0x7f;
+/// How many defers before forcing housekeeping regardless of pin count.
+const DEFER_HOUSEKEEP: u64 = 32;
+
+struct LocalHandle {
+    participant: Cell<Option<&'static Participant>>,
+    depth: Cell<u32>,
+    pins: Cell<u64>,
+    defers: Cell<u64>,
+}
+
+impl LocalHandle {
+    fn participant(&self) -> &'static Participant {
+        match self.participant.get() {
+            Some(p) => p,
+            None => {
+                let p = collector::register();
+                self.participant.set(Some(p));
+                p
+            }
+        }
+    }
+}
+
+impl Drop for LocalHandle {
+    fn drop(&mut self) {
+        if let Some(p) = self.participant.get() {
+            collector::unregister(p);
+        }
+    }
+}
+
+thread_local! {
+    static HANDLE: LocalHandle = LocalHandle {
+        participant: Cell::new(None),
+        depth: Cell::new(0),
+        pins: Cell::new(0),
+        defers: Cell::new(0),
+    };
+    /// Deferred closures captured while this thread had no participant yet
+    /// (never in practice; kept for drop-order robustness during TLS
+    /// destruction).
+    static FALLBACK: RefCell<Vec<Box<dyn FnOnce() + Send>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A read-side critical section. While any `Guard` is alive on a thread, no
+/// grace period that started after the outermost `pin()` can complete, so
+/// every pointer loaded from an RCU-protected structure stays valid.
+///
+/// Guards nest; only the outermost pin/unpin touches shared state.
+/// `!Send` by construction (raw pointer field).
+pub struct Guard {
+    participant: &'static Participant,
+    _not_send: std::marker::PhantomData<*mut ()>,
+}
+
+/// Enter a read-side critical section. Wait-free.
+pub fn pin() -> Guard {
+    HANDLE.with(|h| {
+        let p = h.participant();
+        let depth = h.depth.get();
+        h.depth.set(depth + 1);
+        if depth == 0 {
+            let global = collector::global_epoch(Ordering::SeqCst);
+            p.pin(global);
+            let pins = h.pins.get().wrapping_add(1);
+            h.pins.set(pins);
+            if pins & PIN_HOUSEKEEP_MASK == 0 {
+                collector::try_advance();
+                collector::collect(p);
+            }
+        } else {
+            // Nested pin: already published. Refresh the observed epoch so
+            // long-running outer sections don't stall advancement forever.
+            // (Safe: refreshing can only move our observed epoch forward.)
+            let global = collector::global_epoch(Ordering::SeqCst);
+            if p.observed_epoch() != global {
+                p.repin(global);
+            }
+        }
+        Guard { participant: p, _not_send: std::marker::PhantomData }
+    })
+}
+
+impl Guard {
+    pub(super) fn defer<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let epoch = collector::global_epoch(Ordering::SeqCst);
+        collector::retire(self.participant, epoch, Box::new(f));
+        HANDLE.with(|h| {
+            let d = h.defers.get() + 1;
+            h.defers.set(d);
+            if d % DEFER_HOUSEKEEP == 0 {
+                collector::try_advance();
+            }
+        });
+    }
+
+    /// Momentarily exit and re-enter the critical section so grace periods
+    /// can complete across long scans. Any pointer loaded before `repin` is
+    /// invalid afterwards. No-op when the guard is nested.
+    pub fn repin(&mut self) {
+        HANDLE.with(|h| {
+            if h.depth.get() == 1 {
+                self.participant.unpin();
+                let global = collector::global_epoch(Ordering::SeqCst);
+                self.participant.pin(global);
+            }
+        });
+    }
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        HANDLE.with(|h| {
+            let depth = h.depth.get();
+            h.depth.set(depth - 1);
+            if depth == 1 {
+                self.participant.unpin();
+            }
+        });
+    }
+}
+
+/// True if the current thread currently holds at least one `Guard`.
+pub(super) fn current_thread_pinned() -> bool {
+    HANDLE.with(|h| h.depth.get() > 0)
+}
+
+/// Collect ready garbage from every participant (called by synchronize).
+pub(super) fn flush_current_thread() {
+    collector::collect_all();
+}

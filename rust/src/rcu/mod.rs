@@ -1,0 +1,91 @@
+//! Epoch-based read-copy-update (RCU) — the reclamation substrate of MCPrioQ.
+//!
+//! The paper (§II.1) requires that the src/dst hash-tables and the
+//! priority-queue doubly-linked list share *one* grace period, exactly like
+//! userspace RCU (McKenney & Slingwine [2]). No third-party EBR crate is
+//! available offline, so this module implements the classic three-epoch
+//! scheme from scratch:
+//!
+//! * A global epoch counter cycles through `0, 1, 2, …` (only `e mod 3`
+//!   matters for garbage bags).
+//! * Every thread that enters a read-side critical section *pins* itself:
+//!   it publishes the global epoch it observed plus an ACTIVE bit, with a
+//!   full fence so writers cannot miss it.
+//! * Garbage retired at epoch `e` may be freed once the global epoch has
+//!   advanced to `e + 2`: at that point every pinned reader has observed at
+//!   least epoch `e + 1`, so none can still hold a reference obtained at
+//!   epoch `e`.
+//! * [`synchronize`] spins until two epoch advances complete — the drop-in
+//!   equivalent of `synchronize_rcu()`.
+//!
+//! Progress properties: `pin`/`unpin` are wait-free; `defer` is wait-free in
+//! the common case (local bag push) and epoch advancement is lock-free
+//! (a stalled reader merely delays reclamation, never blocks readers or
+//! writers).
+//!
+//! The collector is process-global (like kernel/liburcu RCU): every
+//! `McPrioQ` instance, hash table and list shares it, which is precisely the
+//! shared-grace-period property §II.1 asks for.
+
+mod collector;
+mod guard;
+
+pub use collector::{collector_stats, try_advance, CollectorStats};
+pub use guard::{pin, Guard};
+
+use std::sync::atomic::Ordering;
+
+/// Retire a raw pointer allocated with `Box::into_raw`. The pointed-to value
+/// is dropped and freed after a full grace period has elapsed.
+///
+/// # Safety
+/// `ptr` must have been produced by `Box::into_raw`, must not be retired
+/// twice, and no new references to it may be created after this call
+/// (readers that already hold it inside a read-side critical section are
+/// exactly what the grace period protects).
+pub unsafe fn defer_free<T: Send + 'static>(guard: &Guard, ptr: *mut T) {
+    let ptr = ptr as usize;
+    guard.defer(move || {
+        drop(Box::from_raw(ptr as *mut T));
+    });
+}
+
+/// Retire an arbitrary closure to run after a grace period.
+pub fn defer<F: FnOnce() + Send + 'static>(guard: &Guard, f: F) {
+    guard.defer(f);
+}
+
+/// Block until a full grace period has elapsed: every read-side critical
+/// section that was active when `synchronize` was called has ended.
+/// Equivalent to `synchronize_rcu()`.
+///
+/// Must NOT be called while the calling thread holds a [`Guard`] (it would
+/// deadlock on itself); debug builds assert this.
+pub fn synchronize() {
+    debug_assert!(!guard::current_thread_pinned(), "synchronize() inside read-side critical section");
+    // Two successful epoch advances guarantee that every reader pinned
+    // before the call has unpinned at least once.
+    let start = collector::global_epoch(Ordering::SeqCst);
+    while collector::global_epoch(Ordering::SeqCst) < start + 2 {
+        collector::try_advance();
+        std::hint::spin_loop();
+    }
+    // Give reclamation a nudge so callers that synchronize-then-inspect see
+    // freed garbage actually freed.
+    guard::flush_current_thread();
+}
+
+/// Drive epoch advancement and reclamation until all currently-retired
+/// garbage has been freed (test/shutdown helper; not part of the hot path).
+pub fn drain() {
+    for _ in 0..64 {
+        synchronize();
+        guard::flush_current_thread();
+        if collector_stats().pending == 0 {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,258 @@
+//! The dense-matrix markov chain running on XLA — experiment E6's
+//! comparator and the end of the three-layer pipeline
+//! (Pallas kernel → JAX model → AOT HLO → this).
+
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::loader::{ArtifactKind, BufferBox, ExeHandle, XlaRuntime};
+use crate::baselines::MarkovModel;
+use crate::chain::Recommendation;
+
+/// Dense engine state: the `n x n` counts matrix as a live PJRT buffer.
+///
+/// Serialized behind a mutex: the dense buffer is a single functional value
+/// that each update/decay replaces, so operations are inherently
+/// one-at-a-time — exactly the contrast with MCPrioQ's concurrent updates
+/// that E1/E6 measure.
+struct DenseState {
+    counts: BufferBox,
+    /// Buffered (src, dst) observations awaiting a batched scatter.
+    pending: Vec<(i32, i32)>,
+    /// Live (nonzero-count) edges, tracked host-side for `edge_count`.
+    edges_hint: std::collections::HashSet<(i32, i32)>,
+}
+
+pub struct DenseXlaChain {
+    rt: Arc<XlaRuntime>,
+    n: usize,
+    b: usize,
+    k: usize,
+    infer_exe: ExeHandle,
+    update_exe: ExeHandle,
+    decay_exe: ExeHandle,
+    state: Mutex<DenseState>,
+}
+
+impl DenseXlaChain {
+    /// Build a dense chain with capacity for `nodes` node ids (picks the
+    /// smallest compiled variant that fits; one id is reserved for batch
+    /// padding, see `usable_capacity`).
+    pub fn new(rt: Arc<XlaRuntime>, nodes: usize) -> Result<Self> {
+        let n = rt
+            .manifest()
+            .variant_for(nodes + 1)
+            .with_context(|| format!("no dense artifact fits {nodes} nodes"))?;
+        let infer_meta = rt.manifest().entry(ArtifactKind::Infer, n).unwrap().clone();
+        let infer_exe = rt.executable(ArtifactKind::Infer, n)?;
+        let update_exe = rt.executable(ArtifactKind::Update, n)?;
+        let decay_exe = rt.executable(ArtifactKind::Decay, n)?;
+        let zeros = vec![0f32; n * n];
+        let counts = rt.upload_f32(&zeros, &[n, n]).context("allocating dense counts")?;
+        Ok(DenseXlaChain {
+            rt,
+            n,
+            b: infer_meta.b,
+            k: infer_meta.k,
+            infer_exe,
+            update_exe,
+            decay_exe,
+            state: Mutex::new(DenseState {
+                counts,
+                pending: Vec::new(),
+                edges_hint: std::collections::HashSet::new(),
+            }),
+        })
+    }
+
+    /// Compiled matrix dimension.
+    pub fn capacity(&self) -> usize {
+        self.n
+    }
+
+    /// Highest usable node id + 1 (the last id is the padding cell).
+    pub fn usable_capacity(&self) -> usize {
+        self.n - 1
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.b
+    }
+
+    /// Maximum items per inference answer (fixed at AOT-compile time — a
+    /// genuine constraint of fixed-shape accelerators, reported in E6).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Bytes resident in the dense representation (the E6 memory column).
+    pub fn resident_bytes(&self) -> usize {
+        self.n * self.n * std::mem::size_of::<f32>()
+    }
+
+    /// Fallible observe (the `MarkovModel` impl panics on failure; prefer
+    /// this in library code).
+    pub fn try_observe(&self, src: u64, dst: u64) -> Result<()> {
+        if src as usize >= self.usable_capacity() || dst as usize >= self.usable_capacity() {
+            bail!("node id out of dense capacity {}", self.usable_capacity());
+        }
+        let mut state = self.state.lock().unwrap();
+        state.pending.push((src as i32, dst as i32));
+        state.edges_hint.insert((src as i32, dst as i32));
+        if state.pending.len() >= self.b {
+            self.flush_locked(&mut state)?;
+        }
+        Ok(())
+    }
+
+    /// Flush pending observations through the scatter-add executable.
+    /// Caller holds the state lock.
+    fn flush_locked(&self, state: &mut DenseState) -> Result<()> {
+        while !state.pending.is_empty() {
+            let take = state.pending.len().min(self.b);
+            let mut srcs: Vec<i32> = state.pending[..take].iter().map(|&(s, _)| s).collect();
+            let mut dsts: Vec<i32> = state.pending[..take].iter().map(|&(_, d)| d).collect();
+            state.pending.drain(..take);
+            // Short batches pad into the parked cell (n-1, n-1): id n-1 is
+            // reserved, so parked mass can never leak into a query row.
+            while srcs.len() < self.b {
+                srcs.push((self.n - 1) as i32);
+                dsts.push((self.n - 1) as i32);
+            }
+            let src_buf = self.rt.upload_i32(&srcs, &[self.b])?;
+            let dst_buf = self.rt.upload_i32(&dsts, &[self.b])?;
+            let new_counts =
+                self.rt.execute(self.update_exe, &[&state.counts, &src_buf, &dst_buf])?;
+            self.rt.drop_buffer(src_buf);
+            self.rt.drop_buffer(dst_buf);
+            let old = std::mem::replace(&mut state.counts, new_counts);
+            self.rt.drop_buffer(old);
+        }
+        Ok(())
+    }
+
+    fn infer(&self, src: u64, mode: InferMode) -> Result<Recommendation> {
+        let empty = Recommendation { items: vec![], cumulative: 0.0, scanned: 0, total: 0 };
+        if src as usize >= self.usable_capacity() {
+            return Ok(empty);
+        }
+        let mut state = self.state.lock().unwrap();
+        self.flush_locked(&mut state)?;
+        let queries = vec![src as i32; self.b];
+        let qbuf = self.rt.upload_i32(&queries, &[self.b])?;
+        let out = self.rt.execute(self.infer_exe, &[&state.counts, &qbuf])?;
+        self.rt.drop_buffer(qbuf);
+        let tuple = self.rt.download(&out)?;
+        self.rt.drop_buffer(out);
+        drop(state);
+
+        let (ids_l, probs_l, cum_l, totals_l) = tuple.to_tuple4()?;
+        let ids = ids_l.to_vec::<i32>()?;
+        let probs = probs_l.to_vec::<f32>()?;
+        let cums = cum_l.to_vec::<f32>()?;
+        let total = totals_l.to_vec::<f32>()?[0] as u64;
+
+        // Row 0 of the batch is our query (all rows identical).
+        let mut items = Vec::new();
+        let mut cumulative = 0.0f64;
+        let mut scanned = 0usize;
+        for i in 0..self.k {
+            let p = probs[i] as f64;
+            if p <= 0.0 {
+                break; // ran out of live edges
+            }
+            scanned += 1;
+            items.push((ids[i] as u64, p));
+            cumulative = cums[i] as f64;
+            match mode {
+                InferMode::Threshold(t) => {
+                    if cumulative >= t {
+                        break;
+                    }
+                }
+                InferMode::TopK(k) => {
+                    if items.len() >= k {
+                        break;
+                    }
+                }
+            }
+        }
+        if matches!(mode, InferMode::Threshold(t) if t <= 0.0) {
+            items.clear();
+            cumulative = 0.0;
+            scanned = 0;
+        }
+        Ok(Recommendation { items, cumulative, scanned, total })
+    }
+
+    fn decay_impl(&self) -> Result<(u64, usize)> {
+        let mut state = self.state.lock().unwrap();
+        self.flush_locked(&mut state)?;
+        let new_counts = self.rt.execute(self.decay_exe, &[&state.counts])?;
+        let old = std::mem::replace(&mut state.counts, new_counts);
+        self.rt.drop_buffer(old);
+        // Dense decay reports surviving mass by reading the matrix back
+        // (maintenance path only; the O(n²) readback is part of the dense
+        // engine's honest cost profile, recorded in E6).
+        let lit = self.rt.download(&state.counts)?;
+        let host = lit.to_vec::<f32>()?;
+        let park = (self.n - 1) * self.n + (self.n - 1);
+        let total: f64 =
+            host.iter().enumerate().filter(|&(i, _)| i != park).map(|(_, &x)| x as f64).sum();
+        let before = state.edges_hint.len();
+        let n = self.n;
+        state.edges_hint.retain(|&(s, d)| host[s as usize * n + d as usize] > 0.0);
+        let pruned = before - state.edges_hint.len();
+        Ok((total as u64, pruned))
+    }
+}
+
+#[derive(Clone, Copy)]
+enum InferMode {
+    Threshold(f64),
+    TopK(usize),
+}
+
+impl MarkovModel for DenseXlaChain {
+    fn name(&self) -> &'static str {
+        "dense-xla"
+    }
+
+    fn observe(&self, src: u64, dst: u64) {
+        self.try_observe(src, dst).expect("dense observe failed");
+    }
+
+    fn infer_threshold(&self, src: u64, threshold: f64) -> Recommendation {
+        self.infer(src, InferMode::Threshold(threshold.clamp(0.0, 1.0)))
+            .expect("dense inference failed")
+    }
+
+    fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        if k == 0 {
+            return Recommendation { items: vec![], cumulative: 0.0, scanned: 0, total: 0 };
+        }
+        self.infer(src, InferMode::TopK(k)).expect("dense inference failed")
+    }
+
+    fn decay(&self) -> (u64, usize) {
+        self.decay_impl().expect("dense decay failed")
+    }
+
+    fn edge_count(&self) -> usize {
+        self.state.lock().unwrap().edges_hint.len()
+    }
+}
+
+impl Drop for DenseXlaChain {
+    fn drop(&mut self) {
+        // Free the live counts buffer inside the confinement lock.
+        let state = self.state.get_mut().unwrap();
+        let counts = std::mem::replace(
+            &mut state.counts,
+            BufferBox::poisoned(),
+        );
+        self.rt.drop_buffer(counts);
+    }
+}

@@ -1,0 +1,259 @@
+//! Artifact manifest parsing and HLO compilation.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// The three entry points the AOT pipeline emits per size variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Infer,
+    Update,
+    Decay,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "infer" => ArtifactKind::Infer,
+            "update" => ArtifactKind::Update,
+            "decay" => ArtifactKind::Decay,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One manifest line: `kind n b k filename`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    /// Dense node capacity (matrix is n x n).
+    pub n: usize,
+    /// Batch size (0 where not applicable).
+    pub b: usize,
+    /// Top-k items (0 where not applicable).
+    pub k: usize,
+    pub file: String,
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {}: expected 5 fields, got {}", i + 1, parts.len());
+            }
+            entries.push(ArtifactMeta {
+                kind: ArtifactKind::parse(parts[0])?,
+                n: parts[1].parse().context("n")?,
+                b: parts[2].parse().context("b")?,
+                k: parts[3].parse().context("k")?,
+                file: parts[4].to_string(),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest is empty");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Dense capacities available, ascending.
+    pub fn capacities(&self) -> Vec<usize> {
+        let mut ns: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Infer)
+            .map(|e| e.n)
+            .collect();
+        ns.sort_unstable();
+        ns.dedup();
+        ns
+    }
+
+    /// Smallest variant with capacity >= `nodes`.
+    pub fn variant_for(&self, nodes: usize) -> Option<usize> {
+        self.capacities().into_iter().find(|&n| n >= nodes)
+    }
+
+    pub fn entry(&self, kind: ArtifactKind, n: usize) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.kind == kind && e.n == n)
+    }
+}
+
+/// An opaque handle to a compiled executable in the runtime's cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExeHandle(usize);
+
+/// A PJRT client plus a cache of compiled executables.
+///
+/// # Thread safety
+/// The published `xla` crate's wrapper types are `!Send`/`!Sync` because
+/// they hold an internal `Rc` to the client, even though the underlying
+/// PJRT C++ client is itself thread-safe. `XlaRuntime` restores soundness
+/// by *confining every wrapper call* — compiles, host↔device transfers,
+/// executions, buffer drops — behind one `Mutex`, so the `Rc` reference
+/// count is never touched by two threads at once. All public methods take
+/// the lock internally; buffers never escape (callers hold `ExeHandle`s
+/// and pass/receive host vectors or locked buffer slots).
+pub struct XlaRuntime {
+    inner: Mutex<Inner>,
+    manifest: Manifest,
+    platform: String,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    exes: Vec<xla::PjRtLoadedExecutable>,
+    by_file: HashMap<String, ExeHandle>,
+}
+
+// SAFETY: all xla wrapper objects (and their internal Rc) are only ever
+// touched while holding `inner`'s mutex; see the struct docs.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+use std::sync::Mutex;
+
+/// A device buffer slot owned by the runtime's confinement domain. Obtain
+/// via [`XlaRuntime::upload_f32`]; pass back to `execute_*`. The slot is
+/// just an index into the caller's own storage — the runtime hands out the
+/// actual buffer objects inside [`BufferBox`] so drops also serialize.
+pub struct BufferBox {
+    buf: Option<xla::PjRtBuffer>,
+}
+
+impl BufferBox {
+    fn new(buf: xla::PjRtBuffer) -> Self {
+        BufferBox { buf: Some(buf) }
+    }
+
+    /// An empty placeholder (used when tearing a live buffer out of a
+    /// struct during Drop).
+    pub fn poisoned() -> Self {
+        BufferBox { buf: None }
+    }
+
+    fn get(&self) -> &xla::PjRtBuffer {
+        self.buf.as_ref().expect("buffer already taken")
+    }
+}
+
+// SAFETY: a BufferBox is only created/used/freed through XlaRuntime
+// methods which hold the runtime mutex. A BufferBox dropped *outside*
+// `XlaRuntime::drop_buffer` leaks its device memory instead of touching
+// the client's Rc from an unlocked context (see `impl Drop`), so no code
+// path can race the reference count.
+unsafe impl Send for BufferBox {}
+unsafe impl Sync for BufferBox {}
+
+impl Drop for BufferBox {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            // Deliberate leak: freeing would decrement the client Rc outside
+            // the confinement lock. Disciplined callers (DenseXlaChain) free
+            // via XlaRuntime::drop_buffer; this path exists only for early
+            // returns on error paths, where a small leak beats UB.
+            std::mem::forget(buf);
+        }
+    }
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let platform = client.platform_name();
+        Ok(XlaRuntime {
+            inner: Mutex::new(Inner { client, exes: Vec::new(), by_file: HashMap::new() }),
+            manifest,
+            platform,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.platform.clone()
+    }
+
+    /// Compile (or fetch the cached) executable for `kind` at capacity `n`.
+    pub fn executable(&self, kind: ArtifactKind, n: usize) -> Result<ExeHandle> {
+        let meta = self
+            .manifest
+            .entry(kind, n)
+            .with_context(|| format!("no artifact for {kind:?} n={n}"))?
+            .clone();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(&h) = inner.by_file.get(&meta.file) {
+            return Ok(h);
+        }
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            inner.client.compile(&comp).with_context(|| format!("compiling {}", meta.file))?;
+        inner.exes.push(exe);
+        let h = ExeHandle(inner.exes.len() - 1);
+        inner.by_file.insert(meta.file, h);
+        Ok(h)
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<BufferBox> {
+        let inner = self.inner.lock().unwrap();
+        Ok(BufferBox::new(inner.client.buffer_from_host_buffer(data, dims, None)?))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<BufferBox> {
+        let inner = self.inner.lock().unwrap();
+        Ok(BufferBox::new(inner.client.buffer_from_host_buffer(data, dims, None)?))
+    }
+
+    /// Execute with buffer arguments; returns the single output buffer
+    /// (array or tuple, per the artifact's lowering).
+    pub fn execute(&self, exe: ExeHandle, args: &[&BufferBox]) -> Result<BufferBox> {
+        let inner = self.inner.lock().unwrap();
+        let bufs: Vec<&xla::PjRtBuffer> = args.iter().map(|b| b.get()).collect();
+        let mut out = inner.exes[exe.0].execute_b(&bufs)?;
+        if out.len() != 1 || out[0].len() != 1 {
+            bail!("unexpected output arity {}x{}", out.len(), out.first().map_or(0, |v| v.len()));
+        }
+        Ok(BufferBox::new(out.remove(0).remove(0)))
+    }
+
+    /// Download a buffer as a (possibly tuple) literal, flattened into
+    /// per-leaf f32/i32 vectors by the caller via [`Self::literal_parts`].
+    pub fn download(&self, buf: &BufferBox) -> Result<xla::Literal> {
+        let _inner = self.inner.lock().unwrap();
+        Ok(buf.get().to_literal_sync()?)
+    }
+
+    /// Drop a buffer inside the confinement domain.
+    pub fn drop_buffer(&self, mut buf: BufferBox) {
+        let _inner = self.inner.lock().unwrap();
+        buf.buf.take();
+    }
+}

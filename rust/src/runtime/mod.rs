@@ -1,0 +1,34 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them from rust. Python never runs at serving time.
+//!
+//! Pattern (see /opt/xla-example/load_hlo/): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`/`execute_b`. Text is the interchange
+//! format because jax ≥ 0.5 serialized protos use 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects.
+//!
+//! [`DenseXlaChain`] is the dense-matrix comparator of experiment E6: the
+//! full counts matrix lives as a PJRT device buffer; updates, decay and
+//! inference are each one executable call. The update/decay artifacts are
+//! lowered *untupled*, so their output buffer is fed straight back as the
+//! next call's input — the dense state never round-trips through the host
+//! on the update path.
+
+mod dense;
+mod loader;
+
+pub use dense::DenseXlaChain;
+pub use loader::{ArtifactKind, ArtifactMeta, BufferBox, ExeHandle, Manifest, XlaRuntime};
+
+/// Resolve the artifacts directory: `$MCPRIOQ_ARTIFACTS` or `./artifacts`
+/// (relative to the workspace root, where `make artifacts` puts them).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("MCPRIOQ_ARTIFACTS") {
+        Ok(p) => p.into(),
+        Err(_) => "artifacts".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,189 @@
+//! Runtime tests: manifest parsing (always) and end-to-end PJRT execution
+//! (when `artifacts/` exists — `make artifacts` builds it; tests that need
+//! it are skipped gracefully otherwise so `cargo test` works standalone).
+
+use super::*;
+use crate::baselines::MarkovModel;
+use std::path::Path;
+use std::sync::Arc;
+
+#[test]
+fn manifest_parses_and_indexes() {
+    let text = "\
+infer 64 8 8 dense_infer_n64_b8_k8.hlo.txt
+update 64 8 0 dense_update_n64_b8.hlo.txt
+decay 64 0 0 dense_decay_n64.hlo.txt
+infer 256 8 16 dense_infer_n256_b8_k16.hlo.txt
+update 256 8 0 dense_update_n256_b8.hlo.txt
+decay 256 0 0 dense_decay_n256.hlo.txt
+";
+    let m = Manifest::parse(Path::new("/nonexistent"), text).unwrap();
+    assert_eq!(m.entries.len(), 6);
+    assert_eq!(m.capacities(), vec![64, 256]);
+    assert_eq!(m.variant_for(10), Some(64));
+    assert_eq!(m.variant_for(64), Some(64));
+    assert_eq!(m.variant_for(65), Some(256));
+    assert_eq!(m.variant_for(9999), None);
+    let e = m.entry(ArtifactKind::Infer, 256).unwrap();
+    assert_eq!(e.k, 16);
+    assert_eq!(e.b, 8);
+}
+
+#[test]
+fn manifest_rejects_garbage() {
+    assert!(Manifest::parse(Path::new("/x"), "").is_err());
+    assert!(Manifest::parse(Path::new("/x"), "infer 64 8\n").is_err());
+    assert!(Manifest::parse(Path::new("/x"), "bogus 64 8 8 f.hlo.txt\n").is_err());
+    assert!(Manifest::parse(Path::new("/x"), "infer x 8 8 f.hlo.txt\n").is_err());
+}
+
+fn runtime() -> Option<Arc<XlaRuntime>> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping PJRT test: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(XlaRuntime::new(&dir).expect("runtime")))
+}
+
+#[test]
+fn pjrt_client_comes_up() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+    assert!(!rt.manifest().capacities().is_empty());
+}
+
+#[test]
+fn executables_compile_and_cache() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest().capacities()[0];
+    let a = rt.executable(ArtifactKind::Infer, n).unwrap();
+    let b = rt.executable(ArtifactKind::Infer, n).unwrap();
+    assert_eq!(a, b, "executable cache miss on second fetch");
+    assert!(rt.executable(ArtifactKind::Infer, 7777).is_err());
+}
+
+#[test]
+fn dense_observe_infer_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let dense = DenseXlaChain::new(rt, 32).unwrap();
+    assert_eq!(dense.capacity(), 64);
+    // 1 -> 5 x3, 1 -> 9 x2, 1 -> 3 x1.
+    for _ in 0..3 {
+        dense.observe(1, 5);
+    }
+    for _ in 0..2 {
+        dense.observe(1, 9);
+    }
+    dense.observe(1, 3);
+    let r = dense.infer_topk(1, 3);
+    assert_eq!(r.total, 6);
+    assert_eq!(r.items.len(), 3);
+    assert_eq!(r.items[0].0, 5);
+    assert!((r.items[0].1 - 0.5).abs() < 1e-6);
+    assert_eq!(r.items[1].0, 9);
+    assert_eq!(r.items[2].0, 3);
+    assert!((r.cumulative - 1.0).abs() < 1e-6);
+
+    let r = dense.infer_threshold(1, 0.5);
+    assert_eq!(r.items.len(), 1);
+    let r = dense.infer_threshold(1, 0.75);
+    assert_eq!(r.items.len(), 2);
+}
+
+#[test]
+fn dense_unknown_and_out_of_range() {
+    let Some(rt) = runtime() else { return };
+    let dense = DenseXlaChain::new(rt, 16).unwrap();
+    let r = dense.infer_topk(2, 4);
+    assert!(r.items.is_empty());
+    assert_eq!(r.total, 0);
+    // Out of compiled capacity: error, not panic.
+    assert!(dense.try_observe(9999, 1).is_err());
+    assert!(dense.try_observe(1, dense.usable_capacity() as u64).is_err());
+    let r = dense.infer_topk(9999, 4);
+    assert!(r.items.is_empty());
+}
+
+#[test]
+fn dense_decay_halves_and_prunes() {
+    let Some(rt) = runtime() else { return };
+    let dense = DenseXlaChain::new(rt, 32).unwrap();
+    for _ in 0..4 {
+        dense.observe(2, 7);
+    }
+    dense.observe(2, 8); // count 1: dies on first decay
+    assert_eq!(dense.edge_count(), 2);
+    let (total, pruned) = dense.decay();
+    assert_eq!(total, 2); // floor(4/2) + floor(1/2)
+    assert_eq!(pruned, 1);
+    assert_eq!(dense.edge_count(), 1);
+    let r = dense.infer_topk(2, 4);
+    assert_eq!(r.items.len(), 1);
+    assert_eq!(r.items[0].0, 7);
+}
+
+/// Differential vs MCPrioQ: identical deterministic workload, identical
+/// answers (the three-layer dense path against the rust sparse path).
+#[test]
+fn dense_agrees_with_mcprioq() {
+    let Some(rt) = runtime() else { return };
+    let dense = DenseXlaChain::new(rt, 63).unwrap();
+    let sparse = crate::chain::McPrioQ::new(crate::chain::ChainConfig::default());
+    let mut rng = crate::testutil::Rng64::new(0xE6);
+    for _ in 0..2_000 {
+        let src = rng.next_below(8);
+        let u = rng.next_f64();
+        let dst = 8 + ((u * u) * 40.0) as u64;
+        dense.observe(src, dst);
+        sparse.observe(src, dst);
+    }
+    for src in 0..8u64 {
+        let a = sparse.infer_topk(src, 8);
+        let b = dense.infer_topk(src, 8);
+        assert_eq!(a.total, b.total, "src {src}");
+        assert_eq!(a.items.len(), b.items.len(), "src {src}");
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert!((x.1 - y.1).abs() < 1e-5, "src {src}: {:?} vs {:?}", a.items, b.items);
+        }
+        for t in [0.3, 0.9] {
+            let a = sparse.infer_threshold(src, t);
+            let b = dense.infer_threshold(src, t);
+            if a.items.len() <= dense.k() {
+                assert_eq!(a.items.len(), b.items.len(), "src {src} t {t}");
+                assert!((a.cumulative - b.cumulative).abs() < 1e-5, "src {src} t {t}");
+            } else {
+                // Fixed-shape constraint: the compiled artifact can return
+                // at most k items; the answer truncates below t.
+                assert_eq!(b.items.len(), dense.k(), "src {src} t {t}");
+                assert!(b.cumulative < t, "src {src} t {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_partial_batch_flush_is_correct() {
+    let Some(rt) = runtime() else { return };
+    let dense = DenseXlaChain::new(rt, 16).unwrap();
+    // A single observation (batch of 1, padded with 7 parked writes).
+    dense.observe(0, 1);
+    let r = dense.infer_topk(0, 4);
+    assert_eq!(r.total, 1);
+    assert_eq!(r.items, vec![(1, 1.0)]);
+    // Parked cell must not pollute any usable row.
+    for src in 0..dense.usable_capacity() as u64 {
+        if src != 0 {
+            assert!(dense.infer_topk(src, 4).items.is_empty(), "src {src} polluted");
+        }
+    }
+}
+
+#[test]
+fn dense_resident_bytes_quadratic() {
+    let Some(rt) = runtime() else { return };
+    let small = DenseXlaChain::new(rt.clone(), 16).unwrap();
+    let big = DenseXlaChain::new(rt, 200).unwrap();
+    assert_eq!(small.resident_bytes(), 64 * 64 * 4);
+    assert_eq!(big.resident_bytes(), 256 * 256 * 4);
+}

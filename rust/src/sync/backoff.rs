@@ -1,0 +1,73 @@
+//! Exponential backoff for CAS retry loops (crossbeam-style).
+
+use std::hint;
+
+const SPIN_LIMIT: u32 = 6;
+const YIELD_LIMIT: u32 = 10;
+
+/// Exponential backoff: spin a few rounds, then start yielding the CPU.
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    pub fn new() -> Self {
+        Backoff { step: 0 }
+    }
+
+    /// Back off after a failed CAS in a lock-free loop (spin only).
+    pub fn spin(&mut self) {
+        for _ in 0..1u32 << self.step.min(SPIN_LIMIT) {
+            hint::spin_loop();
+        }
+        if self.step <= SPIN_LIMIT {
+            self.step += 1;
+        }
+    }
+
+    /// Back off while waiting for another thread to make progress
+    /// (spin, then yield to the scheduler).
+    pub fn snooze(&mut self) {
+        if self.step <= SPIN_LIMIT {
+            for _ in 0..1u32 << self.step {
+                hint::spin_loop();
+            }
+        } else {
+            std::thread::yield_now();
+        }
+        if self.step <= YIELD_LIMIT {
+            self.step += 1;
+        }
+    }
+
+    /// True once spinning stopped helping and the caller should consider
+    /// parking or restructuring.
+    pub fn is_completed(&self) -> bool {
+        self.step > YIELD_LIMIT
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_saturates() {
+        let mut b = Backoff::new();
+        for _ in 0..64 {
+            b.spin();
+        }
+        assert!(b.step >= SPIN_LIMIT);
+        let mut b = Backoff::new();
+        for _ in 0..64 {
+            b.snooze();
+        }
+        assert!(b.is_completed());
+    }
+}

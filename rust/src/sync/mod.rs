@@ -1,0 +1,68 @@
+//! Low-level concurrency utilities shared across the crate (no external
+//! crates available offline — these replace `crossbeam_utils` equivalents).
+
+mod backoff;
+mod spinlock;
+
+pub use backoff::Backoff;
+pub use spinlock::{SpinLock, SpinLockGuard};
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns a value to 128 bytes (two x86-64 cache lines — the
+/// spatial-prefetcher granule) to prevent false sharing between adjacent
+/// hot atomics such as the per-edge and per-node counters (§II.3).
+#[derive(Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> Self {
+        CachePadded { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for CachePadded<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.value.fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn cache_padded_is_aligned() {
+        assert_eq!(std::mem::align_of::<CachePadded<AtomicU64>>(), 128);
+        assert!(std::mem::size_of::<CachePadded<AtomicU64>>() >= 128);
+    }
+
+    #[test]
+    fn cache_padded_derefs() {
+        let c = CachePadded::new(AtomicU64::new(7));
+        c.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(c.load(Ordering::Relaxed), 8);
+        assert_eq!(CachePadded::new(3u32).into_inner(), 3);
+    }
+}

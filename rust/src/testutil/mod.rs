@@ -1,0 +1,10 @@
+//! Test substrate: deterministic PRNG and a minimal property-testing
+//! harness ("proptest-lite"). No third-party crates are available offline,
+//! so this replaces `rand` + `proptest` for the crate's test suite and for
+//! the workload generators' entropy source.
+
+mod prop;
+mod rng;
+
+pub use prop::{forall, Gen, PropConfig, U64Range, VecGen};
+pub use rng::Rng64;

@@ -1,0 +1,155 @@
+//! proptest-lite: generate random cases, run a predicate, and on failure
+//! greedily shrink toward a minimal counterexample before reporting.
+
+use super::Rng64;
+
+/// A generator produces a value from entropy and knows how to propose
+/// smaller candidates for shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng64) -> Self::Value;
+    /// Candidate shrinks, largest-step first. Default: no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Seed is fixed for reproducibility; override per-property when
+        // exploring. Case count balances coverage vs suite runtime.
+        PropConfig { cases: 256, seed: 0x5EED, max_shrink_steps: 2000 }
+    }
+}
+
+/// Run `prop` against `cases` random values; panic with a (shrunk) minimal
+/// counterexample on failure.
+pub fn forall<G: Gen>(config: PropConfig, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng64::new(config.seed);
+    for case in 0..config.cases {
+        let v = gen.generate(&mut rng);
+        if prop(&v) {
+            continue;
+        }
+        // Shrink: repeatedly take the first failing shrink candidate.
+        let mut cur = v.clone();
+        let mut steps = 0;
+        'outer: while steps < config.max_shrink_steps {
+            for cand in gen.shrink(&cur) {
+                steps += 1;
+                if !prop(&cand) {
+                    cur = cand;
+                    continue 'outer;
+                }
+                if steps >= config.max_shrink_steps {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed (case {case}, seed {:#x}):\n  original: {:?}\n  shrunk:   {:?}",
+            config.seed, v, cur
+        );
+    }
+}
+
+/// u64 in [lo, hi] with halving shrink toward lo.
+pub struct U64Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng64) -> u64 {
+        rng.next_range(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec of values with length in [0, max_len]; shrinks by halving the vector
+/// then shrinking elements.
+pub struct VecGen<G> {
+    pub elem: G,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng64) -> Self::Value {
+        let len = rng.next_below(self.max_len as u64 + 1) as usize;
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[1..].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+            // Shrink the first shrinkable element.
+            for (i, e) in v.iter().enumerate() {
+                let shrunk = self.elem.shrink(e);
+                if let Some(se) = shrunk.into_iter().next() {
+                    let mut w = v.clone();
+                    w[i] = se;
+                    out.push(w);
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall(PropConfig::default(), &U64Range { lo: 0, hi: 100 }, |&v| v <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_fails_and_shrinks() {
+        forall(PropConfig::default(), &U64Range { lo: 0, hi: 1000 }, |&v| v < 500);
+    }
+
+    #[test]
+    fn shrink_reaches_minimal_counterexample() {
+        // Catch the panic and verify the shrunk value is minimal (500).
+        let res = std::panic::catch_unwind(|| {
+            forall(PropConfig::default(), &U64Range { lo: 0, hi: 1000 }, |&v| v < 500);
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk:   500"), "unexpected shrink: {msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_max_len() {
+        let g = VecGen { elem: U64Range { lo: 0, hi: 9 }, max_len: 16 };
+        let mut rng = Rng64::new(1);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!(v.len() <= 16);
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Synthetic cellular mobility traces — the substitute for the paper's
+//! proprietary 5G-core data (ref [1], DESIGN.md §Substitutions).
+//!
+//! Topology: a hex-like grid of cells, each with up to 6 neighbours. Users
+//! perform markov walks: from cell `c` they move to one of its neighbours
+//! with Zipf-skewed, per-cell-stable preferences (commuter corridors), with
+//! a small uniform exploration probability. A *topology flip* re-permutes
+//! the preference ranks — the drift event used by E5 (model decay) and E8
+//! (paging under drift).
+
+use super::zipf::Zipf;
+use crate::testutil::Rng64;
+
+/// Hex-ish grid of `width x height` cells.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    width: u64,
+    height: u64,
+}
+
+impl Topology {
+    pub fn grid(width: u64, height: u64) -> Self {
+        assert!(width >= 2 && height >= 2);
+        Topology { width, height }
+    }
+
+    pub fn cells(&self) -> u64 {
+        self.width * self.height
+    }
+
+    /// Neighbours of a cell (4-8 depending on position; hex-like
+    /// connectivity: E, W, N, S, NE, SW).
+    pub fn neighbours(&self, cell: u64) -> Vec<u64> {
+        let (x, y) = (cell % self.width, cell / self.width);
+        let mut out = Vec::with_capacity(6);
+        let deltas: [(i64, i64); 6] = [(1, 0), (-1, 0), (0, 1), (0, -1), (1, 1), (-1, -1)];
+        for (dx, dy) in deltas {
+            let nx = x as i64 + dx;
+            let ny = y as i64 + dy;
+            if nx >= 0 && nx < self.width as i64 && ny >= 0 && ny < self.height as i64 {
+                out.push(ny as u64 * self.width + nx as u64);
+            }
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MobilityConfig {
+    pub width: u64,
+    pub height: u64,
+    pub users: usize,
+    /// Zipf exponent of neighbour preference (commuter-corridor skew).
+    pub skew: f64,
+    /// Probability of ignoring preferences and picking uniformly.
+    pub explore: f64,
+    pub seed: u64,
+}
+
+impl Default for MobilityConfig {
+    fn default() -> Self {
+        MobilityConfig { width: 16, height: 16, users: 200, skew: 1.1, explore: 0.05, seed: 7 }
+    }
+}
+
+/// A running mobility simulation producing `(from_cell, to_cell)` handover
+/// events, one user at a time (round-robin).
+pub struct MobilityTrace {
+    topo: Topology,
+    zipf_by_degree: Vec<Zipf>,
+    /// Per-cell permutation epoch: preference rank r maps to neighbour
+    /// `perm[(cell, r)]`, reshuffled on `flip_topology`.
+    flip_salt: u64,
+    users: Vec<u64>,
+    next_user: usize,
+    rng: Rng64,
+    config: MobilityConfig,
+}
+
+impl MobilityTrace {
+    pub fn new(config: MobilityConfig) -> Self {
+        let topo = Topology::grid(config.width, config.height);
+        let mut rng = Rng64::new(config.seed);
+        let users = (0..config.users).map(|_| rng.next_below(topo.cells())).collect();
+        // Pre-build one Zipf per possible degree (1..=6).
+        let zipf_by_degree = (1..=6).map(|d| Zipf::new(d, config.skew)).collect();
+        MobilityTrace { topo, zipf_by_degree, flip_salt: 0, users, next_user: 0, rng, config }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Permute every cell's neighbour preferences — models a structural
+    /// change (new road/venue/base station): the hot corridors move.
+    pub fn flip_topology(&mut self) {
+        self.flip_salt = self.flip_salt.wrapping_add(0x9E37_79B9);
+    }
+
+    /// Preferred neighbour of `cell` at rank `r` under the current epoch.
+    fn preferred(&self, cell: u64, rank: usize, degree: usize) -> u64 {
+        // Deterministic per-cell permutation: rotate by a salted hash.
+        let h = cell
+            .wrapping_mul(0xD6E8_FEB8_6659_FD93)
+            .wrapping_add(self.flip_salt as u64)
+            .wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+        let rot = (h >> 32) as usize % degree;
+        let idx = (rank + rot) % degree;
+        self.topo.neighbours(cell)[idx]
+    }
+
+    /// Ground-truth next-cell distribution for `cell` (used by E8 to score
+    /// paging policies against the true model).
+    pub fn true_distribution(&self, cell: u64) -> Vec<(u64, f64)> {
+        let nbrs = self.topo.neighbours(cell);
+        let d = nbrs.len();
+        let z = &self.zipf_by_degree[d - 1];
+        let mut probs = vec![0.0; d];
+        for (rank, p) in (0..d).map(|r| (r, z.pmf(r))) {
+            let dst = self.preferred(cell, rank, d);
+            let i = nbrs.iter().position(|&n| n == dst).unwrap();
+            // Mix in the exploration mass.
+            probs[i] += p * (1.0 - self.config.explore) + self.config.explore / d as f64;
+        }
+        nbrs.into_iter().zip(probs).collect()
+    }
+}
+
+impl super::TransitionStream for MobilityTrace {
+    fn next_transition(&mut self) -> (u64, u64) {
+        let uid = self.next_user;
+        self.next_user = (self.next_user + 1) % self.users.len();
+        let from = self.users[uid];
+        let nbrs = self.topo.neighbours(from);
+        let d = nbrs.len();
+        let to = if self.rng.next_bool(self.config.explore) {
+            nbrs[self.rng.next_below(d as u64) as usize]
+        } else {
+            let rank = self.zipf_by_degree[d - 1].sample(&mut self.rng);
+            self.preferred(from, rank, d)
+        };
+        self.users[uid] = to;
+        (from, to)
+    }
+}

@@ -1,0 +1,112 @@
+//! Workload generators for the experiment suite (DESIGN.md §3).
+//!
+//! The paper evaluates on proprietary telecom mobility data (ref [1]) and
+//! motivates recommender workloads; neither is available, so this module
+//! provides the synthetic equivalents documented in DESIGN.md
+//! §Substitutions: Zipf-distributed edge preferences (the paper's "oftentimes
+//! the edges follow a Zipf distribution"), a hex-grid cellular mobility
+//! model, and recsys session streams.
+
+mod mobility;
+mod recsys;
+mod zipf;
+
+pub use mobility::{MobilityConfig, MobilityTrace, Topology};
+pub use recsys::{RecsysConfig, SessionStream};
+pub use zipf::Zipf;
+
+use crate::testutil::Rng64;
+
+/// A stream of `(src, dst)` transition observations.
+pub trait TransitionStream {
+    fn next_transition(&mut self) -> (u64, u64);
+    /// Fill a batch (convenience for benches).
+    fn batch(&mut self, n: usize) -> Vec<(u64, u64)> {
+        (0..n).map(|_| self.next_transition()).collect()
+    }
+}
+
+/// Markov transitions where every node has `fanout` candidate successors
+/// whose selection probability is Zipf(s). The canonical E1-E4 workload:
+/// `s = 0` gives the uniform worst case, `s = 1.2` the skewed normal case.
+pub struct ZipfChainStream {
+    nodes: u64,
+    zipf: Zipf,
+    rng: Rng64,
+    cur: u64,
+    /// Successor of node `v` at rank `r` is `((v * MIX) ^ salt + r + 1)
+    /// % nodes` — a deterministic pseudo-random fanout without storing the
+    /// graph. `salt` derives from the seed, so two streams with different
+    /// seeds are different *topologies* (E5 uses this as the drift event).
+    fanout: u64,
+    salt: u64,
+}
+
+const MIX: u64 = 0x5851_F42D_4C95_7F2D;
+
+impl ZipfChainStream {
+    pub fn new(nodes: u64, fanout: u64, s: f64, seed: u64) -> Self {
+        Self::with_topology(nodes, fanout, s, seed, seed)
+    }
+
+    /// Separate RNG stream and topology: streams sharing `topo_seed` walk
+    /// the *same* graph with independent randomness (multi-threaded benches
+    /// must use this, or each thread invents its own edge set).
+    pub fn with_topology(nodes: u64, fanout: u64, s: f64, rng_seed: u64, topo_seed: u64) -> Self {
+        assert!(nodes > 1 && fanout >= 1);
+        ZipfChainStream {
+            nodes,
+            zipf: Zipf::new(fanout as usize, s),
+            rng: Rng64::new(rng_seed),
+            cur: 0,
+            fanout,
+            salt: topo_seed.wrapping_mul(0xD6E8_FEB8_6659_FD93),
+        }
+    }
+
+    /// The dst of `src` at preference rank `rank` (0 = most likely).
+    pub fn dst_at_rank(&self, src: u64, rank: u64) -> u64 {
+        ((src.wrapping_mul(MIX) ^ self.salt).wrapping_add(rank + 1)) % self.nodes
+    }
+
+    pub fn nodes(&self) -> u64 {
+        self.nodes
+    }
+
+    pub fn fanout(&self) -> u64 {
+        self.fanout
+    }
+}
+
+impl TransitionStream for ZipfChainStream {
+    fn next_transition(&mut self) -> (u64, u64) {
+        let src = self.cur;
+        let rank = self.zipf.sample(&mut self.rng) as u64;
+        let dst = self.dst_at_rank(src, rank);
+        self.cur = dst;
+        (src, dst)
+    }
+}
+
+/// Uniform random `(src, dst)` pairs over disjoint node sets — stress-test
+/// stream with no markov structure (hash-table-heavy, worst case).
+pub struct UniformPairs {
+    srcs: u64,
+    dsts: u64,
+    rng: Rng64,
+}
+
+impl UniformPairs {
+    pub fn new(srcs: u64, dsts: u64, seed: u64) -> Self {
+        UniformPairs { srcs, dsts, rng: Rng64::new(seed) }
+    }
+}
+
+impl TransitionStream for UniformPairs {
+    fn next_transition(&mut self) -> (u64, u64) {
+        (self.rng.next_below(self.srcs), self.rng.next_below(self.dsts))
+    }
+}
+
+#[cfg(test)]
+mod tests;

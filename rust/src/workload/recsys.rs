@@ -1,0 +1,75 @@
+//! Synthetic recommender sessions (DESIGN.md §Substitutions): item-to-item
+//! transitions with Zipf item popularity and per-item stable co-occurrence
+//! preferences — the cumulative-threshold query workload of the paper's
+//! introduction ("recommend items such that P(match) >= 90%").
+
+use super::zipf::Zipf;
+use crate::testutil::Rng64;
+
+#[derive(Debug, Clone)]
+pub struct RecsysConfig {
+    pub items: u64,
+    /// Candidate next-items per item.
+    pub fanout: u64,
+    /// Zipf exponent of next-item preference.
+    pub skew: f64,
+    /// Geometric session-continuation probability.
+    pub continue_p: f64,
+    pub seed: u64,
+}
+
+impl Default for RecsysConfig {
+    fn default() -> Self {
+        RecsysConfig { items: 5_000, fanout: 32, skew: 1.05, continue_p: 0.85, seed: 21 }
+    }
+}
+
+/// Produces item-view sessions; `next_transition` yields consecutive
+/// `(prev_item, item)` pairs, restarting sessions per `continue_p`.
+pub struct SessionStream {
+    config: RecsysConfig,
+    popularity: Zipf,
+    preference: Zipf,
+    rng: Rng64,
+    cur: Option<u64>,
+    sessions: u64,
+}
+
+const MIX: u64 = 0x2545_F491_4F6C_DD1D;
+
+impl SessionStream {
+    pub fn new(config: RecsysConfig) -> Self {
+        assert!(config.items > 1 && config.fanout >= 1);
+        let popularity = Zipf::new(config.items as usize, 1.0);
+        let preference = Zipf::new(config.fanout as usize, config.skew);
+        let rng = Rng64::new(config.seed);
+        SessionStream { config, popularity, preference, rng, cur: None, sessions: 0 }
+    }
+
+    /// Candidate next item of `item` at preference rank `r`.
+    pub fn related_at_rank(&self, item: u64, rank: u64) -> u64 {
+        (item.wrapping_mul(MIX).wrapping_add(rank * rank + 1)) % self.config.items
+    }
+
+    pub fn sessions_started(&self) -> u64 {
+        self.sessions
+    }
+
+    fn start_session(&mut self) -> u64 {
+        self.sessions += 1;
+        self.popularity.sample(&mut self.rng) as u64
+    }
+}
+
+impl super::TransitionStream for SessionStream {
+    fn next_transition(&mut self) -> (u64, u64) {
+        let prev = match self.cur {
+            Some(i) if self.rng.next_bool(self.config.continue_p) => i,
+            _ => self.start_session(),
+        };
+        let rank = self.preference.sample(&mut self.rng) as u64;
+        let item = self.related_at_rank(prev, rank);
+        self.cur = Some(item);
+        (prev, item)
+    }
+}

@@ -1,0 +1,175 @@
+//! Workload generator tests.
+
+use super::*;
+use crate::testutil::Rng64;
+use std::collections::HashMap;
+
+#[test]
+fn zipf_chain_stream_is_markov() {
+    let mut s = ZipfChainStream::new(100, 8, 1.1, 1);
+    let mut prev_dst = None;
+    for _ in 0..1000 {
+        let (src, dst) = s.next_transition();
+        assert!(src < 100 && dst < 100);
+        if let Some(p) = prev_dst {
+            assert_eq!(src, p, "stream must chain src = previous dst");
+        }
+        prev_dst = Some(dst);
+    }
+}
+
+#[test]
+fn zipf_chain_stream_rank_zero_dominates() {
+    let mut s = ZipfChainStream::new(50, 8, 1.3, 2);
+    let mut by_src: HashMap<u64, HashMap<u64, u64>> = HashMap::new();
+    for _ in 0..100_000 {
+        let (src, dst) = s.next_transition();
+        *by_src.entry(src).or_default().entry(dst).or_default() += 1;
+    }
+    // For sources with enough samples, the top dst must be the rank-0 dst.
+    let mut checked = 0;
+    for (src, dsts) in &by_src {
+        let n: u64 = dsts.values().sum();
+        if n < 2_000 {
+            continue;
+        }
+        let top = dsts.iter().max_by_key(|&(_, c)| c).unwrap().0;
+        assert_eq!(*top, s.dst_at_rank(*src, 0), "src {src}");
+        checked += 1;
+    }
+    assert!(checked > 0, "no src accumulated enough mass");
+}
+
+#[test]
+fn uniform_pairs_bounds() {
+    let mut s = UniformPairs::new(10, 20, 3);
+    for _ in 0..1000 {
+        let (a, b) = s.next_transition();
+        assert!(a < 10 && b < 20);
+    }
+}
+
+#[test]
+fn batch_has_requested_len() {
+    let mut s = UniformPairs::new(4, 4, 9);
+    assert_eq!(s.batch(17).len(), 17);
+}
+
+#[test]
+fn topology_neighbours_symmetric_and_in_bounds() {
+    let t = Topology::grid(8, 6);
+    for cell in 0..t.cells() {
+        let nbrs = t.neighbours(cell);
+        assert!(!nbrs.is_empty() && nbrs.len() <= 6);
+        for &n in &nbrs {
+            assert!(n < t.cells());
+            assert_ne!(n, cell);
+            // Symmetric connectivity (deltas come in +/- pairs).
+            assert!(t.neighbours(n).contains(&cell), "asymmetric {cell} -> {n}");
+        }
+    }
+}
+
+#[test]
+fn mobility_transitions_follow_topology() {
+    let mut m = MobilityTrace::new(MobilityConfig::default());
+    for _ in 0..5_000 {
+        let (from, to) = m.next_transition();
+        assert!(
+            m.topology().neighbours(from).contains(&to),
+            "handover {from} -> {to} not adjacent"
+        );
+    }
+}
+
+#[test]
+fn mobility_true_distribution_sums_to_one() {
+    let m = MobilityTrace::new(MobilityConfig::default());
+    for cell in [0u64, 5, 100, 255] {
+        let d = m.true_distribution(cell);
+        let sum: f64 = d.iter().map(|&(_, p)| p).sum();
+        assert!((sum - 1.0).abs() < 1e-9, "cell {cell} sums to {sum}");
+        assert!(d.iter().all(|&(_, p)| p > 0.0));
+    }
+}
+
+#[test]
+fn mobility_flip_changes_preferences() {
+    let mut m = MobilityTrace::new(MobilityConfig { explore: 0.0, ..Default::default() });
+    let before: Vec<_> = (0..50).map(|c| m.true_distribution(c)).collect();
+    m.flip_topology();
+    let after: Vec<_> = (0..50).map(|c| m.true_distribution(c)).collect();
+    let changed = before
+        .iter()
+        .zip(&after)
+        .filter(|(b, a)| {
+            let top_b = b.iter().max_by(|x, y| x.1.total_cmp(&y.1)).unwrap().0;
+            let top_a = a.iter().max_by(|x, y| x.1.total_cmp(&y.1)).unwrap().0;
+            top_b != top_a
+        })
+        .count();
+    assert!(changed > 10, "flip changed only {changed}/50 top preferences");
+}
+
+#[test]
+fn mobility_empirical_matches_true_distribution() {
+    let mut m = MobilityTrace::new(MobilityConfig {
+        width: 4,
+        height: 4,
+        users: 50,
+        skew: 1.0,
+        explore: 0.1,
+        seed: 5,
+    });
+    let mut counts: HashMap<u64, HashMap<u64, u64>> = HashMap::new();
+    for _ in 0..300_000 {
+        let (f, t) = m.next_transition();
+        *counts.entry(f).or_default().entry(t).or_default() += 1;
+    }
+    // Compare the hottest cell's empirical next-hop distribution.
+    let (cell, dsts) = counts.iter().max_by_key(|(_, d)| d.values().sum::<u64>()).unwrap();
+    let n: u64 = dsts.values().sum();
+    for (dst, p_true) in m.true_distribution(*cell) {
+        let emp = *dsts.get(&dst).unwrap_or(&0) as f64 / n as f64;
+        assert!(
+            (emp - p_true).abs() < 0.05,
+            "cell {cell}->{dst}: emp {emp:.3} vs true {p_true:.3}"
+        );
+    }
+}
+
+#[test]
+fn sessions_restart_and_stay_in_range() {
+    let mut s = SessionStream::new(RecsysConfig {
+        items: 100,
+        fanout: 8,
+        skew: 1.0,
+        continue_p: 0.5,
+        seed: 4,
+    });
+    for _ in 0..10_000 {
+        let (a, b) = s.next_transition();
+        assert!(a < 100 && b < 100);
+    }
+    // With continue_p = 0.5, ~half the steps start a new session.
+    let started = s.sessions_started();
+    assert!(started > 3_000 && started < 7_000, "sessions {started}");
+}
+
+#[test]
+fn recsys_transitions_deterministic_per_seed() {
+    let cfg = RecsysConfig::default();
+    let mut a = SessionStream::new(cfg.clone());
+    let mut b = SessionStream::new(cfg);
+    for _ in 0..100 {
+        assert_eq!(a.next_transition(), b.next_transition());
+    }
+}
+
+#[test]
+fn zipf_chain_seed_determinism() {
+    let mut a = ZipfChainStream::new(64, 6, 0.9, 42);
+    let mut b = ZipfChainStream::new(64, 6, 0.9, 42);
+    assert_eq!(a.batch(50), b.batch(50));
+    let _ = Rng64::new(0); // keep import used
+}

@@ -1,0 +1,128 @@
+//! Zipf(s) sampler over ranks `0..n` via inverse-CDF binary search.
+//! `s = 0` degenerates to the uniform distribution (the paper's worst case
+//! for inference cost); `s ≈ 1` is the "oftentimes" case of §II.B.
+
+use crate::testutil::Rng64;
+
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    /// cdf[r] = P(rank <= r); cdf[n-1] == 1.0.
+    cdf: Vec<f64>,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf over empty support");
+        assert!(s >= 0.0 && s.is_finite());
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for r in 1..=n {
+            acc += 1.0 / (r as f64).powf(s);
+            cdf.push(acc);
+        }
+        let norm = acc;
+        for c in &mut cdf {
+            *c /= norm;
+        }
+        Zipf { cdf, s }
+    }
+
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.s
+    }
+
+    /// Sample a rank in `0..n` (0 = most probable).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng64) -> usize {
+        let u = rng.next_f64();
+        // partition_point: first index with cdf[i] >= u.
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    /// P(rank == r).
+    pub fn pmf(&self, r: usize) -> f64 {
+        if r == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[r] - self.cdf[r - 1]
+        }
+    }
+
+    /// Quantile function: the number of top ranks needed to cover
+    /// cumulative probability `t` — the paper's CDF⁻¹(t), i.e. the
+    /// *predicted* inference scan depth (E2 compares measured vs this).
+    pub fn quantile(&self, t: f64) -> usize {
+        let t = t.clamp(0.0, 1.0);
+        if t == 0.0 {
+            return 0;
+        }
+        self.cdf.partition_point(|&c| c < t - 1e-12) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_when_s_zero() {
+        let z = Zipf::new(10, 0.0);
+        for r in 0..10 {
+            assert!((z.pmf(r) - 0.1).abs() < 1e-12);
+        }
+        assert_eq!(z.quantile(0.5), 5);
+        assert_eq!(z.quantile(1.0), 10);
+    }
+
+    #[test]
+    fn skewed_head_heavy() {
+        let z = Zipf::new(100, 1.2);
+        assert!(z.pmf(0) > 10.0 * z.pmf(50));
+        // Top items cover most of the mass.
+        assert!(z.quantile(0.5) < 10);
+    }
+
+    #[test]
+    fn sample_matches_pmf() {
+        let z = Zipf::new(20, 1.0);
+        let mut rng = Rng64::new(42);
+        let mut counts = [0u64; 20];
+        const N: u64 = 200_000;
+        for _ in 0..N {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for r in 0..20 {
+            let emp = counts[r] as f64 / N as f64;
+            let theo = z.pmf(r);
+            assert!(
+                (emp - theo).abs() < 0.01,
+                "rank {r}: empirical {emp:.4} vs pmf {theo:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_monotone_and_bounded() {
+        let z = Zipf::new(50, 0.8);
+        let mut last = 0;
+        for i in 0..=10 {
+            let q = z.quantile(i as f64 / 10.0);
+            assert!(q >= last);
+            assert!(q <= 50);
+            last = q;
+        }
+    }
+
+    #[test]
+    fn single_item_support() {
+        let z = Zipf::new(1, 1.0);
+        let mut rng = Rng64::new(1);
+        assert_eq!(z.sample(&mut rng), 0);
+        assert_eq!(z.quantile(0.9), 1);
+    }
+}

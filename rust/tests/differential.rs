@@ -1,0 +1,104 @@
+//! Long-horizon differential test: every engine (MCPrioQ with/without dst
+//! table, all baselines, and — when artifacts exist — the dense XLA path)
+//! is driven through interleaved observe/decay/query cycles and must agree
+//! on every answer. This is the repo's strongest cross-layer oracle.
+
+use std::sync::Arc;
+
+use mcprioq::baselines::{HeapChain, MarkovModel, MutexChain, ShardedChain, SkipListChain};
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::runtime::{default_artifacts_dir, DenseXlaChain, XlaRuntime};
+use mcprioq::testutil::Rng64;
+
+const SRCS: u64 = 6;
+const DSTS: u64 = 48;
+const ROUNDS: usize = 5;
+const OBS_PER_ROUND: usize = 3_000;
+
+fn models() -> Vec<Box<dyn MarkovModel>> {
+    let mut v: Vec<Box<dyn MarkovModel>> = vec![
+        Box::new(McPrioQ::new(ChainConfig::default())),
+        Box::new(McPrioQ::new(ChainConfig { use_dst_table: false, ..Default::default() })),
+        Box::new(MutexChain::new()),
+        Box::new(ShardedChain::new(4)),
+        Box::new(SkipListChain::new()),
+        Box::new(HeapChain::new()),
+    ];
+    match XlaRuntime::new(&default_artifacts_dir()) {
+        Ok(rt) => {
+            v.push(Box::new(DenseXlaChain::new(Arc::new(rt), (SRCS + DSTS) as usize).unwrap()))
+        }
+        Err(e) => eprintln!("differential: dense engine skipped ({e:#})"),
+    }
+    v
+}
+
+#[test]
+fn all_engines_agree_through_decay_cycles() {
+    let models = models();
+    let mut rng = Rng64::new(0xD1F2);
+    for round in 0..ROUNDS {
+        for _ in 0..OBS_PER_ROUND {
+            let src = rng.next_below(SRCS);
+            let u = rng.next_f64();
+            let dst = SRCS + ((u * u * u) * DSTS as f64) as u64;
+            for m in &models {
+                m.observe(src, dst);
+            }
+        }
+        // Cross-check every query type on every src.
+        for src in 0..SRCS {
+            let reference = models[0].infer_topk(src, 8);
+            for m in &models[1..] {
+                let got = m.infer_topk(src, 8);
+                assert_eq!(got.total, reference.total, "{} r{round} s{src} total", m.name());
+                assert_eq!(
+                    got.items.len(),
+                    reference.items.len(),
+                    "{} r{round} s{src} len",
+                    m.name()
+                );
+                for (a, b) in reference.items.iter().zip(&got.items) {
+                    assert!(
+                        (a.1 - b.1).abs() < 1e-5,
+                        "{} r{round} s{src}: {:?} vs {:?}",
+                        m.name(),
+                        reference.items,
+                        got.items
+                    );
+                }
+            }
+            for t in [0.4, 0.85] {
+                let reference = models[0].infer_threshold(src, t);
+                for m in &models[1..] {
+                    let got = m.infer_threshold(src, t);
+                    // Dense engines cap at compiled k; only compare when
+                    // the reference answer fits.
+                    if reference.items.len() <= 8 {
+                        assert_eq!(
+                            got.items.len(),
+                            reference.items.len(),
+                            "{} r{round} s{src} t{t}",
+                            m.name()
+                        );
+                        assert!(
+                            (got.cumulative - reference.cumulative).abs() < 1e-5,
+                            "{} r{round} s{src} t{t}: {} vs {}",
+                            m.name(),
+                            got.cumulative,
+                            reference.cumulative
+                        );
+                    }
+                }
+            }
+        }
+        // Decay everywhere; results must agree exactly.
+        let expected = models[0].decay();
+        for m in &models[1..] {
+            assert_eq!(m.decay(), expected, "{} decay r{round}", m.name());
+        }
+        for m in &models {
+            assert_eq!(m.edge_count(), models[0].edge_count(), "{} edges r{round}", m.name());
+        }
+    }
+}

