@@ -17,6 +17,8 @@ use mcprioq::workload::{TransitionStream, ZipfChainStream};
 const CLIENTS: usize = 4;
 const OPS_PER_CLIENT: usize = 20_000;
 const READ_FRACTION: f64 = 0.2;
+/// Updates buffered per `OBSERVEB` round trip.
+const WRITE_BATCH: usize = 64;
 
 fn main() {
     let config = ServerConfig { shards: 2, queue_capacity: 65_536, ..Default::default() };
@@ -42,6 +44,9 @@ fn main() {
                 let mut client = Client::connect(addr).expect("connect");
                 let mut stream = ZipfChainStream::new(2_000, 16, 1.1, c as u64 + 1);
                 let mut rng = Rng64::new(c as u64 + 100);
+                // Writes ride the batched wire path (`OBSERVEB`): buffer
+                // locally, flush every WRITE_BATCH in one round trip.
+                let mut buf: Vec<(u64, u64)> = Vec::with_capacity(WRITE_BATCH);
                 for _ in 0..OPS_PER_CLIENT {
                     let (src, dst) = stream.next_transition();
                     if rng.next_bool(READ_FRACTION) {
@@ -50,10 +55,20 @@ fn main() {
                         read_lat.record(t.elapsed().as_nanos() as u64);
                         total_reads.fetch_add(1, Ordering::Relaxed);
                     } else {
-                        let t = Instant::now();
-                        client.observe(src, dst).expect("observe");
-                        write_lat.record(t.elapsed().as_nanos() as u64);
+                        buf.push((src, dst));
+                        if buf.len() == WRITE_BATCH {
+                            let t = Instant::now();
+                            let n = client.observe_batch(&buf).expect("observe_batch");
+                            assert_eq!(n, buf.len());
+                            // Per-update latency: one round trip / batch.
+                            write_lat
+                                .record(t.elapsed().as_nanos() as u64 / buf.len() as u64);
+                            buf.clear();
+                        }
                     }
+                }
+                if !buf.is_empty() {
+                    client.observe_batch(&buf).expect("observe_batch");
                 }
             })
         })

@@ -69,5 +69,48 @@ fn main() {
             println!("  {name:>15} {threads}t: {}", fmt_rate(rate));
         }
     }
+
+    // Batch-first path: the same update stream applied through
+    // `observe_batch` (one RCU pin + cached src lookup per batch) at each
+    // swept batch size. Batch 1 approximates `observe` plus slice overhead;
+    // larger batches amortize pin/lookup cost.
+    for &batch in &mcprioq::bench_harness::batch_sizes_from_env() {
+        let name = format!("mcprioq-batch{batch}");
+        let mut base = 0.0;
+        for &threads in &threads_list {
+            let chain = Arc::new(McPrioQ::new(ChainConfig::default()));
+            {
+                let mut s = ZipfChainStream::new(NODES, FANOUT, SKEW, 99);
+                for _ in 0..1_000_000 {
+                    let (a, b) = s.next_transition();
+                    chain.observe(a, b);
+                }
+            }
+            let rate = bench.run_threads(threads, duration, |t| {
+                let chain = Arc::clone(&chain);
+                let mut stream =
+                    ZipfChainStream::with_topology(NODES, FANOUT, SKEW, t as u64 + 1, 99);
+                let mut buf = Vec::with_capacity(batch);
+                move || {
+                    buf.clear();
+                    for _ in 0..batch {
+                        buf.push(stream.next_transition());
+                    }
+                    chain.observe_batch(&buf);
+                    batch as u64
+                }
+            });
+            if threads == 1 {
+                base = rate;
+            }
+            table.row(&[
+                name.clone(),
+                threads.to_string(),
+                format!("{rate:.0}"),
+                format!("{:.2}", rate / base),
+            ]);
+            println!("  {name:>15} {threads}t: {}", fmt_rate(rate));
+        }
+    }
     table.finish();
 }

@@ -9,8 +9,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use mcprioq::baselines::{MarkovModel, MutexChain, ShardedChain, SkipListChain};
-use mcprioq::bench_harness::{bench_mode_from_env, fmt_rate, Table};
+use mcprioq::bench_harness::{batch_sizes_from_env, bench_mode_from_env, fmt_rate, Table};
 use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::config::ServerConfig;
+use mcprioq::coordinator::Engine;
 use mcprioq::testutil::Rng64;
 use mcprioq::workload::{TransitionStream, ZipfChainStream};
 
@@ -66,4 +68,152 @@ fn main() {
         }
     }
     table.finish();
+
+    batch_sweep(&bench, duration);
+}
+
+/// Batch-first acceptance sweep: mixed read/write throughput vs batch size
+/// on (a) the chain's `observe_batch` path and (b) the engine's queued
+/// shard-affine path (`Engine::observe_batch` -> per-shard queues ->
+/// worker `observe_batch`). Batch 1 is the single-item baseline; the
+/// refactor targets >= 1.5x at batch 256 on >= 4 threads.
+fn batch_sweep(bench: &mcprioq::bench_harness::Bench, duration: Duration) {
+    let mut sizes = batch_sizes_from_env();
+    if !sizes.contains(&1) {
+        sizes.insert(0, 1);
+    }
+    let mut table = Table::new(
+        "e3_batch_sweep",
+        &["path", "read_frac", "threads", "batch", "ops_per_s", "vs_batch1"],
+    );
+    for &read_frac in &[0.0f64, 0.5] {
+        for &threads in &[1usize, 4, 8] {
+            for path in ["chain", "engine"] {
+                let mut base = 0.0;
+                for &batch in &sizes {
+                    let rate = match path {
+                        "chain" => chain_point(bench, duration, threads, batch, read_frac),
+                        _ => engine_point(bench, duration, threads, batch, read_frac),
+                    };
+                    if batch == sizes[0] {
+                        base = rate;
+                    }
+                    let vs_batch1 =
+                        if base > 0.0 { format!("{:.2}", rate / base) } else { "-".to_string() };
+                    table.row(&[
+                        path.to_string(),
+                        format!("{read_frac}"),
+                        threads.to_string(),
+                        batch.to_string(),
+                        format!("{rate:.0}"),
+                        vs_batch1,
+                    ]);
+                    println!(
+                        "  {path:>6} r={read_frac} {threads}t b={batch}: {}",
+                        fmt_rate(rate)
+                    );
+                }
+            }
+        }
+    }
+    table.finish();
+}
+
+const SWEEP_PREFILL: usize = 200_000;
+
+/// Mixed ops/sec straight on the chain: writes apply synchronously, so the
+/// thunk's op count is the applied count.
+fn chain_point(
+    bench: &mcprioq::bench_harness::Bench,
+    duration: Duration,
+    threads: usize,
+    batch: usize,
+    read_frac: f64,
+) -> f64 {
+    let chain = Arc::new(McPrioQ::new(ChainConfig::default()));
+    {
+        let mut s = ZipfChainStream::new(NODES, FANOUT, 1.1, 5);
+        for _ in 0..SWEEP_PREFILL {
+            let (a, b) = s.next_transition();
+            chain.observe(a, b);
+        }
+    }
+    bench.run_threads(threads, duration, |t| {
+        let chain = Arc::clone(&chain);
+        let mut stream = ZipfChainStream::with_topology(NODES, FANOUT, 1.1, t as u64 + 10, 5);
+        let mut rng = Rng64::new(t as u64 + 77);
+        let mut buf: Vec<(u64, u64)> = Vec::with_capacity(batch);
+        move || {
+            let (a, b) = stream.next_transition();
+            if rng.next_bool(read_frac) {
+                std::hint::black_box(chain.infer_threshold(a, 0.9));
+                return 1;
+            }
+            // batch == 1 exercises the true single-item entry point.
+            if batch == 1 {
+                chain.observe(a, b);
+                return 1;
+            }
+            buf.push((a, b));
+            if buf.len() < batch {
+                return 0;
+            }
+            chain.observe_batch(&buf);
+            let n = buf.len() as u64;
+            buf.clear();
+            n
+        }
+    })
+}
+
+/// Mixed ops/sec through the queued pipeline. Writes are asynchronous, so
+/// the thunks count only reads; write throughput is taken from the
+/// engine's applied-update counter over the same window — counting
+/// enqueues would credit backlog that shutdown then discards.
+fn engine_point(
+    bench: &mcprioq::bench_harness::Bench,
+    duration: Duration,
+    threads: usize,
+    batch: usize,
+    read_frac: f64,
+) -> f64 {
+    let engine = Engine::new(
+        &ServerConfig { shards: 4, queue_capacity: 65_536, ..Default::default() },
+        4,
+    );
+    {
+        let mut s = ZipfChainStream::new(NODES, FANOUT, 1.1, 5);
+        for _ in 0..SWEEP_PREFILL {
+            let (a, b) = s.next_transition();
+            engine.observe_direct(a, b);
+        }
+    }
+    let applied_before = engine.stats().applied_updates;
+    let read_rate = bench.run_threads(threads, duration, |t| {
+        let engine = Arc::clone(&engine);
+        let mut stream = ZipfChainStream::with_topology(NODES, FANOUT, 1.1, t as u64 + 10, 5);
+        let mut rng = Rng64::new(t as u64 + 77);
+        let mut buf: Vec<(u64, u64)> = Vec::with_capacity(batch);
+        move || {
+            let (a, b) = stream.next_transition();
+            if rng.next_bool(read_frac) {
+                std::hint::black_box(engine.infer_threshold(a, 0.9));
+                return 1;
+            }
+            if batch == 1 {
+                engine.observe(a, b);
+                return 0;
+            }
+            buf.push((a, b));
+            if buf.len() == batch {
+                engine.observe_batch(&buf);
+                buf.clear();
+            }
+            0
+        }
+    });
+    // Snapshot immediately at window end: still-queued backlog is excluded.
+    let applied_after = engine.stats().applied_updates;
+    engine.shutdown();
+    read_rate + (applied_after - applied_before) as f64 / duration.as_secs_f64()
 }

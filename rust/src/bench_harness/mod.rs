@@ -214,6 +214,40 @@ pub fn bench_mode_from_env() -> Bench {
     }
 }
 
+/// Parse a comma-separated batch-size list (`"1,16,256"`): every element
+/// must be a positive integer.
+pub fn parse_batch_list(s: &str) -> Result<Vec<usize>, String> {
+    let sizes: Vec<usize> = s
+        .split(',')
+        .map(|tok| tok.trim().parse::<usize>().map_err(|_| format!("bad batch size {tok:?}")))
+        .collect::<Result<_, _>>()?;
+    if sizes.is_empty() || sizes.contains(&0) {
+        return Err(format!("batch sizes must be positive: {s:?}"));
+    }
+    Ok(sizes)
+}
+
+/// Batch sizes for the batch-first sweep benches: `--batches=1,16,256` on
+/// the command line, else the `BENCH_BATCHES` env var, else `[1, 16, 256]`
+/// (the acceptance sweep of the batch-first refactor).
+pub fn batch_sizes_from_env() -> Vec<usize> {
+    for arg in std::env::args() {
+        if let Some(list) = arg.strip_prefix("--batches=") {
+            match parse_batch_list(list) {
+                Ok(sizes) => return sizes,
+                Err(e) => eprintln!("ignoring --batches: {e}"),
+            }
+        }
+    }
+    if let Ok(list) = std::env::var("BENCH_BATCHES") {
+        match parse_batch_list(&list) {
+            Ok(sizes) => return sizes,
+            Err(e) => eprintln!("ignoring BENCH_BATCHES: {e}"),
+        }
+    }
+    vec![1, 16, 256]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +300,15 @@ mod tests {
         let path = t.finish();
         let content = std::fs::read_to_string(path).unwrap();
         assert_eq!(content, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn batch_list_parsing() {
+        assert_eq!(parse_batch_list("1,16,256").unwrap(), vec![1, 16, 256]);
+        assert_eq!(parse_batch_list(" 8 , 64 ").unwrap(), vec![8, 64]);
+        assert!(parse_batch_list("").is_err());
+        assert!(parse_batch_list("1,0,4").is_err());
+        assert!(parse_batch_list("1,x").is_err());
     }
 
     #[test]

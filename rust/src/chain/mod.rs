@@ -8,8 +8,7 @@
 //! use mcprioq::chain::{ChainConfig, McPrioQ};
 //! let chain = McPrioQ::new(ChainConfig::default());
 //! chain.observe(1, 2);                       // user moved 1 -> 2
-//! chain.observe(1, 3);
-//! chain.observe(1, 2);
+//! chain.observe_batch(&[(1, 3), (1, 2)]);    // hot path: one guard, n updates
 //! let rec = chain.infer_threshold(1, 0.9);   // items until cum-prob >= 0.9
 //! assert_eq!(rec.items[0].0, 2);             // most likely next node
 //! let (sum, pruned) = chain.decay();         // §II.C maintenance
@@ -74,6 +73,32 @@ pub struct ObserveOutcome {
     pub new_edge: bool,
     /// Counter/reorder outcome for existing-edge updates.
     pub increment: IncrementOutcome,
+}
+
+/// Aggregate result of one `observe_batch` call: per-transition outcomes
+/// folded into counters (the per-op detail stays available via `observe`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BatchOutcome {
+    /// Transitions applied (= batch length).
+    pub applied: usize,
+    /// Src nodes created by this batch.
+    pub new_srcs: usize,
+    /// Edges created by this batch.
+    pub new_edges: usize,
+    /// Adjacent bubble swaps performed across the batch.
+    pub swaps: u64,
+    /// Reorders skipped because another thread held the ticket.
+    pub swap_skips: u64,
+}
+
+impl BatchOutcome {
+    fn absorb(&mut self, o: ObserveOutcome) {
+        self.applied += 1;
+        self.new_srcs += o.new_src as usize;
+        self.new_edges += o.new_edge as usize;
+        self.swaps += o.increment.swaps as u64;
+        self.swap_skips += o.increment.skipped as u64;
+    }
 }
 
 /// An inference answer: items in (approximately) descending probability.
@@ -153,27 +178,93 @@ impl McPrioQ {
         assert!(weight > 0, "weight must be positive");
         self.observes.inc();
         let guard = rcu::pin();
+        self.observe_pinned(&guard, src, dst, weight, &mut None)
+    }
 
-        // --- src-node lookup / creation (O(1) common case) ---
+    /// Record a batch of weight-1 transitions under a single RCU guard.
+    ///
+    /// This is the batch-first hot path: one `rcu::pin()` amortized over
+    /// the whole slice, and the src-node `NodeState` lookup is reused for
+    /// runs of consecutive same-src transitions (shard-affine ingest feeds
+    /// exactly such runs). Semantically identical to calling [`observe`]
+    /// per element, in order — the differential tests assert byte-identical
+    /// `export()` snapshots.
+    pub fn observe_batch(&self, batch: &[(u64, u64)]) -> BatchOutcome {
+        let mut out = BatchOutcome::default();
+        if batch.is_empty() {
+            return out;
+        }
+        self.observes.add(batch.len() as u64);
+        let guard = rcu::pin();
+        let mut cached = None;
+        for &(src, dst) in batch {
+            out.absorb(self.observe_pinned(&guard, src, dst, 1, &mut cached));
+        }
+        out
+    }
+
+    /// Weighted variant of [`observe_batch`]: `(src, dst, weight)` triples,
+    /// every weight must be positive.
+    pub fn observe_batch_weighted(&self, batch: &[(u64, u64, u64)]) -> BatchOutcome {
+        let mut out = BatchOutcome::default();
+        if batch.is_empty() {
+            return out;
+        }
+        // Validate before touching any state: a mid-batch panic would leave
+        // the observes counter inflated relative to the applied mass.
+        for &(_, _, weight) in batch {
+            assert!(weight > 0, "weight must be positive");
+        }
+        self.observes.add(batch.len() as u64);
+        let guard = rcu::pin();
+        let mut cached = None;
+        for &(src, dst, weight) in batch {
+            out.absorb(self.observe_pinned(&guard, src, dst, weight, &mut cached));
+        }
+        out
+    }
+
+    /// One transition under a caller-held guard. `cached` carries the
+    /// previous iteration's `(src, NodeState)` so batch runs with repeated
+    /// srcs skip the table lookup entirely; node states are never removed
+    /// from the src table (decay prunes edges, not nodes), so a cached
+    /// pointer stays valid for the guard's lifetime.
+    fn observe_pinned<'g>(
+        &self,
+        guard: &'g rcu::Guard,
+        src: u64,
+        dst: u64,
+        weight: u64,
+        cached: &mut Option<(u64, &'g NodeState)>,
+    ) -> ObserveOutcome {
         let mut new_src = false;
-        let state_ptr = match self.src.get(&guard, src) {
-            Some(p) => p,
-            None => {
-                let fresh = NodeState::boxed(src, &self.config);
-                let (winner, inserted) = self.src.insert_or_get(&guard, src, fresh);
-                if inserted {
-                    new_src = true;
-                } else {
-                    // Lost the publish race; the fresh state was never shared.
-                    unsafe { NodeState::free_unshared(fresh) };
-                }
-                winner
+        let state = match cached {
+            Some((cached_src, state)) if *cached_src == src => *state,
+            _ => {
+                // --- src-node lookup / creation (O(1) common case) ---
+                let state_ptr = match self.src.get(guard, src) {
+                    Some(p) => p,
+                    None => {
+                        let fresh = NodeState::boxed(src, &self.config);
+                        let (winner, inserted) = self.src.insert_or_get(guard, src, fresh);
+                        if inserted {
+                            new_src = true;
+                        } else {
+                            // Lost the publish race; the fresh state was
+                            // never shared.
+                            unsafe { NodeState::free_unshared(fresh) };
+                        }
+                        winner
+                    }
+                };
+                let state = unsafe { &*state_ptr };
+                *cached = Some((src, state));
+                state
             }
         };
-        let state = unsafe { &*state_ptr };
 
         // --- edge lookup / creation + increment ---
-        let (new_edge, increment) = state.observe(&guard, dst, weight, &self.config);
+        let (new_edge, increment) = state.observe(guard, dst, weight, &self.config);
         if new_edge {
             self.edges.fetch_add(1, Ordering::Relaxed);
         }
@@ -313,13 +404,15 @@ impl McPrioQ {
         out
     }
 
-    /// Rebuild a chain from an exported snapshot.
+    /// Rebuild a chain from an exported snapshot. Each node's edge list is
+    /// replayed as one same-src weighted batch (single guard, cached node).
     pub fn import(config: ChainConfig, snapshot: &[(u64, u64, Vec<(u64, u64)>)]) -> Self {
         let chain = McPrioQ::new(config);
+        let mut batch = Vec::new();
         for (src, _total, edges) in snapshot {
-            for &(dst, count) in edges {
-                chain.observe_weighted(*src, dst, count);
-            }
+            batch.clear();
+            batch.extend(edges.iter().map(|&(dst, count)| (*src, dst, count)));
+            chain.observe_batch_weighted(&batch);
         }
         chain
     }

@@ -310,6 +310,103 @@ fn concurrent_read_write_decay() {
     c.check_invariants().unwrap();
 }
 
+#[test]
+fn observe_batch_matches_single_path() {
+    // Identical stream, three ingestion shapes -> byte-identical exports.
+    let single = default_chain();
+    let batched = default_chain();
+    let one_go = default_chain();
+    let mut rng = Rng64::new(0xBA7C);
+    let stream: Vec<(u64, u64)> = (0..5_000)
+        .map(|_| {
+            // Skewed srcs so batches contain same-src runs (the cached-node
+            // fast path) as well as src switches.
+            let src = rng.next_below(4) * rng.next_below(3);
+            (src, rng.next_below(64))
+        })
+        .collect();
+    for &(s, d) in &stream {
+        single.observe(s, d);
+    }
+    let mut folded = BatchOutcome::default();
+    for chunk in stream.chunks(97) {
+        let out = batched.observe_batch(chunk);
+        assert_eq!(out.applied, chunk.len());
+        folded.applied += out.applied;
+        folded.new_srcs += out.new_srcs;
+        folded.new_edges += out.new_edges;
+    }
+    one_go.observe_batch(&stream);
+    assert_eq!(single.export(), batched.export());
+    assert_eq!(single.export(), one_go.export());
+    assert_eq!(single.stats().observes, batched.stats().observes);
+    assert_eq!(folded.applied, stream.len());
+    assert_eq!(folded.new_srcs, single.node_count());
+    assert_eq!(folded.new_edges, single.edge_count());
+    batched.check_invariants().unwrap();
+    one_go.check_invariants().unwrap();
+}
+
+#[test]
+fn observe_batch_weighted_and_empty() {
+    let c = default_chain();
+    assert_eq!(c.observe_batch(&[]), BatchOutcome::default());
+    let out = c.observe_batch_weighted(&[(1, 2, 3), (1, 2, 2), (1, 3, 1), (4, 5, 1)]);
+    assert_eq!(out.applied, 4);
+    assert_eq!(out.new_srcs, 2);
+    assert_eq!(out.new_edges, 3);
+    assert_eq!(c.probability(1, 2), Some(5.0 / 6.0));
+    assert_eq!(c.probability(1, 3), Some(1.0 / 6.0));
+    assert_eq!(c.probability(4, 5), Some(1.0));
+    assert_eq!(c.stats().observes, 4);
+    c.check_invariants().unwrap();
+}
+
+/// Concurrent batch and single writers over shared src nodes: mass is
+/// conserved and invariants hold after quiescing (the batch path must not
+/// lose or duplicate updates under contention).
+#[test]
+fn concurrent_batch_and_single_writers() {
+    const THREADS: u64 = 8;
+    const OPS: u64 = 8_000;
+    let c = Arc::new(default_chain());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                let mut rng = Rng64::new(t + 0xB0B);
+                let mut buf = Vec::with_capacity(64);
+                for _ in 0..OPS {
+                    let src = rng.next_below(4);
+                    let u = rng.next_f64();
+                    let dst = ((u * u) * 50.0) as u64;
+                    if t % 2 == 0 {
+                        // Batch writer: flush in runs of 64.
+                        buf.push((src, dst));
+                        if buf.len() == 64 {
+                            c.observe_batch(&buf);
+                            buf.clear();
+                        }
+                    } else {
+                        c.observe(src, dst);
+                    }
+                }
+                if !buf.is_empty() {
+                    c.observe_batch(&buf);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    c.repair();
+    c.check_invariants().unwrap();
+    assert_eq!(c.stats().observes, THREADS * OPS);
+    let mass: u64 = c.export().iter().map(|(_, total, _)| *total).sum();
+    assert_eq!(mass, THREADS * OPS);
+}
+
 /// Property: for any observation sequence, infer_threshold(t) returns a
 /// minimal prefix with cumulative >= t (P4), and the prefix is sorted by
 /// descending probability (P1).

@@ -1,8 +1,25 @@
-//! The sharded serving engine: chain shards + ingestion queue + workers.
+//! The sharded serving engine: chain shards + per-shard ingestion queues +
+//! shard-affine workers.
+//!
+//! Batch-first data flow (this module's refactor): producers route each
+//! update to its shard's own [`BoundedQueue`] (FIB hash, same routing as
+//! queries), and every ingest worker owns a *static subset* of shards —
+//! worker `w` drains shards `w, w + W, w + 2W, …`. Consequences:
+//!
+//! * No cross-worker queue contention: a shard queue's lock is shared by
+//!   the producers and exactly one consumer.
+//! * Per-shard FIFO is preserved (one consumer per shard), so queued
+//!   ingestion is *deterministic* per shard — the differential tests
+//!   compare `export()` snapshots byte-for-byte against direct ingestion.
+//! * Each drained batch is all same-shard, so it is applied through
+//!   `McPrioQ::observe_batch` — one RCU pin per batch and cached src-node
+//!   lookups, with the worker staying inside one shard's working set
+//!   (cache locality).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::chain::{ChainConfig, McPrioQ, Recommendation};
 use crate::config::ServerConfig;
@@ -13,6 +30,14 @@ use super::queue::BoundedQueue;
 
 const FIB: u64 = 0x9E37_79B9_7F4A_7C15;
 
+/// Max updates a worker applies per queue drain (bounds batch latency and
+/// the time one RCU guard stays pinned).
+const DRAIN_BATCH: usize = 256;
+
+/// How long an idle worker parks on one of its queues before sweeping the
+/// others (closed queues wake it immediately via notify).
+const IDLE_PARK: Duration = Duration::from_millis(2);
+
 /// Aggregated serving metrics (the STATS response / EXPERIMENTS.md rows).
 #[derive(Debug, Clone)]
 pub struct EngineStats {
@@ -22,10 +47,14 @@ pub struct EngineStats {
     pub observes: u64,
     pub queries: u64,
     pub dropped_updates: u64,
+    /// Updates applied by ingest workers (excludes `observe_direct`).
+    pub applied_updates: u64,
     pub decays: u64,
     pub queue_depth: usize,
     pub query_ns_p50: u64,
     pub query_ns_p99: u64,
+    /// Applied updates/sec over the window since the previous `stats()`
+    /// call (wired to the ingest meter; no longer a placeholder).
     pub update_rate: f64,
 }
 
@@ -34,18 +63,30 @@ pub struct EngineStats {
 /// shards are the E3 scaling ablation).
 pub struct Engine {
     shards: Vec<McPrioQ>,
-    queue: Arc<BoundedQueue<(u64, u64)>>,
+    /// One ingestion queue per shard, same index space as `shards`.
+    queues: Vec<Arc<BoundedQueue<(u64, u64)>>>,
     workers: std::sync::Mutex<Vec<JoinHandle<u64>>>,
     stop: Arc<AtomicBool>,
     queries: Counter,
     dropped: Counter,
+    /// Updates *submitted* to some shard queue. Incremented BEFORE the
+    /// push, so any update visible in a queue is already counted — that
+    /// ordering is what makes `quiesce` race-free against producers.
+    enqueued: Counter,
+    /// …updates actually applied by ingest workers…
+    applied: Counter,
+    /// …and submissions the queue refused (closed/full): counted so the
+    /// pre-push `enqueued` increment is balanced and quiesce terminates.
+    rejected: Counter,
     query_lat: Histogram,
     update_meter: Meter,
 }
 
 impl Engine {
     /// Build an engine with `shards` chains (0 = available parallelism)
-    /// and `workers` ingest threads draining the update queue.
+    /// and `workers` ingest threads. Shards are distributed round-robin
+    /// over the workers; with `workers == 0` nothing drains the queues
+    /// (load-shedding test setups rely on this).
     pub fn new(config: &ServerConfig, workers: usize) -> Arc<Engine> {
         let nshards = if config.shards == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -53,68 +94,163 @@ impl Engine {
             config.shards
         };
         let chain_cfg: ChainConfig = config.to_chain_config();
-        let queue = Arc::new(BoundedQueue::new(config.queue_capacity));
+        let queues: Vec<Arc<BoundedQueue<(u64, u64)>>> =
+            (0..nshards).map(|_| Arc::new(BoundedQueue::new(config.queue_capacity))).collect();
         let engine = Arc::new(Engine {
             shards: (0..nshards).map(|_| McPrioQ::new(chain_cfg.clone())).collect(),
-            queue,
+            queues,
             workers: std::sync::Mutex::new(Vec::new()),
             stop: Arc::new(AtomicBool::new(false)),
             queries: Counter::new(),
             dropped: Counter::new(),
+            enqueued: Counter::new(),
+            applied: Counter::new(),
+            rejected: Counter::new(),
             query_lat: Histogram::new(),
             update_meter: Meter::new(),
         });
-        // Spawn ingest workers. They hold the queue Arc plus a Weak to the
-        // engine, so dropping the last user Arc tears everything down:
-        // Engine::drop closes the queue, workers wake, fail the upgrade,
-        // and exit; drop then joins them.
+        // Spawn shard-affine ingest workers. They hold their queue Arcs
+        // plus a Weak to the engine, so dropping the last user Arc tears
+        // everything down: Engine::drop closes the queues, workers wake,
+        // fail the upgrade, and exit; drop then joins them.
         {
             let mut ws = engine.workers.lock().unwrap();
-            for _ in 0..workers {
+            for w in 0..workers {
+                let owned: Vec<(usize, Arc<BoundedQueue<(u64, u64)>>)> = (0..nshards)
+                    .filter(|i| i % workers == w)
+                    .map(|i| (i, Arc::clone(&engine.queues[i])))
+                    .collect();
                 let weak = Arc::downgrade(&engine);
-                let queue = Arc::clone(&engine.queue);
-                ws.push(std::thread::spawn(move || Engine::ingest_loop(weak, queue)));
+                ws.push(std::thread::spawn(move || Engine::ingest_loop(weak, owned)));
             }
         }
         engine
     }
 
-    fn ingest_loop(weak: std::sync::Weak<Engine>, queue: Arc<BoundedQueue<(u64, u64)>>) -> u64 {
+    /// Drain-and-apply loop for one worker's shard set. Returns the number
+    /// of updates this worker applied.
+    fn ingest_loop(
+        weak: std::sync::Weak<Engine>,
+        owned: Vec<(usize, Arc<BoundedQueue<(u64, u64)>>)>,
+    ) -> u64 {
         let mut applied = 0u64;
+        if owned.is_empty() {
+            return 0; // more workers than shards; nothing to own
+        }
+        // Apply one same-shard batch; None = engine gone mid-shutdown.
+        let apply = |shard: usize, batch: &[(u64, u64)]| -> Option<u64> {
+            let engine = weak.upgrade()?;
+            engine.shards[shard].observe_batch(batch);
+            let n = batch.len() as u64;
+            engine.update_meter.mark_n(n);
+            engine.applied.add(n);
+            Some(n)
+        };
+        let mut park = 0usize;
         loop {
-            let batch = queue.pop_batch(256);
-            if batch.is_empty() {
-                return applied; // queue closed and drained
+            let mut drained = false;
+            let mut live = false;
+            for (shard, q) in &owned {
+                let batch = q.try_pop_batch(DRAIN_BATCH);
+                if batch.is_empty() {
+                    live |= !q.is_closed();
+                    continue;
+                }
+                live = true;
+                drained = true;
+                match apply(*shard, &batch) {
+                    Some(n) => applied += n,
+                    None => return applied, // drop the batch, like shutdown
+                }
             }
-            let Some(engine) = weak.upgrade() else {
-                return applied; // engine gone mid-shutdown; drop the batch
-            };
-            for (src, dst) in batch {
-                engine.shard(src).observe(src, dst);
-                applied += 1;
+            if drained {
+                continue;
             }
-            engine.update_meter.mark_n(1); // per batch; rate() scales anyway
+            if !live {
+                return applied; // every owned queue closed and drained
+            }
+            // Nothing ready anywhere: park briefly on one owned queue
+            // (rotating) instead of spinning over empty queues.
+            let (shard, q) = &owned[park % owned.len()];
+            park += 1;
+            let batch = q.pop_batch_timeout(DRAIN_BATCH, IDLE_PARK);
+            if !batch.is_empty() {
+                match apply(*shard, &batch) {
+                    Some(n) => applied += n,
+                    None => return applied,
+                }
+            }
         }
     }
 
     #[inline]
+    fn shard_index(&self, src: u64) -> usize {
+        (src.wrapping_mul(FIB) >> 33) as usize % self.shards.len()
+    }
+
+    #[inline]
     pub fn shard(&self, src: u64) -> &McPrioQ {
-        &self.shards[(src.wrapping_mul(FIB) >> 33) as usize % self.shards.len()]
+        &self.shards[self.shard_index(src)]
     }
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
 
-    /// Enqueue an update (blocking backpressure). False if shutting down.
+    /// Group a batch into per-shard runs, indexed by shard. Shared by the
+    /// queued and direct batch paths so their routing can never diverge.
+    fn partition_by_shard(&self, pairs: &[(u64, u64)]) -> Vec<Vec<(u64, u64)>> {
+        let mut per_shard: Vec<Vec<(u64, u64)>> = vec![Vec::new(); self.shards.len()];
+        for &(src, dst) in pairs {
+            per_shard[self.shard_index(src)].push((src, dst));
+        }
+        per_shard
+    }
+
+    /// Enqueue an update on its shard's queue (blocking backpressure).
+    /// False if shutting down.
     pub fn observe(&self, src: u64, dst: u64) -> bool {
-        self.queue.push((src, dst))
+        self.enqueued.inc();
+        let ok = self.queues[self.shard_index(src)].push((src, dst));
+        if !ok {
+            self.rejected.inc();
+        }
+        ok
+    }
+
+    /// Enqueue a batch of updates: route by shard, then bulk-push each
+    /// shard's run in one queue-lock acquisition (blocking backpressure
+    /// per shard). Returns the number of updates accepted — short only if
+    /// the engine is shutting down.
+    pub fn observe_batch(&self, pairs: &[(u64, u64)]) -> usize {
+        if pairs.is_empty() {
+            return 0;
+        }
+        let submit = |queue: &BoundedQueue<(u64, u64)>, items: Vec<(u64, u64)>| -> usize {
+            let len = items.len();
+            self.enqueued.add(len as u64);
+            let n = queue.push_bulk(items);
+            self.rejected.add((len - n) as u64);
+            n
+        };
+        if self.queues.len() == 1 {
+            return submit(&self.queues[0], pairs.to_vec());
+        }
+        let mut accepted = 0;
+        for (i, items) in self.partition_by_shard(pairs).into_iter().enumerate() {
+            if !items.is_empty() {
+                accepted += submit(&self.queues[i], items);
+            }
+        }
+        accepted
     }
 
     /// Enqueue without blocking; drops (and counts) on overflow — the
     /// load-shedding policy for best-effort telemetry feeds.
     pub fn observe_lossy(&self, src: u64, dst: u64) {
-        if self.queue.try_push((src, dst)).is_err() {
+        self.enqueued.inc();
+        if self.queues[self.shard_index(src)].try_push((src, dst)).is_err() {
+            self.rejected.inc();
             self.dropped.inc();
         }
     }
@@ -123,6 +259,20 @@ impl Engine {
     /// / benchmark use; this is the raw wait-free path).
     pub fn observe_direct(&self, src: u64, dst: u64) {
         self.shard(src).observe(src, dst);
+    }
+
+    /// Apply a batch on the caller thread, bypassing the queues: grouped
+    /// by shard, each group through the single-guard batch path.
+    pub fn observe_batch_direct(&self, pairs: &[(u64, u64)]) {
+        if self.shards.len() == 1 {
+            self.shards[0].observe_batch(pairs);
+            return;
+        }
+        for (i, items) in self.partition_by_shard(pairs).into_iter().enumerate() {
+            if !items.is_empty() {
+                self.shards[i].observe_batch(&items);
+            }
+        }
     }
 
     pub fn infer_threshold(&self, src: u64, t: f64) -> Recommendation {
@@ -153,13 +303,30 @@ impl Engine {
         (total, pruned)
     }
 
-    /// Wait until every update enqueued *before this call* is applied.
+    /// Wait until every update enqueued *before this call* is applied (or
+    /// was rejected by a closing queue). Tracked by submit/apply counters
+    /// rather than queue emptiness, so batches popped-but-in-flight are
+    /// waited on too; `enqueued` is incremented before items become
+    /// visible in a queue, so the target can never undercount.
     pub fn quiesce(&self) {
-        while !self.queue.is_empty() {
+        let target = self.enqueued.get();
+        while self.applied.get() + self.rejected.get() < target {
             std::thread::yield_now();
         }
         // One grace period so applied updates are fully visible.
         rcu::synchronize();
+    }
+
+    /// Merged quiesced snapshot across shards, sorted by src id (shards
+    /// hold disjoint srcs, so this equals a single-chain export of the
+    /// same stream — the differential tests rely on that).
+    pub fn export(&self) -> Vec<(u64, u64, Vec<(u64, u64)>)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.export());
+        }
+        out.sort_unstable_by_key(|&(id, _, _)| id);
+        out
     }
 
     pub fn stats(&self) -> EngineStats {
@@ -182,18 +349,21 @@ impl Engine {
             observes,
             queries: self.queries.get(),
             dropped_updates: self.dropped.get(),
+            applied_updates: self.applied.get(),
             decays,
-            queue_depth: self.queue.len(),
+            queue_depth: self.queues.iter().map(|q| q.len()).sum(),
             query_ns_p50: snap.p50,
             query_ns_p99: snap.p99,
-            update_rate: 0.0, // filled by callers that track intervals
+            update_rate: self.update_meter.rate(),
         }
     }
 
-    /// Stop ingest workers after draining the queue. Idempotent.
+    /// Stop ingest workers after draining the queues. Idempotent.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        self.queue.close();
+        for q in &self.queues {
+            q.close();
+        }
     }
 
     /// Direct access to a shard's chain for tests/benches.

@@ -3,18 +3,24 @@
 //! shape: ingestion queues, shard routing, maintenance scheduling, a TCP
 //! front-end, and metrics).
 //!
-//! Data flow:
+//! Data flow (batch-first):
 //!
 //! ```text
-//!   TCP clients ── OBS ──▶ BoundedQueue ──▶ ingest workers ─▶ McPrioQ shard
-//!              └── REC/TOPK ───────────────(direct, RCU read)──────▲
-//!   decay scheduler ── every decay_interval ── decay()+repair() ───┘
+//!   TCP clients ── OBS/OBSERVEB ──▶ per-shard BoundedQueue ─▶ shard-affine
+//!              │                      (routed by FIB hash)    worker batch
+//!              │                                              observe_batch
+//!              │                                                    │
+//!              └── REC/TOPK/MTOPK ────(direct, RCU read)──▶ McPrioQ shard
+//!   decay scheduler ── every decay_interval ── decay()+repair() ─────┘
 //! ```
 //!
-//! * **Updates** are enqueued (bounded, with backpressure) and applied by
-//!   dedicated ingest workers, decoupling network jitter from the
-//!   structure's wait-free update path. `observe_direct` bypasses the queue
-//!   for embedded use (benches use both).
+//! * **Updates** are routed to their shard's own bounded queue (blocking
+//!   backpressure per shard) and applied by shard-affine ingest workers:
+//!   each worker owns a static shard subset and drains batches straight
+//!   into `McPrioQ::observe_batch` — one RCU pin per batch, one queue-lock
+//!   acquisition per batch, per-shard cache locality, and per-shard FIFO
+//!   (which makes queued ingestion deterministic). `observe_direct` /
+//!   `observe_batch_direct` bypass the queues for embedded use.
 //! * **Queries** run directly on the caller thread: inference is a
 //!   wait-free RCU scan, so there is nothing to schedule around — this is
 //!   the paper's "query while building" property, operationalized.
@@ -29,7 +35,7 @@ mod server;
 
 pub use decay::DecayScheduler;
 pub use engine::{Engine, EngineStats};
-pub use protocol::{Request, Response};
+pub use protocol::{ItemsBody, Request, Response, MAX_WIRE_BATCH};
 pub use queue::BoundedQueue;
 pub use server::{Client, Server};
 

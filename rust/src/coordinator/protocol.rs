@@ -3,26 +3,39 @@
 //! Requests (one per line, space-separated, `\n`-terminated):
 //!
 //! ```text
-//! OBS <src> <dst>          record a transition (async, queued)
-//! REC <src> <threshold>    items until cumulative probability >= threshold
-//! TOPK <src> <k>           the k most probable next nodes
-//! PROB <src> <dst>         single-edge probability
-//! DECAY                    force a decay + repair pass
-//! STATS                    engine statistics
-//! PING                     liveness check
-//! QUIT                     close the connection
+//! OBS <src> <dst>            record a transition (async, queued)
+//! OBSERVEB <n> <s1> <d1> ... record n transitions in one request (queued,
+//!                            routed shard-by-shard through the bulk path)
+//! REC <src> <threshold>      items until cumulative probability >= threshold
+//! TOPK <src> <k>             the k most probable next nodes
+//! MTOPK <n> <k> <s1> ...     top-k for n src nodes in one request
+//! PROB <src> <dst>           single-edge probability
+//! DECAY                      force a decay + repair pass
+//! STATS                      engine statistics
+//! PING                       liveness check
+//! QUIT                       close the connection
 //! ```
 //!
 //! Responses: `OK ...`, `ITEMS <n> <dst>:<prob> ... cum=<c> scanned=<s>`,
-//! or `ERR <message>`.
+//! `MITEMS <m> ITEMS ... ITEMS ...` (one block per MTOPK src), or
+//! `ERR <message>`. Every request yields exactly one response line, so
+//! clients can pipeline arbitrarily many requests behind a single flush.
 
 use std::fmt;
+use std::fmt::Write as _;
+
+/// Upper bound on the element count of OBSERVEB / MTOPK requests: keeps a
+/// hostile or buggy client from making the server allocate unboundedly
+/// from one header token. Clients chunk above this.
+pub const MAX_WIRE_BATCH: usize = 65_536;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Observe { src: u64, dst: u64 },
+    ObserveBatch { pairs: Vec<(u64, u64)> },
     Recommend { src: u64, threshold: f64 },
     TopK { src: u64, k: usize },
+    MultiTopK { srcs: Vec<u64>, k: usize },
     Prob { src: u64, dst: u64 },
     Decay,
     Stats,
@@ -40,9 +53,35 @@ impl Request {
                 .parse::<u64>()
                 .map_err(|_| format!("{cmd}: bad {name}"))
         };
+        let batch_len = |n: u64| -> Result<usize, String> {
+            if n == 0 {
+                return Err("count must be positive".into());
+            }
+            if n > MAX_WIRE_BATCH as u64 {
+                return Err(format!("count {n} exceeds max {MAX_WIRE_BATCH}"));
+            }
+            Ok(n as usize)
+        };
         let req = match cmd {
             "OBS" => Request::Observe { src: num("src")?, dst: num("dst")? },
+            "OBSERVEB" => {
+                let n = batch_len(num("count")?).map_err(|e| format!("OBSERVEB: {e}"))?;
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    pairs.push((num("src")?, num("dst")?));
+                }
+                Request::ObserveBatch { pairs }
+            }
             "TOPK" => Request::TopK { src: num("src")?, k: num("k")? as usize },
+            "MTOPK" => {
+                let n = batch_len(num("count")?).map_err(|e| format!("MTOPK: {e}"))?;
+                let k = num("k")? as usize;
+                let mut srcs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    srcs.push(num("src")?);
+                }
+                Request::MultiTopK { srcs, k }
+            }
             "PROB" => Request::Prob { src: num("src")?, dst: num("dst")? },
             "REC" => {
                 let src = num("src")?;
@@ -71,8 +110,22 @@ impl Request {
     pub fn encode(&self) -> String {
         match self {
             Request::Observe { src, dst } => format!("OBS {src} {dst}"),
+            Request::ObserveBatch { pairs } => {
+                let mut s = format!("OBSERVEB {}", pairs.len());
+                for (src, dst) in pairs {
+                    let _ = write!(s, " {src} {dst}");
+                }
+                s
+            }
             Request::Recommend { src, threshold } => format!("REC {src} {threshold}"),
             Request::TopK { src, k } => format!("TOPK {src} {k}"),
+            Request::MultiTopK { srcs, k } => {
+                let mut s = format!("MTOPK {} {k}", srcs.len());
+                for src in srcs {
+                    let _ = write!(s, " {src}");
+                }
+                s
+            }
             Request::Prob { src, dst } => format!("PROB {src} {dst}"),
             Request::Decay => "DECAY".into(),
             Request::Stats => "STATS".into(),
@@ -82,15 +135,68 @@ impl Request {
     }
 }
 
+/// One inference answer on the wire (the payload of an `ITEMS` block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ItemsBody {
+    pub items: Vec<(u64, f64)>,
+    pub cumulative: f64,
+    pub scanned: usize,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Ok(String),
     Items { items: Vec<(u64, f64)>, cumulative: f64, scanned: usize },
+    /// One `ITEMS` block per query of an `MTOPK` request, in request order.
+    MultiItems(Vec<ItemsBody>),
     Err(String),
+}
+
+/// Parse one `ITEMS` payload (count, pairs, cum=, scanned=) from a token
+/// stream; shared by the single- and multi-answer parsers.
+fn parse_items_body<'a>(
+    it: &mut impl Iterator<Item = &'a str>,
+) -> Result<ItemsBody, String> {
+    let n: usize = it.next().ok_or("ITEMS: missing count")?.parse().map_err(|_| "bad count")?;
+    let mut items = Vec::with_capacity(n.min(MAX_WIRE_BATCH));
+    for _ in 0..n {
+        let tok = it.next().ok_or("ITEMS: truncated")?;
+        let (d, p) = tok.split_once(':').ok_or("ITEMS: bad pair")?;
+        items.push((d.parse().map_err(|_| "bad dst")?, p.parse().map_err(|_| "bad prob")?));
+    }
+    let cumulative = it
+        .next()
+        .and_then(|s| s.strip_prefix("cum="))
+        .ok_or("ITEMS: missing cum")?
+        .parse()
+        .map_err(|_| "bad cum")?;
+    let scanned = it
+        .next()
+        .and_then(|s| s.strip_prefix("scanned="))
+        .ok_or("ITEMS: missing scanned")?
+        .parse()
+        .map_err(|_| "bad scanned")?;
+    Ok(ItemsBody { items, cumulative, scanned })
 }
 
 impl Response {
     pub fn parse(line: &str) -> Result<Response, String> {
+        if let Some(rest) = line.strip_prefix("MITEMS ") {
+            let mut it = rest.split_ascii_whitespace();
+            let m: usize =
+                it.next().ok_or("MITEMS: missing count")?.parse().map_err(|_| "bad count")?;
+            if m > MAX_WIRE_BATCH {
+                return Err(format!("MITEMS: count {m} exceeds max {MAX_WIRE_BATCH}"));
+            }
+            let mut bodies = Vec::with_capacity(m);
+            for _ in 0..m {
+                match it.next() {
+                    Some("ITEMS") => bodies.push(parse_items_body(&mut it)?),
+                    other => return Err(format!("MITEMS: expected ITEMS block, got {other:?}")),
+                }
+            }
+            return Ok(Response::MultiItems(bodies));
+        }
         if let Some(rest) = line.strip_prefix("OK") {
             return Ok(Response::Ok(rest.trim().to_string()));
         }
@@ -99,33 +205,29 @@ impl Response {
         }
         if let Some(rest) = line.strip_prefix("ITEMS ") {
             let mut it = rest.split_ascii_whitespace();
-            let n: usize =
-                it.next().ok_or("ITEMS: missing count")?.parse().map_err(|_| "bad count")?;
-            let mut items = Vec::with_capacity(n);
-            for _ in 0..n {
-                let tok = it.next().ok_or("ITEMS: truncated")?;
-                let (d, p) = tok.split_once(':').ok_or("ITEMS: bad pair")?;
-                items.push((
-                    d.parse().map_err(|_| "bad dst")?,
-                    p.parse().map_err(|_| "bad prob")?,
-                ));
-            }
-            let cum = it
-                .next()
-                .and_then(|s| s.strip_prefix("cum="))
-                .ok_or("ITEMS: missing cum")?
-                .parse()
-                .map_err(|_| "bad cum")?;
-            let scanned = it
-                .next()
-                .and_then(|s| s.strip_prefix("scanned="))
-                .ok_or("ITEMS: missing scanned")?
-                .parse()
-                .map_err(|_| "bad scanned")?;
-            return Ok(Response::Items { items, cumulative: cum, scanned });
+            let body = parse_items_body(&mut it)?;
+            return Ok(Response::Items {
+                items: body.items,
+                cumulative: body.cumulative,
+                scanned: body.scanned,
+            });
         }
         Err(format!("unparseable response {line:?}"))
     }
+}
+
+/// Write one `ITEMS` payload; shared by both display arms.
+fn fmt_items_body(
+    f: &mut fmt::Formatter<'_>,
+    items: &[(u64, f64)],
+    cumulative: f64,
+    scanned: usize,
+) -> fmt::Result {
+    write!(f, "ITEMS {}", items.len())?;
+    for (d, p) in items {
+        write!(f, " {d}:{p:.6}")?;
+    }
+    write!(f, " cum={cumulative:.6} scanned={scanned}")
 }
 
 impl fmt::Display for Response {
@@ -135,11 +237,15 @@ impl fmt::Display for Response {
             Response::Ok(msg) => write!(f, "OK {msg}"),
             Response::Err(msg) => write!(f, "ERR {msg}"),
             Response::Items { items, cumulative, scanned } => {
-                write!(f, "ITEMS {}", items.len())?;
-                for (d, p) in items {
-                    write!(f, " {d}:{p:.6}")?;
+                fmt_items_body(f, items, *cumulative, *scanned)
+            }
+            Response::MultiItems(bodies) => {
+                write!(f, "MITEMS {}", bodies.len())?;
+                for b in bodies {
+                    write!(f, " ")?;
+                    fmt_items_body(f, &b.items, b.cumulative, b.scanned)?;
                 }
-                write!(f, " cum={cumulative:.6} scanned={scanned}")
+                Ok(())
             }
         }
     }

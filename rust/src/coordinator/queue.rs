@@ -6,9 +6,17 @@
 //! about apply to the *data structure* operations, which happen on the
 //! consumer side of this queue (or bypass it entirely via
 //! `Engine::observe_direct`).
+//!
+//! The engine instantiates one of these *per shard* (batch-first refactor):
+//! producers route by shard hash, each consumer drains only its own shards,
+//! so the queue lock is contended by `producers + 1` threads instead of
+//! every ingest worker in the process. Bulk transfer happens through
+//! [`BoundedQueue::push_bulk`] / [`BoundedQueue::try_pop_batch`] — one lock
+//! acquisition per batch, not per item.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 struct State<T> {
     items: VecDeque<T>,
@@ -102,6 +110,74 @@ impl<T> BoundedQueue<T> {
                 return Vec::new();
             }
             s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Blocking bulk push: enqueue every item in order, waiting for space
+    /// as needed (one lock acquisition per free-capacity window instead of
+    /// one per item). Returns the number of items actually enqueued — short
+    /// only if the queue is closed mid-push.
+    pub fn push_bulk(&self, items: Vec<T>) -> usize {
+        let mut pushed = 0;
+        let mut it = items.into_iter();
+        let mut pending = it.next();
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return pushed;
+            }
+            while s.items.len() < self.capacity {
+                match pending.take() {
+                    Some(x) => {
+                        s.items.push_back(x);
+                        pushed += 1;
+                        pending = it.next();
+                    }
+                    None => {
+                        self.not_empty.notify_all();
+                        return pushed;
+                    }
+                }
+            }
+            self.not_empty.notify_all();
+            s = self.not_full.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking batch pop: up to `max` items, possibly empty.
+    pub fn try_pop_batch(&self, max: usize) -> Vec<T> {
+        let mut s = self.state.lock().unwrap();
+        if s.items.is_empty() {
+            return Vec::new();
+        }
+        let take = s.items.len().min(max);
+        let out: Vec<T> = s.items.drain(..take).collect();
+        self.not_full.notify_all();
+        out
+    }
+
+    /// Batch pop that waits up to `timeout` for items. Returns an empty vec
+    /// on timeout or once the queue is closed *and* drained — callers that
+    /// own several queues use this to park without missing a close.
+    pub fn pop_batch_timeout(&self, max: usize, timeout: Duration) -> Vec<T> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.items.is_empty() {
+                let take = s.items.len().min(max);
+                let out: Vec<T> = s.items.drain(..take).collect();
+                self.not_full.notify_all();
+                return out;
+            }
+            if s.closed {
+                return Vec::new();
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Vec::new();
+            }
+            let (guard, _) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
         }
     }
 

@@ -10,7 +10,7 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use super::engine::Engine;
-use super::protocol::{Request, Response};
+use super::protocol::{ItemsBody, Request, Response, MAX_WIRE_BATCH};
 
 pub struct Server {
     engine: Arc<Engine>,
@@ -59,7 +59,7 @@ impl Server {
                     let conns = Arc::clone(&self.connections);
                     conns.fetch_add(1, Ordering::Relaxed);
                     std::thread::spawn(move || {
-                        let _ = handle_connection(engine, stream, stop);
+                        let _ = handle_connection(engine, stream, stop, Arc::clone(&conns));
                         conns.fetch_sub(1, Ordering::Relaxed);
                     });
                 }
@@ -102,6 +102,7 @@ fn handle_connection(
     engine: Arc<Engine>,
     stream: TcpStream,
     stop: Arc<AtomicBool>,
+    connections: Arc<AtomicUsize>,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -122,20 +123,28 @@ fn handle_connection(
                 writer.flush()?;
                 return Ok(());
             }
-            Ok(req) => dispatch(&engine, req),
+            Ok(req) => dispatch(&engine, req, connections.load(Ordering::Relaxed)),
         };
         writeln!(writer, "{resp}")?;
         writer.flush()?;
     }
 }
 
-fn dispatch(engine: &Engine, req: Request) -> Response {
+fn dispatch(engine: &Engine, req: Request, live_connections: usize) -> Response {
     match req {
         Request::Observe { src, dst } => {
             if engine.observe(src, dst) {
                 Response::Ok(String::new())
             } else {
                 Response::Err("shutting down".into())
+            }
+        }
+        Request::ObserveBatch { pairs } => {
+            let accepted = engine.observe_batch(&pairs);
+            if accepted == pairs.len() {
+                Response::Ok(format!("n={accepted}"))
+            } else {
+                Response::Err(format!("shutting down (accepted {accepted}/{})", pairs.len()))
             }
         }
         Request::Recommend { src, threshold } => {
@@ -146,6 +155,14 @@ fn dispatch(engine: &Engine, req: Request) -> Response {
             let r = engine.infer_topk(src, k);
             Response::Items { items: r.items, cumulative: r.cumulative, scanned: r.scanned }
         }
+        Request::MultiTopK { srcs, k } => Response::MultiItems(
+            srcs.iter()
+                .map(|&src| {
+                    let r = engine.infer_topk(src, k);
+                    ItemsBody { items: r.items, cumulative: r.cumulative, scanned: r.scanned }
+                })
+                .collect(),
+        ),
         Request::Prob { src, dst } => match engine.shard(src).probability(src, dst) {
             Some(p) => Response::Ok(format!("{p:.6}")),
             None => Response::Err("no such edge".into()),
@@ -158,7 +175,7 @@ fn dispatch(engine: &Engine, req: Request) -> Response {
             let s = engine.stats();
             Response::Ok(format!(
                 "shards={} nodes={} edges={} observes={} queries={} dropped={} \
-                 queue_depth={} q_p50_ns={} q_p99_ns={}",
+                 queue_depth={} q_p50_ns={} q_p99_ns={} conns={} update_rate={:.0}",
                 s.shards,
                 s.nodes,
                 s.edges,
@@ -167,7 +184,9 @@ fn dispatch(engine: &Engine, req: Request) -> Response {
                 s.dropped_updates,
                 s.queue_depth,
                 s.query_ns_p50,
-                s.query_ns_p99
+                s.query_ns_p99,
+                live_connections,
+                s.update_rate
             ))
         }
         Request::Ping => Response::Ok("pong".into()),
@@ -191,11 +210,7 @@ impl Client {
     pub fn request(&mut self, req: &Request) -> Result<Response> {
         writeln!(self.writer, "{}", req.encode())?;
         self.writer.flush()?;
-        let mut line = String::new();
-        if self.reader.read_line(&mut line)? == 0 {
-            anyhow::bail!("server closed connection");
-        }
-        Response::parse(line.trim_end()).map_err(|e| anyhow::anyhow!(e))
+        self.read_response()
     }
 
     pub fn observe(&mut self, src: u64, dst: u64) -> Result<()> {
@@ -203,6 +218,106 @@ impl Client {
             Response::Ok(_) => Ok(()),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
+    }
+
+    /// Record a batch of transitions in one round trip. Batches above the
+    /// wire limit are split into multiple `OBSERVEB` requests that are all
+    /// pipelined behind a single flush (responses read back afterwards).
+    /// Returns the number of updates the server accepted.
+    pub fn observe_batch(&mut self, pairs: &[(u64, u64)]) -> Result<usize> {
+        if pairs.is_empty() {
+            return Ok(0);
+        }
+        let mut nchunks = 0;
+        for chunk in pairs.chunks(MAX_WIRE_BATCH) {
+            writeln!(
+                self.writer,
+                "{}",
+                Request::ObserveBatch { pairs: chunk.to_vec() }.encode()
+            )?;
+            nchunks += 1;
+        }
+        self.writer.flush()?;
+        // Read every pipelined response even after a failure: bailing early
+        // would leave unread responses in the buffer and desync every later
+        // request on this connection.
+        let mut accepted = 0;
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..nchunks {
+            match self.read_response() {
+                Ok(Response::Ok(msg)) => {
+                    match msg.strip_prefix("n=").and_then(|s| s.parse::<usize>().ok()) {
+                        Some(n) => accepted += n,
+                        None => {
+                            first_err.get_or_insert(anyhow::anyhow!("bad OBSERVEB ack {msg:?}"));
+                        }
+                    }
+                }
+                Ok(Response::Err(e)) => {
+                    first_err.get_or_insert(anyhow::anyhow!("observe_batch rejected: {e}"));
+                }
+                Ok(other) => {
+                    first_err.get_or_insert(anyhow::anyhow!("unexpected response {other:?}"));
+                }
+                // I/O error: the connection is gone anyway, stop reading.
+                Err(e) => return Err(e),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(accepted),
+        }
+    }
+
+    /// Top-k for many src nodes in one round trip (`MTOPK`), pipelining
+    /// chunks behind a single flush. Answers come back in `srcs` order.
+    pub fn topk_batch(&mut self, srcs: &[u64], k: usize) -> Result<Vec<Vec<(u64, f64)>>> {
+        if srcs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut nchunks = 0;
+        for chunk in srcs.chunks(MAX_WIRE_BATCH) {
+            writeln!(
+                self.writer,
+                "{}",
+                Request::MultiTopK { srcs: chunk.to_vec(), k }.encode()
+            )?;
+            nchunks += 1;
+        }
+        self.writer.flush()?;
+        // As in `observe_batch`: drain every pipelined response before
+        // surfacing an error, or the connection desyncs.
+        let mut out = Vec::with_capacity(srcs.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..nchunks {
+            match self.read_response() {
+                Ok(Response::MultiItems(bodies)) => {
+                    out.extend(bodies.into_iter().map(|b| b.items));
+                }
+                Ok(Response::Err(e)) => {
+                    first_err.get_or_insert(anyhow::anyhow!("topk_batch rejected: {e}"));
+                }
+                Ok(other) => {
+                    first_err.get_or_insert(anyhow::anyhow!("unexpected response {other:?}"));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if out.len() != srcs.len() {
+            anyhow::bail!("topk_batch: {} answers for {} queries", out.len(), srcs.len());
+        }
+        Ok(out)
+    }
+
+    fn read_response(&mut self) -> Result<Response> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed connection");
+        }
+        Response::parse(line.trim_end()).map_err(|e| anyhow::anyhow!(e))
     }
 
     pub fn recommend(&mut self, src: u64, threshold: f64) -> Result<Vec<(u64, f64)>> {

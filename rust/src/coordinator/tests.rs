@@ -108,6 +108,57 @@ fn queue_mpmc_stress() {
     assert_eq!(sum.load(Ordering::Relaxed), 3 * PER * (PER + 1) / 2);
 }
 
+#[test]
+fn queue_try_pop_batch_nonblocking() {
+    let q = BoundedQueue::new(8);
+    assert!(q.try_pop_batch(4).is_empty()); // empty: returns immediately
+    for i in 0..6 {
+        q.push(i);
+    }
+    assert_eq!(q.try_pop_batch(4), vec![0, 1, 2, 3]);
+    assert_eq!(q.try_pop_batch(100), vec![4, 5]);
+    assert!(q.try_pop_batch(4).is_empty());
+}
+
+#[test]
+fn queue_push_bulk_blocks_for_space() {
+    let q = Arc::new(BoundedQueue::new(4));
+    let q2 = Arc::clone(&q);
+    let t = std::thread::spawn(move || q2.push_bulk((0..10).collect()));
+    // Drain until the producer can finish.
+    let mut got = Vec::new();
+    while got.len() < 10 {
+        got.extend(q.pop_batch_timeout(16, Duration::from_millis(50)));
+    }
+    assert_eq!(t.join().unwrap(), 10);
+    assert_eq!(got, (0..10).collect::<Vec<_>>());
+}
+
+#[test]
+fn queue_push_bulk_short_on_close() {
+    let q = BoundedQueue::new(4);
+    q.close();
+    assert_eq!(q.push_bulk(vec![1, 2, 3]), 0);
+    let q = BoundedQueue::new(8);
+    assert_eq!(q.push_bulk(vec![1, 2, 3]), 3);
+    assert_eq!(q.pop_batch(8), vec![1, 2, 3]);
+}
+
+#[test]
+fn queue_pop_batch_timeout_semantics() {
+    let q: BoundedQueue<u32> = BoundedQueue::new(4);
+    let t0 = std::time::Instant::now();
+    assert!(q.pop_batch_timeout(4, Duration::from_millis(10)).is_empty());
+    assert!(t0.elapsed() >= Duration::from_millis(8));
+    q.push(7);
+    assert_eq!(q.pop_batch_timeout(4, Duration::from_millis(10)), vec![7]);
+    q.close();
+    // Closed + drained: returns immediately, no timeout wait.
+    let t0 = std::time::Instant::now();
+    assert!(q.pop_batch_timeout(4, Duration::from_secs(5)).is_empty());
+    assert!(t0.elapsed() < Duration::from_secs(1));
+}
+
 // ---- engine ----
 
 #[test]
@@ -171,14 +222,104 @@ fn engine_lossy_observe_counts_drops() {
     engine.shutdown();
 }
 
+#[test]
+fn engine_observe_batch_routes_and_applies() {
+    let engine = Engine::new(&test_config(), 2);
+    let pairs: Vec<(u64, u64)> = (0..500u64).map(|i| (i % 13, i % 7)).collect();
+    assert_eq!(engine.observe_batch(&pairs), 500);
+    engine.quiesce();
+    let s = engine.stats();
+    assert_eq!(s.observes, 500);
+    assert_eq!(s.dropped_updates, 0);
+    assert!(s.update_rate > 0.0, "update_rate {}", s.update_rate);
+    engine.shutdown();
+    // After shutdown the queues are closed: both paths refuse.
+    assert!(!engine.observe(1, 2));
+    assert_eq!(engine.observe_batch(&pairs), 0);
+}
+
+/// The queued shard-affine path (single or batched) must build exactly the
+/// model the direct path builds — per-shard FIFO with one consumer per
+/// shard makes queued ingestion deterministic.
+#[test]
+fn queued_batched_and_direct_ingest_identical() {
+    let mut rng = crate::testutil::Rng64::new(0x5EED);
+    let pairs: Vec<(u64, u64)> = (0..20_000)
+        .map(|_| (rng.next_below(64), rng.next_below(32)))
+        .collect();
+
+    let direct = Engine::new(&test_config(), 0);
+    for &(s, d) in &pairs {
+        direct.observe_direct(s, d);
+    }
+
+    let queued_single = Engine::new(&test_config(), 2);
+    for &(s, d) in &pairs {
+        assert!(queued_single.observe(s, d));
+    }
+    queued_single.quiesce();
+
+    let queued_batched = Engine::new(&test_config(), 2);
+    for chunk in pairs.chunks(173) {
+        assert_eq!(queued_batched.observe_batch(chunk), chunk.len());
+    }
+    queued_batched.quiesce();
+
+    let direct_batched = Engine::new(&test_config(), 0);
+    for chunk in pairs.chunks(173) {
+        direct_batched.observe_batch_direct(chunk);
+    }
+
+    let reference = direct.export();
+    assert_eq!(reference, queued_single.export());
+    assert_eq!(reference, queued_batched.export());
+    assert_eq!(reference, direct_batched.export());
+    for chain in queued_batched.chains() {
+        chain.check_invariants().unwrap();
+    }
+    for e in [direct, queued_single, queued_batched, direct_batched] {
+        e.shutdown();
+    }
+}
+
+/// More workers than shards: surplus workers own nothing and must exit
+/// cleanly; ingestion still drains.
+#[test]
+fn engine_more_workers_than_shards() {
+    let cfg = ServerConfig { shards: 1, queue_capacity: 1024, ..Default::default() };
+    let engine = Engine::new(&cfg, 4);
+    for i in 0..200u64 {
+        assert!(engine.observe(i % 9, i % 5));
+    }
+    engine.quiesce();
+    assert_eq!(engine.stats().observes, 200);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_meters_per_update_not_per_batch() {
+    let engine = Engine::new(&test_config(), 1);
+    let pairs: Vec<(u64, u64)> = (0..1_000u64).map(|i| (i % 11, i % 3)).collect();
+    assert_eq!(engine.observe_batch(&pairs), 1_000);
+    engine.quiesce();
+    let s = engine.stats();
+    // Every applied update counted (previously one mark per drained batch,
+    // undercounting the rate by up to the batch size).
+    assert_eq!(s.applied_updates, 1_000);
+    assert!(s.update_rate > 0.0);
+    engine.shutdown();
+}
+
 // ---- protocol ----
 
 #[test]
 fn protocol_request_roundtrip() {
     for req in [
         Request::Observe { src: 1, dst: 2 },
+        Request::ObserveBatch { pairs: vec![(1, 2), (3, 4), (5, 6)] },
         Request::Recommend { src: 3, threshold: 0.9 },
         Request::TopK { src: 4, k: 7 },
+        Request::MultiTopK { srcs: vec![4, 9, 11], k: 3 },
         Request::Prob { src: 1, dst: 9 },
         Request::Decay,
         Request::Stats,
@@ -201,9 +342,39 @@ fn protocol_rejects_malformed() {
         "REC 1 1.5",
         "REC 1 -0.1",
         "TOPK 1",
+        "OBSERVEB",
+        "OBSERVEB 0",
+        "OBSERVEB 2 1 2",       // truncated
+        "OBSERVEB 1 1 2 3 4",   // trailing
+        "OBSERVEB 99999999 1 2", // over the wire cap
+        "MTOPK",
+        "MTOPK 0 3",
+        "MTOPK 2 3 7",          // truncated
+        "MTOPK 1 3 7 8",        // trailing
     ] {
         assert!(Request::parse(bad).is_err(), "{bad:?} should fail");
     }
+}
+
+#[test]
+fn protocol_multi_items_roundtrip() {
+    let r = Response::MultiItems(vec![
+        ItemsBody { items: vec![(5, 0.5), (9, 0.25)], cumulative: 0.75, scanned: 2 },
+        ItemsBody { items: vec![], cumulative: 0.0, scanned: 0 },
+        ItemsBody { items: vec![(1, 1.0)], cumulative: 1.0, scanned: 1 },
+    ]);
+    match Response::parse(&r.to_string()).unwrap() {
+        Response::MultiItems(bodies) => {
+            assert_eq!(bodies.len(), 3);
+            assert_eq!(bodies[0].items[0].0, 5);
+            assert!((bodies[0].cumulative - 0.75).abs() < 1e-6);
+            assert!(bodies[1].items.is_empty());
+            assert_eq!(bodies[2].scanned, 1);
+        }
+        other => panic!("{other:?}"),
+    }
+    assert!(Response::parse("MITEMS 2 ITEMS 0 cum=0.0 scanned=0").is_err()); // short
+    assert!(Response::parse("MITEMS 1 NOPE").is_err());
 }
 
 #[test]
@@ -293,6 +464,34 @@ fn tcp_server_end_to_end() {
     // Clean shutdown.
     assert_eq!(client.request(&Request::Quit).unwrap(), Response::Ok("bye".into()));
     drop(handle);
+    engine.shutdown();
+}
+
+#[test]
+fn tcp_batched_observe_and_multi_topk() {
+    let engine = Engine::new(&test_config(), 2);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+
+    let mut client = Client::connect(addr).unwrap();
+    // 1 -> 2 (x3), 1 -> 3 (x1), 9 -> 4 (x2) in one bulk request.
+    let pairs = vec![(1, 2), (1, 2), (1, 2), (1, 3), (9, 4), (9, 4)];
+    assert_eq!(client.observe_batch(&pairs).unwrap(), 6);
+    engine.quiesce();
+
+    let answers = client.topk_batch(&[1, 9, 777], 2).unwrap();
+    assert_eq!(answers.len(), 3);
+    assert_eq!(answers[0][0].0, 2);
+    assert!((answers[0][0].1 - 0.75).abs() < 1e-6);
+    assert_eq!(answers[1], vec![(4, 1.0)]);
+    assert!(answers[2].is_empty()); // unknown src
+
+    // STATS now surfaces connection count and the applied-update rate.
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("conns=1"), "{stats}");
+    assert!(stats.contains("update_rate="), "{stats}");
+    assert!(stats.contains("observes=6"), "{stats}");
     engine.shutdown();
 }
 

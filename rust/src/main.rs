@@ -35,6 +35,27 @@ fn app() -> App {
                 positionals: vec![("request", "e.g. 'TOPK 5 3' or 'STATS'")],
             },
             Command {
+                name: "bench",
+                help: "in-process ingest benchmark sweeping batch size",
+                opts: vec![
+                    Opt { name: "threads", help: "writer threads", default: Some("4") },
+                    Opt {
+                        name: "batches",
+                        help: "comma-separated batch sizes to sweep",
+                        default: Some("1,16,256"),
+                    },
+                    Opt { name: "shards", help: "shards (0 = CPU count)", default: Some("0") },
+                    Opt { name: "millis", help: "measure window per point", default: Some("400") },
+                    Opt {
+                        name: "queued",
+                        help: "drive the queued engine path (per-shard queues + workers) \
+                               instead of the chain directly",
+                        default: None,
+                    },
+                ],
+                positionals: vec![],
+            },
+            Command {
                 name: "info",
                 help: "print artifact/runtime information",
                 opts: vec![],
@@ -56,6 +77,7 @@ fn main() {
     let result = match matches.command.as_str() {
         "serve" => serve(&matches),
         "client" => client(&matches),
+        "bench" => bench(&matches),
         "info" => info(),
         _ => unreachable!(),
     };
@@ -99,8 +121,16 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
         std::thread::sleep(Duration::from_secs(10));
         let s = engine.stats();
         println!(
-            "[stats] nodes={} edges={} observes={} queries={} queue={} p50={}ns p99={}ns",
-            s.nodes, s.edges, s.observes, s.queries, s.queue_depth, s.query_ns_p50, s.query_ns_p99
+            "[stats] nodes={} edges={} observes={} queries={} queue={} p50={}ns p99={}ns \
+             rate={:.0}/s",
+            s.nodes,
+            s.edges,
+            s.observes,
+            s.queries,
+            s.queue_depth,
+            s.query_ns_p50,
+            s.query_ns_p99,
+            s.update_rate
         );
         let _ = &handle;
     }
@@ -112,6 +142,98 @@ fn client(m: &Matches) -> anyhow::Result<()> {
     let req = Request::parse(line).map_err(|e| anyhow::anyhow!(e))?;
     let mut client = Client::connect(addr)?;
     println!("{}", client.request(&req)?);
+    Ok(())
+}
+
+/// Batch-size sweep over the ingest hot path: either the chain's
+/// `observe_batch` directly, or the whole queued pipeline (per-shard
+/// queues + shard-affine workers) with `--queued`.
+fn bench(m: &Matches) -> anyhow::Result<()> {
+    use mcprioq::bench_harness::{fmt_rate, parse_batch_list, Bench, Table};
+    use mcprioq::chain::{ChainConfig, McPrioQ};
+    use mcprioq::coordinator::Engine;
+    use mcprioq::workload::{TransitionStream, ZipfChainStream};
+
+    let threads = m.get_u64("threads").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(4) as usize;
+    let shards = m.get_u64("shards").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(0) as usize;
+    let millis = m.get_u64("millis").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(400);
+    let batches = parse_batch_list(m.get_or("batches", "1,16,256"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let queued = m.flag("queued");
+    let duration = Duration::from_millis(millis.max(50));
+    let bench = Bench::quick();
+
+    let path = if queued { "engine-queued" } else { "chain-direct" };
+    println!("mcprioq bench: {path}, {threads} threads, {}ms/point", duration.as_millis());
+    let mut table =
+        Table::new("cli_batch_sweep", &["path", "threads", "batch", "updates_per_s", "vs_first"]);
+    let mut base = 0.0;
+    for (point, &batch) in batches.iter().enumerate() {
+        let chain = Arc::new(McPrioQ::new(ChainConfig::default()));
+        // The engine only matters on the queued path; on the chain-direct
+        // path build the smallest possible one (1 shard, 0 workers) so no
+        // idle queues/threads sit behind the measurement.
+        let config = mcprioq::config::ServerConfig {
+            shards: if queued { shards } else { 1 },
+            queue_capacity: 65_536,
+            ..Default::default()
+        };
+        let engine = Engine::new(&config, if queued { threads.max(1) } else { 0 });
+        let applied_before = engine.stats().applied_updates;
+        // Queued writes are asynchronous: the thunks count nothing and the
+        // rate comes from the applied-update counter over the window, so
+        // backlog that shutdown would discard is never credited.
+        let thunk_rate = bench.run_threads(threads.max(1), duration, |t| {
+            let chain = Arc::clone(&chain);
+            let engine = Arc::clone(&engine);
+            let mut stream = ZipfChainStream::new(10_000, 24, 1.1, t as u64 + 1);
+            let mut buf = Vec::with_capacity(batch);
+            move || {
+                buf.clear();
+                for _ in 0..batch {
+                    buf.push(stream.next_transition());
+                }
+                if queued {
+                    if batch == 1 {
+                        engine.observe(buf[0].0, buf[0].1);
+                    } else {
+                        engine.observe_batch(&buf);
+                    }
+                    0
+                } else {
+                    if batch == 1 {
+                        chain.observe(buf[0].0, buf[0].1);
+                    } else {
+                        chain.observe_batch(&buf);
+                    }
+                    batch as u64
+                }
+            }
+        });
+        let applied_after = engine.stats().applied_updates;
+        let rate = if queued {
+            (applied_after - applied_before) as f64 / duration.as_secs_f64()
+        } else {
+            thunk_rate
+        };
+        // First sweep point is the baseline even if it measured 0 (a 0.0
+        // sentinel would silently rebase later ratios and print NaN).
+        if point == 0 {
+            base = rate;
+        }
+        let vs_first =
+            if base > 0.0 { format!("{:.2}", rate / base) } else { "-".to_string() };
+        table.row(&[
+            path.to_string(),
+            threads.to_string(),
+            batch.to_string(),
+            format!("{rate:.0}"),
+            vs_first,
+        ]);
+        println!("  batch {batch:>5}: {}", fmt_rate(rate));
+        engine.shutdown();
+    }
+    table.finish();
     Ok(())
 }
 

@@ -119,6 +119,10 @@ impl Meter {
     }
 
     /// Events/sec since the previous `rate()` call (or since creation).
+    ///
+    /// The window is shared: every caller advances it. Concurrent callers
+    /// can interleave the two swaps, so both deltas saturate — a racing
+    /// read yields a briefly pessimistic rate, never a u64 wraparound.
     pub fn rate(&self) -> f64 {
         let now = self.epoch.elapsed().as_nanos() as u64;
         let prev_t = self.last_at_nanos.swap(now, Ordering::Relaxed);
@@ -128,7 +132,7 @@ impl Meter {
         if dt <= 0.0 {
             return 0.0;
         }
-        (cur - prev_c) as f64 / dt
+        cur.saturating_sub(prev_c) as f64 / dt
     }
 }
 

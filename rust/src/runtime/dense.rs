@@ -7,7 +7,8 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
-use super::loader::{ArtifactKind, BufferBox, ExeHandle, XlaRuntime};
+use super::loader::{BufferBox, ExeHandle, XlaRuntime};
+use super::manifest::ArtifactKind;
 use crate::baselines::MarkovModel;
 use crate::chain::Recommendation;
 

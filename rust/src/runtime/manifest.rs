@@ -1,0 +1,101 @@
+//! Artifact manifest parsing — xla-independent, so manifest inspection
+//! (and its tests) work even when the `xla` feature is disabled.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// The three entry points the AOT pipeline emits per size variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Infer,
+    Update,
+    Decay,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "infer" => ArtifactKind::Infer,
+            "update" => ArtifactKind::Update,
+            "decay" => ArtifactKind::Decay,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One manifest line: `kind n b k filename`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub kind: ArtifactKind,
+    /// Dense node capacity (matrix is n x n).
+    pub n: usize,
+    /// Batch size (0 where not applicable).
+    pub b: usize,
+    /// Top-k items (0 where not applicable).
+    pub k: usize,
+    pub file: String,
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {}: expected 5 fields, got {}", i + 1, parts.len());
+            }
+            entries.push(ArtifactMeta {
+                kind: ArtifactKind::parse(parts[0])?,
+                n: parts[1].parse().context("n")?,
+                b: parts[2].parse().context("b")?,
+                k: parts[3].parse().context("k")?,
+                file: parts[4].to_string(),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest is empty");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Dense capacities available, ascending.
+    pub fn capacities(&self) -> Vec<usize> {
+        let mut ns: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Infer)
+            .map(|e| e.n)
+            .collect();
+        ns.sort_unstable();
+        ns.dedup();
+        ns
+    }
+
+    /// Smallest variant with capacity >= `nodes`.
+    pub fn variant_for(&self, nodes: usize) -> Option<usize> {
+        self.capacities().into_iter().find(|&n| n >= nodes)
+    }
+
+    pub fn entry(&self, kind: ArtifactKind, n: usize) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.kind == kind && e.n == n)
+    }
+}

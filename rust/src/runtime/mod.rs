@@ -14,12 +14,27 @@
 //! lowered *untupled*, so their output buffer is fed straight back as the
 //! next call's input — the dense state never round-trips through the host
 //! on the update path.
+//!
+//! The PJRT path needs the external `xla` crate and is gated behind the
+//! `xla` cargo feature; without it (the offline default) an API-identical
+//! stub is compiled whose `XlaRuntime::new` always fails, and every caller
+//! skips the dense path (see `stub.rs`).
 
+#[cfg(feature = "xla")]
 mod dense;
+#[cfg(feature = "xla")]
 mod loader;
+mod manifest;
+#[cfg(not(feature = "xla"))]
+mod stub;
 
+#[cfg(feature = "xla")]
 pub use dense::DenseXlaChain;
-pub use loader::{ArtifactKind, ArtifactMeta, BufferBox, ExeHandle, Manifest, XlaRuntime};
+#[cfg(feature = "xla")]
+pub use loader::{BufferBox, ExeHandle, XlaRuntime};
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+#[cfg(not(feature = "xla"))]
+pub use stub::{BufferBox, DenseXlaChain, ExeHandle, XlaRuntime};
 
 /// Resolve the artifacts directory: `$MCPRIOQ_ARTIFACTS` or `./artifacts`
 /// (relative to the workspace root, where `make artifacts` puts them).

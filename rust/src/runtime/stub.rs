@@ -1,0 +1,119 @@
+//! Offline stand-in for the PJRT runtime, compiled when the `xla` feature
+//! is off (the default — the external `xla` crate cannot be vendored in the
+//! offline build container).
+//!
+//! Public surface mirrors `loader.rs`/`dense.rs` exactly, so every caller
+//! compiles unchanged; the only behavioural difference is that
+//! [`XlaRuntime::new`] always fails, which every caller already treats as
+//! "dense engine unavailable, skip it" (benches, examples, and the
+//! differential test all branch on that `Result`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::manifest::Manifest;
+use crate::baselines::MarkovModel;
+use crate::chain::Recommendation;
+
+/// An opaque handle to a compiled executable (never issued by the stub).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExeHandle(#[allow(dead_code)] usize);
+
+/// A device buffer slot (never issued by the stub).
+pub struct BufferBox {
+    _confined: (),
+}
+
+impl BufferBox {
+    /// An empty placeholder, mirroring the real API.
+    pub fn poisoned() -> Self {
+        BufferBox { _confined: () }
+    }
+}
+
+/// Stub runtime: manifest parsing works, client creation does not.
+pub struct XlaRuntime {
+    manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Always fails: the PJRT client needs the `xla` feature. The manifest
+    /// is still loaded first so the error message distinguishes "no
+    /// artifacts" from "no runtime support".
+    pub fn new(dir: &Path) -> Result<Self> {
+        let _manifest = Manifest::load(dir)?;
+        bail!("PJRT/XLA support not compiled in (rebuild with `--features xla`)")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (xla feature disabled)".to_string()
+    }
+}
+
+/// Stub dense engine; construction always fails, methods are unreachable.
+pub struct DenseXlaChain {
+    #[allow(dead_code)]
+    _rt: Arc<XlaRuntime>,
+}
+
+impl DenseXlaChain {
+    pub fn new(_rt: Arc<XlaRuntime>, _nodes: usize) -> Result<Self> {
+        bail!("dense engine requires the `xla` feature")
+    }
+
+    pub fn capacity(&self) -> usize {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+
+    pub fn usable_capacity(&self) -> usize {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+
+    pub fn batch_size(&self) -> usize {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+
+    pub fn k(&self) -> usize {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+
+    pub fn try_observe(&self, _src: u64, _dst: u64) -> Result<()> {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+}
+
+impl MarkovModel for DenseXlaChain {
+    fn name(&self) -> &'static str {
+        "dense-xla-stub"
+    }
+
+    fn observe(&self, _src: u64, _dst: u64) {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+
+    fn infer_threshold(&self, _src: u64, _threshold: f64) -> Recommendation {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+
+    fn infer_topk(&self, _src: u64, _k: usize) -> Recommendation {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+
+    fn decay(&self) -> (u64, usize) {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+
+    fn edge_count(&self) -> usize {
+        unreachable!("stub DenseXlaChain cannot be constructed")
+    }
+}

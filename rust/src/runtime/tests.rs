@@ -1,11 +1,10 @@
 //! Runtime tests: manifest parsing (always) and end-to-end PJRT execution
-//! (when `artifacts/` exists — `make artifacts` builds it; tests that need
-//! it are skipped gracefully otherwise so `cargo test` works standalone).
+//! (`xla` feature builds only, and when `artifacts/` exists — `make
+//! artifacts` builds it; tests that need it are skipped gracefully
+//! otherwise so `cargo test` works standalone).
 
 use super::*;
-use crate::baselines::MarkovModel;
 use std::path::Path;
-use std::sync::Arc;
 
 #[test]
 fn manifest_parses_and_indexes() {
@@ -37,14 +36,20 @@ fn manifest_rejects_garbage() {
     assert!(Manifest::parse(Path::new("/x"), "infer x 8 8 f.hlo.txt\n").is_err());
 }
 
-fn runtime() -> Option<Arc<XlaRuntime>> {
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("skipping PJRT test: no artifacts at {dir:?} (run `make artifacts`)");
-        return None;
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::*;
+    use crate::baselines::MarkovModel;
+    use std::sync::Arc;
+
+    fn runtime() -> Option<Arc<XlaRuntime>> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping PJRT test: no artifacts at {dir:?} (run `make artifacts`)");
+            return None;
+        }
+        Some(Arc::new(XlaRuntime::new(&dir).expect("runtime")))
     }
-    Some(Arc::new(XlaRuntime::new(&dir).expect("runtime")))
-}
 
 #[test]
 fn pjrt_client_comes_up() {
@@ -187,3 +192,4 @@ fn dense_resident_bytes_quadratic() {
     assert_eq!(small.resident_bytes(), 64 * 64 * 4);
     assert_eq!(big.resident_bytes(), 256 * 256 * 4);
 }
+} // mod pjrt

@@ -1,0 +1,127 @@
+//! Batch-first differential oracle: the same input stream driven through
+//! every ingestion shape must build the *same model*.
+//!
+//! Deterministic shapes (compared byte-for-byte via `export()`):
+//!   * single `McPrioQ::observe`
+//!   * `McPrioQ::observe_batch` in arbitrary chunk sizes
+//!   * `Engine` queued single (`observe` -> per-shard queue -> worker)
+//!   * `Engine` queued batched (`observe_batch` -> bulk push -> worker)
+//!
+//! Queued ingestion is deterministic because routing is a pure hash, each
+//! shard queue preserves FIFO, and exactly one worker consumes each shard.
+//!
+//! Plus a concurrent batch-vs-single stress test: interleavings differ, so
+//! exports are compared as canonicalized (sorted) edge multisets, and both
+//! chains must pass `check_invariants` after repair.
+
+use std::sync::Arc;
+
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::config::ServerConfig;
+use mcprioq::coordinator::Engine;
+use mcprioq::testutil::Rng64;
+
+/// A skewed stream with frequent same-src runs (the batch fast path).
+fn stream(len: usize, seed: u64) -> Vec<(u64, u64)> {
+    let mut rng = Rng64::new(seed);
+    let mut out = Vec::with_capacity(len);
+    let mut src = 0u64;
+    for i in 0..len {
+        // Switch src every few transitions so batches contain runs.
+        if i % 4 == 0 {
+            src = rng.next_below(48);
+        }
+        let u = rng.next_f64();
+        let dst = ((u * u) * 96.0) as u64;
+        out.push((src, dst));
+    }
+    out
+}
+
+#[test]
+fn all_ingestion_paths_build_identical_models() {
+    let pairs = stream(30_000, 0xD1FF);
+    let config = ServerConfig { shards: 3, queue_capacity: 4_096, ..Default::default() };
+
+    let single = McPrioQ::new(ChainConfig::default());
+    for &(s, d) in &pairs {
+        single.observe(s, d);
+    }
+    let reference = single.export();
+
+    for chunk_size in [1usize, 7, 256, 5_000] {
+        let batched = McPrioQ::new(ChainConfig::default());
+        for chunk in pairs.chunks(chunk_size) {
+            batched.observe_batch(chunk);
+        }
+        assert_eq!(reference, batched.export(), "chunk size {chunk_size}");
+        batched.check_invariants().unwrap();
+    }
+
+    let queued_single = Engine::new(&config, 2);
+    for &(s, d) in &pairs {
+        assert!(queued_single.observe(s, d));
+    }
+    queued_single.quiesce();
+    assert_eq!(reference, queued_single.export());
+
+    let queued_batched = Engine::new(&config, 3);
+    for chunk in pairs.chunks(211) {
+        assert_eq!(queued_batched.observe_batch(chunk), chunk.len());
+    }
+    queued_batched.quiesce();
+    assert_eq!(reference, queued_batched.export());
+    for chain in queued_batched.chains() {
+        chain.check_invariants().unwrap();
+    }
+
+    queued_single.shutdown();
+    queued_batched.shutdown();
+}
+
+/// Canonicalize an export for cross-interleaving comparison: per-node edge
+/// lists sorted by dst (order within a node depends on tie interleaving).
+fn canonical(mut snap: Vec<(u64, u64, Vec<(u64, u64)>)>) -> Vec<(u64, u64, Vec<(u64, u64)>)> {
+    for (_, _, edges) in &mut snap {
+        edges.sort_unstable();
+    }
+    snap
+}
+
+#[test]
+fn concurrent_batch_vs_single_same_distribution() {
+    const THREADS: u64 = 6;
+    const OPS: u64 = 12_000;
+    let batched = Arc::new(McPrioQ::new(ChainConfig::default()));
+    let single = Arc::new(McPrioQ::new(ChainConfig::default()));
+
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let batched = Arc::clone(&batched);
+            let single = Arc::clone(&single);
+            std::thread::spawn(move || {
+                // Every thread applies the *same* per-thread stream to both
+                // chains: singles to one, batches of 89 to the other.
+                let pairs = stream(OPS as usize, 0xC0FFEE + t);
+                for chunk in pairs.chunks(89) {
+                    for &(s, d) in chunk {
+                        single.observe(s, d);
+                    }
+                    batched.observe_batch(chunk);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    for c in [&batched, &single] {
+        c.repair();
+        c.check_invariants().unwrap();
+        assert_eq!(c.stats().observes, THREADS * OPS);
+    }
+    // Interleavings differ between the two chains, but the aggregate model
+    // must not: same nodes, same edges, same counts.
+    assert_eq!(canonical(single.export()), canonical(batched.export()));
+}
