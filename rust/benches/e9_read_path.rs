@@ -1,0 +1,104 @@
+//! E9 — read-path overhaul acceptance sweep: hot-node `infer_topk` /
+//! `infer_threshold` throughput vs reader thread count, with the
+//! RCU-published prefix-sum snapshots ON vs OFF (the plain list walk —
+//! the paper's read path and the PR-2 ablation baseline).
+//!
+//! Claim shape to reproduce: the list walk pays a dependent-load cache
+//! miss per item, so its per-reader cost grows with the scan depth and its
+//! aggregate throughput saturates as readers contend for the same chain of
+//! lines; the snapshot path is a bounded copy of a contiguous prefix
+//! (topk) or a binary search (threshold) over an immutable array that
+//! scales near-linearly with readers. Acceptance: >= 2x topk throughput
+//! at 8 threads on a hot node (fanout 256, Zipf 1.0, k = 10).
+//!
+//! Fixture and topk sweep come from `bench_harness::hot_node_chain` /
+//! `read_topk_sweep`, shared with `mcprioq bench` (which emits
+//! `BENCH_read.json`), so the CLI artifact and this bench cannot diverge.
+//!
+//! Also reported: the quiescent equivalence check (snapshot answers must
+//! be byte-identical to the list walk) so a perf run doubles as a
+//! correctness probe.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mcprioq::bench_harness::{bench_mode_from_env, fmt_rate, hot_node_chain, read_topk_sweep, Table};
+use mcprioq::chain::{ChainConfig, McPrioQ, Recommendation};
+
+const FANOUT: usize = 256;
+const TRAIN: usize = 400_000;
+const K: usize = 10;
+const SRC: u64 = 0;
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let bench = bench_mode_from_env();
+    let train = if bench.samples <= 3 { TRAIN / 10 } else { TRAIN };
+    let window = Duration::from_millis(if bench.samples <= 3 { 80 } else { 300 });
+
+    let without = hot_node_chain(
+        ChainConfig { snap_enabled: false, ..Default::default() },
+        FANOUT,
+        train,
+        0xE9,
+    );
+    let with_snap = hot_node_chain(ChainConfig::default(), FANOUT, train, 0xE9);
+
+    // Quiescent equivalence: same stream, snapshots on vs off, answers
+    // must match byte-for-byte (items, cumulative, scanned, total).
+    for k in [1, K, FANOUT + 10] {
+        // Query twice: the first read builds the snapshot, the second
+        // serves from it.
+        with_snap.infer_topk(SRC, k);
+        assert_eq!(with_snap.infer_topk(SRC, k), without.infer_topk(SRC, k), "topk {k}");
+    }
+    for t in [0.5, 0.9, 0.99, 1.0] {
+        with_snap.infer_threshold(SRC, t);
+        assert_eq!(
+            with_snap.infer_threshold(SRC, t),
+            without.infer_threshold(SRC, t),
+            "threshold {t}"
+        );
+    }
+    println!("quiescent equivalence: snapshot answers identical to list walk");
+
+    let mut table = Table::new(
+        "e9_read_path",
+        &["mode", "threads", "topk_per_s", "threshold_per_s", "topk_vs_list"],
+    );
+    let mut speedup_at_max = 0.0;
+    for row in read_topk_sweep(&bench, window, &THREADS, K, &without, &with_snap) {
+        // The threshold sweep rides on the same chains: snapshots turn the
+        // O(CDF⁻¹(t)) walk into a binary search.
+        let chain: &Arc<McPrioQ> =
+            if row.mode == "snapshot" { &with_snap } else { &without };
+        let thr_rate = bench.run_threads(row.threads, window, |_| {
+            let chain = Arc::clone(chain);
+            let mut out = Recommendation::default();
+            move || {
+                chain.infer_threshold_into(SRC, 0.9, &mut out);
+                1
+            }
+        });
+        if row.mode == "snapshot" && row.threads == 8 {
+            speedup_at_max = row.vs_list_walk;
+        }
+        table.row(&[
+            row.mode.to_string(),
+            row.threads.to_string(),
+            format!("{:.0}", row.topk_per_s),
+            format!("{thr_rate:.0}"),
+            format!("{:.2}", row.vs_list_walk),
+        ]);
+        println!(
+            "  {:>9} x{}: topk {}, threshold {} ({:.2}x)",
+            row.mode,
+            row.threads,
+            fmt_rate(row.topk_per_s),
+            fmt_rate(thr_rate),
+            row.vs_list_walk
+        );
+    }
+    table.finish();
+    println!("topk speedup at 8 threads: {speedup_at_max:.2}x (target >= 2.0x)");
+}

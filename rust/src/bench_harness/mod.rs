@@ -205,6 +205,161 @@ impl Table {
     }
 }
 
+/// One row of the snapshots-off/on hot-node read sweep
+/// ([`read_topk_sweep`]).
+pub struct ReadSweepRow {
+    pub mode: &'static str,
+    pub threads: usize,
+    pub topk_per_s: f64,
+    /// Snapshot rate over the list-walk rate at the same thread count
+    /// (1.0 for the list-walk rows themselves).
+    pub vs_list_walk: f64,
+}
+
+/// The read-sweep fixture: one hot src node (0) with `fanout` Zipf(1.0)
+/// edges, `train` batch-ingested observations, order repaired. Shared by
+/// `mcprioq bench` and bench `e9_read_path` so the two sweeps measure the
+/// same model shape and cannot silently diverge.
+pub fn hot_node_chain(
+    config: crate::chain::ChainConfig,
+    fanout: usize,
+    train: usize,
+    seed: u64,
+) -> std::sync::Arc<crate::chain::McPrioQ> {
+    let chain = std::sync::Arc::new(crate::chain::McPrioQ::new(config));
+    let zipf = crate::workload::Zipf::new(fanout.max(2), 1.0);
+    let mut rng = crate::testutil::Rng64::new(seed);
+    let mut batch = Vec::with_capacity(1_000);
+    for _ in 0..train.div_ceil(1_000) {
+        batch.clear();
+        batch.extend((0..1_000).map(|_| (0u64, zipf.sample(&mut rng) as u64 + 1)));
+        chain.observe_batch(&batch);
+    }
+    chain.repair();
+    chain
+}
+
+/// Hot-node `infer_topk(0, k)` throughput for every thread count — list
+/// walk first, then snapshots — with the on/off ratio filled in. The two
+/// chains should come from [`hot_node_chain`] with snapshots disabled and
+/// enabled respectively.
+pub fn read_topk_sweep(
+    bench: &Bench,
+    window: Duration,
+    threads: &[usize],
+    k: usize,
+    list_chain: &std::sync::Arc<crate::chain::McPrioQ>,
+    snap_chain: &std::sync::Arc<crate::chain::McPrioQ>,
+) -> Vec<ReadSweepRow> {
+    let mut rows: Vec<ReadSweepRow> = Vec::with_capacity(2 * threads.len());
+    for (mode, chain) in [("list-walk", list_chain), ("snapshot", snap_chain)] {
+        for (i, &t) in threads.iter().enumerate() {
+            let rate = bench.run_threads(t, window, |_| {
+                let chain = std::sync::Arc::clone(chain);
+                let mut out = crate::chain::Recommendation::default();
+                move || {
+                    chain.infer_topk_into(0, k, &mut out);
+                    1
+                }
+            });
+            let vs_list_walk = if mode == "snapshot" {
+                // The list-walk row at the same thread count is at index i.
+                let base = rows[i].topk_per_s;
+                if base > 0.0 {
+                    rate / base
+                } else {
+                    0.0
+                }
+            } else {
+                1.0
+            };
+            rows.push(ReadSweepRow { mode, threads: t, topk_per_s: rate, vs_list_walk });
+        }
+    }
+    rows
+}
+
+/// One JSON value for [`JsonArtifact`] rows (serde is unavailable offline;
+/// the bench artifacts only need numbers, strings, and booleans).
+#[derive(Debug, Clone)]
+pub enum JsonVal {
+    Int(u64),
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl JsonVal {
+    fn render(&self) -> String {
+        match self {
+            JsonVal::Int(v) => v.to_string(),
+            // NaN/Inf are not JSON: degrade to null rather than emit an
+            // unparseable artifact.
+            JsonVal::Num(v) if !v.is_finite() => "null".to_string(),
+            JsonVal::Num(v) => format!("{v}"),
+            JsonVal::Str(s) => {
+                let mut out = String::with_capacity(s.len() + 2);
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+                out
+            }
+            JsonVal::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// Machine-readable benchmark artifact (`BENCH_read.json` /
+/// `BENCH_update.json`): a named row set the CI bench-smoke step uploads,
+/// so the perf trajectory is tracked across commits. Shape:
+/// `{"bench": "...", "rows": [{"k": v, ...}, ...]}`.
+pub struct JsonArtifact {
+    bench: String,
+    rows: Vec<String>,
+}
+
+impl JsonArtifact {
+    pub fn new(bench: &str) -> Self {
+        JsonArtifact { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, fields: &[(&str, JsonVal)]) {
+        let body: Vec<String> = fields
+            .iter()
+            .map(|(k, v)| format!("{}: {}", JsonVal::Str(k.to_string()).render(), v.render()))
+            .collect();
+        self.rows.push(format!("{{{}}}", body.join(", ")));
+    }
+
+    /// Serialize to the final JSON document.
+    pub fn render(&self) -> String {
+        format!(
+            "{{\"bench\": {}, \"rows\": [{}]}}\n",
+            JsonVal::Str(self.bench.clone()).render(),
+            self.rows.join(", ")
+        )
+    }
+
+    /// Write to `path`, creating parent directories. Returns the path.
+    pub fn finish(&self, path: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render())?;
+        Ok(path.to_path_buf())
+    }
+}
+
 /// `--quick` support for bench binaries: scale down when iterating locally.
 pub fn bench_mode_from_env() -> Bench {
     if std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_QUICK").is_ok() {
@@ -300,6 +455,32 @@ mod tests {
         let path = t.finish();
         let content = std::fs::read_to_string(path).unwrap();
         assert_eq!(content, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn json_artifact_renders_and_writes() {
+        let mut a = JsonArtifact::new("read");
+        a.row(&[
+            ("mode", JsonVal::Str("snap\"shot".into())),
+            ("threads", JsonVal::Int(8)),
+            ("rate", JsonVal::Num(1.5)),
+            ("ok", JsonVal::Bool(true)),
+            ("bad", JsonVal::Num(f64::NAN)),
+        ]);
+        a.row(&[("threads", JsonVal::Int(1))]);
+        let s = a.render();
+        assert_eq!(
+            s,
+            "{\"bench\": \"read\", \"rows\": [{\"mode\": \"snap\\\"shot\", \
+             \"threads\": 8, \"rate\": 1.5, \"ok\": true, \"bad\": null}, \
+             {\"threads\": 1}]}\n"
+        );
+        let path = std::env::temp_dir()
+            .join(format!("mcprioq_json_{}", std::process::id()))
+            .join("BENCH_test.json");
+        let written = a.finish(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(written).unwrap(), s);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
     }
 
     #[test]

@@ -22,17 +22,19 @@
 //! items. Probabilities are computed at read time from the two counters
 //! (§II.3), so updates never touch sibling edges.
 
+mod snapshot;
 mod state;
 
 pub use state::NodeStats;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-use crate::metrics::StripedCounter;
+use crate::metrics::{Counter, StripedCounter};
 
 use crate::hashtable::PtrTable;
 use crate::prioq::IncrementOutcome;
 use crate::rcu;
+use crate::rcu::Guard;
 use state::NodeState;
 
 /// Configuration for a [`McPrioQ`] chain.
@@ -50,6 +52,19 @@ pub struct ChainConfig {
     /// Decay multiplier as (numerator, denominator); the paper suggests 1/2.
     pub decay_num: u64,
     pub decay_den: u64,
+    /// Serve reads from per-node RCU-published prefix-sum snapshots when
+    /// fresh enough (see DESIGN.md § Read pipeline). Off reproduces the
+    /// paper's plain list-walk read path (the ablation baseline).
+    pub snap_enabled: bool,
+    /// How many edge-list mutations (increments/splices/swaps/unlinks) a
+    /// snapshot may trail the live list by before reads rebuild it. The
+    /// approximate-correctness bound of the snapshot path: counts served
+    /// from a fresh-enough snapshot differ from the live list by at most
+    /// this many updates.
+    pub snap_staleness: u64,
+    /// Nodes with fewer edges than this are always served by the live
+    /// list walk: a handful of pointer chases beats a rebuild.
+    pub snap_min_edges: usize,
 }
 
 impl Default for ChainConfig {
@@ -60,8 +75,21 @@ impl Default for ChainConfig {
             use_dst_table: true,
             decay_num: 1,
             decay_den: 2,
+            snap_enabled: true,
+            snap_staleness: 128,
+            snap_min_edges: 8,
         }
     }
+}
+
+/// Read-path effectiveness counters (surfaced in [`ChainStats`] / STATS).
+/// Hits are striped — they ride the hottest read path; rebuilds and
+/// fallbacks are comparatively rare transitions.
+#[derive(Default)]
+struct ReadMetrics {
+    snap_hits: StripedCounter,
+    snap_rebuilds: Counter,
+    snap_fallbacks: Counter,
 }
 
 /// Result of one `observe` call (consumed by E4's swap-rate experiment).
@@ -119,6 +147,21 @@ impl Recommendation {
     fn empty() -> Self {
         Recommendation { items: Vec::new(), cumulative: 0.0, scanned: 0, total: 0 }
     }
+
+    /// Reset to the empty answer, keeping the `items` allocation — the
+    /// heart of the buffer-reuse (`infer_*_into`) query pipeline.
+    fn reset(&mut self) {
+        self.items.clear();
+        self.cumulative = 0.0;
+        self.scanned = 0;
+        self.total = 0;
+    }
+}
+
+impl Default for Recommendation {
+    fn default() -> Self {
+        Recommendation::empty()
+    }
 }
 
 /// Aggregate structure statistics (metrics endpoint, EXPERIMENTS.md).
@@ -131,8 +174,15 @@ pub struct ChainStats {
     pub swap_skips: u64,
     pub decays: u64,
     pub pruned_edges: u64,
-    /// Approximate resident bytes of all nodes/edges/tables.
+    /// Approximate resident bytes of all nodes/edges/tables/snapshots.
     pub approx_bytes: usize,
+    /// Queries answered from a fresh prefix-sum snapshot.
+    pub snap_hits: u64,
+    /// Snapshot rebuilds performed on the read path.
+    pub snap_rebuilds: u64,
+    /// Queries that wanted a snapshot but fell back to the live list walk
+    /// (ticket busy, or the collected list was empty).
+    pub snap_fallbacks: u64,
 }
 
 /// The lock-free online sparse markov chain.
@@ -148,6 +198,7 @@ pub struct McPrioQ {
     decays: AtomicU64,
     pruned: AtomicU64,
     edges: AtomicUsize,
+    reads: ReadMetrics,
 }
 
 impl McPrioQ {
@@ -159,6 +210,7 @@ impl McPrioQ {
             decays: AtomicU64::new(0),
             pruned: AtomicU64::new(0),
             edges: AtomicUsize::new(0),
+            reads: ReadMetrics::default(),
         }
     }
 
@@ -274,20 +326,53 @@ impl McPrioQ {
     /// Items in descending probability until the cumulative probability
     /// reaches `threshold` (§II.B). `threshold` in `[0, 1]`.
     pub fn infer_threshold(&self, src: u64, threshold: f64) -> Recommendation {
+        let mut out = Recommendation::empty();
+        self.infer_threshold_into(src, threshold, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`infer_threshold`]: the answer is
+    /// written into `out`, reusing its `items` buffer.
+    pub fn infer_threshold_into(&self, src: u64, threshold: f64, out: &mut Recommendation) {
         let guard = rcu::pin();
-        let Some(state) = (unsafe { self.src.get(&guard, src).map(|p| &*p) }) else {
-            return Recommendation::empty();
-        };
-        state.infer_threshold(&guard, threshold)
+        self.infer_threshold_with(&guard, src, threshold, out);
+    }
+
+    /// [`infer_threshold_into`] under a caller-held guard, so a batch of
+    /// queries (the server's `MTOPK`, mixed read pipelines) pins RCU once.
+    pub fn infer_threshold_with(
+        &self,
+        guard: &Guard,
+        src: u64,
+        threshold: f64,
+        out: &mut Recommendation,
+    ) {
+        out.reset();
+        if let Some(state) = unsafe { self.src.get(guard, src).map(|p| &*p) } {
+            state.infer_threshold_into(guard, threshold, &self.config, &self.reads, out);
+        }
     }
 
     /// The `k` most probable next nodes.
     pub fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        let mut out = Recommendation::empty();
+        self.infer_topk_into(src, k, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`infer_topk`]: the answer is written
+    /// into `out`, reusing its `items` buffer.
+    pub fn infer_topk_into(&self, src: u64, k: usize, out: &mut Recommendation) {
         let guard = rcu::pin();
-        let Some(state) = (unsafe { self.src.get(&guard, src).map(|p| &*p) }) else {
-            return Recommendation::empty();
-        };
-        state.infer_topk(&guard, k)
+        self.infer_topk_with(&guard, src, k, out);
+    }
+
+    /// [`infer_topk_into`] under a caller-held guard (one pin per batch).
+    pub fn infer_topk_with(&self, guard: &Guard, src: u64, k: usize, out: &mut Recommendation) {
+        out.reset();
+        if let Some(state) = unsafe { self.src.get(guard, src).map(|p| &*p) } {
+            state.infer_topk_into(guard, k, &self.config, &self.reads, out);
+        }
     }
 
     /// Probability of the single transition `src -> dst` (None if the edge
@@ -352,7 +437,7 @@ impl McPrioQ {
     pub fn node_stats(&self, src: u64) -> Option<NodeStats> {
         let guard = rcu::pin();
         let state = unsafe { self.src.get(&guard, src).map(|p| &*p) }?;
-        Some(state.stats())
+        Some(state.stats(&guard))
     }
 
     /// Number of distinct src nodes.
@@ -372,7 +457,7 @@ impl McPrioQ {
         let mut edges = 0usize;
         let mut bytes = std::mem::size_of::<Self>();
         self.src.for_each(&guard, |_, state_ptr| {
-            let s = unsafe { &*state_ptr }.stats();
+            let s = unsafe { &*state_ptr }.stats(&guard);
             swaps += s.swaps;
             skips += s.swap_skips;
             edges += s.edges;
@@ -387,6 +472,9 @@ impl McPrioQ {
             decays: self.decays.load(Ordering::Relaxed),
             pruned_edges: self.pruned.load(Ordering::Relaxed),
             approx_bytes: bytes,
+            snap_hits: self.reads.snap_hits.get(),
+            snap_rebuilds: self.reads.snap_rebuilds.get(),
+            snap_fallbacks: self.reads.snap_fallbacks.get(),
         }
     }
 

@@ -1,0 +1,177 @@
+//! RCU-published flat read snapshots of a node's edge list, plus the exact
+//! integer threshold predicate both read paths share.
+//!
+//! The edge list is optimal for *writes* (wait-free increments, local
+//! swaps) but pays a dependent-load cache miss per item on *reads*. The
+//! paper's "approximately correct during concurrent updates" semantics
+//! license serving slightly-stale answers, so the chain caches a contiguous
+//! `(dst, count, cum)` array per node — `infer_topk` becomes a bounded copy
+//! of the array prefix and `infer_threshold` a binary search over the
+//! inclusive prefix sums `cum`, O(log E) instead of the O(CDF⁻¹(t))
+//! pointer chase.
+//!
+//! Lifecycle (see DESIGN.md § Read pipeline):
+//!
+//! * **Build** — lazily, on the read path, when a query finds no snapshot
+//!   or one whose epoch trails the list's mutation counter by more than
+//!   `ChainConfig::snap_staleness`. The build collects the list under the
+//!   existing structural ticket (`EdgeList::try_collect_stable`) and
+//!   *publishes while the ticket is still held*, so a publication can never
+//!   straddle a concurrent decay/repair sweep and resurrect pre-sweep
+//!   edges. Non-blocking: if the ticket is busy the query falls back to
+//!   the live list walk.
+//! * **Serve** — readers load the pointer under their RCU guard; the array
+//!   is immutable after publish, so a snapshot answer is *internally
+//!   consistent*: probabilities and `cumulative` are all ratios against the
+//!   snapshot's own edge sum (cumulative never exceeds 1).
+//! * **Retire** — the previous snapshot goes through `rcu::defer_free`,
+//!   the same retire scheme the hash tables use; decay and repair
+//!   invalidate eagerly so a pruned edge can never be served once a grace
+//!   period has elapsed.
+
+/// One immutable read snapshot: list order preserved, `cum` is the
+/// inclusive prefix sum of `count` (so `entries.last().cum == total`).
+pub(super) struct EdgeSnapshot {
+    /// `EdgeList::mutations()` observed *before* the build walked the
+    /// list: mutations that race the build re-age the snapshot, never
+    /// un-age it (conservative staleness accounting).
+    pub(super) epoch: u64,
+    /// Sum of the snapshot's counts — the denominator for every
+    /// probability served from it. Equals the node total at quiescence.
+    pub(super) total: u64,
+    /// `(dst, count, cum)` in head-first (descending count) list order.
+    pub(super) entries: Box<[(u64, u64, u64)]>,
+}
+
+impl EdgeSnapshot {
+    /// Wrap entries collected in one ticketed pass (non-empty, list order,
+    /// `cum` already the inclusive prefix sum). Exact-capacity input, so
+    /// boxing is free — the single allocation of a rebuild.
+    pub(super) fn from_entries(epoch: u64, entries: Vec<(u64, u64, u64)>) -> EdgeSnapshot {
+        debug_assert!(!entries.is_empty());
+        let total = entries.last().map_or(0, |&(_, _, cum)| cum);
+        EdgeSnapshot { epoch, total, entries: entries.into_boxed_slice() }
+    }
+
+    /// Index of the first entry whose cumulative count reaches
+    /// `threshold` (as `m/2^s`) of `total` — the minimal prefix length
+    /// minus one. `entries.len()` if even the full list falls short
+    /// (possible only for a stale snapshot raced by pruning).
+    pub(super) fn threshold_prefix(&self, m: u128, s: u32) -> usize {
+        self.entries.partition_point(|&(_, _, cum)| !cum_reaches(cum, self.total, m, s))
+    }
+
+    /// Resident bytes of the array (for `NodeStats::approx_bytes`).
+    pub(super) fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<EdgeSnapshot>() + self.entries.len() * std::mem::size_of::<(u64, u64, u64)>()
+    }
+}
+
+/// Decompose a finite `t` in `(0, 1]` into the exact dyadic rational
+/// `m / 2^s` (every finite f64 is one). The pair feeds [`cum_reaches`],
+/// which decides `cum/total >= t` in pure integer arithmetic — the f64
+/// comparison `(cum as f64) < t * (total as f64)` loses ulps once counts
+/// pass 2^53 and can terminate a threshold scan one item early.
+pub(super) fn dyadic(t: f64) -> (u128, u32) {
+    debug_assert!(t > 0.0 && t <= 1.0 && t.is_finite());
+    let bits = t.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as u32;
+    let frac = (bits & ((1u64 << 52) - 1)) as u128;
+    if exp == 0 {
+        // Subnormal: t = frac * 2^-1074.
+        (frac, 1074)
+    } else {
+        // Normal: t = (2^52 + frac) * 2^(exp - 1075).
+        (frac | (1u128 << 52), 1075 - exp)
+    }
+}
+
+/// Exact integer test for `cum >= t * total` where `t = m / 2^s` from
+/// [`dyadic`]: compares `cum * 2^s >= m * total` in u128. `m * total`
+/// fits (m < 2^53, total < 2^64); if `cum << s` overflows u128 the left
+/// side is mathematically >= 2^128 > m * total, i.e. the threshold is
+/// reached.
+#[inline]
+pub(super) fn cum_reaches(cum: u64, total: u64, m: u128, s: u32) -> bool {
+    if s >= 128 {
+        // t < 2^-127: any scanned mass (cum >= 1) covers it.
+        return cum > 0;
+    }
+    match (cum as u128).checked_mul(1u128 << s) {
+        Some(lhs) => lhs >= m * total as u128,
+        None => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dyadic_roundtrips_exact_values() {
+        for t in [1.0, 0.5, 0.25, 0.75, 0.9, 0.1, 1e-300, f64::MIN_POSITIVE] {
+            let (m, s) = dyadic(t);
+            if s < 128 {
+                // m / 2^s == t exactly (both are the same dyadic rational).
+                assert_eq!(m as f64 / 2f64.powi(s as i32), t, "t={t}");
+            }
+        }
+        assert_eq!(dyadic(0.5), (1 << 52, 53));
+        assert_eq!(dyadic(1.0), (1 << 52, 52));
+    }
+
+    #[test]
+    fn cum_reaches_matches_rational_semantics() {
+        let (m, s) = dyadic(0.75);
+        assert!(!cum_reaches(74, 100, m, s));
+        assert!(cum_reaches(75, 100, m, s));
+        assert!(cum_reaches(76, 100, m, s));
+        // t = 1.0: only the full mass reaches it.
+        let (m, s) = dyadic(1.0);
+        assert!(!cum_reaches(u64::MAX - 1, u64::MAX, m, s));
+        assert!(cum_reaches(u64::MAX, u64::MAX, m, s));
+        // Tiny thresholds: one unit of mass suffices.
+        let (m, s) = dyadic(f64::MIN_POSITIVE);
+        assert!(cum_reaches(1, u64::MAX, m, s));
+    }
+
+    #[test]
+    fn cum_reaches_is_exact_past_f64_precision() {
+        // total = 2^53 + 1 is not representable as f64; the old float
+        // predicate rounded it to 2^53 and stopped a t=1.0 scan one item
+        // early (cum = 2^53 "reached" the rounded target).
+        let total = (1u64 << 53) + 1;
+        let (m, s) = dyadic(1.0);
+        assert!(!cum_reaches(1 << 53, total, m, s));
+        assert!(cum_reaches(total, total, m, s));
+    }
+
+    /// Test helper mirroring the rebuild's running-prefix-sum collect.
+    fn snap_from_counts(epoch: u64, counts: &[(u64, u64)]) -> EdgeSnapshot {
+        let mut cum = 0u64;
+        EdgeSnapshot::from_entries(
+            epoch,
+            counts
+                .iter()
+                .map(|&(dst, count)| {
+                    cum += count;
+                    (dst, count, cum)
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn snapshot_prefix_sums_and_binary_search() {
+        let snap = snap_from_counts(7, &[(10, 5), (20, 3), (30, 2)]);
+        assert_eq!(snap.total, 10);
+        assert_eq!(&*snap.entries, &[(10, 5, 5), (20, 3, 8), (30, 2, 10)]);
+        let (m, s) = dyadic(0.5);
+        assert_eq!(snap.threshold_prefix(m, s), 0); // first item covers 0.5
+        let (m, s) = dyadic(0.75);
+        assert_eq!(snap.threshold_prefix(m, s), 1);
+        let (m, s) = dyadic(1.0);
+        assert_eq!(snap.threshold_prefix(m, s), 2);
+        assert!(snap.approx_bytes() > 3 * 24);
+    }
+}

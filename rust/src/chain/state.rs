@@ -1,11 +1,13 @@
-//! Per-src-node state: total counter + optional dst table + edge list.
+//! Per-src-node state: total counter + optional dst table + edge list +
+//! RCU-published read snapshot (see `snapshot.rs`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 
-use super::{ChainConfig, Recommendation};
+use super::snapshot::{cum_reaches, dyadic, EdgeSnapshot};
+use super::{ChainConfig, ReadMetrics, Recommendation};
 use crate::hashtable::PtrTable;
 use crate::prioq::{EdgeList, IncrementOutcome, Node};
-use crate::rcu::Guard;
+use crate::rcu::{self, Guard};
 use crate::sync::CachePadded;
 
 /// Statistics for one src node.
@@ -28,6 +30,9 @@ pub(super) struct NodeState {
     /// dst -> list-node index; `None` reproduces the paper's "skip the
     /// dst-hash-table" ablation (§II.2).
     dst: Option<PtrTable<Node>>,
+    /// The RCU-published prefix-sum read snapshot (null = none). Swapped
+    /// whole; the previous array is retired through `rcu::defer_free`.
+    snap: AtomicPtr<EdgeSnapshot>,
 }
 
 impl NodeState {
@@ -37,6 +42,7 @@ impl NodeState {
             total: CachePadded::new(AtomicU64::new(0)),
             edges: EdgeList::new(),
             dst: config.use_dst_table.then(|| PtrTable::with_capacity(config.dst_capacity)),
+            snap: AtomicPtr::new(std::ptr::null_mut()),
         }))
     }
 
@@ -53,6 +59,11 @@ impl NodeState {
 
     /// Find-or-create the edge to `dst` and add `weight`. Returns
     /// `(new_edge, increment outcome)`.
+    ///
+    /// Snapshot invalidation hook: every path below advances the edge
+    /// list's mutation epoch (increment or splice), which is what ages the
+    /// published read snapshot toward its staleness bound — observes never
+    /// retire it eagerly (that would defeat the read cache).
     pub(super) fn observe(
         &self,
         guard: &Guard,
@@ -102,42 +113,177 @@ impl NodeState {
         result
     }
 
-    pub(super) fn infer_threshold(&self, guard: &Guard, threshold: f64) -> Recommendation {
-        let total = self.total.load(Ordering::Acquire);
-        if total == 0 {
-            return Recommendation::empty();
+    /// The snapshot to serve this read from, if any: fresh → hit; missing
+    /// or stale → try a rebuild under the structural ticket (publishing
+    /// while it is held, see `snapshot.rs`); ticket busy → fall back to
+    /// the live list walk. `None` always means "walk the list".
+    fn snapshot_for_read<'g>(
+        &self,
+        guard: &'g Guard,
+        config: &ChainConfig,
+        metrics: &ReadMetrics,
+    ) -> Option<&'g EdgeSnapshot> {
+        if !config.snap_enabled {
+            return None;
         }
-        let threshold = threshold.clamp(0.0, 1.0);
-        if threshold == 0.0 {
-            // The empty prefix already satisfies cum >= 0 (minimality, P4).
-            return Recommendation { items: Vec::new(), cumulative: 0.0, scanned: 0, total };
+        let ptr = self.snap.load(Ordering::Acquire);
+        if !ptr.is_null() {
+            // Guard-protected: a swapped-out snapshot is freed only after
+            // the current grace period.
+            let snap = unsafe { &*ptr };
+            if self.edges.mutations().wrapping_sub(snap.epoch) <= config.snap_staleness {
+                metrics.snap_hits.inc();
+                return Some(snap);
+            }
         }
-        let totf = total as f64;
-        let mut items = Vec::new();
-        let mut cum = 0u64;
-        let scanned = self.edges.scan(guard, |dst, count| {
-            cum += count;
-            items.push((dst, count as f64 / totf));
-            // Integer comparison: cum/total >= threshold.
-            (cum as f64) < threshold * totf
-        });
-        Recommendation { items, cumulative: cum as f64 / totf, scanned, total }
+        if self.edges.len() < config.snap_min_edges {
+            // Tiny list: the walk is at least as fast as a copy. Not a
+            // fallback — snapshots are simply not worth it here.
+            return None;
+        }
+        match self.try_rebuild_snapshot(guard) {
+            Some(snap) => {
+                metrics.snap_rebuilds.inc();
+                Some(snap)
+            }
+            None => {
+                metrics.snap_fallbacks.inc();
+                None
+            }
+        }
     }
 
-    pub(super) fn infer_topk(&self, guard: &Guard, k: usize) -> Recommendation {
+    /// Rebuild and publish the snapshot under the edge list's structural
+    /// ticket. Publishing inside the ticketed section is what makes the
+    /// install ordered against decay/repair sweeps (which hold the same
+    /// ticket): a snapshot carrying pre-sweep content is always published
+    /// *before* the sweep runs, so the sweep's invalidation retires it.
+    /// Returns `None` (no publish) when the ticket is busy or the list
+    /// came back empty.
+    fn try_rebuild_snapshot<'g>(&self, guard: &'g Guard) -> Option<&'g EdgeSnapshot> {
+        // Epoch first: increments racing the collect re-age the snapshot,
+        // they can never make it look fresher than it is.
+        let epoch = self.edges.mutations();
+        let mut cum = 0u64;
+        self.edges
+            .try_collect_stable(
+                guard,
+                // One ticketed pass computes the prefix sums in place; the
+                // exact-capacity Vec is boxed without another copy.
+                |dst, count| {
+                    cum += count;
+                    (dst, count, cum)
+                },
+                |entries| {
+                    if entries.is_empty() {
+                        return None;
+                    }
+                    let fresh = Box::into_raw(Box::new(EdgeSnapshot::from_entries(epoch, entries)));
+                    let old = self.snap.swap(fresh, Ordering::AcqRel);
+                    if !old.is_null() {
+                        unsafe { rcu::defer_free(guard, old) };
+                    }
+                    Some(unsafe { &*fresh })
+                },
+            )
+            .flatten()
+    }
+
+    /// Drop the published snapshot (decay/repair hooks): readers inside
+    /// the current grace period may still finish serving from it, after
+    /// that it is gone — which is exactly the §II.C guarantee that pruned
+    /// edges stop being recommended once a grace period elapses.
+    fn invalidate_snapshot(&self, guard: &Guard) {
+        let old = self.snap.swap(std::ptr::null_mut(), Ordering::AcqRel);
+        if !old.is_null() {
+            unsafe { rcu::defer_free(guard, old) };
+        }
+    }
+
+    pub(super) fn infer_threshold_into(
+        &self,
+        guard: &Guard,
+        threshold: f64,
+        config: &ChainConfig,
+        metrics: &ReadMetrics,
+        out: &mut Recommendation,
+    ) {
         let total = self.total.load(Ordering::Acquire);
-        if total == 0 || k == 0 {
-            return Recommendation::empty();
+        if total == 0 {
+            return; // `out` was reset by the caller: the empty answer
+        }
+        let threshold = threshold.clamp(0.0, 1.0);
+        out.total = total;
+        if threshold == 0.0 || threshold.is_nan() {
+            // Zero (or NaN) threshold: the empty prefix already satisfies
+            // cum >= 0 (minimality, P4).
+            return;
+        }
+        // Exact dyadic decomposition: the termination test runs in integer
+        // arithmetic (`cum * 2^s >= m * total`), immune to the f64
+        // rounding that loses ulps once totals approach 2^53.
+        let (m, s) = dyadic(threshold);
+        if let Some(snap) = self.snapshot_for_read(guard, config, metrics) {
+            // O(log E): binary search the inclusive prefix sums for the
+            // minimal covering prefix, then copy it out.
+            let end = (snap.threshold_prefix(m, s) + 1).min(snap.entries.len());
+            let totf = snap.total as f64;
+            let mut cum = 0u64;
+            for &(dst, count, c) in &snap.entries[..end] {
+                out.items.push((dst, count as f64 / totf));
+                cum = c;
+            }
+            out.cumulative = cum as f64 / totf;
+            out.scanned = end;
+            out.total = snap.total;
+            return;
         }
         let totf = total as f64;
-        let mut items = Vec::with_capacity(k.min(64));
+        let items = &mut out.items;
         let mut cum = 0u64;
-        let scanned = self.edges.scan(guard, |dst, count| {
+        out.scanned = self.edges.scan(guard, |dst, count| {
+            cum += count;
+            items.push((dst, count as f64 / totf));
+            !cum_reaches(cum, total, m, s)
+        });
+        out.cumulative = cum as f64 / totf;
+    }
+
+    pub(super) fn infer_topk_into(
+        &self,
+        guard: &Guard,
+        k: usize,
+        config: &ChainConfig,
+        metrics: &ReadMetrics,
+        out: &mut Recommendation,
+    ) {
+        let total = self.total.load(Ordering::Acquire);
+        if total == 0 || k == 0 {
+            return; // `out` was reset by the caller: the empty answer
+        }
+        if let Some(snap) = self.snapshot_for_read(guard, config, metrics) {
+            // The bounded-copy fast path: one contiguous prefix, no
+            // pointer chase, probabilities against the snapshot's own sum.
+            let end = k.min(snap.entries.len());
+            let totf = snap.total as f64;
+            for &(dst, count, _) in &snap.entries[..end] {
+                out.items.push((dst, count as f64 / totf));
+            }
+            out.cumulative = snap.entries[end - 1].2 as f64 / totf;
+            out.scanned = end;
+            out.total = snap.total;
+            return;
+        }
+        let totf = total as f64;
+        let items = &mut out.items;
+        let mut cum = 0u64;
+        out.scanned = self.edges.scan(guard, |dst, count| {
             cum += count;
             items.push((dst, count as f64 / totf));
             items.len() < k
         });
-        Recommendation { items, cumulative: cum as f64 / totf, scanned, total }
+        out.cumulative = cum as f64 / totf;
+        out.total = total;
     }
 
     pub(super) fn probability(&self, guard: &Guard, dst: u64) -> Option<f64> {
@@ -173,30 +319,36 @@ impl NodeState {
                 table.remove(guard, key);
             }
         });
+        // Drop the read snapshot *after* the sweep: any snapshot carrying
+        // pre-decay counts (or pruned edges) was published before the
+        // sweep could take the ticket, so this retire covers it, and one
+        // grace period later no reader can serve a pruned edge.
+        self.invalidate_snapshot(guard);
         // Refresh the total from the surviving mass. Racing observers may
         // add to `total` between the sum and this store; their edge
         // contribution was either halved with the edge or added after — the
         // discrepancy is transient and bounded by in-flight updates
         // (approximately correct; exact at quiescence, invariant P3).
         self.total.store(sum, Ordering::Release);
-        // Piggyback the order-repair sweep on the maintenance pass.
-        self.edges.repair(guard);
+        // Piggyback the order-repair sweep on the maintenance pass; its
+        // fused edge sum is a fresher total than the decay sweep's.
+        let (_swaps, repaired_sum) = self.edges.repair(guard);
+        self.total.store(repaired_sum, Ordering::Release);
         (sum, pruned)
     }
 
     pub(super) fn repair(&self, guard: &Guard) -> u64 {
-        let swaps = self.edges.repair(guard);
-        // Re-base the total from the edge sum: an increment racing a decay
+        let (swaps, sum) = self.edges.repair(guard);
+        // Snapshots predate the exact re-sort; retire them so the next
+        // read rebuilds from the repaired (exact-at-quiescence) order.
+        self.invalidate_snapshot(guard);
+        // Re-base the total from the edge sum (fused into the repair pass —
+        // previously a second full list scan): an increment racing a decay
         // can land after the decay summed its edge but before the total was
         // stored, leaving a small permanent skew that no later update
         // corrects. The maintenance sweep is the quiesce point that restores
         // exactness (P3); under concurrency the rebased value is just a
         // fresher approximation.
-        let mut sum = 0u64;
-        self.edges.scan(guard, |_, c| {
-            sum += c;
-            true
-        });
         self.total.store(sum, Ordering::Release);
         swaps
     }
@@ -231,11 +383,16 @@ impl NodeState {
         self.edges.top(guard, usize::MAX)
     }
 
-    pub(super) fn stats(&self) -> NodeStats {
+    /// Caller must hold an RCU guard (the published snapshot is
+    /// dereferenced to account its bytes).
+    pub(super) fn stats(&self, _guard: &Guard) -> NodeStats {
         let ls = self.edges.stats();
+        let snap = self.snap.load(Ordering::Acquire);
+        let snap_bytes = if snap.is_null() { 0 } else { unsafe { &*snap }.approx_bytes() };
         let bytes = std::mem::size_of::<NodeState>()
             + ls.len * (std::mem::size_of::<Node>() + 48) // node + table entry
-            + self.dst.as_ref().map_or(0, |t| t.stats().capacity * 8);
+            + self.dst.as_ref().map_or(0, |t| t.stats().capacity * 8)
+            + snap_bytes;
         NodeStats {
             id: self.id,
             total: self.total.load(Ordering::Relaxed),
@@ -249,4 +406,14 @@ impl NodeState {
 
 // NodeState owns its EdgeList (which frees the list nodes) and its dst
 // table (which frees only its entry shells — the values are the same list
-// nodes, freed exactly once by the EdgeList). Default Drop is correct.
+// nodes, freed exactly once by the EdgeList). The published snapshot is
+// the one RCU-managed field: swapped-out snapshots were handed to
+// `defer_free`, so only the current pointer is freed here.
+impl Drop for NodeState {
+    fn drop(&mut self) {
+        let snap = *self.snap.get_mut();
+        if !snap.is_null() {
+            drop(unsafe { Box::from_raw(snap) });
+        }
+    }
+}

@@ -407,6 +407,202 @@ fn concurrent_batch_and_single_writers() {
     assert_eq!(mass, THREADS * OPS);
 }
 
+/// Regression (integer threshold termination): `total = 2^53 + 1` is not
+/// representable as f64, so the old float predicate
+/// `(cum as f64) < threshold * (total as f64)` rounded the target down to
+/// 2^53 and stopped a t=1.0 scan one item early — returning a prefix with
+/// cumulative < 1 and breaking P4 (cover the threshold). The termination
+/// test now runs in exact integer arithmetic.
+#[test]
+fn infer_threshold_exact_at_totals_near_2_pow_53() {
+    // 2 edges < snap_min_edges: exercises the live list-walk predicate.
+    let c = default_chain();
+    c.observe_batch_weighted(&[(1, 2, 1u64 << 53), (1, 3, 1)]);
+    let r = c.infer_threshold(1, 1.0);
+    assert_eq!(r.items.len(), 2, "float rounding dropped the last item");
+    assert_eq!(r.total, (1u64 << 53) + 1);
+    assert_eq!(r.scanned, 2);
+
+    // >= snap_min_edges: exercises the snapshot binary-search predicate
+    // (query twice so the second answer is served from the snapshot).
+    let c = default_chain();
+    let mut batch = vec![(5u64, 100u64, 1u64 << 53)];
+    batch.extend((0..9).map(|d| (5u64, d, 1u64)));
+    c.observe_batch_weighted(&batch);
+    c.infer_threshold(5, 1.0);
+    let r = c.infer_threshold(5, 1.0);
+    assert_eq!(r.items.len(), 10, "snapshot path dropped trailing items");
+    assert_eq!(r.total, (1u64 << 53) + 9);
+    assert!(c.stats().snap_hits >= 1, "second query must hit the snapshot");
+}
+
+/// Snapshot reads must be byte-identical to list-walk reads at quiescence:
+/// two chains fed the same stream, snapshots on vs off, agree exactly on
+/// every query shape (items, probabilities, cumulative, scanned, total).
+#[test]
+fn snapshot_reads_match_list_walk_at_quiescence() {
+    let on = default_chain();
+    let off = McPrioQ::new(ChainConfig { snap_enabled: false, ..Default::default() });
+    let mut rng = Rng64::new(0x54A9);
+    for _ in 0..20_000 {
+        let src = rng.next_below(4);
+        let u = rng.next_f64();
+        let dst = ((u * u) * 64.0) as u64;
+        on.observe(src, dst);
+        off.observe(src, dst);
+    }
+    on.repair();
+    off.repair();
+    for src in 0..4 {
+        for k in [1, 3, 10, 1_000] {
+            on.infer_topk(src, k); // first read rebuilds the snapshot
+            assert_eq!(on.infer_topk(src, k), off.infer_topk(src, k), "src {src} k {k}");
+        }
+        for t in [0.0, 0.3, 0.9, 0.999, 1.0] {
+            on.infer_threshold(src, t);
+            assert_eq!(on.infer_threshold(src, t), off.infer_threshold(src, t), "src {src} t {t}");
+        }
+    }
+    let s = on.stats();
+    assert!(s.snap_rebuilds > 0, "reads never built a snapshot");
+    assert!(s.snap_hits > 0, "repeat reads never hit the snapshot");
+    assert_eq!(off.stats().snap_hits, 0, "disabled chain must not snapshot");
+}
+
+/// §II.C + grace period: once decay has pruned an edge and a grace period
+/// has elapsed, neither the snapshot nor the list walk may serve it.
+#[test]
+fn snapshot_never_serves_pruned_edges_after_grace_period() {
+    let c = default_chain();
+    for d in 0..16u64 {
+        let w = if d < 8 { 10 } else { 1 };
+        c.observe_batch_weighted(&[(1, d, w)]);
+    }
+    c.infer_topk(1, 16);
+    c.infer_topk(1, 16); // served from the snapshot
+    assert!(c.stats().snap_hits >= 1);
+    let (_, pruned) = c.decay(); // weight-1 edges reach 0
+    assert_eq!(pruned, 8);
+    crate::rcu::synchronize();
+    for _ in 0..3 {
+        let r = c.infer_topk(1, 16);
+        assert!(r.items.iter().all(|&(d, _)| d < 8), "pruned edge served: {:?}", r.items);
+        assert_eq!(r.items.len(), 8);
+    }
+}
+
+/// Concurrent readers during a decay storm (satellite of the read-path
+/// overhaul): the hammered node receives *no* concurrent increments (a
+/// disjoint src takes the write traffic), so every read — snapshot or
+/// list walk — must satisfy `cumulative <= 1 + eps`, and once the first
+/// decay's prune has synchronized, no pruned edge may appear.
+#[test]
+fn concurrent_reads_during_decay_bounded_and_prune_safe() {
+    use std::sync::atomic::AtomicU64;
+    let c = Arc::new(default_chain());
+    // Read node 1: heavy edges survive ~20 decays, weight-1 edges are
+    // pruned by the first. Inserted in descending weight so the list is
+    // born sorted (no swaps => no transient double-visits on this node).
+    for d in 0..32u64 {
+        let w = if d < 16 { 1 << 20 } else { 1 };
+        c.observe_batch_weighted(&[(1, d, w)]);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    // After the first decay + grace period, this flips to 1.
+    let pruned_gen = Arc::new(AtomicU64::new(0));
+    let writer = {
+        let c = Arc::clone(&c);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut rng = Rng64::new(0xF00);
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                c.observe(2, rng.next_below(40));
+            }
+        })
+    };
+    let decayer = {
+        let c = Arc::clone(&c);
+        let gen = Arc::clone(&pruned_gen);
+        std::thread::spawn(move || {
+            for i in 0..10 {
+                c.decay();
+                if i == 0 {
+                    crate::rcu::synchronize();
+                    gen.store(1, std::sync::atomic::Ordering::SeqCst);
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        })
+    };
+    let readers: Vec<_> = (0..4)
+        .map(|_| {
+            let c = Arc::clone(&c);
+            let stop = Arc::clone(&stop);
+            let gen = Arc::clone(&pruned_gen);
+            std::thread::spawn(move || {
+                let mut out = Recommendation::default();
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let g = gen.load(std::sync::atomic::Ordering::SeqCst);
+                    c.infer_topk_into(1, 32, &mut out);
+                    assert!(out.cumulative <= 1.0 + 1e-9, "cum {}", out.cumulative);
+                    if g >= 1 {
+                        assert!(
+                            out.items.iter().all(|&(d, _)| d < 16),
+                            "pruned edge after grace period: {:?}",
+                            out.items
+                        );
+                    }
+                    c.infer_threshold_into(1, 0.9, &mut out);
+                    assert!(out.cumulative <= 1.0 + 1e-9, "cum {}", out.cumulative);
+                }
+            })
+        })
+        .collect();
+    decayer.join().unwrap();
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    for r in readers {
+        r.join().unwrap();
+    }
+    writer.join().unwrap();
+    c.repair();
+    c.check_invariants().unwrap();
+}
+
+/// The published snapshot array is accounted in `approx_bytes`.
+#[test]
+fn node_stats_count_snapshot_bytes() {
+    let c = default_chain();
+    for d in 0..32u64 {
+        c.observe(7, d);
+    }
+    let before = c.node_stats(7).unwrap().approx_bytes;
+    c.infer_topk(7, 5); // builds the snapshot
+    let after = c.node_stats(7).unwrap().approx_bytes;
+    assert!(after >= before + 32 * 24, "snapshot bytes missing: {before} -> {after}");
+}
+
+/// Buffer-reuse query API: `infer_*_into` answers equal the allocating
+/// API and reuse the caller's `items` allocation across calls.
+#[test]
+fn infer_into_reuses_buffers_and_matches() {
+    let c = default_chain();
+    for i in 0..200u64 {
+        c.observe(i % 3, i % 17);
+    }
+    let mut out = Recommendation::default();
+    c.infer_topk_into(1, 5, &mut out);
+    assert_eq!(out, c.infer_topk(1, 5));
+    let cap = out.items.capacity();
+    c.infer_topk_into(2, 5, &mut out);
+    assert_eq!(out, c.infer_topk(2, 5));
+    assert!(out.items.capacity() >= cap.min(5), "buffer reuse lost capacity");
+    c.infer_threshold_into(0, 0.8, &mut out);
+    assert_eq!(out, c.infer_threshold(0, 0.8));
+    // Unknown src resets the buffer to the empty answer.
+    c.infer_topk_into(999, 5, &mut out);
+    assert_eq!(out, Recommendation::empty());
+}
+
 /// Property: for any observation sequence, infer_threshold(t) returns a
 /// minimal prefix with cumulative >= t (P4), and the prefix is sorted by
 /// descending probability (P1).

@@ -33,6 +33,14 @@ pub struct ChainSection {
     pub use_dst_table: bool,
     pub decay_num: u64,
     pub decay_den: u64,
+    /// Serve reads from per-node prefix-sum snapshots (DESIGN.md § Read
+    /// pipeline); off = the paper's plain list-walk read path.
+    pub snap_enabled: bool,
+    /// Mutations a snapshot may trail the live edge list by before reads
+    /// rebuild it (the read path's approximate-correctness bound).
+    pub snap_staleness: u64,
+    /// Minimum edge count before a node gets a snapshot at all.
+    pub snap_min_edges: usize,
 }
 
 impl Default for ServerConfig {
@@ -48,6 +56,9 @@ impl Default for ServerConfig {
                 use_dst_table: true,
                 decay_num: 1,
                 decay_den: 2,
+                snap_enabled: true,
+                snap_staleness: 128,
+                snap_min_edges: 8,
             },
         }
     }
@@ -73,6 +84,9 @@ impl ServerConfig {
                 "chain.use_dst_table" => cfg.chain.use_dst_table = value.as_bool()?,
                 "chain.decay_num" => cfg.chain.decay_num = value.as_u64()?,
                 "chain.decay_den" => cfg.chain.decay_den = value.as_u64()?,
+                "chain.snap_enabled" => cfg.chain.snap_enabled = value.as_bool()?,
+                "chain.snap_staleness" => cfg.chain.snap_staleness = value.as_u64()?,
+                "chain.snap_min_edges" => cfg.chain.snap_min_edges = value.as_usize()?,
                 other => return Err(format!("unknown config key: {other}")),
             }
         }
@@ -94,6 +108,9 @@ impl ServerConfig {
             use_dst_table: self.chain.use_dst_table,
             decay_num: self.chain.decay_num,
             decay_den: self.chain.decay_den,
+            snap_enabled: self.chain.snap_enabled,
+            snap_staleness: self.chain.snap_staleness,
+            snap_min_edges: self.chain.snap_min_edges,
         }
     }
 }
@@ -132,6 +149,20 @@ decay_den = 4
         assert_eq!(cfg.decay_interval, Some(Duration::from_millis(5000)));
         assert!(!cfg.chain.use_dst_table);
         assert_eq!(cfg.chain.decay_num, 3);
+    }
+
+    #[test]
+    fn snapshot_knobs_parse() {
+        let text = "[chain]\nsnap_enabled = false\nsnap_staleness = 512\nsnap_min_edges = 4\n";
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        assert!(!cfg.chain.snap_enabled);
+        assert_eq!(cfg.chain.snap_staleness, 512);
+        assert_eq!(cfg.chain.snap_min_edges, 4);
+        // Defaults: snapshots on, as the chain defaults.
+        let cfg = ServerConfig::from_toml("").unwrap();
+        assert!(cfg.chain.snap_enabled);
+        let cc = cfg.to_chain_config();
+        assert_eq!(cc.snap_staleness, crate::chain::ChainConfig::default().snap_staleness);
     }
 
     #[test]

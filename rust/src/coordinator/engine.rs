@@ -56,6 +56,12 @@ pub struct EngineStats {
     /// Applied updates/sec over the window since the previous `stats()`
     /// call (wired to the ingest meter; no longer a placeholder).
     pub update_rate: f64,
+    /// Read-snapshot effectiveness, summed over shards (see
+    /// DESIGN.md § Read pipeline): queries served from a fresh prefix-sum
+    /// snapshot / snapshot rebuilds / list-walk fallbacks.
+    pub snap_hits: u64,
+    pub snap_rebuilds: u64,
+    pub snap_fallbacks: u64,
 }
 
 /// One MCPrioQ per shard; srcs are hash-routed so every shard sees a
@@ -276,19 +282,55 @@ impl Engine {
     }
 
     pub fn infer_threshold(&self, src: u64, t: f64) -> Recommendation {
+        let mut out = Recommendation::default();
+        self.infer_threshold_into(src, t, &mut out);
+        out
+    }
+
+    /// Allocation-free query path: the answer lands in `out`, reusing its
+    /// buffers (the server keeps one per connection).
+    pub fn infer_threshold_into(&self, src: u64, t: f64, out: &mut Recommendation) {
         self.queries.inc();
         let timer = crate::metrics::Timer::start(&self.query_lat);
-        let r = self.shard(src).infer_threshold(src, t);
+        self.shard(src).infer_threshold_into(src, t, out);
         drop(timer);
-        r
     }
 
     pub fn infer_topk(&self, src: u64, k: usize) -> Recommendation {
+        let mut out = Recommendation::default();
+        self.infer_topk_into(src, k, &mut out);
+        out
+    }
+
+    /// Allocation-free query path: see [`Engine::infer_threshold_into`].
+    pub fn infer_topk_into(&self, src: u64, k: usize, out: &mut Recommendation) {
         self.queries.inc();
         let timer = crate::metrics::Timer::start(&self.query_lat);
-        let r = self.shard(src).infer_topk(src, k);
+        self.shard(src).infer_topk_into(src, k, out);
         drop(timer);
-        r
+    }
+
+    /// Answer top-k for many srcs under **one RCU guard** (srcs may span
+    /// shards — the grace period is process-global, so a single pin covers
+    /// them all). Each answer is produced into `scratch` and handed to
+    /// `each` before the next query overwrites it: the server's `MTOPK`
+    /// streams n answers into one wire buffer with zero allocation and a
+    /// single flush. Per-query latency/counter accounting is preserved.
+    pub fn infer_topk_batch(
+        &self,
+        srcs: &[u64],
+        k: usize,
+        scratch: &mut Recommendation,
+        mut each: impl FnMut(&Recommendation),
+    ) {
+        let guard = rcu::pin();
+        for &src in srcs {
+            self.queries.inc();
+            let timer = crate::metrics::Timer::start(&self.query_lat);
+            self.shard(src).infer_topk_with(&guard, src, k, scratch);
+            drop(timer);
+            each(scratch);
+        }
     }
 
     /// Run one decay + repair pass over every shard (§II.C maintenance).
@@ -334,12 +376,18 @@ impl Engine {
         let mut edges = 0;
         let mut observes = 0;
         let mut decays = 0;
+        let mut snap_hits = 0;
+        let mut snap_rebuilds = 0;
+        let mut snap_fallbacks = 0;
         for s in &self.shards {
             let st = s.stats();
             nodes += st.nodes;
             edges += st.edges;
             observes += st.observes;
             decays = decays.max(st.decays);
+            snap_hits += st.snap_hits;
+            snap_rebuilds += st.snap_rebuilds;
+            snap_fallbacks += st.snap_fallbacks;
         }
         let snap = self.query_lat.snapshot();
         EngineStats {
@@ -355,6 +403,9 @@ impl Engine {
             query_ns_p50: snap.p50,
             query_ns_p99: snap.p99,
             update_rate: self.update_meter.rate(),
+            snap_hits,
+            snap_rebuilds,
+            snap_fallbacks,
         }
     }
 

@@ -35,7 +35,7 @@ mod server;
 
 pub use decay::DecayScheduler;
 pub use engine::{Engine, EngineStats};
-pub use protocol::{ItemsBody, Request, Response, MAX_WIRE_BATCH};
+pub use protocol::{write_items_body, ItemsBody, Request, Response, MAX_WIRE_BATCH};
 pub use queue::BoundedQueue;
 pub use server::{Client, Server};
 

@@ -216,18 +216,22 @@ impl Response {
     }
 }
 
-/// Write one `ITEMS` payload; shared by both display arms.
-fn fmt_items_body(
-    f: &mut fmt::Formatter<'_>,
+/// Write one `ITEMS` payload into any `fmt::Write` sink — shared by the
+/// `Response` display arms and by the server's zero-allocation fast path,
+/// which streams integers/probabilities straight into the per-connection
+/// wire buffer (no intermediate `Response`, no `format!` per item). The
+/// sink is a reused buffer, so the bytes are identical either way.
+pub fn write_items_body<W: fmt::Write>(
+    w: &mut W,
     items: &[(u64, f64)],
     cumulative: f64,
     scanned: usize,
 ) -> fmt::Result {
-    write!(f, "ITEMS {}", items.len())?;
+    write!(w, "ITEMS {}", items.len())?;
     for (d, p) in items {
-        write!(f, " {d}:{p:.6}")?;
+        write!(w, " {d}:{p:.6}")?;
     }
-    write!(f, " cum={cumulative:.6} scanned={scanned}")
+    write!(w, " cum={cumulative:.6} scanned={scanned}")
 }
 
 impl fmt::Display for Response {
@@ -237,13 +241,13 @@ impl fmt::Display for Response {
             Response::Ok(msg) => write!(f, "OK {msg}"),
             Response::Err(msg) => write!(f, "ERR {msg}"),
             Response::Items { items, cumulative, scanned } => {
-                fmt_items_body(f, items, *cumulative, *scanned)
+                write_items_body(f, items, *cumulative, *scanned)
             }
             Response::MultiItems(bodies) => {
                 write!(f, "MITEMS {}", bodies.len())?;
                 for b in bodies {
                     write!(f, " ")?;
-                    fmt_items_body(f, &b.items, b.cumulative, b.scanned)?;
+                    write_items_body(f, &b.items, b.cumulative, b.scanned)?;
                 }
                 Ok(())
             }

@@ -1,6 +1,14 @@
 //! TCP front-end (thread-per-connection; no async runtime offline) and the
 //! matching client.
+//!
+//! The serving loop is allocation-free after warm-up: each connection owns
+//! a request line buffer, a reusable [`Recommendation`] scratch, and a
+//! response `String` that answers are formatted *directly into* (see
+//! [`super::protocol::write_items_body`]) — no per-request `Response`
+//! values, no `format!` per item, and `MTOPK` streams all n answers
+//! through one RCU guard into one buffer flushed once.
 
+use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -9,8 +17,10 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
+use crate::chain::Recommendation;
+
 use super::engine::Engine;
-use super::protocol::{ItemsBody, Request, Response, MAX_WIRE_BATCH};
+use super::protocol::{write_items_body, Request, Response, MAX_WIRE_BATCH};
 
 pub struct Server {
     engine: Arc<Engine>,
@@ -106,7 +116,13 @@ fn handle_connection(
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
+    // Per-connection scratch: the whole request->response cycle reuses
+    // these three buffers, so steady-state serving performs no heap
+    // allocation (OBSERVEB/MTOPK argument vectors excepted — those are
+    // sized by the client's request).
     let mut line = String::new();
+    let mut rec = Recommendation::default();
+    let mut resp = String::with_capacity(256);
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 || stop.load(Ordering::SeqCst) {
@@ -116,66 +132,97 @@ fn handle_connection(
         if trimmed.is_empty() {
             continue;
         }
-        let resp = match Request::parse(trimmed) {
-            Err(e) => Response::Err(e),
+        resp.clear();
+        match Request::parse(trimmed) {
+            Err(e) => {
+                let _ = write!(resp, "ERR {e}");
+            }
             Ok(Request::Quit) => {
-                writeln!(writer, "OK bye")?;
+                writer.write_all(b"OK bye\n")?;
                 writer.flush()?;
                 return Ok(());
             }
-            Ok(req) => dispatch(&engine, req, connections.load(Ordering::Relaxed)),
-        };
-        writeln!(writer, "{resp}")?;
+            Ok(req) => {
+                dispatch(&engine, req, connections.load(Ordering::Relaxed), &mut rec, &mut resp)
+            }
+        }
+        resp.push('\n');
+        writer.write_all(resp.as_bytes())?;
         writer.flush()?;
+        // The buffer reuse must not turn one worst-case response (a
+        // max-batch MTOPK can be many MB) into memory pinned for the
+        // connection's whole lifetime: keep a generous steady-state
+        // capacity, give the rest back.
+        if resp.capacity() > RESP_KEEP_CAPACITY {
+            resp.shrink_to(RESP_KEEP_CAPACITY);
+        }
     }
 }
 
-fn dispatch(engine: &Engine, req: Request, live_connections: usize) -> Response {
+/// Response-buffer capacity a connection may retain between requests.
+const RESP_KEEP_CAPACITY: usize = 64 * 1024;
+
+/// Answer one request by formatting the response line straight into `out`
+/// (the caller's reused wire buffer). `rec` is the reused query scratch.
+/// Infallible: `fmt::Write` into a `String` cannot fail, so the stray
+/// `Result`s are dropped.
+fn dispatch(
+    engine: &Engine,
+    req: Request,
+    live_connections: usize,
+    rec: &mut Recommendation,
+    out: &mut String,
+) {
     match req {
         Request::Observe { src, dst } => {
             if engine.observe(src, dst) {
-                Response::Ok(String::new())
+                out.push_str("OK");
             } else {
-                Response::Err("shutting down".into())
+                out.push_str("ERR shutting down");
             }
         }
         Request::ObserveBatch { pairs } => {
             let accepted = engine.observe_batch(&pairs);
             if accepted == pairs.len() {
-                Response::Ok(format!("n={accepted}"))
+                let _ = write!(out, "OK n={accepted}");
             } else {
-                Response::Err(format!("shutting down (accepted {accepted}/{})", pairs.len()))
+                let _ = write!(out, "ERR shutting down (accepted {accepted}/{})", pairs.len());
             }
         }
         Request::Recommend { src, threshold } => {
-            let r = engine.infer_threshold(src, threshold);
-            Response::Items { items: r.items, cumulative: r.cumulative, scanned: r.scanned }
+            engine.infer_threshold_into(src, threshold, rec);
+            let _ = write_items_body(out, &rec.items, rec.cumulative, rec.scanned);
         }
         Request::TopK { src, k } => {
-            let r = engine.infer_topk(src, k);
-            Response::Items { items: r.items, cumulative: r.cumulative, scanned: r.scanned }
+            engine.infer_topk_into(src, k, rec);
+            let _ = write_items_body(out, &rec.items, rec.cumulative, rec.scanned);
         }
-        Request::MultiTopK { srcs, k } => Response::MultiItems(
-            srcs.iter()
-                .map(|&src| {
-                    let r = engine.infer_topk(src, k);
-                    ItemsBody { items: r.items, cumulative: r.cumulative, scanned: r.scanned }
-                })
-                .collect(),
-        ),
+        Request::MultiTopK { srcs, k } => {
+            // One RCU guard for all n queries, every ITEMS block formatted
+            // into the same buffer, flushed once by the caller.
+            let _ = write!(out, "MITEMS {}", srcs.len());
+            engine.infer_topk_batch(&srcs, k, rec, |r| {
+                out.push(' ');
+                let _ = write_items_body(out, &r.items, r.cumulative, r.scanned);
+            });
+        }
         Request::Prob { src, dst } => match engine.shard(src).probability(src, dst) {
-            Some(p) => Response::Ok(format!("{p:.6}")),
-            None => Response::Err("no such edge".into()),
+            Some(p) => {
+                let _ = write!(out, "OK {p:.6}");
+            }
+            None => out.push_str("ERR no such edge"),
         },
         Request::Decay => {
             let (total, pruned) = engine.decay();
-            Response::Ok(format!("total={total} pruned={pruned}"))
+            let _ = write!(out, "OK total={total} pruned={pruned}");
         }
         Request::Stats => {
             let s = engine.stats();
-            Response::Ok(format!(
-                "shards={} nodes={} edges={} observes={} queries={} dropped={} \
-                 queue_depth={} q_p50_ns={} q_p99_ns={} conns={} update_rate={:.0}",
+            let _ = write!(
+                out,
+                "OK shards={} nodes={} edges={} observes={} queries={} dropped={} \
+                 queue_depth={} q_p50_ns={} q_p99_ns={} conns={} update_rate={:.0} \
+                 snap_hits={} snap_rebuilds={} snap_fallbacks={}",
                 s.shards,
                 s.nodes,
                 s.edges,
@@ -186,10 +233,13 @@ fn dispatch(engine: &Engine, req: Request, live_connections: usize) -> Response 
                 s.query_ns_p50,
                 s.query_ns_p99,
                 live_connections,
-                s.update_rate
-            ))
+                s.update_rate,
+                s.snap_hits,
+                s.snap_rebuilds,
+                s.snap_fallbacks
+            );
         }
-        Request::Ping => Response::Ok("pong".into()),
+        Request::Ping => out.push_str("OK pong"),
         Request::Quit => unreachable!("handled by caller"),
     }
 }

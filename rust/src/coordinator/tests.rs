@@ -487,11 +487,37 @@ fn tcp_batched_observe_and_multi_topk() {
     assert_eq!(answers[1], vec![(4, 1.0)]);
     assert!(answers[2].is_empty()); // unknown src
 
-    // STATS now surfaces connection count and the applied-update rate.
+    // STATS now surfaces connection count, the applied-update rate, and
+    // the read-snapshot effectiveness counters.
     let stats = client.stats().unwrap();
     assert!(stats.contains("conns=1"), "{stats}");
     assert!(stats.contains("update_rate="), "{stats}");
     assert!(stats.contains("observes=6"), "{stats}");
+    assert!(stats.contains("snap_hits="), "{stats}");
+    assert!(stats.contains("snap_rebuilds="), "{stats}");
+    assert!(stats.contains("snap_fallbacks="), "{stats}");
+    engine.shutdown();
+}
+
+/// The engine's one-guard batched read path answers exactly like the
+/// per-query path, in request order, reusing one scratch buffer.
+#[test]
+fn engine_topk_batch_matches_single_queries() {
+    let engine = Engine::new(&test_config(), 0);
+    for i in 0..2_000u64 {
+        engine.observe_direct(i % 7, i % 23);
+    }
+    let srcs = [3u64, 0, 999, 5];
+    let queries_before = engine.stats().queries;
+    let mut scratch = crate::chain::Recommendation::default();
+    let mut batched = Vec::new();
+    engine.infer_topk_batch(&srcs, 4, &mut scratch, |r| batched.push(r.clone()));
+    assert_eq!(batched.len(), srcs.len());
+    for (src, got) in srcs.iter().zip(&batched) {
+        assert_eq!(*got, engine.infer_topk(*src, 4), "src {src}");
+    }
+    // Per-query accounting is preserved (batch counted 4, singles 4 more).
+    assert_eq!(engine.stats().queries, queries_before + 8);
     engine.shutdown();
 }
 

@@ -36,7 +36,7 @@ fn app() -> App {
             },
             Command {
                 name: "bench",
-                help: "in-process ingest benchmark sweeping batch size",
+                help: "in-process update + read benchmarks; emits BENCH_*.json artifacts",
                 opts: vec![
                     Opt { name: "threads", help: "writer threads", default: Some("4") },
                     Opt {
@@ -51,6 +51,21 @@ fn app() -> App {
                         help: "drive the queued engine path (per-shard queues + workers) \
                                instead of the chain directly",
                         default: None,
+                    },
+                    Opt {
+                        name: "read-threads",
+                        help: "comma-separated reader thread counts for the read sweep",
+                        default: Some("1,2,4,8"),
+                    },
+                    Opt {
+                        name: "read-fanout",
+                        help: "edges on the hot node the read sweep queries",
+                        default: Some("256"),
+                    },
+                    Opt {
+                        name: "json-dir",
+                        help: "directory for BENCH_read.json / BENCH_update.json",
+                        default: Some("."),
                     },
                 ],
                 positionals: vec![],
@@ -145,11 +160,22 @@ fn client(m: &Matches) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Batch-size sweep over the ingest hot path: either the chain's
-/// `observe_batch` directly, or the whole queued pipeline (per-shard
-/// queues + shard-affine workers) with `--queued`.
+/// In-process benchmark suite behind `mcprioq bench`:
+///
+/// 1. **Update sweep** — batch sizes over the ingest hot path: either the
+///    chain's `observe_batch` directly, or the whole queued pipeline
+///    (per-shard queues + shard-affine workers) with `--queued`.
+/// 2. **Read sweep** — hot-node `infer_topk` throughput across reader
+///    thread counts, prefix-sum snapshots off vs on (the read-path
+///    acceptance sweep: snapshots must win ≥ 2× at 8 threads).
+///
+/// Both emit machine-readable artifacts (`BENCH_update.json`,
+/// `BENCH_read.json`) under `--json-dir` for the CI perf trajectory.
 fn bench(m: &Matches) -> anyhow::Result<()> {
-    use mcprioq::bench_harness::{fmt_rate, parse_batch_list, Bench, Table};
+    use mcprioq::bench_harness::{
+        fmt_rate, hot_node_chain, parse_batch_list, read_topk_sweep, Bench, JsonArtifact, JsonVal,
+        Table,
+    };
     use mcprioq::chain::{ChainConfig, McPrioQ};
     use mcprioq::coordinator::Engine;
     use mcprioq::workload::{TransitionStream, ZipfChainStream};
@@ -159,12 +185,18 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
     let millis = m.get_u64("millis").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(400);
     let batches = parse_batch_list(m.get_or("batches", "1,16,256"))
         .map_err(|e| anyhow::anyhow!(e))?;
+    let read_threads = parse_batch_list(m.get_or("read-threads", "1,2,4,8"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let read_fanout =
+        m.get_u64("read-fanout").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(256).max(2);
+    let json_dir = std::path::PathBuf::from(m.get_or("json-dir", "."));
     let queued = m.flag("queued");
     let duration = Duration::from_millis(millis.max(50));
     let bench = Bench::quick();
 
     let path = if queued { "engine-queued" } else { "chain-direct" };
     println!("mcprioq bench: {path}, {threads} threads, {}ms/point", duration.as_millis());
+    let mut update_json = JsonArtifact::new("update_batch_sweep");
     let mut table =
         Table::new("cli_batch_sweep", &["path", "threads", "batch", "updates_per_s", "vs_first"]);
     let mut base = 0.0;
@@ -230,10 +262,64 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
             format!("{rate:.0}"),
             vs_first,
         ]);
+        update_json.row(&[
+            ("path", JsonVal::Str(path.to_string())),
+            ("threads", JsonVal::Int(threads as u64)),
+            ("batch", JsonVal::Int(batch as u64)),
+            ("updates_per_s", JsonVal::Num(rate)),
+        ]);
         println!("  batch {batch:>5}: {}", fmt_rate(rate));
         engine.shutdown();
     }
     table.finish();
+    let p = update_json.finish(&json_dir.join("BENCH_update.json"))?;
+    println!("wrote {}", p.display());
+
+    // ---- read sweep: hot-node topk, snapshots off vs on ----
+    println!(
+        "mcprioq bench: read sweep, fanout {read_fanout}, {}ms/point",
+        duration.as_millis()
+    );
+    let mut read_json = JsonArtifact::new("read_topk_sweep");
+    let mut read_table = Table::new(
+        "cli_read_sweep",
+        &["mode", "threads", "topk_per_s", "vs_list_walk"],
+    );
+    // Shared fixture (bench_harness::hot_node_chain, same as bench e9): a
+    // single hot src node with `read_fanout` Zipf-weighted edges.
+    let train = 200_000;
+    let list_chain = hot_node_chain(
+        ChainConfig { snap_enabled: false, ..Default::default() },
+        read_fanout as usize,
+        train,
+        42,
+    );
+    let snap_chain = hot_node_chain(ChainConfig::default(), read_fanout as usize, train, 42);
+    for row in read_topk_sweep(&bench, duration, &read_threads, 10, &list_chain, &snap_chain) {
+        read_table.row(&[
+            row.mode.to_string(),
+            row.threads.to_string(),
+            format!("{:.0}", row.topk_per_s),
+            format!("{:.2}", row.vs_list_walk),
+        ]);
+        read_json.row(&[
+            ("mode", JsonVal::Str(row.mode.to_string())),
+            ("threads", JsonVal::Int(row.threads as u64)),
+            ("fanout", JsonVal::Int(read_fanout)),
+            ("topk_per_s", JsonVal::Num(row.topk_per_s)),
+            ("vs_list_walk", JsonVal::Num(row.vs_list_walk)),
+        ]);
+        println!(
+            "  {:>9} x{}: {} ({:.2}x)",
+            row.mode,
+            row.threads,
+            fmt_rate(row.topk_per_s),
+            row.vs_list_walk
+        );
+    }
+    read_table.finish();
+    let p = read_json.finish(&json_dir.join("BENCH_read.json"))?;
+    println!("wrote {}", p.display());
     Ok(())
 }
 

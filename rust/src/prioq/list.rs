@@ -90,6 +90,12 @@ pub struct EdgeList {
     swaps: AtomicU64,
     swap_skips: AtomicU64,
     splices: AtomicU64,
+    /// Monotone mutation epoch: advanced by every counter increment,
+    /// splice, swap, unlink, and decay step. The chain's read-path
+    /// snapshots use it as their staleness clock — a snapshot built at
+    /// epoch `e` is considered fresh while `mutations() - e` stays under
+    /// the configured bound.
+    mutations: AtomicU64,
 }
 
 unsafe impl Send for EdgeList {}
@@ -112,7 +118,15 @@ impl EdgeList {
             swaps: AtomicU64::new(0),
             swap_skips: AtomicU64::new(0),
             splices: AtomicU64::new(0),
+            mutations: AtomicU64::new(0),
         }
+    }
+
+    /// Current mutation epoch (see the field docs). Relaxed: callers only
+    /// compare epochs for an approximate staleness bound.
+    #[inline]
+    pub fn mutations(&self) -> u64 {
+        self.mutations.load(Ordering::Relaxed)
     }
 
     /// Number of *linked* nodes (pending nodes are counted once spliced).
@@ -260,6 +274,7 @@ impl EdgeList {
         }
         self.tail.store(node, Ordering::Release);
         self.len.fetch_add(1, Ordering::Relaxed);
+        self.mutations.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Wait-free counter increment plus opportunistic reorder (§II.A.2).
@@ -269,6 +284,7 @@ impl EdgeList {
     pub unsafe fn increment(&self, guard: &Guard, node: *mut Node, delta: u64) -> IncrementOutcome {
         let n = &*node;
         let count = n.count.fetch_add(delta, Ordering::AcqRel) + delta;
+        self.mutations.fetch_add(1, Ordering::Relaxed);
 
         // Fast path: under the order ceiling we provably cannot have
         // overtaken the predecessor — no pointer chase at all.
@@ -356,6 +372,7 @@ impl EdgeList {
     /// Caller holds the ticket; store order is the reader-safe sequence
     /// proven in the module docs (hides only P, never cycles).
     fn swap_with_prev(&self, node: *mut Node, prev: *mut Node) {
+        self.mutations.fetch_add(1, Ordering::Relaxed);
         let e = unsafe { &*node };
         let p = unsafe { &*prev };
         let q = p.prev.load(Ordering::Relaxed);
@@ -439,6 +456,7 @@ impl EdgeList {
         }
         n.link.store(LINK_UNLINKED, Ordering::Release);
         self.len.fetch_sub(1, Ordering::Relaxed);
+        self.mutations.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Halve every counter (model decay, §II.C); unlink nodes that reach 0
@@ -482,6 +500,7 @@ impl EdgeList {
                 n.ceil.store(prev_new_count, Ordering::Relaxed);
                 prev_new_count = new;
                 sum += new;
+                self.mutations.fetch_add(1, Ordering::Relaxed);
             }
             cur = next;
         }
@@ -502,23 +521,62 @@ impl EdgeList {
     /// no later update repairs. Both are bounded, local inversions — the
     /// paper's "approximately correct" state. The chain piggybacks this
     /// sweep on model decay (§II.C), its periodic maintenance pass, making
-    /// the order *eventually exact* at quiescence. Returns swaps performed.
-    pub fn repair(&self, _guard: &Guard) -> u64 {
+    /// the order *eventually exact* at quiescence.
+    ///
+    /// Returns `(swaps performed, edge-count sum)`: every node is visited
+    /// exactly once anyway (bubbling moves `cur` toward the head, never
+    /// past its saved successor), so the sum the chain needs to rebase the
+    /// node total rides along for free instead of a second full scan.
+    pub fn repair(&self, _guard: &Guard) -> (u64, u64) {
         let t = self.ticket.lock();
         self.drain_pending();
         let mut swaps = 0u64;
+        let mut sum = 0u64;
         let mut cur = self.head.load(Ordering::Acquire);
         while !cur.is_null() {
             // Save the successor before bubbling (bubbling moves `cur`
             // toward the head, never past its old successor).
-            let next = unsafe { &*cur }.next.load(Ordering::Acquire);
+            let n = unsafe { &*cur };
+            let next = n.next.load(Ordering::Acquire);
+            sum += n.count.load(Ordering::Acquire);
             swaps += self.bubble_up_ptr(cur) as u64;
             cur = next;
         }
         self.drain_pending();
         drop(t);
         self.try_maintain();
-        swaps
+        (swaps, sum)
+    }
+
+    /// Collect `each(key, count)` for every node under the structural
+    /// ticket (pending inserts drained first), so membership and order are
+    /// *stable* for the duration — counts may still move concurrently
+    /// (increments are wait-free and never take the ticket). While the
+    /// ticket is still held, `commit` takes ownership of the collected
+    /// entries (exact-capacity, one pass, one allocation); the chain
+    /// publishes its read snapshot there, which is what makes a
+    /// publication never straddle a concurrent decay/repair sweep (those
+    /// block on the same ticket). Non-blocking: returns `None` if the
+    /// ticket is busy, and the caller falls back to a live scan.
+    pub fn try_collect_stable<T, R>(
+        &self,
+        _guard: &Guard,
+        mut each: impl FnMut(u64, u64) -> T,
+        commit: impl FnOnce(Vec<T>) -> R,
+    ) -> Option<R> {
+        let t = self.ticket.try_lock()?;
+        self.drain_pending();
+        let mut out = Vec::with_capacity(self.len());
+        let mut cur = self.head.load(Ordering::Acquire);
+        while !cur.is_null() {
+            let n = unsafe { &*cur };
+            out.push(each(n.key, n.count.load(Ordering::Acquire)));
+            cur = n.next.load(Ordering::Acquire);
+        }
+        let r = commit(out);
+        drop(t);
+        self.try_maintain();
+        Some(r)
     }
 
     /// Walk the list head→tail under the guard, calling `f(key, count)`;

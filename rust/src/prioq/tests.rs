@@ -389,3 +389,54 @@ fn alloc_free_unshared_roundtrip() {
     assert_eq!(unsafe { &*n }.key, 9);
     unsafe { EdgeList::free_unshared(n) };
 }
+
+/// `repair` folds the edge-count sum into the sweep (one pass instead of
+/// repair + rebase scan).
+#[test]
+fn repair_returns_swaps_and_sum() {
+    let l = EdgeList::new();
+    let g = rcu::pin();
+    let nodes: Vec<_> = (0..4u64).map(|k| l.insert(&g, k, 10 - k)).collect();
+    // Disorder behind the queue's back: last node becomes the hottest.
+    unsafe { &*nodes[3] }.count.store(100, Ordering::Relaxed);
+    let (swaps, sum) = l.repair(&g);
+    assert_eq!(swaps, 3, "tail node must bubble to the head");
+    assert_eq!(sum, 10 + 9 + 8 + 100);
+    l.check_sorted().unwrap();
+}
+
+#[test]
+fn try_collect_stable_sees_pending_and_order() {
+    let l = EdgeList::new();
+    let g = rcu::pin();
+    l.insert(&g, 1, 5);
+    l.insert(&g, 2, 9); // bubbles above 1 on splice
+    let got = l.try_collect_stable(&g, |k, c| (k, c), |entries| entries);
+    assert_eq!(got.unwrap(), vec![(2, 9), (1, 5)]);
+    // Empty list: the collect succeeds with an empty Vec.
+    let empty = EdgeList::new();
+    let got = empty.try_collect_stable(&g, |k, c| (k, c), |entries| entries.len());
+    assert_eq!(got.unwrap(), 0);
+}
+
+/// The mutation epoch advances on every class of list change — it is the
+/// staleness clock the chain's read snapshots compare against.
+#[test]
+fn mutation_epoch_advances_on_every_change() {
+    let l = EdgeList::new();
+    let g = rcu::pin();
+    let e0 = l.mutations();
+    let a = l.insert(&g, 1, 3);
+    let e1 = l.mutations();
+    assert!(e1 > e0, "splice must advance the epoch");
+    unsafe { l.increment(&g, a, 1) };
+    let e2 = l.mutations();
+    assert!(e2 > e1, "increment must advance the epoch");
+    let b = l.insert(&g, 2, 1);
+    let e3 = l.mutations();
+    unsafe { l.increment(&g, b, 10) }; // bubbles above a: swap
+    let e4 = l.mutations();
+    assert!(e4 > e3 + 1, "increment + swap must advance the epoch twice");
+    l.decay(&g, 1, 2, |_, _| {});
+    assert!(l.mutations() > e4, "decay must advance the epoch");
+}
