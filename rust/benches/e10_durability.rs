@@ -1,0 +1,61 @@
+//! E10 — durability overhead and recovery throughput (DESIGN.md §4).
+//!
+//! Claim shape: write-ahead logging on the shard-affine ingest path is a
+//! bounded tax — steady-state queued ingest with `fsync = batch` (group
+//! commit) stays within 15% of the WAL-off rate (the PR's acceptance
+//! bound), `never` is nearly free, `always` shows the per-batch fsync
+//! cost, and cold recovery replays the log at memory-ingest speeds.
+
+use std::time::Duration;
+
+use mcprioq::bench_harness::{bench_mode_from_env, durability_sweep, fmt_rate, Table};
+use mcprioq::testutil::TempDir;
+
+fn main() {
+    let bench = bench_mode_from_env();
+    let duration = if bench.samples <= 3 {
+        Duration::from_millis(200)
+    } else {
+        Duration::from_millis(600)
+    };
+    let threads = 4;
+    let shards = 4;
+    let scratch = TempDir::new("e10-durability");
+
+    let mut table =
+        Table::new("e10_durability", &["mode", "threads", "updates_per_s", "vs_memory"]);
+    let (rows, probe) =
+        durability_sweep(&bench, duration, threads, shards, 256, scratch.path())
+            .expect("durability sweep");
+    for row in &rows {
+        table.row(&[
+            row.mode.to_string(),
+            threads.to_string(),
+            format!("{:.0}", row.updates_per_s),
+            format!("{:.2}", row.vs_memory),
+        ]);
+        println!(
+            "  fsync {:>7}: {} ({:.2}x vs memory)",
+            row.mode,
+            fmt_rate(row.updates_per_s),
+            row.vs_memory
+        );
+        if row.mode == "batch" && row.vs_memory < 0.85 {
+            println!("  !! fsync=batch below the 0.85x acceptance bound");
+        }
+    }
+    table.row(&[
+        "recover".to_string(),
+        "1".to_string(),
+        format!("{:.0}", probe.updates_per_s),
+        "-".to_string(),
+    ]);
+    println!(
+        "  recovery: {} batches / {} updates in {:.3}s ({})",
+        probe.batches,
+        probe.updates,
+        probe.secs,
+        fmt_rate(probe.updates_per_s)
+    );
+    table.finish();
+}

@@ -279,6 +279,119 @@ pub fn read_topk_sweep(
     rows
 }
 
+/// One row of the durability ingest sweep ([`durability_sweep`]): queued
+/// engine ingest with the WAL off ("memory") or on at each fsync policy.
+pub struct DurabilityRow {
+    pub mode: &'static str,
+    pub updates_per_s: f64,
+    /// Rate over the WAL-off rate (1.0 for the memory row itself) — the
+    /// acceptance knob: `batch` must stay ≥ 0.85.
+    pub vs_memory: f64,
+}
+
+/// Result of the recovery probe appended to the sweep: reopening the
+/// `fsync = never` run's data dir and replaying its WAL from scratch.
+pub struct RecoveryProbe {
+    pub batches: u64,
+    pub updates: u64,
+    pub secs: f64,
+    pub updates_per_s: f64,
+}
+
+/// The durability acceptance sweep (bench `e10_durability` and `mcprioq
+/// bench --durability`): steady-state queued ingest through the full
+/// pipeline (per-shard queues → shard-affine workers → WAL append →
+/// `observe_batch`) with persistence off, then on at every fsync policy,
+/// plus a cold recovery probe over the `never` run's surviving data.
+/// Rates come from the engine's applied-update counter over the window,
+/// so queued backlog is never credited. `root` must be a scratch
+/// directory; each mode writes under `root/<mode>`.
+pub fn durability_sweep(
+    bench: &Bench,
+    window: Duration,
+    threads: usize,
+    shards: usize,
+    batch: usize,
+    root: &std::path::Path,
+) -> Result<(Vec<DurabilityRow>, RecoveryProbe), String> {
+    use crate::config::{PersistSection, ServerConfig};
+    use crate::coordinator::Engine;
+    use crate::workload::{TransitionStream, ZipfChainStream};
+
+    let threads = threads.max(1);
+    let batch = batch.max(1);
+    let make_config = |mode: &str| ServerConfig {
+        shards: shards.max(1),
+        queue_capacity: 65_536,
+        persist: PersistSection {
+            data_dir: if mode == "memory" {
+                String::new()
+            } else {
+                root.join(mode).to_string_lossy().into_owned()
+            },
+            fsync: if mode == "memory" { "batch".into() } else { mode.to_string() },
+            // Periodic checkpoints off: the sweep isolates WAL overhead.
+            checkpoint_interval_ms: 0,
+            ..PersistSection::default()
+        },
+        ..Default::default()
+    };
+    let drive = |engine: &std::sync::Arc<Engine>| -> f64 {
+        let before = engine.stats().applied_updates;
+        bench.run_threads(threads, window, |t| {
+            let engine = std::sync::Arc::clone(engine);
+            let mut stream = ZipfChainStream::new(10_000, 24, 1.1, t as u64 + 1);
+            let mut buf = Vec::with_capacity(batch);
+            move || {
+                buf.clear();
+                for _ in 0..batch {
+                    buf.push(stream.next_transition());
+                }
+                engine.observe_batch(&buf);
+                0
+            }
+        });
+        let after = engine.stats().applied_updates;
+        (after - before) as f64 / window.as_secs_f64()
+    };
+
+    let mut rows = Vec::new();
+    let mut memory_rate = 0.0;
+    for mode in ["memory", "never", "batch", "always"] {
+        let config = make_config(mode);
+        let engine = if mode == "memory" {
+            Engine::new(&config, threads)
+        } else {
+            let (engine, _report) = crate::persist::open_engine(&config, threads)?;
+            engine
+        };
+        let rate = drive(&engine);
+        engine.quiesce();
+        engine.shutdown();
+        drop(engine);
+        if mode == "memory" {
+            memory_rate = rate;
+        }
+        let vs_memory = if memory_rate > 0.0 { rate / memory_rate } else { 0.0 };
+        rows.push(DurabilityRow { mode, updates_per_s: rate, vs_memory });
+    }
+
+    // Cold recovery over the `never` run: no checkpoint was ever taken, so
+    // this replays the entire WAL — the worst-case restart.
+    let t0 = Instant::now();
+    let (engine, report) = crate::persist::open_engine(&make_config("never"), 0)?;
+    let secs = t0.elapsed().as_secs_f64();
+    engine.shutdown();
+    drop(engine);
+    let probe = RecoveryProbe {
+        batches: report.replayed_batches,
+        updates: report.replayed_updates,
+        secs,
+        updates_per_s: if secs > 0.0 { report.replayed_updates as f64 / secs } else { 0.0 },
+    };
+    Ok((rows, probe))
+}
+
 /// One JSON value for [`JsonArtifact`] rows (serde is unavailable offline;
 /// the bench artifacts only need numbers, strings, and booleans).
 #[derive(Debug, Clone)]

@@ -24,6 +24,9 @@ pub struct ServerConfig {
     pub decay_interval: Option<Duration>,
     /// Chain parameters.
     pub chain: ChainSection,
+    /// Durability parameters (WAL + checkpoints); disabled while
+    /// `data_dir` is empty.
+    pub persist: PersistSection,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -43,6 +46,37 @@ pub struct ChainSection {
     pub snap_min_edges: usize,
 }
 
+/// `[persist]` — the durability subsystem (DESIGN.md §4). All knobs are
+/// inert until `data_dir` is set (`--data-dir` on the CLI overrides).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PersistSection {
+    /// Root directory for WAL segments and checkpoints; "" = disabled.
+    pub data_dir: String,
+    /// WAL fsync policy: "never" | "batch" (group commit) | "always".
+    pub fsync: String,
+    /// Group-commit window for `fsync = "batch"`.
+    pub fsync_interval_ms: u64,
+    /// WAL segment rotation bound in bytes.
+    pub segment_bytes: u64,
+    /// Periodic checkpoint cadence; 0 = only explicit `SAVE`s.
+    pub checkpoint_interval_ms: u64,
+    /// Checkpoint early once live WAL bytes exceed this.
+    pub checkpoint_wal_bytes: u64,
+}
+
+impl Default for PersistSection {
+    fn default() -> Self {
+        PersistSection {
+            data_dir: String::new(),
+            fsync: "batch".to_string(),
+            fsync_interval_ms: 50,
+            segment_bytes: 64 * 1024 * 1024,
+            checkpoint_interval_ms: 60_000,
+            checkpoint_wal_bytes: 256 * 1024 * 1024,
+        }
+    }
+}
+
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
@@ -60,6 +94,7 @@ impl Default for ServerConfig {
                 snap_staleness: 128,
                 snap_min_edges: 8,
             },
+            persist: PersistSection::default(),
         }
     }
 }
@@ -87,11 +122,27 @@ impl ServerConfig {
                 "chain.snap_enabled" => cfg.chain.snap_enabled = value.as_bool()?,
                 "chain.snap_staleness" => cfg.chain.snap_staleness = value.as_u64()?,
                 "chain.snap_min_edges" => cfg.chain.snap_min_edges = value.as_usize()?,
+                "persist.data_dir" => cfg.persist.data_dir = value.as_str()?.to_string(),
+                "persist.fsync" => cfg.persist.fsync = value.as_str()?.to_string(),
+                "persist.fsync_interval_ms" => {
+                    cfg.persist.fsync_interval_ms = value.as_u64()?
+                }
+                "persist.segment_bytes" => cfg.persist.segment_bytes = value.as_u64()?,
+                "persist.checkpoint_interval_ms" => {
+                    cfg.persist.checkpoint_interval_ms = value.as_u64()?
+                }
+                "persist.checkpoint_wal_bytes" => {
+                    cfg.persist.checkpoint_wal_bytes = value.as_u64()?
+                }
                 other => return Err(format!("unknown config key: {other}")),
             }
         }
         if cfg.chain.decay_num >= cfg.chain.decay_den {
             return Err("chain.decay_num must be < chain.decay_den".to_string());
+        }
+        crate::persist::FsyncPolicy::parse(&cfg.persist.fsync)?;
+        if cfg.persist.segment_bytes == 0 {
+            return Err("persist.segment_bytes must be positive".to_string());
         }
         Ok(cfg)
     }
@@ -99,6 +150,23 @@ impl ServerConfig {
     pub fn load(path: &str) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         Self::from_toml(&text)
+    }
+
+    /// Resolve the `[persist]` section: `Ok(None)` while durability is
+    /// disabled (empty `data_dir`), `Err` on an invalid fsync policy.
+    pub fn persist_config(&self) -> Result<Option<crate::persist::PersistConfig>, String> {
+        if self.persist.data_dir.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(crate::persist::PersistConfig {
+            data_dir: std::path::PathBuf::from(&self.persist.data_dir),
+            fsync: crate::persist::FsyncPolicy::parse(&self.persist.fsync)?,
+            fsync_interval: Duration::from_millis(self.persist.fsync_interval_ms),
+            segment_bytes: self.persist.segment_bytes.max(1),
+            checkpoint_interval: (self.persist.checkpoint_interval_ms > 0)
+                .then(|| Duration::from_millis(self.persist.checkpoint_interval_ms)),
+            checkpoint_wal_bytes: self.persist.checkpoint_wal_bytes.max(1),
+        }))
     }
 
     pub fn to_chain_config(&self) -> crate::chain::ChainConfig {
@@ -163,6 +231,31 @@ decay_den = 4
         assert!(cfg.chain.snap_enabled);
         let cc = cfg.to_chain_config();
         assert_eq!(cc.snap_staleness, crate::chain::ChainConfig::default().snap_staleness);
+    }
+
+    #[test]
+    fn persist_knobs_parse() {
+        let text = "[persist]\ndata_dir = \"/tmp/mc\"\nfsync = \"always\"\n\
+                    fsync_interval_ms = 10\nsegment_bytes = 4096\n\
+                    checkpoint_interval_ms = 0\ncheckpoint_wal_bytes = 8192\n";
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.persist.data_dir, "/tmp/mc");
+        let p = cfg.persist_config().unwrap().unwrap();
+        assert_eq!(p.fsync, crate::persist::FsyncPolicy::Always);
+        assert_eq!(p.segment_bytes, 4096);
+        assert_eq!(p.checkpoint_interval, None); // 0 disables periodic
+        assert_eq!(p.checkpoint_wal_bytes, 8192);
+        // Defaults: disabled until a data dir is set.
+        let cfg = ServerConfig::from_toml("").unwrap();
+        assert_eq!(cfg.persist, PersistSection::default());
+        assert!(cfg.persist_config().unwrap().is_none());
+    }
+
+    #[test]
+    fn persist_invalid_rejected() {
+        assert!(ServerConfig::from_toml("[persist]\nfsync = \"sometimes\"\n").is_err());
+        assert!(ServerConfig::from_toml("[persist]\nsegment_bytes = 0\n").is_err());
+        assert!(ServerConfig::from_toml("[persist]\nwal_dir = \"x\"\n").is_err());
     }
 
     #[test]

@@ -2,8 +2,8 @@
 //! repair sweep, on a dedicated thread.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
 use super::engine::Engine;
 
@@ -26,18 +26,39 @@ impl DecayScheduler {
             let running = Arc::clone(&running);
             std::thread::spawn(move || {
                 let (lock, cvar) = &*stop;
-                loop {
-                    // Interruptible sleep.
-                    let mut stopped = lock.lock().unwrap();
-                    let (guard, timeout) = cvar.wait_timeout(stopped, interval).unwrap();
-                    stopped = guard;
-                    if *stopped {
-                        break;
+                // The cadence is an *absolute* deadline carried across
+                // `wait_timeout` iterations: a spurious condvar wakeup
+                // re-waits only the remainder, instead of rearming the
+                // full interval and drifting the decay schedule.
+                let mut deadline = Instant::now() + interval;
+                'run: loop {
+                    {
+                        let mut stopped =
+                            lock.lock().unwrap_or_else(PoisonError::into_inner);
+                        loop {
+                            if *stopped {
+                                break 'run;
+                            }
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            let (guard, _) = cvar
+                                .wait_timeout(stopped, deadline - now)
+                                .unwrap_or_else(PoisonError::into_inner);
+                            stopped = guard;
+                        }
                     }
-                    drop(stopped);
-                    if timeout.timed_out() {
-                        engine.decay();
-                        runs.fetch_add(1, Ordering::Relaxed);
+                    engine.decay();
+                    runs.fetch_add(1, Ordering::Relaxed);
+                    // Next tick from the previous deadline, not from "now":
+                    // a slow decay pass doesn't shift the whole schedule —
+                    // unless it overran a full interval, then skip ahead
+                    // rather than firing a catch-up burst.
+                    deadline += interval;
+                    let now = Instant::now();
+                    if deadline < now {
+                        deadline = now + interval;
                     }
                 }
                 running.store(false, Ordering::SeqCst);
@@ -56,7 +77,7 @@ impl DecayScheduler {
 
     pub fn stop(&self) {
         let (lock, cvar) = &*self.stop;
-        *lock.lock().unwrap() = true;
+        *lock.lock().unwrap_or_else(PoisonError::into_inner) = true;
         cvar.notify_all();
     }
 }

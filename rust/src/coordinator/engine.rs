@@ -17,13 +17,14 @@
 //!   (cache locality).
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock, PoisonError, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::chain::{ChainConfig, McPrioQ, Recommendation};
 use crate::config::ServerConfig;
 use crate::metrics::{Counter, Histogram, Meter};
+use crate::persist::PersistState;
 use crate::rcu;
 
 use super::queue::BoundedQueue;
@@ -62,6 +63,14 @@ pub struct EngineStats {
     pub snap_hits: u64,
     pub snap_rebuilds: u64,
     pub snap_fallbacks: u64,
+    /// Durability gauges (all 0 when persistence is disabled): live WAL
+    /// bytes on disk, seconds since the last committed checkpoint, batches
+    /// replayed from the WAL at startup, and failed WAL appends (non-zero
+    /// means batches are being served without surviving a crash).
+    pub wal_bytes: u64,
+    pub ckpt_age_s: u64,
+    pub recovered_batches: u64,
+    pub wal_errors: u64,
 }
 
 /// One MCPrioQ per shard; srcs are hash-routed so every shard sees a
@@ -86,6 +95,15 @@ pub struct Engine {
     rejected: Counter,
     query_lat: Histogram,
     update_meter: Meter,
+    /// Durability state (WAL writers + checkpoint bookkeeping), armed once
+    /// by `persist::open_engine` after recovery finishes. `None`/unset =
+    /// in-memory only (the paper's original mode; also every bench/test
+    /// that doesn't opt in).
+    persist: OnceLock<Arc<PersistState>>,
+    /// Pauses the apply path at a batch boundary: workers hold the read
+    /// side around each (WAL append + observe_batch); `with_ingest_paused`
+    /// takes the write side so checkpoints cut at an exact batch boundary.
+    ingest_gate: RwLock<()>,
 }
 
 impl Engine {
@@ -114,6 +132,8 @@ impl Engine {
             rejected: Counter::new(),
             query_lat: Histogram::new(),
             update_meter: Meter::new(),
+            persist: OnceLock::new(),
+            ingest_gate: RwLock::new(()),
         });
         // Spawn shard-affine ingest workers. They hold their queue Arcs
         // plus a Weak to the engine, so dropping the last user Arc tears
@@ -144,8 +164,20 @@ impl Engine {
             return 0; // more workers than shards; nothing to own
         }
         // Apply one same-shard batch; None = engine gone mid-shutdown.
+        // Write-ahead: the WAL append happens before the in-memory apply,
+        // both inside the ingest gate, so a checkpoint's cut point (last
+        // appended seq at a quiesced pause) contains exactly the applied
+        // batches — recovery never loses an acked batch and never applies
+        // one twice.
         let apply = |shard: usize, batch: &[(u64, u64)]| -> Option<u64> {
             let engine = weak.upgrade()?;
+            let _gate =
+                engine.ingest_gate.read().unwrap_or_else(PoisonError::into_inner);
+            if let Some(persist) = engine.persist.get() {
+                if let Err(e) = persist.append(shard, batch) {
+                    persist.note_error(shard, &e);
+                }
+            }
             engine.shards[shard].observe_batch(batch);
             let n = batch.len() as u64;
             engine.update_meter.mark_n(n);
@@ -359,9 +391,14 @@ impl Engine {
         rcu::synchronize();
     }
 
-    /// Merged quiesced snapshot across shards, sorted by src id (shards
-    /// hold disjoint srcs, so this equals a single-chain export of the
-    /// same stream — the differential tests rely on that).
+    /// Merged snapshot across shards, sorted by src id (shards hold
+    /// disjoint srcs, so this equals a single-chain export of the same
+    /// stream — the differential tests rely on that).
+    ///
+    /// This does **not** quiesce the shard queues: batches still queued or
+    /// mid-apply are silently missing from the result. Callers that need
+    /// the every-acked-batch guarantee (the checkpointer, model save)
+    /// must use [`Engine::export_quiesced`].
     pub fn export(&self) -> Vec<(u64, u64, Vec<(u64, u64)>)> {
         let mut out = Vec::new();
         for s in &self.shards {
@@ -369,6 +406,59 @@ impl Engine {
         }
         out.sort_unstable_by_key(|&(id, _, _)| id);
         out
+    }
+
+    /// [`Engine::export`] with the consistency guarantee a checkpoint
+    /// needs: drains every update enqueued before the call (`quiesce`),
+    /// then pauses the apply path at a batch boundary for the duration of
+    /// the export. The result therefore contains *every* batch whose WAL
+    /// append (when persistence is on) happened before the pause — an
+    /// exact prefix of each shard's sequence — and no torn batches.
+    pub fn export_quiesced(&self) -> Vec<(u64, u64, Vec<(u64, u64)>)> {
+        self.with_ingest_paused(|| self.export())
+    }
+
+    /// Quiesce, then run `f` with the apply path paused at a batch
+    /// boundary (workers blocked on the ingest gate; producers keep
+    /// enqueueing against the queues' backpressure). The checkpointer uses
+    /// this window to read WAL cut points and export atomically.
+    pub(crate) fn with_ingest_paused<R>(&self, f: impl FnOnce() -> R) -> R {
+        self.quiesce();
+        let _gate = self.ingest_gate.write().unwrap_or_else(PoisonError::into_inner);
+        f()
+    }
+
+    /// Rebuild state from an exported snapshot: each node's edge list is
+    /// replayed as one same-src weighted batch into its shard, mirroring
+    /// `McPrioQ::import` (recovery and the persist tests rely on the
+    /// result being export-identical). Bypasses the queues and the WAL.
+    pub fn import_snapshot(&self, snapshot: &[(u64, u64, Vec<(u64, u64)>)]) {
+        let mut batch = Vec::new();
+        for (src, _total, edges) in snapshot {
+            batch.clear();
+            batch.extend(edges.iter().map(|&(dst, count)| (*src, dst, count)));
+            self.shard(*src).observe_batch_weighted(&batch);
+        }
+    }
+
+    /// Arm durability: called exactly once by `persist::open_engine` after
+    /// recovery has replayed the WAL (so replayed batches are not
+    /// re-logged). Ingest workers start logging on their next batch.
+    pub(crate) fn attach_persist(&self, state: Arc<PersistState>) {
+        if self.persist.set(state).is_err() {
+            panic!("persist state attached twice");
+        }
+    }
+
+    pub(crate) fn persist_state(&self) -> Option<&Arc<PersistState>> {
+        self.persist.get()
+    }
+
+    /// Write a checkpoint now (quiesce + pause, snapshot to `tmp` +
+    /// `rename`, manifest commit, WAL truncation). Errors if persistence
+    /// is not enabled. Backs the wire `SAVE` command and the scheduler.
+    pub fn checkpoint(&self) -> Result<crate::persist::CheckpointSummary, String> {
+        crate::persist::run_checkpoint(self)
     }
 
     pub fn stats(&self) -> EngineStats {
@@ -390,6 +480,16 @@ impl Engine {
             snap_fallbacks += st.snap_fallbacks;
         }
         let snap = self.query_lat.snapshot();
+        let (wal_bytes, ckpt_age_s, recovered_batches, wal_errors) = match self.persist.get()
+        {
+            Some(p) => (
+                p.wal_bytes(),
+                p.checkpoint_age().as_secs(),
+                p.recovered_batches(),
+                p.wal_errors(),
+            ),
+            None => (0, 0, 0, 0),
+        };
         EngineStats {
             shards: self.shards.len(),
             nodes,
@@ -406,6 +506,10 @@ impl Engine {
             snap_hits,
             snap_rebuilds,
             snap_fallbacks,
+            wal_bytes,
+            ckpt_age_s,
+            recovered_batches,
+            wal_errors,
         }
     }
 

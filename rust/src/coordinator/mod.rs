@@ -26,6 +26,11 @@
 //!   the paper's "query while building" property, operationalized.
 //! * **Decay** runs on the maintenance thread (§II.C), which also performs
 //!   the order-repair sweep.
+//! * **Durability** (opt-in, DESIGN.md §4): each worker write-ahead-logs
+//!   its drained batch into the shard's segmented WAL before applying it;
+//!   a background checkpointer (or the wire `SAVE` command) pauses ingest
+//!   at a batch boundary and commits `Engine::export` + WAL cut points to
+//!   disk; `persist::open_engine` recovers checkpoint + WAL tail on boot.
 
 mod decay;
 mod engine;

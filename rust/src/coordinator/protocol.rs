@@ -11,6 +11,8 @@
 //! MTOPK <n> <k> <s1> ...     top-k for n src nodes in one request
 //! PROB <src> <dst>           single-edge probability
 //! DECAY                      force a decay + repair pass
+//! SAVE                       force a durability checkpoint (WAL cut +
+//!                            snapshot; ERR if persistence is disabled)
 //! STATS                      engine statistics
 //! PING                       liveness check
 //! QUIT                       close the connection
@@ -38,6 +40,7 @@ pub enum Request {
     MultiTopK { srcs: Vec<u64>, k: usize },
     Prob { src: u64, dst: u64 },
     Decay,
+    Save,
     Stats,
     Ping,
     Quit,
@@ -96,6 +99,7 @@ impl Request {
                 Request::Recommend { src, threshold: t }
             }
             "DECAY" => Request::Decay,
+            "SAVE" => Request::Save,
             "STATS" => Request::Stats,
             "PING" => Request::Ping,
             "QUIT" => Request::Quit,
@@ -128,6 +132,7 @@ impl Request {
             }
             Request::Prob { src, dst } => format!("PROB {src} {dst}"),
             Request::Decay => "DECAY".into(),
+            Request::Save => "SAVE".into(),
             Request::Stats => "STATS".into(),
             Request::Ping => "PING".into(),
             Request::Quit => "QUIT".into(),

@@ -13,9 +13,13 @@
 //! every ingest worker in the process. Bulk transfer happens through
 //! [`BoundedQueue::push_bulk`] / [`BoundedQueue::try_pop_batch`] — one lock
 //! acquisition per batch, not per item.
+//!
+//! Locking is *non-poisoning*: a worker that panics while holding the lock
+//! must not wedge every other thread sharing the queue (see
+//! [`BoundedQueue::locked`]).
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 struct State<T> {
@@ -31,6 +35,26 @@ pub struct BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Non-poisoning lock. An ingest worker that panics mid-batch poisons
+    /// this mutex for every producer and its sibling consumers; the queue
+    /// state itself is always valid (each critical section completes its
+    /// `VecDeque` edits before any call that could panic), so recovering
+    /// the guard keeps the rest of the ingest plane alive instead of
+    /// cascading `PoisonError` panics through every thread that shares
+    /// the queue.
+    fn locked(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Non-poisoning condvar wait (same rationale as [`Self::locked`]).
+    fn wait<'a>(
+        &self,
+        cvar: &Condvar,
+        guard: MutexGuard<'a, State<T>>,
+    ) -> MutexGuard<'a, State<T>> {
+        cvar.wait(guard).unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         BoundedQueue {
@@ -46,7 +70,7 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        self.locked().items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -55,7 +79,7 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking push; returns false if the queue is closed.
     pub fn push(&self, item: T) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.locked();
         loop {
             if s.closed {
                 return false;
@@ -65,14 +89,14 @@ impl<T> BoundedQueue<T> {
                 self.not_empty.notify_one();
                 return true;
             }
-            s = self.not_full.wait(s).unwrap();
+            s = self.wait(&self.not_full, s);
         }
     }
 
     /// Non-blocking push; `Err(item)` when full or closed (caller applies
     /// backpressure policy: drop, retry, or surface an error).
     pub fn try_push(&self, item: T) -> Result<(), T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.locked();
         if s.closed || s.items.len() >= self.capacity {
             return Err(item);
         }
@@ -83,7 +107,7 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking pop; `None` once the queue is closed *and* drained.
     pub fn pop(&self) -> Option<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.locked();
         loop {
             if let Some(item) = s.items.pop_front() {
                 self.not_full.notify_one();
@@ -92,13 +116,13 @@ impl<T> BoundedQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.not_empty.wait(s).unwrap();
+            s = self.wait(&self.not_empty, s);
         }
     }
 
     /// Pop up to `max` items in one lock acquisition (batch drain).
     pub fn pop_batch(&self, max: usize) -> Vec<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.locked();
         loop {
             if !s.items.is_empty() {
                 let take = s.items.len().min(max);
@@ -109,7 +133,7 @@ impl<T> BoundedQueue<T> {
             if s.closed {
                 return Vec::new();
             }
-            s = self.not_empty.wait(s).unwrap();
+            s = self.wait(&self.not_empty, s);
         }
     }
 
@@ -121,7 +145,7 @@ impl<T> BoundedQueue<T> {
         let mut pushed = 0;
         let mut it = items.into_iter();
         let mut pending = it.next();
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.locked();
         loop {
             if s.closed {
                 return pushed;
@@ -140,13 +164,13 @@ impl<T> BoundedQueue<T> {
                 }
             }
             self.not_empty.notify_all();
-            s = self.not_full.wait(s).unwrap();
+            s = self.wait(&self.not_full, s);
         }
     }
 
     /// Non-blocking batch pop: up to `max` items, possibly empty.
     pub fn try_pop_batch(&self, max: usize) -> Vec<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.locked();
         if s.items.is_empty() {
             return Vec::new();
         }
@@ -161,7 +185,7 @@ impl<T> BoundedQueue<T> {
     /// own several queues use this to park without missing a close.
     pub fn pop_batch_timeout(&self, max: usize, timeout: Duration) -> Vec<T> {
         let deadline = Instant::now() + timeout;
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.locked();
         loop {
             if !s.items.is_empty() {
                 let take = s.items.len().min(max);
@@ -176,20 +200,23 @@ impl<T> BoundedQueue<T> {
             if now >= deadline {
                 return Vec::new();
             }
-            let (guard, _) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            let (guard, _) = self
+                .not_empty
+                .wait_timeout(s, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
             s = guard;
         }
     }
 
     /// Close the queue: producers fail fast, consumers drain then stop.
     pub fn close(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.locked();
         s.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        self.locked().closed
     }
 }

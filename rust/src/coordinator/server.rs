@@ -216,13 +216,26 @@ fn dispatch(
             let (total, pruned) = engine.decay();
             let _ = write!(out, "OK total={total} pruned={pruned}");
         }
+        Request::Save => match engine.checkpoint() {
+            Ok(s) => {
+                let _ = write!(
+                    out,
+                    "OK gen={} nodes={} bytes={} wal_freed={}",
+                    s.generation, s.nodes, s.bytes, s.wal_freed
+                );
+            }
+            Err(e) => {
+                let _ = write!(out, "ERR {e}");
+            }
+        },
         Request::Stats => {
             let s = engine.stats();
             let _ = write!(
                 out,
                 "OK shards={} nodes={} edges={} observes={} queries={} dropped={} \
                  queue_depth={} q_p50_ns={} q_p99_ns={} conns={} update_rate={:.0} \
-                 snap_hits={} snap_rebuilds={} snap_fallbacks={}",
+                 snap_hits={} snap_rebuilds={} snap_fallbacks={} wal_bytes={} \
+                 ckpt_age={} recovered_batches={} wal_errors={}",
                 s.shards,
                 s.nodes,
                 s.edges,
@@ -236,7 +249,11 @@ fn dispatch(
                 s.update_rate,
                 s.snap_hits,
                 s.snap_rebuilds,
-                s.snap_fallbacks
+                s.snap_fallbacks,
+                s.wal_bytes,
+                s.ckpt_age_s,
+                s.recovered_batches,
+                s.wal_errors
             );
         }
         Request::Ping => out.push_str("OK pong"),
@@ -387,6 +404,16 @@ impl Client {
     pub fn stats(&mut self) -> Result<String> {
         match self.request(&Request::Stats)? {
             Response::Ok(s) => Ok(s),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Force a durability checkpoint (`SAVE`); returns the server's
+    /// `gen=... nodes=... bytes=...` detail line.
+    pub fn save(&mut self) -> Result<String> {
+        match self.request(&Request::Save)? {
+            Response::Ok(s) => Ok(s),
+            Response::Err(e) => anyhow::bail!("save rejected: {e}"),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
     }

@@ -322,6 +322,7 @@ fn protocol_request_roundtrip() {
         Request::MultiTopK { srcs: vec![4, 9, 11], k: 3 },
         Request::Prob { src: 1, dst: 9 },
         Request::Decay,
+        Request::Save,
         Request::Stats,
         Request::Ping,
         Request::Quit,
@@ -496,7 +497,36 @@ fn tcp_batched_observe_and_multi_topk() {
     assert!(stats.contains("snap_hits="), "{stats}");
     assert!(stats.contains("snap_rebuilds="), "{stats}");
     assert!(stats.contains("snap_fallbacks="), "{stats}");
+    // Durability gauges are always present (zero while persistence is off).
+    assert!(stats.contains("wal_bytes=0"), "{stats}");
+    assert!(stats.contains("ckpt_age=0"), "{stats}");
+    assert!(stats.contains("recovered_batches=0"), "{stats}");
+    assert!(stats.contains("wal_errors=0"), "{stats}");
     engine.shutdown();
+}
+
+/// `export_quiesced` must contain every update enqueued before the call —
+/// plain `export` makes no such promise (documented; the checkpointer
+/// relies on the quiesced variant).
+#[test]
+fn export_quiesced_contains_all_enqueued_updates() {
+    let engine = Engine::new(&test_config(), 2);
+    let pairs: Vec<(u64, u64)> = (0..30_000u64).map(|i| (i % 17, i % 5)).collect();
+    for chunk in pairs.chunks(977) {
+        assert_eq!(engine.observe_batch(chunk), chunk.len());
+    }
+    // No explicit quiesce: the export itself must drain the queues first.
+    let snap = engine.export_quiesced();
+    let total: u64 = snap.iter().map(|(_, total, _)| *total).sum();
+    assert_eq!(total, pairs.len() as u64);
+    // And it matches a direct-ingest reference exactly.
+    let reference = Engine::new(&test_config(), 0);
+    for chunk in pairs.chunks(977) {
+        reference.observe_batch_direct(chunk);
+    }
+    assert_eq!(snap, reference.export());
+    engine.shutdown();
+    reference.shutdown();
 }
 
 /// The engine's one-guard batched read path answers exactly like the

@@ -12,6 +12,7 @@ pub mod config;
 pub mod coordinator;
 pub mod hashtable;
 pub mod metrics;
+pub mod persist;
 pub mod prioq;
 pub mod rcu;
 pub mod runtime;

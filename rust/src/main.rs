@@ -21,6 +21,17 @@ fn app() -> App {
                     Opt { name: "listen", help: "bind address (overrides config)", default: Some("") },
                     Opt { name: "workers", help: "ingest worker threads", default: Some("2") },
                     Opt { name: "no-decay", help: "disable the decay scheduler", default: None },
+                    Opt {
+                        name: "data-dir",
+                        help: "durability directory: WAL + checkpoints + crash recovery \
+                               (overrides config; empty = in-memory only)",
+                        default: Some(""),
+                    },
+                    Opt {
+                        name: "fsync",
+                        help: "WAL fsync policy: never|batch|always (overrides config)",
+                        default: Some(""),
+                    },
                 ],
                 positionals: vec![],
             },
@@ -67,6 +78,12 @@ fn app() -> App {
                         help: "directory for BENCH_read.json / BENCH_update.json",
                         default: Some("."),
                     },
+                    Opt {
+                        name: "durability",
+                        help: "also run the durability sweep (WAL off/never/batch/always \
+                               + recovery replay) and emit BENCH_durability.json",
+                        default: None,
+                    },
                 ],
                 positionals: vec![],
             },
@@ -112,22 +129,64 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
             config.listen = listen.to_string();
         }
     }
+    if let Some(dir) = m.get("data-dir") {
+        if !dir.is_empty() {
+            config.persist.data_dir = dir.to_string();
+        }
+    }
+    if let Some(fsync) = m.get("fsync") {
+        if !fsync.is_empty() {
+            mcprioq::persist::FsyncPolicy::parse(fsync).map_err(|e| anyhow::anyhow!(e))?;
+            config.persist.fsync = fsync.to_string();
+        }
+    }
     let workers = m.get_u64("workers").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(2) as usize;
 
-    let engine = Engine::new(&config, workers);
+    // Durable path: recover (checkpoint + WAL replay) before serving.
+    let persist_cfg = config.persist_config().map_err(|e| anyhow::anyhow!(e))?;
+    let engine = match &persist_cfg {
+        Some(pcfg) => {
+            let (engine, r) =
+                mcprioq::persist::open_engine(&config, workers).map_err(|e| anyhow::anyhow!(e))?;
+            println!(
+                "recovered from {}: gen={} epoch={} nodes={} replayed_batches={} \
+                 ({} updates){}{}",
+                pcfg.data_dir.display(),
+                r.generation,
+                r.epoch,
+                r.snapshot_nodes,
+                r.replayed_batches,
+                r.replayed_updates,
+                if r.torn_tails > 0 { " [torn tail tolerated]" } else { "" },
+                if r.layout_changed { " [shard layout changed; epoch bumped]" } else { "" },
+            );
+            engine
+        }
+        None => Engine::new(&config, workers),
+    };
     let _decay = match config.decay_interval {
         Some(interval) if !m.flag("no-decay") => {
             Some(DecayScheduler::start(Arc::clone(&engine), interval))
         }
         _ => None,
     };
+    let _checkpointer = match &persist_cfg {
+        Some(pcfg) => pcfg.checkpoint_interval.map(|interval| {
+            mcprioq::persist::CheckpointScheduler::start(Arc::clone(&engine), interval)
+        }),
+        None => None,
+    };
     let server = Server::bind(Arc::clone(&engine), &config.listen)?;
     println!(
-        "mcprioq serving on {} ({} shards, {} ingest workers, decay {:?})",
+        "mcprioq serving on {} ({} shards, {} ingest workers, decay {:?}, durability {})",
         server.local_addr(),
         engine.shard_count(),
         workers,
-        config.decay_interval
+        config.decay_interval,
+        match &persist_cfg {
+            Some(p) => format!("{} fsync={}", p.data_dir.display(), p.fsync.as_str()),
+            None => "off".to_string(),
+        }
     );
     let handle = server.spawn();
 
@@ -137,7 +196,7 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
         let s = engine.stats();
         println!(
             "[stats] nodes={} edges={} observes={} queries={} queue={} p50={}ns p99={}ns \
-             rate={:.0}/s",
+             rate={:.0}/s wal_bytes={} ckpt_age={}s",
             s.nodes,
             s.edges,
             s.observes,
@@ -145,7 +204,9 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
             s.queue_depth,
             s.query_ns_p50,
             s.query_ns_p99,
-            s.update_rate
+            s.update_rate,
+            s.wal_bytes,
+            s.ckpt_age_s
         );
         let _ = &handle;
     }
@@ -320,6 +381,56 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
     read_table.finish();
     let p = read_json.finish(&json_dir.join("BENCH_read.json"))?;
     println!("wrote {}", p.display());
+
+    // ---- durability sweep: WAL off vs fsync policies + recovery ----
+    if m.flag("durability") {
+        use mcprioq::bench_harness::durability_sweep;
+        use mcprioq::testutil::TempDir;
+        println!(
+            "mcprioq bench: durability sweep, {threads} threads, {}ms/point",
+            duration.as_millis()
+        );
+        let scratch = TempDir::new("bench-durability");
+        let (rows, probe) = durability_sweep(&bench, duration, threads, shards, 256, scratch.path())
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let mut dur_json = JsonArtifact::new("durability_sweep");
+        let mut dur_table =
+            Table::new("cli_durability_sweep", &["mode", "updates_per_s", "vs_memory"]);
+        for row in &rows {
+            dur_table.row(&[
+                row.mode.to_string(),
+                format!("{:.0}", row.updates_per_s),
+                format!("{:.2}", row.vs_memory),
+            ]);
+            dur_json.row(&[
+                ("mode", JsonVal::Str(row.mode.to_string())),
+                ("threads", JsonVal::Int(threads as u64)),
+                ("updates_per_s", JsonVal::Num(row.updates_per_s)),
+                ("vs_memory", JsonVal::Num(row.vs_memory)),
+            ]);
+            println!(
+                "  fsync {:>7}: {} ({:.2}x)",
+                row.mode,
+                fmt_rate(row.updates_per_s),
+                row.vs_memory
+            );
+        }
+        dur_table.finish();
+        dur_json.row(&[
+            ("mode", JsonVal::Str("recover".to_string())),
+            ("replayed_batches", JsonVal::Int(probe.batches)),
+            ("replayed_updates", JsonVal::Int(probe.updates)),
+            ("updates_per_s", JsonVal::Num(probe.updates_per_s)),
+        ]);
+        println!(
+            "  recovery: {} updates in {:.3}s ({})",
+            probe.updates,
+            probe.secs,
+            fmt_rate(probe.updates_per_s)
+        );
+        let p = dur_json.finish(&json_dir.join("BENCH_durability.json"))?;
+        println!("wrote {}", p.display());
+    }
     Ok(())
 }
 

@@ -1,0 +1,291 @@
+//! Atomic checkpoints: pause ingest at a batch boundary, encode the
+//! quiesced export to `ckpt-<gen>.snap.tmp`, fsync + `rename`, commit a
+//! manifest recording the per-shard WAL cut points, then truncate sealed
+//! WAL segments the snapshot covers.
+//!
+//! Commit protocol (crash-safe at every step):
+//!
+//! 1. `quiesce` + ingest gate → read `(cuts, export)` atomically. The cut
+//!    for shard `i` is its WAL's last appended sequence number; because
+//!    appends happen before applies inside the gate, the export contains
+//!    exactly the batches with `seq <= cuts[i]`.
+//! 2. Write `ckpt-<gen>.snap.tmp`, `sync_data`, rename to
+//!    `ckpt-<gen>.snap`, fsync the directory. A crash before the rename
+//!    leaves only a `.tmp` recovery ignores (and sweeps).
+//! 3. Write `MANIFEST.tmp`, rename over `MANIFEST`, fsync the directory.
+//!    *This rename is the commit point*: before it, recovery uses the
+//!    previous checkpoint + a longer WAL suffix; after it, the new one.
+//! 4. Truncate WAL segments fully covered by the cuts; delete snapshot
+//!    generations older than the previous one (retention: current + 1,
+//!    so a torn current snapshot still has a fallback).
+
+use std::fs::{self, File};
+use std::io::{self, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::TomlDoc;
+use crate::coordinator::Engine;
+
+use super::{codec, wal};
+
+/// Result of one committed checkpoint (`SAVE` reply, logs).
+#[derive(Debug, Clone, Copy)]
+pub struct CheckpointSummary {
+    pub generation: u64,
+    /// Src nodes in the snapshot.
+    pub nodes: usize,
+    /// Encoded snapshot size.
+    pub bytes: u64,
+    /// WAL bytes freed by truncation.
+    pub wal_freed: u64,
+}
+
+/// The committed-checkpoint pointer (`checkpoint/MANIFEST`), in the same
+/// TOML subset `ServerConfig` uses, so it is both human-greppable and
+/// parsed by the existing `TomlDoc`.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct Manifest {
+    pub generation: u64,
+    pub epoch: u64,
+    pub shards: usize,
+    pub snapshot: String,
+    pub wal_cuts: Vec<u64>,
+}
+
+impl Manifest {
+    pub(crate) fn render(&self) -> String {
+        let cuts =
+            self.wal_cuts.iter().map(u64::to_string).collect::<Vec<_>>().join(", ");
+        format!(
+            "# mcprioq durability manifest — do not edit while the server runs\n\
+             [checkpoint]\n\
+             generation = {}\n\
+             epoch = {}\n\
+             shards = {}\n\
+             snapshot = \"{}\"\n\
+             wal_cuts = [{}]\n",
+            self.generation, self.epoch, self.shards, self.snapshot, cuts
+        )
+    }
+
+    pub(crate) fn parse(text: &str) -> Result<Manifest, String> {
+        let doc = TomlDoc::parse(text).map_err(|e| e.to_string())?;
+        let get = |key: &str| {
+            doc.get(key).ok_or_else(|| format!("manifest: missing {key}"))
+        };
+        let wal_cuts = get("checkpoint.wal_cuts")?
+            .as_array()?
+            .iter()
+            .map(|v| v.as_u64())
+            .collect::<Result<Vec<_>, _>>()?;
+        let m = Manifest {
+            generation: get("checkpoint.generation")?.as_u64()?,
+            epoch: get("checkpoint.epoch")?.as_u64()?,
+            shards: get("checkpoint.shards")?.as_usize()?,
+            snapshot: get("checkpoint.snapshot")?.as_str()?.to_string(),
+            wal_cuts,
+        };
+        if m.wal_cuts.len() != m.shards {
+            return Err(format!(
+                "manifest: {} cuts for {} shards",
+                m.wal_cuts.len(),
+                m.shards
+            ));
+        }
+        Ok(m)
+    }
+}
+
+/// Write `bytes` to `path` atomically: `<path>.tmp` + fsync + rename +
+/// directory fsync.
+fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_data()?;
+    }
+    fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        wal::sync_dir(dir);
+    }
+    Ok(())
+}
+
+pub(crate) fn snapshot_name(generation: u64) -> String {
+    format!("ckpt-{generation:06}.snap")
+}
+
+/// Parse a `ckpt-<gen>.snap` filename back to its generation.
+pub(crate) fn snapshot_generation(name: &str) -> Option<u64> {
+    name.strip_prefix("ckpt-")?.strip_suffix(".snap")?.parse().ok()
+}
+
+/// Take one checkpoint of `engine` now. Errors if persistence was never
+/// armed. Concurrent callers (scheduler vs wire `SAVE`) serialize.
+pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
+    let persist = Arc::clone(
+        engine.persist_state().ok_or("persistence is not enabled (no data dir)")?,
+    );
+    let _serial = persist.serialize_checkpoints();
+
+    let nshards = persist.shard_count();
+    let (cuts, export) = engine.with_ingest_paused(|| {
+        let cuts: Vec<u64> = (0..nshards).map(|i| persist.wal(i).last_seq()).collect();
+        (cuts, engine.export())
+    });
+
+    let generation = persist.generation() + 1;
+    let bytes = codec::encode_snapshot(persist.epoch(), &cuts, &export);
+    let dir = persist.config().checkpoint_dir();
+    let name = snapshot_name(generation);
+    write_atomic(&dir.join(&name), &bytes)
+        .map_err(|e| format!("writing {name}: {e}"))?;
+    let manifest = Manifest {
+        generation,
+        epoch: persist.epoch(),
+        shards: nshards,
+        snapshot: name,
+        wal_cuts: cuts.clone(),
+    };
+    // The commit point: MANIFEST now names the new generation.
+    write_atomic(&persist.config().manifest_path(), manifest.render().as_bytes())
+        .map_err(|e| format!("committing manifest: {e}"))?;
+
+    // Truncation lags one generation: delete only segments covered by the
+    // *previous* retained snapshot's cuts, so recovery can still fall back
+    // to it (retention keeps two generations) without hitting a WAL hole.
+    let trunc_cuts = persist.rotate_cuts(cuts.clone());
+    let mut wal_freed = 0u64;
+    for (shard, &cut) in trunc_cuts.iter().enumerate().take(nshards) {
+        wal_freed += persist
+            .wal(shard)
+            .truncate_upto(cut)
+            .map_err(|e| format!("truncating wal shard {shard}: {e}"))?;
+    }
+    // Retention: keep this generation and the previous one.
+    if let Ok(rd) = fs::read_dir(&dir) {
+        for entry in rd.flatten() {
+            if let Some(gen) =
+                entry.file_name().to_str().and_then(snapshot_generation)
+            {
+                if gen + 1 < generation {
+                    let _ = fs::remove_file(entry.path());
+                }
+            }
+        }
+    }
+    persist.set_generation(generation);
+    Ok(CheckpointSummary {
+        generation,
+        nodes: export.len(),
+        bytes: bytes.len() as u64,
+        wal_freed,
+    })
+}
+
+/// Background checkpointer: fires every `checkpoint_interval` on an
+/// absolute deadline (wakeups don't drift the cadence) and early whenever
+/// the live WAL exceeds `checkpoint_wal_bytes`. Stops when dropped.
+pub struct CheckpointScheduler {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+    runs: Arc<AtomicU64>,
+    failed: Arc<AtomicBool>,
+}
+
+impl CheckpointScheduler {
+    /// How often the threshold condition is polled between interval ticks.
+    const POLL: Duration = Duration::from_secs(1);
+
+    pub fn start(engine: Arc<Engine>, interval: Duration) -> CheckpointScheduler {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let runs = Arc::new(AtomicU64::new(0));
+        let failed = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let runs = Arc::clone(&runs);
+            let failed = Arc::clone(&failed);
+            std::thread::spawn(move || {
+                let (lock, cvar) = &*stop;
+                let threshold = engine
+                    .persist_state()
+                    .map(|p| p.config().checkpoint_wal_bytes)
+                    .unwrap_or(u64::MAX);
+                let mut deadline = Instant::now() + interval;
+                loop {
+                    {
+                        let mut stopped =
+                            lock.lock().unwrap_or_else(PoisonError::into_inner);
+                        while !*stopped {
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            let wait = (deadline - now).min(Self::POLL);
+                            let (guard, _) = cvar
+                                .wait_timeout(stopped, wait)
+                                .unwrap_or_else(PoisonError::into_inner);
+                            stopped = guard;
+                            // Early checkpoint once the WAL outgrows the
+                            // bound, without waiting out the interval.
+                            if !*stopped
+                                && engine
+                                    .persist_state()
+                                    .is_some_and(|p| p.wal_bytes() >= threshold)
+                            {
+                                break;
+                            }
+                        }
+                        if *stopped {
+                            return;
+                        }
+                    }
+                    match engine.checkpoint() {
+                        Ok(_) => {
+                            runs.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            failed.store(true, Ordering::Relaxed);
+                            eprintln!("[persist] periodic checkpoint failed: {e}");
+                        }
+                    }
+                    // Absolute cadence: late checkpoints don't compound.
+                    deadline += interval;
+                    let now = Instant::now();
+                    if deadline < now {
+                        deadline = now + interval;
+                    }
+                }
+            })
+        };
+        CheckpointScheduler { stop, handle: Some(handle), runs, failed }
+    }
+
+    pub fn runs(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
+
+    pub fn has_failed(&self) -> bool {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn stop(&self) {
+        let (lock, cvar) = &*self.stop;
+        *lock.lock().unwrap_or_else(PoisonError::into_inner) = true;
+        cvar.notify_all();
+    }
+}
+
+impl Drop for CheckpointScheduler {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

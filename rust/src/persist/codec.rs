@@ -1,0 +1,222 @@
+//! Compact binary encoding shared by checkpoints and the WAL: LEB128
+//! varints, an IEEE CRC32, the snapshot format (`export()` on disk), and
+//! the WAL record payload. One codec for both artifacts keeps the two
+//! durability paths byte-compatible by construction (the round-trip
+//! property tests compare them directly).
+//!
+//! Snapshot layout (`ckpt-<gen>.snap`):
+//!
+//! ```text
+//! magic   "MCPQCKP1"                      8 bytes
+//! body    epoch                           varint (WAL epoch this cut is in)
+//!         shard_count                     varint
+//!         wal_cut[shard_count]            varint each (last seq in snapshot)
+//!         node_count                      varint
+//!         node*: src, total, edge_count   varints
+//!                edge*: dst, count        varints, list order (head first)
+//! crc32   over `body`                     u32 LE
+//! ```
+//!
+//! The WAL cut points are embedded *in the snapshot itself* (as well as in
+//! the manifest) so a snapshot alone is enough to recover from — the
+//! manifest is a pointer, not the only source of truth.
+
+use std::fmt;
+
+/// The in-memory snapshot shape: `McPrioQ::export` / `Engine::export`.
+pub type Export = Vec<(u64, u64, Vec<(u64, u64)>)>;
+
+/// Magic prefix of a checkpoint snapshot file.
+pub const SNAP_MAGIC: &[u8; 8] = b"MCPQCKP1";
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// Input ended inside a value.
+    Truncated,
+    /// A varint encoded more than 64 bits.
+    Overflow,
+    /// Wrong magic prefix (not a snapshot / wrong version).
+    BadMagic,
+    /// Checksum mismatch: the artifact is corrupt or torn.
+    BadCrc { stored: u32, computed: u32 },
+    /// Well-formed prefix followed by unconsumed bytes.
+    TrailingBytes(usize),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated => write!(f, "truncated input"),
+            CodecError::Overflow => write!(f, "varint overflows u64"),
+            CodecError::BadMagic => write!(f, "bad magic (not a MCPQCKP1 snapshot)"),
+            CodecError::BadCrc { stored, computed } => {
+                write!(f, "crc mismatch: stored {stored:#010x}, computed {computed:#010x}")
+            }
+            CodecError::TrailingBytes(n) => write!(f, "{n} trailing bytes after value"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+// ---- varint ----
+
+/// Append `v` as a LEB128 varint (1–10 bytes).
+#[inline]
+pub fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        buf.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    buf.push(v as u8);
+}
+
+/// Read one varint at `*pos`, advancing it past the value.
+pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, CodecError> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos).ok_or(CodecError::Truncated)?;
+        *pos += 1;
+        if shift == 63 && (b & 0x7f) > 1 {
+            return Err(CodecError::Overflow);
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(CodecError::Overflow);
+        }
+    }
+}
+
+// ---- crc32 (IEEE 802.3, the zlib/gzip polynomial) ----
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---- snapshot ----
+
+/// Encode a quiesced export plus its WAL cut points into the snapshot
+/// format. `cuts[i]` is the last WAL sequence number (per shard, in WAL
+/// `epoch`) whose effects are contained in `snap`; recovery replays
+/// strictly after it.
+pub fn encode_snapshot(epoch: u64, cuts: &[u64], snap: &Export) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + 16 * snap.len());
+    buf.extend_from_slice(SNAP_MAGIC);
+    let body = SNAP_MAGIC.len();
+    put_varint(&mut buf, epoch);
+    put_varint(&mut buf, cuts.len() as u64);
+    for &c in cuts {
+        put_varint(&mut buf, c);
+    }
+    put_varint(&mut buf, snap.len() as u64);
+    for (src, total, edges) in snap {
+        put_varint(&mut buf, *src);
+        put_varint(&mut buf, *total);
+        put_varint(&mut buf, edges.len() as u64);
+        for &(dst, count) in edges {
+            put_varint(&mut buf, dst);
+            put_varint(&mut buf, count);
+        }
+    }
+    let crc = crc32(&buf[body..]);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Decode and validate a snapshot: returns `(epoch, cuts, export)`.
+/// Rejects bad magic, any CRC mismatch, and trailing garbage, so recovery
+/// can treat "decodes" as "valid".
+pub fn decode_snapshot(bytes: &[u8]) -> Result<(u64, Vec<u64>, Export), CodecError> {
+    if bytes.len() < SNAP_MAGIC.len() + 4 || &bytes[..SNAP_MAGIC.len()] != SNAP_MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    let crc_at = bytes.len() - 4;
+    let stored = u32::from_le_bytes(bytes[crc_at..].try_into().unwrap());
+    let computed = crc32(&bytes[SNAP_MAGIC.len()..crc_at]);
+    if stored != computed {
+        return Err(CodecError::BadCrc { stored, computed });
+    }
+    let body = &bytes[..crc_at];
+    let mut pos = SNAP_MAGIC.len();
+    let epoch = get_varint(body, &mut pos)?;
+    let nshards = get_varint(body, &mut pos)? as usize;
+    let mut cuts = Vec::with_capacity(nshards.min(1 << 16));
+    for _ in 0..nshards {
+        cuts.push(get_varint(body, &mut pos)?);
+    }
+    let nodes = get_varint(body, &mut pos)? as usize;
+    let mut snap = Vec::with_capacity(nodes.min(1 << 20));
+    for _ in 0..nodes {
+        let src = get_varint(body, &mut pos)?;
+        let total = get_varint(body, &mut pos)?;
+        let nedges = get_varint(body, &mut pos)? as usize;
+        let mut edges = Vec::with_capacity(nedges.min(1 << 20));
+        for _ in 0..nedges {
+            let dst = get_varint(body, &mut pos)?;
+            let count = get_varint(body, &mut pos)?;
+            edges.push((dst, count));
+        }
+        snap.push((src, total, edges));
+    }
+    if pos != body.len() {
+        return Err(CodecError::TrailingBytes(body.len() - pos));
+    }
+    Ok((epoch, cuts, snap))
+}
+
+// ---- WAL record payload ----
+
+/// Append one WAL record payload (`seq`, then the batch) to `buf`.
+/// The frame (length + CRC) around it is the WAL writer's job.
+pub fn encode_record(buf: &mut Vec<u8>, seq: u64, batch: &[(u64, u64)]) {
+    put_varint(buf, seq);
+    put_varint(buf, batch.len() as u64);
+    for &(src, dst) in batch {
+        put_varint(buf, src);
+        put_varint(buf, dst);
+    }
+}
+
+/// Decode one WAL record payload into `(seq, batch)`.
+pub fn decode_record(payload: &[u8]) -> Result<(u64, Vec<(u64, u64)>), CodecError> {
+    let mut pos = 0usize;
+    let seq = get_varint(payload, &mut pos)?;
+    let n = get_varint(payload, &mut pos)? as usize;
+    let mut batch = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let src = get_varint(payload, &mut pos)?;
+        let dst = get_varint(payload, &mut pos)?;
+        batch.push((src, dst));
+    }
+    if pos != payload.len() {
+        return Err(CodecError::TrailingBytes(payload.len() - pos));
+    }
+    Ok((seq, batch))
+}

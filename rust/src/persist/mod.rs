@@ -1,0 +1,276 @@
+//! Durability subsystem: segmented write-ahead logs, atomic checkpoints,
+//! and crash recovery for the online model (DESIGN.md §4).
+//!
+//! The paper's whole point is *online and continuous* learning; without
+//! this layer the learned chain lives only in RAM and a restart discards
+//! it. The subsystem has four parts:
+//!
+//! * [`codec`] — compact varint+CRC32 binary encoding shared by the
+//!   checkpoint snapshot and the WAL record payload.
+//! * [`wal`] — per-shard segmented append-only logs, written by the
+//!   existing shard-affine ingest workers (one writer per shard, batch
+//!   framed, fsync policy knob, size-bounded rotation).
+//! * [`checkpoint`] — pauses ingest at a batch boundary, encodes
+//!   `Engine::export()` to `tmp` + `rename`, commits a manifest recording
+//!   the per-shard WAL cut points, then truncates sealed segments.
+//! * [`recover`] — startup path: newest valid checkpoint via
+//!   `Engine::import_snapshot`, then WAL tail replay through
+//!   `observe_batch_direct`, tolerating a torn final record.
+//!
+//! Guarantee (relaxed, MultiQueues-style): a batch is *acked durable* once
+//! its WAL record is written (WAL-append happens before the batch is
+//! applied); recovery restores exactly the acked prefix per shard — no
+//! acked batch is lost, no batch is applied twice (cut points are exact
+//! batch boundaries). `fsync = batch | always` extends the guarantee to
+//! power loss; `never` covers process crashes only (the page cache
+//! survives SIGKILL). Decay/repair maintenance is *not* logged: recovery
+//! restores counts as of the last checkpoint plus raw tail updates, so a
+//! decay that ran after the last checkpoint is replayed conservatively
+//! (counts recover slightly larger). Checkpoint after decay to tighten.
+
+mod checkpoint;
+pub mod codec;
+mod recover;
+pub mod wal;
+
+pub use checkpoint::{run_checkpoint, CheckpointScheduler, CheckpointSummary};
+pub use recover::{open_engine, RecoveryReport};
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::metrics::Counter;
+
+use wal::ShardWal;
+
+/// When the WAL fsyncs (`[persist] fsync` / `--fsync`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Never fsync: the OS page cache decides. Survives SIGKILL, not
+    /// power loss.
+    Never,
+    /// Group commit: at most one fsync per `fsync_interval` of appends
+    /// (plus every segment seal). The steady-state durability knob.
+    Batch,
+    /// fsync after every appended batch record.
+    Always,
+}
+
+impl FsyncPolicy {
+    pub fn parse(s: &str) -> Result<FsyncPolicy, String> {
+        match s {
+            "never" => Ok(FsyncPolicy::Never),
+            "batch" => Ok(FsyncPolicy::Batch),
+            "always" => Ok(FsyncPolicy::Always),
+            other => Err(format!("bad fsync policy {other:?} (never|batch|always)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Never => "never",
+            FsyncPolicy::Batch => "batch",
+            FsyncPolicy::Always => "always",
+        }
+    }
+}
+
+/// Resolved durability configuration (`ServerConfig::persist_config`).
+#[derive(Debug, Clone)]
+pub struct PersistConfig {
+    pub data_dir: PathBuf,
+    pub fsync: FsyncPolicy,
+    /// Group-commit window for [`FsyncPolicy::Batch`].
+    pub fsync_interval: Duration,
+    /// WAL segment rotation bound.
+    pub segment_bytes: u64,
+    /// Periodic checkpoint cadence (None = only explicit `SAVE`s).
+    pub checkpoint_interval: Option<Duration>,
+    /// Checkpoint early once live WAL bytes exceed this.
+    pub checkpoint_wal_bytes: u64,
+}
+
+impl PersistConfig {
+    pub fn wal_root(&self) -> PathBuf {
+        self.data_dir.join("wal")
+    }
+
+    pub fn epoch_dir(&self, epoch: u64) -> PathBuf {
+        self.wal_root().join(format!("e{epoch}"))
+    }
+
+    pub fn shard_dir(&self, epoch: u64, shard: usize) -> PathBuf {
+        self.epoch_dir(epoch).join(format!("shard-{shard:04}"))
+    }
+
+    pub fn checkpoint_dir(&self) -> PathBuf {
+        self.data_dir.join("checkpoint")
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.checkpoint_dir().join("MANIFEST")
+    }
+}
+
+/// Non-poisoning lock: an ingest worker that panicked mid-batch must not
+/// wedge checkpoints (and vice versa) — the WAL structures stay valid
+/// because every append is a single buffered frame write.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Shared durability state, owned by the `Engine` (one per process).
+/// Ingest workers call [`PersistState::append`] on the apply path; the
+/// checkpointer reads cut points and truncates through the same per-shard
+/// locks (uncontended outside checkpoint windows — one writer per shard).
+pub struct PersistState {
+    cfg: PersistConfig,
+    /// WAL epoch these writers append into. Bumped (by recovery) only when
+    /// the shard layout changes, so cut points always index the layout
+    /// that wrote them.
+    epoch: u64,
+    wals: Vec<Mutex<ShardWal>>,
+    /// The cut points of the *previous* retained checkpoint generation.
+    /// Truncation lags one generation behind commits: segments are deleted
+    /// only once covered by BOTH retained snapshots, so falling back to
+    /// the previous generation (a torn current snapshot) still finds every
+    /// WAL record it needs.
+    prev_cuts: Mutex<Vec<u64>>,
+    /// Last committed checkpoint generation.
+    generation: AtomicU64,
+    last_checkpoint: Mutex<Instant>,
+    /// Serializes concurrent checkpoints (scheduler vs wire `SAVE`).
+    ckpt_serial: Mutex<()>,
+    appends: Counter,
+    errors: Counter,
+    /// Batches replayed from the WAL at startup (recovery report, STATS).
+    recovered_batches: u64,
+}
+
+impl PersistState {
+    /// Open WAL writers for every shard. `last_seqs[i]` is shard `i`'s
+    /// highest on-disk (or checkpointed) sequence number; `prev_cuts` is
+    /// the cut vector of the checkpoint generation recovery loaded (what
+    /// lag-one truncation must keep the WAL reachable for).
+    pub(crate) fn create(
+        cfg: PersistConfig,
+        epoch: u64,
+        generation: u64,
+        last_seqs: &[u64],
+        prev_cuts: Vec<u64>,
+        recovered_batches: u64,
+    ) -> std::io::Result<PersistState> {
+        std::fs::create_dir_all(cfg.checkpoint_dir())?;
+        let mut wals = Vec::with_capacity(last_seqs.len());
+        for (shard, &last) in last_seqs.iter().enumerate() {
+            wals.push(Mutex::new(ShardWal::open(
+                cfg.shard_dir(epoch, shard),
+                last,
+                cfg.fsync,
+                cfg.fsync_interval,
+                cfg.segment_bytes,
+            )?));
+        }
+        Ok(PersistState {
+            cfg,
+            epoch,
+            wals,
+            prev_cuts: Mutex::new(prev_cuts),
+            generation: AtomicU64::new(generation),
+            last_checkpoint: Mutex::new(Instant::now()),
+            ckpt_serial: Mutex::new(()),
+            appends: Counter::new(),
+            errors: Counter::new(),
+            recovered_batches,
+        })
+    }
+
+    pub fn config(&self) -> &PersistConfig {
+        &self.cfg
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.wals.len()
+    }
+
+    /// Log one same-shard batch ahead of applying it. Called by the
+    /// shard's single ingest worker.
+    pub fn append(&self, shard: usize, batch: &[(u64, u64)]) -> std::io::Result<u64> {
+        let seq = lock_clean(&self.wals[shard]).append(batch)?;
+        self.appends.inc();
+        Ok(seq)
+    }
+
+    /// Record (and surface once per occurrence) a WAL write failure. The
+    /// engine keeps serving — an unloggable batch is still applied, it
+    /// just won't survive a crash; `wal_errors` makes that observable.
+    pub fn note_error(&self, shard: usize, e: &std::io::Error) {
+        self.errors.inc();
+        eprintln!("[persist] wal append failed on shard {shard}: {e}");
+    }
+
+    pub(crate) fn wal(&self, shard: usize) -> MutexGuard<'_, ShardWal> {
+        lock_clean(&self.wals[shard])
+    }
+
+    /// Live WAL bytes across all shards (appends minus truncations).
+    pub fn wal_bytes(&self) -> u64 {
+        self.wals.iter().map(|w| lock_clean(w).live_bytes()).sum()
+    }
+
+    pub fn wal_appends(&self) -> u64 {
+        self.appends.get()
+    }
+
+    pub fn wal_errors(&self) -> u64 {
+        self.errors.get()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn set_generation(&self, generation: u64) {
+        self.generation.store(generation, Ordering::Relaxed);
+        *lock_clean(&self.last_checkpoint) = Instant::now();
+    }
+
+    /// Seconds since the last committed checkpoint (or since startup).
+    pub fn checkpoint_age(&self) -> Duration {
+        lock_clean(&self.last_checkpoint).elapsed()
+    }
+
+    pub fn recovered_batches(&self) -> u64 {
+        self.recovered_batches
+    }
+
+    pub(crate) fn serialize_checkpoints(&self) -> MutexGuard<'_, ()> {
+        lock_clean(&self.ckpt_serial)
+    }
+
+    /// Swap in the cuts of the generation just committed, returning the
+    /// previous generation's cuts — the bound lag-one truncation uses.
+    pub(crate) fn rotate_cuts(&self, new_cuts: Vec<u64>) -> Vec<u64> {
+        std::mem::replace(&mut *lock_clean(&self.prev_cuts), new_cuts)
+    }
+}
+
+/// Remove stray temporary files left by a checkpoint that crashed before
+/// its rename (best effort; called from recovery).
+pub(crate) fn remove_stale_tmp(dir: &Path) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        if entry.path().extension().is_some_and(|e| e == "tmp") {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

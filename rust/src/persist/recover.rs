@@ -1,0 +1,286 @@
+//! Crash recovery: build an [`Engine`] from the newest valid checkpoint
+//! plus the WAL tails behind it.
+//!
+//! State machine (every arrow is crash-safe to re-enter):
+//!
+//! ```text
+//! read MANIFEST ── ok ──▶ decode named snapshot ── ok ─▶ (gen, epoch, cuts, model)
+//!      │ missing/corrupt        │ corrupt
+//!      ▼                        ▼
+//! scan checkpoint/ for the newest ckpt-*.snap that decodes
+//!      │ none                   (cuts/epoch are embedded in the snapshot)
+//!      ▼
+//! empty model, epoch = newest wal/e<N> dir (or 1), cuts = zeros
+//!      │
+//!      ▼
+//! replay wal/e<epoch>/shard-*/: records with seq > cut, per-shard seq
+//! order, torn tail tolerated ──▶ import snapshot, apply tails direct
+//!      │
+//!      ▼
+//! shard layout unchanged?  ── yes ─▶ arm WAL writers at seq = last+1
+//!      │ no (shards reconfigured)
+//!      ▼
+//! bump epoch, arm writers at seq 0, checkpoint immediately (commits the
+//! new epoch), delete the old epoch's directory
+//! ```
+//!
+//! The epoch bump makes shard-count changes crash-safe: cut points always
+//! index the layout that wrote them, and a crash between "new snapshot
+//! committed" and "old epoch deleted" just leaves a dead directory the
+//! next recovery ignores (manifest names the new epoch) and sweeps.
+
+use std::fs;
+use std::sync::Arc;
+
+use crate::config::ServerConfig;
+use crate::coordinator::Engine;
+
+use super::checkpoint::{snapshot_generation, Manifest};
+use super::{codec, remove_stale_tmp, wal, PersistConfig, PersistState};
+
+/// What recovery found and did (printed by `mcprioq serve`, asserted by
+/// the recovery tests).
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    /// Checkpoint generation recovered from (0 = none found).
+    pub generation: u64,
+    /// WAL epoch recovered from.
+    pub epoch: u64,
+    /// Src nodes imported from the snapshot.
+    pub snapshot_nodes: usize,
+    /// WAL batches replayed on top of the snapshot.
+    pub replayed_batches: u64,
+    /// Updates (pairs) inside those batches.
+    pub replayed_updates: u64,
+    /// Shard directories whose tail record was torn (tolerated).
+    pub torn_tails: usize,
+    /// True when the shard count changed since the checkpoint: recovery
+    /// re-routed the old data, bumped the WAL epoch, and re-checkpointed.
+    pub layout_changed: bool,
+}
+
+/// Open a durable engine: recover, then arm the WAL writers. This is the
+/// front door `mcprioq serve --data-dir` uses; `Engine::new` alone never
+/// persists anything.
+pub fn open_engine(
+    config: &ServerConfig,
+    workers: usize,
+) -> Result<(Arc<Engine>, RecoveryReport), String> {
+    let pcfg = config
+        .persist_config()?
+        .ok_or("persist.data_dir is not configured")?;
+    fs::create_dir_all(pcfg.checkpoint_dir())
+        .map_err(|e| format!("{}: {e}", pcfg.checkpoint_dir().display()))?;
+    fs::create_dir_all(pcfg.wal_root())
+        .map_err(|e| format!("{}: {e}", pcfg.wal_root().display()))?;
+    remove_stale_tmp(&pcfg.checkpoint_dir());
+
+    let mut report = RecoveryReport::default();
+
+    // --- 1. newest valid checkpoint ---
+    let loaded = load_checkpoint(&pcfg);
+    let (generation, epoch, cuts, snapshot) = match loaded {
+        Some(t) => t,
+        None => (0, detect_epoch(&pcfg)?, Vec::new(), Vec::new()),
+    };
+    report.generation = generation;
+    report.epoch = epoch;
+    report.snapshot_nodes = snapshot.len();
+
+    // --- 2. WAL tails (collected per old shard, in seq order) ---
+    let epoch_dir = pcfg.epoch_dir(epoch);
+    let shard_dirs = scan_shard_dirs(&epoch_dir)?;
+    let old_shards = if cuts.is_empty() { shard_dirs.len() } else { cuts.len() };
+    let mut tails: Vec<Vec<(u64, u64)>> = Vec::with_capacity(shard_dirs.len());
+    // Seed from the cuts so a shard whose WAL directory is missing (e.g.
+    // wiped by hand) still resumes *above* its checkpointed seq instead of
+    // re-issuing sequence numbers replay would then skip.
+    let mut last_seqs = vec![0u64; old_shards.max(shard_dirs.len())];
+    for (seq, &cut) in last_seqs.iter_mut().zip(&cuts) {
+        *seq = cut;
+    }
+    for (shard, dir) in &shard_dirs {
+        let cut = cuts.get(*shard).copied().unwrap_or(0);
+        let mut tail = Vec::new();
+        let stats = wal::replay_dir(dir, cut, |_seq, batch| tail.extend(batch))?;
+        report.replayed_batches += stats.batches;
+        report.replayed_updates += stats.updates;
+        report.torn_tails += stats.torn as usize;
+        if *shard < last_seqs.len() {
+            last_seqs[*shard] = stats.last_seq.max(cut);
+        }
+        tails.push(tail);
+    }
+
+    // --- 3. build + restore the engine ---
+    let engine = Engine::new(config, workers);
+    engine.import_snapshot(&snapshot);
+    for tail in &tails {
+        // Old shards hold disjoint src sets, so cross-shard order is
+        // irrelevant; within a shard the WAL is already in apply order.
+        // `observe_batch_direct` re-routes by the *current* layout, which
+        // is what makes shard-count changes transparent here.
+        engine.observe_batch_direct(tail);
+    }
+
+    // --- 4. arm the WAL writers ---
+    let nshards = engine.shard_count();
+    report.layout_changed = old_shards != 0 && old_shards != nshards;
+    if report.layout_changed {
+        let new_epoch = epoch + 1;
+        let state = PersistState::create(
+            pcfg.clone(),
+            new_epoch,
+            generation,
+            &vec![0u64; nshards],
+            vec![0u64; nshards],
+            report.replayed_batches,
+        )
+        .map_err(|e| format!("opening wal epoch {new_epoch}: {e}"))?;
+        engine.attach_persist(Arc::new(state));
+        // Commits a snapshot of everything just replayed under the new
+        // epoch/layout; only then is the old epoch's WAL dead weight.
+        engine.checkpoint()?;
+        let _ = fs::remove_dir_all(&epoch_dir);
+        report.epoch = new_epoch;
+    } else {
+        let mut starts = vec![0u64; nshards];
+        for (start, &last) in starts.iter_mut().zip(&last_seqs) {
+            *start = last;
+        }
+        // Lag-one truncation must keep the WAL reachable for the
+        // generation just recovered from: its cuts seed `prev_cuts`.
+        let mut prev_cuts = vec![0u64; nshards];
+        for (prev, &cut) in prev_cuts.iter_mut().zip(&cuts) {
+            *prev = cut;
+        }
+        let state = PersistState::create(
+            pcfg.clone(),
+            epoch.max(1),
+            generation,
+            &starts,
+            prev_cuts,
+            report.replayed_batches,
+        )
+        .map_err(|e| format!("opening wal epoch {epoch}: {e}"))?;
+        report.epoch = epoch.max(1);
+        engine.attach_persist(Arc::new(state));
+    }
+    // Dead epochs from interrupted layout changes (manifest already names
+    // a newer one) are swept lazily.
+    sweep_dead_epochs(&pcfg, report.epoch);
+    Ok((engine, report))
+}
+
+/// Try the manifest first, then fall back to scanning for the newest
+/// snapshot that decodes (the manifest is a pointer, not the only truth).
+fn load_checkpoint(
+    pcfg: &PersistConfig,
+) -> Option<(u64, u64, Vec<u64>, codec::Export)> {
+    if let Ok(text) = fs::read_to_string(pcfg.manifest_path()) {
+        match Manifest::parse(&text) {
+            Ok(m) => {
+                match fs::read(pcfg.checkpoint_dir().join(&m.snapshot))
+                    .ok()
+                    .and_then(|b| codec::decode_snapshot(&b).ok())
+                {
+                    Some((epoch, cuts, snap)) => {
+                        // Trust the manifest for generation; the snapshot
+                        // carries its own epoch/cuts (they must agree —
+                        // both were written in one checkpoint).
+                        if epoch == m.epoch && cuts == m.wal_cuts {
+                            return Some((m.generation, epoch, cuts, snap));
+                        }
+                        eprintln!(
+                            "[persist] manifest/snapshot disagree, falling back to scan"
+                        );
+                    }
+                    None => eprintln!(
+                        "[persist] snapshot {} unreadable, falling back to scan",
+                        m.snapshot
+                    ),
+                }
+            }
+            Err(e) => eprintln!("[persist] bad manifest ({e}), falling back to scan"),
+        }
+    }
+    // Fallback: newest generation first.
+    let mut gens: Vec<(u64, std::path::PathBuf)> = fs::read_dir(pcfg.checkpoint_dir())
+        .ok()?
+        .flatten()
+        .filter_map(|e| {
+            let gen = e.file_name().to_str().and_then(snapshot_generation)?;
+            Some((gen, e.path()))
+        })
+        .collect();
+    gens.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    for (gen, path) in gens {
+        if let Some((epoch, cuts, snap)) =
+            fs::read(&path).ok().and_then(|b| codec::decode_snapshot(&b).ok())
+        {
+            return Some((gen, epoch, cuts, snap));
+        }
+        eprintln!("[persist] skipping unreadable snapshot {}", path.display());
+    }
+    None
+}
+
+/// Without a checkpoint the epoch comes from the newest `e<N>` directory
+/// (a crash before the first checkpoint), else 1.
+fn detect_epoch(pcfg: &PersistConfig) -> Result<u64, String> {
+    let rd = match fs::read_dir(pcfg.wal_root()) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(1),
+    };
+    let mut newest = 1u64;
+    for entry in rd.flatten() {
+        if let Some(n) = entry
+            .file_name()
+            .to_str()
+            .and_then(|s| s.strip_prefix('e'))
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            newest = newest.max(n);
+        }
+    }
+    Ok(newest)
+}
+
+/// `(index, path)` for every `shard-<i>` directory, sorted by index.
+fn scan_shard_dirs(
+    epoch_dir: &std::path::Path,
+) -> Result<Vec<(usize, std::path::PathBuf)>, String> {
+    let mut out = Vec::new();
+    let rd = match fs::read_dir(epoch_dir) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(out), // fresh start: no epoch dir yet
+    };
+    for entry in rd.flatten() {
+        if let Some(i) = entry
+            .file_name()
+            .to_str()
+            .and_then(|s| s.strip_prefix("shard-"))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            out.push((i, entry.path()));
+        }
+    }
+    out.sort_unstable_by_key(|&(i, _)| i);
+    Ok(out)
+}
+
+fn sweep_dead_epochs(pcfg: &PersistConfig, live_epoch: u64) {
+    let Ok(rd) = fs::read_dir(pcfg.wal_root()) else { return };
+    for entry in rd.flatten() {
+        if let Some(n) = entry
+            .file_name()
+            .to_str()
+            .and_then(|s| s.strip_prefix('e'))
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            if n < live_epoch {
+                let _ = fs::remove_dir_all(entry.path());
+            }
+        }
+    }
+}

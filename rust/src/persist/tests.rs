@@ -1,0 +1,280 @@
+//! Persist unit tests: codec round trips, CRC vectors, WAL segment
+//! mechanics (rotation, truncation, torn tails), manifest parsing, and
+//! checkpoint commit behaviour. The cross-layer recovery differentials
+//! live in `rust/tests/persist_recovery.rs`.
+
+use super::checkpoint::Manifest;
+use super::codec::{self, CodecError};
+use super::wal::{self, ShardWal};
+use super::FsyncPolicy;
+use crate::testutil::{Rng64, TempDir};
+
+use std::time::Duration;
+
+fn wal_cfg(dir: std::path::PathBuf, segment_bytes: u64) -> ShardWal {
+    ShardWal::open(dir, 0, FsyncPolicy::Never, Duration::from_millis(50), segment_bytes)
+        .unwrap()
+}
+
+// ---- codec ----
+
+#[test]
+fn varint_roundtrip_edges() {
+    let values = [
+        0u64,
+        1,
+        127,
+        128,
+        129,
+        16_383,
+        16_384,
+        u32::MAX as u64,
+        1 << 53,
+        u64::MAX - 1,
+        u64::MAX,
+    ];
+    let mut buf = Vec::new();
+    for &v in &values {
+        codec::put_varint(&mut buf, v);
+    }
+    let mut pos = 0;
+    for &v in &values {
+        assert_eq!(codec::get_varint(&buf, &mut pos).unwrap(), v);
+    }
+    assert_eq!(pos, buf.len());
+    // Truncated and overflowing varints are rejected.
+    assert_eq!(codec::get_varint(&[0x80], &mut 0), Err(CodecError::Truncated));
+    assert_eq!(
+        codec::get_varint(&[0xFF; 10], &mut 0),
+        Err(CodecError::Overflow)
+    );
+}
+
+#[test]
+fn crc32_known_vector() {
+    // The canonical IEEE CRC32 check value.
+    assert_eq!(codec::crc32(b"123456789"), 0xCBF4_3926);
+    assert_eq!(codec::crc32(b""), 0);
+}
+
+#[test]
+fn snapshot_codec_roundtrip_and_rejects_corruption() {
+    let snap: codec::Export = vec![
+        (1, 7, vec![(2, 4), (3, 3)]),
+        (9, 2, vec![(4, 2)]),
+        (u64::MAX, u64::MAX, vec![(u64::MAX - 1, u64::MAX)]),
+    ];
+    let cuts = vec![12, 0, u64::MAX];
+    let bytes = codec::encode_snapshot(3, &cuts, &snap);
+    let (epoch, got_cuts, got) = codec::decode_snapshot(&bytes).unwrap();
+    assert_eq!(epoch, 3);
+    assert_eq!(got_cuts, cuts);
+    assert_eq!(got, snap);
+    // Re-encoding the decoded value is byte-identical.
+    assert_eq!(codec::encode_snapshot(epoch, &got_cuts, &got), bytes);
+
+    // Bad magic.
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    assert_eq!(codec::decode_snapshot(&bad), Err(CodecError::BadMagic));
+    // Flipped body bit → CRC mismatch.
+    let mut bad = bytes.clone();
+    bad[10] ^= 0x01;
+    assert!(matches!(codec::decode_snapshot(&bad), Err(CodecError::BadCrc { .. })));
+    // Truncation anywhere → some error, never a partial Ok.
+    for cut in 0..bytes.len() {
+        assert!(codec::decode_snapshot(&bytes[..cut]).is_err(), "cut {cut}");
+    }
+}
+
+#[test]
+fn record_codec_roundtrip() {
+    let batch: Vec<(u64, u64)> = (0..100).map(|i| (i * 3, i * 7 + 1)).collect();
+    let mut buf = Vec::new();
+    codec::encode_record(&mut buf, 42, &batch);
+    let (seq, got) = codec::decode_record(&buf).unwrap();
+    assert_eq!(seq, 42);
+    assert_eq!(got, batch);
+    buf.push(0);
+    assert_eq!(codec::decode_record(&buf), Err(CodecError::TrailingBytes(1)));
+}
+
+// ---- wal ----
+
+#[test]
+fn wal_append_replay_roundtrip() {
+    let tmp = TempDir::new("wal-roundtrip");
+    let mut wal = wal_cfg(tmp.join("shard-0000"), 1 << 20);
+    let mut rng = Rng64::new(7);
+    let mut batches = Vec::new();
+    for _ in 0..50 {
+        let batch: Vec<(u64, u64)> =
+            (0..rng.next_below(20) + 1).map(|_| (rng.next_below(64), rng.next_below(64))).collect();
+        wal.append(&batch).unwrap();
+        batches.push(batch);
+    }
+    assert_eq!(wal.last_seq(), 50);
+    drop(wal);
+
+    let mut replayed = Vec::new();
+    let stats = wal::replay_dir(&tmp.join("shard-0000"), 0, |seq, batch| {
+        replayed.push((seq, batch));
+    })
+    .unwrap();
+    assert_eq!(stats.batches, 50);
+    assert_eq!(stats.last_seq, 50);
+    assert!(!stats.torn);
+    for (i, (seq, batch)) in replayed.iter().enumerate() {
+        assert_eq!(*seq, i as u64 + 1);
+        assert_eq!(batch, &batches[i]);
+    }
+    // A cut skips the prefix but still validates it.
+    let stats = wal::replay_dir(&tmp.join("shard-0000"), 30, |seq, _| {
+        assert!(seq > 30);
+    })
+    .unwrap();
+    assert_eq!(stats.batches, 20);
+}
+
+#[test]
+fn wal_rotates_and_truncates_sealed_segments() {
+    let tmp = TempDir::new("wal-rotate");
+    let dir = tmp.join("shard-0000");
+    // Tiny segments: every append rotates.
+    let mut wal = wal_cfg(dir.clone(), 16);
+    for i in 0..10u64 {
+        wal.append(&[(i, i + 1)]).unwrap();
+    }
+    let segs = wal::scan_segments(&dir).unwrap();
+    assert!(segs.len() >= 10, "expected one segment per append, got {}", segs.len());
+    let bytes_before = wal.live_bytes();
+
+    // Checkpoint cut at 6: segments holding 1..=6 go, the rest stay.
+    let freed = wal.truncate_upto(6).unwrap();
+    assert!(freed > 0);
+    assert_eq!(wal.live_bytes(), bytes_before - freed);
+    let mut seen = Vec::new();
+    wal::replay_dir(&dir, 6, |seq, _| seen.push(seq)).unwrap();
+    assert_eq!(seen, vec![7, 8, 9, 10]);
+    // Replaying a truncated log from an older cut is a WAL hole — the
+    // batches in (old cut, oldest surviving seq) are gone — and must fail
+    // loudly instead of silently recovering a partial model.
+    let err = wal::replay_dir(&dir, 0, |_, _| {}).unwrap_err();
+    assert!(err.contains("wal hole"), "{err}");
+
+    // Appends continue seamlessly after truncation.
+    wal.append(&[(99, 100)]).unwrap();
+    assert_eq!(wal.last_seq(), 11);
+    drop(wal);
+    let stats = wal::replay_dir(&dir, 6, |_, _| {}).unwrap();
+    assert_eq!(stats.batches, 5); // 7..=11
+}
+
+#[test]
+fn wal_tolerates_torn_tail_and_detects_gaps() {
+    let tmp = TempDir::new("wal-torn");
+    let dir = tmp.join("shard-0000");
+    let mut wal = wal_cfg(dir.clone(), 1 << 20);
+    for i in 0..5u64 {
+        wal.append(&[(i, i)]).unwrap();
+    }
+    drop(wal);
+    let seg = wal::scan_segments(&dir).unwrap().remove(0);
+
+    // Garbage appended after valid frames: replay stops at the tear.
+    let clean = std::fs::read(&seg.path).unwrap();
+    let mut torn = clean.clone();
+    torn.extend_from_slice(&[0xAB; 7]);
+    std::fs::write(&seg.path, &torn).unwrap();
+    let stats = wal::replay_dir(&dir, 0, |_, _| {}).unwrap();
+    assert!(stats.torn);
+    assert_eq!(stats.batches, 5);
+
+    // A mid-file flip kills that record and everything after it.
+    let mut corrupt = clean.clone();
+    let mid = clean.len() / 2;
+    corrupt[mid] ^= 0xFF;
+    std::fs::write(&seg.path, &corrupt).unwrap();
+    let stats = wal::replay_dir(&dir, 0, |_, _| {}).unwrap();
+    assert!(stats.torn);
+    assert!(stats.batches < 5);
+
+    // A gap between segments (lost file in the middle) is corruption.
+    std::fs::write(&seg.path, &clean).unwrap();
+    let mut wal = ShardWal::open(
+        dir.clone(),
+        5,
+        FsyncPolicy::Never,
+        Duration::from_millis(50),
+        1 << 20,
+    )
+    .unwrap();
+    wal.append(&[(9, 9)]).unwrap(); // seq 6 in a fresh segment
+    drop(wal);
+    // Simulate a hole: bump the new segment's name past the expected seq.
+    let segs = wal::scan_segments(&dir).unwrap();
+    let newest = segs.last().unwrap().path.clone();
+    std::fs::rename(&newest, dir.join("seg-00000000000000000099.wal")).unwrap();
+    assert!(wal::replay_dir(&dir, 0, |_, _| {}).is_err());
+}
+
+#[test]
+fn wal_restart_resumes_contiguously() {
+    let tmp = TempDir::new("wal-resume");
+    let dir = tmp.join("shard-0000");
+    let mut wal = wal_cfg(dir.clone(), 1 << 20);
+    for i in 0..3u64 {
+        wal.append(&[(i, 1)]).unwrap();
+    }
+    drop(wal);
+    // "Restart": recovery reports last_seq = 3, a new writer continues at 4
+    // in a new segment; replay sees one contiguous sequence.
+    let mut wal = ShardWal::open(
+        dir.clone(),
+        3,
+        FsyncPolicy::Batch,
+        Duration::from_millis(50),
+        1 << 20,
+    )
+    .unwrap();
+    for i in 0..3u64 {
+        wal.append(&[(10 + i, 1)]).unwrap();
+    }
+    assert_eq!(wal.last_seq(), 6);
+    drop(wal);
+    let mut seqs = Vec::new();
+    let stats = wal::replay_dir(&dir, 0, |seq, _| seqs.push(seq)).unwrap();
+    assert_eq!(seqs, vec![1, 2, 3, 4, 5, 6]);
+    assert!(!stats.torn);
+}
+
+// ---- manifest ----
+
+#[test]
+fn manifest_roundtrip_and_validation() {
+    let m = Manifest {
+        generation: 7,
+        epoch: 2,
+        shards: 3,
+        snapshot: "ckpt-000007.snap".into(),
+        wal_cuts: vec![10, 0, 4],
+    };
+    let parsed = Manifest::parse(&m.render()).unwrap();
+    assert_eq!(parsed, m);
+    // Wrong cut arity is rejected.
+    let bad = m.render().replace("[10, 0, 4]", "[10, 0]");
+    assert!(Manifest::parse(&bad).is_err());
+    assert!(Manifest::parse("not toml at all =").is_err());
+    assert!(Manifest::parse("[checkpoint]\ngeneration = 1\n").is_err());
+}
+
+#[test]
+fn fsync_policy_parses() {
+    assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+    assert_eq!(FsyncPolicy::parse("batch").unwrap(), FsyncPolicy::Batch);
+    assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+    assert!(FsyncPolicy::parse("sometimes").is_err());
+    for p in [FsyncPolicy::Never, FsyncPolicy::Batch, FsyncPolicy::Always] {
+        assert_eq!(FsyncPolicy::parse(p.as_str()).unwrap(), p);
+    }
+}

@@ -1,0 +1,385 @@
+//! Per-shard segmented write-ahead log.
+//!
+//! Layout: `<data_dir>/wal/e<epoch>/shard-<i>/seg-<first_seq>.wal`, where
+//! `first_seq` is the sequence number of the segment's first record. Each
+//! segment starts with an 8-byte magic, followed by framed records:
+//!
+//! ```text
+//! frame  len: u32 LE   payload byte length
+//!        crc: u32 LE   crc32(payload)
+//!        payload       codec::encode_record(seq, batch)
+//! ```
+//!
+//! Invariants the reader checks and the writer maintains:
+//!
+//! * Sequence numbers are per-shard, start at 1, and are contiguous within
+//!   and across segments (a segment's filename is its first seq).
+//! * Only the *tail* of the newest write position can be torn: a bad frame
+//!   ends that segment's replay. A later segment then continues at exactly
+//!   the next seq (the restart that created it replayed up to the torn
+//!   point) — any other gap is real corruption and fails recovery.
+//! * Sealed segments are fsynced on rotation regardless of policy, so
+//!   truncation (after a checkpoint) never races unsynced data.
+//!
+//! One writer exists per shard — the shard's single ingest worker — so the
+//! surrounding `Mutex` (in `PersistState`) is uncontended except during
+//! checkpoints.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Write as _};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use super::codec;
+use super::FsyncPolicy;
+
+/// Magic prefix of every WAL segment file.
+pub const SEGMENT_MAGIC: &[u8; 8] = b"MCPQWAL1";
+
+/// Frame header bytes (len + crc).
+const FRAME_HEADER: usize = 8;
+
+struct OpenSegment {
+    file: File,
+    path: PathBuf,
+    /// Bytes written so far, including the magic.
+    len: u64,
+}
+
+/// Append side of one shard's segmented log.
+pub struct ShardWal {
+    dir: PathBuf,
+    policy: FsyncPolicy,
+    fsync_interval: Duration,
+    segment_bytes: u64,
+    seg: Option<OpenSegment>,
+    /// Sequence number the next append will carry.
+    next_seq: u64,
+    last_sync: Instant,
+    dirty: bool,
+    /// Reusable frame buffer: [len u32][crc u32][payload].
+    frame: Vec<u8>,
+    /// Bytes appended minus bytes truncated (the engine's `wal_bytes=`).
+    live_bytes: u64,
+}
+
+impl ShardWal {
+    /// Open the log for appending. `last_seq` is the highest sequence
+    /// number already on disk (or covered by a checkpoint); the first
+    /// append gets `last_seq + 1`. The directory is created eagerly so the
+    /// shard layout is visible to recovery even before the first record.
+    pub fn open(
+        dir: PathBuf,
+        last_seq: u64,
+        policy: FsyncPolicy,
+        fsync_interval: Duration,
+        segment_bytes: u64,
+    ) -> io::Result<ShardWal> {
+        fs::create_dir_all(&dir)?;
+        let live_bytes = scan_segments(&dir)?.iter().map(|s| s.bytes).sum();
+        Ok(ShardWal {
+            dir,
+            policy,
+            fsync_interval,
+            segment_bytes: segment_bytes.max(1),
+            seg: None,
+            next_seq: last_seq + 1,
+            last_sync: Instant::now(),
+            dirty: false,
+            frame: Vec::with_capacity(4096),
+            live_bytes,
+        })
+    }
+
+    /// Highest sequence number handed out so far (0 = none).
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    /// Bytes currently on disk for this shard (appends minus truncations).
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// Length of the currently open segment (0 if none is open yet) —
+    /// exposed so the kill-point tests can enumerate record boundaries.
+    pub fn segment_len(&self) -> u64 {
+        self.seg.as_ref().map_or(0, |s| s.len)
+    }
+
+    /// Append one batch as a single framed record; returns its sequence
+    /// number. One `write` syscall per record; fsync per policy.
+    pub fn append(&mut self, batch: &[(u64, u64)]) -> io::Result<u64> {
+        let seq = self.next_seq;
+        self.frame.clear();
+        self.frame.extend_from_slice(&[0u8; FRAME_HEADER]);
+        codec::encode_record(&mut self.frame, seq, batch);
+        let payload_len = (self.frame.len() - FRAME_HEADER) as u32;
+        let crc = codec::crc32(&self.frame[FRAME_HEADER..]);
+        self.frame[..4].copy_from_slice(&payload_len.to_le_bytes());
+        self.frame[4..FRAME_HEADER].copy_from_slice(&crc.to_le_bytes());
+
+        if self.seg.is_none() {
+            self.open_segment()?;
+        }
+        let frame_len = self.frame.len() as u64;
+        let write_res =
+            self.seg.as_mut().expect("segment open").file.write_all(&self.frame);
+        if let Err(e) = write_res {
+            // A partial frame may now sit at the segment's tail. Abandon the
+            // segment: replay treats the partial frame as a torn tail, and
+            // the next append opens a fresh segment at this same
+            // (unconsumed) seq, so the sequence stays contiguous. Appending
+            // after the partial write instead would hide every later record
+            // behind the tear.
+            self.seg = None;
+            return Err(e);
+        }
+        self.seg.as_mut().expect("segment open").len += frame_len;
+        self.live_bytes += frame_len;
+        self.next_seq += 1;
+        self.dirty = true;
+        match self.policy {
+            FsyncPolicy::Always => self.sync()?,
+            FsyncPolicy::Batch => {
+                // Group commit: at most one fsync per interval. The power-
+                // loss window is bounded by the interval (SIGKILL loses
+                // nothing either way — the page cache survives the process).
+                if self.last_sync.elapsed() >= self.fsync_interval {
+                    self.sync()?;
+                }
+            }
+            FsyncPolicy::Never => {}
+        }
+        if self.seg.as_ref().is_some_and(|s| s.len >= self.segment_bytes) {
+            self.rotate()?;
+        }
+        Ok(seq)
+    }
+
+    /// Force an fsync of the open segment.
+    pub fn sync(&mut self) -> io::Result<()> {
+        if self.dirty {
+            if let Some(seg) = &self.seg {
+                seg.file.sync_data()?;
+            }
+            self.dirty = false;
+            self.last_sync = Instant::now();
+        }
+        Ok(())
+    }
+
+    fn open_segment(&mut self) -> io::Result<()> {
+        let path = self.dir.join(format!("seg-{:020}.wal", self.next_seq));
+        // truncate(true): a file with this exact name can only be a torn
+        // leftover (its first record would carry a seq recovery already
+        // accounted for when it computed our starting seq), so its bytes
+        // are dead. Appending after them would hide our records behind a
+        // torn frame; starting clean cannot lose anything.
+        // The stale leftover's bytes were counted into `live_bytes` at
+        // open() time; the truncation reclaims them.
+        let stale = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let mut file = OpenOptions::new().write(true).create(true).truncate(true).open(&path)?;
+        file.write_all(SEGMENT_MAGIC)?;
+        self.seg = Some(OpenSegment { file, path, len: SEGMENT_MAGIC.len() as u64 });
+        self.live_bytes = self.live_bytes.saturating_sub(stale) + SEGMENT_MAGIC.len() as u64;
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// Seal the current segment (fsync regardless of policy) and start the
+    /// next one lazily on the following append.
+    fn rotate(&mut self) -> io::Result<()> {
+        if let Some(seg) = self.seg.take() {
+            seg.file.sync_data()?;
+            sync_dir(&self.dir);
+        }
+        self.dirty = false;
+        self.last_sync = Instant::now();
+        Ok(())
+    }
+
+    /// Delete sealed segments whose every record is `<= cut` (covered by a
+    /// checkpoint). A segment qualifies when its *successor's* first seq is
+    /// `<= cut + 1`; the newest segment (no successor bound) and the open
+    /// segment are always kept. Returns the bytes freed.
+    pub fn truncate_upto(&mut self, cut: u64) -> io::Result<u64> {
+        let segs = scan_segments(&self.dir)?;
+        let current = self.seg.as_ref().map(|s| s.path.clone());
+        let mut freed = 0u64;
+        for (i, seg) in segs.iter().enumerate() {
+            let covered = match segs.get(i + 1) {
+                Some(next) => next.first_seq <= cut.saturating_add(1),
+                None => false,
+            };
+            if covered && Some(&seg.path) != current.as_ref() {
+                fs::remove_file(&seg.path)?;
+                freed += seg.bytes;
+            }
+        }
+        self.live_bytes = self.live_bytes.saturating_sub(freed);
+        Ok(freed)
+    }
+}
+
+impl Drop for ShardWal {
+    fn drop(&mut self) {
+        // Best effort: make a clean shutdown's tail durable.
+        let _ = self.sync();
+    }
+}
+
+/// Best-effort directory fsync (makes renames/creates durable on ext4).
+pub(crate) fn sync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// One on-disk segment, from `scan_segments`.
+#[derive(Debug, Clone)]
+pub struct SegmentInfo {
+    pub first_seq: u64,
+    pub path: PathBuf,
+    pub bytes: u64,
+}
+
+/// List a shard directory's segments sorted by first sequence number.
+pub fn scan_segments(dir: &Path) -> io::Result<Vec<SegmentInfo>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(first_seq) = name
+            .strip_prefix("seg-")
+            .and_then(|s| s.strip_suffix(".wal"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        out.push(SegmentInfo { first_seq, path: entry.path(), bytes: entry.metadata()?.len() });
+    }
+    out.sort_unstable_by_key(|s| s.first_seq);
+    Ok(out)
+}
+
+/// Outcome of replaying one shard directory.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ReplayStats {
+    /// Batches handed to the sink (seq strictly after the cut).
+    pub batches: u64,
+    /// Updates (pairs) handed to the sink.
+    pub updates: u64,
+    /// Highest valid sequence number seen (0 = none).
+    pub last_seq: u64,
+    /// True if replay stopped at a torn/corrupt tail record.
+    pub torn: bool,
+}
+
+/// Replay every record with `seq > cut` from a shard directory, in
+/// sequence order, into `sink`. Tolerates a torn record at the *end* of
+/// the newest write position (see the module docs for why a torn tail in a
+/// non-final segment is still consistent); any sequence gap between
+/// segments is corruption and fails.
+pub fn replay_dir(
+    dir: &Path,
+    cut: u64,
+    mut sink: impl FnMut(u64, Vec<(u64, u64)>),
+) -> Result<ReplayStats, String> {
+    let segs = scan_segments(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut stats = ReplayStats::default();
+    // The oldest surviving segment must reach back to the cut, or batches
+    // in (cut, first_seq) are unrecoverable — seen when a checkpoint's
+    // truncation outran the snapshot being recovered from. Fail loudly
+    // rather than silently losing acked batches.
+    if let Some(first) = segs.first() {
+        if first.first_seq > cut.saturating_add(1) {
+            return Err(format!(
+                "wal hole in {}: recovering from cut {cut} but the oldest segment starts at {}",
+                dir.display(),
+                first.first_seq
+            ));
+        }
+    }
+    let mut expected: Option<u64> = None;
+    for seg in &segs {
+        if let Some(e) = expected {
+            if seg.first_seq > e {
+                return Err(format!(
+                    "wal gap in {}: expected seq {e}, next segment starts at {}",
+                    dir.display(),
+                    seg.first_seq
+                ));
+            }
+            if seg.first_seq < e {
+                return Err(format!(
+                    "overlapping wal segments in {}: seq {} after {}",
+                    dir.display(),
+                    seg.first_seq,
+                    e - 1
+                ));
+            }
+        }
+        let bytes =
+            fs::read(&seg.path).map_err(|e| format!("{}: {e}", seg.path.display()))?;
+        if bytes.len() < SEGMENT_MAGIC.len() || &bytes[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+            // Torn before the first record: no valid seqs in this file. A
+            // later segment (if any) must start at exactly this one's first
+            // seq — the gap check above enforces it next iteration.
+            stats.torn = true;
+            expected = Some(seg.first_seq);
+            continue;
+        }
+        let mut pos = SEGMENT_MAGIC.len();
+        let mut seg_expected = seg.first_seq;
+        let mut torn = false;
+        while pos < bytes.len() {
+            if bytes.len() - pos < FRAME_HEADER {
+                torn = true;
+                break;
+            }
+            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+            let start = pos + FRAME_HEADER;
+            if len > bytes.len() - start {
+                torn = true;
+                break;
+            }
+            let payload = &bytes[start..start + len];
+            if codec::crc32(payload) != crc {
+                torn = true;
+                break;
+            }
+            let (seq, batch) = match codec::decode_record(payload) {
+                Ok(r) => r,
+                Err(_) => {
+                    torn = true;
+                    break;
+                }
+            };
+            if seq != seg_expected {
+                torn = true;
+                break;
+            }
+            pos = start + len;
+            seg_expected = seq + 1;
+            stats.last_seq = seq;
+            if seq > cut {
+                stats.batches += 1;
+                stats.updates += batch.len() as u64;
+                sink(seq, batch);
+            }
+        }
+        // A torn tail is tolerated anywhere: either this was the newest
+        // write position (replay simply ends), or a restart continued in a
+        // later segment starting at exactly `seg_expected` — any other
+        // successor trips the gap check and fails recovery.
+        stats.torn |= torn;
+        expected = Some(seg_expected);
+    }
+    Ok(stats)
+}

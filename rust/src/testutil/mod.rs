@@ -5,6 +5,8 @@
 
 mod prop;
 mod rng;
+mod tempdir;
 
 pub use prop::{forall, Gen, PropConfig, U64Range, VecGen};
 pub use rng::Rng64;
+pub use tempdir::TempDir;

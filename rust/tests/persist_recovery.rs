@@ -1,0 +1,319 @@
+//! Durability differentials (DESIGN.md §4):
+//!
+//! * Round-trip property: `export → encode → decode → import → export` is
+//!   byte-identical across 1/2/8 shard configs (and re-encoding the
+//!   decoded snapshot reproduces the original bytes).
+//! * Kill-point differential: a WAL cut at *every* record boundary (and
+//!   inside frames) recovers exactly the surviving prefix — equal to a
+//!   reference chain fed the same prefix — with torn tails flagged iff the
+//!   cut is mid-frame.
+//! * End-to-end engine recovery: checkpoint + WAL tail replay rebuilds an
+//!   export identical to a never-crashed reference engine fed the same
+//!   acked stream, torn final records tolerated, reopen idempotent.
+//! * Shard-layout changes re-route the recovered data and bump the WAL
+//!   epoch without losing a batch.
+//! * `SAVE` over the wire checkpoints a live server; a restart serves the
+//!   same model.
+
+use std::sync::Arc;
+
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::config::{PersistSection, ServerConfig};
+use mcprioq::coordinator::{Client, Engine, Request, Response, Server};
+use mcprioq::persist::wal::{self, ShardWal};
+use mcprioq::persist::{codec, open_engine, FsyncPolicy};
+use mcprioq::testutil::{Rng64, TempDir};
+
+/// A skewed stream with frequent same-src runs (as the batch tests use).
+fn stream(len: usize, seed: u64) -> Vec<(u64, u64)> {
+    let mut rng = Rng64::new(seed);
+    let mut out = Vec::with_capacity(len);
+    let mut src = 0u64;
+    for i in 0..len {
+        if i % 4 == 0 {
+            src = rng.next_below(48);
+        }
+        let u = rng.next_f64();
+        out.push((src, ((u * u) * 96.0) as u64));
+    }
+    out
+}
+
+fn durable_config(dir: &std::path::Path, shards: usize) -> ServerConfig {
+    ServerConfig {
+        shards,
+        queue_capacity: 4_096,
+        persist: PersistSection {
+            data_dir: dir.to_string_lossy().into_owned(),
+            fsync: "never".into(),
+            // Explicit checkpoints only: the tests control the cut points.
+            checkpoint_interval_ms: 0,
+            ..PersistSection::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn snapshot_roundtrip_identical_across_shard_configs() {
+    let pairs = stream(30_000, 0xBEEF);
+    let mut reference: Option<codec::Export> = None;
+    for shards in [1usize, 2, 8] {
+        let config = ServerConfig { shards, queue_capacity: 4_096, ..Default::default() };
+        let engine = Engine::new(&config, 0);
+        for chunk in pairs.chunks(499) {
+            engine.observe_batch_direct(chunk);
+        }
+        let exported = engine.export();
+        // Shards hold disjoint srcs: the merged export is shard-count
+        // independent, so one reference covers all three configs.
+        match &reference {
+            Some(r) => assert_eq!(r, &exported, "{shards} shards"),
+            None => reference = Some(exported.clone()),
+        }
+
+        // export → encode → decode is lossless and re-encodes identically.
+        let cuts: Vec<u64> = (0..shards as u64).collect();
+        let bytes = codec::encode_snapshot(1, &cuts, &exported);
+        let (epoch, got_cuts, decoded) = codec::decode_snapshot(&bytes).unwrap();
+        assert_eq!((epoch, &got_cuts, &decoded), (1, &cuts, &exported), "{shards} shards");
+        assert_eq!(codec::encode_snapshot(epoch, &got_cuts, &decoded), bytes);
+
+        // decode → import → export reproduces the model byte-for-byte,
+        // into an engine of the same shape and into a bare chain.
+        let imported = Engine::new(&config, 0);
+        imported.import_snapshot(&decoded);
+        assert_eq!(imported.export(), exported, "{shards} shards import");
+        let chain = McPrioQ::import(ChainConfig::default(), &decoded);
+        assert_eq!(chain.export(), exported, "{shards} shards chain import");
+        engine.shutdown();
+        imported.shutdown();
+    }
+}
+
+#[test]
+fn kill_point_recovery_matches_surviving_prefix() {
+    let tmp = TempDir::new("killpoint");
+    let dir = tmp.join("shard-0000");
+    let mut wal = ShardWal::open(
+        dir.clone(),
+        0,
+        FsyncPolicy::Never,
+        std::time::Duration::from_millis(50),
+        1 << 20, // one segment: every cut lands in the same file
+    )
+    .unwrap();
+    let mut rng = Rng64::new(0xCAFE);
+    let mut batches: Vec<Vec<(u64, u64)>> = Vec::new();
+    let mut boundaries = Vec::new(); // file length after each append
+    for _ in 0..40 {
+        let batch: Vec<(u64, u64)> = (0..rng.next_below(6) + 1)
+            .map(|_| (rng.next_below(16), rng.next_below(16)))
+            .collect();
+        wal.append(&batch).unwrap();
+        batches.push(batch);
+        boundaries.push(wal.segment_len());
+    }
+    drop(wal);
+    let seg_path = wal::scan_segments(&dir).unwrap().remove(0).path;
+    let full = std::fs::read(&seg_path).unwrap();
+    assert_eq!(*boundaries.last().unwrap() as usize, full.len());
+
+    // Cut the log at every record boundary and at offsets inside the next
+    // frame; recovery must yield exactly the batches wholly before the cut.
+    let mut cuts: Vec<usize> = vec![0, 3, 8, 11];
+    for &b in &boundaries {
+        cuts.push(b as usize);
+        cuts.push(b as usize + 1);
+        cuts.push(b as usize + 5);
+    }
+    for cut in cuts {
+        let cut = cut.min(full.len());
+        let cut_dir = tmp.join(&format!("cut-{cut}"));
+        std::fs::create_dir_all(&cut_dir).unwrap();
+        std::fs::write(cut_dir.join(seg_path.file_name().unwrap()), &full[..cut]).unwrap();
+
+        let survivors = boundaries.iter().filter(|&&b| b as usize <= cut).count();
+        let recovered = McPrioQ::new(ChainConfig::default());
+        let stats = wal::replay_dir(&cut_dir, 0, |_seq, batch| {
+            recovered.observe_batch(&batch);
+        })
+        .unwrap();
+        assert_eq!(stats.batches as usize, survivors, "cut {cut}");
+        let exact_boundary = cut == 8 || boundaries.iter().any(|&b| b as usize == cut);
+        assert_eq!(stats.torn, !exact_boundary, "cut {cut}");
+
+        let reference = McPrioQ::new(ChainConfig::default());
+        for batch in &batches[..survivors] {
+            reference.observe_batch(batch);
+        }
+        assert_eq!(recovered.export(), reference.export(), "cut {cut}");
+        std::fs::remove_dir_all(&cut_dir).unwrap();
+    }
+}
+
+#[test]
+fn engine_recovers_acked_stream_after_crash() {
+    let tmp = TempDir::new("engine-recovery");
+    let config = durable_config(tmp.path(), 2);
+    let pairs = stream(24_000, 0xD00D);
+    let (half_a, half_b) = pairs.split_at(pairs.len() / 2);
+
+    // A never-persisted reference engine fed the same acked stream.
+    let plain = ServerConfig { persist: PersistSection::default(), ..config.clone() };
+    let reference_engine = Engine::new(&plain, 2);
+
+    let (engine, report) = open_engine(&config, 2).unwrap();
+    assert_eq!(report.generation, 0);
+    assert_eq!(report.replayed_batches, 0);
+    for chunk in half_a.chunks(311) {
+        assert_eq!(engine.observe_batch(chunk), chunk.len());
+        reference_engine.observe_batch(chunk);
+    }
+    // Mid-stream checkpoint: the tail after this lives only in the WAL.
+    let summary = engine.checkpoint().unwrap();
+    assert_eq!(summary.generation, 1);
+    for chunk in half_b.chunks(311) {
+        assert_eq!(engine.observe_batch(chunk), chunk.len());
+        reference_engine.observe_batch(chunk);
+    }
+    engine.quiesce();
+    reference_engine.quiesce();
+    let reference = reference_engine.export();
+    assert_eq!(engine.export(), reference);
+    let wal_bytes = engine.stats().wal_bytes;
+    assert!(wal_bytes > 0, "tail batches must be in the WAL");
+    // "Crash": no shutdown checkpoint, just drop (workers drain + join).
+    engine.shutdown();
+    drop(engine);
+
+    // Recover: checkpoint + WAL tail must rebuild the exact model.
+    let (recovered, report) = open_engine(&config, 2).unwrap();
+    assert_eq!(report.generation, 1);
+    assert!(report.snapshot_nodes > 0);
+    assert!(report.replayed_batches > 0, "the post-checkpoint tail must replay");
+    assert_eq!(recovered.export(), reference);
+    assert_eq!(recovered.stats().recovered_batches, report.replayed_batches);
+    recovered.shutdown();
+    drop(recovered);
+
+    // Reopen again with no new writes: idempotent (cuts + seqs respected).
+    let (again, report2) = open_engine(&config, 0).unwrap();
+    assert_eq!(report2.replayed_batches, report.replayed_batches);
+    assert_eq!(again.export(), reference);
+    again.shutdown();
+    drop(again);
+
+    // Torn final record: garbage on the newest segment is tolerated.
+    let epoch_dir = tmp.join("wal").join("e1");
+    let mut appended = false;
+    for shard in std::fs::read_dir(&epoch_dir).unwrap().flatten() {
+        if let Some(seg) = wal::scan_segments(&shard.path()).unwrap().last() {
+            let mut bytes = std::fs::read(&seg.path).unwrap();
+            bytes.extend_from_slice(&[0x5A; 11]);
+            std::fs::write(&seg.path, bytes).unwrap();
+            appended = true;
+            break;
+        }
+    }
+    assert!(appended, "expected at least one WAL segment");
+    let (torn, report3) = open_engine(&config, 0).unwrap();
+    assert!(report3.torn_tails >= 1);
+    assert_eq!(torn.export(), reference);
+    torn.shutdown();
+    reference_engine.shutdown();
+}
+
+#[test]
+fn shard_layout_change_rebuckets_and_bumps_epoch() {
+    let tmp = TempDir::new("layout-change");
+    let pairs = stream(12_000, 0xFACE);
+
+    let config2 = durable_config(tmp.path(), 2);
+    let (engine, _) = open_engine(&config2, 2).unwrap();
+    for chunk in pairs.chunks(257) {
+        assert_eq!(engine.observe_batch(chunk), chunk.len());
+    }
+    engine.quiesce();
+    let reference = engine.export();
+    engine.shutdown();
+    drop(engine);
+
+    // Restart with 3 shards: recovery re-routes, bumps the epoch, and
+    // immediately checkpoints under the new layout.
+    let config3 = durable_config(tmp.path(), 3);
+    let (engine, report) = open_engine(&config3, 2).unwrap();
+    assert!(report.layout_changed);
+    assert_eq!(report.epoch, 2);
+    assert_eq!(engine.export(), reference);
+    assert!(!tmp.join("wal").join("e1").exists(), "old epoch swept");
+    engine.shutdown();
+    drop(engine);
+
+    // And the new layout keeps recovering cleanly.
+    let (engine, report) = open_engine(&config3, 0).unwrap();
+    assert!(!report.layout_changed);
+    assert_eq!(report.epoch, 2);
+    assert_eq!(engine.export(), reference);
+    engine.shutdown();
+}
+
+#[test]
+fn save_over_the_wire_then_restart_serves_same_model() {
+    let tmp = TempDir::new("wire-save");
+    let config = durable_config(tmp.path(), 2);
+    let (engine, _) = open_engine(&config, 2).unwrap();
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let handle = server.spawn();
+
+    let mut client = Client::connect(addr).unwrap();
+    let pairs: Vec<(u64, u64)> = stream(5_000, 0x5AFE);
+    client.observe_batch(&pairs).unwrap();
+    engine.quiesce();
+    let detail = client.save().unwrap();
+    assert!(detail.contains("gen=1"), "{detail}");
+    // Post-SAVE tail: survives via the WAL, not the checkpoint.
+    client.observe_batch(&[(1, 2), (1, 2), (1, 3)]).unwrap();
+    engine.quiesce();
+    let reference = engine.export();
+    let topk_before = client.topk(1, 3).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("wal_bytes="), "{stats}");
+    assert!(stats.contains("ckpt_age="), "{stats}");
+    assert!(stats.contains("recovered_batches=0"), "{stats}");
+    drop(handle);
+    engine.shutdown();
+    drop(engine);
+
+    let (engine, report) = open_engine(&config, 2).unwrap();
+    assert_eq!(report.generation, 1);
+    assert!(report.replayed_batches > 0);
+    assert_eq!(engine.export(), reference);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let mut client = Client::connect(addr).unwrap();
+    assert_eq!(client.topk(1, 3).unwrap(), topk_before);
+    let stats = client.stats().unwrap();
+    assert!(
+        stats.contains(&format!("recovered_batches={}", report.replayed_batches)),
+        "{stats}"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn save_without_data_dir_is_a_clean_error() {
+    let engine = Engine::new(&ServerConfig { shards: 1, ..Default::default() }, 1);
+    assert!(engine.checkpoint().is_err());
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let mut client = Client::connect(addr).unwrap();
+    match client.request(&Request::Save).unwrap() {
+        Response::Err(e) => assert!(e.contains("not enabled"), "{e}"),
+        other => panic!("expected ERR, got {other:?}"),
+    }
+    engine.shutdown();
+}
