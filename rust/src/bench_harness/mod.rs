@@ -392,6 +392,112 @@ pub fn durability_sweep(
     Ok((rows, probe))
 }
 
+/// Result of the replication bench ([`replication_sweep`]): leader wire
+/// ingest rate, follower apply throughput, the steady-state record lag at
+/// the moment the drive window ended, and how long the follower took to
+/// drain to lag 0 afterwards.
+pub struct ReplicationProbe {
+    pub leader_updates_per_s: f64,
+    pub follower_updates_per_s: f64,
+    pub steady_lag_records: u64,
+    pub catchup_secs: f64,
+    /// True when leader and follower exports matched at quiescence (the
+    /// bench double-checks the equality the tests prove).
+    pub converged: bool,
+}
+
+/// The replication bench (`mcprioq bench --replication`): a durable
+/// leader with a TCP front-end, a durable follower streaming its WAL
+/// (full in-process `replicate` plane), and `threads` wire clients
+/// driving `OBSERVEB` through `Client::connect_with_backoff`. Measures
+/// follower apply throughput and steady-state lag — the two numbers that
+/// say whether replica reads can actually keep up with leader ingest.
+pub fn replication_sweep(
+    bench: &Bench,
+    window: Duration,
+    threads: usize,
+    shards: usize,
+    batch: usize,
+    root: &std::path::Path,
+) -> Result<ReplicationProbe, String> {
+    use crate::config::{PersistSection, ServerConfig};
+    use crate::coordinator::{Client, Server};
+    use crate::workload::{TransitionStream, ZipfChainStream};
+
+    let threads = threads.max(1);
+    let batch = batch.max(1);
+    let make_config = |dir: &std::path::Path| ServerConfig {
+        shards: shards.max(1),
+        queue_capacity: 65_536,
+        persist: PersistSection {
+            data_dir: dir.to_string_lossy().into_owned(),
+            fsync: "never".into(),
+            checkpoint_interval_ms: 0,
+            ..PersistSection::default()
+        },
+        ..Default::default()
+    };
+
+    let (leader, _) = crate::persist::open_engine(&make_config(&root.join("leader")), threads)?;
+    let server = Server::bind(std::sync::Arc::clone(&leader), "127.0.0.1:0")
+        .map_err(|e| format!("bind: {e}"))?;
+    let addr = server.local_addr().to_string();
+    let _server = server.spawn();
+    let follower =
+        crate::replicate::start_follower(make_config(&root.join("follower")), 1, &addr)?;
+
+    let t0 = Instant::now();
+    bench.run_threads(threads, window, |t| {
+        let addr = addr.clone();
+        let mut client = Client::connect_with_backoff(&addr, Duration::from_secs(5))
+            .expect("bench client connects");
+        let mut stream = ZipfChainStream::new(10_000, 24, 1.1, t as u64 + 1);
+        let mut buf = Vec::with_capacity(batch);
+        move || {
+            buf.clear();
+            for _ in 0..batch {
+                buf.push(stream.next_transition());
+            }
+            let _ = client.observe_batch(&buf);
+            0
+        }
+    });
+    // Steady-state lag: how far behind is the follower at the instant the
+    // offered load stops?
+    let persist = leader.persist_state().expect("leader is durable");
+    let steady_lag_records: u64 = persist
+        .last_seqs()
+        .iter()
+        .zip(follower.state.applied_seqs())
+        .map(|(h, a)| h.saturating_sub(a))
+        .sum();
+
+    // Catch-up: quiesce the leader, then time the drain to lag 0.
+    leader.quiesce();
+    let target = persist.last_seqs();
+    let catch0 = Instant::now();
+    let caught = follower.wait_caught_up(&target, Duration::from_secs(60));
+    let catchup_secs = catch0.elapsed().as_secs_f64();
+    let total_secs = t0.elapsed().as_secs_f64();
+    let leader_updates = leader.stats().applied_updates;
+    let follower_updates = follower.state.applied_updates();
+    let converged = caught && {
+        follower.engine.quiesce();
+        leader.export_quiesced() == follower.engine.export_quiesced()
+    };
+
+    follower.stop();
+    follower.engine.shutdown();
+    leader.shutdown();
+    Ok(ReplicationProbe {
+        leader_updates_per_s: leader_updates as f64 / window.as_secs_f64(),
+        follower_updates_per_s: follower_updates as f64 / total_secs.max(1e-9),
+        steady_lag_records,
+        catchup_secs,
+        converged,
+    })
+}
+
 /// One JSON value for [`JsonArtifact`] rows (serde is unavailable offline;
 /// the bench artifacts only need numbers, strings, and booleans).
 #[derive(Debug, Clone)]

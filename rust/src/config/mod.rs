@@ -27,6 +27,9 @@ pub struct ServerConfig {
     /// Durability parameters (WAL + checkpoints); disabled while
     /// `data_dir` is empty.
     pub persist: PersistSection,
+    /// Replication parameters (leader streaming + follower link); inert
+    /// unless the process serves a follower or runs with `--follow`.
+    pub replicate: ReplicateSection,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -64,6 +67,50 @@ pub struct PersistSection {
     pub checkpoint_wal_bytes: u64,
 }
 
+/// `[replicate]` — WAL streaming to followers (DESIGN.md §5). The same
+/// section configures both roles: the leader reads `heartbeat_ms` and
+/// `snapshot_records`, the follower reads the rest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicateSection {
+    /// Leader: cadence of `RHB` heartbeats (also the follower's liveness
+    /// signal and lag-head refresh).
+    pub heartbeat_ms: u64,
+    /// Leader: a follower whose total record lag exceeds this bootstraps
+    /// from a snapshot instead of log catch-up (0 = snapshot only when the
+    /// WAL no longer reaches back to the follower's position).
+    pub snapshot_records: u64,
+    /// Lag bound for `lag_ok=` in the follower's STATS (0 = unbounded).
+    pub max_lag_records: u64,
+    /// Follower: self-promote after this long without leader contact
+    /// (0 = promotion only via the explicit `PROMOTE` command).
+    pub auto_promote_ms: u64,
+    /// Follower: give up the initial bootstrap handshake after this long.
+    pub connect_timeout_ms: u64,
+}
+
+impl Default for ReplicateSection {
+    fn default() -> Self {
+        ReplicateSection {
+            heartbeat_ms: 500,
+            snapshot_records: 262_144,
+            max_lag_records: 0,
+            auto_promote_ms: 0,
+            connect_timeout_ms: 30_000,
+        }
+    }
+}
+
+/// Resolved replication configuration (`ServerConfig::replicate_config`).
+#[derive(Debug, Clone)]
+pub struct ReplicateConfig {
+    pub heartbeat: Duration,
+    pub snapshot_records: u64,
+    pub max_lag_records: u64,
+    /// None = manual promotion only.
+    pub auto_promote: Option<Duration>,
+    pub connect_timeout: Duration,
+}
+
 impl Default for PersistSection {
     fn default() -> Self {
         PersistSection {
@@ -95,6 +142,7 @@ impl Default for ServerConfig {
                 snap_min_edges: 8,
             },
             persist: PersistSection::default(),
+            replicate: ReplicateSection::default(),
         }
     }
 }
@@ -134,6 +182,19 @@ impl ServerConfig {
                 "persist.checkpoint_wal_bytes" => {
                     cfg.persist.checkpoint_wal_bytes = value.as_u64()?
                 }
+                "replicate.heartbeat_ms" => cfg.replicate.heartbeat_ms = value.as_u64()?,
+                "replicate.snapshot_records" => {
+                    cfg.replicate.snapshot_records = value.as_u64()?
+                }
+                "replicate.max_lag_records" => {
+                    cfg.replicate.max_lag_records = value.as_u64()?
+                }
+                "replicate.auto_promote_ms" => {
+                    cfg.replicate.auto_promote_ms = value.as_u64()?
+                }
+                "replicate.connect_timeout_ms" => {
+                    cfg.replicate.connect_timeout_ms = value.as_u64()?
+                }
                 other => return Err(format!("unknown config key: {other}")),
             }
         }
@@ -143,6 +204,9 @@ impl ServerConfig {
         crate::persist::FsyncPolicy::parse(&cfg.persist.fsync)?;
         if cfg.persist.segment_bytes == 0 {
             return Err("persist.segment_bytes must be positive".to_string());
+        }
+        if cfg.replicate.heartbeat_ms == 0 {
+            return Err("replicate.heartbeat_ms must be positive".to_string());
         }
         Ok(cfg)
     }
@@ -167,6 +231,20 @@ impl ServerConfig {
                 .then(|| Duration::from_millis(self.persist.checkpoint_interval_ms)),
             checkpoint_wal_bytes: self.persist.checkpoint_wal_bytes.max(1),
         }))
+    }
+
+    /// Resolve the `[replicate]` section (always valid after parsing).
+    pub fn replicate_config(&self) -> ReplicateConfig {
+        ReplicateConfig {
+            heartbeat: Duration::from_millis(self.replicate.heartbeat_ms.max(1)),
+            snapshot_records: self.replicate.snapshot_records,
+            max_lag_records: self.replicate.max_lag_records,
+            auto_promote: (self.replicate.auto_promote_ms > 0)
+                .then(|| Duration::from_millis(self.replicate.auto_promote_ms)),
+            connect_timeout: Duration::from_millis(
+                self.replicate.connect_timeout_ms.max(1),
+            ),
+        }
     }
 
     pub fn to_chain_config(&self) -> crate::chain::ChainConfig {
@@ -256,6 +334,25 @@ decay_den = 4
         assert!(ServerConfig::from_toml("[persist]\nfsync = \"sometimes\"\n").is_err());
         assert!(ServerConfig::from_toml("[persist]\nsegment_bytes = 0\n").is_err());
         assert!(ServerConfig::from_toml("[persist]\nwal_dir = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn replicate_knobs_parse() {
+        let text = "[replicate]\nheartbeat_ms = 100\nsnapshot_records = 1000\n\
+                    max_lag_records = 50\nauto_promote_ms = 2000\nconnect_timeout_ms = 500\n";
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        let r = cfg.replicate_config();
+        assert_eq!(r.heartbeat, Duration::from_millis(100));
+        assert_eq!(r.snapshot_records, 1000);
+        assert_eq!(r.max_lag_records, 50);
+        assert_eq!(r.auto_promote, Some(Duration::from_millis(2000)));
+        assert_eq!(r.connect_timeout, Duration::from_millis(500));
+        // Defaults: manual promotion only, heartbeats on.
+        let r = ServerConfig::from_toml("").unwrap().replicate_config();
+        assert_eq!(r.auto_promote, None);
+        assert_eq!(r.heartbeat, Duration::from_millis(500));
+        // A dead heartbeat would starve the follower's liveness signal.
+        assert!(ServerConfig::from_toml("[replicate]\nheartbeat_ms = 0\n").is_err());
     }
 
     #[test]

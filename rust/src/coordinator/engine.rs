@@ -71,6 +71,12 @@ pub struct EngineStats {
     pub ckpt_age_s: u64,
     pub recovered_batches: u64,
     pub wal_errors: u64,
+    /// WAL epoch the writers append into (0 when persistence is off) and
+    /// each shard's highest appended sequence number — the replication
+    /// coordinates: a follower's lag is the leader's `wal_last_seqs` minus
+    /// its own, shard by shard.
+    pub wal_epoch: u64,
+    pub wal_last_seqs: Vec<u64>,
 }
 
 /// One MCPrioQ per shard; srcs are hash-routed so every shard sees a
@@ -104,6 +110,9 @@ pub struct Engine {
     /// side around each (WAL append + observe_batch); `with_ingest_paused`
     /// takes the write side so checkpoints cut at an exact batch boundary.
     ingest_gate: RwLock<()>,
+    /// Resolved `[replicate]` knobs (heartbeat cadence, snapshot fallback
+    /// threshold, …) for the leader-side streamer and the follower link.
+    replicate: crate::config::ReplicateConfig,
 }
 
 impl Engine {
@@ -134,6 +143,7 @@ impl Engine {
             update_meter: Meter::new(),
             persist: OnceLock::new(),
             ingest_gate: RwLock::new(()),
+            replicate: config.replicate_config(),
         });
         // Spawn shard-affine ingest workers. They hold their queue Arcs
         // plus a Weak to the engine, so dropping the last user Arc tears
@@ -297,6 +307,48 @@ impl Engine {
     /// / benchmark use; this is the raw wait-free path).
     pub fn observe_direct(&self, src: u64, dst: u64) {
         self.shard(src).observe(src, dst);
+    }
+
+    /// Apply one replicated WAL record to `shard` — the follower's apply
+    /// path (DESIGN.md §5). Mirrors the ingest worker exactly: (local WAL
+    /// append → in-memory apply) under the read side of the ingest gate,
+    /// so follower checkpoints still cut at exact record boundaries and a
+    /// promoted follower is itself durable. When persistence is armed the
+    /// local WAL must hand out exactly `seq` (the leader's sequence
+    /// number); a mismatch means the streams diverged and is fatal to the
+    /// link — applying anyway would double-count records after a restart.
+    pub fn apply_replicated(
+        &self,
+        shard: usize,
+        seq: u64,
+        batch: &[(u64, u64)],
+    ) -> Result<(), String> {
+        if shard >= self.shards.len() {
+            return Err(format!(
+                "replicated record for shard {shard}, engine has {}",
+                self.shards.len()
+            ));
+        }
+        let _gate = self.ingest_gate.read().unwrap_or_else(PoisonError::into_inner);
+        if let Some(persist) = self.persist.get() {
+            let got = persist
+                .append(shard, batch)
+                .map_err(|e| format!("wal append on shard {shard}: {e}"))?;
+            if got != seq {
+                return Err(format!(
+                    "replicated seq {seq} landed at local wal seq {got} on shard {shard}"
+                ));
+            }
+        }
+        self.shards[shard].observe_batch(batch);
+        self.update_meter.mark_n(batch.len() as u64);
+        Ok(())
+    }
+
+    /// Resolved `[replicate]` configuration (leader streamer + follower
+    /// link read their knobs through the engine).
+    pub fn replicate_config(&self) -> &crate::config::ReplicateConfig {
+        &self.replicate
     }
 
     /// Apply a batch on the caller thread, bypassing the queues: grouped
@@ -480,16 +532,18 @@ impl Engine {
             snap_fallbacks += st.snap_fallbacks;
         }
         let snap = self.query_lat.snapshot();
-        let (wal_bytes, ckpt_age_s, recovered_batches, wal_errors) = match self.persist.get()
-        {
-            Some(p) => (
-                p.wal_bytes(),
-                p.checkpoint_age().as_secs(),
-                p.recovered_batches(),
-                p.wal_errors(),
-            ),
-            None => (0, 0, 0, 0),
-        };
+        let (wal_bytes, ckpt_age_s, recovered_batches, wal_errors, wal_epoch, wal_last_seqs) =
+            match self.persist.get() {
+                Some(p) => (
+                    p.wal_bytes(),
+                    p.checkpoint_age().as_secs(),
+                    p.recovered_batches(),
+                    p.wal_errors(),
+                    p.epoch(),
+                    p.last_seqs(),
+                ),
+                None => (0, 0, 0, 0, 0, Vec::new()),
+            };
         EngineStats {
             shards: self.shards.len(),
             nodes,
@@ -510,6 +564,8 @@ impl Engine {
             ckpt_age_s,
             recovered_batches,
             wal_errors,
+            wal_epoch,
+            wal_last_seqs,
         }
     }
 

@@ -31,6 +31,11 @@
 //!   a background checkpointer (or the wire `SAVE` command) pauses ingest
 //!   at a batch boundary and commits `Engine::export` + WAL cut points to
 //!   disk; `persist::open_engine` recovers checkpoint + WAL tail on boot.
+//! * **Replication** (opt-in, DESIGN.md §5): a `REPL HELLO` connection
+//!   turns into a push stream of that WAL (`replicate::serve_follower`);
+//!   a follower built with `replicate::start_follower` applies it through
+//!   `Engine::apply_replicated` and serves reads with bounded staleness,
+//!   rejecting writes until `PROMOTE`.
 
 mod decay;
 mod engine;
@@ -42,6 +47,7 @@ pub use decay::DecayScheduler;
 pub use engine::{Engine, EngineStats};
 pub use protocol::{write_items_body, ItemsBody, Request, Response, MAX_WIRE_BATCH};
 pub use queue::BoundedQueue;
+pub(crate) use server::connect_backoff;
 pub use server::{Client, Server};
 
 #[cfg(test)]

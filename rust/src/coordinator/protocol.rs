@@ -16,6 +16,12 @@
 //! STATS                      engine statistics
 //! PING                       liveness check
 //! QUIT                       close the connection
+//! REPL HELLO <epoch> <n> <s1> ... <sn>
+//!                            subscribe as a follower: wal epoch plus one
+//!                            last-applied seq per shard. The connection
+//!                            then switches to the replication stream
+//!                            (DESIGN.md §5) instead of request/response.
+//! PROMOTE                    follower only: stop following, accept writes
 //! ```
 //!
 //! Responses: `OK ...`, `ITEMS <n> <dst>:<prob> ... cum=<c> scanned=<s>`,
@@ -44,12 +50,19 @@ pub enum Request {
     Stats,
     Ping,
     Quit,
+    /// Follower subscription: its WAL epoch and per-shard last seqs.
+    ReplHello { epoch: u64, last_seqs: Vec<u64> },
+    /// Flip a follower writable (leader failover).
+    Promote,
 }
 
 impl Request {
     pub fn parse(line: &str) -> Result<Request, String> {
         let mut it = line.split_ascii_whitespace();
         let cmd = it.next().ok_or("empty request")?;
+        // Subcommand token, consumed up front (the `num` closure below
+        // holds the iterator, so it cannot be advanced directly later).
+        let sub = if cmd == "REPL" { it.next() } else { None };
         let mut num = |name: &str| -> Result<u64, String> {
             it.next()
                 .ok_or(format!("{cmd}: missing {name}"))?
@@ -103,6 +116,19 @@ impl Request {
             "STATS" => Request::Stats,
             "PING" => Request::Ping,
             "QUIT" => Request::Quit,
+            "REPL" => match sub {
+                Some("HELLO") => {
+                    let epoch = num("epoch")?;
+                    let n = batch_len(num("shards")?).map_err(|e| format!("REPL: {e}"))?;
+                    let mut last_seqs = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        last_seqs.push(num("seq")?);
+                    }
+                    Request::ReplHello { epoch, last_seqs }
+                }
+                other => return Err(format!("REPL: unknown subcommand {other:?}")),
+            },
+            "PROMOTE" => Request::Promote,
             other => return Err(format!("unknown command {other:?}")),
         };
         if it.next().is_some() {
@@ -136,6 +162,14 @@ impl Request {
             Request::Stats => "STATS".into(),
             Request::Ping => "PING".into(),
             Request::Quit => "QUIT".into(),
+            Request::ReplHello { epoch, last_seqs } => {
+                let mut s = format!("REPL HELLO {epoch} {}", last_seqs.len());
+                for seq in last_seqs {
+                    let _ = write!(s, " {seq}");
+                }
+                s
+            }
+            Request::Promote => "PROMOTE".into(),
         }
     }
 }

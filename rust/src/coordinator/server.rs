@@ -18,6 +18,7 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::chain::Recommendation;
+use crate::replicate::ReplicaState;
 
 use super::engine::Engine;
 use super::protocol::{write_items_body, Request, Response, MAX_WIRE_BATCH};
@@ -28,11 +29,32 @@ pub struct Server {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     connections: Arc<AtomicUsize>,
+    /// Present when this process is a follower: dispatch enforces
+    /// read-only mode (until promotion) and STATS grows the role block.
+    replica: Option<Arc<ReplicaState>>,
 }
 
 impl Server {
     /// Bind to `addr` (use port 0 for an ephemeral port in tests).
     pub fn bind(engine: Arc<Engine>, addr: &str) -> Result<Server> {
+        Self::bind_role(engine, addr, None)
+    }
+
+    /// Bind a follower front-end: same protocol, but writes are rejected
+    /// while `replica` is unpromoted and STATS reports lag.
+    pub fn bind_replica(
+        engine: Arc<Engine>,
+        addr: &str,
+        replica: Arc<ReplicaState>,
+    ) -> Result<Server> {
+        Self::bind_role(engine, addr, Some(replica))
+    }
+
+    fn bind_role(
+        engine: Arc<Engine>,
+        addr: &str,
+        replica: Option<Arc<ReplicaState>>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let addr = listener.local_addr()?;
         Ok(Server {
@@ -41,6 +63,7 @@ impl Server {
             addr,
             stop: Arc::new(AtomicBool::new(false)),
             connections: Arc::new(AtomicUsize::new(0)),
+            replica,
         })
     }
 
@@ -67,9 +90,11 @@ impl Server {
                     let engine = Arc::clone(&self.engine);
                     let stop = Arc::clone(&self.stop);
                     let conns = Arc::clone(&self.connections);
+                    let replica = self.replica.clone();
                     conns.fetch_add(1, Ordering::Relaxed);
                     std::thread::spawn(move || {
-                        let _ = handle_connection(engine, stream, stop, Arc::clone(&conns));
+                        let _ =
+                            handle_connection(engine, stream, stop, Arc::clone(&conns), replica);
                         conns.fetch_sub(1, Ordering::Relaxed);
                     });
                 }
@@ -113,6 +138,7 @@ fn handle_connection(
     stream: TcpStream,
     stop: Arc<AtomicBool>,
     connections: Arc<AtomicUsize>,
+    replica: Option<Arc<ReplicaState>>,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -142,9 +168,31 @@ fn handle_connection(
                 writer.flush()?;
                 return Ok(());
             }
-            Ok(req) => {
-                dispatch(&engine, req, connections.load(Ordering::Relaxed), &mut rec, &mut resp)
+            Ok(Request::ReplHello { epoch, last_seqs }) => {
+                // The connection leaves request/response mode: the leader-
+                // side streamer owns it until the follower disconnects.
+                if replica.is_some() {
+                    writer.write_all(b"ERR cannot replicate from a follower\n")?;
+                    writer.flush()?;
+                    continue;
+                }
+                let _ = crate::replicate::serve_follower(
+                    &engine,
+                    &mut writer,
+                    epoch,
+                    last_seqs,
+                    &stop,
+                );
+                return Ok(());
             }
+            Ok(req) => dispatch(
+                &engine,
+                req,
+                connections.load(Ordering::Relaxed),
+                replica.as_deref(),
+                &mut rec,
+                &mut resp,
+            ),
         }
         resp.push('\n');
         writer.write_all(resp.as_bytes())?;
@@ -170,9 +218,31 @@ fn dispatch(
     engine: &Engine,
     req: Request,
     live_connections: usize,
+    replica: Option<&crate::replicate::ReplicaState>,
     rec: &mut Recommendation,
     out: &mut String,
 ) {
+    // An unpromoted follower serves every read but rejects mutations:
+    // writes belong on the leader, and an independent decay would diverge
+    // the replica (maintenance is not in the WAL). SAVE stays allowed —
+    // a local checkpoint of replicated state is how a follower bounds its
+    // own recovery time. `writable` (not just the promote latch) is the
+    // gate: writes open only after the apply plane drained, so a local
+    // write can't steal a queued replicated record's WAL seq.
+    let read_only = replica.is_some_and(|r| !r.writable());
+    if read_only
+        && matches!(
+            req,
+            Request::Observe { .. } | Request::ObserveBatch { .. } | Request::Decay
+        )
+    {
+        let _ = write!(
+            out,
+            "ERR read-only replica (following {}; PROMOTE to accept writes)",
+            replica.map(|r| r.leader()).unwrap_or("?")
+        );
+        return;
+    }
     match req {
         Request::Observe { src, dst } => {
             if engine.observe(src, dst) {
@@ -255,9 +325,94 @@ fn dispatch(
                 s.recovered_batches,
                 s.wal_errors
             );
+            // Replication coordinates (satellite of DESIGN.md §5): the WAL
+            // epoch + per-shard heads every lag computation starts from.
+            let _ = write!(out, " wal_epoch={} last_seqs=", s.wal_epoch);
+            if s.wal_last_seqs.is_empty() {
+                out.push('-');
+            } else {
+                for (i, seq) in s.wal_last_seqs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "{seq}");
+                }
+            }
+            if let Some(p) = engine.persist_state() {
+                let _ = write!(out, " repl_followers={}", p.pin_count());
+            }
+            if let Some(r) = replica {
+                let _ = write!(
+                    out,
+                    " role=follower leader={} connected={} promoted={} \
+                     snapshot_bootstrap={} lag_records={} lag_s={}",
+                    r.leader(),
+                    r.connected() as u8,
+                    r.promoted() as u8,
+                    r.snapshot_bootstrap() as u8,
+                    r.lag_records(),
+                    r.lag_seconds()
+                );
+                let bound = engine.replicate_config().max_lag_records;
+                if bound > 0 {
+                    let _ = write!(out, " lag_ok={}", (r.lag_records() <= bound) as u8);
+                }
+                if r.fault().is_some() {
+                    out.push_str(" repl_fault=1");
+                }
+            }
         }
         Request::Ping => out.push_str("OK pong"),
-        Request::Quit => unreachable!("handled by caller"),
+        Request::Promote => match replica {
+            Some(r) => {
+                r.promote();
+                // Reply only once writes are actually admitted: the link
+                // observes the latch, closes the queues, and the apply
+                // workers drain in-flight replicated records. Bounded so
+                // a wedged apply plane still answers.
+                let deadline =
+                    std::time::Instant::now() + std::time::Duration::from_secs(10);
+                while !r.writable() && std::time::Instant::now() < deadline {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                if r.writable() {
+                    out.push_str("OK promoted");
+                } else {
+                    out.push_str(
+                        "ERR promotion latched but the apply plane has not drained; retry",
+                    );
+                }
+            }
+            None => out.push_str("ERR not a follower"),
+        },
+        Request::Quit | Request::ReplHello { .. } => {
+            unreachable!("handled by caller")
+        }
+    }
+}
+
+/// Dial `addr`, retrying with exponential backoff (10 ms doubling to a
+/// 1 s cap) until `total` elapses. Shared by [`Client::connect_with_backoff`]
+/// and the follower's leader link — anything that must outlive a peer's
+/// restart window instead of failing on the first refused connection.
+pub(crate) fn connect_backoff(
+    addr: &str,
+    total: std::time::Duration,
+) -> std::io::Result<TcpStream> {
+    let deadline = std::time::Instant::now() + total;
+    let mut delay = std::time::Duration::from_millis(10);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(delay.min(deadline - now));
+                delay = (delay * 2).min(std::time::Duration::from_secs(1));
+            }
+        }
     }
 }
 
@@ -270,6 +425,15 @@ pub struct Client {
 impl Client {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: BufWriter::new(stream) })
+    }
+
+    /// [`Client::connect`] that keeps dialing with backoff until `total`
+    /// elapses — for peers that may still be starting (bench drivers, the
+    /// CLI poking a just-spawned server) or restarting mid-conversation.
+    pub fn connect_with_backoff(addr: &str, total: std::time::Duration) -> Result<Client> {
+        let stream = connect_backoff(addr, total).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true).ok();
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: BufWriter::new(stream) })
     }

@@ -326,6 +326,8 @@ fn protocol_request_roundtrip() {
         Request::Stats,
         Request::Ping,
         Request::Quit,
+        Request::ReplHello { epoch: 3, last_seqs: vec![17, 0, 42] },
+        Request::Promote,
     ] {
         assert_eq!(Request::parse(&req.encode()).unwrap(), req, "{req:?}");
     }
@@ -352,6 +354,12 @@ fn protocol_rejects_malformed() {
         "MTOPK 0 3",
         "MTOPK 2 3 7",          // truncated
         "MTOPK 1 3 7 8",        // trailing
+        "REPL",
+        "REPL GOODBYE",
+        "REPL HELLO 1",         // missing shard count
+        "REPL HELLO 1 2 5",     // truncated seq list
+        "REPL HELLO 1 1 5 6",   // trailing
+        "PROMOTE now",          // trailing
     ] {
         assert!(Request::parse(bad).is_err(), "{bad:?} should fail");
     }

@@ -15,6 +15,7 @@ pub mod metrics;
 pub mod persist;
 pub mod prioq;
 pub mod rcu;
+pub mod replicate;
 pub mod runtime;
 pub mod sync;
 pub mod testutil;

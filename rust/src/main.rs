@@ -32,6 +32,12 @@ fn app() -> App {
                         help: "WAL fsync policy: never|batch|always (overrides config)",
                         default: Some(""),
                     },
+                    Opt {
+                        name: "follow",
+                        help: "run as a read replica of this leader address: stream \
+                               its WAL, serve reads, reject writes until PROMOTE",
+                        default: Some(""),
+                    },
                 ],
                 positionals: vec![],
             },
@@ -82,6 +88,12 @@ fn app() -> App {
                         name: "durability",
                         help: "also run the durability sweep (WAL off/never/batch/always \
                                + recovery replay) and emit BENCH_durability.json",
+                        default: None,
+                    },
+                    Opt {
+                        name: "replication",
+                        help: "also run the replication bench (leader + streaming \
+                               follower, wire ingest) and emit BENCH_replication.json",
                         default: None,
                     },
                 ],
@@ -141,6 +153,11 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
         }
     }
     let workers = m.get_u64("workers").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(2) as usize;
+
+    // Follower mode: bootstrap from the leader, serve reads, track lag.
+    if let Some(leader) = m.get("follow").filter(|s| !s.is_empty()) {
+        return serve_follower(config, workers, leader, m.flag("no-decay"));
+    }
 
     // Durable path: recover (checkpoint + WAL replay) before serving.
     let persist_cfg = config.persist_config().map_err(|e| anyhow::anyhow!(e))?;
@@ -209,6 +226,80 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
             s.ckpt_age_s
         );
         let _ = &handle;
+    }
+}
+
+/// `mcprioq serve --follow <leader>`: run the follower plane (DESIGN.md
+/// §5) behind the normal TCP front-end in read-only mode. The decay
+/// scheduler stays off while following — maintenance is not in the WAL,
+/// so an independent decay would diverge the replica — and starts on
+/// promotion; the checkpoint scheduler runs as usual so a durable
+/// follower bounds its own recovery time.
+fn serve_follower(
+    config: ServerConfig,
+    workers: usize,
+    leader: &str,
+    no_decay: bool,
+) -> anyhow::Result<()> {
+    let persist_cfg = config.persist_config().map_err(|e| anyhow::anyhow!(e))?;
+    let handle = mcprioq::replicate::start_follower(config.clone(), workers, leader)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let engine = Arc::clone(&handle.engine);
+    let _checkpointer = match &persist_cfg {
+        Some(pcfg) => pcfg.checkpoint_interval.map(|interval| {
+            mcprioq::persist::CheckpointScheduler::start(Arc::clone(&engine), interval)
+        }),
+        None => None,
+    };
+    let server =
+        Server::bind_replica(Arc::clone(&engine), &config.listen, Arc::clone(&handle.state))?;
+    println!(
+        "mcprioq following {leader} on {} ({} shards, bootstrap={}, durability {})",
+        server.local_addr(),
+        engine.shard_count(),
+        if handle.state.snapshot_bootstrap() { "snapshot" } else { "log" },
+        match &persist_cfg {
+            Some(p) => p.data_dir.display().to_string(),
+            None => "off".to_string(),
+        }
+    );
+    let _handle = server.spawn();
+
+    let mut decay: Option<DecayScheduler> = None;
+    let mut promoted_seen = false;
+    let mut fault_reported = false;
+    let mut ticks = 0u64;
+    loop {
+        std::thread::sleep(Duration::from_secs(1));
+        // Promotion watch: once writable, this node is a leader — start
+        // the maintenance plane it was holding back.
+        if handle.state.promoted() && !promoted_seen {
+            promoted_seen = true;
+            println!("[replicate] promoted: accepting writes");
+            if let Some(interval) = config.decay_interval.filter(|_| !no_decay) {
+                decay = Some(DecayScheduler::start(Arc::clone(&engine), interval));
+            }
+        }
+        let _ = &decay;
+        if !fault_reported {
+            if let Some(fault) = handle.state.fault() {
+                eprintln!("[replicate] replication faulted: {fault} (reads still served)");
+                fault_reported = true;
+            }
+        }
+        ticks += 1;
+        if ticks % 10 == 0 {
+            let s = engine.stats();
+            println!(
+                "[stats] nodes={} edges={} queries={} lag_records={} lag_s={} connected={}",
+                s.nodes,
+                s.edges,
+                s.queries,
+                handle.state.lag_records(),
+                handle.state.lag_seconds(),
+                handle.state.connected(),
+            );
+        }
     }
 }
 
@@ -429,6 +520,39 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
             fmt_rate(probe.updates_per_s)
         );
         let p = dur_json.finish(&json_dir.join("BENCH_durability.json"))?;
+        println!("wrote {}", p.display());
+    }
+
+    // ---- replication bench: leader + streaming follower over the wire ----
+    if m.flag("replication") {
+        use mcprioq::bench_harness::replication_sweep;
+        use mcprioq::testutil::TempDir;
+        println!(
+            "mcprioq bench: replication, {threads} wire clients, {}ms window",
+            duration.as_millis()
+        );
+        let scratch = TempDir::new("bench-replication");
+        let probe = replication_sweep(&bench, duration, threads, shards, 256, scratch.path())
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let mut repl_json = JsonArtifact::new("replication");
+        repl_json.row(&[
+            ("threads", JsonVal::Int(threads as u64)),
+            ("leader_updates_per_s", JsonVal::Num(probe.leader_updates_per_s)),
+            ("follower_updates_per_s", JsonVal::Num(probe.follower_updates_per_s)),
+            ("steady_lag_records", JsonVal::Int(probe.steady_lag_records)),
+            ("catchup_secs", JsonVal::Num(probe.catchup_secs)),
+            ("converged", JsonVal::Bool(probe.converged)),
+        ]);
+        println!(
+            "  leader ingest {} | follower apply {} | steady lag {} records | \
+             catch-up {:.3}s | converged={}",
+            fmt_rate(probe.leader_updates_per_s),
+            fmt_rate(probe.follower_updates_per_s),
+            probe.steady_lag_records,
+            probe.catchup_secs,
+            probe.converged
+        );
+        let p = repl_json.finish(&json_dir.join("BENCH_replication.json"))?;
         println!("wrote {}", p.display());
     }
     Ok(())

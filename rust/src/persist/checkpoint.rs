@@ -159,9 +159,16 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
     // Truncation lags one generation: delete only segments covered by the
     // *previous* retained snapshot's cuts, so recovery can still fall back
     // to it (retention keeps two generations) without hitting a WAL hole.
+    // Connected followers pin the floor further: a segment a live
+    // replication stream hasn't fully sent yet is never deleted, so a slow
+    // follower lags instead of being forced into a snapshot resync.
     let trunc_cuts = persist.rotate_cuts(cuts.clone());
     let mut wal_freed = 0u64;
     for (shard, &cut) in trunc_cuts.iter().enumerate().take(nshards) {
+        let cut = match persist.pin_floor(shard) {
+            Some(floor) => cut.min(floor),
+            None => cut,
+        };
         wal_freed += persist
             .wal(shard)
             .truncate_upto(cut)
@@ -186,6 +193,38 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
         bytes: bytes.len() as u64,
         wal_freed,
     })
+}
+
+/// Install a leader-sent snapshot (checkpoint codec bytes) as this data
+/// dir's committed checkpoint: any local WAL and checkpoints are wiped —
+/// a follower bootstrapping from a snapshot supersedes whatever divergent
+/// or stale history it held — then the snapshot and a matching MANIFEST
+/// are committed atomically. [`super::open_engine`] afterwards recovers
+/// from it and arms the WAL writers at the embedded cut points, which is
+/// exactly where the leader resumes streaming. Returns `(epoch, cuts)`.
+pub fn install_snapshot(
+    pcfg: &super::PersistConfig,
+    generation: u64,
+    bytes: &[u8],
+) -> Result<(u64, Vec<u64>), String> {
+    let (epoch, cuts, _snap) =
+        codec::decode_snapshot(bytes).map_err(|e| format!("leader snapshot: {e}"))?;
+    let _ = fs::remove_dir_all(pcfg.wal_root());
+    let _ = fs::remove_dir_all(pcfg.checkpoint_dir());
+    let dir = pcfg.checkpoint_dir();
+    fs::create_dir_all(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let name = snapshot_name(generation);
+    write_atomic(&dir.join(&name), bytes).map_err(|e| format!("writing {name}: {e}"))?;
+    let manifest = Manifest {
+        generation,
+        epoch,
+        shards: cuts.len(),
+        snapshot: name,
+        wal_cuts: cuts.clone(),
+    };
+    write_atomic(&pcfg.manifest_path(), manifest.render().as_bytes())
+        .map_err(|e| format!("committing manifest: {e}"))?;
+    Ok((epoch, cuts))
 }
 
 /// Background checkpointer: fires every `checkpoint_interval` on an

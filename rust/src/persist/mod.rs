@@ -33,7 +33,7 @@ pub mod codec;
 mod recover;
 pub mod wal;
 
-pub use checkpoint::{run_checkpoint, CheckpointScheduler, CheckpointSummary};
+pub use checkpoint::{install_snapshot, run_checkpoint, CheckpointScheduler, CheckpointSummary};
 pub use recover::{open_engine, RecoveryReport};
 
 use std::path::{Path, PathBuf};
@@ -147,6 +147,11 @@ pub struct PersistState {
     errors: Counter,
     /// Batches replayed from the WAL at startup (recovery report, STATS).
     recovered_batches: u64,
+    /// Replication retention pins: per live follower stream, the per-shard
+    /// sequence number streamed so far. Checkpoint truncation never
+    /// deletes a segment a pinned follower still needs (DESIGN.md §5).
+    repl_pins: Mutex<Vec<(u64, Vec<u64>)>>,
+    next_pin: AtomicU64,
 }
 
 impl PersistState {
@@ -184,6 +189,8 @@ impl PersistState {
             appends: Counter::new(),
             errors: Counter::new(),
             recovered_batches,
+            repl_pins: Mutex::new(Vec::new()),
+            next_pin: AtomicU64::new(1),
         })
     }
 
@@ -217,6 +224,51 @@ impl PersistState {
 
     pub(crate) fn wal(&self, shard: usize) -> MutexGuard<'_, ShardWal> {
         lock_clean(&self.wals[shard])
+    }
+
+    /// Per-shard highest sequence number handed out so far (the WAL heads
+    /// replication streams toward, and the `last_seqs=` STATS gauge).
+    pub fn last_seqs(&self) -> Vec<u64> {
+        self.wals.iter().map(|w| lock_clean(w).last_seq()).collect()
+    }
+
+    /// Register a follower stream positioned at `seqs` (per shard, records
+    /// `<= seqs[i]` already streamed). Returns the pin id.
+    pub fn pin_create(&self, seqs: Vec<u64>) -> u64 {
+        let id = self.next_pin.fetch_add(1, Ordering::Relaxed);
+        lock_clean(&self.repl_pins).push((id, seqs));
+        id
+    }
+
+    /// Advance one shard of a pin as records are streamed.
+    pub fn pin_advance(&self, id: u64, shard: usize, seq: u64) {
+        let mut pins = lock_clean(&self.repl_pins);
+        if let Some((_, seqs)) = pins.iter_mut().find(|(p, _)| *p == id) {
+            if let Some(s) = seqs.get_mut(shard) {
+                *s = (*s).max(seq);
+            }
+        }
+    }
+
+    /// Drop a pin (follower disconnected). A disconnected follower's WAL
+    /// position is no longer protected; if truncation passes it before the
+    /// reconnect, the next handshake falls back to a snapshot bootstrap.
+    pub fn pin_drop(&self, id: u64) {
+        lock_clean(&self.repl_pins).retain(|(p, _)| *p != id);
+    }
+
+    /// Lowest pinned sequence for `shard` across live follower streams
+    /// (None = no followers; truncation is unconstrained).
+    pub fn pin_floor(&self, shard: usize) -> Option<u64> {
+        lock_clean(&self.repl_pins)
+            .iter()
+            .map(|(_, seqs)| seqs.get(shard).copied().unwrap_or(0))
+            .min()
+    }
+
+    /// Number of live follower streams (the `repl_followers=` gauge).
+    pub fn pin_count(&self) -> usize {
+        lock_clean(&self.repl_pins).len()
     }
 
     /// Live WAL bytes across all shards (appends minus truncations).

@@ -13,8 +13,9 @@
 //! empty model, epoch = newest wal/e<N> dir (or 1), cuts = zeros
 //!      │
 //!      ▼
-//! replay wal/e<epoch>/shard-*/: records with seq > cut, per-shard seq
-//! order, torn tail tolerated ──▶ import snapshot, apply tails direct
+//! import snapshot, then stream wal/e<epoch>/shard-*/ records with
+//! seq > cut through the apply path (per-shard seq order, record-by-record
+//! via `wal::WalCursor`, torn tail tolerated)
 //!      │
 //!      ▼
 //! shard layout unchanged?  ── yes ─▶ arm WAL writers at seq = last+1
@@ -87,11 +88,10 @@ pub fn open_engine(
     report.epoch = epoch;
     report.snapshot_nodes = snapshot.len();
 
-    // --- 2. WAL tails (collected per old shard, in seq order) ---
+    // --- 2. build the engine, then stream the WAL tails through it ---
     let epoch_dir = pcfg.epoch_dir(epoch);
     let shard_dirs = scan_shard_dirs(&epoch_dir)?;
     let old_shards = if cuts.is_empty() { shard_dirs.len() } else { cuts.len() };
-    let mut tails: Vec<Vec<(u64, u64)>> = Vec::with_capacity(shard_dirs.len());
     // Seed from the cuts so a shard whose WAL directory is missing (e.g.
     // wiped by hand) still resumes *above* its checkpointed seq instead of
     // re-issuing sequence numbers replay would then skip.
@@ -99,31 +99,30 @@ pub fn open_engine(
     for (seq, &cut) in last_seqs.iter_mut().zip(&cuts) {
         *seq = cut;
     }
+    let engine = Engine::new(config, workers);
+    engine.import_snapshot(&snapshot);
     for (shard, dir) in &shard_dirs {
         let cut = cuts.get(*shard).copied().unwrap_or(0);
-        let mut tail = Vec::new();
-        let stats = wal::replay_dir(dir, cut, |_seq, batch| tail.extend(batch))?;
+        // Record-by-record streaming replay: each WAL record goes straight
+        // through the apply path instead of being collected into a
+        // per-shard tail first, so recovery memory is bounded by one
+        // record, not by the time since the last checkpoint. Old shards
+        // hold disjoint src sets, so cross-shard order is irrelevant;
+        // within a shard the cursor yields apply order.
+        // `observe_batch_direct` re-routes by the *current* layout, which
+        // is what makes shard-count changes transparent here.
+        let stats = wal::replay_dir(dir, cut, |_seq, batch| {
+            engine.observe_batch_direct(&batch);
+        })?;
         report.replayed_batches += stats.batches;
         report.replayed_updates += stats.updates;
         report.torn_tails += stats.torn as usize;
         if *shard < last_seqs.len() {
             last_seqs[*shard] = stats.last_seq.max(cut);
         }
-        tails.push(tail);
     }
 
-    // --- 3. build + restore the engine ---
-    let engine = Engine::new(config, workers);
-    engine.import_snapshot(&snapshot);
-    for tail in &tails {
-        // Old shards hold disjoint src sets, so cross-shard order is
-        // irrelevant; within a shard the WAL is already in apply order.
-        // `observe_batch_direct` re-routes by the *current* layout, which
-        // is what makes shard-count changes transparent here.
-        engine.observe_batch_direct(tail);
-    }
-
-    // --- 4. arm the WAL writers ---
+    // --- 3. arm the WAL writers ---
     let nshards = engine.shard_count();
     report.layout_changed = old_shards != 0 && old_shards != nshards;
     if report.layout_changed {

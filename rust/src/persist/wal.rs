@@ -26,7 +26,7 @@
 //! checkpoints.
 
 use std::fs::{self, File, OpenOptions};
-use std::io::{self, Write as _};
+use std::io::{self, Read as _, Seek as _, SeekFrom, Write as _};
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
@@ -285,101 +285,296 @@ pub struct ReplayStats {
 /// the newest write position (see the module docs for why a torn tail in a
 /// non-final segment is still consistent); any sequence gap between
 /// segments is corruption and fails.
+///
+/// Thin wrapper over [`WalCursor`]: one pass until the cursor reports the
+/// end of the durable log. Unlike the cursor (whose `End` is retryable for
+/// live tailing), a single pass treats that end as final — exactly the
+/// recovery semantics.
 pub fn replay_dir(
     dir: &Path,
     cut: u64,
     mut sink: impl FnMut(u64, Vec<(u64, u64)>),
 ) -> Result<ReplayStats, String> {
-    let segs = scan_segments(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut cursor = WalCursor::new(dir.to_path_buf(), cut);
     let mut stats = ReplayStats::default();
-    // The oldest surviving segment must reach back to the cut, or batches
-    // in (cut, first_seq) are unrecoverable — seen when a checkpoint's
-    // truncation outran the snapshot being recovered from. Fail loudly
-    // rather than silently losing acked batches.
-    if let Some(first) = segs.first() {
-        if first.first_seq > cut.saturating_add(1) {
+    while let Some((seq, batch)) = cursor.poll()? {
+        stats.batches += 1;
+        stats.updates += batch.len() as u64;
+        sink(seq, batch);
+    }
+    stats.last_seq = cursor.last_seq();
+    stats.torn = cursor.torn();
+    Ok(stats)
+}
+
+/// Bytes read from a segment file per refill (bounds cursor memory while
+/// keeping recovery replay close to sequential-read speed).
+const CURSOR_READ_CHUNK: usize = 128 * 1024;
+
+/// Buffered reader over one segment file, restartable at its current
+/// offset — a partially visible frame is simply re-read on the next poll.
+struct SegReader {
+    file: File,
+    path: PathBuf,
+    first_seq: u64,
+    /// File offset of `buf[0]`.
+    base: u64,
+    buf: Vec<u8>,
+    /// Parse position within `buf`.
+    pos: usize,
+    magic_ok: bool,
+}
+
+impl SegReader {
+    fn open(info: &SegmentInfo) -> io::Result<SegReader> {
+        Ok(SegReader {
+            file: File::open(&info.path)?,
+            path: info.path.clone(),
+            first_seq: info.first_seq,
+            base: 0,
+            buf: Vec::new(),
+            pos: 0,
+            magic_ok: false,
+        })
+    }
+
+    /// Ensure at least `need` unparsed bytes are buffered; false when the
+    /// file (currently) ends before that — a live tail may grow later.
+    fn ensure(&mut self, need: usize) -> io::Result<bool> {
+        while self.buf.len() - self.pos < need {
+            let read_at = self.base + self.buf.len() as u64;
+            self.file.seek(SeekFrom::Start(read_at))?;
+            let mut chunk = [0u8; CURSOR_READ_CHUNK];
+            let n = self.file.read(&mut chunk)?;
+            if n == 0 {
+                return Ok(false);
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        Ok(true)
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+        // Cap retained memory: drop the parsed prefix once it grows.
+        if self.pos >= 1 << 20 {
+            self.base += self.pos as u64;
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Unparsed bytes currently visible past the last valid frame.
+    fn unparsed(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// One step of [`WalCursor::poll`] inside the current segment.
+enum Step {
+    Record(u64, Vec<(u64, u64)>),
+    /// The file ends mid-frame (for now): retryable on a live tail.
+    NeedMore,
+    /// Bytes are present but don't form the expected frame (bad magic/CRC/
+    /// seq). Also retryable on a live tail — a reader can observe a frame's
+    /// length header before its payload bytes land.
+    Bad,
+}
+
+/// Streaming reader over one shard's segmented log: yields records with
+/// `seq > cut` in sequence order, *without* materialising segments or the
+/// whole tail in memory. Built once, used twice (DESIGN.md §5): recovery
+/// drains it in a single pass ([`replay_dir`]), and the leader-side
+/// replication tailer keeps polling it as the live segment grows —
+/// `poll() == Ok(None)` means "caught up for now", and a later poll picks
+/// up newly appended frames or follows a rotation into the next segment.
+pub struct WalCursor {
+    dir: PathBuf,
+    cut: u64,
+    /// Sequence number the next valid frame must carry.
+    expected: u64,
+    seg: Option<SegReader>,
+    started: bool,
+    last_seq: u64,
+    torn: bool,
+}
+
+enum Advance {
+    Moved,
+    End,
+}
+
+impl WalCursor {
+    /// Cursor over `dir`, positioned to yield `cut + 1` first. Records up
+    /// to the cut are still frame-validated while being skipped.
+    pub fn new(dir: PathBuf, cut: u64) -> WalCursor {
+        WalCursor {
+            dir,
+            cut,
+            expected: cut.saturating_add(1),
+            seg: None,
+            started: false,
+            last_seq: 0,
+            torn: false,
+        }
+    }
+
+    /// Highest valid sequence number seen so far (0 = none).
+    pub fn last_seq(&self) -> u64 {
+        self.last_seq
+    }
+
+    /// Sequence number the next yielded record will carry.
+    pub fn next_seq(&self) -> u64 {
+        self.expected.max(self.cut.saturating_add(1))
+    }
+
+    /// Sticky: true once the cursor has observed a torn/corrupt frame at
+    /// some write position (recovery's "torn tail tolerated" flag). A live
+    /// tailer may set this transiently on a mid-write read.
+    pub fn torn(&self) -> bool {
+        self.torn
+    }
+
+    /// Next record with `seq > cut`, or `Ok(None)` when the durable log is
+    /// exhausted *for now*. Errors are real corruption (sequence gaps,
+    /// overlapping segments, WAL holes) — never a torn tail.
+    pub fn poll(&mut self) -> Result<Option<(u64, Vec<(u64, u64)>)>, String> {
+        loop {
+            if self.seg.is_none() && !self.open_first()? {
+                return Ok(None);
+            }
+            let seg = self.seg.as_mut().expect("segment open");
+            let step = read_step(seg, self.expected)
+                .map_err(|e| format!("{}: {e}", seg.path.display()))?;
+            match step {
+                Step::Record(seq, batch) => {
+                    self.expected = seq + 1;
+                    self.last_seq = seq;
+                    if seq > self.cut {
+                        return Ok(Some((seq, batch)));
+                    }
+                }
+                Step::NeedMore | Step::Bad => {
+                    let seg = self.seg.as_ref().expect("segment open");
+                    let trailing = matches!(step, Step::Bad)
+                        || seg.unparsed() > 0
+                        || !seg.magic_ok;
+                    match self.advance()? {
+                        Advance::Moved => {
+                            // The writer abandoned that tail (torn record,
+                            // or a restart continued in a fresh segment).
+                            self.torn |= trailing;
+                        }
+                        Advance::End => {
+                            self.torn |= trailing;
+                            return Ok(None);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Open the starting segment: the newest one whose first seq is `<=
+    /// cut + 1` (everything before it is fully covered by the cut). False
+    /// while the directory has no segments at all.
+    fn open_first(&mut self) -> Result<bool, String> {
+        debug_assert!(!self.started || self.seg.is_some());
+        let segs =
+            scan_segments(&self.dir).map_err(|e| format!("{}: {e}", self.dir.display()))?;
+        let Some(first) = segs.first() else {
+            return Ok(false);
+        };
+        // The oldest surviving segment must reach back to the cut, or
+        // batches in (cut, first_seq) are unrecoverable — seen when
+        // truncation outran the snapshot (or the follower) being caught
+        // up. Fail loudly rather than silently skipping acked batches.
+        if first.first_seq > self.cut.saturating_add(1) {
             return Err(format!(
-                "wal hole in {}: recovering from cut {cut} but the oldest segment starts at {}",
-                dir.display(),
+                "wal hole in {}: recovering from cut {} but the oldest segment starts at {}",
+                self.dir.display(),
+                self.cut,
                 first.first_seq
             ));
         }
+        let start = segs
+            .iter()
+            .rev()
+            .find(|s| s.first_seq <= self.cut.saturating_add(1))
+            .expect("checked first above");
+        self.expected = start.first_seq;
+        self.seg =
+            Some(SegReader::open(start).map_err(|e| format!("{}: {e}", start.path.display()))?);
+        self.started = true;
+        Ok(true)
     }
-    let mut expected: Option<u64> = None;
-    for seg in &segs {
-        if let Some(e) = expected {
-            if seg.first_seq > e {
-                return Err(format!(
-                    "wal gap in {}: expected seq {e}, next segment starts at {}",
-                    dir.display(),
-                    seg.first_seq
-                ));
-            }
-            if seg.first_seq < e {
-                return Err(format!(
-                    "overlapping wal segments in {}: seq {} after {}",
-                    dir.display(),
-                    seg.first_seq,
-                    e - 1
-                ));
-            }
+
+    /// The current segment is exhausted (cleanly or torn): move to the
+    /// successor iff it starts at exactly `expected`; report corruption on
+    /// any other successor; otherwise this is the end of the log for now.
+    fn advance(&mut self) -> Result<Advance, String> {
+        let cur_first = self.seg.as_ref().expect("segment open").first_seq;
+        let segs =
+            scan_segments(&self.dir).map_err(|e| format!("{}: {e}", self.dir.display()))?;
+        let Some(succ) = segs.iter().find(|s| s.first_seq > cur_first) else {
+            return Ok(Advance::End);
+        };
+        if succ.first_seq > self.expected {
+            return Err(format!(
+                "wal gap in {}: expected seq {}, next segment starts at {}",
+                self.dir.display(),
+                self.expected,
+                succ.first_seq
+            ));
         }
-        let bytes =
-            fs::read(&seg.path).map_err(|e| format!("{}: {e}", seg.path.display()))?;
-        if bytes.len() < SEGMENT_MAGIC.len() || &bytes[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
-            // Torn before the first record: no valid seqs in this file. A
-            // later segment (if any) must start at exactly this one's first
-            // seq — the gap check above enforces it next iteration.
-            stats.torn = true;
-            expected = Some(seg.first_seq);
-            continue;
+        if succ.first_seq < self.expected {
+            return Err(format!(
+                "overlapping wal segments in {}: seq {} after {}",
+                self.dir.display(),
+                succ.first_seq,
+                self.expected - 1
+            ));
         }
-        let mut pos = SEGMENT_MAGIC.len();
-        let mut seg_expected = seg.first_seq;
-        let mut torn = false;
-        while pos < bytes.len() {
-            if bytes.len() - pos < FRAME_HEADER {
-                torn = true;
-                break;
-            }
-            let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
-            let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
-            let start = pos + FRAME_HEADER;
-            if len > bytes.len() - start {
-                torn = true;
-                break;
-            }
-            let payload = &bytes[start..start + len];
-            if codec::crc32(payload) != crc {
-                torn = true;
-                break;
-            }
-            let (seq, batch) = match codec::decode_record(payload) {
-                Ok(r) => r,
-                Err(_) => {
-                    torn = true;
-                    break;
-                }
-            };
-            if seq != seg_expected {
-                torn = true;
-                break;
-            }
-            pos = start + len;
-            seg_expected = seq + 1;
-            stats.last_seq = seq;
-            if seq > cut {
-                stats.batches += 1;
-                stats.updates += batch.len() as u64;
-                sink(seq, batch);
-            }
-        }
-        // A torn tail is tolerated anywhere: either this was the newest
-        // write position (replay simply ends), or a restart continued in a
-        // later segment starting at exactly `seg_expected` — any other
-        // successor trips the gap check and fails recovery.
-        stats.torn |= torn;
-        expected = Some(seg_expected);
+        self.seg =
+            Some(SegReader::open(succ).map_err(|e| format!("{}: {e}", succ.path.display()))?);
+        Ok(Advance::Moved)
     }
-    Ok(stats)
+}
+
+/// Parse one frame at the reader's position; never consumes bytes unless a
+/// complete valid record is decoded, so every failure is retryable.
+fn read_step(seg: &mut SegReader, expected: u64) -> io::Result<Step> {
+    if !seg.magic_ok {
+        if !seg.ensure(SEGMENT_MAGIC.len())? {
+            return Ok(Step::NeedMore);
+        }
+        if &seg.buf[seg.pos..seg.pos + SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+            return Ok(Step::Bad);
+        }
+        seg.consume(SEGMENT_MAGIC.len());
+        seg.magic_ok = true;
+    }
+    if !seg.ensure(FRAME_HEADER)? {
+        return Ok(Step::NeedMore);
+    }
+    let len =
+        u32::from_le_bytes(seg.buf[seg.pos..seg.pos + 4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(seg.buf[seg.pos + 4..seg.pos + 8].try_into().unwrap());
+    if !seg.ensure(FRAME_HEADER + len)? {
+        return Ok(Step::NeedMore);
+    }
+    let payload = &seg.buf[seg.pos + FRAME_HEADER..seg.pos + FRAME_HEADER + len];
+    if codec::crc32(payload) != crc {
+        return Ok(Step::Bad);
+    }
+    let (seq, batch) = match codec::decode_record(payload) {
+        Ok(r) => r,
+        Err(_) => return Ok(Step::Bad),
+    };
+    if seq != expected {
+        return Ok(Step::Bad);
+    }
+    seg.consume(FRAME_HEADER + len);
+    Ok(Step::Record(seq, batch))
 }

@@ -1,0 +1,579 @@
+//! Follower side: the leader link and the per-shard apply workers behind
+//! `mcprioq serve --follow <addr>`.
+//!
+//! Startup ([`start_follower`], blocking):
+//!
+//! 1. Recover locally (normal `persist::open_engine` when a data dir is
+//!    configured) to learn the durable WAL epoch + per-shard last seqs.
+//! 2. Dial the leader (reconnect-with-backoff) and send `REPL HELLO`.
+//! 3. `RSTREAM` → keep the recovered engine and tail from where it is.
+//!    `RSNAP` → install the leader's snapshot as the local committed
+//!    checkpoint ([`crate::persist::install_snapshot`]), adopt the
+//!    leader's shard layout, and re-open the engine from it — bootstrap
+//!    is just recovery from a checkpoint that happened to arrive over the
+//!    wire, so there is exactly one restore path.
+//! 4. Spawn one apply worker per shard (record queue each) and the link
+//!    thread that feeds them.
+//!
+//! The link reconnects forever with backoff; every reconnect re-sends
+//! HELLO from the *durable* per-shard seqs, so records already queued but
+//! not yet applied are simply received twice and deduplicated by the
+//! worker's sequence check. A mid-life `RSNAP` (the leader truncated past
+//! us while we were gone) is a terminal fault — the engine is shared with
+//! the read path and cannot be swapped live; the operator restarts the
+//! follower and startup takes the snapshot path. Promotion (wire
+//! `PROMOTE`, or leader-loss auto-promotion when configured) latches
+//! [`ReplicaState::promoted`]; the link closes, the workers drain and
+//! exit, and the server starts accepting writes.
+
+use std::io::{self, BufRead, BufReader, Read, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::{ReplicateConfig, ServerConfig};
+use crate::coordinator::{connect_backoff, BoundedQueue, Engine, Request};
+use crate::persist::{codec, install_snapshot, open_engine};
+
+use super::{wire, ReplicaState};
+
+/// One streamed WAL record queued for its shard's apply worker.
+type ReplRecord = (u64, Vec<(u64, u64)>);
+
+/// Records buffered per shard between the link and its apply worker
+/// (records are whole leader batches, so this is a deep buffer; a full
+/// queue backpressures the link and, through TCP, the leader's tailer).
+const APPLY_QUEUE_RECORDS: usize = 1024;
+
+/// Read timeout of the link's stream socket: the poll cadence for stop /
+/// promotion / auto-promotion checks while the leader is quiet.
+const LINK_POLL: Duration = Duration::from_millis(100);
+
+/// How long a reconnect attempt dials before the outer loop re-checks
+/// promotion and tries again.
+const RECONNECT_DIAL: Duration = Duration::from_millis(500);
+
+/// A running follower: the engine serving reads, the shared replica
+/// state, and the replication machinery. Dropping it stops the link and
+/// the apply workers (the engine is left to its other owners).
+pub struct FollowerHandle {
+    pub engine: Arc<Engine>,
+    pub state: Arc<ReplicaState>,
+    stop: Arc<AtomicBool>,
+    queues: Vec<Arc<BoundedQueue<ReplRecord>>>,
+    link: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl FollowerHandle {
+    /// Ask the replication plane to stop (link + workers wind down).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for q in &self.queues {
+            q.close();
+        }
+    }
+
+    /// Promote this follower: stop following, accept writes. Idempotent.
+    pub fn promote(&self) {
+        self.state.promote();
+    }
+
+    /// Wait until every shard's applied seq reaches `target[shard]`
+    /// (false on timeout or a replication fault) — the tests' and smoke
+    /// jobs' "lag is 0 relative to a known leader position" barrier.
+    pub fn wait_caught_up(&self, target: &[u64], timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let applied = self.state.applied_seqs();
+            let done = target
+                .iter()
+                .enumerate()
+                .all(|(i, &t)| applied.get(i).copied().unwrap_or(0) >= t);
+            if done {
+                return true;
+            }
+            if self.state.fault().is_some() || Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+impl Drop for FollowerHandle {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.link.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start a follower against `leader`: bootstrap (possibly via snapshot),
+/// then stream. Blocks until the initial handshake succeeds or
+/// `replicate.connect_timeout` elapses. `config.shards` is adopted from
+/// the leader when a snapshot bootstrap replaces the local state.
+pub fn start_follower(
+    mut config: ServerConfig,
+    workers: usize,
+    leader: &str,
+) -> Result<FollowerHandle, String> {
+    let rcfg = config.replicate_config();
+
+    // --- 1. local recovery: what do we already have on disk? ---
+    let durable = config.persist_config()?.is_some();
+    let (mut engine, mut epoch, mut seqs) = if durable {
+        let (engine, _report) = open_engine(&config, workers)?;
+        let persist = engine.persist_state().expect("open_engine arms persistence");
+        let (e, s) = (persist.epoch(), persist.last_seqs());
+        (engine, e, s)
+    } else {
+        let engine = Engine::new(&config, workers);
+        let n = engine.shard_count();
+        (engine, 0, vec![0u64; n])
+    };
+
+    // --- 2. handshake ---
+    let stream = connect_backoff(leader, rcfg.connect_timeout)
+        .map_err(|e| format!("connecting to leader {leader}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(rcfg.connect_timeout)).ok();
+    let mut reader = BufReader::new(
+        stream.try_clone().map_err(|e| format!("cloning leader stream: {e}"))?,
+    );
+    send_hello(&stream, epoch, &seqs).map_err(|e| format!("sending HELLO: {e}"))?;
+    let header = read_stream_line(&mut reader, rcfg.connect_timeout)
+        .map_err(|e| format!("reading handshake reply: {e}"))?
+        .ok_or("leader closed the connection during the handshake")?;
+    let mut snapshot_bootstrap = false;
+    match wire::parse(&header)? {
+        wire::StreamMsg::Stream { epoch: lepoch, shards } => {
+            // The leader only grants log catch-up when epoch and layout
+            // already match; anything else here is a protocol bug.
+            if lepoch != epoch || shards != engine.shard_count() {
+                return Err(format!(
+                    "leader granted a stream for epoch {lepoch}/{shards} shards, \
+                     follower is at epoch {epoch}/{} shards",
+                    engine.shard_count()
+                ));
+            }
+        }
+        wire::StreamMsg::Snapshot { generation, bytes } => {
+            snapshot_bootstrap = true;
+            let blob =
+                read_blob_timeout(&mut reader, bytes, Instant::now() + rcfg.connect_timeout)
+                    .map_err(|e| format!("reading leader snapshot ({bytes} bytes): {e}"))?;
+            if durable {
+                // The divergent/stale local state is superseded: shut the
+                // engine down (releases its WAL writers), install the
+                // snapshot as the committed checkpoint, and recover from
+                // it — the one restore path, at its usual front door.
+                engine.shutdown();
+                drop(engine);
+                let pcfg = config
+                    .persist_config()?
+                    .expect("durable follower has a persist config");
+                let (snap_epoch, cuts) = install_snapshot(&pcfg, generation, &blob)?;
+                config.shards = cuts.len();
+                let (reopened, _report) = open_engine(&config, workers)?;
+                epoch = snap_epoch;
+                seqs = cuts;
+                engine = reopened;
+            } else {
+                let (snap_epoch, cuts, snap) = codec::decode_snapshot(&blob)
+                    .map_err(|e| format!("leader snapshot: {e}"))?;
+                if engine.shard_count() != cuts.len() {
+                    engine.shutdown();
+                    drop(engine);
+                    config.shards = cuts.len();
+                    engine = Engine::new(&config, workers);
+                }
+                engine.import_snapshot(&snap);
+                epoch = snap_epoch;
+                seqs = cuts;
+            }
+        }
+        wire::StreamMsg::Err(e) => return Err(format!("leader rejected HELLO: {e}")),
+        other => return Err(format!("unexpected handshake reply {other:?}")),
+    }
+
+    // --- 3. replication machinery ---
+    let state = Arc::new(ReplicaState::new(leader.to_string(), epoch, &seqs));
+    if snapshot_bootstrap {
+        state.set_snapshot_bootstrap();
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let queues: Vec<Arc<BoundedQueue<ReplRecord>>> = (0..engine.shard_count())
+        .map(|_| Arc::new(BoundedQueue::new(APPLY_QUEUE_RECORDS)))
+        .collect();
+    let mut worker_handles = Vec::with_capacity(queues.len());
+    for (shard, queue) in queues.iter().enumerate() {
+        let queue = Arc::clone(queue);
+        let engine = Arc::clone(&engine);
+        let state = Arc::clone(&state);
+        // Counted before the spawn so `writable()` can never observe a
+        // half-started apply plane as "drained".
+        state.worker_started();
+        worker_handles
+            .push(std::thread::spawn(move || apply_loop(shard, queue, engine, state)));
+    }
+    stream.set_read_timeout(Some(LINK_POLL)).ok();
+    let link = {
+        let engine = Arc::clone(&engine);
+        let state = Arc::clone(&state);
+        let stop = Arc::clone(&stop);
+        let queues = queues.clone();
+        let leader = leader.to_string();
+        std::thread::spawn(move || {
+            link_loop(leader, engine, state, queues, stop, rcfg, Some(reader))
+        })
+    };
+
+    Ok(FollowerHandle {
+        engine,
+        state,
+        stop,
+        queues,
+        link: Some(link),
+        workers: worker_handles,
+    })
+}
+
+fn send_hello(mut stream: &TcpStream, epoch: u64, seqs: &[u64]) -> io::Result<()> {
+    let mut line = Request::ReplHello { epoch, last_seqs: seqs.to_vec() }.encode();
+    line.push('\n');
+    stream.write_all(line.as_bytes())?;
+    stream.flush()
+}
+
+/// Decrements [`ReplicaState`]'s worker count however the apply loop
+/// exits (drain, fault, even panic) so promotion's write gate opens.
+struct WorkerGuard<'a>(&'a ReplicaState);
+
+impl Drop for WorkerGuard<'_> {
+    fn drop(&mut self) {
+        self.0.worker_finished();
+    }
+}
+
+/// One shard's apply worker: dequeue records in order, verify sequence
+/// contiguity (duplicates from reconnect overlap are skipped), and apply
+/// through the engine's replicated-apply path. Any divergence is a
+/// terminal fault — applying past it would corrupt the replica.
+fn apply_loop(
+    shard: usize,
+    queue: Arc<BoundedQueue<ReplRecord>>,
+    engine: Arc<Engine>,
+    state: Arc<ReplicaState>,
+) {
+    let _done = WorkerGuard(&state);
+    loop {
+        let records = queue.pop_batch_timeout(32, Duration::from_millis(20));
+        if records.is_empty() {
+            if queue.is_closed() {
+                return;
+            }
+            continue;
+        }
+        for (seq, batch) in records {
+            let applied = state.applied(shard);
+            if seq <= applied {
+                continue; // reconnect overlap: already applied (and logged)
+            }
+            if seq != applied + 1 {
+                state.set_fault(format!(
+                    "shard {shard}: expected replicated seq {}, got {seq}",
+                    applied + 1
+                ));
+                return;
+            }
+            if let Err(e) = engine.apply_replicated(shard, seq, &batch) {
+                state.set_fault(e);
+                return;
+            }
+            state.note_applied(shard, seq, batch.len());
+        }
+    }
+}
+
+/// The leader link: consume the stream, fan records out to the shard
+/// queues, reconnect (with fresh HELLO negotiation) on any disconnect.
+fn link_loop(
+    leader: String,
+    engine: Arc<Engine>,
+    state: Arc<ReplicaState>,
+    queues: Vec<Arc<BoundedQueue<ReplRecord>>>,
+    stop: Arc<AtomicBool>,
+    rcfg: ReplicateConfig,
+    mut conn: Option<BufReader<TcpStream>>,
+) {
+    let finished = |state: &ReplicaState| {
+        stop.load(Ordering::SeqCst) || state.promoted() || state.fault().is_some()
+    };
+    while !finished(&state) {
+        let reader = match conn.take() {
+            Some(r) => r,
+            None => {
+                if let Some(grace) = rcfg.auto_promote {
+                    if state.contact_age() >= grace {
+                        eprintln!(
+                            "[replicate] no leader contact for {:.1?}; auto-promoting",
+                            state.contact_age()
+                        );
+                        state.promote();
+                        break;
+                    }
+                }
+                match reconnect(&leader, &engine, &state) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        // Transient (leader still down) — unless reconnect
+                        // latched a fault (snapshot resync required).
+                        if state.fault().is_some() {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(200));
+                        continue;
+                    }
+                }
+            }
+        };
+        state.set_connected(true);
+        state.note_contact();
+        consume_stream(reader, &state, &queues, rcfg.auto_promote, &finished);
+        state.set_connected(false);
+    }
+    state.set_connected(false);
+    for q in &queues {
+        q.close();
+    }
+}
+
+/// Read stream lines until disconnect or shutdown. Partial lines survive
+/// read timeouts (the buffer is only cleared after a full line), so the
+/// poll cadence never tears a record.
+fn consume_stream(
+    mut reader: BufReader<TcpStream>,
+    state: &ReplicaState,
+    queues: &[Arc<BoundedQueue<ReplRecord>>],
+    auto_promote: Option<Duration>,
+    finished: &dyn Fn(&ReplicaState) -> bool,
+) {
+    let mut line = String::with_capacity(4096);
+    loop {
+        if finished(state) {
+            return;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // leader closed
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    return; // EOF mid-line
+                }
+                let msg = wire::parse(line.trim_end());
+                line.clear();
+                match msg {
+                    Ok(wire::StreamMsg::Record { shard, seq, pairs }) => {
+                        state.note_contact();
+                        if shard >= queues.len() {
+                            state.set_fault(format!(
+                                "leader streamed shard {shard}, follower has {}",
+                                queues.len()
+                            ));
+                            return;
+                        }
+                        state.note_head(shard, seq);
+                        if !push_with_backpressure(&queues[shard], (seq, pairs), state, finished)
+                        {
+                            return;
+                        }
+                    }
+                    Ok(wire::StreamMsg::Heartbeat { heads }) => {
+                        state.note_contact();
+                        for (shard, head) in heads.iter().enumerate() {
+                            if shard < queues.len() {
+                                state.note_head(shard, *head);
+                            }
+                        }
+                    }
+                    Ok(wire::StreamMsg::Err(e)) => {
+                        // Stream aborted server-side (e.g. WAL truncated
+                        // under the tailer): reconnect renegotiates.
+                        eprintln!("[replicate] leader aborted stream: {e}");
+                        return;
+                    }
+                    Ok(other) => {
+                        state.set_fault(format!("unexpected mid-stream message {other:?}"));
+                        return;
+                    }
+                    Err(e) => {
+                        eprintln!("[replicate] unparseable stream line: {e}");
+                        return;
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                // Poll tick; partial line (if any) is preserved. The
+                // auto-promotion clock must run here too: a partitioned
+                // or wedged leader can leave the socket open but silent
+                // for far longer than any failover budget.
+                if let Some(grace) = auto_promote {
+                    if state.contact_age() >= grace {
+                        eprintln!(
+                            "[replicate] no leader contact for {:.1?}; auto-promoting",
+                            state.contact_age()
+                        );
+                        state.promote();
+                        return;
+                    }
+                }
+                continue;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Blocking push with an escape hatch: applies backpressure to the link
+/// (and through TCP to the leader) while still honouring shutdown,
+/// promotion, and faults.
+fn push_with_backpressure(
+    queue: &BoundedQueue<ReplRecord>,
+    mut record: ReplRecord,
+    state: &ReplicaState,
+    finished: &dyn Fn(&ReplicaState) -> bool,
+) -> bool {
+    loop {
+        match queue.try_push(record) {
+            Ok(()) => return true,
+            Err(back) => {
+                if finished(state) || queue.is_closed() {
+                    return false;
+                }
+                record = back;
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+/// Redo the handshake after a disconnect, from the *durable* positions.
+/// A snapshot demand here is terminal (see the module docs).
+fn reconnect(
+    leader: &str,
+    engine: &Arc<Engine>,
+    state: &ReplicaState,
+) -> Result<BufReader<TcpStream>, String> {
+    let stream =
+        connect_backoff(leader, RECONNECT_DIAL).map_err(|e| format!("dial: {e}"))?;
+    stream.set_nodelay(true).ok();
+    let seqs = match engine.persist_state() {
+        Some(p) => p.last_seqs(),
+        None => state.applied_seqs(),
+    };
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    send_hello(&stream, state.epoch(), &seqs).map_err(|e| format!("HELLO: {e}"))?;
+    let mut reader =
+        BufReader::new(stream.try_clone().map_err(|e| format!("clone: {e}"))?);
+    let header = read_stream_line(&mut reader, Duration::from_secs(5))
+        .map_err(|e| format!("handshake reply: {e}"))?
+        .ok_or("leader closed during handshake")?;
+    match wire::parse(&header).map_err(|e| format!("handshake reply: {e}"))? {
+        wire::StreamMsg::Stream { .. } => {
+            stream.set_read_timeout(Some(LINK_POLL)).ok();
+            Ok(reader)
+        }
+        wire::StreamMsg::Snapshot { .. } => {
+            state.set_fault(
+                "leader requires a snapshot resync (WAL truncated past this \
+                 follower); restart the follower to bootstrap"
+                    .to_string(),
+            );
+            Err("snapshot resync required".to_string())
+        }
+        wire::StreamMsg::Err(e) => Err(format!("leader rejected HELLO: {e}")),
+        other => Err(format!("unexpected handshake reply {other:?}")),
+    }
+}
+
+/// Read one `\n`-terminated line, tolerating read-timeout ticks until
+/// `timeout` elapses. `Ok(None)` = orderly EOF before any byte.
+fn read_stream_line(
+    reader: &mut BufReader<TcpStream>,
+    timeout: Duration,
+) -> io::Result<Option<String>> {
+    let deadline = Instant::now() + timeout;
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(if line.is_empty() { None } else { Some(line) }),
+            Ok(_) => {
+                if line.ends_with('\n') {
+                    line.truncate(line.trim_end().len());
+                    return Ok(Some(line));
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut
+                    || e.kind() == io::ErrorKind::Interrupted =>
+            {
+                if Instant::now() >= deadline {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "timed out waiting for the leader's reply",
+                    ));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Read exactly `len` bytes in bounded chunks, tolerating read-timeout
+/// ticks until `deadline`. The buffer grows only as data actually
+/// arrives, so a corrupt or hostile `RSNAP` length header cannot force a
+/// huge up-front allocation (the `wire` module's cap invariant, extended
+/// to the one length field that is legitimately unbounded).
+fn read_blob_timeout(
+    reader: &mut impl Read,
+    len: u64,
+    deadline: Instant,
+) -> io::Result<Vec<u8>> {
+    const CHUNK: usize = 1 << 20;
+    let mut blob = Vec::with_capacity(len.min(16 << 20) as usize);
+    let mut chunk = vec![0u8; (len as usize).clamp(1, CHUNK)];
+    while (blob.len() as u64) < len {
+        let want = ((len - blob.len() as u64) as usize).min(chunk.len());
+        match reader.read(&mut chunk[..want]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "leader closed mid-snapshot",
+                ))
+            }
+            Ok(n) => blob.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut
+                    || e.kind() == io::ErrorKind::Interrupted =>
+            {
+                if Instant::now() >= deadline {
+                    return Err(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(blob)
+}

@@ -1,0 +1,219 @@
+//! Leader side: turn one server connection into a replication stream.
+//!
+//! The server's connection handler calls [`serve_follower`] when it parses
+//! a `REPL HELLO`; from then on the connection is push-only until the
+//! follower disconnects (detected via write failure) or the server stops.
+//!
+//! Negotiation (DESIGN.md §5 bootstrap state machine):
+//!
+//! ```text
+//! HELLO(epoch, seqs) ──▶ epoch/shard-count match AND every shard's WAL
+//!                        reaches back to seqs[i]+1 AND total lag within
+//!                        replicate.snapshot_records?
+//!        │ yes                                │ no
+//!        ▼                                    ▼
+//! RSTREAM, tail from seqs          RSNAP + checkpoint-codec bytes of a
+//!                                  freshly paused export, tail from its
+//!                                  embedded cut points
+//! ```
+//!
+//! The stream itself is `wal::WalCursor` polling per shard: sealed
+//! segments first, then the live tail as the ingest workers grow it. A
+//! retention pin registered with [`PersistState`] keeps checkpoints from
+//! truncating segments this follower hasn't received yet; the pin dies
+//! with the connection.
+
+use std::io::{self, BufWriter, Write as _};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Engine;
+use crate::persist::wal::WalCursor;
+use crate::persist::{codec, PersistState};
+
+use super::wire;
+
+/// Records drained per shard per scheduling round (fairness bound: one
+/// hot shard can't starve the others' cursors).
+const RECORDS_PER_ROUND: usize = 64;
+
+/// Idle poll cadence when every cursor is caught up — the floor of an
+/// exponential backoff (each empty round doubles the sleep up to
+/// [`IDLE_POLL_MAX`], reset by traffic), so a quiet stream costs a
+/// handful of directory rescans per second instead of hundreds.
+const IDLE_POLL: Duration = Duration::from_millis(2);
+
+/// Idle backoff ceiling: worst-case extra delivery latency after a quiet
+/// spell, well under the heartbeat cadence.
+const IDLE_POLL_MAX: Duration = Duration::from_millis(64);
+
+/// Drops the follower's WAL retention pin when the stream ends, however
+/// it ends.
+struct PinGuard {
+    persist: Arc<PersistState>,
+    id: u64,
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        self.persist.pin_drop(self.id);
+    }
+}
+
+/// Serve one follower on an accepted connection. Returns when the
+/// follower disconnects, the stream hits unrecoverable WAL corruption
+/// (reported as an `ERR` line), or the server stops. I/O errors are the
+/// normal "follower went away" exit and are returned to the caller.
+pub fn serve_follower(
+    engine: &Arc<Engine>,
+    writer: &mut BufWriter<TcpStream>,
+    hello_epoch: u64,
+    hello_seqs: Vec<u64>,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    let mut line = String::with_capacity(4096);
+    let Some(persist) = engine.persist_state().map(Arc::clone) else {
+        writer.write_all(b"ERR replication requires a data dir on the leader\n")?;
+        writer.flush()?;
+        return Ok(());
+    };
+    let nshards = engine.shard_count();
+    let epoch = persist.epoch();
+
+    // Pin first, then decide: the pin blocks truncation from racing the
+    // availability check below. (A checkpoint already mid-truncation can
+    // still win that race; the cursor then reports a WAL hole, the stream
+    // ends with ERR, and the follower's reconnect handshake lands in the
+    // snapshot path — self-healing, just slower.)
+    let pin = PinGuard {
+        id: persist.pin_create(if hello_seqs.len() == nshards {
+            hello_seqs.clone()
+        } else {
+            vec![0; nshards]
+        }),
+        persist: Arc::clone(&persist),
+    };
+
+    let heads = persist.last_seqs();
+    let mut snapshot = hello_epoch != epoch || hello_seqs.len() != nshards;
+    if !snapshot {
+        let lag: u64 = heads
+            .iter()
+            .zip(&hello_seqs)
+            .map(|(h, s)| h.saturating_sub(*s))
+            .sum();
+        let threshold = engine.replicate_config().snapshot_records;
+        snapshot = threshold > 0 && lag > threshold;
+    }
+    if !snapshot {
+        // Log catch-up needs every shard's WAL to reach back to the
+        // follower's position (truncation may have passed a follower that
+        // was disconnected for a while).
+        for (shard, (&head, &seq)) in heads.iter().zip(&hello_seqs).enumerate() {
+            if head == seq {
+                continue; // nothing to stream; availability is irrelevant
+            }
+            let dir = persist.config().shard_dir(epoch, shard);
+            let segs = crate::persist::wal::scan_segments(&dir)
+                .map_err(|e| io::Error::other(format!("{}: {e}", dir.display())))?;
+            match segs.first() {
+                Some(first) if first.first_seq <= seq + 1 => {}
+                _ => {
+                    snapshot = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    let start_seqs = if snapshot {
+        // A freshly paused export is self-consistent with its cut points:
+        // streaming resumes at exactly cuts + 1, no matter how far the
+        // last durable checkpoint lags.
+        let (cuts, export) = engine.with_ingest_paused(|| {
+            (persist.last_seqs(), engine.export())
+        });
+        let bytes = codec::encode_snapshot(epoch, &cuts, &export);
+        line.clear();
+        wire::write_snapshot_header(&mut line, persist.generation(), bytes.len() as u64);
+        line.push('\n');
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(&bytes)?;
+        writer.flush()?;
+        for (shard, &seq) in cuts.iter().enumerate() {
+            pin.persist.pin_advance(pin.id, shard, seq);
+        }
+        cuts
+    } else {
+        line.clear();
+        wire::write_stream_header(&mut line, epoch, nshards);
+        line.push('\n');
+        writer.write_all(line.as_bytes())?;
+        writer.flush()?;
+        hello_seqs
+    };
+
+    let mut cursors: Vec<WalCursor> = start_seqs
+        .iter()
+        .enumerate()
+        .map(|(shard, &seq)| WalCursor::new(persist.config().shard_dir(epoch, shard), seq))
+        .collect();
+
+    let heartbeat = engine.replicate_config().heartbeat;
+    // First heartbeat goes out immediately: it carries the heads a just-
+    // bootstrapped follower needs to report lag before any record lands.
+    line.clear();
+    wire::write_heartbeat(&mut line, &persist.last_seqs());
+    line.push('\n');
+    writer.write_all(line.as_bytes())?;
+    writer.flush()?;
+    let mut last_hb = Instant::now();
+    let mut idle = IDLE_POLL;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let mut sent = 0usize;
+        for (shard, cursor) in cursors.iter_mut().enumerate() {
+            for _ in 0..RECORDS_PER_ROUND {
+                match cursor.poll() {
+                    Ok(Some((seq, batch))) => {
+                        line.clear();
+                        wire::write_record(&mut line, shard, seq, &batch);
+                        line.push('\n');
+                        writer.write_all(line.as_bytes())?;
+                        pin.persist.pin_advance(pin.id, shard, seq);
+                        sent += 1;
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        // Real corruption (or truncation won the pin race):
+                        // abort the stream; the follower renegotiates.
+                        let _ = writer.write_all(format!("ERR {e}\n").as_bytes());
+                        let _ = writer.flush();
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        if sent > 0 {
+            writer.flush()?;
+        }
+        if last_hb.elapsed() >= heartbeat {
+            line.clear();
+            wire::write_heartbeat(&mut line, &persist.last_seqs());
+            line.push('\n');
+            writer.write_all(line.as_bytes())?;
+            writer.flush()?;
+            last_hb = Instant::now();
+        }
+        if sent == 0 {
+            std::thread::sleep(idle);
+            idle = (idle * 2).min(IDLE_POLL_MAX);
+        } else {
+            idle = IDLE_POLL;
+        }
+    }
+}

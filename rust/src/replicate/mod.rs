@@ -1,0 +1,239 @@
+//! Replication: stream the per-shard WAL to followers for warm standby
+//! and scale-out replica reads (DESIGN.md §5).
+//!
+//! PR 3's segmented per-shard WAL is a ready-made replication log: every
+//! acked batch is already a framed, CRC'd, sequence-numbered record on
+//! disk. This subsystem adds the two halves that turn it into a
+//! leader/follower plane:
+//!
+//! * [`leader`] — per-follower streaming, driven by `wal::WalCursor`
+//!   (sealed segments + the live tail of each shard). The handshake
+//!   (`REPL HELLO` with wal-epoch + per-shard last seqs) decides between
+//!   log catch-up and a snapshot bootstrap via the checkpoint codec;
+//!   connected followers pin WAL truncation so a slow follower lags
+//!   instead of being forced into a resync.
+//! * [`follower`] — `mcprioq serve --follow <addr>`: per-shard apply
+//!   workers feed each streamed record through
+//!   `Engine::apply_replicated` (local WAL append, then in-memory apply,
+//!   both under the ingest gate), so a follower with a data dir is
+//!   itself durable and a promoted follower recovers like any leader.
+//!   Reads (TOPK/MTOPK/REC/STATS) are served throughout; writes are
+//!   rejected until `PROMOTE` (or leader-loss auto-promotion).
+//!
+//! Correctness model: MCPrioQ's lookups are approximately correct under
+//! concurrent updates by design (§II of the paper) — a reader may observe
+//! any recent prefix of the update stream. A follower lagging by `k` WAL
+//! records serves answers from exactly such a prefix, so replica reads
+//! carry the *same* relaxed semantics as leader reads, just with a larger
+//! (bounded, observable) staleness window: `lag_records`/`lag_s` in
+//! STATS. At quiescence (leader idle, lag 0) follower and leader are
+//! byte-identical — the differential tests in `rust/tests/replication.rs`
+//! assert exactly that.
+
+mod follower;
+mod leader;
+pub mod wire;
+
+pub use follower::{start_follower, FollowerHandle};
+pub use leader::serve_follower;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::metrics::Counter;
+
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Shared state of one follower process: per-shard replication positions,
+/// leader heads, link liveness, and the promotion latch. The server's
+/// dispatch reads it for read-only enforcement and the STATS role block;
+/// the link and apply workers write it.
+pub struct ReplicaState {
+    leader: String,
+    /// Leader WAL epoch this follower tracks (HELLO argument).
+    epoch: AtomicU64,
+    /// Per-shard last applied (and locally logged) sequence number.
+    applied: Vec<AtomicU64>,
+    /// Per-shard leader head, from heartbeats and streamed records.
+    heads: Vec<AtomicU64>,
+    /// Per-shard instant the shard was last fully caught up — the basis of
+    /// the `lag_s` bounded-staleness gauge.
+    caught_up_at: Vec<Mutex<Instant>>,
+    last_contact: Mutex<Instant>,
+    connected: AtomicBool,
+    promoted: AtomicBool,
+    /// Apply workers still running. Writes are admitted only once this
+    /// drains after promotion: a local write must not race a queued
+    /// replicated record for the next WAL sequence number.
+    active_workers: AtomicUsize,
+    /// True when this follower bootstrapped via snapshot (vs pure log).
+    snapshot_bootstrap: AtomicBool,
+    /// Fatal apply/stream fault (sequence divergence, local WAL failure):
+    /// the link stops and the operator must restart the follower.
+    fault: Mutex<Option<String>>,
+    records: Counter,
+    updates: Counter,
+}
+
+impl ReplicaState {
+    pub fn new(leader: String, epoch: u64, start_seqs: &[u64]) -> ReplicaState {
+        ReplicaState {
+            leader,
+            epoch: AtomicU64::new(epoch),
+            applied: start_seqs.iter().map(|&s| AtomicU64::new(s)).collect(),
+            heads: start_seqs.iter().map(|&s| AtomicU64::new(s)).collect(),
+            caught_up_at: start_seqs.iter().map(|_| Mutex::new(Instant::now())).collect(),
+            last_contact: Mutex::new(Instant::now()),
+            connected: AtomicBool::new(false),
+            promoted: AtomicBool::new(false),
+            active_workers: AtomicUsize::new(0),
+            snapshot_bootstrap: AtomicBool::new(false),
+            fault: Mutex::new(None),
+            records: Counter::new(),
+            updates: Counter::new(),
+        }
+    }
+
+    pub fn leader(&self) -> &str {
+        &self.leader
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.applied.len()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    pub fn applied_seqs(&self) -> Vec<u64> {
+        self.applied.iter().map(|a| a.load(Ordering::Acquire)).collect()
+    }
+
+    pub fn applied(&self, shard: usize) -> u64 {
+        self.applied[shard].load(Ordering::Acquire)
+    }
+
+    /// Records/updates applied through the replication link so far.
+    pub fn applied_records(&self) -> u64 {
+        self.records.get()
+    }
+
+    pub fn applied_updates(&self) -> u64 {
+        self.updates.get()
+    }
+
+    /// An apply worker finished record `seq` on `shard`.
+    pub(crate) fn note_applied(&self, shard: usize, seq: u64, updates: usize) {
+        self.applied[shard].store(seq, Ordering::Release);
+        self.records.inc();
+        self.updates.add(updates as u64);
+        if seq >= self.heads[shard].load(Ordering::Acquire) {
+            *lock_clean(&self.caught_up_at[shard]) = Instant::now();
+        }
+    }
+
+    /// The link learned the leader's current head for `shard`. Heads never
+    /// regress — an old heartbeat can arrive after a newer record.
+    pub(crate) fn note_head(&self, shard: usize, head: u64) {
+        self.heads[shard].fetch_max(head, Ordering::AcqRel);
+        if self.applied(shard) >= self.heads[shard].load(Ordering::Acquire) {
+            *lock_clean(&self.caught_up_at[shard]) = Instant::now();
+        }
+    }
+
+    pub(crate) fn note_contact(&self) {
+        *lock_clean(&self.last_contact) = Instant::now();
+    }
+
+    pub(crate) fn set_connected(&self, up: bool) {
+        self.connected.store(up, Ordering::Release);
+    }
+
+    pub fn connected(&self) -> bool {
+        self.connected.load(Ordering::Acquire)
+    }
+
+    /// Seconds since the link last heard from the leader (records or
+    /// heartbeats) — the auto-promotion clock.
+    pub fn contact_age(&self) -> std::time::Duration {
+        lock_clean(&self.last_contact).elapsed()
+    }
+
+    /// Total records this follower still trails the leader by.
+    pub fn lag_records(&self) -> u64 {
+        self.heads
+            .iter()
+            .zip(&self.applied)
+            .map(|(h, a)| {
+                h.load(Ordering::Acquire).saturating_sub(a.load(Ordering::Acquire))
+            })
+            .sum()
+    }
+
+    /// Worst-shard staleness in seconds: 0 while caught up, else how long
+    /// the most-behind shard has been behind. Together with `lag_records`
+    /// this is the bounded-staleness statement replica reads carry.
+    pub fn lag_seconds(&self) -> u64 {
+        let mut worst = 0u64;
+        for (i, (h, a)) in self.heads.iter().zip(&self.applied).enumerate() {
+            if h.load(Ordering::Acquire) > a.load(Ordering::Acquire) {
+                worst = worst.max(lock_clean(&self.caught_up_at[i]).elapsed().as_secs());
+            }
+        }
+        worst
+    }
+
+    pub(crate) fn set_snapshot_bootstrap(&self) {
+        self.snapshot_bootstrap.store(true, Ordering::Release);
+    }
+
+    pub fn snapshot_bootstrap(&self) -> bool {
+        self.snapshot_bootstrap.load(Ordering::Acquire)
+    }
+
+    /// Latch promotion. Idempotent; the link and apply workers observe the
+    /// latch and wind down (the link closes the leader connection, workers
+    /// drain their queues and exit). Writes are admitted only once that
+    /// wind-down completes — see [`ReplicaState::writable`].
+    pub fn promote(&self) {
+        self.promoted.store(true, Ordering::Release);
+    }
+
+    pub fn promoted(&self) -> bool {
+        self.promoted.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn worker_started(&self) {
+        self.active_workers.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub(crate) fn worker_finished(&self) {
+        self.active_workers.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// True once this node may accept writes: promotion latched AND the
+    /// apply plane fully drained. Gating on the drain (not just the
+    /// latch) keeps a just-promoted node's first local write from
+    /// stealing the WAL sequence number of a still-queued replicated
+    /// record, which would fault the apply worker and drop the rest of
+    /// the received history.
+    pub fn writable(&self) -> bool {
+        self.promoted() && self.active_workers.load(Ordering::Acquire) == 0
+    }
+
+    pub(crate) fn set_fault(&self, msg: String) {
+        eprintln!("[replicate] follower fault: {msg}");
+        lock_clean(&self.fault).get_or_insert(msg);
+    }
+
+    pub fn fault(&self) -> Option<String> {
+        lock_clean(&self.fault).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,94 @@
+//! Replication unit tests: stream grammar round trips and the replica
+//! lag/promotion bookkeeping. The cross-process differentials (follower ==
+//! leader, kill-the-leader, snapshot bootstrap) live in
+//! `rust/tests/replication.rs`.
+
+use super::wire::{self, StreamMsg};
+use super::ReplicaState;
+
+#[test]
+fn stream_grammar_roundtrip() {
+    let mut line = String::new();
+    wire::write_record(&mut line, 3, 42, &[(1, 2), (9, 7)]);
+    assert_eq!(line, "RREC 3 42 2 1 2 9 7");
+    assert_eq!(
+        wire::parse(&line).unwrap(),
+        StreamMsg::Record { shard: 3, seq: 42, pairs: vec![(1, 2), (9, 7)] }
+    );
+
+    line.clear();
+    wire::write_heartbeat(&mut line, &[5, 0, 17]);
+    assert_eq!(line, "RHB 3 5 0 17");
+    assert_eq!(wire::parse(&line).unwrap(), StreamMsg::Heartbeat { heads: vec![5, 0, 17] });
+
+    line.clear();
+    wire::write_stream_header(&mut line, 2, 8);
+    assert_eq!(wire::parse(&line).unwrap(), StreamMsg::Stream { epoch: 2, shards: 8 });
+
+    line.clear();
+    wire::write_snapshot_header(&mut line, 7, 4096);
+    assert_eq!(
+        wire::parse(&line).unwrap(),
+        StreamMsg::Snapshot { generation: 7, bytes: 4096 }
+    );
+
+    assert_eq!(wire::parse("ERR wal hole somewhere").unwrap(),
+               StreamMsg::Err("wal hole somewhere".to_string()));
+}
+
+#[test]
+fn stream_grammar_rejects_malformed() {
+    assert!(wire::parse("").is_err());
+    assert!(wire::parse("RREC 0 1").is_err()); // missing count
+    assert!(wire::parse("RREC 0 1 2 5 6").is_err()); // truncated pair list
+    assert!(wire::parse("RREC 0 1 1 5 6 7").is_err()); // trailing args
+    assert!(wire::parse("RHB 2 1").is_err()); // short head list
+    assert!(wire::parse("RREC 0 1 99999999 1 2").is_err()); // count over cap
+    assert!(wire::parse("WAT 1 2").is_err());
+}
+
+#[test]
+fn replica_state_lag_accounting() {
+    let state = ReplicaState::new("127.0.0.1:1".into(), 1, &[10, 20]);
+    assert_eq!(state.lag_records(), 0);
+    assert_eq!(state.applied_seqs(), vec![10, 20]);
+
+    // Leader runs ahead: heads move, applied lags.
+    state.note_head(0, 13);
+    state.note_head(1, 20);
+    assert_eq!(state.lag_records(), 3);
+    // Heads never regress (an old heartbeat can arrive after a record).
+    state.note_head(0, 11);
+    assert_eq!(state.lag_records(), 3);
+
+    state.note_applied(0, 11, 4);
+    state.note_applied(0, 12, 1);
+    assert_eq!(state.lag_records(), 1);
+    assert_eq!(state.applied_records(), 2);
+    assert_eq!(state.applied_updates(), 5);
+    state.note_applied(0, 13, 1);
+    assert_eq!(state.lag_records(), 0);
+    assert_eq!(state.lag_seconds(), 0, "caught up => no staleness");
+    assert_eq!(state.applied_seqs(), vec![13, 20]);
+}
+
+#[test]
+fn replica_state_promotion_and_fault_latch() {
+    let state = ReplicaState::new("x".into(), 1, &[0]);
+    assert!(!state.promoted());
+    state.worker_started();
+    state.promote();
+    state.promote(); // idempotent
+    assert!(state.promoted());
+    // The write gate opens only once the apply plane drains: a local
+    // write must not race a queued replicated record for a WAL seq.
+    assert!(!state.writable(), "apply worker still active");
+    state.worker_finished();
+    assert!(state.writable());
+
+    assert!(state.fault().is_none());
+    state.set_fault("first".into());
+    state.set_fault("second".into());
+    // First fault wins: it is the root cause.
+    assert_eq!(state.fault().as_deref(), Some("first"));
+}

@@ -1,0 +1,113 @@
+//! The replication stream grammar (leader → follower, one message per
+//! line, after the follower's `REPL HELLO` request):
+//!
+//! ```text
+//! RSTREAM <epoch> <nshards>        log catch-up granted: records follow,
+//!                                  starting at the HELLO seqs + 1
+//! RSNAP <generation> <nbytes>      snapshot bootstrap: <nbytes> of raw
+//!                                  checkpoint-codec bytes follow on the
+//!                                  wire, then records from the embedded
+//!                                  cut points
+//! RREC <shard> <seq> <n> <s1> <d1> ... <sn> <dn>
+//!                                  one WAL record of shard <shard>
+//! RHB <nshards> <h1> ... <hn>      heartbeat: the leader's current WAL
+//!                                  head per shard (lag = head - applied)
+//! ERR <message>                    stream abort (connection closes)
+//! ```
+//!
+//! The record payload reuses the line-protocol conventions (`OBSERVEB`
+//! pair lists, `MAX_WIRE_BATCH` cap) so the follower's parser hardening is
+//! identical to the server's.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::MAX_WIRE_BATCH;
+
+/// One parsed stream line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamMsg {
+    Stream { epoch: u64, shards: usize },
+    Snapshot { generation: u64, bytes: u64 },
+    Record { shard: usize, seq: u64, pairs: Vec<(u64, u64)> },
+    Heartbeat { heads: Vec<u64> },
+    Err(String),
+}
+
+/// Append one `RREC` line (no trailing newline) to `out`.
+pub fn write_record(out: &mut String, shard: usize, seq: u64, pairs: &[(u64, u64)]) {
+    let _ = write!(out, "RREC {shard} {seq} {}", pairs.len());
+    for (src, dst) in pairs {
+        let _ = write!(out, " {src} {dst}");
+    }
+}
+
+/// Append one `RHB` line (no trailing newline) to `out`.
+pub fn write_heartbeat(out: &mut String, heads: &[u64]) {
+    let _ = write!(out, "RHB {}", heads.len());
+    for h in heads {
+        let _ = write!(out, " {h}");
+    }
+}
+
+pub fn write_stream_header(out: &mut String, epoch: u64, shards: usize) {
+    let _ = write!(out, "RSTREAM {epoch} {shards}");
+}
+
+pub fn write_snapshot_header(out: &mut String, generation: u64, bytes: u64) {
+    let _ = write!(out, "RSNAP {generation} {bytes}");
+}
+
+/// Parse one stream line. Counts are capped at [`MAX_WIRE_BATCH`] so a
+/// corrupt or hostile leader can't make the follower allocate unboundedly
+/// from one header token.
+pub fn parse(line: &str) -> Result<StreamMsg, String> {
+    let mut it = line.split_ascii_whitespace();
+    let cmd = it.next().ok_or("empty stream line")?;
+    let mut num = |name: &str| -> Result<u64, String> {
+        it.next()
+            .ok_or(format!("{cmd}: missing {name}"))?
+            .parse::<u64>()
+            .map_err(|_| format!("{cmd}: bad {name}"))
+    };
+    let count = |n: u64| -> Result<usize, String> {
+        if n > MAX_WIRE_BATCH as u64 {
+            return Err(format!("count {n} exceeds max {MAX_WIRE_BATCH}"));
+        }
+        Ok(n as usize)
+    };
+    let msg = match cmd {
+        "RSTREAM" => StreamMsg::Stream {
+            epoch: num("epoch")?,
+            shards: count(num("shards")?).map_err(|e| format!("RSTREAM: {e}"))?,
+        },
+        "RSNAP" => StreamMsg::Snapshot { generation: num("generation")?, bytes: num("bytes")? },
+        "RREC" => {
+            let shard = num("shard")? as usize;
+            let seq = num("seq")?;
+            let n = count(num("count")?).map_err(|e| format!("RREC: {e}"))?;
+            let mut pairs = Vec::with_capacity(n);
+            for _ in 0..n {
+                pairs.push((num("src")?, num("dst")?));
+            }
+            StreamMsg::Record { shard, seq, pairs }
+        }
+        "RHB" => {
+            let n = count(num("count")?).map_err(|e| format!("RHB: {e}"))?;
+            let mut heads = Vec::with_capacity(n);
+            for _ in 0..n {
+                heads.push(num("head")?);
+            }
+            StreamMsg::Heartbeat { heads }
+        }
+        "ERR" => {
+            return Ok(StreamMsg::Err(
+                line.strip_prefix("ERR").unwrap_or("").trim().to_string(),
+            ))
+        }
+        other => return Err(format!("unknown stream message {other:?}")),
+    };
+    if it.next().is_some() {
+        return Err(format!("{cmd}: trailing arguments"));
+    }
+    Ok(msg)
+}

@@ -1,0 +1,337 @@
+//! Replication differentials (DESIGN.md §5):
+//!
+//! * Full-stream equality: a follower that consumed the whole stream is
+//!   export-identical (`export_quiesced`) to the leader once it reports
+//!   lag 0, across 1/2/8 shard layouts; reads are served with the same
+//!   answers, writes are rejected until `PROMOTE`.
+//! * Kill-the-leader: a follower cut off mid-stream holds exactly a
+//!   per-shard prefix of the leader's acked WAL, keeps serving reads, and
+//!   catches back up after the leader restarts on the same address.
+//! * Snapshot bootstrap: a follower joining after the leader truncated
+//!   its early segments boots via the checkpoint codec and converges to
+//!   the same state as one that consumed the stream from seq 1.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mcprioq::config::{PersistSection, ReplicateSection, ServerConfig};
+use mcprioq::coordinator::{Client, Engine, Request, Response, Server};
+use mcprioq::persist::{open_engine, wal};
+use mcprioq::replicate::{start_follower, FollowerHandle};
+use mcprioq::testutil::{Rng64, TempDir};
+
+/// A skewed stream with frequent same-src runs (as the persist tests use).
+fn stream(len: usize, seed: u64) -> Vec<(u64, u64)> {
+    let mut rng = Rng64::new(seed);
+    let mut out = Vec::with_capacity(len);
+    let mut src = 0u64;
+    for i in 0..len {
+        if i % 4 == 0 {
+            src = rng.next_below(48);
+        }
+        let u = rng.next_f64();
+        out.push((src, ((u * u) * 96.0) as u64));
+    }
+    out
+}
+
+fn durable_config(dir: &std::path::Path, shards: usize) -> ServerConfig {
+    ServerConfig {
+        shards,
+        queue_capacity: 4_096,
+        persist: PersistSection {
+            data_dir: dir.to_string_lossy().into_owned(),
+            fsync: "never".into(),
+            checkpoint_interval_ms: 0,
+            ..PersistSection::default()
+        },
+        replicate: ReplicateSection {
+            // Fast heartbeats keep the lag gauges fresh in short tests.
+            heartbeat_ms: 25,
+            connect_timeout_ms: 10_000,
+            ..ReplicateSection::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Reserve an address the test can re-bind after a "crash" (the follower
+/// reconnects to a fixed leader address, so port 0 won't do).
+fn reserve_addr() -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    addr
+}
+
+/// Block until the leader's WAL heads are fully applied by the follower.
+fn catch_up(leader: &Engine, follower: &FollowerHandle, timeout: Duration) {
+    let target = leader.stats().wal_last_seqs;
+    assert!(
+        follower.wait_caught_up(&target, timeout),
+        "follower stuck behind {target:?} at {:?} (fault: {:?})",
+        follower.state.applied_seqs(),
+        follower.state.fault()
+    );
+}
+
+#[test]
+fn follower_full_stream_matches_leader_across_layouts() {
+    for shards in [1usize, 2, 8] {
+        let ltmp = TempDir::new("repl-leader");
+        let ftmp = TempDir::new("repl-follower");
+        let lcfg = durable_config(ltmp.path(), shards);
+        let (leader, _) = open_engine(&lcfg, 2).unwrap();
+        let server = Server::bind(Arc::clone(&leader), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let _lh = server.spawn();
+
+        let follower =
+            start_follower(durable_config(ftmp.path(), shards), 1, &addr).unwrap();
+        assert!(!follower.state.snapshot_bootstrap(), "{shards} shards: log catch-up");
+
+        // Feed the leader over the wire while the follower streams live.
+        let mut client = Client::connect(&addr).unwrap();
+        let pairs = stream(20_000, 0xAB5 + shards as u64);
+        for chunk in pairs.chunks(997) {
+            assert_eq!(client.observe_batch(chunk).unwrap(), chunk.len());
+        }
+        leader.quiesce();
+        catch_up(&leader, &follower, Duration::from_secs(20));
+
+        // The acceptance bar: byte-identical quiesced exports.
+        assert_eq!(
+            leader.export_quiesced(),
+            follower.engine.export_quiesced(),
+            "{shards} shards"
+        );
+
+        // The follower front-end serves the same reads, rejects writes,
+        // and reports its role.
+        let fsrv = Server::bind_replica(
+            Arc::clone(&follower.engine),
+            "127.0.0.1:0",
+            Arc::clone(&follower.state),
+        )
+        .unwrap();
+        let faddr = fsrv.local_addr();
+        let _fh = fsrv.spawn();
+        let mut fclient = Client::connect(faddr).unwrap();
+        let hot = pairs[0].0;
+        assert_eq!(
+            fclient.topk(hot, 5).unwrap(),
+            client.topk(hot, 5).unwrap(),
+            "{shards} shards replica read"
+        );
+        match fclient.request(&Request::ObserveBatch { pairs: vec![(1, 2)] }).unwrap() {
+            Response::Err(e) => assert!(e.contains("read-only"), "{e}"),
+            other => panic!("write on follower must fail, got {other:?}"),
+        }
+        let stats = fclient.stats().unwrap();
+        assert!(stats.contains("role=follower"), "{stats}");
+        assert!(stats.contains("lag_records=0"), "{stats}");
+        assert!(stats.contains("wal_epoch=1"), "{stats}");
+        let lstats = client.stats().unwrap();
+        assert!(lstats.contains("repl_followers=1"), "{lstats}");
+
+        follower.engine.shutdown();
+        leader.shutdown();
+    }
+}
+
+#[test]
+fn promote_flips_follower_writable() {
+    let ltmp = TempDir::new("promote-leader");
+    let ftmp = TempDir::new("promote-follower");
+    let (leader, _) = open_engine(&durable_config(ltmp.path(), 2), 2).unwrap();
+    let server = Server::bind(Arc::clone(&leader), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let _lh = server.spawn();
+
+    // PROMOTE against a leader is a clean error.
+    let mut lclient = Client::connect(&addr).unwrap();
+    match lclient.request(&Request::Promote).unwrap() {
+        Response::Err(e) => assert!(e.contains("not a follower"), "{e}"),
+        other => panic!("expected ERR, got {other:?}"),
+    }
+
+    let follower = start_follower(durable_config(ftmp.path(), 2), 1, &addr).unwrap();
+    lclient.observe_batch(&stream(2_000, 0x9E)).unwrap();
+    leader.quiesce();
+    catch_up(&leader, &follower, Duration::from_secs(10));
+
+    let fsrv = Server::bind_replica(
+        Arc::clone(&follower.engine),
+        "127.0.0.1:0",
+        Arc::clone(&follower.state),
+    )
+    .unwrap();
+    let faddr = fsrv.local_addr();
+    let _fh = fsrv.spawn();
+    let mut fclient = Client::connect(faddr).unwrap();
+    assert!(matches!(
+        fclient.request(&Request::ObserveBatch { pairs: vec![(7, 8)] }).unwrap(),
+        Response::Err(_)
+    ));
+    match fclient.request(&Request::Promote).unwrap() {
+        Response::Ok(msg) => assert!(msg.contains("promoted"), "{msg}"),
+        other => panic!("expected OK, got {other:?}"),
+    }
+    // Writes now land: the promoted follower is a leader with the
+    // replicated history plus its own WAL continuation. Src 1000 is
+    // outside the replicated stream's range, so the top-1 is exact.
+    assert_eq!(fclient.observe_batch(&[(1000, 8), (1000, 8), (1000, 9)]).unwrap(), 3);
+    follower.engine.quiesce();
+    let top = fclient.topk(1000, 1).unwrap();
+    assert_eq!(top[0].0, 8);
+    let stats = fclient.stats().unwrap();
+    assert!(stats.contains("promoted=1"), "{stats}");
+
+    follower.engine.shutdown();
+    leader.shutdown();
+}
+
+#[test]
+fn leader_crash_leaves_prefix_then_reconnect_converges() {
+    let ltmp = TempDir::new("crash-leader");
+    let ftmp = TempDir::new("crash-follower");
+    let addr = reserve_addr();
+    let shards = 2usize;
+    let lcfg = durable_config(ltmp.path(), shards);
+    let pairs = stream(24_000, 0xDEAD);
+    let (half_a, half_b) = pairs.split_at(pairs.len() / 2);
+
+    let (leader, _) = open_engine(&lcfg, 2).unwrap();
+    let server = Server::bind(Arc::clone(&leader), &addr).unwrap();
+    let lh = server.spawn();
+    let follower = start_follower(durable_config(ftmp.path(), shards), 1, &addr).unwrap();
+
+    // Feed and kill mid-stream: no quiesce barrier for the follower, the
+    // stream just stops wherever it stops.
+    for chunk in half_a.chunks(503) {
+        assert_eq!(leader.observe_batch(chunk), chunk.len());
+    }
+    leader.quiesce(); // leader-side only: every fed batch is acked + logged
+    let leader_seqs = leader.stats().wal_last_seqs;
+    drop(lh); // stop flag: streamer threads exit, connection drops
+    leader.shutdown();
+    drop(leader);
+
+    // The follower notices, keeps serving, and settles on a prefix.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while follower.state.connected() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(!follower.state.connected(), "follower must notice the dead leader");
+    let mut applied = follower.state.applied_seqs();
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        let again = follower.state.applied_seqs();
+        if again == applied {
+            break;
+        }
+        applied = again;
+    }
+    for (shard, (&got, &acked)) in applied.iter().zip(&leader_seqs).enumerate() {
+        assert!(got <= acked, "shard {shard}: follower at {got}, leader acked {acked}");
+    }
+
+    // Prefix check: the follower equals a reference fed exactly the WAL
+    // records it applied, per shard, straight from the leader's log.
+    let reference = Engine::new(
+        &ServerConfig { shards, queue_capacity: 4_096, ..Default::default() },
+        0,
+    );
+    for (shard, &upto) in applied.iter().enumerate() {
+        let dir = ltmp.join(&format!("wal/e1/shard-{shard:04}"));
+        wal::replay_dir(&dir, 0, |seq, batch| {
+            if seq <= upto {
+                reference.observe_batch_direct(&batch);
+            }
+        })
+        .unwrap();
+    }
+    assert_eq!(follower.engine.export_quiesced(), reference.export());
+    reference.shutdown();
+
+    // Restart the leader on the same address: recovery + reconnect, then
+    // the second half flows and both sides converge.
+    let (leader, report) = open_engine(&lcfg, 2).unwrap();
+    assert!(report.replayed_batches > 0);
+    let server = Server::bind(Arc::clone(&leader), &addr).unwrap();
+    let _lh = server.spawn();
+    let mut client = Client::connect_with_backoff(&addr, Duration::from_secs(5)).unwrap();
+    for chunk in half_b.chunks(503) {
+        assert_eq!(client.observe_batch(chunk).unwrap(), chunk.len());
+    }
+    leader.quiesce();
+    catch_up(&leader, &follower, Duration::from_secs(20));
+    assert_eq!(leader.export_quiesced(), follower.engine.export_quiesced());
+    assert!(follower.state.fault().is_none());
+
+    follower.engine.shutdown();
+    leader.shutdown();
+}
+
+#[test]
+fn snapshot_bootstrap_matches_full_stream_follower() {
+    let ltmp = TempDir::new("snap-leader");
+    let btmp = TempDir::new("snap-follower-b");
+    let atmp = TempDir::new("snap-follower-a");
+    let shards = 2usize;
+    let mut lcfg = durable_config(ltmp.path(), shards);
+    // Tiny segments so checkpoint truncation actually removes early ones.
+    lcfg.persist.segment_bytes = 2_048;
+
+    let (leader, _) = open_engine(&lcfg, 2).unwrap();
+    let server = Server::bind(Arc::clone(&leader), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let _lh = server.spawn();
+
+    // Follower B consumes the stream from seq 1.
+    let follower_b = start_follower(durable_config(btmp.path(), shards), 1, &addr).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    client.observe_batch(&stream(10_000, 0x50AB)).unwrap();
+    leader.quiesce();
+    catch_up(&leader, &follower_b, Duration::from_secs(20));
+
+    // Two checkpoints: lag-one truncation then deletes segments below the
+    // first generation's cuts, leaving a WAL that no longer reaches seq 1.
+    leader.checkpoint().unwrap();
+    let summary = leader.checkpoint().unwrap();
+    assert!(summary.wal_freed > 0, "truncation must have removed early segments");
+    let truncated = (0..shards).any(|shard| {
+        let dir = ltmp.join(&format!("wal/e1/shard-{shard:04}"));
+        wal::scan_segments(&dir)
+            .unwrap()
+            .first()
+            .is_some_and(|s| s.first_seq > 1)
+    });
+    assert!(truncated, "expected at least one shard to lose its seq-1 segment");
+
+    // Follower A joins now: log catch-up is impossible, so the handshake
+    // must take the snapshot path.
+    let follower_a = start_follower(durable_config(atmp.path(), shards), 1, &addr).unwrap();
+    assert!(follower_a.state.snapshot_bootstrap(), "expected snapshot bootstrap");
+    assert!(!follower_b.state.snapshot_bootstrap());
+
+    // More traffic after the bootstrap, then everything converges.
+    client.observe_batch(&stream(4_000, 0x50AC)).unwrap();
+    leader.quiesce();
+    catch_up(&leader, &follower_a, Duration::from_secs(20));
+    catch_up(&leader, &follower_b, Duration::from_secs(20));
+    let reference = leader.export_quiesced();
+    assert_eq!(follower_a.engine.export_quiesced(), reference, "snapshot+stream");
+    assert_eq!(follower_b.engine.export_quiesced(), reference, "stream from seq 1");
+
+    // A promoted snapshot-bootstrapped follower is durable on its own:
+    // reopening its data dir without any leader reproduces the state.
+    follower_a.stop();
+    drop(follower_a);
+    let (reopened, _) = open_engine(&durable_config(atmp.path(), shards), 0).unwrap();
+    assert_eq!(reopened.export(), reference, "follower data dir recovers standalone");
+    reopened.shutdown();
+
+    follower_b.engine.shutdown();
+    leader.shutdown();
+}
