@@ -392,6 +392,112 @@ pub fn durability_sweep(
     Ok((rows, probe))
 }
 
+/// Result of the checkpoint-cost probe ([`checkpoint_cost_probe`]): the
+/// acceptance metric of incremental checkpoints — differential bytes must
+/// scale with the nodes dirtied since the base, not the model size — plus
+/// the decay-replay equality gate (recovery with a logged decay record
+/// must equal a never-crashed reference; the CI bench smoke fails on a
+/// miss).
+pub struct CheckpointCostProbe {
+    pub model_nodes: usize,
+    /// Encoded size of the full base snapshot.
+    pub full_bytes: u64,
+    /// Nodes re-dirtied between the base and the differential.
+    pub dirty_nodes: usize,
+    /// Encoded size of the differential generation.
+    pub delta_bytes: u64,
+    /// `delta_bytes / full_bytes` — compare against `dirty_nodes /
+    /// model_nodes` (equal up to per-node size variance).
+    pub delta_vs_full: f64,
+    /// Post-crash recovery (checkpoint chain + WAL tail with a decay
+    /// record in it) equals the never-crashed reference export.
+    pub decay_replay_ok: bool,
+}
+
+/// Build a durable engine with `nodes` src nodes, take a full checkpoint,
+/// dirty `dirty_fraction` of the nodes, take a differential checkpoint,
+/// then decay + trickle + crash + recover and compare against the live
+/// reference. `root` must be a scratch directory.
+pub fn checkpoint_cost_probe(
+    shards: usize,
+    nodes: usize,
+    dirty_fraction: f64,
+    root: &std::path::Path,
+) -> Result<CheckpointCostProbe, String> {
+    use crate::config::{PersistSection, ServerConfig};
+
+    let nodes = nodes.max(16);
+    let config = ServerConfig {
+        shards: shards.max(1),
+        queue_capacity: 65_536,
+        persist: PersistSection {
+            data_dir: root.join("ckpt-cost").to_string_lossy().into_owned(),
+            fsync: "never".into(),
+            // The probe drives checkpoints explicitly.
+            checkpoint_interval_ms: 0,
+            ..PersistSection::default()
+        },
+        ..Default::default()
+    };
+    let (engine, _) = crate::persist::open_engine(&config, 2)?;
+
+    // Queued ingest (not the direct path): WAL appends happen on the
+    // worker apply path, and the probe is about durable artifacts.
+    let mut batch = Vec::with_capacity(1024);
+    for src in 0..nodes as u64 {
+        for k in 1..=4u64 {
+            batch.push((src, src + k));
+            if batch.len() == 1024 {
+                engine.observe_batch(&batch);
+                batch.clear();
+            }
+        }
+    }
+    engine.observe_batch(&batch);
+    engine.quiesce();
+    let full = engine.checkpoint()?;
+    if full.kind != "full" {
+        return Err(format!("first checkpoint was {}, expected full", full.kind));
+    }
+
+    let dirty_nodes = ((nodes as f64 * dirty_fraction).ceil() as usize).clamp(1, nodes);
+    let touch: Vec<(u64, u64)> = (0..dirty_nodes as u64).map(|src| (src, src + 1)).collect();
+    engine.observe_batch(&touch);
+    engine.quiesce();
+    let delta = engine.checkpoint()?;
+    if delta.kind != "delta" {
+        return Err(format!(
+            "second checkpoint was {} ({} dirty of {}), expected delta",
+            delta.kind, dirty_nodes, nodes
+        ));
+    }
+
+    // Decay-replay gate: logged maintenance + a post-checkpoint tail must
+    // recover byte-identically to the never-crashed state.
+    engine.decay();
+    engine.observe_batch(&touch);
+    engine.quiesce();
+    let reference = engine.export_quiesced();
+    engine.shutdown();
+    drop(engine);
+    let (recovered, _) = crate::persist::open_engine(&config, 0)?;
+    let decay_replay_ok = recovered.export() == reference;
+    recovered.shutdown();
+
+    Ok(CheckpointCostProbe {
+        model_nodes: nodes,
+        full_bytes: full.bytes,
+        dirty_nodes,
+        delta_bytes: delta.bytes,
+        delta_vs_full: if full.bytes > 0 {
+            delta.bytes as f64 / full.bytes as f64
+        } else {
+            0.0
+        },
+        decay_replay_ok,
+    })
+}
+
 /// Result of the replication bench ([`replication_sweep`]): leader wire
 /// ingest rate, follower apply throughput, the steady-state record lag at
 /// the moment the drive window ended, and how long the follower took to

@@ -199,6 +199,11 @@ pub struct McPrioQ {
     pruned: AtomicU64,
     edges: AtomicUsize,
     reads: ReadMetrics,
+    /// Checkpoint mark: every mutation stamps the current value into its
+    /// node's dirty epoch; a differential checkpoint collects the nodes
+    /// stamped at or above its floor, then advances the mark (inside the
+    /// engine's ingest pause, so stamps never straddle a checkpoint cut).
+    ckpt_mark: AtomicU64,
 }
 
 impl McPrioQ {
@@ -211,6 +216,7 @@ impl McPrioQ {
             pruned: AtomicU64::new(0),
             edges: AtomicUsize::new(0),
             reads: ReadMetrics::default(),
+            ckpt_mark: AtomicU64::new(1),
         }
     }
 
@@ -315,6 +321,11 @@ impl McPrioQ {
             }
         };
 
+        // Dirty-epoch stamp (one relaxed load in steady state): this node
+        // changes in this checkpoint interval, so the next differential
+        // checkpoint must carry it.
+        state.mark_dirty(self.ckpt_mark.load(Ordering::Relaxed));
+
         // --- edge lookup / creation + increment ---
         let (new_edge, increment) = state.observe(guard, dst, weight, &self.config);
         if new_edge {
@@ -388,13 +399,45 @@ impl McPrioQ {
     /// each node's total. Runs concurrently with observers and readers.
     /// Returns (surviving total count, pruned edge count).
     pub fn decay(&self) -> (u64, usize) {
+        self.decay_with(self.config.decay_num, self.config.decay_den)
+    }
+
+    /// [`McPrioQ::decay`] with an explicit multiplier — replaying a logged
+    /// `DecayRecord` uses the *recorded* numerator/denominator, so a config
+    /// change across a restart cannot skew the replayed maintenance.
+    pub fn decay_with(&self, num: u64, den: u64) -> (u64, usize) {
+        self.decay_where(num, den, |_| true)
+    }
+
+    /// Decay restricted to src nodes matching `pred`. Recovery across a
+    /// shard-layout change replays each old shard's `DecayRecord` onto
+    /// exactly the srcs that old shard owned (the re-routed engine holds
+    /// them spread over new shards), instead of decaying bystanders.
+    pub fn decay_where(
+        &self,
+        num: u64,
+        den: u64,
+        mut pred: impl FnMut(u64) -> bool,
+    ) -> (u64, usize) {
+        assert!(den > 0, "decay denominator must be positive");
         self.decays.fetch_add(1, Ordering::Relaxed);
         let guard = rcu::pin();
+        let mark = self.ckpt_mark.load(Ordering::Relaxed);
         let mut total = 0u64;
         let mut pruned = 0usize;
-        self.src.for_each(&guard, |_, state_ptr| {
+        self.src.for_each(&guard, |id, state_ptr| {
+            if !pred(id) {
+                return;
+            }
             let state = unsafe { &*state_ptr };
-            let (sum, p) = state.decay(&guard, self.config.decay_num, self.config.decay_den);
+            let (sum, p) = state.decay(&guard, num, den);
+            // Stamp only nodes the sweep actually changed: a node already
+            // decayed empty (sum 0, nothing pruned) is untouched, and
+            // skipping it keeps long-dead nodes out of every differential
+            // checkpoint. Any node with surviving or pruned mass changed.
+            if sum > 0 || p > 0 {
+                state.mark_dirty(mark);
+            }
             total += sum;
             pruned += p;
         });
@@ -408,11 +451,48 @@ impl McPrioQ {
     /// decay in production; exposed for tests and quiesce points.
     pub fn repair(&self) -> u64 {
         let guard = rcu::pin();
+        let mark = self.ckpt_mark.load(Ordering::Relaxed);
         let mut swaps = 0u64;
         self.src.for_each(&guard, |_, state_ptr| {
-            swaps += unsafe { &*state_ptr }.repair(&guard);
+            let state = unsafe { &*state_ptr };
+            let s = state.repair(&guard);
+            // Dirty only on reorder: an already-sorted node serves the
+            // same export either way (the total rebase is re-derived by
+            // replaying the logged repair record), so a no-op sweep must
+            // not inflate the next differential checkpoint to full size.
+            if s > 0 {
+                state.mark_dirty(mark);
+            }
+            swaps += s;
         });
         swaps
+    }
+
+    /// Current checkpoint mark (see the field docs).
+    pub fn ckpt_mark(&self) -> u64 {
+        self.ckpt_mark.load(Ordering::Relaxed)
+    }
+
+    /// Advance the checkpoint mark; returns the new value. Call only
+    /// inside an ingest pause, *after* collecting the dirty set — every
+    /// later mutation then stamps the new mark.
+    pub fn advance_ckpt_mark(&self) -> u64 {
+        self.ckpt_mark.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// [`McPrioQ::export`] restricted to nodes dirtied at or after
+    /// `since` — the payload of a differential checkpoint.
+    pub fn export_dirty(&self, since: u64) -> Vec<(u64, u64, Vec<(u64, u64)>)> {
+        let guard = rcu::pin();
+        let mut out = Vec::new();
+        self.src.for_each(&guard, |id, state_ptr| {
+            let state = unsafe { &*state_ptr };
+            if state.dirty_mark() >= since {
+                out.push((id, state.total(), state.edges_snapshot(&guard)));
+            }
+        });
+        out.sort_unstable_by_key(|&(id, _, _)| id);
+        out
     }
 
     /// Verify P1/P3 on every node (quiesced-only; test helper).

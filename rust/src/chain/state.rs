@@ -33,6 +33,11 @@ pub(super) struct NodeState {
     /// The RCU-published prefix-sum read snapshot (null = none). Swapped
     /// whole; the previous array is retired through `rcu::defer_free`.
     snap: AtomicPtr<EdgeSnapshot>,
+    /// Checkpoint-mark this node was last mutated in (observe / decay /
+    /// repair) — the dirty epoch incremental checkpoints select on
+    /// (DESIGN.md §6). Monotone: the chain's mark only advances, and it
+    /// advances only inside a checkpoint's ingest pause.
+    dirty: AtomicU64,
 }
 
 impl NodeState {
@@ -43,7 +48,24 @@ impl NodeState {
             edges: EdgeList::new(),
             dst: config.use_dst_table.then(|| PtrTable::with_capacity(config.dst_capacity)),
             snap: AtomicPtr::new(std::ptr::null_mut()),
+            // Born dirty at mark 0: whatever the chain's current mark is,
+            // the caller stamps it right after the insert.
+            dirty: AtomicU64::new(0),
         }))
+    }
+
+    /// Stamp this node as mutated in checkpoint-mark `mark`. The
+    /// load-check keeps the hot path to one relaxed load in steady state
+    /// (the mark changes only at checkpoints).
+    #[inline]
+    pub(super) fn mark_dirty(&self, mark: u64) {
+        if self.dirty.load(Ordering::Relaxed) != mark {
+            self.dirty.store(mark, Ordering::Relaxed);
+        }
+    }
+
+    pub(super) fn dirty_mark(&self) -> u64 {
+        self.dirty.load(Ordering::Relaxed)
     }
 
     /// # Safety

@@ -65,6 +65,13 @@ pub struct PersistSection {
     pub checkpoint_interval_ms: u64,
     /// Checkpoint early once live WAL bytes exceed this.
     pub checkpoint_wal_bytes: u64,
+    /// Max differential checkpoints chained on one full snapshot before
+    /// the next checkpoint compacts to a full one (0 = incremental
+    /// checkpoints off, every generation is full).
+    pub delta_chain_max: u64,
+    /// Compact to a full snapshot when at least this fraction of nodes is
+    /// dirty since the last generation (in (0, 1]).
+    pub delta_dirty_ratio: f64,
 }
 
 /// `[replicate]` — WAL streaming to followers (DESIGN.md §5). The same
@@ -86,6 +93,12 @@ pub struct ReplicateSection {
     pub auto_promote_ms: u64,
     /// Follower: give up the initial bootstrap handshake after this long.
     pub connect_timeout_ms: u64,
+    /// Leader: cap on the WAL bytes (per shard) a follower retention pin
+    /// may hold back from checkpoint truncation. Past it the pin is
+    /// overridden — the lagging/dead follower renegotiates a snapshot
+    /// bootstrap when it returns — so one dead follower can never pin WAL
+    /// (and delta-chain compaction) forever. 0 = unlimited.
+    pub max_pin_lag_bytes: u64,
 }
 
 impl Default for ReplicateSection {
@@ -96,6 +109,7 @@ impl Default for ReplicateSection {
             max_lag_records: 0,
             auto_promote_ms: 0,
             connect_timeout_ms: 30_000,
+            max_pin_lag_bytes: 256 * 1024 * 1024,
         }
     }
 }
@@ -109,6 +123,8 @@ pub struct ReplicateConfig {
     /// None = manual promotion only.
     pub auto_promote: Option<Duration>,
     pub connect_timeout: Duration,
+    /// 0 = a pinned follower may hold back unlimited WAL.
+    pub max_pin_lag_bytes: u64,
 }
 
 impl Default for PersistSection {
@@ -120,6 +136,8 @@ impl Default for PersistSection {
             segment_bytes: 64 * 1024 * 1024,
             checkpoint_interval_ms: 60_000,
             checkpoint_wal_bytes: 256 * 1024 * 1024,
+            delta_chain_max: 8,
+            delta_dirty_ratio: 0.5,
         }
     }
 }
@@ -182,6 +200,12 @@ impl ServerConfig {
                 "persist.checkpoint_wal_bytes" => {
                     cfg.persist.checkpoint_wal_bytes = value.as_u64()?
                 }
+                "persist.delta_chain_max" => {
+                    cfg.persist.delta_chain_max = value.as_u64()?
+                }
+                "persist.delta_dirty_ratio" => {
+                    cfg.persist.delta_dirty_ratio = value.as_f64()?
+                }
                 "replicate.heartbeat_ms" => cfg.replicate.heartbeat_ms = value.as_u64()?,
                 "replicate.snapshot_records" => {
                     cfg.replicate.snapshot_records = value.as_u64()?
@@ -195,6 +219,9 @@ impl ServerConfig {
                 "replicate.connect_timeout_ms" => {
                     cfg.replicate.connect_timeout_ms = value.as_u64()?
                 }
+                "replicate.max_pin_lag_bytes" => {
+                    cfg.replicate.max_pin_lag_bytes = value.as_u64()?
+                }
                 other => return Err(format!("unknown config key: {other}")),
             }
         }
@@ -207,6 +234,9 @@ impl ServerConfig {
         }
         if cfg.replicate.heartbeat_ms == 0 {
             return Err("replicate.heartbeat_ms must be positive".to_string());
+        }
+        if !(cfg.persist.delta_dirty_ratio > 0.0 && cfg.persist.delta_dirty_ratio <= 1.0) {
+            return Err("persist.delta_dirty_ratio must be in (0, 1]".to_string());
         }
         Ok(cfg)
     }
@@ -230,6 +260,8 @@ impl ServerConfig {
             checkpoint_interval: (self.persist.checkpoint_interval_ms > 0)
                 .then(|| Duration::from_millis(self.persist.checkpoint_interval_ms)),
             checkpoint_wal_bytes: self.persist.checkpoint_wal_bytes.max(1),
+            delta_chain_max: self.persist.delta_chain_max as usize,
+            delta_dirty_ratio: self.persist.delta_dirty_ratio.clamp(f64::MIN_POSITIVE, 1.0),
         }))
     }
 
@@ -244,6 +276,7 @@ impl ServerConfig {
             connect_timeout: Duration::from_millis(
                 self.replicate.connect_timeout_ms.max(1),
             ),
+            max_pin_lag_bytes: self.replicate.max_pin_lag_bytes,
         }
     }
 
@@ -334,6 +367,35 @@ decay_den = 4
         assert!(ServerConfig::from_toml("[persist]\nfsync = \"sometimes\"\n").is_err());
         assert!(ServerConfig::from_toml("[persist]\nsegment_bytes = 0\n").is_err());
         assert!(ServerConfig::from_toml("[persist]\nwal_dir = \"x\"\n").is_err());
+        assert!(ServerConfig::from_toml("[persist]\ndelta_dirty_ratio = 0.0\n").is_err());
+        assert!(ServerConfig::from_toml("[persist]\ndelta_dirty_ratio = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn delta_knobs_parse() {
+        let text = "[persist]\ndata_dir = \"/tmp/mc\"\ndelta_chain_max = 3\n\
+                    delta_dirty_ratio = 0.25\n";
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        let p = cfg.persist_config().unwrap().unwrap();
+        assert_eq!(p.delta_chain_max, 3);
+        assert_eq!(p.delta_dirty_ratio, 0.25);
+        // Defaults: incremental checkpoints on.
+        let p = ServerConfig::from_toml("[persist]\ndata_dir = \"/tmp/mc\"\n")
+            .unwrap()
+            .persist_config()
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.delta_chain_max, 8);
+        assert_eq!(p.delta_dirty_ratio, 0.5);
+        // 0 disables: every checkpoint is a full snapshot.
+        let p = ServerConfig::from_toml(
+            "[persist]\ndata_dir = \"/tmp/mc\"\ndelta_chain_max = 0\n",
+        )
+        .unwrap()
+        .persist_config()
+        .unwrap()
+        .unwrap();
+        assert_eq!(p.delta_chain_max, 0);
     }
 
     #[test]
@@ -353,6 +415,12 @@ decay_den = 4
         assert_eq!(r.heartbeat, Duration::from_millis(500));
         // A dead heartbeat would starve the follower's liveness signal.
         assert!(ServerConfig::from_toml("[replicate]\nheartbeat_ms = 0\n").is_err());
+        // Pin-lag escape hatch: bounded by default, 0 opts out.
+        assert_eq!(r.max_pin_lag_bytes, 256 * 1024 * 1024);
+        let r = ServerConfig::from_toml("[replicate]\nmax_pin_lag_bytes = 0\n")
+            .unwrap()
+            .replicate_config();
+        assert_eq!(r.max_pin_lag_bytes, 0);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use std::time::Duration;
 use crate::chain::{ChainConfig, McPrioQ, Recommendation};
 use crate::config::ServerConfig;
 use crate::metrics::{Counter, Histogram, Meter};
-use crate::persist::PersistState;
+use crate::persist::{codec, PersistState};
 use crate::rcu;
 
 use super::queue::BoundedQueue;
@@ -50,7 +50,15 @@ pub struct EngineStats {
     pub dropped_updates: u64,
     /// Updates applied by ingest workers (excludes `observe_direct`).
     pub applied_updates: u64,
+    /// Decay passes summed over shards (an engine-level `decay()` counts
+    /// once per shard — it is per-shard maintenance work). The old `max`
+    /// aggregate under-reported multi-shard maintenance; the per-shard
+    /// values are kept alongside so the old "passes" reading is still
+    /// derivable.
     pub decays: u64,
+    pub decays_per_shard: Vec<u64>,
+    /// Edges pruned by decay, summed over shards.
+    pub pruned_edges: u64,
     pub queue_depth: usize,
     pub query_ns_p50: u64,
     pub query_ns_p99: u64,
@@ -231,9 +239,17 @@ impl Engine {
         }
     }
 
+    /// Hash-route `src` among `nshards`. Public because recovery across a
+    /// shard-layout change needs the *old* layout's ownership to replay an
+    /// old shard's maintenance records onto exactly the srcs it owned.
+    #[inline]
+    pub fn route(src: u64, nshards: usize) -> usize {
+        (src.wrapping_mul(FIB) >> 33) as usize % nshards
+    }
+
     #[inline]
     fn shard_index(&self, src: u64) -> usize {
-        (src.wrapping_mul(FIB) >> 33) as usize % self.shards.len()
+        Self::route(src, self.shards.len())
     }
 
     #[inline]
@@ -313,15 +329,19 @@ impl Engine {
     /// path (DESIGN.md §5). Mirrors the ingest worker exactly: (local WAL
     /// append → in-memory apply) under the read side of the ingest gate,
     /// so follower checkpoints still cut at exact record boundaries and a
-    /// promoted follower is itself durable. When persistence is armed the
-    /// local WAL must hand out exactly `seq` (the leader's sequence
-    /// number); a mismatch means the streams diverged and is fatal to the
-    /// link — applying anyway would double-count records after a restart.
+    /// promoted follower is itself durable. Maintenance records go through
+    /// the same [`Engine::apply_op`] dispatch as recovery — the follower
+    /// decays in lockstep with the leader (leader-driven maintenance; its
+    /// own `DecayScheduler` stays off until promotion). When persistence
+    /// is armed the local WAL must hand out exactly `seq` (the leader's
+    /// sequence number); a mismatch means the streams diverged and is
+    /// fatal to the link — applying anyway would double-count records
+    /// after a restart.
     pub fn apply_replicated(
         &self,
         shard: usize,
         seq: u64,
-        batch: &[(u64, u64)],
+        op: &codec::WalOp,
     ) -> Result<(), String> {
         if shard >= self.shards.len() {
             return Err(format!(
@@ -332,7 +352,7 @@ impl Engine {
         let _gate = self.ingest_gate.read().unwrap_or_else(PoisonError::into_inner);
         if let Some(persist) = self.persist.get() {
             let got = persist
-                .append(shard, batch)
+                .append_op(shard, op)
                 .map_err(|e| format!("wal append on shard {shard}: {e}"))?;
             if got != seq {
                 return Err(format!(
@@ -340,8 +360,10 @@ impl Engine {
                 ));
             }
         }
-        self.shards[shard].observe_batch(batch);
-        self.update_meter.mark_n(batch.len() as u64);
+        self.apply_op(shard, op);
+        if let codec::WalOp::Batch(batch) = op {
+            self.update_meter.mark_n(batch.len() as u64);
+        }
         Ok(())
     }
 
@@ -418,15 +440,81 @@ impl Engine {
     }
 
     /// Run one decay + repair pass over every shard (§II.C maintenance).
+    ///
+    /// With persistence armed, maintenance is *data* (DESIGN.md §6): a
+    /// `DecayRecord` is appended to each shard's WAL under the write side
+    /// of the ingest gate — the same gate batch applies hold — so the
+    /// record's sequence position equals its apply position. The gate is
+    /// taken **per shard** (append + decay that shard, release, next):
+    /// the invariant is per-shard (seqs and cuts are per-shard; shards
+    /// hold disjoint srcs), so the ingest stall is bounded by one shard's
+    /// sweep instead of the whole model. Recovery and followers then
+    /// replay decay exactly where it happened instead of restoring
+    /// conservatively-larger pre-decay counts. In-memory engines keep the
+    /// paper's lock-free concurrent decay (no gate).
     pub fn decay(&self) -> (u64, usize) {
+        let cfg = self.shards[0].config();
+        let (num, den) = (cfg.decay_num, cfg.decay_den);
         let mut total = 0;
         let mut pruned = 0;
-        for s in &self.shards {
-            let (t, p) = s.decay();
+        for (shard, s) in self.shards.iter().enumerate() {
+            let (t, p) = match self.persist.get() {
+                Some(persist) => {
+                    let _gate =
+                        self.ingest_gate.write().unwrap_or_else(PoisonError::into_inner);
+                    // Log-then-apply, like the batch path: an unloggable
+                    // decay is still applied (and surfaces via wal_errors).
+                    if let Err(e) =
+                        persist.append_op(shard, &codec::WalOp::Decay { num, den })
+                    {
+                        persist.note_error(shard, &e);
+                    }
+                    s.decay_with(num, den)
+                }
+                None => s.decay_with(num, den),
+            };
             total += t;
             pruned += p;
         }
         (total, pruned)
+    }
+
+    /// Run one standalone order-repair sweep over every shard, logged as a
+    /// `RepairRecord` when persistence is armed (same per-shard gate
+    /// discipline as [`Engine::decay`]). Returns the swap count.
+    pub fn repair(&self) -> u64 {
+        let mut swaps = 0;
+        for (shard, s) in self.shards.iter().enumerate() {
+            swaps += match self.persist.get() {
+                Some(persist) => {
+                    let _gate =
+                        self.ingest_gate.write().unwrap_or_else(PoisonError::into_inner);
+                    if let Err(e) = persist.append_op(shard, &codec::WalOp::Repair) {
+                        persist.note_error(shard, &e);
+                    }
+                    s.repair()
+                }
+                None => s.repair(),
+            };
+        }
+        swaps
+    }
+
+    /// Apply one decoded WAL record to `shard`, in memory only — the one
+    /// dispatch recovery and the follower apply path share, so replayed
+    /// maintenance can never diverge from streamed maintenance.
+    pub fn apply_op(&self, shard: usize, op: &codec::WalOp) {
+        match op {
+            codec::WalOp::Batch(pairs) => {
+                self.shards[shard].observe_batch(pairs);
+            }
+            codec::WalOp::Decay { num, den } => {
+                self.shards[shard].decay_with(*num, *den);
+            }
+            codec::WalOp::Repair => {
+                self.shards[shard].repair();
+            }
+        }
     }
 
     /// Wait until every update enqueued *before this call* is applied (or
@@ -480,6 +568,40 @@ impl Engine {
         f()
     }
 
+    /// [`Engine::export`] restricted to nodes dirtied at or after mark
+    /// `since` — the payload of a differential checkpoint. Call inside the
+    /// checkpointer's ingest pause for an exact dirty set.
+    pub fn export_dirty(&self, since: u64) -> Vec<(u64, u64, Vec<(u64, u64)>)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.export_dirty(since));
+        }
+        out.sort_unstable_by_key(|&(id, _, _)| id);
+        out
+    }
+
+    /// Total src nodes across shards (O(1) per shard — the checkpointer's
+    /// dirty-ratio denominator).
+    pub fn node_count(&self) -> usize {
+        self.shards.iter().map(|s| s.node_count()).sum()
+    }
+
+    /// The shards' shared checkpoint mark (advanced in lockstep, so any
+    /// shard's value is the engine's).
+    pub fn ckpt_mark(&self) -> u64 {
+        self.shards[0].ckpt_mark()
+    }
+
+    /// Advance every shard's checkpoint mark; returns the new value. Only
+    /// meaningful inside an ingest pause (the checkpointer's window).
+    pub fn advance_ckpt_mark(&self) -> u64 {
+        let mut mark = 0;
+        for s in &self.shards {
+            mark = s.advance_ckpt_mark();
+        }
+        mark
+    }
+
     /// Rebuild state from an exported snapshot: each node's edge list is
     /// replayed as one same-src weighted batch into its shard, mirroring
     /// `McPrioQ::import` (recovery and the persist tests rely on the
@@ -518,6 +640,8 @@ impl Engine {
         let mut edges = 0;
         let mut observes = 0;
         let mut decays = 0;
+        let mut decays_per_shard = Vec::with_capacity(self.shards.len());
+        let mut pruned_edges = 0;
         let mut snap_hits = 0;
         let mut snap_rebuilds = 0;
         let mut snap_fallbacks = 0;
@@ -526,7 +650,12 @@ impl Engine {
             nodes += st.nodes;
             edges += st.edges;
             observes += st.observes;
-            decays = decays.max(st.decays);
+            // Sum, not max: every aggregate in this block is total work
+            // across shards. (`max` here silently under-reported decay by
+            // a factor of the shard count.)
+            decays += st.decays;
+            decays_per_shard.push(st.decays);
+            pruned_edges += st.pruned_edges;
             snap_hits += st.snap_hits;
             snap_rebuilds += st.snap_rebuilds;
             snap_fallbacks += st.snap_fallbacks;
@@ -553,6 +682,8 @@ impl Engine {
             dropped_updates: self.dropped.get(),
             applied_updates: self.applied.get(),
             decays,
+            decays_per_shard,
+            pruned_edges,
             queue_depth: self.queues.iter().map(|q| q.len()).sum(),
             query_ns_p50: snap.p50,
             query_ns_p99: snap.p99,

@@ -11,6 +11,8 @@
 //! MTOPK <n> <k> <s1> ...     top-k for n src nodes in one request
 //! PROB <src> <dst>           single-edge probability
 //! DECAY                      force a decay + repair pass
+//! REPAIR                     force a standalone order-repair sweep
+//!                            (logged as a RepairRecord when durable)
 //! SAVE                       force a durability checkpoint (WAL cut +
 //!                            snapshot; ERR if persistence is disabled)
 //! STATS                      engine statistics
@@ -46,6 +48,7 @@ pub enum Request {
     MultiTopK { srcs: Vec<u64>, k: usize },
     Prob { src: u64, dst: u64 },
     Decay,
+    Repair,
     Save,
     Stats,
     Ping,
@@ -112,6 +115,7 @@ impl Request {
                 Request::Recommend { src, threshold: t }
             }
             "DECAY" => Request::Decay,
+            "REPAIR" => Request::Repair,
             "SAVE" => Request::Save,
             "STATS" => Request::Stats,
             "PING" => Request::Ping,
@@ -158,6 +162,7 @@ impl Request {
             }
             Request::Prob { src, dst } => format!("PROB {src} {dst}"),
             Request::Decay => "DECAY".into(),
+            Request::Repair => "REPAIR".into(),
             Request::Save => "SAVE".into(),
             Request::Stats => "STATS".into(),
             Request::Ping => "PING".into(),

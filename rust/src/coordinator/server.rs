@@ -223,17 +223,22 @@ fn dispatch(
     out: &mut String,
 ) {
     // An unpromoted follower serves every read but rejects mutations:
-    // writes belong on the leader, and an independent decay would diverge
-    // the replica (maintenance is not in the WAL). SAVE stays allowed —
-    // a local checkpoint of replicated state is how a follower bounds its
-    // own recovery time. `writable` (not just the promote latch) is the
-    // gate: writes open only after the apply plane drained, so a local
-    // write can't steal a queued replicated record's WAL seq.
+    // writes belong on the leader, and maintenance is leader-driven — the
+    // leader's decay/repair arrive as WAL records (DESIGN.md §6), so a
+    // local DECAY would apply on top of the replayed one and diverge the
+    // replica. SAVE stays allowed — a local checkpoint of replicated
+    // state is how a follower bounds its own recovery time. `writable`
+    // (not just the promote latch) is the gate: writes open only after
+    // the apply plane drained, so a local write can't steal a queued
+    // replicated record's WAL seq.
     let read_only = replica.is_some_and(|r| !r.writable());
     if read_only
         && matches!(
             req,
-            Request::Observe { .. } | Request::ObserveBatch { .. } | Request::Decay
+            Request::Observe { .. }
+                | Request::ObserveBatch { .. }
+                | Request::Decay
+                | Request::Repair
         )
     {
         let _ = write!(
@@ -286,12 +291,16 @@ fn dispatch(
             let (total, pruned) = engine.decay();
             let _ = write!(out, "OK total={total} pruned={pruned}");
         }
+        Request::Repair => {
+            let swaps = engine.repair();
+            let _ = write!(out, "OK swaps={swaps}");
+        }
         Request::Save => match engine.checkpoint() {
             Ok(s) => {
                 let _ = write!(
                     out,
-                    "OK gen={} nodes={} bytes={} wal_freed={}",
-                    s.generation, s.nodes, s.bytes, s.wal_freed
+                    "OK gen={} kind={} nodes={} bytes={} wal_freed={}",
+                    s.generation, s.kind, s.nodes, s.bytes, s.wal_freed
                 );
             }
             Err(e) => {
@@ -325,6 +334,20 @@ fn dispatch(
                 s.recovered_batches,
                 s.wal_errors
             );
+            // Maintenance observability (DESIGN.md §6): total decay passes
+            // (summed — per-shard work), the per-shard split, and pruned
+            // edges.
+            let _ = write!(
+                out,
+                " decays={} pruned_edges={} decays_per_shard=",
+                s.decays, s.pruned_edges
+            );
+            for (i, d) in s.decays_per_shard.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{d}");
+            }
             // Replication coordinates (satellite of DESIGN.md §5): the WAL
             // epoch + per-shard heads every lag computation starts from.
             let _ = write!(out, " wal_epoch={} last_seqs=", s.wal_epoch);
@@ -339,7 +362,14 @@ fn dispatch(
                 }
             }
             if let Some(p) = engine.persist_state() {
-                let _ = write!(out, " repl_followers={}", p.pin_count());
+                let chain = p.delta_chain();
+                let _ = write!(
+                    out,
+                    " repl_followers={} ckpt_gen={} ckpt_chain={}",
+                    p.pin_count(),
+                    p.generation(),
+                    chain.len
+                );
             }
             if let Some(r) = replica {
                 let _ = write!(

@@ -207,6 +207,13 @@ fn engine_decay_runs_over_all_shards() {
     let (total, pruned) = engine.decay();
     assert_eq!(total, 0);
     assert_eq!(pruned, 20);
+    // Aggregation fix: `decays` is per-shard maintenance work summed (two
+    // engine passes × shard count), with the per-shard split exposed.
+    let stats = engine.stats();
+    assert_eq!(stats.decays_per_shard.len(), stats.shards);
+    assert!(stats.decays_per_shard.iter().all(|&d| d == 2), "{stats:?}");
+    assert_eq!(stats.decays, 2 * stats.shards as u64);
+    assert_eq!(stats.pruned_edges, 20);
     engine.shutdown();
 }
 
@@ -322,6 +329,7 @@ fn protocol_request_roundtrip() {
         Request::MultiTopK { srcs: vec![4, 9, 11], k: 3 },
         Request::Prob { src: 1, dst: 9 },
         Request::Decay,
+        Request::Repair,
         Request::Save,
         Request::Stats,
         Request::Ping,

@@ -166,14 +166,16 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
             let (engine, r) =
                 mcprioq::persist::open_engine(&config, workers).map_err(|e| anyhow::anyhow!(e))?;
             println!(
-                "recovered from {}: gen={} epoch={} nodes={} replayed_batches={} \
-                 ({} updates){}{}",
+                "recovered from {}: gen={} (+{} deltas) epoch={} nodes={} \
+                 replayed_batches={} ({} updates) replayed_maintenance={}{}{}",
                 pcfg.data_dir.display(),
                 r.generation,
+                r.snapshot_deltas,
                 r.epoch,
                 r.snapshot_nodes,
                 r.replayed_batches,
                 r.replayed_updates,
+                r.replayed_maintenance,
                 if r.torn_tails > 0 { " [torn tail tolerated]" } else { "" },
                 if r.layout_changed { " [shard layout changed; epoch bumped]" } else { "" },
             );
@@ -231,10 +233,14 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
 
 /// `mcprioq serve --follow <leader>`: run the follower plane (DESIGN.md
 /// §5) behind the normal TCP front-end in read-only mode. The decay
-/// scheduler stays off while following — maintenance is not in the WAL,
-/// so an independent decay would diverge the replica — and starts on
-/// promotion; the checkpoint scheduler runs as usual so a durable
-/// follower bounds its own recovery time.
+/// scheduler stays off while following — maintenance is leader-driven:
+/// the leader's decay/repair arrive as WAL records and are replayed in
+/// sequence position (DESIGN.md §6), so an independent local decay would
+/// double-apply it. It starts exactly once on promotion, and only after
+/// the apply plane has drained (`writable`), so a replayed leader decay
+/// record and the new local timer can never cover the same interval
+/// twice. The checkpoint scheduler runs as usual so a durable follower
+/// bounds its own recovery time.
 fn serve_follower(
     config: ServerConfig,
     workers: usize,
@@ -271,9 +277,12 @@ fn serve_follower(
     let mut ticks = 0u64;
     loop {
         std::thread::sleep(Duration::from_secs(1));
-        // Promotion watch: once writable, this node is a leader — start
-        // the maintenance plane it was holding back.
-        if handle.state.promoted() && !promoted_seen {
+        // Promotion watch: once *writable* (promotion latched AND the
+        // apply plane drained of queued replicated records — a still-
+        // queued leader DecayRecord must land before the local timer can
+        // own maintenance), this node is a leader: start the maintenance
+        // plane it was holding back, exactly once (`promoted_seen`).
+        if handle.state.writable() && !promoted_seen {
             promoted_seen = true;
             println!("[replicate] promoted: accepting writes");
             if let Some(interval) = config.decay_interval.filter(|_| !no_decay) {
@@ -519,8 +528,53 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
             probe.secs,
             fmt_rate(probe.updates_per_s)
         );
+
+        // Checkpoint-cost metric (DESIGN.md §6): differential bytes at a
+        // fixed 10% dirty ratio vs the full snapshot, plus the
+        // decay-record replay equality gate.
+        use mcprioq::bench_harness::checkpoint_cost_probe;
+        let ckpt = checkpoint_cost_probe(shards, 20_000, 0.1, scratch.path())
+            .map_err(|e| anyhow::anyhow!(e))?;
+        dur_json.row(&[
+            ("mode", JsonVal::Str("ckpt_full".to_string())),
+            ("model_nodes", JsonVal::Int(ckpt.model_nodes as u64)),
+            ("bytes", JsonVal::Int(ckpt.full_bytes)),
+        ]);
+        dur_json.row(&[
+            ("mode", JsonVal::Str("ckpt_delta".to_string())),
+            ("dirty_nodes", JsonVal::Int(ckpt.dirty_nodes as u64)),
+            (
+                "dirty_ratio",
+                JsonVal::Num(ckpt.dirty_nodes as f64 / ckpt.model_nodes as f64),
+            ),
+            ("bytes", JsonVal::Int(ckpt.delta_bytes)),
+            ("vs_full", JsonVal::Num(ckpt.delta_vs_full)),
+            ("decay_replay_ok", JsonVal::Bool(ckpt.decay_replay_ok)),
+        ]);
+        println!(
+            "  checkpoint: full {} bytes, delta {} bytes at {:.0}% dirty \
+             ({:.3}x full), decay_replay_ok={}",
+            ckpt.full_bytes,
+            ckpt.delta_bytes,
+            100.0 * ckpt.dirty_nodes as f64 / ckpt.model_nodes as f64,
+            ckpt.delta_vs_full,
+            ckpt.decay_replay_ok
+        );
         let p = dur_json.finish(&json_dir.join("BENCH_durability.json"))?;
         println!("wrote {}", p.display());
+        // The smoke gate: a differential must cost a fraction of the full
+        // snapshot at 10% dirty, and decay-record replay must reproduce
+        // the never-crashed state exactly.
+        if !ckpt.decay_replay_ok {
+            anyhow::bail!("decay-record replay changed recovery equality");
+        }
+        if ckpt.delta_vs_full > 0.5 {
+            anyhow::bail!(
+                "differential checkpoint bytes do not scale with the dirty set: \
+                 {:.3}x full at 10% dirty",
+                ckpt.delta_vs_full
+            );
+        }
     }
 
     // ---- replication bench: leader + streaming follower over the wire ----

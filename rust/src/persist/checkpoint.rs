@@ -1,23 +1,35 @@
-//! Atomic checkpoints: pause ingest at a batch boundary, encode the
-//! quiesced export to `ckpt-<gen>.snap.tmp`, fsync + `rename`, commit a
-//! manifest recording the per-shard WAL cut points, then truncate sealed
-//! WAL segments the snapshot covers.
+//! Atomic incremental checkpoints: pause ingest at a batch boundary,
+//! encode either the full quiesced export (`ckpt-<gen>.snap`) or only the
+//! nodes dirtied since the previous generation (`ckpt-<gen>.delta`) to a
+//! `tmp` + `rename`, commit a manifest recording the base→delta chain and
+//! the per-shard WAL cut points, then truncate sealed WAL segments.
+//!
+//! Full vs differential (DESIGN.md §6): the first generation after
+//! startup is always full (in-memory dirty epochs reset on restart); a
+//! generation is also full when the chain already holds
+//! `delta_chain_max` deltas or when at least `delta_dirty_ratio` of the
+//! nodes are dirty — otherwise it is a delta and checkpoint cost scales
+//! with the nodes touched since the base, not the model size.
 //!
 //! Commit protocol (crash-safe at every step):
 //!
-//! 1. `quiesce` + ingest gate → read `(cuts, export)` atomically. The cut
+//! 1. `quiesce` + ingest gate → read `(cuts, payload)` atomically. The cut
 //!    for shard `i` is its WAL's last appended sequence number; because
-//!    appends happen before applies inside the gate, the export contains
-//!    exactly the batches with `seq <= cuts[i]`.
-//! 2. Write `ckpt-<gen>.snap.tmp`, `sync_data`, rename to
-//!    `ckpt-<gen>.snap`, fsync the directory. A crash before the rename
-//!    leaves only a `.tmp` recovery ignores (and sweeps).
+//!    appends happen before applies inside the gate, the payload contains
+//!    exactly the records with `seq <= cuts[i]`. The engine's checkpoint
+//!    mark advances inside the same pause, so dirty stamps never straddle
+//!    the cut.
+//! 2. Write `ckpt-<gen>.{snap|delta}.tmp`, `sync_data`, rename, fsync the
+//!    directory. A crash before the rename leaves only a `.tmp` recovery
+//!    ignores (and sweeps).
 //! 3. Write `MANIFEST.tmp`, rename over `MANIFEST`, fsync the directory.
 //!    *This rename is the commit point*: before it, recovery uses the
-//!    previous checkpoint + a longer WAL suffix; after it, the new one.
-//! 4. Truncate WAL segments fully covered by the cuts; delete snapshot
-//!    generations older than the previous one (retention: current + 1,
-//!    so a torn current snapshot still has a fallback).
+//!    previous chain + a longer WAL suffix; after it, the new one.
+//! 4. Truncate WAL segments fully covered by the *previous* generation's
+//!    cuts (lag-one, bounded below by follower retention pins up to the
+//!    `[replicate] max_pin_lag_bytes` escape hatch); delete checkpoint
+//!    files behind the previous chain's base (a torn newest file still
+//!    has the rest of its chain as fallback).
 
 use std::fs::{self, File};
 use std::io::{self, Write as _};
@@ -30,15 +42,18 @@ use std::time::{Duration, Instant};
 use crate::config::TomlDoc;
 use crate::coordinator::Engine;
 
-use super::{codec, wal};
+use super::{codec, wal, DeltaChain};
 
 /// Result of one committed checkpoint (`SAVE` reply, logs).
 #[derive(Debug, Clone, Copy)]
 pub struct CheckpointSummary {
     pub generation: u64,
-    /// Src nodes in the snapshot.
+    /// "full" or "delta".
+    pub kind: &'static str,
+    /// Src nodes written in this generation's file (for a delta: only the
+    /// dirty nodes).
     pub nodes: usize,
-    /// Encoded snapshot size.
+    /// Encoded file size of this generation.
     pub bytes: u64,
     /// WAL bytes freed by truncation.
     pub wal_freed: u64,
@@ -46,13 +61,17 @@ pub struct CheckpointSummary {
 
 /// The committed-checkpoint pointer (`checkpoint/MANIFEST`), in the same
 /// TOML subset `ServerConfig` uses, so it is both human-greppable and
-/// parsed by the existing `TomlDoc`.
+/// parsed by the existing `TomlDoc`. `snapshot` names the chain's base
+/// (full) file; `deltas` lists the differential generations on top of it,
+/// oldest first. `wal_cuts` are the cuts of the *newest* generation. A
+/// PR 3-era manifest has no `deltas` key and parses as an empty chain.
 #[derive(Debug, Clone, PartialEq)]
 pub(crate) struct Manifest {
     pub generation: u64,
     pub epoch: u64,
     pub shards: usize,
     pub snapshot: String,
+    pub deltas: Vec<String>,
     pub wal_cuts: Vec<u64>,
 }
 
@@ -60,6 +79,12 @@ impl Manifest {
     pub(crate) fn render(&self) -> String {
         let cuts =
             self.wal_cuts.iter().map(u64::to_string).collect::<Vec<_>>().join(", ");
+        let deltas = self
+            .deltas
+            .iter()
+            .map(|d| format!("\"{d}\""))
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
             "# mcprioq durability manifest — do not edit while the server runs\n\
              [checkpoint]\n\
@@ -67,8 +92,9 @@ impl Manifest {
              epoch = {}\n\
              shards = {}\n\
              snapshot = \"{}\"\n\
+             deltas = [{}]\n\
              wal_cuts = [{}]\n",
-            self.generation, self.epoch, self.shards, self.snapshot, cuts
+            self.generation, self.epoch, self.shards, self.snapshot, deltas, cuts
         )
     }
 
@@ -82,11 +108,20 @@ impl Manifest {
             .iter()
             .map(|v| v.as_u64())
             .collect::<Result<Vec<_>, _>>()?;
+        let deltas = match doc.get("checkpoint.deltas") {
+            Some(v) => v
+                .as_array()?
+                .iter()
+                .map(|d| Ok(d.as_str()?.to_string()))
+                .collect::<Result<Vec<_>, String>>()?,
+            None => Vec::new(),
+        };
         let m = Manifest {
             generation: get("checkpoint.generation")?.as_u64()?,
             epoch: get("checkpoint.epoch")?.as_u64()?,
             shards: get("checkpoint.shards")?.as_usize()?,
             snapshot: get("checkpoint.snapshot")?.as_str()?.to_string(),
+            deltas,
             wal_cuts,
         };
         if m.wal_cuts.len() != m.shards {
@@ -95,6 +130,26 @@ impl Manifest {
                 m.wal_cuts.len(),
                 m.shards
             ));
+        }
+        // The chain must be contiguous generations ending at `generation`:
+        // base, base+1, …, generation.
+        if let Some(base) = snapshot_generation(&m.snapshot) {
+            for (i, d) in m.deltas.iter().enumerate() {
+                match delta_generation(d) {
+                    Some(gen) if gen == base + 1 + i as u64 => {}
+                    _ => return Err(format!("manifest: delta {d:?} breaks the chain")),
+                }
+            }
+            if base + m.deltas.len() as u64 != m.generation {
+                return Err(format!(
+                    "manifest: chain {} + {} deltas does not reach generation {}",
+                    base,
+                    m.deltas.len(),
+                    m.generation
+                ));
+            }
+        } else {
+            return Err(format!("manifest: bad snapshot name {:?}", m.snapshot));
         }
         Ok(m)
     }
@@ -120,9 +175,23 @@ pub(crate) fn snapshot_name(generation: u64) -> String {
     format!("ckpt-{generation:06}.snap")
 }
 
+pub(crate) fn delta_name(generation: u64) -> String {
+    format!("ckpt-{generation:06}.delta")
+}
+
 /// Parse a `ckpt-<gen>.snap` filename back to its generation.
 pub(crate) fn snapshot_generation(name: &str) -> Option<u64> {
     name.strip_prefix("ckpt-")?.strip_suffix(".snap")?.parse().ok()
+}
+
+/// Parse a `ckpt-<gen>.delta` filename back to its generation.
+pub(crate) fn delta_generation(name: &str) -> Option<u64> {
+    name.strip_prefix("ckpt-")?.strip_suffix(".delta")?.parse().ok()
+}
+
+/// Generation of any checkpoint file (full or delta).
+pub(crate) fn file_generation(name: &str) -> Option<u64> {
+    snapshot_generation(name).or_else(|| delta_generation(name))
 }
 
 /// Take one checkpoint of `engine` now. Errors if persistence was never
@@ -134,62 +203,123 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
     let _serial = persist.serialize_checkpoints();
 
     let nshards = persist.shard_count();
-    let (cuts, export) = engine.with_ingest_paused(|| {
+    let chain = persist.delta_chain();
+    let pcfg = persist.config().clone();
+    let generation = persist.generation() + 1;
+
+    // Everything under the pause: the cuts, the full-vs-delta decision,
+    // the payload collection, and the mark advance form one atomic cut.
+    // One model sweep in the common case: the dirty export doubles as the
+    // dirty count (the node total is O(1)), and only a compaction trigger
+    // pays for the second, full sweep.
+    let (cuts, full, payload, new_floor) = engine.with_ingest_paused(|| {
         let cuts: Vec<u64> = (0..nshards).map(|i| persist.wal(i).last_seq()).collect();
-        (cuts, engine.export())
+        let mut full = chain.base == 0
+            || chain.floor == 0
+            || pcfg.delta_chain_max == 0
+            || chain.len >= pcfg.delta_chain_max;
+        let mut payload = if full { Vec::new() } else { engine.export_dirty(chain.floor) };
+        if !full {
+            let total = engine.node_count();
+            full = total > 0
+                && payload.len() as f64 / total as f64 >= pcfg.delta_dirty_ratio;
+        }
+        if full {
+            payload = engine.export();
+        }
+        let new_floor = engine.advance_ckpt_mark();
+        (cuts, full, payload, new_floor)
     });
 
-    let generation = persist.generation() + 1;
-    let bytes = codec::encode_snapshot(persist.epoch(), &cuts, &export);
-    let dir = persist.config().checkpoint_dir();
-    let name = snapshot_name(generation);
+    let epoch = persist.epoch();
+    let (name, bytes) = if full {
+        (snapshot_name(generation), codec::encode_snapshot(epoch, &cuts, &payload))
+    } else {
+        (
+            delta_name(generation),
+            codec::encode_delta(generation - 1, epoch, &cuts, &payload),
+        )
+    };
+    let dir = pcfg.checkpoint_dir();
     write_atomic(&dir.join(&name), &bytes)
         .map_err(|e| format!("writing {name}: {e}"))?;
+    let new_chain = if full {
+        DeltaChain { base: generation, len: 0, floor: new_floor }
+    } else {
+        DeltaChain { base: chain.base, len: chain.len + 1, floor: new_floor }
+    };
     let manifest = Manifest {
         generation,
-        epoch: persist.epoch(),
+        epoch,
         shards: nshards,
-        snapshot: name,
+        snapshot: snapshot_name(new_chain.base),
+        deltas: (new_chain.base + 1..=generation).map(delta_name).collect(),
         wal_cuts: cuts.clone(),
     };
-    // The commit point: MANIFEST now names the new generation.
-    write_atomic(&persist.config().manifest_path(), manifest.render().as_bytes())
+    // The commit point: MANIFEST now names the new generation's chain.
+    write_atomic(&pcfg.manifest_path(), manifest.render().as_bytes())
         .map_err(|e| format!("committing manifest: {e}"))?;
 
     // Truncation lags one generation: delete only segments covered by the
-    // *previous* retained snapshot's cuts, so recovery can still fall back
-    // to it (retention keeps two generations) without hitting a WAL hole.
-    // Connected followers pin the floor further: a segment a live
-    // replication stream hasn't fully sent yet is never deleted, so a slow
-    // follower lags instead of being forced into a snapshot resync.
+    // *previous* committed generation's cuts, so recovery can still fall
+    // back to it (its chain files are retained, see below) without hitting
+    // a WAL hole. Connected followers pin the floor further: a segment a
+    // live replication stream hasn't fully sent yet is never deleted, so a
+    // slow follower lags instead of being forced into a snapshot resync —
+    // bounded by `[replicate] max_pin_lag_bytes`: past that, the pin is
+    // overridden (the dead or hopeless follower renegotiates a snapshot
+    // bootstrap when it returns) rather than pinning the log forever.
+    let max_pin_lag = engine.replicate_config().max_pin_lag_bytes;
     let trunc_cuts = persist.rotate_cuts(cuts.clone());
     let mut wal_freed = 0u64;
     for (shard, &cut) in trunc_cuts.iter().enumerate().take(nshards) {
-        let cut = match persist.pin_floor(shard) {
-            Some(floor) => cut.min(floor),
-            None => cut,
+        let mut wal = persist.wal(shard);
+        let effective = match persist.pin_floor(shard) {
+            Some(floor) if floor < cut => {
+                let pinned = wal
+                    .pinned_bytes(floor, cut)
+                    .map_err(|e| format!("sizing wal shard {shard}: {e}"))?;
+                if max_pin_lag > 0 && pinned > max_pin_lag {
+                    eprintln!(
+                        "[persist] shard {shard}: follower pin at seq {floor} holds \
+                         {pinned} bytes (> max_pin_lag_bytes {max_pin_lag}); truncating \
+                         past it"
+                    );
+                    cut
+                } else {
+                    floor
+                }
+            }
+            Some(_) | None => cut,
         };
-        wal_freed += persist
-            .wal(shard)
-            .truncate_upto(cut)
+        wal_freed += wal
+            .truncate_upto(effective)
             .map_err(|e| format!("truncating wal shard {shard}: {e}"))?;
     }
-    // Retention: keep this generation and the previous one.
-    if let Ok(rd) = fs::read_dir(&dir) {
-        for entry in rd.flatten() {
-            if let Some(gen) =
-                entry.file_name().to_str().and_then(snapshot_generation)
-            {
-                if gen + 1 < generation {
-                    let _ = fs::remove_file(entry.path());
+    // Retention: the committed chain plus the previous committed chain's
+    // files. Everything behind the *previous* chain's base predates the
+    // fallback horizon (a torn newest file falls back within its own
+    // chain) and is deleted. `chain.base` is the previous chain's base for
+    // a delta commit (same chain) and for a full commit (the chain it
+    // supersedes) alike.
+    if chain.base > 0 {
+        if let Ok(rd) = fs::read_dir(&dir) {
+            for entry in rd.flatten() {
+                if let Some(gen) = entry.file_name().to_str().and_then(file_generation)
+                {
+                    if gen < chain.base {
+                        let _ = fs::remove_file(entry.path());
+                    }
                 }
             }
         }
     }
+    persist.set_delta_chain(new_chain);
     persist.set_generation(generation);
     Ok(CheckpointSummary {
         generation,
-        nodes: export.len(),
+        kind: if full { "full" } else { "delta" },
+        nodes: payload.len(),
         bytes: bytes.len() as u64,
         wal_freed,
     })
@@ -220,6 +350,7 @@ pub fn install_snapshot(
         epoch,
         shards: cuts.len(),
         snapshot: name,
+        deltas: Vec::new(),
         wal_cuts: cuts.clone(),
     };
     write_atomic(&pcfg.manifest_path(), manifest.render().as_bytes())

@@ -1,10 +1,10 @@
 //! Compact binary encoding shared by checkpoints and the WAL: LEB128
-//! varints, an IEEE CRC32, the snapshot format (`export()` on disk), and
+//! varints, an IEEE CRC32, the snapshot formats (full + differential), and
 //! the WAL record payload. One codec for both artifacts keeps the two
 //! durability paths byte-compatible by construction (the round-trip
 //! property tests compare them directly).
 //!
-//! Snapshot layout (`ckpt-<gen>.snap`):
+//! Full snapshot layout (`ckpt-<gen>.snap`):
 //!
 //! ```text
 //! magic   "MCPQCKP1"                      8 bytes
@@ -17,6 +17,30 @@
 //! crc32   over `body`                     u32 LE
 //! ```
 //!
+//! Differential snapshot layout (`ckpt-<gen>.delta`, DESIGN.md §6): the
+//! same body prefixed with the *parent generation* it applies on top of —
+//! only the nodes dirtied since that generation are present, and recovery
+//! folds the chain base → delta → delta with [`fold_delta`]:
+//!
+//! ```text
+//! magic   "MCPQDLT1"                      8 bytes
+//! body    parent_generation              varint (must be this gen - 1)
+//!         epoch, cuts, nodes              as in the full snapshot
+//! crc32   over `body`                     u32 LE
+//! ```
+//!
+//! WAL record payload (inside a `wal.rs` frame): `seq`, a record *kind*
+//! tag, then the kind-specific body. Kind 0 is the observation batch; the
+//! maintenance kinds (decay / repair, §II.C) make maintenance replayable
+//! data instead of a recovery-skewing side channel:
+//!
+//! ```text
+//! seq varint, kind varint
+//!   kind 0 (batch):  count, (src, dst)*   the §II.A update batch
+//!   kind 1 (decay):  numerator, denominator
+//!   kind 2 (repair): (empty)
+//! ```
+//!
 //! The WAL cut points are embedded *in the snapshot itself* (as well as in
 //! the manifest) so a snapshot alone is enough to recover from — the
 //! manifest is a pointer, not the only source of truth.
@@ -26,8 +50,11 @@ use std::fmt;
 /// The in-memory snapshot shape: `McPrioQ::export` / `Engine::export`.
 pub type Export = Vec<(u64, u64, Vec<(u64, u64)>)>;
 
-/// Magic prefix of a checkpoint snapshot file.
+/// Magic prefix of a full checkpoint snapshot file.
 pub const SNAP_MAGIC: &[u8; 8] = b"MCPQCKP1";
+
+/// Magic prefix of a differential checkpoint file.
+pub const DELTA_MAGIC: &[u8; 8] = b"MCPQDLT1";
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CodecError {
@@ -122,6 +149,68 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 
 // ---- snapshot ----
 
+/// Append the shared snapshot body (epoch, cuts, nodes) to `buf`.
+fn put_snapshot_body(buf: &mut Vec<u8>, epoch: u64, cuts: &[u64], snap: &Export) {
+    put_varint(buf, epoch);
+    put_varint(buf, cuts.len() as u64);
+    for &c in cuts {
+        put_varint(buf, c);
+    }
+    put_varint(buf, snap.len() as u64);
+    for (src, total, edges) in snap {
+        put_varint(buf, *src);
+        put_varint(buf, *total);
+        put_varint(buf, edges.len() as u64);
+        for &(dst, count) in edges {
+            put_varint(buf, dst);
+            put_varint(buf, count);
+        }
+    }
+}
+
+/// Read the shared snapshot body starting at `*pos`.
+fn get_snapshot_body(
+    body: &[u8],
+    pos: &mut usize,
+) -> Result<(u64, Vec<u64>, Export), CodecError> {
+    let epoch = get_varint(body, pos)?;
+    let nshards = get_varint(body, pos)? as usize;
+    let mut cuts = Vec::with_capacity(nshards.min(1 << 16));
+    for _ in 0..nshards {
+        cuts.push(get_varint(body, pos)?);
+    }
+    let nodes = get_varint(body, pos)? as usize;
+    let mut snap = Vec::with_capacity(nodes.min(1 << 20));
+    for _ in 0..nodes {
+        let src = get_varint(body, pos)?;
+        let total = get_varint(body, pos)?;
+        let nedges = get_varint(body, pos)? as usize;
+        let mut edges = Vec::with_capacity(nedges.min(1 << 20));
+        for _ in 0..nedges {
+            let dst = get_varint(body, pos)?;
+            let count = get_varint(body, pos)?;
+            edges.push((dst, count));
+        }
+        snap.push((src, total, edges));
+    }
+    Ok((epoch, cuts, snap))
+}
+
+/// Validate `bytes` against `magic` + trailing CRC; returns the body
+/// slice between them.
+fn checked_body<'a>(bytes: &'a [u8], magic: &[u8; 8]) -> Result<&'a [u8], CodecError> {
+    if bytes.len() < magic.len() + 4 || &bytes[..magic.len()] != magic {
+        return Err(CodecError::BadMagic);
+    }
+    let crc_at = bytes.len() - 4;
+    let stored = u32::from_le_bytes(bytes[crc_at..].try_into().unwrap());
+    let computed = crc32(&bytes[magic.len()..crc_at]);
+    if stored != computed {
+        return Err(CodecError::BadCrc { stored, computed });
+    }
+    Ok(&bytes[..crc_at])
+}
+
 /// Encode a quiesced export plus its WAL cut points into the snapshot
 /// format. `cuts[i]` is the last WAL sequence number (per shard, in WAL
 /// `epoch`) whose effects are contained in `snap`; recovery replays
@@ -130,21 +219,7 @@ pub fn encode_snapshot(epoch: u64, cuts: &[u64], snap: &Export) -> Vec<u8> {
     let mut buf = Vec::with_capacity(64 + 16 * snap.len());
     buf.extend_from_slice(SNAP_MAGIC);
     let body = SNAP_MAGIC.len();
-    put_varint(&mut buf, epoch);
-    put_varint(&mut buf, cuts.len() as u64);
-    for &c in cuts {
-        put_varint(&mut buf, c);
-    }
-    put_varint(&mut buf, snap.len() as u64);
-    for (src, total, edges) in snap {
-        put_varint(&mut buf, *src);
-        put_varint(&mut buf, *total);
-        put_varint(&mut buf, edges.len() as u64);
-        for &(dst, count) in edges {
-            put_varint(&mut buf, dst);
-            put_varint(&mut buf, count);
-        }
-    }
+    put_snapshot_body(&mut buf, epoch, cuts, snap);
     let crc = crc32(&buf[body..]);
     buf.extend_from_slice(&crc.to_le_bytes());
     buf
@@ -154,49 +229,89 @@ pub fn encode_snapshot(epoch: u64, cuts: &[u64], snap: &Export) -> Vec<u8> {
 /// Rejects bad magic, any CRC mismatch, and trailing garbage, so recovery
 /// can treat "decodes" as "valid".
 pub fn decode_snapshot(bytes: &[u8]) -> Result<(u64, Vec<u64>, Export), CodecError> {
-    if bytes.len() < SNAP_MAGIC.len() + 4 || &bytes[..SNAP_MAGIC.len()] != SNAP_MAGIC {
-        return Err(CodecError::BadMagic);
-    }
-    let crc_at = bytes.len() - 4;
-    let stored = u32::from_le_bytes(bytes[crc_at..].try_into().unwrap());
-    let computed = crc32(&bytes[SNAP_MAGIC.len()..crc_at]);
-    if stored != computed {
-        return Err(CodecError::BadCrc { stored, computed });
-    }
-    let body = &bytes[..crc_at];
+    let body = checked_body(bytes, SNAP_MAGIC)?;
     let mut pos = SNAP_MAGIC.len();
-    let epoch = get_varint(body, &mut pos)?;
-    let nshards = get_varint(body, &mut pos)? as usize;
-    let mut cuts = Vec::with_capacity(nshards.min(1 << 16));
-    for _ in 0..nshards {
-        cuts.push(get_varint(body, &mut pos)?);
-    }
-    let nodes = get_varint(body, &mut pos)? as usize;
-    let mut snap = Vec::with_capacity(nodes.min(1 << 20));
-    for _ in 0..nodes {
-        let src = get_varint(body, &mut pos)?;
-        let total = get_varint(body, &mut pos)?;
-        let nedges = get_varint(body, &mut pos)? as usize;
-        let mut edges = Vec::with_capacity(nedges.min(1 << 20));
-        for _ in 0..nedges {
-            let dst = get_varint(body, &mut pos)?;
-            let count = get_varint(body, &mut pos)?;
-            edges.push((dst, count));
-        }
-        snap.push((src, total, edges));
-    }
+    let (epoch, cuts, snap) = get_snapshot_body(body, &mut pos)?;
     if pos != body.len() {
         return Err(CodecError::TrailingBytes(body.len() - pos));
     }
     Ok((epoch, cuts, snap))
 }
 
+/// Encode a differential checkpoint: the nodes dirtied since generation
+/// `parent`, with the cut points of *this* generation. Applies on top of
+/// the folded state of generations `..= parent` only.
+pub fn encode_delta(parent: u64, epoch: u64, cuts: &[u64], dirty: &Export) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + 16 * dirty.len());
+    buf.extend_from_slice(DELTA_MAGIC);
+    let body = DELTA_MAGIC.len();
+    put_varint(&mut buf, parent);
+    put_snapshot_body(&mut buf, epoch, cuts, dirty);
+    let crc = crc32(&buf[body..]);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Decode and validate a differential checkpoint: returns
+/// `(parent_generation, epoch, cuts, dirty_nodes)`.
+pub fn decode_delta(bytes: &[u8]) -> Result<(u64, u64, Vec<u64>, Export), CodecError> {
+    let body = checked_body(bytes, DELTA_MAGIC)?;
+    let mut pos = DELTA_MAGIC.len();
+    let parent = get_varint(body, &mut pos)?;
+    let (epoch, cuts, snap) = get_snapshot_body(body, &mut pos)?;
+    if pos != body.len() {
+        return Err(CodecError::TrailingBytes(body.len() - pos));
+    }
+    Ok((parent, epoch, cuts, snap))
+}
+
+/// Fold one delta generation into the accumulated base: every node in
+/// `delta` *replaces* its base entry (or is inserted). Both sides are
+/// sorted by src (export order) and stay sorted. Nodes never disappear —
+/// decay prunes edges, not nodes — so a node pruned empty arrives as a
+/// zero-edge entry, not an absence.
+pub fn fold_delta(base: &mut Export, delta: Export) {
+    if base.is_empty() {
+        *base = delta;
+        return;
+    }
+    for node in delta {
+        match base.binary_search_by_key(&node.0, |&(src, _, _)| src) {
+            Ok(i) => base[i] = node,
+            Err(i) => base.insert(i, node),
+        }
+    }
+}
+
 // ---- WAL record payload ----
 
-/// Append one WAL record payload (`seq`, then the batch) to `buf`.
-/// The frame (length + CRC) around it is the WAL writer's job.
+/// Record-kind tags (see the module docs for the payload grammar).
+const REC_BATCH: u64 = 0;
+const REC_DECAY: u64 = 1;
+const REC_REPAIR: u64 = 2;
+
+/// One decoded WAL record: the observation batch, or a §II.C maintenance
+/// operation logged as data so recovery and followers replay maintenance
+/// exactly instead of skipping it (DESIGN.md §6).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalOp {
+    /// An applied update batch (the shard-affine ingest unit).
+    Batch(Vec<(u64, u64)>),
+    /// One decay pass over the shard with this multiplier. The recorded
+    /// numerator/denominator (not the replaying process's config) drive
+    /// the replay, so a config change across a restart cannot skew it.
+    Decay { num: u64, den: u64 },
+    /// One order-repair sweep over the shard.
+    Repair,
+}
+
+/// Append one WAL batch-record payload (`seq`, kind 0, the batch) to
+/// `buf`. The frame (length + CRC) around it is the WAL writer's job.
+/// Split out from [`encode_op_record`] so the ingest hot path borrows the
+/// batch instead of materialising a `WalOp`.
 pub fn encode_record(buf: &mut Vec<u8>, seq: u64, batch: &[(u64, u64)]) {
     put_varint(buf, seq);
+    put_varint(buf, REC_BATCH);
     put_varint(buf, batch.len() as u64);
     for &(src, dst) in batch {
         put_varint(buf, src);
@@ -204,19 +319,55 @@ pub fn encode_record(buf: &mut Vec<u8>, seq: u64, batch: &[(u64, u64)]) {
     }
 }
 
-/// Decode one WAL record payload into `(seq, batch)`.
-pub fn decode_record(payload: &[u8]) -> Result<(u64, Vec<(u64, u64)>), CodecError> {
+/// Append one WAL record payload of any kind to `buf`.
+pub fn encode_op_record(buf: &mut Vec<u8>, seq: u64, op: &WalOp) {
+    match op {
+        WalOp::Batch(batch) => encode_record(buf, seq, batch),
+        WalOp::Decay { num, den } => {
+            put_varint(buf, seq);
+            put_varint(buf, REC_DECAY);
+            put_varint(buf, *num);
+            put_varint(buf, *den);
+        }
+        WalOp::Repair => {
+            put_varint(buf, seq);
+            put_varint(buf, REC_REPAIR);
+        }
+    }
+}
+
+/// Decode one WAL record payload into `(seq, op)`. An unknown kind tag is
+/// rejected (`BadMagic`): a frame that CRC-validated but carries a kind
+/// this build does not know cannot be safely skipped — its effects would
+/// be missing from the replayed state.
+pub fn decode_record(payload: &[u8]) -> Result<(u64, WalOp), CodecError> {
     let mut pos = 0usize;
     let seq = get_varint(payload, &mut pos)?;
-    let n = get_varint(payload, &mut pos)? as usize;
-    let mut batch = Vec::with_capacity(n.min(1 << 20));
-    for _ in 0..n {
-        let src = get_varint(payload, &mut pos)?;
-        let dst = get_varint(payload, &mut pos)?;
-        batch.push((src, dst));
-    }
+    let kind = get_varint(payload, &mut pos)?;
+    let op = match kind {
+        REC_BATCH => {
+            let n = get_varint(payload, &mut pos)? as usize;
+            let mut batch = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let src = get_varint(payload, &mut pos)?;
+                let dst = get_varint(payload, &mut pos)?;
+                batch.push((src, dst));
+            }
+            WalOp::Batch(batch)
+        }
+        REC_DECAY => {
+            let num = get_varint(payload, &mut pos)?;
+            let den = get_varint(payload, &mut pos)?;
+            if den == 0 {
+                return Err(CodecError::BadMagic);
+            }
+            WalOp::Decay { num, den }
+        }
+        REC_REPAIR => WalOp::Repair,
+        _ => return Err(CodecError::BadMagic),
+    };
     if pos != payload.len() {
         return Err(CodecError::TrailingBytes(payload.len() - pos));
     }
-    Ok((seq, batch))
+    Ok((seq, op))
 }

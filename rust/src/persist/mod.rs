@@ -23,10 +23,19 @@
 //! acked batch is lost, no batch is applied twice (cut points are exact
 //! batch boundaries). `fsync = batch | always` extends the guarantee to
 //! power loss; `never` covers process crashes only (the page cache
-//! survives SIGKILL). Decay/repair maintenance is *not* logged: recovery
-//! restores counts as of the last checkpoint plus raw tail updates, so a
-//! decay that ran after the last checkpoint is replayed conservatively
-//! (counts recover slightly larger). Checkpoint after decay to tighten.
+//! survives SIGKILL). Decay/repair maintenance is logged too (DESIGN.md
+//! §6): `Engine::decay` appends a `DecayRecord` per shard under the same
+//! ingest gate as batches, so recovery replays maintenance in exactly its
+//! sequence position instead of restoring conservatively-larger pre-decay
+//! counts, and followers decay in lockstep with the leader.
+//!
+//! Checkpoints are *incremental*: a generation is either a full snapshot
+//! (`ckpt-<gen>.snap`) or a differential (`ckpt-<gen>.delta`) holding only
+//! the nodes dirtied since the previous generation; the manifest chains
+//! base → delta → delta and recovery folds the chain. Compaction back to
+//! a full snapshot triggers on `[persist] delta_chain_max` /
+//! `delta_dirty_ratio`, so steady-state checkpoint cost scales with the
+//! write working set, not the model size.
 
 mod checkpoint;
 pub mod codec;
@@ -90,6 +99,13 @@ pub struct PersistConfig {
     pub checkpoint_interval: Option<Duration>,
     /// Checkpoint early once live WAL bytes exceed this.
     pub checkpoint_wal_bytes: u64,
+    /// Max differential generations on a checkpoint chain before the next
+    /// checkpoint compacts to a full snapshot (0 = always full).
+    pub delta_chain_max: usize,
+    /// Compact to a full snapshot when at least this fraction of nodes is
+    /// dirty — past that, a delta would approach full-snapshot size while
+    /// still lengthening the recovery fold.
+    pub delta_dirty_ratio: f64,
 }
 
 impl PersistConfig {
@@ -121,6 +137,21 @@ fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// Where the committed checkpoint chain stands: the newest full snapshot
+/// and the differential generations committed on top of it (DESIGN.md §6).
+/// Mutated only under the checkpoint serial lock; the mutex exists for
+/// the STATS reader.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaChain {
+    /// Generation of the newest full snapshot (0 = none committed yet).
+    pub base: u64,
+    /// Differential generations on top of it (`base+1 ..= base+len`).
+    pub len: usize,
+    /// Dirty-mark floor of the next differential: a node stamped at or
+    /// above this mark changed since the last committed generation.
+    pub floor: u64,
+}
+
 /// Shared durability state, owned by the `Engine` (one per process).
 /// Ingest workers call [`PersistState::append`] on the apply path; the
 /// checkpointer reads cut points and truncates through the same per-shard
@@ -140,6 +171,8 @@ pub struct PersistState {
     prev_cuts: Mutex<Vec<u64>>,
     /// Last committed checkpoint generation.
     generation: AtomicU64,
+    /// The committed base→delta chain the next checkpoint extends.
+    chain: Mutex<DeltaChain>,
     last_checkpoint: Mutex<Instant>,
     /// Serializes concurrent checkpoints (scheduler vs wire `SAVE`).
     ckpt_serial: Mutex<()>,
@@ -163,6 +196,7 @@ impl PersistState {
         cfg: PersistConfig,
         epoch: u64,
         generation: u64,
+        chain: DeltaChain,
         last_seqs: &[u64],
         prev_cuts: Vec<u64>,
         recovered_batches: u64,
@@ -184,6 +218,7 @@ impl PersistState {
             wals,
             prev_cuts: Mutex::new(prev_cuts),
             generation: AtomicU64::new(generation),
+            chain: Mutex::new(chain),
             last_checkpoint: Mutex::new(Instant::now()),
             ckpt_serial: Mutex::new(()),
             appends: Counter::new(),
@@ -210,6 +245,14 @@ impl PersistState {
     /// shard's single ingest worker.
     pub fn append(&self, shard: usize, batch: &[(u64, u64)]) -> std::io::Result<u64> {
         let seq = lock_clean(&self.wals[shard]).append(batch)?;
+        self.appends.inc();
+        Ok(seq)
+    }
+
+    /// Log one record of any kind (maintenance records and the follower's
+    /// replicated-op path).
+    pub fn append_op(&self, shard: usize, op: &codec::WalOp) -> std::io::Result<u64> {
+        let seq = lock_clean(&self.wals[shard]).append_op(op)?;
         self.appends.inc();
         Ok(seq)
     }
@@ -286,6 +329,16 @@ impl PersistState {
 
     pub fn generation(&self) -> u64 {
         self.generation.load(Ordering::Relaxed)
+    }
+
+    /// The committed checkpoint chain (cloned; the `ckpt_chain=` gauge and
+    /// the checkpointer's decision input).
+    pub fn delta_chain(&self) -> DeltaChain {
+        lock_clean(&self.chain).clone()
+    }
+
+    pub(crate) fn set_delta_chain(&self, chain: DeltaChain) {
+        *lock_clean(&self.chain) = chain;
     }
 
     pub(crate) fn set_generation(&self, generation: u64) {

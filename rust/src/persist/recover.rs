@@ -4,23 +4,27 @@
 //! State machine (every arrow is crash-safe to re-enter):
 //!
 //! ```text
-//! read MANIFEST ── ok ──▶ decode named snapshot ── ok ─▶ (gen, epoch, cuts, model)
-//!      │ missing/corrupt        │ corrupt
-//!      ▼                        ▼
-//! scan checkpoint/ for the newest ckpt-*.snap that decodes
-//!      │ none                   (cuts/epoch are embedded in the snapshot)
+//! read MANIFEST ── ok ──▶ decode base snapshot + fold its delta chain
+//!      │ missing/corrupt        │ corrupt base   │ corrupt delta k
+//!      ▼                        ▼                ▼ (fold the prefix ..k-1,
+//! scan checkpoint/ for the newest ckpt-*.snap      cuts of gen k-1, the
+//! that decodes, then fold the consecutive          rest replays from WAL)
+//! ckpt-*.delta generations after it
+//!      │ none
 //!      ▼
 //! empty model, epoch = newest wal/e<N> dir (or 1), cuts = zeros
 //!      │
 //!      ▼
-//! import snapshot, then stream wal/e<epoch>/shard-*/ records with
-//! seq > cut through the apply path (per-shard seq order, record-by-record
-//! via `wal::WalCursor`, torn tail tolerated)
+//! import the folded model, then stream wal/e<epoch>/shard-*/ records
+//! with seq > cut through the shared `Engine::apply_op` dispatch
+//! (per-shard seq order, record-by-record via `wal::WalCursor`, torn tail
+//! tolerated) — observation batches AND the logged decay/repair records,
+//! so recovered maintenance lands in exactly its sequence position
 //!      │
 //!      ▼
 //! shard layout unchanged?  ── yes ─▶ arm WAL writers at seq = last+1
-//!      │ no (shards reconfigured)
-//!      ▼
+//!      │ no (shards reconfigured: batches re-route; an old shard's decay
+//!      ▼  record replays onto exactly the srcs that shard owned)
 //! bump epoch, arm writers at seq 0, checkpoint immediately (commits the
 //! new epoch), delete the old epoch's directory
 //! ```
@@ -36,8 +40,8 @@ use std::sync::Arc;
 use crate::config::ServerConfig;
 use crate::coordinator::Engine;
 
-use super::checkpoint::{snapshot_generation, Manifest};
-use super::{codec, remove_stale_tmp, wal, PersistConfig, PersistState};
+use super::checkpoint::{delta_name, snapshot_generation, Manifest};
+use super::{codec, remove_stale_tmp, wal, DeltaChain, PersistConfig, PersistState};
 
 /// What recovery found and did (printed by `mcprioq serve`, asserted by
 /// the recovery tests).
@@ -45,14 +49,18 @@ use super::{codec, remove_stale_tmp, wal, PersistConfig, PersistState};
 pub struct RecoveryReport {
     /// Checkpoint generation recovered from (0 = none found).
     pub generation: u64,
+    /// Differential generations folded on top of the base snapshot.
+    pub snapshot_deltas: usize,
     /// WAL epoch recovered from.
     pub epoch: u64,
-    /// Src nodes imported from the snapshot.
+    /// Src nodes imported from the folded snapshot chain.
     pub snapshot_nodes: usize,
     /// WAL batches replayed on top of the snapshot.
     pub replayed_batches: u64,
     /// Updates (pairs) inside those batches.
     pub replayed_updates: u64,
+    /// Maintenance records (decay/repair) replayed in sequence position.
+    pub replayed_maintenance: u64,
     /// Shard directories whose tail record was torn (tolerated).
     pub torn_tails: usize,
     /// True when the shard count changed since the checkpoint: recovery
@@ -78,13 +86,14 @@ pub fn open_engine(
 
     let mut report = RecoveryReport::default();
 
-    // --- 1. newest valid checkpoint ---
+    // --- 1. newest valid checkpoint chain ---
     let loaded = load_checkpoint(&pcfg);
-    let (generation, epoch, cuts, snapshot) = match loaded {
+    let (generation, chain_base, deltas_folded, epoch, cuts, snapshot) = match loaded {
         Some(t) => t,
-        None => (0, detect_epoch(&pcfg)?, Vec::new(), Vec::new()),
+        None => (0, 0, 0, detect_epoch(&pcfg)?, Vec::new(), Vec::new()),
     };
     report.generation = generation;
+    report.snapshot_deltas = deltas_folded;
     report.epoch = epoch;
     report.snapshot_nodes = snapshot.len();
 
@@ -101,6 +110,9 @@ pub fn open_engine(
     }
     let engine = Engine::new(config, workers);
     engine.import_snapshot(&snapshot);
+    let nshards = engine.shard_count();
+    let layout_changed = old_shards != 0 && old_shards != nshards;
+    report.layout_changed = layout_changed;
     for (shard, dir) in &shard_dirs {
         let cut = cuts.get(*shard).copied().unwrap_or(0);
         // Record-by-record streaming replay: each WAL record goes straight
@@ -108,14 +120,39 @@ pub fn open_engine(
         // per-shard tail first, so recovery memory is bounded by one
         // record, not by the time since the last checkpoint. Old shards
         // hold disjoint src sets, so cross-shard order is irrelevant;
-        // within a shard the cursor yields apply order.
-        // `observe_batch_direct` re-routes by the *current* layout, which
-        // is what makes shard-count changes transparent here.
-        let stats = wal::replay_dir(dir, cut, |_seq, batch| {
-            engine.observe_batch_direct(&batch);
+        // within a shard the cursor yields apply order. Unchanged layouts
+        // go through the same `apply_op` dispatch the follower uses; a
+        // changed layout re-routes batches by the current layout and
+        // replays an old shard's decay records onto exactly the srcs that
+        // old shard owned (`Engine::route` under the old count).
+        let old_shard = *shard;
+        let stats = wal::replay_dir(dir, cut, |_seq, op| {
+            if !layout_changed {
+                engine.apply_op(old_shard, &op);
+                return;
+            }
+            match op {
+                codec::WalOp::Batch(batch) => engine.observe_batch_direct(&batch),
+                codec::WalOp::Decay { num, den } => {
+                    for chain in engine.chains() {
+                        chain.decay_where(num, den, |src| {
+                            Engine::route(src, old_shards) == old_shard
+                        });
+                    }
+                }
+                // Repair restores exact order and re-bases totals from the
+                // edge sums; at replay quiescence it is idempotent, so the
+                // unfiltered sweep is safe under any routing.
+                codec::WalOp::Repair => {
+                    for chain in engine.chains() {
+                        chain.repair();
+                    }
+                }
+            }
         })?;
         report.replayed_batches += stats.batches;
         report.replayed_updates += stats.updates;
+        report.replayed_maintenance += stats.maintenance;
         report.torn_tails += stats.torn as usize;
         if *shard < last_seqs.len() {
             last_seqs[*shard] = stats.last_seq.max(cut);
@@ -123,14 +160,21 @@ pub fn open_engine(
     }
 
     // --- 3. arm the WAL writers ---
-    let nshards = engine.shard_count();
-    report.layout_changed = old_shards != 0 && old_shards != nshards;
+    // In-memory dirty epochs reset on restart (every recovered node is
+    // stamped at the initial mark), so the chain floor re-arms at 0 and
+    // the first post-restart checkpoint is always full.
+    let chain = DeltaChain {
+        base: chain_base,
+        len: generation.saturating_sub(chain_base) as usize,
+        floor: 0,
+    };
     if report.layout_changed {
         let new_epoch = epoch + 1;
         let state = PersistState::create(
             pcfg.clone(),
             new_epoch,
             generation,
+            chain,
             &vec![0u64; nshards],
             vec![0u64; nshards],
             report.replayed_batches,
@@ -157,6 +201,7 @@ pub fn open_engine(
             pcfg.clone(),
             epoch.max(1),
             generation,
+            chain,
             &starts,
             prev_cuts,
             report.replayed_batches,
@@ -173,37 +218,25 @@ pub fn open_engine(
 
 /// Try the manifest first, then fall back to scanning for the newest
 /// snapshot that decodes (the manifest is a pointer, not the only truth).
+/// Returns `(generation, chain_base, deltas_folded, epoch, cuts, export)`
+/// with the delta chain already folded into the export.
 fn load_checkpoint(
     pcfg: &PersistConfig,
-) -> Option<(u64, u64, Vec<u64>, codec::Export)> {
+) -> Option<(u64, u64, usize, u64, Vec<u64>, codec::Export)> {
     if let Ok(text) = fs::read_to_string(pcfg.manifest_path()) {
         match Manifest::parse(&text) {
-            Ok(m) => {
-                match fs::read(pcfg.checkpoint_dir().join(&m.snapshot))
-                    .ok()
-                    .and_then(|b| codec::decode_snapshot(&b).ok())
-                {
-                    Some((epoch, cuts, snap)) => {
-                        // Trust the manifest for generation; the snapshot
-                        // carries its own epoch/cuts (they must agree —
-                        // both were written in one checkpoint).
-                        if epoch == m.epoch && cuts == m.wal_cuts {
-                            return Some((m.generation, epoch, cuts, snap));
-                        }
-                        eprintln!(
-                            "[persist] manifest/snapshot disagree, falling back to scan"
-                        );
-                    }
-                    None => eprintln!(
-                        "[persist] snapshot {} unreadable, falling back to scan",
-                        m.snapshot
-                    ),
-                }
-            }
+            Ok(m) => match load_manifest_chain(pcfg, &m) {
+                Some(loaded) => return Some(loaded),
+                None => eprintln!(
+                    "[persist] snapshot {} unreadable, falling back to scan",
+                    m.snapshot
+                ),
+            },
             Err(e) => eprintln!("[persist] bad manifest ({e}), falling back to scan"),
         }
     }
-    // Fallback: newest generation first.
+    // Fallback: the newest full snapshot that decodes, plus whatever
+    // consecutive delta generations after it still decode.
     let mut gens: Vec<(u64, std::path::PathBuf)> = fs::read_dir(pcfg.checkpoint_dir())
         .ok()?
         .flatten()
@@ -213,15 +246,76 @@ fn load_checkpoint(
         })
         .collect();
     gens.sort_unstable_by(|a, b| b.0.cmp(&a.0));
-    for (gen, path) in gens {
+    for (base, path) in gens {
         if let Some((epoch, cuts, snap)) =
             fs::read(&path).ok().and_then(|b| codec::decode_snapshot(&b).ok())
         {
-            return Some((gen, epoch, cuts, snap));
+            let (generation, folded, epoch, cuts, snap) =
+                fold_deltas(pcfg, base, epoch, cuts, snap, usize::MAX);
+            return Some((generation, base, folded, epoch, cuts, snap));
         }
         eprintln!("[persist] skipping unreadable snapshot {}", path.display());
     }
     None
+}
+
+/// Load the chain a parsed manifest names. `None` when the base snapshot
+/// itself is unreadable; a broken *delta* degrades to the decodable chain
+/// prefix (its cuts are older, so the WAL replays the difference).
+fn load_manifest_chain(
+    pcfg: &PersistConfig,
+    m: &Manifest,
+) -> Option<(u64, u64, usize, u64, Vec<u64>, codec::Export)> {
+    let base = snapshot_generation(&m.snapshot)?;
+    let (epoch, cuts, snap) = fs::read(pcfg.checkpoint_dir().join(&m.snapshot))
+        .ok()
+        .and_then(|b| codec::decode_snapshot(&b).ok())?;
+    let (generation, folded, epoch, cuts, snap) =
+        fold_deltas(pcfg, base, epoch, cuts, snap, m.deltas.len());
+    if generation == m.generation && (epoch != m.epoch || cuts != m.wal_cuts) {
+        // Both were written in one commit; a full-chain decode that
+        // disagrees with the manifest means cross-generation confusion.
+        eprintln!("[persist] manifest/snapshot disagree, falling back to scan");
+        return None;
+    }
+    Some((generation, base, folded, epoch, cuts, snap))
+}
+
+/// Fold up to `max_deltas` consecutive delta generations (`base+1`, …)
+/// into `snap`. Returns `(newest_generation, folded, epoch, cuts, snap)`
+/// where epoch/cuts come from the newest generation that decoded.
+fn fold_deltas(
+    pcfg: &PersistConfig,
+    base: u64,
+    mut epoch: u64,
+    mut cuts: Vec<u64>,
+    mut snap: codec::Export,
+    max_deltas: usize,
+) -> (u64, usize, u64, Vec<u64>, codec::Export) {
+    let mut generation = base;
+    let mut folded = 0usize;
+    while folded < max_deltas {
+        let name = delta_name(generation + 1);
+        let Some((parent, depoch, dcuts, dirty)) = fs::read(pcfg.checkpoint_dir().join(&name))
+            .ok()
+            .and_then(|b| codec::decode_delta(&b).ok())
+        else {
+            break;
+        };
+        if parent != generation || depoch != epoch || dcuts.len() != cuts.len() {
+            eprintln!(
+                "[persist] delta {name} does not chain onto generation {generation}; \
+                 recovering the chain prefix"
+            );
+            break;
+        }
+        codec::fold_delta(&mut snap, dirty);
+        generation += 1;
+        folded += 1;
+        epoch = depoch;
+        cuts = dcuts;
+    }
+    (generation, folded, epoch, cuts, snap)
 }
 
 /// Without a checkpoint the epoch comes from the newest `e<N>` directory

@@ -4,12 +4,20 @@
 //! live in `rust/tests/persist_recovery.rs`.
 
 use super::checkpoint::Manifest;
-use super::codec::{self, CodecError};
+use super::codec::{self, CodecError, WalOp};
 use super::wal::{self, ShardWal};
 use super::FsyncPolicy;
 use crate::testutil::{Rng64, TempDir};
 
 use std::time::Duration;
+
+/// Unwrap a batch op (most WAL tests only write batches).
+fn as_batch(op: WalOp) -> Vec<(u64, u64)> {
+    match op {
+        WalOp::Batch(batch) => batch,
+        other => panic!("expected a batch record, got {other:?}"),
+    }
+}
 
 fn wal_cfg(dir: std::path::PathBuf, segment_bytes: u64) -> ShardWal {
     ShardWal::open(dir, 0, FsyncPolicy::Never, Duration::from_millis(50), segment_bytes)
@@ -94,9 +102,77 @@ fn record_codec_roundtrip() {
     codec::encode_record(&mut buf, 42, &batch);
     let (seq, got) = codec::decode_record(&buf).unwrap();
     assert_eq!(seq, 42);
-    assert_eq!(got, batch);
+    assert_eq!(got, WalOp::Batch(batch.clone()));
+    // The dedicated batch encoder and the generic op encoder are
+    // byte-identical (the hot path takes the former).
+    let mut via_op = Vec::new();
+    codec::encode_op_record(&mut via_op, 42, &WalOp::Batch(batch));
+    assert_eq!(via_op, buf);
     buf.push(0);
     assert_eq!(codec::decode_record(&buf), Err(CodecError::TrailingBytes(1)));
+}
+
+#[test]
+fn maintenance_record_codec_roundtrip() {
+    for op in [WalOp::Decay { num: 1, den: 2 }, WalOp::Decay { num: 9, den: 10 }, WalOp::Repair] {
+        let mut buf = Vec::new();
+        codec::encode_op_record(&mut buf, 7, &op);
+        assert_eq!(codec::decode_record(&buf).unwrap(), (7, op.clone()));
+        // Truncation anywhere is an error, never a partial Ok.
+        for cut in 0..buf.len() {
+            assert!(codec::decode_record(&buf[..cut]).is_err(), "{op:?} cut {cut}");
+        }
+    }
+    // A zero decay denominator and an unknown kind tag are rejected — a
+    // CRC-valid frame this build cannot apply must fail recovery loudly.
+    let mut bad = Vec::new();
+    codec::put_varint(&mut bad, 7);
+    codec::put_varint(&mut bad, 1); // decay
+    codec::put_varint(&mut bad, 1);
+    codec::put_varint(&mut bad, 0); // den = 0
+    assert!(codec::decode_record(&bad).is_err());
+    let mut unknown = Vec::new();
+    codec::put_varint(&mut unknown, 7);
+    codec::put_varint(&mut unknown, 99);
+    assert!(codec::decode_record(&unknown).is_err());
+}
+
+#[test]
+fn delta_codec_roundtrip_and_fold() {
+    let base: codec::Export = vec![
+        (1, 7, vec![(2, 4), (3, 3)]),
+        (5, 1, vec![(6, 1)]),
+        (9, 2, vec![(4, 2)]),
+    ];
+    // Delta: replaces node 5 (decayed empty), updates node 9, adds node 12.
+    let dirty: codec::Export =
+        vec![(5, 0, vec![]), (9, 4, vec![(4, 3), (8, 1)]), (12, 1, vec![(1, 1)])];
+    let bytes = codec::encode_delta(3, 2, &[10, 11], &dirty);
+    let (parent, epoch, cuts, got) = codec::decode_delta(&bytes).unwrap();
+    assert_eq!((parent, epoch, &cuts), (3, 2, &vec![10, 11]));
+    assert_eq!(got, dirty);
+    // Re-encoding is byte-identical; a full-snapshot decode rejects it.
+    assert_eq!(codec::encode_delta(parent, epoch, &cuts, &got), bytes);
+    assert_eq!(codec::decode_snapshot(&bytes), Err(CodecError::BadMagic));
+    for cut in 0..bytes.len() {
+        assert!(codec::decode_delta(&bytes[..cut]).is_err(), "cut {cut}");
+    }
+
+    let mut folded = base.clone();
+    codec::fold_delta(&mut folded, dirty.clone());
+    assert_eq!(
+        folded,
+        vec![
+            (1, 7, vec![(2, 4), (3, 3)]),
+            (5, 0, vec![]),
+            (9, 4, vec![(4, 3), (8, 1)]),
+            (12, 1, vec![(1, 1)]),
+        ]
+    );
+    // Folding into an empty base is the delta itself.
+    let mut empty: codec::Export = Vec::new();
+    codec::fold_delta(&mut empty, dirty.clone());
+    assert_eq!(empty, dirty);
 }
 
 // ---- wal ----
@@ -117,8 +193,8 @@ fn wal_append_replay_roundtrip() {
     drop(wal);
 
     let mut replayed = Vec::new();
-    let stats = wal::replay_dir(&tmp.join("shard-0000"), 0, |seq, batch| {
-        replayed.push((seq, batch));
+    let stats = wal::replay_dir(&tmp.join("shard-0000"), 0, |seq, op| {
+        replayed.push((seq, as_batch(op)));
     })
     .unwrap();
     assert_eq!(stats.batches, 50);
@@ -171,6 +247,30 @@ fn wal_rotates_and_truncates_sealed_segments() {
 }
 
 #[test]
+fn covered_bytes_sizes_without_deleting() {
+    let tmp = TempDir::new("wal-covered");
+    let dir = tmp.join("shard-0000");
+    let mut wal = wal_cfg(dir.clone(), 16); // rotate every append
+    for i in 0..10u64 {
+        wal.append(&[(i, i + 1)]).unwrap();
+    }
+    // Sizing at a cut matches what truncation then frees, and frees less
+    // at a pinned (lower) cut — the max_pin_lag_bytes arithmetic.
+    let at_cut = wal.covered_bytes(8).unwrap();
+    let at_pin = wal.covered_bytes(3).unwrap();
+    assert!(at_cut > at_pin, "{at_cut} vs {at_pin}");
+    assert!(at_pin > 0);
+    // The one-scan pinned-span sizing agrees with the two-point difference.
+    assert_eq!(wal.pinned_bytes(3, 8).unwrap(), at_cut - at_pin);
+    assert_eq!(wal.pinned_bytes(0, 8).unwrap(), at_cut);
+    assert_eq!(wal.pinned_bytes(8, 8).unwrap(), 0);
+    let segs_before = wal::scan_segments(&dir).unwrap().len();
+    assert_eq!(wal.covered_bytes(8).unwrap(), at_cut, "sizing is read-only");
+    assert_eq!(wal::scan_segments(&dir).unwrap().len(), segs_before);
+    assert_eq!(wal.truncate_upto(8).unwrap(), at_cut);
+}
+
+#[test]
 fn wal_tolerates_torn_tail_and_detects_gaps() {
     let tmp = TempDir::new("wal-torn");
     let dir = tmp.join("shard-0000");
@@ -219,6 +319,33 @@ fn wal_tolerates_torn_tail_and_detects_gaps() {
 }
 
 #[test]
+fn crc_valid_unknown_record_fails_replay_loudly() {
+    let tmp = TempDir::new("wal-poison");
+    let dir = tmp.join("shard-0000");
+    let mut wal = wal_cfg(dir.clone(), 1 << 20);
+    wal.append(&[(1, 2)]).unwrap();
+    wal.append(&[(3, 4)]).unwrap();
+    drop(wal);
+    // Hand-craft a CRC-valid frame carrying a record kind this build does
+    // not know (a newer binary wrote it, then rolled back). Unlike a torn
+    // tail, skipping it would silently drop durable history — replay must
+    // fail loudly instead of "recovering" a stale prefix.
+    let mut payload = Vec::new();
+    codec::put_varint(&mut payload, 3); // the expected next seq
+    codec::put_varint(&mut payload, 99); // unknown kind
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&codec::crc32(&payload).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    let seg = wal::scan_segments(&dir).unwrap().remove(0);
+    let mut bytes = std::fs::read(&seg.path).unwrap();
+    bytes.extend_from_slice(&frame);
+    std::fs::write(&seg.path, &bytes).unwrap();
+    let err = wal::replay_dir(&dir, 0, |_, _| {}).unwrap_err();
+    assert!(err.contains("undecodable"), "{err}");
+}
+
+#[test]
 fn wal_restart_resumes_contiguously() {
     let tmp = TempDir::new("wal-resume");
     let dir = tmp.join("shard-0000");
@@ -261,9 +388,12 @@ fn cursor_tails_live_appends_across_rotation() {
     assert_eq!(cursor.poll().unwrap(), None, "empty dir: caught up");
 
     wal.append(&[(1, 2), (1, 3)]).unwrap();
+    wal.append_op(&WalOp::Decay { num: 1, den: 2 }).unwrap();
     wal.append(&[(4, 5)]).unwrap();
-    assert_eq!(cursor.poll().unwrap(), Some((1, vec![(1, 2), (1, 3)])));
-    assert_eq!(cursor.poll().unwrap(), Some((2, vec![(4, 5)])));
+    assert_eq!(cursor.poll().unwrap(), Some((1, WalOp::Batch(vec![(1, 2), (1, 3)]))));
+    // Maintenance records stream through the same cursor, in seq order.
+    assert_eq!(cursor.poll().unwrap(), Some((2, WalOp::Decay { num: 1, den: 2 })));
+    assert_eq!(cursor.poll().unwrap(), Some((3, WalOp::Batch(vec![(4, 5)]))));
     assert_eq!(cursor.poll().unwrap(), None, "caught up with the writer");
 
     // The writer keeps going; the same cursor picks the new records up.
@@ -274,7 +404,7 @@ fn cursor_tails_live_appends_across_rotation() {
     while let Some((seq, _)) = cursor.poll().unwrap() {
         seen.push(seq);
     }
-    assert_eq!(seen, (3..=22).collect::<Vec<u64>>());
+    assert_eq!(seen, (4..=23).collect::<Vec<u64>>());
     assert!(!cursor.torn());
     assert!(wal::scan_segments(&dir).unwrap().len() > 1, "rotation must have happened");
 }
@@ -300,12 +430,12 @@ fn cursor_skips_to_cut_and_matches_replay() {
             streamed.push(rec);
         }
         let mut replayed = Vec::new();
-        wal::replay_dir(&dir, cut, |seq, batch| replayed.push((seq, batch))).unwrap();
+        wal::replay_dir(&dir, cut, |seq, op| replayed.push((seq, op))).unwrap();
         assert_eq!(streamed, replayed, "cut {cut}");
         assert_eq!(streamed.len(), 30 - cut as usize, "cut {cut}");
-        for (i, (seq, batch)) in streamed.iter().enumerate() {
+        for (i, (seq, op)) in streamed.iter().enumerate() {
             assert_eq!(*seq, cut + i as u64 + 1);
-            assert_eq!(batch, &batches[(cut as usize) + i]);
+            assert_eq!(op, &WalOp::Batch(batches[(cut as usize) + i].clone()));
         }
         assert_eq!(cursor.last_seq(), 30);
     }
@@ -327,10 +457,10 @@ fn cursor_retries_partial_tail_until_complete() {
     // permanently — once the rest lands, the record comes through.
     std::fs::write(&seg.path, &full[..full.len() - 5]).unwrap();
     let mut cursor = wal::WalCursor::new(dir.clone(), 0);
-    assert_eq!(cursor.poll().unwrap(), Some((1, vec![(1, 1)])));
+    assert_eq!(cursor.poll().unwrap(), Some((1, WalOp::Batch(vec![(1, 1)]))));
     assert_eq!(cursor.poll().unwrap(), None, "partial frame is not yielded");
     std::fs::write(&seg.path, &full).unwrap();
-    assert_eq!(cursor.poll().unwrap(), Some((2, vec![(2, 2), (2, 3)])));
+    assert_eq!(cursor.poll().unwrap(), Some((2, WalOp::Batch(vec![(2, 2), (2, 3)]))));
     assert_eq!(cursor.poll().unwrap(), None);
 }
 
@@ -366,6 +496,7 @@ fn manifest_roundtrip_and_validation() {
         epoch: 2,
         shards: 3,
         snapshot: "ckpt-000007.snap".into(),
+        deltas: Vec::new(),
         wal_cuts: vec![10, 0, 4],
     };
     let parsed = Manifest::parse(&m.render()).unwrap();
@@ -375,6 +506,27 @@ fn manifest_roundtrip_and_validation() {
     assert!(Manifest::parse(&bad).is_err());
     assert!(Manifest::parse("not toml at all =").is_err());
     assert!(Manifest::parse("[checkpoint]\ngeneration = 1\n").is_err());
+
+    // A chained manifest round-trips, and the chain must be contiguous
+    // generations reaching `generation`.
+    let chained = Manifest {
+        generation: 9,
+        epoch: 2,
+        shards: 3,
+        snapshot: "ckpt-000007.snap".into(),
+        deltas: vec!["ckpt-000008.delta".into(), "ckpt-000009.delta".into()],
+        wal_cuts: vec![20, 5, 9],
+    };
+    assert_eq!(Manifest::parse(&chained.render()).unwrap(), chained);
+    let gap = chained.render().replace("ckpt-000008.delta", "ckpt-000006.delta");
+    assert!(Manifest::parse(&gap).is_err(), "non-consecutive delta chain");
+    let short = chained.render().replace(", \"ckpt-000009.delta\"", "");
+    assert!(Manifest::parse(&short).is_err(), "chain not reaching generation");
+
+    // A PR 3-era manifest (no `deltas` key) parses as an empty chain.
+    let legacy = m.render().replace("deltas = []\n", "");
+    let parsed = Manifest::parse(&legacy).unwrap();
+    assert!(parsed.deltas.is_empty());
 }
 
 #[test]
@@ -385,5 +537,55 @@ fn fsync_policy_parses() {
     assert!(FsyncPolicy::parse("sometimes").is_err());
     for p in [FsyncPolicy::Never, FsyncPolicy::Batch, FsyncPolicy::Always] {
         assert_eq!(FsyncPolicy::parse(p.as_str()).unwrap(), p);
+    }
+}
+
+// ---- follower retention pins vs truncation ----
+
+#[test]
+fn max_pin_lag_bytes_overrides_stalled_pin() {
+    use crate::config::{PersistSection, ReplicateSection, ServerConfig};
+    let tmp = TempDir::new("pin-lag");
+    let mk = |max_pin: u64| ServerConfig {
+        shards: 1,
+        queue_capacity: 4_096,
+        persist: PersistSection {
+            data_dir: tmp.join(&format!("d{max_pin}")).to_string_lossy().into_owned(),
+            fsync: "never".into(),
+            checkpoint_interval_ms: 0,
+            // Tiny segments: truncation has sealed segments to take.
+            segment_bytes: 512,
+            ..PersistSection::default()
+        },
+        replicate: ReplicateSection {
+            max_pin_lag_bytes: max_pin,
+            ..ReplicateSection::default()
+        },
+        ..Default::default()
+    };
+    for (max_pin, expect_override) in [(2_048u64, true), (0u64, false)] {
+        let (engine, _) = crate::persist::open_engine(&mk(max_pin), 1).unwrap();
+        let persist = std::sync::Arc::clone(engine.persist_state().unwrap());
+        // A follower stream stalled at seq 0 (dead peer whose pin never
+        // advanced) — without the escape hatch it pins the whole log.
+        let pin = persist.pin_create(vec![0]);
+        let pairs: Vec<(u64, u64)> = (0..4_000u64).map(|i| (i % 37, i % 53)).collect();
+        for chunk in pairs.chunks(100) {
+            assert_eq!(engine.observe_batch(chunk), chunk.len());
+        }
+        engine.quiesce();
+        engine.checkpoint().unwrap();
+        let freed = engine.checkpoint().unwrap().wal_freed;
+        let dir = persist.config().shard_dir(1, 0);
+        let first = wal::scan_segments(&dir).unwrap().first().unwrap().first_seq;
+        if expect_override {
+            assert!(freed > 0, "escape hatch must let truncation proceed");
+            assert!(first > 1, "oldest segment must move past the stalled pin");
+        } else {
+            assert_eq!(freed, 0, "max_pin_lag_bytes = 0 honours the pin forever");
+            assert_eq!(first, 1, "whole log retained for the pinned follower");
+        }
+        persist.pin_drop(pin);
+        engine.shutdown();
     }
 }

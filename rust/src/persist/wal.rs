@@ -7,8 +7,13 @@
 //! ```text
 //! frame  len: u32 LE   payload byte length
 //!        crc: u32 LE   crc32(payload)
-//!        payload       codec::encode_record(seq, batch)
+//!        payload       codec::encode_op_record(seq, op)
 //! ```
+//!
+//! Format v2 (`MCPQWAL2`): record payloads carry a kind tag so §II.C
+//! maintenance (decay / repair) is logged as replayable data alongside
+//! observation batches (DESIGN.md §6). A v1 segment fails the magic check
+//! and recovery reports it as corruption rather than misreading it.
 //!
 //! Invariants the reader checks and the writer maintains:
 //!
@@ -34,7 +39,7 @@ use super::codec;
 use super::FsyncPolicy;
 
 /// Magic prefix of every WAL segment file.
-pub const SEGMENT_MAGIC: &[u8; 8] = b"MCPQWAL1";
+pub const SEGMENT_MAGIC: &[u8; 8] = b"MCPQWAL2";
 
 /// Frame header bytes (len + crc).
 const FRAME_HEADER: usize = 8;
@@ -110,10 +115,23 @@ impl ShardWal {
     /// Append one batch as a single framed record; returns its sequence
     /// number. One `write` syscall per record; fsync per policy.
     pub fn append(&mut self, batch: &[(u64, u64)]) -> io::Result<u64> {
+        self.append_encoded(|frame, seq| codec::encode_record(frame, seq, batch))
+    }
+
+    /// Append one record of any kind (maintenance records share the batch
+    /// frame path, so decay/repair get contiguous seqs for free).
+    pub fn append_op(&mut self, op: &codec::WalOp) -> io::Result<u64> {
+        self.append_encoded(|frame, seq| codec::encode_op_record(frame, seq, op))
+    }
+
+    fn append_encoded(
+        &mut self,
+        encode: impl FnOnce(&mut Vec<u8>, u64),
+    ) -> io::Result<u64> {
         let seq = self.next_seq;
         self.frame.clear();
         self.frame.extend_from_slice(&[0u8; FRAME_HEADER]);
-        codec::encode_record(&mut self.frame, seq, batch);
+        encode(&mut self.frame, seq);
         let payload_len = (self.frame.len() - FRAME_HEADER) as u32;
         let crc = codec::crc32(&self.frame[FRAME_HEADER..]);
         self.frame[..4].copy_from_slice(&payload_len.to_le_bytes());
@@ -204,21 +222,68 @@ impl ShardWal {
     /// `<= cut + 1`; the newest segment (no successor bound) and the open
     /// segment are always kept. Returns the bytes freed.
     pub fn truncate_upto(&mut self, cut: u64) -> io::Result<u64> {
-        let segs = scan_segments(&self.dir)?;
-        let current = self.seg.as_ref().map(|s| s.path.clone());
         let mut freed = 0u64;
-        for (i, seg) in segs.iter().enumerate() {
-            let covered = match segs.get(i + 1) {
-                Some(next) => next.first_seq <= cut.saturating_add(1),
-                None => false,
-            };
-            if covered && Some(&seg.path) != current.as_ref() {
-                fs::remove_file(&seg.path)?;
-                freed += seg.bytes;
-            }
-        }
+        self.for_covered(cut, |seg, _| {
+            fs::remove_file(&seg.path)?;
+            freed += seg.bytes;
+            Ok(())
+        })?;
         self.live_bytes = self.live_bytes.saturating_sub(freed);
         Ok(freed)
+    }
+
+    /// Bytes [`ShardWal::truncate_upto`] would free at `cut` without
+    /// deleting anything.
+    pub fn covered_bytes(&self, cut: u64) -> io::Result<u64> {
+        let mut bytes = 0u64;
+        self.for_covered(cut, |seg, _| {
+            bytes += seg.bytes;
+            Ok(())
+        })?;
+        Ok(bytes)
+    }
+
+    /// Bytes truncation would free at `cut` but not at `floor` — the log a
+    /// retention pin at `floor` is holding back, measured in one directory
+    /// scan (the checkpointer compares it against the
+    /// `[replicate] max_pin_lag_bytes` escape hatch every generation).
+    pub fn pinned_bytes(&self, floor: u64, cut: u64) -> io::Result<u64> {
+        let mut pinned = 0u64;
+        self.for_covered(cut, |seg, succ_first| {
+            // Same deletability rule, tighter bound: covered at `cut` but
+            // not at `floor` = retained only because of the pin.
+            if !Self::seq_covered(succ_first, floor) {
+                pinned += seg.bytes;
+            }
+            Ok(())
+        })?;
+        Ok(pinned)
+    }
+
+    /// One deletability rule for truncation and both sizing paths: a
+    /// segment is fully covered by `cut` when its successor's first seq
+    /// (`succ_first`) is `<= cut + 1`.
+    fn seq_covered(succ_first: u64, cut: u64) -> bool {
+        succ_first <= cut.saturating_add(1)
+    }
+
+    /// Visit every sealed, non-current segment fully covered by `cut`,
+    /// passing its successor's first seq for tighter-bound checks.
+    fn for_covered(
+        &self,
+        cut: u64,
+        mut f: impl FnMut(&SegmentInfo, u64) -> io::Result<()>,
+    ) -> io::Result<()> {
+        let segs = scan_segments(&self.dir)?;
+        let current = self.seg.as_ref().map(|s| s.path.clone());
+        for (i, seg) in segs.iter().enumerate() {
+            let Some(next) = segs.get(i + 1) else { continue };
+            if Self::seq_covered(next.first_seq, cut) && Some(&seg.path) != current.as_ref()
+            {
+                f(seg, next.first_seq)?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -270,10 +335,12 @@ pub fn scan_segments(dir: &Path) -> io::Result<Vec<SegmentInfo>> {
 /// Outcome of replaying one shard directory.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct ReplayStats {
-    /// Batches handed to the sink (seq strictly after the cut).
+    /// Batch records handed to the sink (seq strictly after the cut).
     pub batches: u64,
-    /// Updates (pairs) handed to the sink.
+    /// Updates (pairs) inside those batches.
     pub updates: u64,
+    /// Maintenance records (decay/repair) handed to the sink.
+    pub maintenance: u64,
     /// Highest valid sequence number seen (0 = none).
     pub last_seq: u64,
     /// True if replay stopped at a torn/corrupt tail record.
@@ -293,14 +360,19 @@ pub struct ReplayStats {
 pub fn replay_dir(
     dir: &Path,
     cut: u64,
-    mut sink: impl FnMut(u64, Vec<(u64, u64)>),
+    mut sink: impl FnMut(u64, codec::WalOp),
 ) -> Result<ReplayStats, String> {
     let mut cursor = WalCursor::new(dir.to_path_buf(), cut);
     let mut stats = ReplayStats::default();
-    while let Some((seq, batch)) = cursor.poll()? {
-        stats.batches += 1;
-        stats.updates += batch.len() as u64;
-        sink(seq, batch);
+    while let Some((seq, op)) = cursor.poll()? {
+        match &op {
+            codec::WalOp::Batch(batch) => {
+                stats.batches += 1;
+                stats.updates += batch.len() as u64;
+            }
+            codec::WalOp::Decay { .. } | codec::WalOp::Repair => stats.maintenance += 1,
+        }
+        sink(seq, op);
     }
     stats.last_seq = cursor.last_seq();
     stats.torn = cursor.torn();
@@ -372,13 +444,19 @@ impl SegReader {
 
 /// One step of [`WalCursor::poll`] inside the current segment.
 enum Step {
-    Record(u64, Vec<(u64, u64)>),
+    Record(u64, codec::WalOp),
     /// The file ends mid-frame (for now): retryable on a live tail.
     NeedMore,
     /// Bytes are present but don't form the expected frame (bad magic/CRC/
     /// seq). Also retryable on a live tail — a reader can observe a frame's
     /// length header before its payload bytes land.
     Bad,
+    /// Not a torn tail: the bytes are complete but wrong in a way only a
+    /// writer (or a format change) produces — a full 8-byte magic that
+    /// isn't ours (v1 segment, foreign file), or a CRC-valid frame whose
+    /// payload does not decode (unknown record kind). Skipping either
+    /// would silently drop every durable record behind it. Hard error.
+    Poison(String),
 }
 
 /// Streaming reader over one shard's segmented log: yields records with
@@ -439,7 +517,7 @@ impl WalCursor {
     /// Next record with `seq > cut`, or `Ok(None)` when the durable log is
     /// exhausted *for now*. Errors are real corruption (sequence gaps,
     /// overlapping segments, WAL holes) — never a torn tail.
-    pub fn poll(&mut self) -> Result<Option<(u64, Vec<(u64, u64)>)>, String> {
+    pub fn poll(&mut self) -> Result<Option<(u64, codec::WalOp)>, String> {
         loop {
             if self.seg.is_none() && !self.open_first()? {
                 return Ok(None);
@@ -448,12 +526,16 @@ impl WalCursor {
             let step = read_step(seg, self.expected)
                 .map_err(|e| format!("{}: {e}", seg.path.display()))?;
             match step {
-                Step::Record(seq, batch) => {
+                Step::Record(seq, op) => {
                     self.expected = seq + 1;
                     self.last_seq = seq;
                     if seq > self.cut {
-                        return Ok(Some((seq, batch)));
+                        return Ok(Some((seq, op)));
                     }
+                }
+                Step::Poison(e) => {
+                    let seg = self.seg.as_ref().expect("segment open");
+                    return Err(format!("{}: {e}", seg.path.display()));
                 }
                 Step::NeedMore | Step::Bad => {
                     let seg = self.seg.as_ref().expect("segment open");
@@ -549,8 +631,18 @@ fn read_step(seg: &mut SegReader, expected: u64) -> io::Result<Step> {
         if !seg.ensure(SEGMENT_MAGIC.len())? {
             return Ok(Step::NeedMore);
         }
-        if &seg.buf[seg.pos..seg.pos + SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
-            return Ok(Step::Bad);
+        let magic = &seg.buf[seg.pos..seg.pos + SEGMENT_MAGIC.len()];
+        if magic != SEGMENT_MAGIC {
+            // A complete wrong magic is never a torn tail (the magic is
+            // the first write to a fresh segment): it is an old-format
+            // segment or a foreign file. Tolerating it as torn would
+            // silently skip the whole segment's durable history.
+            return Ok(Step::Poison(format!(
+                "bad segment magic {:?} (expected {:?} — old WAL format? \
+                 recover with the writing version, checkpoint, then upgrade)",
+                String::from_utf8_lossy(magic),
+                String::from_utf8_lossy(SEGMENT_MAGIC),
+            )));
         }
         seg.consume(SEGMENT_MAGIC.len());
         seg.magic_ok = true;
@@ -568,13 +660,18 @@ fn read_step(seg: &mut SegReader, expected: u64) -> io::Result<Step> {
     if codec::crc32(payload) != crc {
         return Ok(Step::Bad);
     }
-    let (seq, batch) = match codec::decode_record(payload) {
+    let (seq, op) = match codec::decode_record(payload) {
         Ok(r) => r,
-        Err(_) => return Ok(Step::Bad),
+        Err(e) => {
+            return Ok(Step::Poison(format!(
+                "record seq {expected} is CRC-valid but undecodable ({e}); \
+                 refusing to skip durable history (wrong binary version?)"
+            )))
+        }
     };
     if seq != expected {
         return Ok(Step::Bad);
     }
     seg.consume(FRAME_HEADER + len);
-    Ok(Step::Record(seq, batch))
+    Ok(Step::Record(seq, op))
 }

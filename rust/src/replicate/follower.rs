@@ -35,12 +35,14 @@ use std::time::{Duration, Instant};
 
 use crate::config::{ReplicateConfig, ServerConfig};
 use crate::coordinator::{connect_backoff, BoundedQueue, Engine, Request};
+use crate::persist::codec::WalOp;
 use crate::persist::{codec, install_snapshot, open_engine};
 
 use super::{wire, ReplicaState};
 
-/// One streamed WAL record queued for its shard's apply worker.
-type ReplRecord = (u64, Vec<(u64, u64)>);
+/// One streamed WAL record (batch or maintenance) queued for its shard's
+/// apply worker.
+type ReplRecord = (u64, WalOp);
 
 /// Records buffered per shard between the link and its apply worker
 /// (records are whole leader batches, so this is a deep buffer; a full
@@ -281,7 +283,7 @@ fn apply_loop(
             }
             continue;
         }
-        for (seq, batch) in records {
+        for (seq, op) in records {
             let applied = state.applied(shard);
             if seq <= applied {
                 continue; // reconnect overlap: already applied (and logged)
@@ -293,11 +295,15 @@ fn apply_loop(
                 ));
                 return;
             }
-            if let Err(e) = engine.apply_replicated(shard, seq, &batch) {
+            if let Err(e) = engine.apply_replicated(shard, seq, &op) {
                 state.set_fault(e);
                 return;
             }
-            state.note_applied(shard, seq, batch.len());
+            let updates = match &op {
+                WalOp::Batch(batch) => batch.len(),
+                WalOp::Decay { .. } | WalOp::Repair => 0,
+            };
+            state.note_applied(shard, seq, updates);
         }
     }
 }
@@ -379,7 +385,7 @@ fn consume_stream(
                 let msg = wire::parse(line.trim_end());
                 line.clear();
                 match msg {
-                    Ok(wire::StreamMsg::Record { shard, seq, pairs }) => {
+                    Ok(wire::StreamMsg::Record { shard, seq, op }) => {
                         state.note_contact();
                         if shard >= queues.len() {
                             state.set_fault(format!(
@@ -389,7 +395,7 @@ fn consume_stream(
                             return;
                         }
                         state.note_head(shard, seq);
-                        if !push_with_backpressure(&queues[shard], (seq, pairs), state, finished)
+                        if !push_with_backpressure(&queues[shard], (seq, op), state, finished)
                         {
                             return;
                         }

@@ -49,6 +49,16 @@ const IDLE_POLL: Duration = Duration::from_millis(2);
 /// spell, well under the heartbeat cadence.
 const IDLE_POLL_MAX: Duration = Duration::from_millis(64);
 
+/// Floor of the per-write stall timeout on the follower socket. A
+/// SIGKILLed follower surfaces as an immediate write error, but a
+/// *half-open* peer (cable pull, frozen VM) accepts nothing while TCP
+/// keeps buffering: without a bound the streamer thread blocks for the
+/// kernel's multi-minute retry horizon with the retention pin held, and
+/// one dead follower stalls WAL truncation indefinitely. A stalled write
+/// ends the stream, the `PinGuard` drops the pin, and the follower
+/// renegotiates (log catch-up or snapshot) when it actually returns.
+const WRITE_STALL_FLOOR: Duration = Duration::from_secs(5);
+
 /// Drops the follower's WAL retention pin when the stream ends, however
 /// it ends.
 struct PinGuard {
@@ -79,6 +89,12 @@ pub fn serve_follower(
         writer.flush()?;
         return Ok(());
     };
+    // Bound every write so a half-open follower cannot hold the retention
+    // pin forever (see WRITE_STALL_FLOOR). Generous relative to the
+    // heartbeat so an alive-but-slow follower backpressures (TCP window)
+    // without being cut off by one congested interval.
+    let stall = engine.replicate_config().heartbeat.saturating_mul(20).max(WRITE_STALL_FLOOR);
+    writer.get_ref().set_write_timeout(Some(stall)).ok();
     let nshards = engine.shard_count();
     let epoch = persist.epoch();
 
@@ -179,9 +195,9 @@ pub fn serve_follower(
         for (shard, cursor) in cursors.iter_mut().enumerate() {
             for _ in 0..RECORDS_PER_ROUND {
                 match cursor.poll() {
-                    Ok(Some((seq, batch))) => {
+                    Ok(Some((seq, op))) => {
                         line.clear();
-                        wire::write_record(&mut line, shard, seq, &batch);
+                        wire::write_record(&mut line, shard, seq, &op);
                         line.push('\n');
                         writer.write_all(line.as_bytes())?;
                         pin.persist.pin_advance(pin.id, shard, seq);

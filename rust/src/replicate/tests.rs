@@ -5,15 +5,32 @@
 
 use super::wire::{self, StreamMsg};
 use super::ReplicaState;
+use crate::persist::codec::WalOp;
 
 #[test]
 fn stream_grammar_roundtrip() {
     let mut line = String::new();
-    wire::write_record(&mut line, 3, 42, &[(1, 2), (9, 7)]);
+    wire::write_record(&mut line, 3, 42, &WalOp::Batch(vec![(1, 2), (9, 7)]));
     assert_eq!(line, "RREC 3 42 2 1 2 9 7");
     assert_eq!(
         wire::parse(&line).unwrap(),
-        StreamMsg::Record { shard: 3, seq: 42, pairs: vec![(1, 2), (9, 7)] }
+        StreamMsg::Record { shard: 3, seq: 42, op: WalOp::Batch(vec![(1, 2), (9, 7)]) }
+    );
+
+    // Maintenance records ride the same line grammar (DESIGN.md §6).
+    line.clear();
+    wire::write_record(&mut line, 1, 7, &WalOp::Decay { num: 1, den: 2 });
+    assert_eq!(line, "RDEC 1 7 1 2");
+    assert_eq!(
+        wire::parse(&line).unwrap(),
+        StreamMsg::Record { shard: 1, seq: 7, op: WalOp::Decay { num: 1, den: 2 } }
+    );
+    line.clear();
+    wire::write_record(&mut line, 0, 8, &WalOp::Repair);
+    assert_eq!(line, "RREP 0 8");
+    assert_eq!(
+        wire::parse(&line).unwrap(),
+        StreamMsg::Record { shard: 0, seq: 8, op: WalOp::Repair }
     );
 
     line.clear();
@@ -44,6 +61,9 @@ fn stream_grammar_rejects_malformed() {
     assert!(wire::parse("RREC 0 1 1 5 6 7").is_err()); // trailing args
     assert!(wire::parse("RHB 2 1").is_err()); // short head list
     assert!(wire::parse("RREC 0 1 99999999 1 2").is_err()); // count over cap
+    assert!(wire::parse("RDEC 0 1 1").is_err()); // missing denominator
+    assert!(wire::parse("RDEC 0 1 1 0").is_err()); // zero denominator
+    assert!(wire::parse("RREP 0 1 9").is_err()); // trailing args
     assert!(wire::parse("WAT 1 2").is_err());
 }
 

@@ -9,7 +9,12 @@
 //!                                  wire, then records from the embedded
 //!                                  cut points
 //! RREC <shard> <seq> <n> <s1> <d1> ... <sn> <dn>
-//!                                  one WAL record of shard <shard>
+//!                                  one WAL batch record of shard <shard>
+//! RDEC <shard> <seq> <num> <den>   one WAL decay record: the leader ran
+//!                                  §II.C decay at this sequence position
+//!                                  with multiplier num/den — the follower
+//!                                  replays it in lockstep (DESIGN.md §6)
+//! RREP <shard> <seq>               one WAL order-repair record
 //! RHB <nshards> <h1> ... <hn>      heartbeat: the leader's current WAL
 //!                                  head per shard (lag = head - applied)
 //! ERR <message>                    stream abort (connection closes)
@@ -22,22 +27,34 @@
 use std::fmt::Write as _;
 
 use crate::coordinator::MAX_WIRE_BATCH;
+use crate::persist::codec::WalOp;
 
 /// One parsed stream line.
 #[derive(Debug, Clone, PartialEq)]
 pub enum StreamMsg {
     Stream { epoch: u64, shards: usize },
     Snapshot { generation: u64, bytes: u64 },
-    Record { shard: usize, seq: u64, pairs: Vec<(u64, u64)> },
+    Record { shard: usize, seq: u64, op: WalOp },
     Heartbeat { heads: Vec<u64> },
     Err(String),
 }
 
-/// Append one `RREC` line (no trailing newline) to `out`.
-pub fn write_record(out: &mut String, shard: usize, seq: u64, pairs: &[(u64, u64)]) {
-    let _ = write!(out, "RREC {shard} {seq} {}", pairs.len());
-    for (src, dst) in pairs {
-        let _ = write!(out, " {src} {dst}");
+/// Append one record line (`RREC`/`RDEC`/`RREP`, no trailing newline) to
+/// `out` — the wire image of one WAL record, whatever its kind.
+pub fn write_record(out: &mut String, shard: usize, seq: u64, op: &WalOp) {
+    match op {
+        WalOp::Batch(pairs) => {
+            let _ = write!(out, "RREC {shard} {seq} {}", pairs.len());
+            for (src, dst) in pairs {
+                let _ = write!(out, " {src} {dst}");
+            }
+        }
+        WalOp::Decay { num, den } => {
+            let _ = write!(out, "RDEC {shard} {seq} {num} {den}");
+        }
+        WalOp::Repair => {
+            let _ = write!(out, "RREP {shard} {seq}");
+        }
     }
 }
 
@@ -89,8 +106,23 @@ pub fn parse(line: &str) -> Result<StreamMsg, String> {
             for _ in 0..n {
                 pairs.push((num("src")?, num("dst")?));
             }
-            StreamMsg::Record { shard, seq, pairs }
+            StreamMsg::Record { shard, seq, op: WalOp::Batch(pairs) }
         }
+        "RDEC" => {
+            let shard = num("shard")? as usize;
+            let seq = num("seq")?;
+            let dnum = num("num")?;
+            let den = num("den")?;
+            if den == 0 {
+                return Err("RDEC: zero denominator".to_string());
+            }
+            StreamMsg::Record { shard, seq, op: WalOp::Decay { num: dnum, den } }
+        }
+        "RREP" => StreamMsg::Record {
+            shard: num("shard")? as usize,
+            seq: num("seq")?,
+            op: WalOp::Repair,
+        },
         "RHB" => {
             let n = count(num("count")?).map_err(|e| format!("RHB: {e}"))?;
             let mut heads = Vec::with_capacity(n);

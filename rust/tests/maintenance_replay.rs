@@ -1,0 +1,333 @@
+//! Maintenance-as-data differentials (DESIGN.md §6): §II.C decay/repair
+//! is WAL-logged and checkpoints are incremental, so
+//!
+//! * a follower replaying the leader's decay records is byte-identical to
+//!   the leader at quiescence, across 1/2/8 shard layouts;
+//! * crash recovery with decay records in the WAL equals a never-crashed
+//!   reference — no conservatively-larger counts — with a kill-point
+//!   sweep over decay/repair record boundaries;
+//! * a base + delta checkpoint chain recovers to the same state as full
+//!   snapshots of the same stream, compaction folds the chain back, and
+//!   a corrupt newest delta degrades to the chain prefix + WAL replay.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::config::{PersistSection, ServerConfig};
+use mcprioq::coordinator::{Client, Engine, Server};
+use mcprioq::persist::codec::WalOp;
+use mcprioq::persist::wal::{self, ShardWal};
+use mcprioq::persist::{open_engine, FsyncPolicy};
+use mcprioq::replicate::start_follower;
+use mcprioq::testutil::{Rng64, TempDir};
+
+/// A skewed stream with frequent same-src runs (as the persist tests use).
+fn stream(len: usize, seed: u64) -> Vec<(u64, u64)> {
+    let mut rng = Rng64::new(seed);
+    let mut out = Vec::with_capacity(len);
+    let mut src = 0u64;
+    for i in 0..len {
+        if i % 4 == 0 {
+            src = rng.next_below(48);
+        }
+        let u = rng.next_f64();
+        out.push((src, ((u * u) * 96.0) as u64));
+    }
+    out
+}
+
+fn durable_config(dir: &std::path::Path, shards: usize) -> ServerConfig {
+    ServerConfig {
+        shards,
+        queue_capacity: 4_096,
+        persist: PersistSection {
+            data_dir: dir.to_string_lossy().into_owned(),
+            fsync: "never".into(),
+            checkpoint_interval_ms: 0,
+            ..PersistSection::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn apply_to_chain(chain: &McPrioQ, op: &WalOp) {
+    match op {
+        WalOp::Batch(batch) => {
+            chain.observe_batch(batch);
+        }
+        WalOp::Decay { num, den } => {
+            chain.decay_with(*num, *den);
+        }
+        WalOp::Repair => {
+            chain.repair();
+        }
+    }
+}
+
+#[test]
+fn follower_with_decay_matches_leader_across_layouts() {
+    for shards in [1usize, 2, 8] {
+        let ltmp = TempDir::new("mdecay-leader");
+        let ftmp = TempDir::new("mdecay-follower");
+        let (leader, _) = open_engine(&durable_config(ltmp.path(), shards), 2).unwrap();
+        let server = Server::bind(Arc::clone(&leader), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let _lh = server.spawn();
+        let follower =
+            start_follower(durable_config(ftmp.path(), shards), 1, &addr).unwrap();
+
+        // Interleave wire traffic and wire DECAYs — the follower sees them
+        // only as WAL records.
+        let mut client = Client::connect(&addr).unwrap();
+        for (round, seed) in [0x1AD1u64, 0x1AD2, 0x1AD3].into_iter().enumerate() {
+            let pairs = stream(6_000, seed + shards as u64);
+            for chunk in pairs.chunks(997) {
+                assert_eq!(client.observe_batch(chunk).unwrap(), chunk.len());
+            }
+            leader.quiesce();
+            if round < 2 {
+                leader.decay();
+            }
+        }
+        leader.quiesce();
+        let target = leader.stats().wal_last_seqs;
+        assert!(
+            follower.wait_caught_up(&target, Duration::from_secs(20)),
+            "{shards} shards: follower stuck at {:?} (fault: {:?})",
+            follower.state.applied_seqs(),
+            follower.state.fault()
+        );
+
+        // The acceptance bar: with decay enabled and applied, the
+        // follower's quiesced export is byte-identical to the leader's.
+        assert_eq!(
+            leader.export_quiesced(),
+            follower.engine.export_quiesced(),
+            "{shards} shards with decay"
+        );
+        let fstats = follower.engine.stats();
+        assert_eq!(
+            fstats.decays_per_shard,
+            vec![2u64; shards],
+            "{shards} shards: every shard replays both decay records"
+        );
+
+        follower.engine.shutdown();
+        leader.shutdown();
+    }
+}
+
+#[test]
+fn crash_recovery_with_decay_matches_never_crashed_reference() {
+    let tmp = TempDir::new("decay-recovery");
+    let config = durable_config(tmp.path(), 2);
+    let plain = ServerConfig { persist: PersistSection::default(), ..config.clone() };
+    let reference_engine = Engine::new(&plain, 2);
+
+    let (engine, _) = open_engine(&config, 2).unwrap();
+    let mut checkpointed = false;
+    for (round, seed) in [0xC4A1u64, 0xC4A2, 0xC4A3, 0xC4A4].into_iter().enumerate() {
+        let pairs = stream(5_000, seed);
+        for chunk in pairs.chunks(311) {
+            assert_eq!(engine.observe_batch(chunk), chunk.len());
+            reference_engine.observe_batch(chunk);
+        }
+        // Quiesce both so the decay lands at the same per-shard sequence
+        // position in the durable engine's WAL and in the reference.
+        engine.quiesce();
+        reference_engine.quiesce();
+        engine.decay();
+        reference_engine.decay();
+        if round == 1 {
+            // Mid-stream checkpoint: later decays live only in the WAL,
+            // and one decay is *behind* the snapshot (replayed via fold).
+            engine.checkpoint().unwrap();
+            checkpointed = true;
+        }
+    }
+    assert!(checkpointed);
+    engine.quiesce();
+    reference_engine.quiesce();
+    let reference = reference_engine.export();
+    assert_eq!(engine.export(), reference, "pre-crash states must agree");
+    engine.shutdown();
+    drop(engine);
+
+    // The old failure mode: recovery replayed observations onto pre-decay
+    // counts and recovered conservatively-larger totals. With decay
+    // records in the WAL the recovered model is *equal*, not larger.
+    let (recovered, report) = open_engine(&config, 0).unwrap();
+    assert!(report.replayed_maintenance > 0, "decay records must replay");
+    assert_eq!(recovered.export(), reference);
+    recovered.shutdown();
+    reference_engine.shutdown();
+}
+
+#[test]
+fn kill_point_sweep_over_decay_record_boundaries() {
+    let tmp = TempDir::new("decay-killpoint");
+    let dir = tmp.join("shard-0000");
+    let mut wal = ShardWal::open(
+        dir.clone(),
+        0,
+        FsyncPolicy::Never,
+        Duration::from_millis(50),
+        1 << 20, // one segment: every cut lands in the same file
+    )
+    .unwrap();
+    let mut rng = Rng64::new(0xDEC0);
+    let mut ops: Vec<WalOp> = Vec::new();
+    let mut boundaries = Vec::new(); // file length after each append
+    for i in 0..40 {
+        let op = if i % 5 == 4 {
+            WalOp::Decay { num: 1, den: 2 }
+        } else if i % 11 == 7 {
+            WalOp::Repair
+        } else {
+            WalOp::Batch(
+                (0..rng.next_below(6) + 1)
+                    .map(|_| (rng.next_below(16), rng.next_below(16)))
+                    .collect(),
+            )
+        };
+        match &op {
+            WalOp::Batch(batch) => {
+                wal.append(batch).unwrap();
+            }
+            other => {
+                wal.append_op(other).unwrap();
+            }
+        }
+        ops.push(op);
+        boundaries.push(wal.segment_len());
+    }
+    drop(wal);
+    let seg_path = wal::scan_segments(&dir).unwrap().remove(0).path;
+    let full = std::fs::read(&seg_path).unwrap();
+    assert_eq!(*boundaries.last().unwrap() as usize, full.len());
+
+    // Cut at every record boundary — decay and repair boundaries included
+    // — and inside the next frame: recovery yields exactly the surviving
+    // op prefix, torn iff mid-frame.
+    let mut cuts: Vec<usize> = vec![0, 8];
+    for &b in &boundaries {
+        cuts.push(b as usize);
+        cuts.push(b as usize + 3);
+    }
+    for cut in cuts {
+        let cut = cut.min(full.len());
+        let cut_dir = tmp.join(&format!("cut-{cut}"));
+        std::fs::create_dir_all(&cut_dir).unwrap();
+        std::fs::write(cut_dir.join(seg_path.file_name().unwrap()), &full[..cut]).unwrap();
+
+        let survivors = boundaries.iter().filter(|&&b| b as usize <= cut).count();
+        let recovered = McPrioQ::new(ChainConfig::default());
+        let mut replayed = 0usize;
+        let stats = wal::replay_dir(&cut_dir, 0, |_seq, op| {
+            apply_to_chain(&recovered, &op);
+            replayed += 1;
+        })
+        .unwrap();
+        assert_eq!(replayed, survivors, "cut {cut}");
+        let exact_boundary = cut == 8 || boundaries.iter().any(|&b| b as usize == cut);
+        assert_eq!(stats.torn, !exact_boundary, "cut {cut}");
+
+        let reference = McPrioQ::new(ChainConfig::default());
+        for op in &ops[..survivors] {
+            apply_to_chain(&reference, op);
+        }
+        assert_eq!(recovered.export(), reference.export(), "cut {cut}");
+        std::fs::remove_dir_all(&cut_dir).unwrap();
+    }
+}
+
+#[test]
+fn delta_chain_recovery_matches_full_snapshots() {
+    let tmp = TempDir::new("delta-chain");
+    let full_tmp = TempDir::new("delta-chain-full");
+    let mut config = durable_config(tmp.path(), 2);
+    config.persist.delta_chain_max = 2;
+    // High ratio: the sparse touch rounds below stay differential.
+    config.persist.delta_dirty_ratio = 0.9;
+    let mut full_config = durable_config(full_tmp.path(), 2);
+    full_config.persist.delta_chain_max = 0; // every generation full
+
+    let (engine, _) = open_engine(&config, 2).unwrap();
+    let (full_engine, _) = open_engine(&full_config, 2).unwrap();
+    let feed = |pairs: &[(u64, u64)]| {
+        for chunk in pairs.chunks(503) {
+            assert_eq!(engine.observe_batch(chunk), chunk.len());
+            full_engine.observe_batch(chunk);
+        }
+        engine.quiesce();
+        full_engine.quiesce();
+    };
+
+    // Base: the whole model, then two sparse-touch rounds → two deltas.
+    feed(&stream(16_000, 0xDE17));
+    let base = engine.checkpoint().unwrap();
+    assert_eq!(base.kind, "full");
+    full_engine.checkpoint().unwrap();
+
+    let touch_a: Vec<(u64, u64)> = (0..6u64).map(|s| (s, s + 1)).collect();
+    feed(&touch_a);
+    let d1 = engine.checkpoint().unwrap();
+    assert_eq!(d1.kind, "delta");
+    assert!(
+        d1.bytes < base.bytes / 4,
+        "differential bytes must scale with the dirty set: {} vs full {}",
+        d1.bytes,
+        base.bytes
+    );
+    full_engine.checkpoint().unwrap();
+
+    let touch_b: Vec<(u64, u64)> = (10..22u64).map(|s| (s, s + 2)).collect();
+    feed(&touch_b);
+    let d2 = engine.checkpoint().unwrap();
+    assert_eq!(d2.kind, "delta");
+    full_engine.checkpoint().unwrap();
+
+    // Post-checkpoint tail lives only in the WAL.
+    feed(&stream(2_000, 0xDE18));
+    let reference = full_engine.export_quiesced();
+    assert_eq!(engine.export_quiesced(), reference);
+
+    // Chain length hit delta_chain_max = 2: the next generation compacts.
+    let compacted = engine.checkpoint().unwrap();
+    assert_eq!(compacted.kind, "full", "chain-length compaction");
+
+    // One more sparse round, then crash: recovery folds full + delta.
+    feed(&touch_a);
+    let d3 = engine.checkpoint().unwrap();
+    assert_eq!(d3.kind, "delta");
+    feed(&stream(1_000, 0xDE19));
+    full_engine.quiesce();
+    let reference = full_engine.export_quiesced();
+    assert_eq!(engine.export_quiesced(), reference);
+    engine.shutdown();
+    drop(engine);
+
+    let (recovered, report) = open_engine(&config, 0).unwrap();
+    assert_eq!(report.generation, d3.generation);
+    assert_eq!(report.snapshot_deltas, 1, "one delta folded onto the compacted base");
+    assert_eq!(recovered.export(), reference, "base+delta chain == full snapshots");
+    recovered.shutdown();
+
+    // Corrupt the newest delta: recovery degrades to the chain prefix
+    // (the compacted full) + a longer WAL replay — same state, because
+    // lag-one truncation kept the WAL reachable from the previous cuts.
+    let delta_path = tmp
+        .join("checkpoint")
+        .join(format!("ckpt-{:06}.delta", d3.generation));
+    let mut bytes = std::fs::read(&delta_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&delta_path, &bytes).unwrap();
+    let (recovered, report) = open_engine(&config, 0).unwrap();
+    assert_eq!(report.generation, compacted.generation, "prefix fallback");
+    assert_eq!(report.snapshot_deltas, 0);
+    assert_eq!(recovered.export(), reference, "fallback + WAL replay equality");
+    recovered.shutdown();
+    full_engine.shutdown();
+}

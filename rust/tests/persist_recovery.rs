@@ -135,8 +135,11 @@ fn kill_point_recovery_matches_surviving_prefix() {
 
         let survivors = boundaries.iter().filter(|&&b| b as usize <= cut).count();
         let recovered = McPrioQ::new(ChainConfig::default());
-        let stats = wal::replay_dir(&cut_dir, 0, |_seq, batch| {
-            recovered.observe_batch(&batch);
+        let stats = wal::replay_dir(&cut_dir, 0, |_seq, op| match op {
+            codec::WalOp::Batch(batch) => {
+                recovered.observe_batch(&batch);
+            }
+            other => panic!("unexpected record {other:?}"),
         })
         .unwrap();
         assert_eq!(stats.batches as usize, survivors, "cut {cut}");

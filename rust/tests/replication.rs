@@ -10,6 +10,9 @@
 //! * Snapshot bootstrap: a follower joining after the leader truncated
 //!   its early segments boots via the checkpoint codec and converges to
 //!   the same state as one that consumed the stream from seq 1.
+//! * Maintenance-as-data (DESIGN.md §6): a follower that dies abruptly
+//!   releases its leader-side retention pin; a promoted follower applies
+//!   streamed decay records exactly once (its local WAL is the witness).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -244,9 +247,14 @@ fn leader_crash_leaves_prefix_then_reconnect_converges() {
     );
     for (shard, &upto) in applied.iter().enumerate() {
         let dir = ltmp.join(&format!("wal/e1/shard-{shard:04}"));
-        wal::replay_dir(&dir, 0, |seq, batch| {
+        wal::replay_dir(&dir, 0, |seq, op| {
             if seq <= upto {
-                reference.observe_batch_direct(&batch);
+                match op {
+                    mcprioq::persist::codec::WalOp::Batch(batch) => {
+                        reference.observe_batch_direct(&batch)
+                    }
+                    other => panic!("unexpected record {other:?}"),
+                }
             }
         })
         .unwrap();
@@ -333,5 +341,121 @@ fn snapshot_bootstrap_matches_full_stream_follower() {
     reopened.shutdown();
 
     follower_b.engine.shutdown();
+    leader.shutdown();
+}
+
+#[test]
+fn abrupt_follower_death_releases_leader_pin() {
+    let ltmp = TempDir::new("pin-leader");
+    let lcfg = durable_config(ltmp.path(), 1);
+    let (leader, _) = open_engine(&lcfg, 1).unwrap();
+    let server = Server::bind(Arc::clone(&leader), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let _lh = server.spawn();
+    assert_eq!(leader.observe_batch(&stream(2_000, 0xF01)), 2_000);
+    leader.quiesce();
+
+    // A raw "follower": HELLO, then vanish without ever reading the
+    // stream — the abrupt-death shape a SIGKILLed process produces.
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    std::io::Write::write_all(&mut raw, b"REPL HELLO 1 1 0\n").unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if client.stats().unwrap().contains("repl_followers=1") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "pin never registered");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(raw);
+
+    // The leader's next write (records or the 25ms heartbeat) fails and
+    // the PinGuard releases the retention pin.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if client.stats().unwrap().contains("repl_followers=0") {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "dead follower still pins the WAL: {}",
+            client.stats().unwrap()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // And truncation is unconstrained again: with traffic + two
+    // checkpoints, lag-one truncation actually frees segments.
+    assert_eq!(leader.observe_batch(&stream(2_000, 0xF02)), 2_000);
+    leader.quiesce();
+    leader.checkpoint().unwrap();
+    assert_eq!(leader.observe_batch(&stream(2_000, 0xF03)), 2_000);
+    leader.quiesce();
+    let summary = leader.checkpoint().unwrap();
+    assert!(summary.wal_freed > 0, "released pin must unblock truncation");
+    leader.shutdown();
+}
+
+#[test]
+fn promoted_follower_applies_streamed_decay_exactly_once() {
+    let ltmp = TempDir::new("middecay-leader");
+    let ftmp = TempDir::new("middecay-follower");
+    let shards = 2usize;
+    let (leader, _) = open_engine(&durable_config(ltmp.path(), shards), 2).unwrap();
+    let server = Server::bind(Arc::clone(&leader), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let _lh = server.spawn();
+    let follower = start_follower(durable_config(ftmp.path(), shards), 1, &addr).unwrap();
+
+    // Feed, then a leader decay (one DecayRecord per shard), then feed.
+    assert_eq!(leader.observe_batch(&stream(8_000, 0xDCA)), 8_000);
+    leader.quiesce();
+    leader.decay();
+    assert_eq!(leader.observe_batch(&stream(4_000, 0xDCB)), 4_000);
+    leader.quiesce();
+    catch_up(&leader, &follower, Duration::from_secs(20));
+    assert_eq!(leader.export_quiesced(), follower.engine.export_quiesced());
+    // The follower replayed exactly one decay pass per shard.
+    let fstats = follower.engine.stats();
+    assert_eq!(fstats.decays_per_shard, vec![1u64; shards]);
+    assert_eq!(fstats.decays, shards as u64, "sum aggregate (satellite fix)");
+
+    // Second decay + tail, then promote IMMEDIATELY — records may still
+    // be queued in the apply plane. Promotion must drain them (writable
+    // gate) and never double-apply a decay interval.
+    leader.decay();
+    assert_eq!(leader.observe_batch(&stream(2_000, 0xDCC)), 2_000);
+    leader.quiesce();
+    follower.promote();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !follower.state.writable() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(follower.state.writable(), "apply plane must drain after promote");
+    assert!(follower.state.fault().is_none());
+
+    // The witness: per-shard applied decay passes equal the decay records
+    // in the follower's own WAL (appended 1:1 before apply). A local
+    // scheduler or a replayed duplicate would break the equality.
+    follower.engine.quiesce();
+    let fstats = follower.engine.stats();
+    for shard in 0..shards {
+        let dir = ftmp.join(&format!("wal/e1/shard-{shard:04}"));
+        let mut decay_records = 0u64;
+        wal::replay_dir(&dir, 0, |_seq, op| {
+            if matches!(op, mcprioq::persist::codec::WalOp::Decay { .. }) {
+                decay_records += 1;
+            }
+        })
+        .unwrap();
+        assert!(decay_records <= 2, "shard {shard}: {decay_records} decay records");
+        assert_eq!(
+            fstats.decays_per_shard[shard], decay_records,
+            "shard {shard}: decay applied != decay logged"
+        );
+    }
+
+    follower.engine.shutdown();
     leader.shutdown();
 }
