@@ -214,6 +214,9 @@ pub struct ReadSweepRow {
     /// Snapshot rate over the list-walk rate at the same thread count
     /// (1.0 for the list-walk rows themselves).
     pub vs_list_walk: f64,
+    /// Hardware counters over the measurement window (inherited into the
+    /// worker threads); `available == false` where perf is unavailable.
+    pub perf: crate::metrics::PerfSample,
 }
 
 /// The read-sweep fixture: one hot src node (0) with `fanout` Zipf(1.0)
@@ -254,6 +257,11 @@ pub fn read_topk_sweep(
     let mut rows: Vec<ReadSweepRow> = Vec::with_capacity(2 * threads.len());
     for (mode, chain) in [("list-walk", list_chain), ("snapshot", snap_chain)] {
         for (i, &t) in threads.iter().enumerate() {
+            // Fresh counters per row: `inherit` only covers threads spawned
+            // after open(), and run_threads joins its workers before
+            // returning, so the end snapshot sees their folded counts.
+            let pc = crate::metrics::PerfCounters::open();
+            let before = pc.snapshot();
             let rate = bench.run_threads(t, window, |_| {
                 let chain = std::sync::Arc::clone(chain);
                 let mut out = crate::chain::Recommendation::default();
@@ -262,6 +270,7 @@ pub fn read_topk_sweep(
                     1
                 }
             });
+            let perf = pc.snapshot().delta(&before);
             let vs_list_walk = if mode == "snapshot" {
                 // The list-walk row at the same thread count is at index i.
                 let base = rows[i].topk_per_s;
@@ -273,7 +282,83 @@ pub fn read_topk_sweep(
             } else {
                 1.0
             };
-            rows.push(ReadSweepRow { mode, threads: t, topk_per_s: rate, vs_list_walk });
+            rows.push(ReadSweepRow { mode, threads: t, topk_per_s: rate, vs_list_walk, perf });
+        }
+    }
+    rows
+}
+
+/// One row of the snapshot-layout threshold sweep
+/// ([`threshold_layout_sweep`]): `infer_threshold` throughput with the
+/// sorted prefix array (PR 2 binary search) vs the Eytzinger layout
+/// (branchless descent + SIMD prefix copy), at one fanout.
+pub struct ThresholdSweepRow {
+    pub layout: &'static str,
+    pub fanout: usize,
+    pub thresholds_per_s: f64,
+    /// Eytzinger rate over the sorted rate at the same fanout (1.0 for
+    /// the sorted rows themselves) — the acceptance knob: ≥ 1.5 at
+    /// fanout ≥ 64.
+    pub vs_sorted: f64,
+    /// Hardware counters over the measurement window; the layout's story
+    /// should show up here as fewer branch misses per kiloinstruction.
+    pub perf: crate::metrics::PerfSample,
+}
+
+/// Hot-node `infer_threshold(0, t)` throughput for each fanout, sorted
+/// layout first, then Eytzinger, with the ratio filled in. Thresholds are
+/// drawn uniformly from (0, 1) per call so the window covers both the
+/// search-heavy regime (small `t`, few items copied) and the copy-heavy
+/// one (`t` near 1, most of the prefix copied): the ratio reflects the
+/// whole read path, not a cherry-picked prefix length.
+pub fn threshold_layout_sweep(
+    bench: &Bench,
+    window: Duration,
+    threads: usize,
+    fanouts: &[usize],
+    train: usize,
+) -> Vec<ThresholdSweepRow> {
+    use crate::chain::{ChainConfig, SnapLayout};
+
+    let mut rows: Vec<ThresholdSweepRow> = Vec::with_capacity(2 * fanouts.len());
+    for &fanout in fanouts {
+        let mut sorted_rate = 0.0;
+        for (layout, snap_layout) in
+            [("sorted", SnapLayout::Sorted), ("eytzinger", SnapLayout::Eytzinger)]
+        {
+            let chain = hot_node_chain(
+                ChainConfig { snap_layout, ..Default::default() },
+                fanout,
+                train,
+                42,
+            );
+            let pc = crate::metrics::PerfCounters::open();
+            let before = pc.snapshot();
+            let rate = bench.run_threads(threads, window, |t| {
+                let chain = std::sync::Arc::clone(&chain);
+                let mut out = crate::chain::Recommendation::default();
+                let mut rng = crate::testutil::Rng64::new(t as u64 + 1);
+                move || {
+                    chain.infer_threshold_into(0, rng.next_f64(), &mut out);
+                    1
+                }
+            });
+            let perf = pc.snapshot().delta(&before);
+            let vs_sorted = if layout == "sorted" {
+                sorted_rate = rate;
+                1.0
+            } else if sorted_rate > 0.0 {
+                rate / sorted_rate
+            } else {
+                0.0
+            };
+            rows.push(ThresholdSweepRow {
+                layout,
+                fanout,
+                thresholds_per_s: rate,
+                vs_sorted,
+                perf,
+            });
         }
     }
     rows

@@ -22,6 +22,7 @@
 //! items. Probabilities are computed at read time from the two counters
 //! (§II.3), so updates never touch sibling edges.
 
+pub(crate) mod arena;
 mod snapshot;
 mod state;
 
@@ -36,6 +37,38 @@ use crate::prioq::IncrementOutcome;
 use crate::rcu;
 use crate::rcu::Guard;
 use state::NodeState;
+
+/// Memory layout of the per-node read snapshot's threshold-search array
+/// (DESIGN.md §7). Both layouts serve bit-identical answers — the knob
+/// trades build cost for search locality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SnapLayout {
+    /// Plain sorted prefix-sum array; threshold search is a classic binary
+    /// search (`partition_point`) — the PR 2 baseline.
+    Sorted,
+    /// BFS (Eytzinger) permutation of the prefix sums plus split SoA
+    /// `dst`/`count` columns: branchless root-to-leaf threshold search and
+    /// a vectorized bounded prefix copy.
+    #[default]
+    Eytzinger,
+}
+
+impl SnapLayout {
+    pub fn parse(s: &str) -> Result<SnapLayout, String> {
+        match s {
+            "sorted" => Ok(SnapLayout::Sorted),
+            "eytzinger" => Ok(SnapLayout::Eytzinger),
+            other => Err(format!("bad snap_layout {other:?} (sorted|eytzinger)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SnapLayout::Sorted => "sorted",
+            SnapLayout::Eytzinger => "eytzinger",
+        }
+    }
+}
 
 /// Configuration for a [`McPrioQ`] chain.
 #[derive(Debug, Clone)]
@@ -65,6 +98,8 @@ pub struct ChainConfig {
     /// Nodes with fewer edges than this are always served by the live
     /// list walk: a handful of pointer chases beats a rebuild.
     pub snap_min_edges: usize,
+    /// Snapshot search/copy memory layout (see [`SnapLayout`]).
+    pub snap_layout: SnapLayout,
 }
 
 impl Default for ChainConfig {
@@ -78,6 +113,7 @@ impl Default for ChainConfig {
             snap_enabled: true,
             snap_staleness: 128,
             snap_min_edges: 8,
+            snap_layout: SnapLayout::default(),
         }
     }
 }
@@ -478,6 +514,15 @@ impl McPrioQ {
     /// later mutation then stamps the new mark.
     pub fn advance_ckpt_mark(&self) -> u64 {
         self.ckpt_mark.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Set the checkpoint mark outside the fetch-add discipline — the
+    /// recovery path restoring a persisted mark (DESIGN.md §6): nodes
+    /// imported from the checkpoint chain are stamped *below* the restored
+    /// floor, WAL-replayed nodes at it, so the first post-restart
+    /// checkpoint can stay differential. Quiesced callers only.
+    pub fn set_ckpt_mark(&self, mark: u64) {
+        self.ckpt_mark.store(mark, Ordering::Relaxed);
     }
 
     /// [`McPrioQ::export`] restricted to nodes dirtied at or after

@@ -6,9 +6,21 @@
 //! paper's "approximately correct during concurrent updates" semantics
 //! license serving slightly-stale answers, so the chain caches a contiguous
 //! `(dst, count, cum)` array per node — `infer_topk` becomes a bounded copy
-//! of the array prefix and `infer_threshold` a binary search over the
-//! inclusive prefix sums `cum`, O(log E) instead of the O(CDF⁻¹(t))
-//! pointer chase.
+//! of the array prefix and `infer_threshold` a search over the inclusive
+//! prefix sums `cum`, O(log E) instead of the O(CDF⁻¹(t)) pointer chase.
+//!
+//! Mechanical sympathy (DESIGN.md §7): behind `ChainConfig::snap_layout`
+//! the snapshot optionally carries an [`EytzingerAccel`] — the `cum` array
+//! re-laid out in BFS (Eytzinger) order so the threshold search is a
+//! branchless root-to-leaf walk touching one cache line per level (the
+//! restructuring move of Bhardwaj & Chatterjee's learned lock-free search
+//! layouts), plus split `dst`/`count` columns so the bounded prefix copy
+//! runs vectorized (SSE2/AVX2/NEON, runtime-detected, scalar fallback).
+//! Both accelerated paths are *bit-identical* to the scalar ones: the
+//! search evaluates the same exact integer predicate on the same values,
+//! and the SIMD copy performs the same correctly-rounded u64→f64 convert
+//! and divide lane-wise (guarded to totals < 2^52 where the conversion is
+//! provably exact; larger totals fall back to scalar).
 //!
 //! Lifecycle (see DESIGN.md § Read pipeline):
 //!
@@ -29,6 +41,65 @@
 //!   invalidate eagerly so a pruned edge can never be served once a grace
 //!   period has elapsed.
 
+use super::SnapLayout;
+
+/// Memory layout of one read snapshot's search/copy acceleration arrays
+/// (present iff the chain runs with `snap_layout = eytzinger`).
+///
+/// `eyt`/`rank` are 1-based (index 0 unused) so a node's children are
+/// `2k` / `2k+1` — the classic implicit-BFS trick that keeps the top of
+/// the tree packed into the first cache lines. `dsts`/`counts` are the
+/// snapshot's entries split into contiguous columns: the `(u64, u64, u64)`
+/// rows stride 24 bytes, which defeats aligned vector loads, while the
+/// split columns feed 2/4-lane SIMD directly.
+pub(super) struct EytzingerAccel {
+    /// `entries[..].cum` permuted into BFS order; `eyt[k]`'s children are
+    /// `eyt[2k]` and `eyt[2k+1]`.
+    eyt: Box<[u64]>,
+    /// `rank[k]` = the sorted-order index of `eyt[k]` (search result
+    /// translation back to entry space).
+    rank: Box<[u32]>,
+    /// `entries[i].0` — the dst column for the vectorized prefix copy.
+    dsts: Box<[u64]>,
+    /// `entries[i].1` — the count column for the vectorized prefix copy.
+    counts: Box<[u64]>,
+}
+
+impl EytzingerAccel {
+    fn build(entries: &[(u64, u64, u64)]) -> EytzingerAccel {
+        let n = entries.len();
+        debug_assert!(n < u32::MAX as usize);
+        let mut eyt = vec![0u64; n + 1].into_boxed_slice();
+        let mut rank = vec![0u32; n + 1].into_boxed_slice();
+        let mut i = 0usize;
+        fill(entries, &mut eyt, &mut rank, &mut i, 1);
+        debug_assert_eq!(i, n);
+        EytzingerAccel {
+            eyt,
+            rank,
+            dsts: entries.iter().map(|&(d, _, _)| d).collect(),
+            counts: entries.iter().map(|&(_, c, _)| c).collect(),
+        }
+    }
+
+    fn approx_bytes(&self) -> usize {
+        self.eyt.len() * 8 + self.rank.len() * 4 + self.dsts.len() * 16
+    }
+}
+
+/// In-order traversal of the implicit tree writes the ascending `cum`
+/// sequence into BFS positions — the standard Eytzinger construction.
+fn fill(entries: &[(u64, u64, u64)], eyt: &mut [u64], rank: &mut [u32], i: &mut usize, k: usize) {
+    if k >= eyt.len() {
+        return;
+    }
+    fill(entries, eyt, rank, i, 2 * k);
+    eyt[k] = entries[*i].2;
+    rank[k] = *i as u32;
+    *i += 1;
+    fill(entries, eyt, rank, i, 2 * k + 1);
+}
+
 /// One immutable read snapshot: list order preserved, `cum` is the
 /// inclusive prefix sum of `count` (so `entries.last().cum == total`).
 pub(super) struct EdgeSnapshot {
@@ -41,29 +112,202 @@ pub(super) struct EdgeSnapshot {
     pub(super) total: u64,
     /// `(dst, count, cum)` in head-first (descending count) list order.
     pub(super) entries: Box<[(u64, u64, u64)]>,
+    /// Eytzinger search tree + SoA copy columns (layout knob).
+    accel: Option<EytzingerAccel>,
 }
 
 impl EdgeSnapshot {
     /// Wrap entries collected in one ticketed pass (non-empty, list order,
-    /// `cum` already the inclusive prefix sum). Exact-capacity input, so
-    /// boxing is free — the single allocation of a rebuild.
-    pub(super) fn from_entries(epoch: u64, entries: Vec<(u64, u64, u64)>) -> EdgeSnapshot {
+    /// `cum` already the inclusive prefix sum). The entry array is boxed
+    /// from its exact-capacity Vec for free; the Eytzinger layout costs
+    /// one extra O(n) pass inside the same (already ticketed) rebuild.
+    pub(super) fn from_entries(
+        epoch: u64,
+        entries: Vec<(u64, u64, u64)>,
+        layout: SnapLayout,
+    ) -> EdgeSnapshot {
         debug_assert!(!entries.is_empty());
         let total = entries.last().map_or(0, |&(_, _, cum)| cum);
-        EdgeSnapshot { epoch, total, entries: entries.into_boxed_slice() }
+        let accel = match layout {
+            SnapLayout::Eytzinger if !entries.is_empty() => Some(EytzingerAccel::build(&entries)),
+            _ => None,
+        };
+        EdgeSnapshot { epoch, total, entries: entries.into_boxed_slice(), accel }
     }
 
     /// Index of the first entry whose cumulative count reaches
     /// `threshold` (as `m/2^s`) of `total` — the minimal prefix length
     /// minus one. `entries.len()` if even the full list falls short
     /// (possible only for a stale snapshot raced by pruning).
+    ///
+    /// With the Eytzinger accelerator this is the branchless lower bound:
+    /// the child index is *computed* from the predicate (no compare-and-
+    /// branch for the predictor to miss), and the final `k` encodes the
+    /// whole descent — shifting off the trailing ones recovers the last
+    /// left-turn, i.e. the smallest element satisfying the predicate.
     pub(super) fn threshold_prefix(&self, m: u128, s: u32) -> usize {
+        let n = self.entries.len();
+        if let Some(accel) = &self.accel {
+            let mut k = 1usize;
+            while k <= n {
+                // cum_reaches is monotone over the ascending cum sequence:
+                // descend left (candidate found) on true, right on false.
+                k = 2 * k + usize::from(!cum_reaches(accel.eyt[k], self.total, m, s));
+            }
+            k >>= k.trailing_ones() + 1;
+            return if k == 0 { n } else { accel.rank[k] as usize };
+        }
         self.entries.partition_point(|&(_, _, cum)| !cum_reaches(cum, self.total, m, s))
     }
 
-    /// Resident bytes of the array (for `NodeStats::approx_bytes`).
+    /// Append `(dst, count/total)` for the first `end` entries to `out` —
+    /// the bounded prefix copy both inference paths share. Vectorized
+    /// (2/4 lanes) when the SoA columns are present and every operand is
+    /// exactly representable; bit-identical to the scalar loop either way.
+    pub(super) fn copy_prefix_probs(&self, end: usize, out: &mut Vec<(u64, f64)>) {
+        debug_assert!(end <= self.entries.len());
+        let totf = self.total as f64;
+        if let Some(accel) = &self.accel {
+            // Counts never exceed the total, so `total < 2^52` bounds every
+            // lane into the range where the packed u64→f64 conversion is
+            // exact; the divide is correctly rounded per IEEE in both the
+            // scalar and vector units, hence identical results.
+            if self.total < (1u64 << 52) {
+                simd::copy_probs(&accel.dsts[..end], &accel.counts[..end], totf, out);
+                return;
+            }
+        }
+        for &(dst, count, _) in &self.entries[..end] {
+            out.push((dst, count as f64 / totf));
+        }
+    }
+
+    /// Resident bytes of the arrays (for `NodeStats::approx_bytes`).
     pub(super) fn approx_bytes(&self) -> usize {
-        std::mem::size_of::<EdgeSnapshot>() + self.entries.len() * std::mem::size_of::<(u64, u64, u64)>()
+        std::mem::size_of::<EdgeSnapshot>()
+            + self.entries.len() * std::mem::size_of::<(u64, u64, u64)>()
+            + self.accel.as_ref().map_or(0, EytzingerAccel::approx_bytes)
+    }
+}
+
+/// Runtime-dispatched vectorized `count/total` prefix copy. Every kernel
+/// converts a vector of u64 counts to f64 (exact below 2^52) and divides
+/// by the splatted total with the *vector divide* (never a reciprocal
+/// estimate — those are not correctly rounded). Lane results land in a
+/// stack buffer and are paired with their dsts by scalar pushes, because
+/// the layout of the Rust tuple `(u64, f64)` is unspecified and must not
+/// be raw-written.
+mod simd {
+    pub(super) fn copy_probs(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
+        debug_assert_eq!(dsts.len(), counts.len());
+        out.reserve(dsts.len());
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                // SAFETY: AVX2 presence just checked (std caches the cpuid).
+                unsafe { copy_probs_avx2(dsts, counts, totf, out) };
+            } else {
+                // SAFETY: SSE2 is x86_64 baseline.
+                unsafe { copy_probs_sse2(dsts, counts, totf, out) };
+            }
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // SAFETY: NEON is aarch64 baseline.
+            unsafe { copy_probs_neon(dsts, counts, totf, out) };
+            return;
+        }
+        #[allow(unreachable_code)]
+        copy_probs_scalar(dsts, counts, totf, out)
+    }
+
+    #[cfg_attr(any(target_arch = "x86_64", target_arch = "aarch64"), allow(dead_code))]
+    fn copy_probs_scalar(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
+        for (&dst, &count) in dsts.iter().zip(counts) {
+            out.push((dst, count as f64 / totf));
+        }
+    }
+
+    /// Exponent bits of 2^52: OR-ing them over a sub-2^52 integer yields
+    /// the bit pattern of the double `2^52 + v`; subtracting 2^52 strips
+    /// the bias exactly (no rounding — the sum is representable).
+    #[cfg(target_arch = "x86_64")]
+    const MAGIC_BITS: i64 = 0x4330_0000_0000_0000;
+    #[cfg(target_arch = "x86_64")]
+    const MAGIC: f64 = 4_503_599_627_370_496.0; // 2^52
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "sse2")]
+    unsafe fn copy_probs_sse2(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
+        use std::arch::x86_64::*;
+        let tot = _mm_set1_pd(totf);
+        let magic_i = _mm_set1_epi64x(MAGIC_BITS);
+        let magic_d = _mm_set1_pd(MAGIC);
+        let n = counts.len();
+        let mut buf = [0f64; 2];
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let v = _mm_loadu_si128(counts.as_ptr().add(i) as *const __m128i);
+            let f = _mm_sub_pd(_mm_castsi128_pd(_mm_or_si128(v, magic_i)), magic_d);
+            _mm_storeu_pd(buf.as_mut_ptr(), _mm_div_pd(f, tot));
+            out.push((dsts[i], buf[0]));
+            out.push((dsts[i + 1], buf[1]));
+            i += 2;
+        }
+        while i < n {
+            out.push((dsts[i], counts[i] as f64 / totf));
+            i += 1;
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn copy_probs_avx2(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
+        use std::arch::x86_64::*;
+        let tot = _mm256_set1_pd(totf);
+        let magic_i = _mm256_set1_epi64x(MAGIC_BITS);
+        let magic_d = _mm256_set1_pd(MAGIC);
+        let n = counts.len();
+        let mut buf = [0f64; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm256_loadu_si256(counts.as_ptr().add(i) as *const __m256i);
+            let f = _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(v, magic_i)), magic_d);
+            _mm256_storeu_pd(buf.as_mut_ptr(), _mm256_div_pd(f, tot));
+            for (j, &p) in buf.iter().enumerate() {
+                out.push((dsts[i + j], p));
+            }
+            i += 4;
+        }
+        while i < n {
+            out.push((dsts[i], counts[i] as f64 / totf));
+            i += 1;
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[target_feature(enable = "neon")]
+    unsafe fn copy_probs_neon(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
+        use std::arch::aarch64::*;
+        let tot = vdupq_n_f64(totf);
+        let n = counts.len();
+        let mut buf = [0f64; 2];
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let v = vld1q_u64(counts.as_ptr().add(i));
+            // ucvtf is exact for sub-2^52 values (and correctly rounded
+            // beyond — but the caller's guard keeps us below anyway).
+            let f = vcvtq_f64_u64(v);
+            vst1q_f64(buf.as_mut_ptr(), vdivq_f64(f, tot));
+            out.push((dsts[i], buf[0]));
+            out.push((dsts[i + 1], buf[1]));
+            i += 2;
+        }
+        while i < n {
+            out.push((dsts[i], counts[i] as f64 / totf));
+            i += 1;
+        }
     }
 }
 
@@ -147,7 +391,7 @@ mod tests {
     }
 
     /// Test helper mirroring the rebuild's running-prefix-sum collect.
-    fn snap_from_counts(epoch: u64, counts: &[(u64, u64)]) -> EdgeSnapshot {
+    fn snap_from_counts(epoch: u64, counts: &[(u64, u64)], layout: SnapLayout) -> EdgeSnapshot {
         let mut cum = 0u64;
         EdgeSnapshot::from_entries(
             epoch,
@@ -158,12 +402,13 @@ mod tests {
                     (dst, count, cum)
                 })
                 .collect(),
+            layout,
         )
     }
 
     #[test]
     fn snapshot_prefix_sums_and_binary_search() {
-        let snap = snap_from_counts(7, &[(10, 5), (20, 3), (30, 2)]);
+        let snap = snap_from_counts(7, &[(10, 5), (20, 3), (30, 2)], SnapLayout::Sorted);
         assert_eq!(snap.total, 10);
         assert_eq!(&*snap.entries, &[(10, 5, 5), (20, 3, 8), (30, 2, 10)]);
         let (m, s) = dyadic(0.5);
@@ -173,5 +418,92 @@ mod tests {
         let (m, s) = dyadic(1.0);
         assert_eq!(snap.threshold_prefix(m, s), 2);
         assert!(snap.approx_bytes() > 3 * 24);
+    }
+
+    #[test]
+    fn eytzinger_search_matches_partition_point() {
+        // Zipf-ish descending counts at every size from 1 to a few levels
+        // past one full tree, thresholds spanning both tails.
+        let thresholds =
+            [1e-12, 0.01, 0.1, 0.25, 0.5, 0.5000001, 0.75, 0.9, 0.99, 0.999999, 1.0];
+        for n in 1..=130usize {
+            let counts: Vec<(u64, u64)> =
+                (0..n).map(|i| (i as u64 + 1, (2 * (n - i)) as u64)).collect();
+            let sorted = snap_from_counts(1, &counts, SnapLayout::Sorted);
+            let eyt = snap_from_counts(1, &counts, SnapLayout::Eytzinger);
+            for &t in &thresholds {
+                let (m, s) = dyadic(t);
+                assert_eq!(
+                    sorted.threshold_prefix(m, s),
+                    eyt.threshold_prefix(m, s),
+                    "n={n} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eytzinger_search_full_list_short_is_len() {
+        // A stale snapshot raced by pruning can be asked for more mass
+        // than it holds (cum_reaches false everywhere after the caller
+        // rescales): simulate with t=1.0 against a *larger* total by
+        // constructing entries whose last cum understates the denominator.
+        let entries = vec![(1u64, 5u64, 5u64), (2, 3, 8)];
+        let mut snap = EdgeSnapshot::from_entries(1, entries, SnapLayout::Eytzinger);
+        snap.total = 100; // stale denominator: even cum=8 falls short of t=0.5
+        let (m, s) = dyadic(0.5);
+        assert_eq!(snap.threshold_prefix(m, s), snap.entries.len());
+    }
+
+    #[test]
+    fn simd_prefix_copy_matches_scalar() {
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 15, 16, 33, 64, 127] {
+            let counts: Vec<(u64, u64)> =
+                (0..n).map(|i| (1000 + i as u64, (3 * (n - i) + 1) as u64)).collect();
+            let eyt = snap_from_counts(9, &counts, SnapLayout::Eytzinger);
+            let sorted = snap_from_counts(9, &counts, SnapLayout::Sorted);
+            for end in [1, n / 2, n] {
+                if end == 0 {
+                    continue;
+                }
+                let mut fast = Vec::new();
+                let mut slow = Vec::new();
+                eyt.copy_prefix_probs(end, &mut fast);
+                sorted.copy_prefix_probs(end, &mut slow);
+                assert_eq!(fast.len(), end);
+                // Bit-identical, not approximately equal.
+                for (f, s) in fast.iter().zip(&slow) {
+                    assert_eq!(f.0, s.0);
+                    assert_eq!(f.1.to_bits(), s.1.to_bits(), "n={n} end={end}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_guard_falls_back_above_2_pow_52() {
+        // Totals at/above 2^52 must take the scalar path (the packed
+        // conversion trick is only exact below); results still match the
+        // plain-layout scalar loop bit for bit.
+        let big = 1u64 << 53;
+        let counts = [(1u64, big), (2, big), (3, 7)];
+        let eyt = snap_from_counts(3, &counts, SnapLayout::Eytzinger);
+        let sorted = snap_from_counts(3, &counts, SnapLayout::Sorted);
+        assert!(eyt.total >= (1 << 52));
+        let mut fast = Vec::new();
+        let mut slow = Vec::new();
+        eyt.copy_prefix_probs(3, &mut fast);
+        sorted.copy_prefix_probs(3, &mut slow);
+        for (f, s) in fast.iter().zip(&slow) {
+            assert_eq!(f.1.to_bits(), s.1.to_bits());
+        }
+    }
+
+    #[test]
+    fn accel_accounted_in_bytes() {
+        let counts: Vec<(u64, u64)> = (0..32).map(|i| (i, 32 - i)).collect();
+        let plain = snap_from_counts(1, &counts, SnapLayout::Sorted);
+        let eyt = snap_from_counts(1, &counts, SnapLayout::Eytzinger);
+        assert!(eyt.approx_bytes() > plain.approx_bytes());
     }
 }

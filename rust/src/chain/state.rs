@@ -163,7 +163,7 @@ impl NodeState {
             // fallback — snapshots are simply not worth it here.
             return None;
         }
-        match self.try_rebuild_snapshot(guard) {
+        match self.try_rebuild_snapshot(guard, config) {
             Some(snap) => {
                 metrics.snap_rebuilds.inc();
                 Some(snap)
@@ -182,7 +182,7 @@ impl NodeState {
     /// *before* the sweep runs, so the sweep's invalidation retires it.
     /// Returns `None` (no publish) when the ticket is busy or the list
     /// came back empty.
-    fn try_rebuild_snapshot<'g>(&self, guard: &'g Guard) -> Option<&'g EdgeSnapshot> {
+    fn try_rebuild_snapshot<'g>(&self, guard: &'g Guard, config: &ChainConfig) -> Option<&'g EdgeSnapshot> {
         // Epoch first: increments racing the collect re-age the snapshot,
         // they can never make it look fresher than it is.
         let epoch = self.edges.mutations();
@@ -200,7 +200,11 @@ impl NodeState {
                     if entries.is_empty() {
                         return None;
                     }
-                    let fresh = Box::into_raw(Box::new(EdgeSnapshot::from_entries(epoch, entries)));
+                    let fresh = Box::into_raw(Box::new(EdgeSnapshot::from_entries(
+                        epoch,
+                        entries,
+                        config.snap_layout,
+                    )));
                     let old = self.snap.swap(fresh, Ordering::AcqRel);
                     if !old.is_null() {
                         unsafe { rcu::defer_free(guard, old) };
@@ -246,16 +250,13 @@ impl NodeState {
         // rounding that loses ulps once totals approach 2^53.
         let (m, s) = dyadic(threshold);
         if let Some(snap) = self.snapshot_for_read(guard, config, metrics) {
-            // O(log E): binary search the inclusive prefix sums for the
-            // minimal covering prefix, then copy it out.
+            // O(log E): search the inclusive prefix sums (branchless
+            // Eytzinger descent or binary search, per layout) for the
+            // minimal covering prefix, then bulk-copy it out (vectorized
+            // when the layout carries SoA columns).
             let end = (snap.threshold_prefix(m, s) + 1).min(snap.entries.len());
-            let totf = snap.total as f64;
-            let mut cum = 0u64;
-            for &(dst, count, c) in &snap.entries[..end] {
-                out.items.push((dst, count as f64 / totf));
-                cum = c;
-            }
-            out.cumulative = cum as f64 / totf;
+            snap.copy_prefix_probs(end, &mut out.items);
+            out.cumulative = snap.entries[end - 1].2 as f64 / snap.total as f64;
             out.scanned = end;
             out.total = snap.total;
             return;
@@ -287,11 +288,8 @@ impl NodeState {
             // The bounded-copy fast path: one contiguous prefix, no
             // pointer chase, probabilities against the snapshot's own sum.
             let end = k.min(snap.entries.len());
-            let totf = snap.total as f64;
-            for &(dst, count, _) in &snap.entries[..end] {
-                out.items.push((dst, count as f64 / totf));
-            }
-            out.cumulative = snap.entries[end - 1].2 as f64 / totf;
+            snap.copy_prefix_probs(end, &mut out.items);
+            out.cumulative = snap.entries[end - 1].2 as f64 / snap.total as f64;
             out.scanned = end;
             out.total = snap.total;
             return;

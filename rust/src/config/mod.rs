@@ -30,6 +30,8 @@ pub struct ServerConfig {
     /// Replication parameters (leader streaming + follower link); inert
     /// unless the process serves a follower or runs with `--follow`.
     pub replicate: ReplicateSection,
+    /// Thread-placement parameters (DESIGN.md §7).
+    pub runtime: RuntimeSection,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -47,6 +49,24 @@ pub struct ChainSection {
     pub snap_staleness: u64,
     /// Minimum edge count before a node gets a snapshot at all.
     pub snap_min_edges: usize,
+    /// Read-snapshot memory layout: "eytzinger" (branchless BFS search +
+    /// SIMD prefix copy, DESIGN.md §7) or "sorted" (PR 2 binary search).
+    pub snap_layout: String,
+    /// Standalone order-repair cadence in seconds; 0 = repair only
+    /// piggybacks on decay (the original behavior).
+    pub repair_interval_s: u64,
+}
+
+/// `[runtime]` — thread placement (DESIGN.md §7). Pinning is best-effort:
+/// a restricted cpuset logs and leaves workers floating.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RuntimeSection {
+    /// Pin shard-affine ingest workers to cores.
+    pub pin_workers: bool,
+    /// First core index used when pinning (worker w → core
+    /// `(core_offset + w) % ncpus`) — lets an operator reserve low cores
+    /// for the accept loop / OS.
+    pub core_offset: usize,
 }
 
 /// `[persist]` — the durability subsystem (DESIGN.md §4). All knobs are
@@ -158,9 +178,12 @@ impl Default for ServerConfig {
                 snap_enabled: true,
                 snap_staleness: 128,
                 snap_min_edges: 8,
+                snap_layout: "eytzinger".to_string(),
+                repair_interval_s: 0,
             },
             persist: PersistSection::default(),
             replicate: ReplicateSection::default(),
+            runtime: RuntimeSection::default(),
         }
     }
 }
@@ -188,6 +211,14 @@ impl ServerConfig {
                 "chain.snap_enabled" => cfg.chain.snap_enabled = value.as_bool()?,
                 "chain.snap_staleness" => cfg.chain.snap_staleness = value.as_u64()?,
                 "chain.snap_min_edges" => cfg.chain.snap_min_edges = value.as_usize()?,
+                "chain.snap_layout" => {
+                    cfg.chain.snap_layout = value.as_str()?.to_string()
+                }
+                "chain.repair_interval_s" => {
+                    cfg.chain.repair_interval_s = value.as_u64()?
+                }
+                "runtime.pin_workers" => cfg.runtime.pin_workers = value.as_bool()?,
+                "runtime.core_offset" => cfg.runtime.core_offset = value.as_usize()?,
                 "persist.data_dir" => cfg.persist.data_dir = value.as_str()?.to_string(),
                 "persist.fsync" => cfg.persist.fsync = value.as_str()?.to_string(),
                 "persist.fsync_interval_ms" => {
@@ -228,6 +259,8 @@ impl ServerConfig {
         if cfg.chain.decay_num >= cfg.chain.decay_den {
             return Err("chain.decay_num must be < chain.decay_den".to_string());
         }
+        crate::chain::SnapLayout::parse(&cfg.chain.snap_layout)
+            .map_err(|e| format!("chain.snap_layout: {e}"))?;
         crate::persist::FsyncPolicy::parse(&cfg.persist.fsync)?;
         if cfg.persist.segment_bytes == 0 {
             return Err("persist.segment_bytes must be positive".to_string());
@@ -290,6 +323,10 @@ impl ServerConfig {
             snap_enabled: self.chain.snap_enabled,
             snap_staleness: self.chain.snap_staleness,
             snap_min_edges: self.chain.snap_min_edges,
+            // Validated at parse time; unparsed strings (hand-built
+            // configs) fall back to the default layout.
+            snap_layout: crate::chain::SnapLayout::parse(&self.chain.snap_layout)
+                .unwrap_or_default(),
         }
     }
 }
@@ -342,6 +379,25 @@ decay_den = 4
         assert!(cfg.chain.snap_enabled);
         let cc = cfg.to_chain_config();
         assert_eq!(cc.snap_staleness, crate::chain::ChainConfig::default().snap_staleness);
+    }
+
+    #[test]
+    fn layout_and_runtime_knobs_parse() {
+        let text = "[chain]\nsnap_layout = \"sorted\"\nrepair_interval_s = 30\n\
+                    [runtime]\npin_workers = true\ncore_offset = 2\n";
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.chain.snap_layout, "sorted");
+        assert_eq!(cfg.chain.repair_interval_s, 30);
+        assert!(cfg.runtime.pin_workers);
+        assert_eq!(cfg.runtime.core_offset, 2);
+        assert_eq!(cfg.to_chain_config().snap_layout, crate::chain::SnapLayout::Sorted);
+        // Defaults: Eytzinger layout, standalone repair off, no pinning.
+        let cfg = ServerConfig::from_toml("").unwrap();
+        assert_eq!(cfg.to_chain_config().snap_layout, crate::chain::SnapLayout::Eytzinger);
+        assert_eq!(cfg.chain.repair_interval_s, 0);
+        assert!(!cfg.runtime.pin_workers);
+        // Unknown layouts are a parse-time error, not a silent default.
+        assert!(ServerConfig::from_toml("[chain]\nsnap_layout = \"btree\"\n").is_err());
     }
 
     #[test]

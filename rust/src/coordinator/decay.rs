@@ -90,3 +90,86 @@ impl Drop for DecayScheduler {
         }
     }
 }
+
+/// Standalone order-repair scheduler (`[chain] repair_interval_s`): runs
+/// [`Engine::repair`] on its own deadline instead of only piggybacking on
+/// decay. Decay cadence is a *model* knob (how fast history fades);
+/// repair cadence is a *structural* one (how long opportunistically
+/// skipped swaps may persist) — high-churn deployments want frequent
+/// repair without accelerating decay. Same absolute-deadline condvar
+/// protocol as [`DecayScheduler`].
+pub struct RepairScheduler {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    runs: Arc<AtomicU64>,
+    running: Arc<AtomicBool>,
+}
+
+impl RepairScheduler {
+    /// Repair every `interval`; stops when the handle drops.
+    pub fn start(engine: Arc<Engine>, interval: Duration) -> RepairScheduler {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let runs = Arc::new(AtomicU64::new(0));
+        let running = Arc::new(AtomicBool::new(true));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let runs = Arc::clone(&runs);
+            let running = Arc::clone(&running);
+            std::thread::spawn(move || {
+                let (lock, cvar) = &*stop;
+                let mut deadline = Instant::now() + interval;
+                'run: loop {
+                    {
+                        let mut stopped =
+                            lock.lock().unwrap_or_else(PoisonError::into_inner);
+                        loop {
+                            if *stopped {
+                                break 'run;
+                            }
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            let (guard, _) = cvar
+                                .wait_timeout(stopped, deadline - now)
+                                .unwrap_or_else(PoisonError::into_inner);
+                            stopped = guard;
+                        }
+                    }
+                    engine.repair();
+                    runs.fetch_add(1, Ordering::Relaxed);
+                    deadline += interval;
+                    let now = Instant::now();
+                    if deadline < now {
+                        deadline = now + interval;
+                    }
+                }
+                running.store(false, Ordering::SeqCst);
+            })
+        };
+        RepairScheduler { stop, handle: Some(handle), runs, running }
+    }
+
+    pub fn runs(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::SeqCst)
+    }
+
+    pub fn stop(&self) {
+        let (lock, cvar) = &*self.stop;
+        *lock.lock().unwrap_or_else(PoisonError::into_inner) = true;
+        cvar.notify_all();
+    }
+}
+
+impl Drop for RepairScheduler {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -85,6 +85,14 @@ pub struct EngineStats {
     /// its own, shard by shard.
     pub wal_epoch: u64,
     pub wal_last_seqs: Vec<u64>,
+    /// Approximate resident bytes: per-shard structures (node states,
+    /// cache-line-padded edge nodes, dst tables, read snapshots and their
+    /// Eytzinger mirrors) plus the edge arena's slack — open-block tails,
+    /// headers, and not-yet-reclaimed holes — counted once process-wide,
+    /// so memory reporting stays honest after the allocator change.
+    pub approx_bytes: usize,
+    /// Resident bytes held by edge-arena blocks (allocated − freed).
+    pub arena_bytes: u64,
 }
 
 /// One MCPrioQ per shard; srcs are hash-routed so every shard sees a
@@ -158,6 +166,10 @@ impl Engine {
         // everything down: Engine::drop closes the queues, workers wake,
         // fail the upgrade, and exit; drop then joins them.
         {
+            let pin = config.runtime.pin_workers;
+            let core_offset = config.runtime.core_offset;
+            let ncpus =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
             let mut ws = engine.workers.lock().unwrap();
             for w in 0..workers {
                 let owned: Vec<(usize, Arc<BoundedQueue<(u64, u64)>>)> = (0..nshards)
@@ -165,7 +177,22 @@ impl Engine {
                     .map(|i| (i, Arc::clone(&engine.queues[i])))
                     .collect();
                 let weak = Arc::downgrade(&engine);
-                ws.push(std::thread::spawn(move || Engine::ingest_loop(weak, owned)));
+                ws.push(std::thread::spawn(move || {
+                    // Shard ownership is static, so pinning worker w to one
+                    // core keeps its shards' working set (and its arena
+                    // blocks) resident in one cache hierarchy. Best-effort:
+                    // a restricted cpuset just leaves the worker floating.
+                    if pin {
+                        let cpu = (core_offset + w) % ncpus;
+                        if let Err(errno) = crate::runtime::pin_current_thread(cpu) {
+                            eprintln!(
+                                "mcprioq: could not pin ingest worker {w} to cpu {cpu} \
+                                 (errno {errno}); continuing unpinned"
+                            );
+                        }
+                    }
+                    Engine::ingest_loop(weak, owned)
+                }));
             }
         }
         engine
@@ -602,6 +629,16 @@ impl Engine {
         mark
     }
 
+    /// Set every shard's checkpoint mark. Recovery uses this to restore
+    /// the persisted mark from the `CKPT_MARK` sidecar so the first
+    /// post-restart checkpoint can stay differential; only meaningful
+    /// before ingestion starts or inside an ingest pause.
+    pub fn set_ckpt_mark(&self, mark: u64) {
+        for s in &self.shards {
+            s.set_ckpt_mark(mark);
+        }
+    }
+
     /// Rebuild state from an exported snapshot: each node's edge list is
     /// replayed as one same-src weighted batch into its shard, mirroring
     /// `McPrioQ::import` (recovery and the persist tests rely on the
@@ -645,11 +682,13 @@ impl Engine {
         let mut snap_hits = 0;
         let mut snap_rebuilds = 0;
         let mut snap_fallbacks = 0;
+        let mut approx_bytes = 0usize;
         for s in &self.shards {
             let st = s.stats();
             nodes += st.nodes;
             edges += st.edges;
             observes += st.observes;
+            approx_bytes += st.approx_bytes;
             // Sum, not max: every aggregate in this block is total work
             // across shards. (`max` here silently under-reported decay by
             // a factor of the shard count.)
@@ -661,6 +700,7 @@ impl Engine {
             snap_fallbacks += st.snap_fallbacks;
         }
         let snap = self.query_lat.snapshot();
+        let arena = crate::chain::arena::stats();
         let (wal_bytes, ckpt_age_s, recovered_batches, wal_errors, wal_epoch, wal_last_seqs) =
             match self.persist.get() {
                 Some(p) => (
@@ -697,6 +737,10 @@ impl Engine {
             wal_errors,
             wal_epoch,
             wal_last_seqs,
+            // The arena is process-global; its slack is added once at the
+            // engine level, not per shard (shards would double-count it).
+            approx_bytes: approx_bytes + arena.slack_bytes() as usize,
+            arena_bytes: arena.resident_bytes(),
         }
     }
 

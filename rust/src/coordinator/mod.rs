@@ -43,7 +43,7 @@ mod protocol;
 mod queue;
 mod server;
 
-pub use decay::DecayScheduler;
+pub use decay::{DecayScheduler, RepairScheduler};
 pub use engine::{Engine, EngineStats};
 pub use protocol::{write_items_body, ItemsBody, Request, Response, MAX_WIRE_BATCH};
 pub use queue::BoundedQueue;

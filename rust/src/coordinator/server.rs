@@ -334,6 +334,9 @@ fn dispatch(
                 s.recovered_batches,
                 s.wal_errors
             );
+            // Honest memory accounting (DESIGN.md §7): model bytes including
+            // arena slack, plus resident arena block bytes.
+            let _ = write!(out, " approx_bytes={} arena_bytes={}", s.approx_bytes, s.arena_bytes);
             // Maintenance observability (DESIGN.md §6): total decay passes
             // (summed — per-shard work), the per-shard split, and pruned
             // edges.

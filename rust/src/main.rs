@@ -6,7 +6,7 @@ use std::time::Duration;
 
 use mcprioq::cli::{App, Command, Matches, Opt};
 use mcprioq::config::ServerConfig;
-use mcprioq::coordinator::{Client, DecayScheduler, Engine, Request, Server};
+use mcprioq::coordinator::{Client, DecayScheduler, Engine, RepairScheduler, Request, Server};
 
 fn app() -> App {
     App {
@@ -189,6 +189,15 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
         }
         _ => None,
     };
+    // Standalone repair cadence ([chain] repair_interval_s): structural
+    // maintenance decoupled from the decay (model) schedule. `--no-decay`
+    // disables both — it means "no background maintenance".
+    let _repair = (config.chain.repair_interval_s > 0 && !m.flag("no-decay")).then(|| {
+        RepairScheduler::start(
+            Arc::clone(&engine),
+            Duration::from_secs(config.chain.repair_interval_s),
+        )
+    });
     let _checkpointer = match &persist_cfg {
         Some(pcfg) => pcfg.checkpoint_interval.map(|interval| {
             mcprioq::persist::CheckpointScheduler::start(Arc::clone(&engine), interval)
@@ -272,6 +281,7 @@ fn serve_follower(
     let _handle = server.spawn();
 
     let mut decay: Option<DecayScheduler> = None;
+    let mut repair: Option<RepairScheduler> = None;
     let mut promoted_seen = false;
     let mut fault_reported = false;
     let mut ticks = 0u64;
@@ -288,8 +298,17 @@ fn serve_follower(
             if let Some(interval) = config.decay_interval.filter(|_| !no_decay) {
                 decay = Some(DecayScheduler::start(Arc::clone(&engine), interval));
             }
+            // Same promotion gate as decay: the leader's repair records
+            // were replayed in sequence position until now, so the local
+            // repair timer must not start before writability.
+            if config.chain.repair_interval_s > 0 && !no_decay {
+                repair = Some(RepairScheduler::start(
+                    Arc::clone(&engine),
+                    Duration::from_secs(config.chain.repair_interval_s),
+                ));
+            }
         }
-        let _ = &decay;
+        let _ = (&decay, &repair);
         if !fault_reported {
             if let Some(fault) = handle.state.fault() {
                 eprintln!("[replicate] replication faulted: {fault} (reads still served)");
@@ -329,13 +348,18 @@ fn client(m: &Matches) -> anyhow::Result<()> {
 /// 2. **Read sweep** — hot-node `infer_topk` throughput across reader
 ///    thread counts, prefix-sum snapshots off vs on (the read-path
 ///    acceptance sweep: snapshots must win ≥ 2× at 8 threads).
+/// 3. **Threshold layout sweep** — `infer_threshold` with the sorted
+///    prefix array vs the Eytzinger+SIMD layout (the mechanical-sympathy
+///    acceptance sweep: ≥ 1.5× at 64+ edges).
 ///
-/// Both emit machine-readable artifacts (`BENCH_update.json`,
+/// Every row carries hardware perf columns (IPC, LLC/branch misses per
+/// kiloinstruction) when `perf_event_open` is permitted, `-` otherwise.
+/// All sweeps emit machine-readable artifacts (`BENCH_update.json`,
 /// `BENCH_read.json`) under `--json-dir` for the CI perf trajectory.
 fn bench(m: &Matches) -> anyhow::Result<()> {
     use mcprioq::bench_harness::{
-        fmt_rate, hot_node_chain, parse_batch_list, read_topk_sweep, Bench, JsonArtifact, JsonVal,
-        Table,
+        fmt_rate, hot_node_chain, parse_batch_list, read_topk_sweep, threshold_layout_sweep,
+        Bench, JsonArtifact, JsonVal, Table,
     };
     use mcprioq::chain::{ChainConfig, McPrioQ};
     use mcprioq::coordinator::Engine;
@@ -441,10 +465,14 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
         "mcprioq bench: read sweep, fanout {read_fanout}, {}ms/point",
         duration.as_millis()
     );
+    // Perf-counter columns (`metrics::PerfCounters`): `-` / JSON null when
+    // perf_event_open is unavailable (non-Linux, paranoid, seccomp).
+    let fmt_opt = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.2}"));
+    let json_opt = |v: Option<f64>| JsonVal::Num(v.unwrap_or(f64::NAN));
     let mut read_json = JsonArtifact::new("read_topk_sweep");
     let mut read_table = Table::new(
         "cli_read_sweep",
-        &["mode", "threads", "topk_per_s", "vs_list_walk"],
+        &["mode", "threads", "topk_per_s", "vs_list_walk", "ipc", "llc_pki", "br_pki"],
     );
     // Shared fixture (bench_harness::hot_node_chain, same as bench e9): a
     // single hot src node with `read_fanout` Zipf-weighted edges.
@@ -462,6 +490,9 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
             row.threads.to_string(),
             format!("{:.0}", row.topk_per_s),
             format!("{:.2}", row.vs_list_walk),
+            fmt_opt(row.perf.ipc()),
+            fmt_opt(row.perf.llc_per_kinst()),
+            fmt_opt(row.perf.branch_miss_per_kinst()),
         ]);
         read_json.row(&[
             ("mode", JsonVal::Str(row.mode.to_string())),
@@ -469,16 +500,64 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
             ("fanout", JsonVal::Int(read_fanout)),
             ("topk_per_s", JsonVal::Num(row.topk_per_s)),
             ("vs_list_walk", JsonVal::Num(row.vs_list_walk)),
+            ("ipc", json_opt(row.perf.ipc())),
+            ("llc_miss_per_kinst", json_opt(row.perf.llc_per_kinst())),
+            ("branch_miss_per_kinst", json_opt(row.perf.branch_miss_per_kinst())),
         ]);
         println!(
-            "  {:>9} x{}: {} ({:.2}x)",
+            "  {:>9} x{}: {} ({:.2}x, ipc {})",
             row.mode,
             row.threads,
             fmt_rate(row.topk_per_s),
-            row.vs_list_walk
+            row.vs_list_walk,
+            fmt_opt(row.perf.ipc()),
         );
     }
     read_table.finish();
+
+    // ---- snapshot-layout sweep: sorted binary search vs Eytzinger+SIMD ----
+    // The mechanical-sympathy acceptance sweep: infer_threshold over the
+    // Eytzinger layout must beat the sorted prefix array ≥ 1.5x at 64+
+    // edges, and the perf columns should attribute the win (fewer branch
+    // misses from the branchless descent).
+    println!("mcprioq bench: threshold layout sweep, sorted vs eytzinger");
+    let mut layout_table = Table::new(
+        "cli_threshold_layout_sweep",
+        &["layout", "fanout", "thresholds_per_s", "vs_sorted", "ipc", "llc_pki", "br_pki"],
+    );
+    let layout_fanouts: Vec<usize> =
+        [16usize, 64, read_fanout as usize].into_iter().filter(|&f| f >= 2).collect();
+    let layout_threads = read_threads.iter().copied().max().unwrap_or(1);
+    for row in threshold_layout_sweep(&bench, duration, layout_threads, &layout_fanouts, train) {
+        layout_table.row(&[
+            row.layout.to_string(),
+            row.fanout.to_string(),
+            format!("{:.0}", row.thresholds_per_s),
+            format!("{:.2}", row.vs_sorted),
+            fmt_opt(row.perf.ipc()),
+            fmt_opt(row.perf.llc_per_kinst()),
+            fmt_opt(row.perf.branch_miss_per_kinst()),
+        ]);
+        read_json.row(&[
+            ("mode", JsonVal::Str(format!("threshold-{}", row.layout))),
+            ("threads", JsonVal::Int(layout_threads as u64)),
+            ("fanout", JsonVal::Int(row.fanout as u64)),
+            ("thresholds_per_s", JsonVal::Num(row.thresholds_per_s)),
+            ("vs_sorted", JsonVal::Num(row.vs_sorted)),
+            ("ipc", json_opt(row.perf.ipc())),
+            ("llc_miss_per_kinst", json_opt(row.perf.llc_per_kinst())),
+            ("branch_miss_per_kinst", json_opt(row.perf.branch_miss_per_kinst())),
+        ]);
+        println!(
+            "  {:>9} fanout {:>4}: {} ({:.2}x, br_pki {})",
+            row.layout,
+            row.fanout,
+            fmt_rate(row.thresholds_per_s),
+            row.vs_sorted,
+            fmt_opt(row.perf.branch_miss_per_kinst()),
+        );
+    }
+    layout_table.finish();
     let p = read_json.finish(&json_dir.join("BENCH_read.json"))?;
     println!("wrote {}", p.display());
 

@@ -3,9 +3,11 @@
 //! serving hot path.
 
 mod histogram;
+mod perf_counters;
 mod striped;
 
 pub use histogram::{Histogram, Snapshot};
+pub use perf_counters::{PerfCounters, PerfSample};
 pub use striped::StripedCounter;
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,315 @@
+//! Hardware performance counters via `perf_event_open(2)` — the
+//! attribution half of the mechanical-sympathy work (DESIGN.md §7):
+//! every bench row reports IPC and cache/branch miss rates so a
+//! throughput win can be traced to the microarchitectural effect that
+//! produced it (fewer LLC misses from the Eytzinger layout, fewer
+//! branch misses from the branchless descent) instead of guessed at.
+//!
+//! Design constraints:
+//!
+//! * **No libc** — the syscall is issued with inline asm, same pattern
+//!   as `runtime::affinity`.
+//! * **Graceful no-op** — `perf_event_open` is often unavailable
+//!   (non-Linux, `perf_event_paranoid`, seccomp in CI containers).
+//!   Every failure degrades to `available == false` with zeroed
+//!   samples; callers print `-` columns and carry on.
+//! * **Multi-threaded benches** — counters are opened with `inherit`,
+//!   so threads spawned *after* `open()` (the bench harness spawns its
+//!   workers per sample) are counted, and their totals fold into the
+//!   parent's fd when they exit, before the harness takes its end
+//!   snapshot. `inherit` is incompatible with `PERF_FORMAT_GROUP`
+//!   reads, hence four independent fds rather than one group. Events
+//!   start enabled (no `disabled` bit): an `ioctl(ENABLE)` would not
+//!   propagate to already-spawned children, but deltas of two
+//!   `read(2)` snapshots measure exactly the window between them.
+
+/// One snapshot of the four counters. All zeros when unavailable.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PerfSample {
+    pub cycles: u64,
+    pub instructions: u64,
+    pub llc_misses: u64,
+    pub branch_misses: u64,
+    /// False when any counter failed to open; derived metrics yield `None`.
+    pub available: bool,
+}
+
+impl PerfSample {
+    /// Counters elapsed since `earlier` (saturating, for PMU wraps).
+    pub fn delta(&self, earlier: &PerfSample) -> PerfSample {
+        PerfSample {
+            cycles: self.cycles.saturating_sub(earlier.cycles),
+            instructions: self.instructions.saturating_sub(earlier.instructions),
+            llc_misses: self.llc_misses.saturating_sub(earlier.llc_misses),
+            branch_misses: self.branch_misses.saturating_sub(earlier.branch_misses),
+            available: self.available && earlier.available,
+        }
+    }
+
+    /// Instructions per cycle.
+    pub fn ipc(&self) -> Option<f64> {
+        (self.available && self.cycles > 0)
+            .then(|| self.instructions as f64 / self.cycles as f64)
+    }
+
+    /// Last-level-cache misses per 1000 instructions.
+    pub fn llc_per_kinst(&self) -> Option<f64> {
+        (self.available && self.instructions > 0)
+            .then(|| self.llc_misses as f64 * 1000.0 / self.instructions as f64)
+    }
+
+    /// Branch misses per 1000 instructions.
+    pub fn branch_miss_per_kinst(&self) -> Option<f64> {
+        (self.available && self.instructions > 0)
+            .then(|| self.branch_misses as f64 * 1000.0 / self.instructions as f64)
+    }
+}
+
+/// Four hardware counters (cycles, instructions, LLC misses, branch
+/// misses) scoped to the calling process and its future threads.
+pub struct PerfCounters {
+    fds: [i64; 4],
+    available: bool,
+}
+
+impl PerfCounters {
+    /// Open the counters. Never fails: on any error the handle reports
+    /// `available() == false` and snapshots are zero.
+    pub fn open() -> PerfCounters {
+        imp::open()
+    }
+
+    pub fn available(&self) -> bool {
+        self.available
+    }
+
+    /// Read the current counter values.
+    pub fn snapshot(&self) -> PerfSample {
+        if !self.available {
+            return PerfSample::default();
+        }
+        let mut vals = [0u64; 4];
+        for (fd, v) in self.fds.iter().zip(vals.iter_mut()) {
+            match imp::read_u64(*fd) {
+                Some(x) => *v = x,
+                None => return PerfSample::default(),
+            }
+        }
+        PerfSample {
+            cycles: vals[0],
+            instructions: vals[1],
+            llc_misses: vals[2],
+            branch_misses: vals[3],
+            available: true,
+        }
+    }
+}
+
+impl Drop for PerfCounters {
+    fn drop(&mut self) {
+        for &fd in &self.fds {
+            if fd >= 0 {
+                imp::close(fd);
+            }
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use super::PerfCounters;
+
+    /// `struct perf_event_attr`, PERF_ATTR_SIZE_VER0 prefix (64 bytes) —
+    /// the kernel accepts any historical size and zero-fills the rest.
+    #[repr(C)]
+    struct PerfEventAttr {
+        type_: u32,
+        size: u32,
+        config: u64,
+        sample_period: u64,
+        sample_type: u64,
+        read_format: u64,
+        /// Bitfield word: inherit (1<<1) | exclude_kernel (1<<5) |
+        /// exclude_hv (1<<6). NOT `disabled`: events run from open, and
+        /// windows are measured as deltas of read() snapshots.
+        flags: u64,
+        wakeup_events: u32,
+        bp_type: u32,
+        config1: u64,
+    }
+
+    const _: () = assert!(std::mem::size_of::<PerfEventAttr>() == 64);
+
+    const PERF_TYPE_HARDWARE: u32 = 0;
+    /// PERF_COUNT_HW_*: cpu-cycles, instructions, cache-misses (= LLC
+    /// misses for type HARDWARE), branch-misses.
+    const CONFIGS: [u64; 4] = [0, 1, 3, 5];
+    const FLAGS: u64 = (1 << 1) | (1 << 5) | (1 << 6);
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const PERF_EVENT_OPEN: i64 = 298;
+        pub const READ: i64 = 0;
+        pub const CLOSE: i64 = 3;
+    }
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const PERF_EVENT_OPEN: i64 = 241;
+        pub const READ: i64 = 63;
+        pub const CLOSE: i64 = 57;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall5(nr: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64) -> i64 {
+        let ret: i64;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") nr => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall5(nr: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64) -> i64 {
+        let ret: i64;
+        std::arch::asm!(
+            "svc #0",
+            in("x8") nr,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            options(nostack),
+        );
+        ret
+    }
+
+    pub(super) fn open() -> PerfCounters {
+        let mut fds = [-1i64; 4];
+        for (i, &config) in CONFIGS.iter().enumerate() {
+            let attr = PerfEventAttr {
+                type_: PERF_TYPE_HARDWARE,
+                size: std::mem::size_of::<PerfEventAttr>() as u32,
+                config,
+                sample_period: 0,
+                sample_type: 0,
+                read_format: 0,
+                flags: FLAGS,
+                wakeup_events: 0,
+                bp_type: 0,
+                config1: 0,
+            };
+            // perf_event_open(&attr, pid=0 (this process), cpu=-1 (any),
+            //                 group_fd=-1, flags=0)
+            let fd = unsafe {
+                syscall5(nr::PERF_EVENT_OPEN, &attr as *const _ as i64, 0, -1, -1, 0)
+            };
+            if fd < 0 {
+                // All-or-nothing: partial counter sets would silently skew
+                // the derived ratios (e.g. IPC from mismatched windows).
+                for &f in fds.iter().take(i) {
+                    close(f);
+                }
+                return PerfCounters { fds: [-1; 4], available: false };
+            }
+            fds[i] = fd;
+        }
+        PerfCounters { fds, available: true }
+    }
+
+    pub(super) fn read_u64(fd: i64) -> Option<u64> {
+        let mut buf = 0u64;
+        let n = unsafe {
+            syscall5(nr::READ, fd, &mut buf as *mut u64 as i64, 8, 0, 0)
+        };
+        (n == 8).then_some(buf)
+    }
+
+    pub(super) fn close(fd: i64) {
+        unsafe { syscall5(nr::CLOSE, fd, 0, 0, 0, 0) };
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod imp {
+    use super::PerfCounters;
+
+    pub(super) fn open() -> PerfCounters {
+        PerfCounters { fds: [-1; 4], available: false }
+    }
+
+    pub(super) fn read_u64(_fd: i64) -> Option<u64> {
+        None
+    }
+
+    pub(super) fn close(_fd: i64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unavailable_counters_degrade_to_zero() {
+        // Whether or not the kernel grants the events, the API contract
+        // holds: snapshot never errors, derived metrics are None when
+        // unavailable or empty.
+        let pc = PerfCounters::open();
+        let s = pc.snapshot();
+        if !pc.available() {
+            assert_eq!(s, PerfSample::default());
+            assert_eq!(s.ipc(), None);
+            assert_eq!(s.llc_per_kinst(), None);
+        }
+    }
+
+    #[test]
+    fn deltas_measure_a_busy_window() {
+        let pc = PerfCounters::open();
+        if !pc.available() {
+            return; // no perf here (paranoid/seccomp/non-Linux): nothing to assert
+        }
+        let a = pc.snapshot();
+        // Burn some instructions so the window is provably non-empty.
+        let mut x = 0u64;
+        for i in 0..1_000_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(x);
+        let b = pc.snapshot();
+        let d = b.delta(&a);
+        assert!(d.available);
+        assert!(d.instructions > 0, "instruction counter did not advance: {d:?}");
+        assert!(d.ipc().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn inherit_counts_child_threads() {
+        let pc = PerfCounters::open();
+        if !pc.available() {
+            return;
+        }
+        let a = pc.snapshot();
+        let h = std::thread::spawn(|| {
+            let mut x = 0u64;
+            for i in 0..2_000_000u64 {
+                x = x.wrapping_mul(2862933555777941757).wrapping_add(i);
+            }
+            std::hint::black_box(x)
+        });
+        h.join().unwrap();
+        // The child exited before this snapshot, so its counts have folded
+        // into the inherited fds.
+        let d = pc.snapshot().delta(&a);
+        assert!(d.instructions > 1_000_000, "child-thread work not attributed: {d:?}");
+    }
+}

@@ -260,6 +260,15 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
     write_atomic(&pcfg.manifest_path(), manifest.render().as_bytes())
         .map_err(|e| format!("committing manifest: {e}"))?;
 
+    // Persist the mark floor beside the manifest (after the commit point,
+    // best-effort): recovery reads it to keep post-restart checkpoints
+    // differential. A crash between the two writes leaves a *stale lower*
+    // floor, whose dirty export is a superset — correct, just larger.
+    if let Err(e) = write_atomic(&pcfg.ckpt_mark_path(), format!("{new_floor}\n").as_bytes())
+    {
+        eprintln!("[persist] writing ckpt mark sidecar: {e} (next restart checkpoints full)");
+    }
+
     // Truncation lags one generation: delete only segments covered by the
     // *previous* committed generation's cuts, so recovery can still fall
     // back to it (its chain files are retained, see below) without hitting

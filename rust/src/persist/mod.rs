@@ -128,6 +128,16 @@ impl PersistConfig {
     pub fn manifest_path(&self) -> PathBuf {
         self.checkpoint_dir().join("MANIFEST")
     }
+
+    /// Sidecar recording the checkpoint mark (dirty-epoch floor) committed
+    /// with the newest generation, so a restarted engine can resume
+    /// *differential* checkpoints instead of forcing a full base (the mark
+    /// itself lives only in memory). Best-effort: a missing or stale
+    /// sidecar merely makes the next checkpoint conservative (full, or a
+    /// superset delta) — never incorrect.
+    pub fn ckpt_mark_path(&self) -> PathBuf {
+        self.checkpoint_dir().join("CKPT_MARK")
+    }
 }
 
 /// Non-poisoning lock: an ingest worker that panicked mid-batch must not

@@ -109,7 +109,21 @@ pub fn open_engine(
         *seq = cut;
     }
     let engine = Engine::new(config, workers);
+    // Restore the persisted checkpoint mark (the CKPT_MARK sidecar) so the
+    // recovered state carries real dirty epochs instead of resetting to 0
+    // — the first post-restart checkpoint can then stay differential.
+    // Nodes rebuilt from the snapshot chain are stamped F-1 ("clean as of
+    // the recovered generation"), then the mark moves to F so everything
+    // the WAL replay below touches is dirty relative to the committed
+    // floor. A stale (lower) sidecar only widens the dirty set.
+    let sidecar_floor = read_ckpt_mark(&pcfg).filter(|&f| f >= 2);
+    if let Some(f) = sidecar_floor {
+        engine.set_ckpt_mark(f - 1);
+    }
     engine.import_snapshot(&snapshot);
+    if let Some(f) = sidecar_floor {
+        engine.set_ckpt_mark(f);
+    }
     let nshards = engine.shard_count();
     let layout_changed = old_shards != 0 && old_shards != nshards;
     report.layout_changed = layout_changed;
@@ -160,13 +174,16 @@ pub fn open_engine(
     }
 
     // --- 3. arm the WAL writers ---
-    // In-memory dirty epochs reset on restart (every recovered node is
-    // stamped at the initial mark), so the chain floor re-arms at 0 and
-    // the first post-restart checkpoint is always full.
+    // The delta-chain floor re-arms from the sidecar (0 when absent, so
+    // the first post-restart checkpoint forces a full base exactly as
+    // before the sidecar existed). A layout change keeps floor 0: its
+    // immediate re-checkpoint must be a *full* snapshot — a delta would
+    // chain across the epoch bump (its parent's cuts index the deleted
+    // old epoch) and be rejected by the next recovery's fold.
     let chain = DeltaChain {
         base: chain_base,
         len: generation.saturating_sub(chain_base) as usize,
-        floor: 0,
+        floor: if layout_changed { 0 } else { sidecar_floor.unwrap_or(0) },
     };
     if report.layout_changed {
         let new_epoch = epoch + 1;
@@ -316,6 +333,12 @@ fn fold_deltas(
         cuts = dcuts;
     }
     (generation, folded, epoch, cuts, snap)
+}
+
+/// The checkpoint mark committed with the newest generation (the
+/// `CKPT_MARK` sidecar), or `None` when absent/unreadable.
+fn read_ckpt_mark(pcfg: &PersistConfig) -> Option<u64> {
+    fs::read_to_string(pcfg.ckpt_mark_path()).ok()?.trim().parse().ok()
 }
 
 /// Without a checkpoint the epoch comes from the newest `e<N>` directory

@@ -12,6 +12,13 @@ const LINK_UNLINKED: u8 = 2;
 
 /// One edge of the markov chain: destination id + transition counter
 /// (§II.3), threaded on the sorted list and on the pending stack.
+///
+/// Exactly one cache line (`align(64)`, 49 payload bytes padded to 64) and
+/// allocated from [`crate::chain::arena`], never the global allocator: a
+/// node shares its line with nothing, so the wait-free `count` increments
+/// of one edge never false-share with a neighbour, and the list walk's
+/// pointer chase lands on arena-packed lines (DESIGN.md §7).
+#[repr(align(64))]
 pub struct Node {
     /// Destination node id (the "item" returned by inference).
     pub key: u64,
@@ -34,8 +41,9 @@ pub struct Node {
 }
 
 impl Node {
-    fn boxed(key: u64, count: u64) -> *mut Node {
-        Box::into_raw(Box::new(Node {
+    /// A fresh, unlinked node value (moved into an arena slot by callers).
+    pub(crate) fn new(key: u64, count: u64) -> Node {
+        Node {
             key,
             count: AtomicU64::new(count),
             ceil: AtomicU64::new(0),
@@ -43,7 +51,11 @@ impl Node {
             prev: AtomicPtr::new(std::ptr::null_mut()),
             stack: AtomicPtr::new(std::ptr::null_mut()),
             link: AtomicU8::new(LINK_PENDING),
-        }))
+        }
+    }
+
+    fn boxed(key: u64, count: u64) -> *mut Node {
+        crate::chain::arena::alloc(Node::new(key, count))
     }
 
     #[inline]
@@ -199,7 +211,7 @@ impl EdgeList {
     /// The node must have come from [`EdgeList::alloc_node`] and must never
     /// have been passed to [`EdgeList::insert_node`] or published anywhere.
     pub unsafe fn free_unshared(node: *mut Node) {
-        drop(Box::from_raw(node));
+        crate::chain::arena::release(node);
     }
 
     fn push_pending(&self, node: *mut Node) {
@@ -425,7 +437,10 @@ impl EdgeList {
         self.drain_pending();
         drop(t);
         self.try_maintain();
-        rcu::defer_free(guard, node);
+        // Arena nodes are not Boxes: retire through a deferred closure that
+        // returns the slot to its block after the grace period.
+        let p = node as usize;
+        rcu::defer(guard, move || unsafe { crate::chain::arena::release(p as *mut Node) });
     }
 
     fn unlink_locked(&self, node: *mut Node) {
@@ -492,7 +507,10 @@ impl EdgeList {
             if new == 0 {
                 self.unlink_locked(cur);
                 on_prune(n.key, cur);
-                unsafe { rcu::defer_free(guard, cur) };
+                let p = cur as usize;
+                rcu::defer(guard, move || unsafe {
+                    crate::chain::arena::release(p as *mut Node)
+                });
                 pruned += 1;
             } else {
                 // Counts shrank: re-anchor the ceiling to the new
@@ -664,13 +682,13 @@ impl Drop for EdgeList {
         let mut cur = *self.head.get_mut();
         while !cur.is_null() {
             let next = unsafe { &*cur }.next.load(Ordering::Relaxed);
-            drop(unsafe { Box::from_raw(cur) });
+            unsafe { crate::chain::arena::release(cur) };
             cur = next;
         }
         let mut cur = *self.pending.get_mut();
         while !cur.is_null() {
             let next = unsafe { &*cur }.stack.load(Ordering::Relaxed);
-            drop(unsafe { Box::from_raw(cur) });
+            unsafe { crate::chain::arena::release(cur) };
             cur = next;
         }
     }

@@ -1,0 +1,89 @@
+//! Core affinity for shard-affine ingest workers (DESIGN.md §7).
+//!
+//! Shards are statically owned by workers (`shard % workers`), so a
+//! worker's working set — its shards' dst tables, edge arenas, and hot
+//! NodeStates — is private by construction. Pinning the worker to one
+//! core keeps that working set resident in one L1/L2 instead of being
+//! dragged across cores by the scheduler, and keeps the arena's
+//! thread-affine blocks NUMA-local to the core that walks them.
+//!
+//! The process links no libc, so `sched_setaffinity(2)` is issued as a
+//! raw syscall (x86_64 nr 203 / aarch64 nr 122). On other targets —
+//! or when the syscall fails (cpusets, containers with restricted
+//! masks) — pinning degrades to a no-op `Err`: affinity is an
+//! optimization, never a correctness dependency, so callers log and
+//! continue.
+
+/// Pin the calling thread to `cpu` (logical CPU index). Returns the
+/// negated errno on failure; `Err` is always recoverable.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pin_current_thread(cpu: usize) -> Result<(), i64> {
+    // cpu_set_t is 1024 bits; one u64 word per 64 CPUs.
+    let mut mask = [0u64; 16];
+    if cpu >= mask.len() * 64 {
+        return Err(-22); // EINVAL
+    }
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    // sched_setaffinity(pid = 0 → calling thread, len, mask)
+    let ret = unsafe {
+        sched_setaffinity_raw(0, std::mem::size_of_val(&mask), mask.as_ptr() as usize)
+    };
+    if ret == 0 { Ok(()) } else { Err(ret) }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn pin_current_thread(_cpu: usize) -> Result<(), i64> {
+    Err(-38) // ENOSYS: unsupported platform, caller treats as "not pinned"
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+unsafe fn sched_setaffinity_raw(pid: i64, len: usize, mask_ptr: usize) -> i64 {
+    let nr: i64 = 203; // __NR_sched_setaffinity
+    let ret: i64;
+    std::arch::asm!(
+        "syscall",
+        inlateout("rax") nr => ret,
+        in("rdi") pid,
+        in("rsi") len,
+        in("rdx") mask_ptr,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+unsafe fn sched_setaffinity_raw(pid: i64, len: usize, mask_ptr: usize) -> i64 {
+    let nr: i64 = 122; // __NR_sched_setaffinity
+    let ret: i64;
+    std::arch::asm!(
+        "svc #0",
+        in("x8") nr,
+        inlateout("x0") pid => ret,
+        in("x1") len,
+        in("x2") mask_ptr,
+        options(nostack),
+    );
+    ret
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn pinning_succeeds_for_some_cpu() {
+        // Containers/cpusets may forbid individual CPUs, so require only
+        // that at least one of the first N logical CPUs accepts the pin.
+        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let ok = (0..n).any(|cpu| pin_current_thread(cpu).is_ok());
+        assert!(ok, "could not pin to any of the first {n} CPUs");
+    }
+
+    #[test]
+    fn out_of_range_cpu_is_rejected() {
+        assert!(pin_current_thread(64 * 1024).is_err());
+    }
+}

@@ -20,6 +20,7 @@
 //! stub is compiled whose `XlaRuntime::new` always fails, and every caller
 //! skips the dense path (see `stub.rs`).
 
+mod affinity;
 #[cfg(feature = "xla")]
 mod dense;
 #[cfg(feature = "xla")]
@@ -28,6 +29,7 @@ mod manifest;
 #[cfg(not(feature = "xla"))]
 mod stub;
 
+pub use affinity::pin_current_thread;
 #[cfg(feature = "xla")]
 pub use dense::DenseXlaChain;
 #[cfg(feature = "xla")]

@@ -1,0 +1,256 @@
+//! Layout differential suite (DESIGN.md §7): the Eytzinger + SIMD read
+//! path must be **bit-identical** — same dsts, same `f64` bit patterns,
+//! same cumulative — to both the PR 2 sorted binary search and the
+//! paper's scalar list walk, at quiescence and across decay storms.
+//! Exactness is by construction (integer prefix sums, one IEEE division
+//! per item on every path), so the assertions compare `to_bits`, not an
+//! epsilon.
+
+use mcprioq::chain::{ChainConfig, McPrioQ, Recommendation};
+use mcprioq::config::ServerConfig;
+use mcprioq::coordinator::Engine;
+use mcprioq::testutil::Rng64;
+
+/// The three read paths under test, fed identical operation streams.
+struct Trio {
+    list: McPrioQ,
+    sorted: McPrioQ,
+    eytzinger: McPrioQ,
+}
+
+impl Trio {
+    fn new() -> Trio {
+        let cfg = |snap_enabled, layout: &str| ChainConfig {
+            snap_enabled,
+            snap_layout: mcprioq::chain::SnapLayout::parse(layout).unwrap(),
+            // Engage snapshots even on tiny nodes so the layouts are
+            // actually exercised at every fanout in the sweep.
+            snap_min_edges: 2,
+            ..Default::default()
+        };
+        Trio {
+            list: McPrioQ::new(cfg(false, "sorted")),
+            sorted: McPrioQ::new(cfg(true, "sorted")),
+            eytzinger: McPrioQ::new(cfg(true, "eytzinger")),
+        }
+    }
+
+    fn each(&self, f: impl Fn(&McPrioQ)) {
+        f(&self.list);
+        f(&self.sorted);
+        f(&self.eytzinger);
+    }
+
+    /// Compare every query type on `src` across the three paths.
+    fn check_src(&self, src: u64, fanout: usize, ctx: &str) {
+        for k in [1usize, 3, 10, fanout, fanout + 7] {
+            let reference = self.list.infer_topk(src, k);
+            assert_bits_eq(&reference, &self.sorted.infer_topk(src, k), src, &format!("{ctx} sorted topk{k}"));
+            assert_bits_eq(&reference, &self.eytzinger.infer_topk(src, k), src, &format!("{ctx} eytzinger topk{k}"));
+        }
+        for t in [0.0, 0.1, 0.25, 0.5, 0.77, 0.9, 0.999, 1.0] {
+            let reference = self.list.infer_threshold(src, t);
+            assert_bits_eq(&reference, &self.sorted.infer_threshold(src, t), src, &format!("{ctx} sorted t{t}"));
+            assert_bits_eq(&reference, &self.eytzinger.infer_threshold(src, t), src, &format!("{ctx} eytzinger t{t}"));
+        }
+    }
+}
+
+fn assert_bits_eq(a: &Recommendation, b: &Recommendation, src: u64, ctx: &str) {
+    assert_eq!(a.total, b.total, "{ctx} src{src}: total");
+    assert_eq!(a.items.len(), b.items.len(), "{ctx} src{src}: len");
+    for (i, ((ad, ap), (bd, bp))) in a.items.iter().zip(&b.items).enumerate() {
+        assert_eq!(ad, bd, "{ctx} src{src}: dst at {i}");
+        assert_eq!(
+            ap.to_bits(),
+            bp.to_bits(),
+            "{ctx} src{src}: prob bits at {i} ({ap} vs {bp})"
+        );
+    }
+    assert_eq!(
+        a.cumulative.to_bits(),
+        b.cumulative.to_bits(),
+        "{ctx} src{src}: cumulative ({} vs {})",
+        a.cumulative,
+        b.cumulative
+    );
+}
+
+/// Skewed transition stream: src in [0, srcs), dst weight ~ u^3 so the
+/// repaired order has real structure (heavy head, long tail).
+fn observe_stream(trio: &Trio, rng: &mut Rng64, srcs: u64, fanout: usize, n: usize) {
+    for _ in 0..n {
+        let src = rng.next_below(srcs);
+        let u = rng.next_f64();
+        let dst = 1_000 + ((u * u * u) * fanout as f64) as u64;
+        trio.each(|c| {
+            c.observe(src, dst);
+        });
+    }
+}
+
+#[test]
+fn layouts_agree_at_quiescence_across_fanouts() {
+    // Fanouts straddle the Eytzinger/SIMD interesting sizes: tiny (below
+    // snap_min_edges on some srcs), one SIMD block, the 64-edge
+    // acceptance point, non-power-of-two, and large.
+    for fanout in [3usize, 8, 64, 100, 300] {
+        let trio = Trio::new();
+        let mut rng = Rng64::new(0xE1F + fanout as u64);
+        observe_stream(&trio, &mut rng, 4, fanout, 6_000);
+        trio.each(|c| {
+            c.repair();
+        });
+        for src in 0..4 {
+            trio.check_src(src, fanout, &format!("fanout{fanout}"));
+        }
+    }
+}
+
+#[test]
+fn layouts_agree_through_decay_storms() {
+    let trio = Trio::new();
+    let mut rng = Rng64::new(0xDECA);
+    for round in 0..6 {
+        observe_stream(&trio, &mut rng, 4, 120, 3_000);
+        // Storm: several back-to-back decays prune tail edges and
+        // invalidate every published snapshot; some rounds skip repair so
+        // the snapshots rebuild from a not-recently-repaired list order.
+        for _ in 0..1 + round % 3 {
+            let expected = trio.list.decay();
+            assert_eq!(trio.sorted.decay(), expected, "round {round}: sorted decay");
+            assert_eq!(trio.eytzinger.decay(), expected, "round {round}: eytzinger decay");
+        }
+        if round % 2 == 0 {
+            trio.each(|c| {
+                c.repair();
+            });
+        }
+        for src in 0..4 {
+            trio.check_src(src, 120, &format!("storm round{round}"));
+        }
+    }
+}
+
+/// Readers racing a decay storm on the Eytzinger chain: no panics, and
+/// every answer is internally sane (RCU snapshot consistency). Cross-
+/// instance equality is only defined at quiescence, so this test checks
+/// invariants, not equality.
+#[test]
+fn eytzinger_reads_survive_a_live_decay_storm() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let chain = std::sync::Arc::new(McPrioQ::new(ChainConfig {
+        snap_min_edges: 2,
+        ..Default::default()
+    }));
+    let mut rng = Rng64::new(0x51);
+    for _ in 0..20_000 {
+        let u = rng.next_f64();
+        chain.observe(0, 1_000 + ((u * u * u) * 200.0) as u64);
+    }
+    chain.repair();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for t in 0..3 {
+            let chain = std::sync::Arc::clone(&chain);
+            let stop = &stop;
+            s.spawn(move || {
+                let mut rng = Rng64::new(0xBEEF + t);
+                let mut out = Recommendation::default();
+                while !stop.load(Ordering::Relaxed) {
+                    chain.infer_threshold_into(0, rng.next_f64(), &mut out);
+                    let mut sum = 0.0f64;
+                    for &(_, p) in &out.items {
+                        assert!((0.0..=1.0).contains(&p), "prob out of range: {p}");
+                        sum += p;
+                    }
+                    assert!(sum <= 1.0 + 1e-9, "prefix mass > 1: {sum}");
+                    chain.infer_topk_into(0, 10, &mut out);
+                    assert!(out.items.len() <= 10);
+                }
+            });
+        }
+        // The storm: churn + decay + repair while the readers run.
+        let mut rng = Rng64::new(0x5117);
+        for i in 0..60 {
+            for _ in 0..500 {
+                let u = rng.next_f64();
+                chain.observe(0, 1_000 + ((u * u * u) * 200.0) as u64);
+            }
+            chain.decay();
+            if i % 4 == 0 {
+                chain.repair();
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+}
+
+/// The same differential through the engine at 1, 2, and 8 shards: shard
+/// routing must not perturb layout equality (each shard is its own
+/// McPrioQ; the layout knob arrives via `[chain] snap_layout`).
+#[test]
+fn sharded_engines_agree_across_layouts() {
+    for shards in [1usize, 2, 8] {
+        let make = |snap_enabled: bool, layout: &str| {
+            let mut cfg = ServerConfig { shards, ..Default::default() };
+            cfg.chain.snap_enabled = snap_enabled;
+            cfg.chain.snap_min_edges = 2;
+            cfg.chain.snap_layout = layout.to_string();
+            // Direct-path engines: 0 workers, no queues in the loop.
+            Engine::new(&cfg, 0)
+        };
+        let engines =
+            [make(false, "sorted"), make(true, "sorted"), make(true, "eytzinger")];
+
+        let mut rng = Rng64::new(0x5A4D + shards as u64);
+        let mut batch = Vec::with_capacity(512);
+        for round in 0..3 {
+            batch.clear();
+            for _ in 0..4_000 {
+                let src = rng.next_below(16);
+                let u = rng.next_f64();
+                batch.push((src, 1_000 + ((u * u * u) * 150.0) as u64));
+            }
+            for e in &engines {
+                e.observe_batch_direct(&batch);
+            }
+            if round > 0 {
+                let expected = engines[0].decay();
+                for e in &engines[1..] {
+                    assert_eq!(e.decay(), expected, "shards {shards} round {round}: decay");
+                }
+            }
+            for e in &engines {
+                e.repair();
+            }
+            for src in 0..16 {
+                for k in [1usize, 5, 40] {
+                    let reference = engines[0].infer_topk(src, k);
+                    for (i, e) in engines[1..].iter().enumerate() {
+                        assert_bits_eq(
+                            &reference,
+                            &e.infer_topk(src, k),
+                            src,
+                            &format!("shards {shards} round {round} engine{} topk{k}", i + 1),
+                        );
+                    }
+                }
+                for t in [0.3, 0.8, 1.0] {
+                    let reference = engines[0].infer_threshold(src, t);
+                    for (i, e) in engines[1..].iter().enumerate() {
+                        assert_bits_eq(
+                            &reference,
+                            &e.infer_threshold(src, t),
+                            src,
+                            &format!("shards {shards} round {round} engine{} t{t}", i + 1),
+                        );
+                    }
+                }
+            }
+        }
+        for e in &engines {
+            e.shutdown();
+        }
+    }
+}

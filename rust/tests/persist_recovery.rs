@@ -261,6 +261,57 @@ fn shard_layout_change_rebuckets_and_bumps_epoch() {
     engine.shutdown();
 }
 
+/// The `CKPT_MARK` sidecar keeps checkpoints *differential across a
+/// restart*: before it, recovery re-armed the dirty floor at 0 and the
+/// first post-restart checkpoint always degraded to a full snapshot.
+#[test]
+fn checkpoints_stay_incremental_across_restart() {
+    let tmp = TempDir::new("ckpt-mark");
+    let config = durable_config(tmp.path(), 2);
+    let pairs = stream(12_000, 0xABCD);
+
+    let (engine, _) = open_engine(&config, 2).unwrap();
+    for chunk in pairs.chunks(311) {
+        assert_eq!(engine.observe_batch(chunk), chunk.len());
+    }
+    engine.quiesce();
+    assert_eq!(engine.checkpoint().unwrap().kind, "full"); // gen 1: the base
+    // A few srcs dirty (well under the compaction ratio): gen 2 is a delta.
+    assert_eq!(engine.observe_batch(&[(7, 8), (7, 9)]), 2);
+    engine.quiesce();
+    assert_eq!(engine.checkpoint().unwrap().kind, "delta"); // gen 2
+    let total_nodes = engine.node_count();
+    let reference = engine.export();
+    engine.shutdown();
+    drop(engine);
+
+    // Restart, touch a handful of srcs, checkpoint: still a delta, and a
+    // small one — only the post-restart writes are in the payload.
+    let (engine, report) = open_engine(&config, 2).unwrap();
+    assert_eq!(report.generation, 2);
+    assert_eq!(engine.export(), reference);
+    assert_eq!(engine.observe_batch(&[(1, 2), (1, 2), (3, 4)]), 3);
+    engine.quiesce();
+    let summary = engine.checkpoint().unwrap();
+    assert_eq!(summary.kind, "delta", "post-restart checkpoint degraded to full");
+    assert_eq!(summary.generation, 3);
+    assert!(
+        summary.nodes < total_nodes / 2,
+        "delta payload covers {} of {} nodes — not incremental",
+        summary.nodes,
+        total_nodes
+    );
+    let reference = engine.export();
+    engine.shutdown();
+    drop(engine);
+
+    // And the chain (base + deltas spanning the restart) still recovers.
+    let (engine, report) = open_engine(&config, 0).unwrap();
+    assert_eq!(report.generation, 3);
+    assert_eq!(engine.export(), reference);
+    engine.shutdown();
+}
+
 #[test]
 fn save_over_the_wire_then_restart_serves_same_model() {
     let tmp = TempDir::new("wire-save");
