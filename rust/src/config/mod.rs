@@ -20,6 +20,14 @@ pub struct ServerConfig {
     pub shards: usize,
     /// Update-ingestion queue capacity per shard (backpressure bound).
     pub queue_capacity: usize,
+    /// Ingress admission control (DESIGN.md §8): sustained write-op
+    /// budget per client connection, in ops/sec (OBSERVEB costs its pair
+    /// count). 0 = admission control off (the default) — writes block on
+    /// queue backpressure exactly as before.
+    pub rate_limit_ops: u64,
+    /// Token-bucket burst capacity on top of `rate_limit_ops`
+    /// (0 = one second of the sustained rate).
+    pub rate_limit_burst: u64,
     /// Decay cadence; None disables the decay scheduler.
     pub decay_interval: Option<Duration>,
     /// Chain parameters.
@@ -92,6 +100,13 @@ pub struct PersistSection {
     /// Compact to a full snapshot when at least this fraction of nodes is
     /// dirty since the last generation (in (0, 1]).
     pub delta_dirty_ratio: f64,
+    /// Storage-fault injection plan ("" = none): a seeded, schedulable
+    /// `persist::FaultPlan` grammar like
+    /// `fail_fsync_every=3;enospc_after=65536;enospc_window_ms=500`.
+    /// Every durability write then goes through `FaultyIo`. For the
+    /// fault-injection suites and the CI chaos smoke (the hidden
+    /// `--fault-plan` serve flag); never set this in production.
+    pub fault_plan: String,
 }
 
 /// `[replicate]` — WAL streaming to followers (DESIGN.md §5). The same
@@ -119,6 +134,11 @@ pub struct ReplicateSection {
     /// bootstrap when it returns — so one dead follower can never pin WAL
     /// (and delta-chain compaction) forever. 0 = unlimited.
     pub max_pin_lag_bytes: u64,
+    /// Link-chaos schedule for the follower's stream (DESIGN.md §8).
+    /// Deliberately unreachable from TOML — only tests and the bench
+    /// harness inject one — so a production config cannot ship with a
+    /// chaotic link.
+    pub chaos: Option<crate::replicate::ChaosPlan>,
 }
 
 impl Default for ReplicateSection {
@@ -130,6 +150,7 @@ impl Default for ReplicateSection {
             auto_promote_ms: 0,
             connect_timeout_ms: 30_000,
             max_pin_lag_bytes: 256 * 1024 * 1024,
+            chaos: None,
         }
     }
 }
@@ -145,6 +166,8 @@ pub struct ReplicateConfig {
     pub connect_timeout: Duration,
     /// 0 = a pinned follower may hold back unlimited WAL.
     pub max_pin_lag_bytes: u64,
+    /// Link-chaos schedule (tests only; `None` in production).
+    pub chaos: Option<crate::replicate::ChaosPlan>,
 }
 
 impl Default for PersistSection {
@@ -158,6 +181,7 @@ impl Default for PersistSection {
             checkpoint_wal_bytes: 256 * 1024 * 1024,
             delta_chain_max: 8,
             delta_dirty_ratio: 0.5,
+            fault_plan: String::new(),
         }
     }
 }
@@ -168,6 +192,8 @@ impl Default for ServerConfig {
             listen: "127.0.0.1:7171".to_string(),
             shards: 0,
             queue_capacity: 65_536,
+            rate_limit_ops: 0,
+            rate_limit_burst: 0,
             decay_interval: Some(Duration::from_secs(60)),
             chain: ChainSection {
                 src_capacity: 1024,
@@ -198,6 +224,8 @@ impl ServerConfig {
                 "server.listen" => cfg.listen = value.as_str()?.to_string(),
                 "server.shards" => cfg.shards = value.as_usize()?,
                 "server.queue_capacity" => cfg.queue_capacity = value.as_usize()?,
+                "server.rate_limit_ops" => cfg.rate_limit_ops = value.as_u64()?,
+                "server.rate_limit_burst" => cfg.rate_limit_burst = value.as_u64()?,
                 "server.decay_interval_ms" => {
                     let ms = value.as_u64()?;
                     cfg.decay_interval =
@@ -237,6 +265,9 @@ impl ServerConfig {
                 "persist.delta_dirty_ratio" => {
                     cfg.persist.delta_dirty_ratio = value.as_f64()?
                 }
+                "persist.fault_plan" => {
+                    cfg.persist.fault_plan = value.as_str()?.to_string()
+                }
                 "replicate.heartbeat_ms" => cfg.replicate.heartbeat_ms = value.as_u64()?,
                 "replicate.snapshot_records" => {
                     cfg.replicate.snapshot_records = value.as_u64()?
@@ -271,6 +302,10 @@ impl ServerConfig {
         if !(cfg.persist.delta_dirty_ratio > 0.0 && cfg.persist.delta_dirty_ratio <= 1.0) {
             return Err("persist.delta_dirty_ratio must be in (0, 1]".to_string());
         }
+        if !cfg.persist.fault_plan.is_empty() {
+            crate::persist::FaultPlan::parse(&cfg.persist.fault_plan)
+                .map_err(|e| format!("persist.fault_plan: {e}"))?;
+        }
         Ok(cfg)
     }
 
@@ -295,6 +330,8 @@ impl ServerConfig {
             checkpoint_wal_bytes: self.persist.checkpoint_wal_bytes.max(1),
             delta_chain_max: self.persist.delta_chain_max as usize,
             delta_dirty_ratio: self.persist.delta_dirty_ratio.clamp(f64::MIN_POSITIVE, 1.0),
+            io: crate::persist::IoHandle::from_plan(&self.persist.fault_plan)
+                .map_err(|e| format!("persist.fault_plan: {e}"))?,
         }))
     }
 
@@ -310,6 +347,7 @@ impl ServerConfig {
                 self.replicate.connect_timeout_ms.max(1),
             ),
             max_pin_lag_bytes: self.replicate.max_pin_lag_bytes,
+            chaos: self.replicate.chaos,
         }
     }
 
@@ -477,6 +515,39 @@ decay_den = 4
             .unwrap()
             .replicate_config();
         assert_eq!(r.max_pin_lag_bytes, 0);
+    }
+
+    #[test]
+    fn admission_knobs_parse() {
+        let text = "[server]\nrate_limit_ops = 5000\nrate_limit_burst = 100\n";
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.rate_limit_ops, 5000);
+        assert_eq!(cfg.rate_limit_burst, 100);
+        // Default: admission control off.
+        let cfg = ServerConfig::from_toml("").unwrap();
+        assert_eq!(cfg.rate_limit_ops, 0);
+        assert_eq!(cfg.rate_limit_burst, 0);
+    }
+
+    #[test]
+    fn fault_plan_parses_and_reaches_persist_config() {
+        let text = "[persist]\ndata_dir = \"/tmp/mc\"\n\
+                    fault_plan = \"seed=7;fail_fsync_every=3\"\n";
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.persist.fault_plan, "seed=7;fail_fsync_every=3");
+        // The resolved PersistConfig carries a faulty IoHandle (no panic,
+        // no silent fallback to StdIo).
+        assert!(cfg.persist_config().unwrap().is_some());
+        // Default: empty plan, passthrough I/O.
+        let cfg = ServerConfig::from_toml("").unwrap();
+        assert!(cfg.persist.fault_plan.is_empty());
+        // A malformed plan is a parse-time error, not a surprise at boot.
+        assert!(
+            ServerConfig::from_toml("[persist]\nfault_plan = \"explode=1\"\n").is_err(),
+            "unknown fault-plan key must be rejected"
+        );
+        // Chaos plans are not TOML-reachable by design.
+        assert!(ServerConfig::from_toml("[replicate]\nchaos = \"x\"\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! Ingress admission control: a per-connection token bucket.
+//!
+//! The server creates one [`TokenBucket`] per accepted connection from
+//! the `[server] rate_limit_ops` / `rate_limit_burst` knobs (0 = off,
+//! the default — admission is opt-in). Each write-side verb spends
+//! tokens proportional to its work (`OBSERVEB` costs its pair count,
+//! not 1), so a client cannot dodge the limit by batching. An exhausted
+//! bucket answers `ERR ratelimited retry_after_ms=…` — the connection
+//! stays open and reads are never charged, so a throttled feeder can
+//! still watch `STATS`/`HEALTH` to pace itself.
+//!
+//! The bucket is deliberately connection-local state owned by one
+//! handler thread: refill is computed lazily from elapsed time on each
+//! `admit`, so there is no shared clock, no background task, and no
+//! atomic traffic on the hot path.
+
+use std::time::Instant;
+
+/// Lazy-refill token bucket (tokens are ops; fractional refill carries).
+#[derive(Debug)]
+pub(crate) struct TokenBucket {
+    /// Sustained refill rate, ops/sec (`rate_limit_ops`).
+    rate: f64,
+    /// Bucket capacity (`rate_limit_burst`).
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// `rate == 0` disables limiting (every `admit` succeeds); a zero
+    /// burst with a nonzero rate falls back to one second of rate so a
+    /// misconfigured bucket still passes traffic.
+    pub(crate) fn new(rate: u64, burst: u64) -> TokenBucket {
+        let rate = rate as f64;
+        let burst = if burst == 0 { rate } else { burst as f64 };
+        TokenBucket { rate, burst, tokens: burst, last: Instant::now() }
+    }
+
+    /// Spend `cost` tokens. `Ok(())` admits; `Err(retry_after_ms)` tells
+    /// the client when enough tokens will have refilled. A cost larger
+    /// than the whole bucket is clamped to the bucket (it admits once
+    /// the bucket is full, rather than never).
+    pub(crate) fn admit(&mut self, cost: u64) -> Result<(), u64> {
+        if self.rate <= 0.0 {
+            return Ok(());
+        }
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        let cost = (cost as f64).min(self.burst);
+        if self.tokens >= cost {
+            self.tokens -= cost;
+            return Ok(());
+        }
+        let deficit = cost - self.tokens;
+        let ms = (deficit / self.rate * 1000.0).ceil() as u64;
+        Err(ms.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_admits_everything() {
+        let mut b = TokenBucket::new(0, 0);
+        for _ in 0..10_000 {
+            assert!(b.admit(1_000_000).is_ok());
+        }
+    }
+
+    #[test]
+    fn burst_then_throttle() {
+        let mut b = TokenBucket::new(100, 50);
+        // The initial bucket holds exactly `burst` tokens.
+        assert!(b.admit(50).is_ok());
+        let retry = b.admit(10).unwrap_err();
+        // 10 tokens at 100/s ≈ 100ms (elapsed time between calls only
+        // ever shrinks the deficit, so this is an upper bound).
+        assert!(retry >= 1 && retry <= 100, "retry_after {retry}ms");
+    }
+
+    #[test]
+    fn batch_cost_counts_pairs() {
+        let mut b = TokenBucket::new(1_000, 100);
+        assert!(b.admit(100).is_ok(), "burst covers a full batch");
+        assert!(b.admit(100).is_err(), "second batch must wait for refill");
+    }
+
+    #[test]
+    fn oversized_cost_clamps_to_burst() {
+        let mut b = TokenBucket::new(10, 5);
+        // Cost 1000 > burst 5: clamped, so a full bucket admits it
+        // instead of wedging the connection forever.
+        assert!(b.admit(1_000).is_ok());
+        let retry = b.admit(1_000).unwrap_err();
+        // Deficit is at most the whole (clamped) bucket: 5 tokens at
+        // 10/s = 500ms.
+        assert!(retry <= 500, "retry_after {retry}ms");
+    }
+
+    #[test]
+    fn refills_over_time() {
+        let mut b = TokenBucket::new(1_000_000, 10);
+        assert!(b.admit(10).is_ok());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        // 5ms at 1M ops/s refills far more than the 10-token burst cap.
+        assert!(b.admit(10).is_ok());
+    }
+}

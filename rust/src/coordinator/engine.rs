@@ -24,9 +24,11 @@ use std::time::Duration;
 use crate::chain::{ChainConfig, McPrioQ, Recommendation};
 use crate::config::ServerConfig;
 use crate::metrics::{Counter, Histogram, Meter};
-use crate::persist::{codec, PersistState};
+use crate::persist::{codec, LogOutcome, PersistState};
 use crate::rcu;
+use crate::runtime::RetryPolicy;
 
+use super::health::{Health, HealthState};
 use super::queue::BoundedQueue;
 
 const FIB: u64 = 0x9E37_79B9_7F4A_7C15;
@@ -38,6 +40,10 @@ const DRAIN_BATCH: usize = 256;
 /// How long an idle worker parks on one of its queues before sweeping the
 /// others (closed queues wake it immediately via notify).
 const IDLE_PARK: Duration = Duration::from_millis(2);
+
+/// How often the background heal task re-checks the health ladder while
+/// the engine is `Healthy` (cheap: one atomic load per tick).
+const HEAL_POLL: Duration = Duration::from_millis(50);
 
 /// Aggregated serving metrics (the STATS response / EXPERIMENTS.md rows).
 #[derive(Debug, Clone)]
@@ -85,6 +91,16 @@ pub struct EngineStats {
     /// its own, shard by shard.
     pub wal_epoch: u64,
     pub wal_last_seqs: Vec<u64>,
+    /// Degradation ladder (DESIGN.md §8): the current rung ("healthy" /
+    /// "degraded" / "recovering"), updates shed by admission control when
+    /// a shard queue saturated, write verbs refused by a connection's
+    /// token bucket, heal attempts by the WAL-retry task, and total
+    /// seconds spent off the healthy rung.
+    pub health: &'static str,
+    pub shed: u64,
+    pub ratelimited: u64,
+    pub wal_retry: u64,
+    pub degraded_s: u64,
     /// Approximate resident bytes: per-shard structures (node states,
     /// cache-line-padded edge nodes, dst tables, read snapshots and their
     /// Eytzinger mirrors) plus the edge arena's slack — open-block tails,
@@ -115,6 +131,12 @@ pub struct Engine {
     /// …and submissions the queue refused (closed/full): counted so the
     /// pre-push `enqueued` increment is balanced and quiesce terminates.
     rejected: Counter,
+    /// Updates shed by the non-blocking admission path (`observe_shed` /
+    /// `observe_batch_shed`): the queue was full and the server answered
+    /// `ERR overload` instead of blocking the connection.
+    shed: Counter,
+    /// Write verbs refused by a connection's token bucket.
+    ratelimited: Counter,
     query_lat: Histogram,
     update_meter: Meter,
     /// Durability state (WAL writers + checkpoint bookkeeping), armed once
@@ -129,6 +151,13 @@ pub struct Engine {
     /// Resolved `[replicate]` knobs (heartbeat cadence, snapshot fallback
     /// threshold, …) for the leader-side streamer and the follower link.
     replicate: crate::config::ReplicateConfig,
+    /// Degradation-ladder state (DESIGN.md §8): what `HEALTH` answers and
+    /// what the server's dispatch consults before admitting write verbs.
+    health: HealthState,
+    /// `[server] rate_limit_ops` / `rate_limit_burst` (0 = admission
+    /// control off). Stored here so the server can build per-connection
+    /// token buckets without re-threading the config.
+    admission: (u64, u64),
 }
 
 impl Engine {
@@ -155,11 +184,15 @@ impl Engine {
             enqueued: Counter::new(),
             applied: Counter::new(),
             rejected: Counter::new(),
+            shed: Counter::new(),
+            ratelimited: Counter::new(),
             query_lat: Histogram::new(),
             update_meter: Meter::new(),
             persist: OnceLock::new(),
             ingest_gate: RwLock::new(()),
             replicate: config.replicate_config(),
+            health: HealthState::new(),
+            admission: (config.rate_limit_ops, config.rate_limit_burst),
         });
         // Spawn shard-affine ingest workers. They hold their queue Arcs
         // plus a Weak to the engine, so dropping the last user Arc tears
@@ -214,13 +247,27 @@ impl Engine {
         // appended seq at a quiesced pause) contains exactly the applied
         // batches — recovery never loses an acked batch and never applies
         // one twice.
+        //
+        // Fault handling never panics this worker (DESIGN.md §8): a failed
+        // *append* parks the batch in the shard's quarantine (unapplied —
+        // applying an unlogged batch would diverge recovery) and degrades
+        // the engine; a failed *fsync* after the record was framed applies
+        // the batch (un-acking a framed record would double-apply on
+        // replay) and degrades until a sync lands.
         let apply = |shard: usize, batch: &[(u64, u64)]| -> Option<u64> {
             let engine = weak.upgrade()?;
             let _gate =
                 engine.ingest_gate.read().unwrap_or_else(PoisonError::into_inner);
             if let Some(persist) = engine.persist.get() {
-                if let Err(e) = persist.append(shard, batch) {
-                    persist.note_error(shard, &e);
+                match persist.log_batch(shard, batch) {
+                    LogOutcome::Logged => {}
+                    LogOutcome::SyncDegraded(why) => engine.health.degrade(&why),
+                    LogOutcome::Parked(why) => {
+                        engine.health.degrade(&why);
+                        // Parked, not applied: the heal task re-logs and
+                        // applies it in order once the disk recovers.
+                        return Some(0);
+                    }
                 }
             }
             engine.shards[shard].observe_batch(batch);
@@ -336,6 +383,50 @@ impl Engine {
         accepted
     }
 
+    /// Admission-control enqueue: non-blocking, `false` when the shard
+    /// queue is saturated (counted in `shed=`; the server answers
+    /// `ERR overload` instead of stalling the connection).
+    pub fn observe_shed(&self, src: u64, dst: u64) -> bool {
+        self.enqueued.inc();
+        if self.queues[self.shard_index(src)].try_push((src, dst)).is_err() {
+            self.rejected.inc();
+            self.shed.inc();
+            return false;
+        }
+        true
+    }
+
+    /// Admission-control batch enqueue: accepts as much of each shard run
+    /// as fits without blocking and sheds the rest. Returns
+    /// `(accepted, shed)`; a non-zero shed count becomes `ERR overload`
+    /// on the wire — under saturation the tail of a batch is dropped
+    /// *and reported*, never silently.
+    pub fn observe_batch_shed(&self, pairs: &[(u64, u64)]) -> (usize, usize) {
+        if pairs.is_empty() {
+            return (0, 0);
+        }
+        let submit = |queue: &BoundedQueue<(u64, u64)>, items: Vec<(u64, u64)>| -> (usize, usize) {
+            let len = items.len();
+            self.enqueued.add(len as u64);
+            let n = queue.try_push_bulk(items);
+            self.rejected.add((len - n) as u64);
+            self.shed.add((len - n) as u64);
+            (n, len - n)
+        };
+        if self.queues.len() == 1 {
+            return submit(&self.queues[0], pairs.to_vec());
+        }
+        let (mut accepted, mut shed) = (0, 0);
+        for (i, items) in self.partition_by_shard(pairs).into_iter().enumerate() {
+            if !items.is_empty() {
+                let (a, s) = submit(&self.queues[i], items);
+                accepted += a;
+                shed += s;
+            }
+        }
+        (accepted, shed)
+    }
+
     /// Enqueue without blocking; drops (and counts) on overflow — the
     /// load-shedding policy for best-effort telemetry feeds.
     pub fn observe_lossy(&self, src: u64, dst: u64) {
@@ -398,6 +489,70 @@ impl Engine {
     /// link read their knobs through the engine).
     pub fn replicate_config(&self) -> &crate::config::ReplicateConfig {
         &self.replicate
+    }
+
+    /// Current rung of the degradation ladder (DESIGN.md §8).
+    pub fn health(&self) -> Health {
+        self.health.health()
+    }
+
+    /// Why the engine left `Healthy` (empty string when healthy).
+    pub fn health_reason(&self) -> String {
+        self.health.reason()
+    }
+
+    /// Milliseconds until the heal task probes the fault again — the
+    /// `retry_after_ms=` hint on rejected writes.
+    pub fn health_retry_after_ms(&self) -> u64 {
+        self.health.retry_after_ms()
+    }
+
+    /// Force the ladder onto the degraded rung (tests exercise dispatch
+    /// gating without needing a real disk fault).
+    #[cfg(test)]
+    pub(crate) fn degrade_for_test(&self, why: &str) {
+        self.health.degrade(why);
+    }
+
+    /// Undo [`Engine::degrade_for_test`]: the in-memory engines the wire
+    /// tests use have no persist state, so no heal task climbs back for
+    /// them.
+    #[cfg(test)]
+    pub(crate) fn heal_for_test(&self) {
+        self.health.healed();
+    }
+
+    /// Panic a helper thread while it holds each shard queue's lock — the
+    /// sharpest version of "an ingest worker died mid-critical-section".
+    /// Tests assert the ingest plane survives the poisoned mutexes
+    /// (non-poisoning lock recovery, see `BoundedQueue::locked`).
+    #[cfg(test)]
+    pub(crate) fn poison_queues_for_test(&self) {
+        for q in &self.queues {
+            q.poison_for_test();
+        }
+    }
+
+    /// Panic a helper thread while it holds the ingest gate's read side,
+    /// poisoning the `RwLock` the way a dying ingest worker would.
+    #[cfg(test)]
+    pub(crate) fn poison_ingest_gate_for_test(self: &Arc<Self>) {
+        let me = Arc::clone(self);
+        let t = std::thread::spawn(move || {
+            let _gate = me.ingest_gate.read().unwrap();
+            panic!("simulated ingest-worker panic while holding the gate");
+        });
+        assert!(t.join().is_err(), "the helper must have panicked");
+    }
+
+    /// `[server] rate_limit_ops` / `rate_limit_burst` (0 = admission off).
+    pub fn admission_limits(&self) -> (u64, u64) {
+        self.admission
+    }
+
+    /// Count one write verb refused by a connection's token bucket.
+    pub(crate) fn note_ratelimited(&self) {
+        self.ratelimited.inc();
     }
 
     /// Apply a batch on the caller thread, bypassing the queues: grouped
@@ -489,14 +644,22 @@ impl Engine {
                 Some(persist) => {
                     let _gate =
                         self.ingest_gate.write().unwrap_or_else(PoisonError::into_inner);
-                    // Log-then-apply, like the batch path: an unloggable
-                    // decay is still applied (and surfaces via wal_errors).
-                    if let Err(e) =
-                        persist.append_op(shard, &codec::WalOp::Decay { num, den })
-                    {
-                        persist.note_error(shard, &e);
+                    // Log-then-apply, like the batch path. An unloggable
+                    // decay is *dropped*, not applied: maintenance is
+                    // periodic, so skipping a pass on a quarantined shard
+                    // keeps memory and WAL consistent, while applying it
+                    // unlogged would diverge recovery (DESIGN.md §8).
+                    match persist.log_maintenance(shard, &codec::WalOp::Decay { num, den }) {
+                        LogOutcome::Logged => s.decay_with(num, den),
+                        LogOutcome::SyncDegraded(why) => {
+                            self.health.degrade(&why);
+                            s.decay_with(num, den)
+                        }
+                        LogOutcome::Parked(why) => {
+                            self.health.degrade(&why);
+                            (0, 0)
+                        }
                     }
-                    s.decay_with(num, den)
                 }
                 None => s.decay_with(num, den),
             };
@@ -516,10 +679,18 @@ impl Engine {
                 Some(persist) => {
                     let _gate =
                         self.ingest_gate.write().unwrap_or_else(PoisonError::into_inner);
-                    if let Err(e) = persist.append_op(shard, &codec::WalOp::Repair) {
-                        persist.note_error(shard, &e);
+                    // Same drop-on-failure policy as [`Engine::decay`].
+                    match persist.log_maintenance(shard, &codec::WalOp::Repair) {
+                        LogOutcome::Logged => s.repair(),
+                        LogOutcome::SyncDegraded(why) => {
+                            self.health.degrade(&why);
+                            s.repair()
+                        }
+                        LogOutcome::Parked(why) => {
+                            self.health.degrade(&why);
+                            0
+                        }
                     }
-                    s.repair()
                 }
                 None => s.repair(),
             };
@@ -545,13 +716,19 @@ impl Engine {
     }
 
     /// Wait until every update enqueued *before this call* is applied (or
-    /// was rejected by a closing queue). Tracked by submit/apply counters
-    /// rather than queue emptiness, so batches popped-but-in-flight are
-    /// waited on too; `enqueued` is incremented before items become
-    /// visible in a queue, so the target can never undercount.
+    /// was rejected by a closing queue, or parked in a degraded shard's
+    /// quarantine). Tracked by submit/apply counters rather than queue
+    /// emptiness, so batches popped-but-in-flight are waited on too;
+    /// `enqueued` is incremented before items become visible in a queue,
+    /// so the target can never undercount. Parked updates count as
+    /// settled so a degraded engine still quiesces (it would otherwise
+    /// spin forever against a quarantined WAL); the checkpointer refuses
+    /// to cut while the engine is off the healthy rung, so the relaxation
+    /// never reaches a manifest.
     pub fn quiesce(&self) {
         let target = self.enqueued.get();
-        while self.applied.get() + self.rejected.get() < target {
+        let parked = || self.persist.get().map(|p| p.parked_updates()).unwrap_or(0);
+        while self.applied.get() + self.rejected.get() + parked() < target {
             std::thread::yield_now();
         }
         // One grace period so applied updates are fully visible.
@@ -654,11 +831,90 @@ impl Engine {
 
     /// Arm durability: called exactly once by `persist::open_engine` after
     /// recovery has replayed the WAL (so replayed batches are not
-    /// re-logged). Ingest workers start logging on their next batch.
-    pub(crate) fn attach_persist(&self, state: Arc<PersistState>) {
+    /// re-logged). Ingest workers start logging on their next batch. Also
+    /// spawns the WAL-retry heal task — durable engines are the only ones
+    /// that can degrade, so in-memory engines never pay for the thread.
+    pub(crate) fn attach_persist(self: &Arc<Self>, state: Arc<PersistState>) {
         if self.persist.set(state).is_err() {
             panic!("persist state attached twice");
         }
+        let weak = Arc::downgrade(self);
+        std::thread::spawn(move || Engine::heal_loop(weak));
+    }
+
+    /// Background WAL-retry task (DESIGN.md §8): while the engine is off
+    /// the healthy rung, periodically re-arm quarantined shards — drain
+    /// parked ops back through the WAL and re-probe fsync — under capped
+    /// exponential backoff. Holds only a `Weak`, so engine teardown is
+    /// never blocked on it; it exits on the poll after the engine drops.
+    fn heal_loop(weak: std::sync::Weak<Engine>) {
+        let retry = RetryPolicy::wal_retry(0x4EA1_5EED);
+        let mut failures = 0u32;
+        loop {
+            let pause = {
+                let Some(engine) = weak.upgrade() else { return };
+                if engine.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if engine.health.health() == Health::Healthy {
+                    failures = 0;
+                    HEAL_POLL
+                } else {
+                    engine.health.begin_recovery();
+                    engine.health.wal_retry.inc();
+                    match engine.try_heal() {
+                        Ok(()) => {
+                            engine.health.healed();
+                            failures = 0;
+                            HEAL_POLL
+                        }
+                        Err(why) => {
+                            // Back onto the degraded rung; the first
+                            // reason of the outage is kept for clients.
+                            engine.health.degrade(&why);
+                            let pause = retry.delay(failures);
+                            failures = failures.saturating_add(1);
+                            engine
+                                .health
+                                .set_retry_after_ms(pause.as_millis().max(1) as u64);
+                            pause
+                        }
+                    }
+                }
+            };
+            // The Arc is out of scope before sleeping: a parked healer
+            // must not keep a dropped engine alive for up to `cap`.
+            std::thread::sleep(pause);
+        }
+    }
+
+    /// One heal attempt across all shards: re-log + apply every parked op
+    /// in arrival order (crash-safe — the abandoned segment left their
+    /// seqs unconsumed, so re-appending stays contiguous), then force an
+    /// fsync to clear any sync-degraded shard. Errors leave the remaining
+    /// ops parked for the next attempt.
+    fn try_heal(&self) -> Result<(), String> {
+        let Some(persist) = self.persist.get() else { return Ok(()) };
+        // Same lock order as the ingest workers (gate.read → quarantine →
+        // wal), so the drain serializes cleanly against batch applies and
+        // checkpoint pauses.
+        let _gate = self.ingest_gate.read().unwrap_or_else(PoisonError::into_inner);
+        for shard in 0..self.shards.len() {
+            persist
+                .drain_quarantine(shard, |op| {
+                    self.apply_op(shard, op);
+                    if let codec::WalOp::Batch(batch) = op {
+                        let n = batch.len() as u64;
+                        self.applied.add(n);
+                        self.update_meter.mark_n(n);
+                    }
+                })
+                .map_err(|e| format!("shard {shard} wal retry failed: {e}"))?;
+            persist
+                .sync_shard(shard)
+                .map_err(|e| format!("shard {shard} fsync probe failed: {e}"))?;
+        }
+        Ok(())
     }
 
     pub(crate) fn persist_state(&self) -> Option<&Arc<PersistState>> {
@@ -737,6 +993,11 @@ impl Engine {
             wal_errors,
             wal_epoch,
             wal_last_seqs,
+            health: self.health.health().as_str(),
+            shed: self.shed.get(),
+            ratelimited: self.ratelimited.get(),
+            wal_retry: self.health.wal_retry.get(),
+            degraded_s: self.health.degraded_seconds(),
             // The arena is process-global; its slack is added once at the
             // engine level, not per shard (shards would double-count it).
             approx_bytes: approx_bytes + arena.slack_bytes() as usize,

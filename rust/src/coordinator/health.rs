@@ -1,0 +1,197 @@
+//! Engine health state machine (DESIGN.md §8).
+//!
+//! The ladder has three rungs:
+//!
+//! * `Healthy` — normal operation, all verbs accepted.
+//! * `DegradedReadOnly` — some shard's WAL writer is quarantined after an
+//!   I/O fault. Reads keep being served from the in-memory RCU
+//!   structures; writes are rejected at the wire with
+//!   `ERR degraded reason=… retry_after_ms=…` instead of being acked
+//!   into a log that cannot persist them.
+//! * `Recovering` — the background WAL-retry task is mid-heal: it is
+//!   re-appending parked records and re-probing fsync. Writes are still
+//!   rejected (the parked backlog must drain first so WAL order stays an
+//!   exact prefix of apply order).
+//!
+//! Transitions: `degrade()` moves to `DegradedReadOnly` from anywhere;
+//! `begin_recovery()` moves `DegradedReadOnly → Recovering`; `healed()`
+//! moves to `Healthy` and banks the outage duration. A fault that fires
+//! *during* recovery simply calls `degrade()` again — the ladder never
+//! panics and never deadlocks, it just changes what the wire says.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::Instant;
+
+use crate::metrics::Counter;
+
+/// The three rungs of the degradation ladder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    DegradedReadOnly,
+    Recovering,
+}
+
+impl Health {
+    /// Wire spelling (the `HEALTH` verb and the `health=` STATS gauge).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::DegradedReadOnly => "degraded",
+            Health::Recovering => "recovering",
+        }
+    }
+}
+
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Shared, lock-light health record: the hot paths (dispatch gating,
+/// STATS) read one atomic; the mutexed fields are touched only on
+/// transitions and when rendering the reason string.
+#[derive(Debug)]
+pub(crate) struct HealthState {
+    /// Encoded [`Health`]: 0 = healthy, 1 = degraded, 2 = recovering.
+    state: AtomicU8,
+    /// Why the engine left `Healthy` (empty when healthy).
+    reason: Mutex<String>,
+    /// When the current outage began (`None` when healthy).
+    since: Mutex<Option<Instant>>,
+    /// Outage time banked by previous heals, in nanoseconds.
+    degraded_ns: AtomicU64,
+    /// Hint handed to rejected writers: how long until the retry task
+    /// probes the fault again. Updated by the retry task each backoff.
+    retry_after_ms: AtomicU64,
+    /// Heal attempts by the background WAL-retry task (the `wal_retry=`
+    /// STATS gauge; grows while a fault persists).
+    pub(crate) wal_retry: Counter,
+}
+
+impl HealthState {
+    pub(crate) fn new() -> HealthState {
+        HealthState {
+            state: AtomicU8::new(0),
+            reason: Mutex::new(String::new()),
+            since: Mutex::new(None),
+            degraded_ns: AtomicU64::new(0),
+            retry_after_ms: AtomicU64::new(500),
+            wal_retry: Counter::new(),
+        }
+    }
+
+    pub(crate) fn health(&self) -> Health {
+        match self.state.load(Ordering::Acquire) {
+            0 => Health::Healthy,
+            1 => Health::DegradedReadOnly,
+            _ => Health::Recovering,
+        }
+    }
+
+    pub(crate) fn reason(&self) -> String {
+        lock_clean(&self.reason).clone()
+    }
+
+    /// Enter (or re-enter) `DegradedReadOnly`. The first reason of an
+    /// outage wins — later faults during the same outage don't churn the
+    /// message clients see.
+    pub(crate) fn degrade(&self, why: &str) {
+        {
+            let mut since = lock_clean(&self.since);
+            if since.is_none() {
+                *since = Some(Instant::now());
+                let mut reason = lock_clean(&self.reason);
+                reason.clear();
+                reason.push_str(why);
+            }
+        }
+        self.state.store(1, Ordering::Release);
+    }
+
+    /// `DegradedReadOnly → Recovering` (no-op from any other rung, so a
+    /// racing `degrade()` is never overwritten by a stale heal attempt).
+    pub(crate) fn begin_recovery(&self) {
+        let _ = self.state.compare_exchange(1, 2, Ordering::AcqRel, Ordering::Acquire);
+    }
+
+    /// Back to `Healthy`: clears the reason and banks the outage time.
+    pub(crate) fn healed(&self) {
+        {
+            let mut since = lock_clean(&self.since);
+            if let Some(t) = since.take() {
+                let ns = t.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                self.degraded_ns.fetch_add(ns, Ordering::Relaxed);
+            }
+            lock_clean(&self.reason).clear();
+        }
+        self.state.store(0, Ordering::Release);
+    }
+
+    /// Total time spent off the `Healthy` rung, including the current
+    /// outage if one is in progress (whole seconds).
+    pub(crate) fn degraded_seconds(&self) -> u64 {
+        let banked = self.degraded_ns.load(Ordering::Relaxed);
+        let live = lock_clean(&self.since)
+            .map(|t| t.elapsed().as_nanos().min(u64::MAX as u128) as u64)
+            .unwrap_or(0);
+        (banked.saturating_add(live)) / 1_000_000_000
+    }
+
+    pub(crate) fn set_retry_after_ms(&self, ms: u64) {
+        self.retry_after_ms.store(ms.max(1), Ordering::Relaxed);
+    }
+
+    pub(crate) fn retry_after_ms(&self) -> u64 {
+        self.retry_after_ms.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_transitions() {
+        let h = HealthState::new();
+        assert_eq!(h.health(), Health::Healthy);
+        assert_eq!(h.health().as_str(), "healthy");
+        h.degrade("wal append on shard 0: injected ENOSPC");
+        assert_eq!(h.health(), Health::DegradedReadOnly);
+        assert_eq!(h.reason(), "wal append on shard 0: injected ENOSPC");
+        // Later faults in the same outage keep the first reason.
+        h.degrade("something else");
+        assert_eq!(h.reason(), "wal append on shard 0: injected ENOSPC");
+        h.begin_recovery();
+        assert_eq!(h.health(), Health::Recovering);
+        // A fault mid-recovery drops back to degraded…
+        h.degrade("still failing");
+        assert_eq!(h.health(), Health::DegradedReadOnly);
+        // …and begin_recovery from healthy is a no-op.
+        h.healed();
+        assert_eq!(h.health(), Health::Healthy);
+        assert_eq!(h.reason(), "");
+        h.begin_recovery();
+        assert_eq!(h.health(), Health::Healthy);
+    }
+
+    #[test]
+    fn degraded_seconds_accumulates() {
+        let h = HealthState::new();
+        assert_eq!(h.degraded_seconds(), 0);
+        h.degrade("x");
+        // Sub-second outage rounds down to 0 but must not panic/underflow.
+        h.healed();
+        assert_eq!(h.degraded_seconds(), 0);
+    }
+
+    #[test]
+    fn retry_after_hint() {
+        let h = HealthState::new();
+        assert_eq!(h.retry_after_ms(), 500);
+        h.set_retry_after_ms(2_000);
+        assert_eq!(h.retry_after_ms(), 2_000);
+        h.set_retry_after_ms(0);
+        assert_eq!(h.retry_after_ms(), 1);
+    }
+}

@@ -37,14 +37,17 @@
 //!   `Engine::apply_replicated` and serves reads with bounded staleness,
 //!   rejecting writes until `PROMOTE`.
 
+mod admission;
 mod decay;
 mod engine;
+mod health;
 mod protocol;
 mod queue;
 mod server;
 
 pub use decay::{DecayScheduler, RepairScheduler};
 pub use engine::{Engine, EngineStats};
+pub use health::Health;
 pub use protocol::{write_items_body, ItemsBody, Request, Response, MAX_WIRE_BATCH};
 pub use queue::BoundedQueue;
 pub(crate) use server::connect_backoff;

@@ -16,6 +16,11 @@
 //! SAVE                       force a durability checkpoint (WAL cut +
 //!                            snapshot; ERR if persistence is disabled)
 //! STATS                      engine statistics
+//! HEALTH                     degradation-ladder probe: the current rung
+//!                            (healthy/degraded/recovering), the reason
+//!                            and retry hint when off the healthy rung,
+//!                            and the follower's link state when role-
+//!                            aware (DESIGN.md §8)
 //! PING                       liveness check
 //! QUIT                       close the connection
 //! REPL HELLO <epoch> <n> <s1> ... <sn>
@@ -51,6 +56,7 @@ pub enum Request {
     Repair,
     Save,
     Stats,
+    Health,
     Ping,
     Quit,
     /// Follower subscription: its WAL epoch and per-shard last seqs.
@@ -118,6 +124,7 @@ impl Request {
             "REPAIR" => Request::Repair,
             "SAVE" => Request::Save,
             "STATS" => Request::Stats,
+            "HEALTH" => Request::Health,
             "PING" => Request::Ping,
             "QUIT" => Request::Quit,
             "REPL" => match sub {
@@ -165,6 +172,7 @@ impl Request {
             Request::Repair => "REPAIR".into(),
             Request::Save => "SAVE".into(),
             Request::Stats => "STATS".into(),
+            Request::Health => "HEALTH".into(),
             Request::Ping => "PING".into(),
             Request::Quit => "QUIT".into(),
             Request::ReplHello { epoch, last_seqs } => {

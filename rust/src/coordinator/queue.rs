@@ -168,6 +168,33 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking bulk push: enqueue items in order until the queue is
+    /// full, then *shed the remainder* instead of waiting. Returns the
+    /// number accepted (0 when closed). One lock acquisition for the
+    /// whole batch — the load-shedding counterpart of
+    /// [`BoundedQueue::push_bulk`], used by the server when admission
+    /// control decides overload must answer `ERR overload` rather than
+    /// stall the accept loop.
+    pub fn try_push_bulk(&self, items: Vec<T>) -> usize {
+        let mut s = self.locked();
+        if s.closed {
+            return 0;
+        }
+        let room = self.capacity.saturating_sub(s.items.len());
+        let take = room.min(items.len());
+        let mut it = items.into_iter();
+        for _ in 0..take {
+            // `take <= items.len()`, so next() cannot be None here.
+            if let Some(x) = it.next() {
+                s.items.push_back(x);
+            }
+        }
+        if take > 0 {
+            self.not_empty.notify_all();
+        }
+        take
+    }
+
     /// Non-blocking batch pop: up to `max` items, possibly empty.
     pub fn try_pop_batch(&self, max: usize) -> Vec<T> {
         let mut s = self.locked();
@@ -206,6 +233,23 @@ impl<T> BoundedQueue<T> {
                 .unwrap_or_else(PoisonError::into_inner);
             s = guard;
         }
+    }
+
+    /// Panic a helper thread while it holds the state lock — simulating a
+    /// worker that dies mid-critical-section. Tests use this to prove the
+    /// non-poisoning [`Self::locked`] recovery keeps every other producer
+    /// and consumer alive instead of cascading `PoisonError` panics.
+    #[cfg(test)]
+    pub(crate) fn poison_for_test(self: &std::sync::Arc<Self>)
+    where
+        T: Send + 'static,
+    {
+        let q = std::sync::Arc::clone(self);
+        let t = std::thread::spawn(move || {
+            let _guard = q.state.lock().unwrap();
+            panic!("simulated worker panic while holding the queue lock");
+        });
+        assert!(t.join().is_err(), "the helper must have panicked");
     }
 
     /// Close the queue: producers fail fast, consumers drain then stop.

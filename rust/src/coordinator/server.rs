@@ -20,7 +20,9 @@ use anyhow::{Context, Result};
 use crate::chain::Recommendation;
 use crate::replicate::ReplicaState;
 
+use super::admission::TokenBucket;
 use super::engine::Engine;
+use super::health::Health;
 use super::protocol::{write_items_body, Request, Response, MAX_WIRE_BATCH};
 
 pub struct Server {
@@ -149,6 +151,11 @@ fn handle_connection(
     let mut line = String::new();
     let mut rec = Recommendation::default();
     let mut resp = String::with_capacity(256);
+    // Per-client admission control (`[server] rate_limit_ops`, 0 = off):
+    // each connection owns its bucket, so one greedy feeder throttles
+    // itself without a shared-limiter lock on the hot path.
+    let (rate, burst) = engine.admission_limits();
+    let mut bucket = TokenBucket::new(rate, burst);
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 || stop.load(Ordering::SeqCst) {
@@ -190,6 +197,7 @@ fn handle_connection(
                 req,
                 connections.load(Ordering::Relaxed),
                 replica.as_deref(),
+                &mut bucket,
                 &mut rec,
                 &mut resp,
             ),
@@ -214,11 +222,13 @@ const RESP_KEEP_CAPACITY: usize = 64 * 1024;
 /// (the caller's reused wire buffer). `rec` is the reused query scratch.
 /// Infallible: `fmt::Write` into a `String` cannot fail, so the stray
 /// `Result`s are dropped.
+#[allow(clippy::too_many_arguments)]
 fn dispatch(
     engine: &Engine,
     req: Request,
     live_connections: usize,
     replica: Option<&crate::replicate::ReplicaState>,
+    bucket: &mut TokenBucket,
     rec: &mut Recommendation,
     out: &mut String,
 ) {
@@ -248,20 +258,75 @@ fn dispatch(
         );
         return;
     }
+    // Degradation gate (DESIGN.md §8): off the healthy rung the engine
+    // keeps serving every read from the in-memory RCU structures, but
+    // mutations are refused — acking a write into a quarantined WAL (or
+    // on top of an un-drained parked backlog) would either lose it on
+    // crash or reorder it against the parked ops. Clients get the reason
+    // and a retry hint; the heal task re-admits writes by flipping the
+    // rung back, no reconnect needed.
+    let is_write = matches!(
+        req,
+        Request::Observe { .. } | Request::ObserveBatch { .. } | Request::Decay | Request::Repair
+    );
+    if is_write && engine.health() != Health::Healthy {
+        let _ = write!(
+            out,
+            "ERR degraded reason={:?} retry_after_ms={}",
+            engine.health_reason(),
+            engine.health_retry_after_ms()
+        );
+        return;
+    }
+    // Ingress admission (token bucket, per connection): write verbs spend
+    // tokens proportional to their work — OBSERVEB costs its pair count,
+    // so batching cannot dodge the limit. Reads are never charged.
+    if is_write {
+        let cost = match &req {
+            Request::ObserveBatch { pairs } => pairs.len() as u64,
+            _ => 1,
+        };
+        if let Err(retry_ms) = bucket.admit(cost) {
+            engine.note_ratelimited();
+            let _ = write!(out, "ERR ratelimited retry_after_ms={retry_ms}");
+            return;
+        }
+    }
+    // With admission control on, saturation sheds instead of blocking:
+    // a full shard queue answers `ERR overload` (counted in `shed=`)
+    // rather than stalling this connection — and with it the accept
+    // loop's thread budget — on backpressure.
+    let shedding = engine.admission_limits().0 > 0;
     match req {
         Request::Observe { src, dst } => {
-            if engine.observe(src, dst) {
+            if shedding {
+                if engine.observe_shed(src, dst) {
+                    out.push_str("OK");
+                } else {
+                    out.push_str("ERR overload shed=1");
+                }
+            } else if engine.observe(src, dst) {
                 out.push_str("OK");
             } else {
                 out.push_str("ERR shutting down");
             }
         }
         Request::ObserveBatch { pairs } => {
-            let accepted = engine.observe_batch(&pairs);
-            if accepted == pairs.len() {
-                let _ = write!(out, "OK n={accepted}");
+            if shedding {
+                let (accepted, shed) = engine.observe_batch_shed(&pairs);
+                if shed == 0 {
+                    let _ = write!(out, "OK n={accepted}");
+                } else {
+                    let _ = write!(out, "ERR overload shed={shed} accepted={accepted}");
+                }
             } else {
-                let _ = write!(out, "ERR shutting down (accepted {accepted}/{})", pairs.len());
+                let accepted = engine.observe_batch(&pairs);
+                if accepted == pairs.len() {
+                    let _ = write!(out, "OK n={accepted}");
+                } else {
+                    let _ =
+                        write!(out, "ERR shutting down (accepted {accepted}/{})", pairs.len());
+                }
             }
         }
         Request::Recommend { src, threshold } => {
@@ -364,6 +429,13 @@ fn dispatch(
                     let _ = write!(out, "{seq}");
                 }
             }
+            // Degradation-ladder gauges (DESIGN.md §8): the rung, shed /
+            // ratelimited rejections, heal attempts, and outage seconds.
+            let _ = write!(
+                out,
+                " health={} shed={} ratelimited={} wal_retry={} degraded_s={}",
+                s.health, s.shed, s.ratelimited, s.wal_retry, s.degraded_s
+            );
             if let Some(p) = engine.persist_state() {
                 let chain = p.delta_chain();
                 let _ = write!(
@@ -395,6 +467,50 @@ fn dispatch(
                 }
             }
         }
+        Request::Health => {
+            // Effective rung: the engine's ladder, widened on a follower
+            // by link conditions — a latched replication fault or a lag
+            // beyond `[replicate] max_lag_records` is a degraded state
+            // clients should route around even though local disks are
+            // fine (DESIGN.md §8).
+            let mut rung = engine.health();
+            let mut reason = engine.health_reason();
+            if let Some(r) = replica {
+                if rung == Health::Healthy {
+                    let bound = engine.replicate_config().max_lag_records;
+                    if let Some(f) = r.fault() {
+                        rung = Health::DegradedReadOnly;
+                        reason = format!("replication fault: {f}");
+                    } else if bound > 0 && r.lag_records() > bound {
+                        rung = Health::DegradedReadOnly;
+                        reason = format!(
+                            "lag_exceeded: {} records behind (bound {bound})",
+                            r.lag_records()
+                        );
+                    }
+                }
+            }
+            match rung {
+                Health::Healthy => out.push_str("OK healthy"),
+                _ => {
+                    let _ = write!(
+                        out,
+                        "OK {} reason={reason:?} retry_after_ms={}",
+                        rung.as_str(),
+                        engine.health_retry_after_ms()
+                    );
+                }
+            }
+            if let Some(r) = replica {
+                let _ = write!(
+                    out,
+                    " role=follower connected={} promoted={} lag_records={}",
+                    r.connected() as u8,
+                    r.promoted() as u8,
+                    r.lag_records()
+                );
+            }
+        }
         Request::Ping => out.push_str("OK pong"),
         Request::Promote => match replica {
             Some(r) => {
@@ -424,16 +540,18 @@ fn dispatch(
     }
 }
 
-/// Dial `addr`, retrying with exponential backoff (10 ms doubling to a
-/// 1 s cap) until `total` elapses. Shared by [`Client::connect_with_backoff`]
-/// and the follower's leader link — anything that must outlive a peer's
-/// restart window instead of failing on the first refused connection.
+/// Dial `addr`, retrying on [`RetryPolicy::connect`] (10 ms doubling to a
+/// 1 s cap, deterministic jitter) until `total` elapses. Shared by
+/// [`Client::connect_with_backoff`] and the follower's leader link —
+/// anything that must outlive a peer's restart window instead of failing
+/// on the first refused connection.
 pub(crate) fn connect_backoff(
     addr: &str,
     total: std::time::Duration,
 ) -> std::io::Result<TcpStream> {
+    let policy = crate::runtime::RetryPolicy::connect(0xD1A1_BAC0);
     let deadline = std::time::Instant::now() + total;
-    let mut delay = std::time::Duration::from_millis(10);
+    let mut attempt = 0u32;
     loop {
         match TcpStream::connect(addr) {
             Ok(stream) => return Ok(stream),
@@ -442,8 +560,8 @@ pub(crate) fn connect_backoff(
                 if now >= deadline {
                     return Err(e);
                 }
-                std::thread::sleep(delay.min(deadline - now));
-                delay = (delay * 2).min(std::time::Duration::from_secs(1));
+                std::thread::sleep(policy.delay(attempt).min(deadline - now));
+                attempt = attempt.saturating_add(1);
             }
         }
     }

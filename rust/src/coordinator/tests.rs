@@ -336,6 +336,7 @@ fn protocol_request_roundtrip() {
         Request::Quit,
         Request::ReplHello { epoch: 3, last_seqs: vec![17, 0, 42] },
         Request::Promote,
+        Request::Health,
     ] {
         assert_eq!(Request::parse(&req.encode()).unwrap(), req, "{req:?}");
     }
@@ -564,6 +565,212 @@ fn engine_topk_batch_matches_single_queries() {
     }
     // Per-query accounting is preserved (batch counted 4, singles 4 more).
     assert_eq!(engine.stats().queries, queries_before + 8);
+    engine.shutdown();
+}
+
+// ---- robustness: shedding, admission, degradation (DESIGN.md §8) ----
+
+#[test]
+fn queue_try_push_bulk_sheds_overflow() {
+    let q = BoundedQueue::new(4);
+    assert_eq!(q.try_push_bulk(vec![0, 1, 2]), 3);
+    // Room for one more: the prefix is accepted, the rest shed.
+    assert_eq!(q.try_push_bulk(vec![3, 4, 5]), 1);
+    assert_eq!(q.pop_batch(16), vec![0, 1, 2, 3]);
+    assert_eq!(q.try_push_bulk(Vec::new()), 0);
+    q.close();
+    assert_eq!(q.try_push_bulk(vec![9]), 0);
+}
+
+/// A worker that panics while holding the queue mutex poisons it; the
+/// non-poisoning `locked()` recovery must keep every other producer and
+/// consumer alive.
+#[test]
+fn queue_survives_poisoned_lock() {
+    let q = Arc::new(BoundedQueue::new(8));
+    q.push(1);
+    q.poison_for_test();
+    assert!(q.try_push(2).is_ok());
+    assert_eq!(q.pop(), Some(1));
+    assert_eq!(q.pop_batch(8), vec![2]);
+    q.close();
+    assert_eq!(q.pop(), None);
+}
+
+/// The sharpest worker-death scenario: a thread dies holding each shard
+/// queue's mutex *and* the ingest gate's read side. Ingest must keep
+/// moving, `quiesce` must still terminate, and the gate's write side
+/// (the checkpoint pause) must still be takeable.
+#[test]
+fn engine_ingest_survives_poisoned_worker_locks() {
+    let engine = Engine::new(&test_config(), 2);
+    for i in 0..100u64 {
+        assert!(engine.observe(i % 7, i % 5));
+    }
+    engine.quiesce();
+    engine.poison_queues_for_test();
+    engine.poison_ingest_gate_for_test();
+    for i in 0..100u64 {
+        assert!(engine.observe(i % 7, i % 5));
+    }
+    engine.quiesce();
+    assert_eq!(engine.stats().observes, 200);
+    assert!(!engine.export_quiesced().is_empty());
+    engine.shutdown();
+}
+
+/// The degradation gate over TCP: a degraded engine refuses every write
+/// verb with the first-fault reason and a retry hint, keeps serving
+/// reads from the RCU structures, reports the rung via `HEALTH` and
+/// `STATS`, and re-admits writes on the same connection once healed.
+#[test]
+fn tcp_degraded_rejects_writes_serves_reads_then_heals() {
+    let engine = Engine::new(&test_config(), 2);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let mut client = Client::connect(addr).unwrap();
+
+    for _ in 0..3 {
+        client.observe(1, 2).unwrap();
+    }
+    client.observe(1, 3).unwrap();
+    engine.quiesce();
+
+    engine.degrade_for_test("wal append on shard 0: injected ENOSPC");
+
+    // Every mutation is refused with reason + retry hint…
+    for req in [
+        Request::Observe { src: 1, dst: 2 },
+        Request::ObserveBatch { pairs: vec![(1, 2), (3, 4)] },
+        Request::Decay,
+        Request::Repair,
+    ] {
+        match client.request(&req).unwrap() {
+            Response::Err(e) => {
+                assert!(e.starts_with("degraded reason="), "{req:?}: {e}");
+                assert!(e.contains("injected ENOSPC"), "{req:?}: {e}");
+                assert!(e.contains("retry_after_ms="), "{req:?}: {e}");
+            }
+            other => panic!("{req:?} must be refused while degraded, got {other:?}"),
+        }
+    }
+    // …while reads are still served…
+    let items = client.topk(1, 2).unwrap();
+    assert_eq!(items[0].0, 2);
+    assert!((items[0].1 - 0.75).abs() < 1e-6);
+    // …and both HEALTH and the STATS gauge say why.
+    match client.request(&Request::Health).unwrap() {
+        Response::Ok(msg) => {
+            assert!(msg.starts_with("degraded reason="), "{msg}");
+            assert!(msg.contains("retry_after_ms="), "{msg}");
+        }
+        other => panic!("{other:?}"),
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("health=degraded"), "{stats}");
+    assert!(stats.contains("wal_retry="), "{stats}");
+    assert!(stats.contains("degraded_s="), "{stats}");
+
+    // Heal: the same connection starts writing again, no reconnect.
+    engine.heal_for_test();
+    client.observe(1, 2).unwrap();
+    assert_eq!(
+        client.request(&Request::Health).unwrap(),
+        Response::Ok("healthy".into())
+    );
+    engine.quiesce();
+    assert_eq!(engine.stats().observes, 5);
+    engine.shutdown();
+}
+
+/// Per-connection token buckets: a burst is admitted, the next write is
+/// refused with `ERR ratelimited retry_after_ms=…`, batches pay their
+/// pair count, and reads are never charged.
+#[test]
+fn tcp_admission_ratelimits_writes_not_reads() {
+    let cfg = ServerConfig {
+        shards: 1,
+        queue_capacity: 1024,
+        rate_limit_ops: 1,
+        rate_limit_burst: 3,
+        ..Default::default()
+    };
+    let engine = Engine::new(&cfg, 1);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let mut client = Client::connect(addr).unwrap();
+
+    // The initial bucket holds exactly `burst` tokens.
+    for _ in 0..3 {
+        client.observe(5, 6).unwrap();
+    }
+    match client.request(&Request::Observe { src: 5, dst: 6 }).unwrap() {
+        Response::Err(e) => {
+            assert!(e.starts_with("ratelimited retry_after_ms="), "{e}");
+        }
+        other => panic!("4th write must be throttled, got {other:?}"),
+    }
+    // OBSERVEB costs its pair count — batching cannot dodge the limit.
+    match client.request(&Request::ObserveBatch { pairs: vec![(1, 2); 100] }).unwrap() {
+        Response::Err(e) => assert!(e.starts_with("ratelimited"), "{e}"),
+        other => panic!("batch must be throttled, got {other:?}"),
+    }
+    // Reads ride free: a throttled feeder can still watch the engine.
+    for _ in 0..20 {
+        client.topk(5, 2).unwrap();
+    }
+    client.stats().unwrap();
+    engine.quiesce();
+    let s = engine.stats();
+    assert_eq!(s.observes, 3, "only the admitted burst reached the shards");
+    assert!(s.ratelimited >= 2, "ratelimited={}", s.ratelimited);
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("ratelimited="), "{stats}");
+    engine.shutdown();
+}
+
+/// With admission control on, saturation sheds instead of blocking: a
+/// full shard queue answers `ERR overload` (with the honest
+/// accepted/shed split for batches) rather than stalling the
+/// connection on backpressure.
+#[test]
+fn tcp_overload_sheds_instead_of_blocking() {
+    let cfg = ServerConfig {
+        shards: 1,
+        queue_capacity: 4,
+        // Admission on (the shedding gate) but effectively unlimited, so
+        // every rejection below is overload, not ratelimiting.
+        rate_limit_ops: 1_000_000,
+        rate_limit_burst: 1_000_000,
+        ..Default::default()
+    };
+    // No workers: the queue can only fill up.
+    let engine = Engine::new(&cfg, 0);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let mut client = Client::connect(addr).unwrap();
+
+    for _ in 0..4 {
+        client.observe(1, 2).unwrap();
+    }
+    match client.request(&Request::Observe { src: 1, dst: 2 }).unwrap() {
+        Response::Err(e) => assert_eq!(e, "overload shed=1"),
+        other => panic!("a saturated queue must shed, got {other:?}"),
+    }
+    match client.request(&Request::ObserveBatch { pairs: vec![(1, 2); 8] }).unwrap() {
+        Response::Err(e) => {
+            assert!(e.starts_with("overload shed=8"), "{e}");
+            assert!(e.contains("accepted=0"), "{e}");
+        }
+        other => panic!("a saturated queue must shed the batch, got {other:?}"),
+    }
+    let s = engine.stats();
+    assert_eq!(s.shed, 9, "shed={}", s.shed);
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("shed=9"), "{stats}");
     engine.shutdown();
 }
 

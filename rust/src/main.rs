@@ -38,6 +38,12 @@ fn app() -> App {
                                its WAL, serve reads, reject writes until PROMOTE",
                         default: Some(""),
                     },
+                    Opt {
+                        name: "fault-plan",
+                        help: "inject storage faults (chaos testing only), e.g. \
+                               'seed=1;fail_fsync_every=3;enospc_after=65536'",
+                        default: Some(""),
+                    },
                 ],
                 positionals: vec![],
             },
@@ -152,6 +158,13 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
             config.persist.fsync = fsync.to_string();
         }
     }
+    if let Some(plan) = m.get("fault-plan") {
+        if !plan.is_empty() {
+            // Validated (and turned into a FaultyIo) by persist_config().
+            config.persist.fault_plan = plan.to_string();
+            eprintln!("[persist] FAULT INJECTION ACTIVE: {plan}");
+        }
+    }
     let workers = m.get_u64("workers").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(2) as usize;
 
     // Follower mode: bootstrap from the leader, serve reads, track lag.
@@ -224,7 +237,7 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
         let s = engine.stats();
         println!(
             "[stats] nodes={} edges={} observes={} queries={} queue={} p50={}ns p99={}ns \
-             rate={:.0}/s wal_bytes={} ckpt_age={}s",
+             rate={:.0}/s wal_bytes={} ckpt_age={}s health={} shed={} ratelimited={}",
             s.nodes,
             s.edges,
             s.observes,
@@ -234,7 +247,10 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
             s.query_ns_p99,
             s.update_rate,
             s.wal_bytes,
-            s.ckpt_age_s
+            s.ckpt_age_s,
+            s.health,
+            s.shed,
+            s.ratelimited
         );
         let _ = &handle;
     }
@@ -639,6 +655,27 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
             ckpt.delta_vs_full,
             ckpt.decay_replay_ok
         );
+        // Fault-recovery gate (DESIGN.md §8): injected ENOSPC must degrade
+        // the engine, the heal loop must bring it back, and the healed +
+        // recovered state must equal a never-faulted reference.
+        use mcprioq::bench_harness::fault_recovery_probe;
+        let fault = fault_recovery_probe(shards, scratch.path()).map_err(|e| anyhow::anyhow!(e))?;
+        dur_json.row(&[
+            ("mode", JsonVal::Str("fault_recovery".to_string())),
+            ("degraded", JsonVal::Bool(fault.degraded)),
+            ("healed", JsonVal::Bool(fault.healed)),
+            ("wal_retries", JsonVal::Int(fault.wal_retries)),
+            ("recovery_equal", JsonVal::Bool(fault.recovery_equal)),
+            ("fault_recovery_ok", JsonVal::Bool(fault.ok())),
+        ]);
+        println!(
+            "  fault recovery: degraded={} healed={} wal_retries={} equal={} -> ok={}",
+            fault.degraded,
+            fault.healed,
+            fault.wal_retries,
+            fault.recovery_equal,
+            fault.ok()
+        );
         let p = dur_json.finish(&json_dir.join("BENCH_durability.json"))?;
         println!("wrote {}", p.display());
         // The smoke gate: a differential must cost a fraction of the full
@@ -652,6 +689,14 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
                 "differential checkpoint bytes do not scale with the dirty set: \
                  {:.3}x full at 10% dirty",
                 ckpt.delta_vs_full
+            );
+        }
+        if !fault.ok() {
+            anyhow::bail!(
+                "fault-recovery gate failed: degraded={} healed={} recovery_equal={}",
+                fault.degraded,
+                fault.healed,
+                fault.recovery_equal
             );
         }
     }

@@ -31,8 +31,8 @@
 //!    files behind the previous chain's base (a torn newest file still
 //!    has the rest of its chain as fallback).
 
-use std::fs::{self, File};
-use std::io::{self, Write as _};
+use std::fs;
+use std::io;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
@@ -40,9 +40,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::TomlDoc;
-use crate::coordinator::Engine;
+use crate::coordinator::{Engine, Health};
+use crate::runtime::RetryPolicy;
 
-use super::{codec, wal, DeltaChain};
+use super::io::IoHandle;
+use super::{codec, DeltaChain};
 
 /// Result of one committed checkpoint (`SAVE` reply, logs).
 #[derive(Debug, Clone, Copy)]
@@ -156,17 +158,19 @@ impl Manifest {
 }
 
 /// Write `bytes` to `path` atomically: `<path>.tmp` + fsync + rename +
-/// directory fsync.
-fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+/// directory fsync. All through the storage-I/O handle, so fault plans
+/// can fail any step (a failed tmp write or fsync aborts *before* the
+/// rename — the commit point is never reached with unsynced data).
+fn write_atomic(io: &IoHandle, path: &Path, bytes: &[u8]) -> io::Result<()> {
     let tmp = path.with_extension("tmp");
     {
-        let mut f = File::create(&tmp)?;
+        let mut f = io.create(&tmp)?;
         f.write_all(bytes)?;
         f.sync_data()?;
     }
-    fs::rename(&tmp, path)?;
+    io.rename(&tmp, path)?;
     if let Some(dir) = path.parent() {
-        wal::sync_dir(dir);
+        io.sync_dir(dir);
     }
     Ok(())
 }
@@ -201,6 +205,18 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
         engine.persist_state().ok_or("persistence is not enabled (no data dir)")?,
     );
     let _serial = persist.serialize_checkpoints();
+
+    // A degraded engine has acked batches parked outside the WAL (and its
+    // quiesce target includes them): pausing ingest now would either hang
+    // or cut a checkpoint that silently excludes parked history. Refuse;
+    // the scheduler retries after the heal.
+    if engine.health() != Health::Healthy {
+        return Err(format!(
+            "engine is {} ({}); checkpoint deferred until it heals",
+            engine.health().as_str(),
+            engine.health_reason()
+        ));
+    }
 
     let nshards = persist.shard_count();
     let chain = persist.delta_chain();
@@ -241,7 +257,7 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
         )
     };
     let dir = pcfg.checkpoint_dir();
-    write_atomic(&dir.join(&name), &bytes)
+    write_atomic(&pcfg.io, &dir.join(&name), &bytes)
         .map_err(|e| format!("writing {name}: {e}"))?;
     let new_chain = if full {
         DeltaChain { base: generation, len: 0, floor: new_floor }
@@ -257,14 +273,15 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
         wal_cuts: cuts.clone(),
     };
     // The commit point: MANIFEST now names the new generation's chain.
-    write_atomic(&pcfg.manifest_path(), manifest.render().as_bytes())
+    write_atomic(&pcfg.io, &pcfg.manifest_path(), manifest.render().as_bytes())
         .map_err(|e| format!("committing manifest: {e}"))?;
 
     // Persist the mark floor beside the manifest (after the commit point,
     // best-effort): recovery reads it to keep post-restart checkpoints
     // differential. A crash between the two writes leaves a *stale lower*
     // floor, whose dirty export is a superset — correct, just larger.
-    if let Err(e) = write_atomic(&pcfg.ckpt_mark_path(), format!("{new_floor}\n").as_bytes())
+    if let Err(e) =
+        write_atomic(&pcfg.io, &pcfg.ckpt_mark_path(), format!("{new_floor}\n").as_bytes())
     {
         eprintln!("[persist] writing ckpt mark sidecar: {e} (next restart checkpoints full)");
     }
@@ -317,7 +334,7 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
                 if let Some(gen) = entry.file_name().to_str().and_then(file_generation)
                 {
                     if gen < chain.base {
-                        let _ = fs::remove_file(entry.path());
+                        let _ = pcfg.io.remove_file(&entry.path());
                     }
                 }
             }
@@ -353,7 +370,8 @@ pub fn install_snapshot(
     let dir = pcfg.checkpoint_dir();
     fs::create_dir_all(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
     let name = snapshot_name(generation);
-    write_atomic(&dir.join(&name), bytes).map_err(|e| format!("writing {name}: {e}"))?;
+    write_atomic(&pcfg.io, &dir.join(&name), bytes)
+        .map_err(|e| format!("writing {name}: {e}"))?;
     let manifest = Manifest {
         generation,
         epoch,
@@ -362,7 +380,7 @@ pub fn install_snapshot(
         deltas: Vec::new(),
         wal_cuts: cuts.clone(),
     };
-    write_atomic(&pcfg.manifest_path(), manifest.render().as_bytes())
+    write_atomic(&pcfg.io, &pcfg.manifest_path(), manifest.render().as_bytes())
         .map_err(|e| format!("committing manifest: {e}"))?;
     Ok((epoch, cuts))
 }
@@ -395,6 +413,8 @@ impl CheckpointScheduler {
                     .persist_state()
                     .map(|p| p.config().checkpoint_wal_bytes)
                     .unwrap_or(u64::MAX);
+                let retry = RetryPolicy::wal_retry(0xC4EC_0000);
+                let mut failures = 0u32;
                 let mut deadline = Instant::now() + interval;
                 loop {
                     {
@@ -426,18 +446,28 @@ impl CheckpointScheduler {
                     }
                     match engine.checkpoint() {
                         Ok(_) => {
+                            failures = 0;
                             runs.fetch_add(1, Ordering::Relaxed);
+                            // Absolute cadence: late checkpoints don't
+                            // compound.
+                            deadline += interval;
+                            let now = Instant::now();
+                            if deadline < now {
+                                deadline = now + interval;
+                            }
                         }
                         Err(e) => {
+                            // An I/O error (or a degraded engine) must not
+                            // wedge the scheduler: keep looping, reprobing
+                            // on capped backoff instead of the full
+                            // interval so the next generation lands soon
+                            // after the disk (or the engine) heals.
                             failed.store(true, Ordering::Relaxed);
                             eprintln!("[persist] periodic checkpoint failed: {e}");
+                            let pause = retry.delay(failures).min(interval);
+                            failures = failures.saturating_add(1);
+                            deadline = Instant::now() + pause;
                         }
-                    }
-                    // Absolute cadence: late checkpoints don't compound.
-                    deadline += interval;
-                    let now = Instant::now();
-                    if deadline < now {
-                        deadline = now + interval;
                     }
                 }
             })

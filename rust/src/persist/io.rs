@@ -1,0 +1,496 @@
+//! Storage-I/O indirection for the durability plane (DESIGN.md §8).
+//!
+//! Every *write-side* filesystem operation the WAL and checkpointer
+//! perform — segment creation, appends, fsyncs, the atomic tmp→rename
+//! commit, truncation deletes — goes through the [`StorageIo`] trait
+//! instead of `std::fs` directly. Production uses the zero-cost
+//! passthrough [`StdIo`]; tests and the hidden `--fault-plan` CLI flag
+//! swap in [`FaultyIo`], which injects deterministic, schedulable faults
+//! (fail the Nth fsync, `ENOSPC` after K bytes, a torn rename, added
+//! latency) so every durability code path is exercisable without a real
+//! failing disk.
+//!
+//! Read-side replay (`SegReader`, `scan_segments`) deliberately stays on
+//! `std::fs`: recovery correctness under *write* faults is the property
+//! under test, and a reader that lies is indistinguishable from
+//! corruption the CRC framing already covers.
+//!
+//! Fault plans are strings so they travel through config files, the CLI,
+//! and test constructors alike:
+//!
+//! ```text
+//! seed=42;fail_fsync_every=3;enospc_after=65536;enospc_window_ms=500
+//! ```
+//!
+//! Faults are deterministic functions of the plan and the operation
+//! count — two runs with the same plan and the same I/O schedule inject
+//! identically, which is what makes the differential fault sweeps in
+//! `rust/tests/fault_injection.rs` reproducible.
+
+use std::fmt;
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// One writable file produced by [`StorageIo::create`] (a WAL segment or
+/// a checkpoint tmp file). Only the two operations the writers need.
+pub trait IoFile: Send {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()>;
+    fn sync_data(&mut self) -> io::Result<()>;
+}
+
+impl IoFile for File {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        io::Write::write_all(self, buf)
+    }
+
+    fn sync_data(&mut self) -> io::Result<()> {
+        File::sync_data(self)
+    }
+}
+
+/// The write-side filesystem surface of the durability plane.
+pub trait StorageIo: Send + Sync {
+    /// Create (truncating) a file for writing.
+    fn create(&self, path: &Path) -> io::Result<Box<dyn IoFile>>;
+    /// Read a whole file (checkpoint snapshots/deltas at recovery).
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>>;
+    /// Atomic replace (the checkpoint commit point).
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    /// Delete (WAL truncation, checkpoint retention).
+    fn remove_file(&self, path: &Path) -> io::Result<()>;
+    /// Best-effort directory fsync (makes renames/creates durable).
+    fn sync_dir(&self, dir: &Path);
+}
+
+/// Production passthrough: `std::fs`, nothing else.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StdIo;
+
+impl StorageIo for StdIo {
+    fn create(&self, path: &Path) -> io::Result<Box<dyn IoFile>> {
+        let file = OpenOptions::new().write(true).create(true).truncate(true).open(path)?;
+        Ok(Box::new(file))
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        fs::read(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        fs::remove_file(path)
+    }
+
+    fn sync_dir(&self, dir: &Path) {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+/// A parsed fault schedule. Every knob is off at its zero value, so the
+/// empty plan is the null schedule.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Jitter/derivation seed (reserved for probabilistic schedules; kept
+    /// in the grammar so plans are forward-compatible and reproducible).
+    pub seed: u64,
+    /// Fail exactly the Nth fsync (1-based) with `EIO`.
+    pub fail_fsync_at: u64,
+    /// Fail every Nth fsync with `EIO`.
+    pub fail_fsync_every: u64,
+    /// Start failing writes with `ENOSPC` once this many bytes have been
+    /// written through the handle.
+    pub enospc_after: u64,
+    /// The `ENOSPC` condition clears this long after it first fires
+    /// (0 = the disk never recovers). This is what lets the chaos smoke
+    /// drive the engine degraded *and back*.
+    pub enospc_window_ms: u64,
+    /// Truncate the source file to half its length immediately before the
+    /// Nth rename (1-based): a torn checkpoint commit. The rename itself
+    /// still succeeds — the tear is in the data, exactly what a crashed
+    /// sync-before-rename leaves behind.
+    pub torn_rename_at: u64,
+    /// Injected latency per I/O operation.
+    pub delay_us: u64,
+}
+
+impl FaultPlan {
+    /// Parse `key=value;key=value` (empty string = null plan). Unknown
+    /// keys are rejected — a typo'd fault plan that silently injects
+    /// nothing would green-light an untested code path.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan: {part:?} is not key=value"))?;
+            let value: u64 = value
+                .trim()
+                .parse()
+                .map_err(|e| format!("fault plan: {key}={value:?}: {e}"))?;
+            match key.trim() {
+                "seed" => plan.seed = value,
+                "fail_fsync_at" => plan.fail_fsync_at = value,
+                "fail_fsync_every" => plan.fail_fsync_every = value,
+                "enospc_after" => plan.enospc_after = value,
+                "enospc_window_ms" => plan.enospc_window_ms = value,
+                "torn_rename_at" => plan.torn_rename_at = value,
+                "delay_us" => plan.delay_us = value,
+                other => return Err(format!("fault plan: unknown key {other:?}")),
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn is_null(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Shared mutable schedule state: operation counters and the ENOSPC
+/// window clock. Files hold an `Arc` back to it so faults fire across
+/// every file the handle ever created.
+#[derive(Debug)]
+struct FaultState {
+    plan: FaultPlan,
+    fsyncs: AtomicU64,
+    renames: AtomicU64,
+    written: AtomicU64,
+    injected: AtomicU64,
+    /// Set when ENOSPC first fires; the condition clears
+    /// `enospc_window_ms` later (see [`FaultPlan::enospc_window_ms`]).
+    enospc_since: Mutex<Option<Instant>>,
+}
+
+impl FaultState {
+    fn delay(&self) {
+        if self.plan.delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.plan.delay_us));
+        }
+    }
+
+    /// Is the simulated disk out of space right now? Counts `len` toward
+    /// the budget on success.
+    fn check_space(&self, len: u64) -> io::Result<()> {
+        if self.plan.enospc_after == 0 {
+            self.written.fetch_add(len, Ordering::Relaxed);
+            return Ok(());
+        }
+        let before = self.written.fetch_add(len, Ordering::Relaxed);
+        if before + len <= self.plan.enospc_after {
+            return Ok(());
+        }
+        let mut since = lock_clean(&self.enospc_since);
+        let started = *since.get_or_insert_with(Instant::now);
+        if self.plan.enospc_window_ms > 0
+            && started.elapsed() >= Duration::from_millis(self.plan.enospc_window_ms)
+        {
+            // The window elapsed: space was "freed", the fault is over.
+            return Ok(());
+        }
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        Err(io::Error::new(
+            io::ErrorKind::StorageFull,
+            format!("injected ENOSPC (after {} bytes)", self.plan.enospc_after),
+        ))
+    }
+
+    fn check_fsync(&self) -> io::Result<()> {
+        let n = self.fsyncs.fetch_add(1, Ordering::Relaxed) + 1;
+        let hit = self.plan.fail_fsync_at == n
+            || (self.plan.fail_fsync_every > 0 && n % self.plan.fail_fsync_every == 0);
+        if hit {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return Err(io::Error::other(format!("injected EIO on fsync #{n}")));
+        }
+        Ok(())
+    }
+}
+
+/// [`StorageIo`] impl driven by a [`FaultPlan`]. Cheap to clone (shared
+/// state); tests keep a clone to read the counters after the run.
+#[derive(Debug, Clone)]
+pub struct FaultyIo {
+    state: Arc<FaultState>,
+}
+
+impl FaultyIo {
+    pub fn new(plan: FaultPlan) -> FaultyIo {
+        FaultyIo {
+            state: Arc::new(FaultState {
+                plan,
+                fsyncs: AtomicU64::new(0),
+                renames: AtomicU64::new(0),
+                written: AtomicU64::new(0),
+                injected: AtomicU64::new(0),
+                enospc_since: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Total faults injected so far (any kind).
+    pub fn injected(&self) -> u64 {
+        self.state.injected.load(Ordering::Relaxed)
+    }
+
+    /// fsyncs attempted through this handle.
+    pub fn fsyncs(&self) -> u64 {
+        self.state.fsyncs.load(Ordering::Relaxed)
+    }
+
+    /// Bytes the writers attempted to write through this handle.
+    pub fn written(&self) -> u64 {
+        self.state.written.load(Ordering::Relaxed)
+    }
+}
+
+struct FaultyFile {
+    file: File,
+    state: Arc<FaultState>,
+}
+
+impl IoFile for FaultyFile {
+    fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.state.delay();
+        self.state.check_space(buf.len() as u64)?;
+        io::Write::write_all(&mut self.file, buf)
+    }
+
+    fn sync_data(&mut self) -> io::Result<()> {
+        self.state.delay();
+        self.state.check_fsync()?;
+        self.file.sync_data()
+    }
+}
+
+impl StorageIo for FaultyIo {
+    fn create(&self, path: &Path) -> io::Result<Box<dyn IoFile>> {
+        self.state.delay();
+        let file = OpenOptions::new().write(true).create(true).truncate(true).open(path)?;
+        Ok(Box::new(FaultyFile { file, state: Arc::clone(&self.state) }))
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        self.state.delay();
+        fs::read(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        self.state.delay();
+        let n = self.state.renames.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.state.plan.torn_rename_at == n {
+            // Tear the payload, not the rename: halve the source so the
+            // committed file is CRC-broken, the way a crash between
+            // write-back and rename durability manifests after restart.
+            self.state.injected.fetch_add(1, Ordering::Relaxed);
+            let len = fs::metadata(from)?.len();
+            let f = OpenOptions::new().write(true).open(from)?;
+            f.set_len(len / 2)?;
+            let _ = f.sync_data();
+        }
+        fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> io::Result<()> {
+        self.state.delay();
+        fs::remove_file(path)
+    }
+
+    fn sync_dir(&self, dir: &Path) {
+        self.state.delay();
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+/// Shared, cloneable handle the durability plane threads everywhere a
+/// `std::fs` write used to be. Derefs to the trait object.
+#[derive(Clone)]
+pub struct IoHandle(Arc<dyn StorageIo>);
+
+impl IoHandle {
+    /// The production passthrough.
+    pub fn std() -> IoHandle {
+        IoHandle(Arc::new(StdIo))
+    }
+
+    pub fn new(io: Arc<dyn StorageIo>) -> IoHandle {
+        IoHandle(io)
+    }
+
+    pub fn faulty(plan: FaultPlan) -> (IoHandle, FaultyIo) {
+        let io = FaultyIo::new(plan);
+        (IoHandle(Arc::new(io.clone())), io)
+    }
+
+    /// Build from a plan string (`""` = passthrough) — the `[persist]
+    /// fault_plan` / `--fault-plan` entry point.
+    pub fn from_plan(plan: &str) -> Result<IoHandle, String> {
+        let parsed = FaultPlan::parse(plan)?;
+        if parsed.is_null() {
+            Ok(IoHandle::std())
+        } else {
+            Ok(IoHandle(Arc::new(FaultyIo::new(parsed))))
+        }
+    }
+}
+
+impl std::ops::Deref for IoHandle {
+    type Target = dyn StorageIo;
+
+    fn deref(&self) -> &(dyn StorageIo + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Debug for IoHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("IoHandle(..)")
+    }
+}
+
+impl Default for IoHandle {
+    fn default() -> IoHandle {
+        IoHandle::std()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    #[test]
+    fn plan_parse_roundtrip() {
+        let p = FaultPlan::parse(
+            "seed=7;fail_fsync_at=2;fail_fsync_every=5;enospc_after=1024;\
+             enospc_window_ms=250;torn_rename_at=1;delay_us=3",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.fail_fsync_at, 2);
+        assert_eq!(p.fail_fsync_every, 5);
+        assert_eq!(p.enospc_after, 1024);
+        assert_eq!(p.enospc_window_ms, 250);
+        assert_eq!(p.torn_rename_at, 1);
+        assert_eq!(p.delay_us, 3);
+        assert!(!p.is_null());
+        assert!(FaultPlan::parse("").unwrap().is_null());
+        assert!(FaultPlan::parse("  ; ;").unwrap().is_null());
+    }
+
+    #[test]
+    fn plan_parse_rejects_garbage() {
+        assert!(FaultPlan::parse("bogus_key=1").is_err());
+        assert!(FaultPlan::parse("fail_fsync_at").is_err());
+        assert!(FaultPlan::parse("enospc_after=lots").is_err());
+    }
+
+    #[test]
+    fn nth_fsync_fails() {
+        let dir = TempDir::new("io-fsync");
+        let (io, probe) = IoHandle::faulty(FaultPlan {
+            fail_fsync_at: 2,
+            ..FaultPlan::default()
+        });
+        let mut f = io.create(&dir.path().join("a")).unwrap();
+        f.write_all(b"x").unwrap();
+        assert!(f.sync_data().is_ok());
+        assert!(f.sync_data().is_err(), "second fsync must fail");
+        assert!(f.sync_data().is_ok(), "third fsync succeeds again");
+        assert_eq!(probe.injected(), 1);
+        assert_eq!(probe.fsyncs(), 3);
+    }
+
+    #[test]
+    fn every_nth_fsync_fails() {
+        let dir = TempDir::new("io-fsync-every");
+        let (io, probe) = IoHandle::faulty(FaultPlan {
+            fail_fsync_every: 2,
+            ..FaultPlan::default()
+        });
+        let mut f = io.create(&dir.path().join("a")).unwrap();
+        let results: Vec<bool> = (0..6).map(|_| f.sync_data().is_ok()).collect();
+        assert_eq!(results, vec![true, false, true, false, true, false]);
+        assert_eq!(probe.injected(), 3);
+    }
+
+    #[test]
+    fn enospc_after_budget_then_window_clears() {
+        let dir = TempDir::new("io-enospc");
+        let (io, probe) = IoHandle::faulty(FaultPlan {
+            enospc_after: 8,
+            enospc_window_ms: 50,
+            ..FaultPlan::default()
+        });
+        let mut f = io.create(&dir.path().join("a")).unwrap();
+        assert!(f.write_all(b"12345678").is_ok(), "within budget");
+        let err = f.write_all(b"x").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::StorageFull);
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(f.write_all(b"x").is_ok(), "window elapsed, space freed");
+        assert_eq!(probe.injected(), 1);
+    }
+
+    #[test]
+    fn permanent_enospc_without_window() {
+        let dir = TempDir::new("io-enospc-perm");
+        let (io, _probe) = IoHandle::faulty(FaultPlan {
+            enospc_after: 1,
+            ..FaultPlan::default()
+        });
+        let mut f = io.create(&dir.path().join("a")).unwrap();
+        assert!(f.write_all(b"ab").is_err());
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(f.write_all(b"c").is_err(), "no window: never recovers");
+    }
+
+    #[test]
+    fn torn_rename_halves_source() {
+        let dir = TempDir::new("io-torn");
+        let (io, probe) = IoHandle::faulty(FaultPlan {
+            torn_rename_at: 1,
+            ..FaultPlan::default()
+        });
+        let src = dir.path().join("tmp");
+        let dst = dir.path().join("final");
+        let mut f = io.create(&src).unwrap();
+        f.write_all(&[7u8; 100]).unwrap();
+        drop(f);
+        io.rename(&src, &dst).unwrap();
+        assert_eq!(fs::metadata(&dst).unwrap().len(), 50, "torn to half");
+        assert_eq!(probe.injected(), 1);
+        // Later renames are clean.
+        let src2 = dir.path().join("tmp2");
+        let dst2 = dir.path().join("final2");
+        let mut f = io.create(&src2).unwrap();
+        f.write_all(&[7u8; 100]).unwrap();
+        drop(f);
+        io.rename(&src2, &dst2).unwrap();
+        assert_eq!(fs::metadata(&dst2).unwrap().len(), 100);
+    }
+
+    #[test]
+    fn from_plan_null_is_std() {
+        assert!(IoHandle::from_plan("").is_ok());
+        assert!(IoHandle::from_plan("enospc_after=1").is_ok());
+        assert!(IoHandle::from_plan("nope=1").is_err());
+    }
+}

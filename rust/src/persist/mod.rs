@@ -39,12 +39,15 @@
 
 mod checkpoint;
 pub mod codec;
+pub mod io;
 mod recover;
 pub mod wal;
 
 pub use checkpoint::{install_snapshot, run_checkpoint, CheckpointScheduler, CheckpointSummary};
+pub use io::{FaultPlan, FaultyIo, IoHandle, StdIo, StorageIo};
 pub use recover::{open_engine, RecoveryReport};
 
+use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, PoisonError};
@@ -106,6 +109,10 @@ pub struct PersistConfig {
     /// dirty — past that, a delta would approach full-snapshot size while
     /// still lengthening the recovery fold.
     pub delta_dirty_ratio: f64,
+    /// Storage-I/O surface every durability write goes through: the
+    /// production passthrough, or a fault-plan-driven [`FaultyIo`]
+    /// (`[persist] fault_plan` / the hidden `--fault-plan` flag).
+    pub io: IoHandle,
 }
 
 impl PersistConfig {
@@ -162,8 +169,35 @@ pub struct DeltaChain {
     pub floor: u64,
 }
 
+/// How one log attempt on the write path ended (DESIGN.md §8). The caller
+/// applies the op to memory only for the first two outcomes.
+#[derive(Debug)]
+pub enum LogOutcome {
+    /// Record logged, durable per policy: apply it.
+    Logged,
+    /// Record logged, but its policy-driven fsync failed — the bytes are
+    /// framed in the segment (they replay after SIGKILL) without the
+    /// power-loss guarantee. Apply it, then degrade until a sync lands.
+    SyncDegraded(String),
+    /// The append itself failed: the op is *parked* in the shard's
+    /// quarantine, unapplied, and will be re-logged + applied in order by
+    /// the heal task. Degrade; do NOT apply now.
+    Parked(String),
+}
+
+/// Per-shard degraded-write state: once an append fails, the shard's WAL
+/// writer is quarantined and acked-at-enqueue ops park here (in order)
+/// instead of being applied unlogged. Bounded in practice because the
+/// server stops admitting writes the moment the engine degrades — the
+/// queue absorbs only the in-flight window from before the fault.
+#[derive(Debug, Default)]
+struct ShardQuarantine {
+    quarantined: bool,
+    pending: VecDeque<codec::WalOp>,
+}
+
 /// Shared durability state, owned by the `Engine` (one per process).
-/// Ingest workers call [`PersistState::append`] on the apply path; the
+/// Ingest workers call [`PersistState::log_batch`] on the apply path; the
 /// checkpointer reads cut points and truncates through the same per-shard
 /// locks (uncontended outside checkpoint windows — one writer per shard).
 pub struct PersistState {
@@ -186,6 +220,9 @@ pub struct PersistState {
     last_checkpoint: Mutex<Instant>,
     /// Serializes concurrent checkpoints (scheduler vs wire `SAVE`).
     ckpt_serial: Mutex<()>,
+    /// Per-shard quarantine (degraded-write parking) — see
+    /// [`ShardQuarantine`].
+    quarantine: Vec<Mutex<ShardQuarantine>>,
     appends: Counter,
     errors: Counter,
     /// Batches replayed from the WAL at startup (recovery report, STATS).
@@ -216,16 +253,21 @@ impl PersistState {
         for (shard, &last) in last_seqs.iter().enumerate() {
             wals.push(Mutex::new(ShardWal::open(
                 cfg.shard_dir(epoch, shard),
+                cfg.io.clone(),
                 last,
                 cfg.fsync,
                 cfg.fsync_interval,
                 cfg.segment_bytes,
             )?));
         }
+        let quarantine = (0..last_seqs.len())
+            .map(|_| Mutex::new(ShardQuarantine::default()))
+            .collect();
         Ok(PersistState {
             cfg,
             epoch,
             wals,
+            quarantine,
             prev_cuts: Mutex::new(prev_cuts),
             generation: AtomicU64::new(generation),
             chain: Mutex::new(chain),
@@ -267,12 +309,121 @@ impl PersistState {
         Ok(seq)
     }
 
-    /// Record (and surface once per occurrence) a WAL write failure. The
-    /// engine keeps serving — an unloggable batch is still applied, it
-    /// just won't survive a crash; `wal_errors` makes that observable.
-    pub fn note_error(&self, shard: usize, e: &std::io::Error) {
-        self.errors.inc();
-        eprintln!("[persist] wal append failed on shard {shard}: {e}");
+    /// The ingest worker's degradation-aware log step (DESIGN.md §8): try
+    /// to log `batch`; on an append failure quarantine the shard and park
+    /// the op (unapplied) instead of applying it unlogged — applying an
+    /// unlogged batch is exactly the recovery-divergence the fault sweeps
+    /// catch. The caller applies the batch only for non-`Parked` outcomes.
+    pub fn log_batch(&self, shard: usize, batch: &[(u64, u64)]) -> LogOutcome {
+        {
+            let mut q = lock_clean(&self.quarantine[shard]);
+            if q.quarantined {
+                q.pending.push_back(codec::WalOp::Batch(batch.to_vec()));
+                return LogOutcome::Parked(format!("shard {shard} wal quarantined"));
+            }
+        }
+        match self.append(shard, batch) {
+            Ok(_) => match self.take_sync_error(shard) {
+                None => LogOutcome::Logged,
+                Some(e) => {
+                    self.errors.inc();
+                    LogOutcome::SyncDegraded(format!("shard {shard} fsync failed: {e}"))
+                }
+            },
+            Err(e) => {
+                self.errors.inc();
+                let mut q = lock_clean(&self.quarantine[shard]);
+                q.quarantined = true;
+                q.pending.push_back(codec::WalOp::Batch(batch.to_vec()));
+                LogOutcome::Parked(format!("shard {shard} wal append failed: {e}"))
+            }
+        }
+    }
+
+    /// The maintenance log step: decay/repair records are *dropped* (not
+    /// parked) when they cannot be logged — skipping a periodic pass
+    /// keeps memory and WAL consistent, while applying it unlogged would
+    /// diverge recovery. Quarantines the shard on failure so batch
+    /// traffic parks instead of re-probing a broken disk.
+    pub fn log_maintenance(&self, shard: usize, op: &codec::WalOp) -> LogOutcome {
+        if lock_clean(&self.quarantine[shard]).quarantined {
+            return LogOutcome::Parked(format!("shard {shard} wal quarantined"));
+        }
+        match self.append_op(shard, op) {
+            Ok(_) => match self.take_sync_error(shard) {
+                None => LogOutcome::Logged,
+                Some(e) => {
+                    self.errors.inc();
+                    LogOutcome::SyncDegraded(format!("shard {shard} fsync failed: {e}"))
+                }
+            },
+            Err(e) => {
+                self.errors.inc();
+                lock_clean(&self.quarantine[shard]).quarantined = true;
+                LogOutcome::Parked(format!("shard {shard} wal append failed: {e}"))
+            }
+        }
+    }
+
+    /// Heal step for one shard: re-log every parked op in arrival order
+    /// (the abandoned segment left their sequence numbers unconsumed, so
+    /// re-appending stays contiguous — the crash-safe seq re-arming), and
+    /// hand each successfully logged op to `apply`. Stops at the first
+    /// failure, leaving the rest parked and the shard quarantined.
+    /// Returns the ops drained.
+    pub fn drain_quarantine(
+        &self,
+        shard: usize,
+        mut apply: impl FnMut(&codec::WalOp),
+    ) -> std::io::Result<usize> {
+        let mut q = lock_clean(&self.quarantine[shard]);
+        let mut drained = 0usize;
+        while let Some(op) = q.pending.front() {
+            self.append_op(shard, op)?;
+            apply(op);
+            q.pending.pop_front();
+            drained += 1;
+        }
+        q.quarantined = false;
+        Ok(drained)
+    }
+
+    /// Take the shard's deferred fsync error, if its newest policy-driven
+    /// sync failed after the record was framed.
+    pub fn take_sync_error(&self, shard: usize) -> Option<std::io::Error> {
+        lock_clean(&self.wals[shard]).take_sync_error()
+    }
+
+    /// Force an fsync of one shard's open segment (the heal task's probe
+    /// that a sync-degraded disk is writable again).
+    pub fn sync_shard(&self, shard: usize) -> std::io::Result<()> {
+        lock_clean(&self.wals[shard]).sync()
+    }
+
+    /// True if any shard currently holds a quarantined WAL writer.
+    pub fn any_quarantined(&self) -> bool {
+        self.quarantine.iter().any(|q| lock_clean(q).quarantined)
+    }
+
+    /// Updates (pairs) *currently* parked in quarantines — the engine's
+    /// quiesce accounting: an enqueued update is settled once applied,
+    /// rejected, or parked. Live (not cumulative) on purpose: the heal
+    /// drain moves each parked update into `applied` *before* unparking
+    /// it, so the settled sum never dips and never double-counts.
+    pub fn parked_updates(&self) -> u64 {
+        self.quarantine
+            .iter()
+            .map(|q| {
+                lock_clean(q)
+                    .pending
+                    .iter()
+                    .map(|op| match op {
+                        codec::WalOp::Batch(b) => b.len() as u64,
+                        _ => 0,
+                    })
+                    .sum::<u64>()
+            })
+            .sum()
     }
 
     pub(crate) fn wal(&self, shard: usize) -> MutexGuard<'_, ShardWal> {

@@ -6,7 +6,7 @@
 use super::checkpoint::Manifest;
 use super::codec::{self, CodecError, WalOp};
 use super::wal::{self, ShardWal};
-use super::FsyncPolicy;
+use super::{FsyncPolicy, IoHandle};
 use crate::testutil::{Rng64, TempDir};
 
 use std::time::Duration;
@@ -20,8 +20,15 @@ fn as_batch(op: WalOp) -> Vec<(u64, u64)> {
 }
 
 fn wal_cfg(dir: std::path::PathBuf, segment_bytes: u64) -> ShardWal {
-    ShardWal::open(dir, 0, FsyncPolicy::Never, Duration::from_millis(50), segment_bytes)
-        .unwrap()
+    ShardWal::open(
+        dir,
+        IoHandle::std(),
+        0,
+        FsyncPolicy::Never,
+        Duration::from_millis(50),
+        segment_bytes,
+    )
+    .unwrap()
 }
 
 // ---- codec ----
@@ -303,6 +310,7 @@ fn wal_tolerates_torn_tail_and_detects_gaps() {
     std::fs::write(&seg.path, &clean).unwrap();
     let mut wal = ShardWal::open(
         dir.clone(),
+        IoHandle::std(),
         5,
         FsyncPolicy::Never,
         Duration::from_millis(50),
@@ -358,6 +366,7 @@ fn wal_restart_resumes_contiguously() {
     // in a new segment; replay sees one contiguous sequence.
     let mut wal = ShardWal::open(
         dir.clone(),
+        IoHandle::std(),
         3,
         FsyncPolicy::Batch,
         Duration::from_millis(50),

@@ -30,12 +30,13 @@
 //! surrounding `Mutex` (in `PersistState`) is uncontended except during
 //! checkpoints.
 
-use std::fs::{self, File, OpenOptions};
-use std::io::{self, Read as _, Seek as _, SeekFrom, Write as _};
+use std::fs::{self, File};
+use std::io::{self, Read as _, Seek as _, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use super::codec;
+use super::io::{IoFile, IoHandle};
 use super::FsyncPolicy;
 
 /// Magic prefix of every WAL segment file.
@@ -45,7 +46,7 @@ pub const SEGMENT_MAGIC: &[u8; 8] = b"MCPQWAL2";
 const FRAME_HEADER: usize = 8;
 
 struct OpenSegment {
-    file: File,
+    file: Box<dyn IoFile>,
     path: PathBuf,
     /// Bytes written so far, including the magic.
     len: u64,
@@ -54,6 +55,7 @@ struct OpenSegment {
 /// Append side of one shard's segmented log.
 pub struct ShardWal {
     dir: PathBuf,
+    io: IoHandle,
     policy: FsyncPolicy,
     fsync_interval: Duration,
     segment_bytes: u64,
@@ -66,6 +68,12 @@ pub struct ShardWal {
     frame: Vec<u8>,
     /// Bytes appended minus bytes truncated (the engine's `wal_bytes=`).
     live_bytes: u64,
+    /// A policy-driven fsync failed *after* its record was framed into
+    /// the segment. The append itself is not failed (the record would
+    /// replay; un-acking it and retrying would write it twice), but the
+    /// durability guarantee is weakened until a sync succeeds — the
+    /// caller drains this and degrades (DESIGN.md §8).
+    sync_error: Option<io::Error>,
 }
 
 impl ShardWal {
@@ -75,6 +83,7 @@ impl ShardWal {
     /// shard layout is visible to recovery even before the first record.
     pub fn open(
         dir: PathBuf,
+        io: IoHandle,
         last_seq: u64,
         policy: FsyncPolicy,
         fsync_interval: Duration,
@@ -84,6 +93,7 @@ impl ShardWal {
         let live_bytes = scan_segments(&dir)?.iter().map(|s| s.bytes).sum();
         Ok(ShardWal {
             dir,
+            io,
             policy,
             fsync_interval,
             segment_bytes: segment_bytes.max(1),
@@ -93,6 +103,7 @@ impl ShardWal {
             dirty: false,
             frame: Vec::with_capacity(4096),
             live_bytes,
+            sync_error: None,
         })
     }
 
@@ -157,20 +168,33 @@ impl ShardWal {
         self.live_bytes += frame_len;
         self.next_seq += 1;
         self.dirty = true;
-        match self.policy {
-            FsyncPolicy::Always => self.sync()?,
+        // Policy-driven fsync. A failure here must NOT fail the append —
+        // the record is already framed in the segment and will replay, so
+        // the sequence number stays consumed; the error is parked in
+        // `sync_error` for the caller to observe and degrade on.
+        let sync_res = match self.policy {
+            FsyncPolicy::Always => self.sync(),
             FsyncPolicy::Batch => {
                 // Group commit: at most one fsync per interval. The power-
                 // loss window is bounded by the interval (SIGKILL loses
                 // nothing either way — the page cache survives the process).
                 if self.last_sync.elapsed() >= self.fsync_interval {
-                    self.sync()?;
+                    self.sync()
+                } else {
+                    Ok(())
                 }
             }
-            FsyncPolicy::Never => {}
+            FsyncPolicy::Never => Ok(()),
+        };
+        if let Err(e) = sync_res {
+            self.sync_error.get_or_insert(e);
         }
         if self.seg.as_ref().is_some_and(|s| s.len >= self.segment_bytes) {
-            self.rotate()?;
+            if let Err(e) = self.rotate() {
+                // Same shape: the record is durable-pending; a failed seal
+                // sync leaves the segment open to retry the seal later.
+                self.sync_error.get_or_insert(e);
+            }
         }
         Ok(seq)
     }
@@ -178,13 +202,19 @@ impl ShardWal {
     /// Force an fsync of the open segment.
     pub fn sync(&mut self) -> io::Result<()> {
         if self.dirty {
-            if let Some(seg) = &self.seg {
+            if let Some(seg) = &mut self.seg {
                 seg.file.sync_data()?;
             }
             self.dirty = false;
             self.last_sync = Instant::now();
         }
         Ok(())
+    }
+
+    /// Take the deferred fsync error from the newest policy-driven sync
+    /// attempt, if one failed (see the `sync_error` field).
+    pub fn take_sync_error(&mut self) -> Option<io::Error> {
+        self.sync_error.take()
     }
 
     fn open_segment(&mut self) -> io::Result<()> {
@@ -197,7 +227,7 @@ impl ShardWal {
         // The stale leftover's bytes were counted into `live_bytes` at
         // open() time; the truncation reclaims them.
         let stale = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
-        let mut file = OpenOptions::new().write(true).create(true).truncate(true).open(&path)?;
+        let mut file = self.io.create(&path)?;
         file.write_all(SEGMENT_MAGIC)?;
         self.seg = Some(OpenSegment { file, path, len: SEGMENT_MAGIC.len() as u64 });
         self.live_bytes = self.live_bytes.saturating_sub(stale) + SEGMENT_MAGIC.len() as u64;
@@ -208,9 +238,14 @@ impl ShardWal {
     /// Seal the current segment (fsync regardless of policy) and start the
     /// next one lazily on the following append.
     fn rotate(&mut self) -> io::Result<()> {
-        if let Some(seg) = self.seg.take() {
+        if let Some(seg) = &mut self.seg {
+            // Seal-sync *before* dropping the writer: on failure the
+            // segment stays open so the seal can be retried, instead of
+            // losing track of an unsynced sealed file.
             seg.file.sync_data()?;
-            sync_dir(&self.dir);
+        }
+        if self.seg.take().is_some() {
+            self.io.sync_dir(&self.dir);
         }
         self.dirty = false;
         self.last_sync = Instant::now();
@@ -223,8 +258,9 @@ impl ShardWal {
     /// segment are always kept. Returns the bytes freed.
     pub fn truncate_upto(&mut self, cut: u64) -> io::Result<u64> {
         let mut freed = 0u64;
+        let io = self.io.clone();
         self.for_covered(cut, |seg, _| {
-            fs::remove_file(&seg.path)?;
+            io.remove_file(&seg.path)?;
             freed += seg.bytes;
             Ok(())
         })?;

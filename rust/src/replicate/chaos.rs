@@ -1,0 +1,167 @@
+//! Replication link chaos: an injectable fault schedule for the
+//! leader↔follower stream (DESIGN.md §8).
+//!
+//! The shim sits in exactly one place — the follower's `consume_stream`
+//! record arm — and models the faults a real WAN link produces:
+//!
+//! * **delay** — fixed added latency per record (a slow link).
+//! * **duplicate** — a record delivered twice (leader retransmit after a
+//!   lost ack); exercises the apply plane's `seq <= applied` dedup.
+//! * **drop** — the connection is severed mid-record, as if the TCP
+//!   session died with the record in flight. The record is *not* lost
+//!   from the system: the reconnect handshake resumes from the
+//!   follower's applied seqs, so the leader re-streams it. (Silently
+//!   swallowing a record would be a fault TCP cannot produce — the
+//!   stream is ordered and reliable; what reality loses is
+//!   *connections*.)
+//! * **partition** — a severed link whose redial is suppressed for a
+//!   window (switch outage): exercises the link's backoff, the
+//!   `lag_exceeded` health state, and catch-up on heal.
+//!
+//! Schedules are counter-based and deterministic (same plan, same
+//! stream, same faults) — the same reproducibility discipline as
+//! `persist::io::FaultPlan`. The plan is not reachable from TOML: only
+//! tests and the bench harness construct one, so a production config
+//! cannot ship with a chaotic link.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Counter-scheduled link-fault plan. The default plan is null (no
+/// faults); `Option<ChaosPlan>::None` in the config means the same.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    /// Sever the link on every Nth record (0 = never).
+    pub drop_every: u64,
+    /// Deliver every Nth record twice (0 = never).
+    pub dup_every: u64,
+    /// Added delivery latency per record, in milliseconds.
+    pub delay_ms: u64,
+    /// After this many records, partition the link… (0 = never)
+    pub partition_after: u64,
+    /// …for this long: the severed link's redial is suppressed until the
+    /// window elapses.
+    pub partition_ms: u64,
+}
+
+impl ChaosPlan {
+    pub fn is_null(&self) -> bool {
+        *self == ChaosPlan::default()
+    }
+}
+
+/// What the link should do with the record it just read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosVerdict {
+    Deliver,
+    /// Deliver the record twice (retransmit).
+    Duplicate,
+    /// Sever the connection; the record is re-streamed after reconnect.
+    Sever,
+    /// Sever and suppress redial for the partition window.
+    Partition,
+}
+
+/// Live schedule state: survives reconnects (the record counter keeps
+/// counting across link incarnations, so "drop every 100th" doesn't
+/// reset to zero each time it fires and sever the link forever).
+#[derive(Debug)]
+pub struct ChaosState {
+    plan: ChaosPlan,
+    records: AtomicU64,
+    blocked_until: Mutex<Option<Instant>>,
+}
+
+impl ChaosState {
+    pub fn new(plan: ChaosPlan) -> ChaosState {
+        ChaosState { plan, records: AtomicU64::new(0), blocked_until: Mutex::new(None) }
+    }
+
+    /// Consult the schedule for the next record (applies the configured
+    /// delay inline). Partition wins over drop wins over duplicate when
+    /// several fire on the same record.
+    pub fn on_record(&self) -> ChaosVerdict {
+        if self.plan.delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.plan.delay_ms));
+        }
+        let n = self.records.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.plan.partition_after > 0 && n == self.plan.partition_after {
+            let until = Instant::now() + Duration::from_millis(self.plan.partition_ms);
+            *self.blocked_until.lock().unwrap_or_else(PoisonError::into_inner) = Some(until);
+            return ChaosVerdict::Partition;
+        }
+        if self.plan.drop_every > 0 && n % self.plan.drop_every == 0 {
+            return ChaosVerdict::Sever;
+        }
+        if self.plan.dup_every > 0 && n % self.plan.dup_every == 0 {
+            return ChaosVerdict::Duplicate;
+        }
+        ChaosVerdict::Deliver
+    }
+
+    /// Time left in a partition window (`None` = dialing is allowed).
+    /// Clears the window once elapsed.
+    pub fn dial_blocked(&self) -> Option<Duration> {
+        let mut blocked = self.blocked_until.lock().unwrap_or_else(PoisonError::into_inner);
+        match *blocked {
+            Some(until) => {
+                let now = Instant::now();
+                if now >= until {
+                    *blocked = None;
+                    None
+                } else {
+                    Some(until - now)
+                }
+            }
+            None => None,
+        }
+    }
+
+    /// Records the schedule has seen (test probe).
+    pub fn records_seen(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_plan_always_delivers() {
+        let s = ChaosState::new(ChaosPlan::default());
+        for _ in 0..1000 {
+            assert_eq!(s.on_record(), ChaosVerdict::Deliver);
+        }
+        assert!(s.dial_blocked().is_none());
+        assert_eq!(s.records_seen(), 1000);
+    }
+
+    #[test]
+    fn drop_and_dup_schedules_fire() {
+        let s = ChaosState::new(ChaosPlan { drop_every: 4, dup_every: 3, ..Default::default() });
+        let verdicts: Vec<ChaosVerdict> = (0..12).map(|_| s.on_record()).collect();
+        // Record 12 is both a 4th and a 3rd: drop wins.
+        assert_eq!(verdicts[11], ChaosVerdict::Sever);
+        assert_eq!(verdicts[3], ChaosVerdict::Sever);
+        assert_eq!(verdicts[2], ChaosVerdict::Duplicate);
+        assert_eq!(verdicts[0], ChaosVerdict::Deliver);
+    }
+
+    #[test]
+    fn partition_blocks_dialing_for_the_window() {
+        let s = ChaosState::new(ChaosPlan {
+            partition_after: 2,
+            partition_ms: 50,
+            ..Default::default()
+        });
+        assert_eq!(s.on_record(), ChaosVerdict::Deliver);
+        assert_eq!(s.on_record(), ChaosVerdict::Partition);
+        assert!(s.dial_blocked().is_some(), "redial suppressed inside the window");
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(s.dial_blocked().is_none(), "window elapsed, dialing allowed");
+        // The schedule fires once, not on every later record.
+        assert_eq!(s.on_record(), ChaosVerdict::Deliver);
+    }
+}

@@ -37,7 +37,9 @@ use crate::config::{ReplicateConfig, ServerConfig};
 use crate::coordinator::{connect_backoff, BoundedQueue, Engine, Request};
 use crate::persist::codec::WalOp;
 use crate::persist::{codec, install_snapshot, open_engine};
+use crate::runtime::RetryPolicy;
 
+use super::chaos::{ChaosState, ChaosVerdict};
 use super::{wire, ReplicaState};
 
 /// One streamed WAL record (batch or maintenance) queued for its shard's
@@ -322,6 +324,15 @@ fn link_loop(
     let finished = |state: &ReplicaState| {
         stop.load(Ordering::SeqCst) || state.promoted() || state.fault().is_some()
     };
+    // Link-fault schedule (tests/bench only; None in production). Lives
+    // here — not per-connection — so the record counter and any partition
+    // window survive reconnects.
+    let chaos = rcfg.chaos.filter(|p| !p.is_null()).map(ChaosState::new);
+    // Unified reconnect pacing (DESIGN.md §8): capped exponential with
+    // deterministic jitter instead of a flat retry-hammer; the attempt
+    // counter resets every time a connection is actually established.
+    let retry = RetryPolicy::connect(0xF0_110_3E6);
+    let mut attempts: u32 = 0;
     while !finished(&state) {
         let reader = match conn.take() {
             Some(r) => r,
@@ -336,6 +347,11 @@ fn link_loop(
                         break;
                     }
                 }
+                if let Some(left) = chaos.as_ref().and_then(|c| c.dial_blocked()) {
+                    // Injected partition: redial suppressed for the window.
+                    std::thread::sleep(left.min(Duration::from_millis(50)));
+                    continue;
+                }
                 match reconnect(&leader, &engine, &state) {
                     Ok(r) => r,
                     Err(_) => {
@@ -344,15 +360,17 @@ fn link_loop(
                         if state.fault().is_some() {
                             break;
                         }
-                        std::thread::sleep(Duration::from_millis(200));
+                        attempts += 1;
+                        retry.sleep(attempts);
                         continue;
                     }
                 }
             }
         };
+        attempts = 0;
         state.set_connected(true);
         state.note_contact();
-        consume_stream(reader, &state, &queues, rcfg.auto_promote, &finished);
+        consume_stream(reader, &state, &queues, rcfg.auto_promote, chaos.as_ref(), &finished);
         state.set_connected(false);
     }
     state.set_connected(false);
@@ -369,6 +387,7 @@ fn consume_stream(
     state: &ReplicaState,
     queues: &[Arc<BoundedQueue<ReplRecord>>],
     auto_promote: Option<Duration>,
+    chaos: Option<&ChaosState>,
     finished: &dyn Fn(&ReplicaState) -> bool,
 ) {
     let mut line = String::with_capacity(4096);
@@ -394,9 +413,28 @@ fn consume_stream(
                             ));
                             return;
                         }
+                        // Chaos shim: sever/partition drop the *connection*
+                        // (the reconnect handshake re-streams the record),
+                        // never the record itself — see `chaos` module docs.
+                        let verdict =
+                            chaos.map(ChaosState::on_record).unwrap_or(ChaosVerdict::Deliver);
+                        if matches!(verdict, ChaosVerdict::Sever | ChaosVerdict::Partition) {
+                            return;
+                        }
                         state.note_head(shard, seq);
-                        if !push_with_backpressure(&queues[shard], (seq, op), state, finished)
+                        let dup = verdict == ChaosVerdict::Duplicate;
+                        let record = (seq, op);
+                        if dup
+                            && !push_with_backpressure(
+                                &queues[shard],
+                                record.clone(),
+                                state,
+                                finished,
+                            )
                         {
+                            return;
+                        }
+                        if !push_with_backpressure(&queues[shard], record, state, finished) {
                             return;
                         }
                     }

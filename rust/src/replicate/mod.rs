@@ -30,10 +30,12 @@
 //! byte-identical — the differential tests in `rust/tests/replication.rs`
 //! assert exactly that.
 
+pub mod chaos;
 mod follower;
 mod leader;
 pub mod wire;
 
+pub use chaos::{ChaosPlan, ChaosState, ChaosVerdict};
 pub use follower::{start_follower, FollowerHandle};
 pub use leader::serve_follower;
 

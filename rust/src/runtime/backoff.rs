@@ -1,0 +1,123 @@
+//! One retry policy for every reconnect/retry loop in the system:
+//! capped exponential backoff with deterministic jitter.
+//!
+//! Before this module each plane had its own ad-hoc loop — the client's
+//! `connect_with_backoff` doubled from 10ms, the follower link slept a
+//! flat 200ms between redials, and the WAL-retry task didn't exist. They
+//! now share [`RetryPolicy`], so retry behavior is tested once and tuned
+//! in one place.
+//!
+//! Jitter is *deterministic*: derived from `splitmix64(seed ^ attempt)`,
+//! not a clock or an RNG, so a test that replays the same schedule gets
+//! the same delays — the same reproducibility discipline as the fault
+//! plans in `persist::io`. Jitter is subtractive (up to 25% below the
+//! exponential value), keeping every delay `<= cap` by construction
+//! while still de-synchronizing herds of retriers with distinct seeds.
+
+use std::time::Duration;
+
+/// Weyl-sequence mixer (public-domain splitmix64): a cheap, well-mixed
+/// `u64 -> u64` used for jitter derivation.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Capped exponential backoff with deterministic subtractive jitter.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    base: Duration,
+    cap: Duration,
+    seed: u64,
+}
+
+impl RetryPolicy {
+    pub const fn new(base: Duration, cap: Duration, seed: u64) -> RetryPolicy {
+        RetryPolicy { base, cap, seed }
+    }
+
+    /// The dial/connect policy the wire clients historically used:
+    /// 10ms doubling, capped at 1s.
+    pub fn connect(seed: u64) -> RetryPolicy {
+        RetryPolicy::new(Duration::from_millis(10), Duration::from_secs(1), seed)
+    }
+
+    /// The WAL-retry / degraded-heal policy: 50ms doubling, capped at 2s
+    /// so a transient disk fault is reprobed promptly but a dead disk
+    /// isn't hammered.
+    pub fn wal_retry(seed: u64) -> RetryPolicy {
+        RetryPolicy::new(Duration::from_millis(50), Duration::from_secs(2), seed)
+    }
+
+    /// Delay before retry number `attempt` (0-based):
+    /// `min(base * 2^attempt, cap)` minus up to 25% deterministic jitter.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let base_ns = self.base.as_nanos().max(1) as u64;
+        let cap_ns = self.cap.as_nanos().min(u64::MAX as u128) as u64;
+        // u128 so a deep attempt can't shift bits off the top and wrap
+        // back below the cap.
+        let exp_ns = ((base_ns as u128) << attempt.min(64)).min(cap_ns as u128) as u64;
+        let exp_ns = exp_ns.max(base_ns.min(cap_ns));
+        let jitter_span = exp_ns / 4;
+        let jitter = if jitter_span == 0 {
+            0
+        } else {
+            splitmix64(self.seed ^ u64::from(attempt)) % (jitter_span + 1)
+        };
+        Duration::from_nanos(exp_ns - jitter)
+    }
+
+    /// Sleep for `delay(attempt)`.
+    pub fn sleep(&self, attempt: u32) {
+        std::thread::sleep(self.delay(attempt));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_then_caps() {
+        let p = RetryPolicy::new(Duration::from_millis(10), Duration::from_millis(500), 1);
+        // Jitter-free upper envelope doubles: compare successive upper
+        // bounds via the no-jitter exponential, and assert the cap.
+        let mut prev_upper = 0u128;
+        for attempt in 0..16 {
+            let d = p.delay(attempt);
+            let upper = (10_000_000u128 << attempt.min(20)).min(500_000_000);
+            assert!(d.as_nanos() <= upper, "attempt {attempt}: {d:?} > {upper}ns");
+            assert!(
+                d.as_nanos() * 4 >= upper * 3,
+                "attempt {attempt}: {d:?} below 75% of {upper}ns"
+            );
+            assert!(upper >= prev_upper, "envelope must be monotone");
+            prev_upper = upper;
+        }
+        // Deep attempts are pinned at (jittered) cap, never overflow.
+        assert!(p.delay(200) <= Duration::from_millis(500));
+        assert!(p.delay(200) >= Duration::from_millis(375));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = RetryPolicy::new(Duration::from_millis(10), Duration::from_secs(1), 42);
+        let b = RetryPolicy::new(Duration::from_millis(10), Duration::from_secs(1), 42);
+        let c = RetryPolicy::new(Duration::from_millis(10), Duration::from_secs(1), 43);
+        let same: Vec<Duration> = (0..8).map(|i| a.delay(i)).collect();
+        let again: Vec<Duration> = (0..8).map(|i| b.delay(i)).collect();
+        let other: Vec<Duration> = (0..8).map(|i| c.delay(i)).collect();
+        assert_eq!(same, again, "same seed, same schedule");
+        assert_ne!(same, other, "different seeds de-synchronize");
+    }
+
+    #[test]
+    fn zero_base_never_panics() {
+        let p = RetryPolicy::new(Duration::ZERO, Duration::from_millis(1), 0);
+        for attempt in 0..70 {
+            let _ = p.delay(attempt);
+        }
+    }
+}

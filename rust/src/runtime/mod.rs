@@ -21,6 +21,7 @@
 //! skips the dense path (see `stub.rs`).
 
 mod affinity;
+pub mod backoff;
 #[cfg(feature = "xla")]
 mod dense;
 #[cfg(feature = "xla")]
@@ -30,6 +31,7 @@ mod manifest;
 mod stub;
 
 pub use affinity::pin_current_thread;
+pub use backoff::RetryPolicy;
 #[cfg(feature = "xla")]
 pub use dense::DenseXlaChain;
 #[cfg(feature = "xla")]

@@ -18,7 +18,7 @@ use mcprioq::config::{PersistSection, ServerConfig};
 use mcprioq::coordinator::{Client, Engine, Server};
 use mcprioq::persist::codec::WalOp;
 use mcprioq::persist::wal::{self, ShardWal};
-use mcprioq::persist::{open_engine, FsyncPolicy};
+use mcprioq::persist::{open_engine, FsyncPolicy, IoHandle};
 use mcprioq::replicate::start_follower;
 use mcprioq::testutil::{Rng64, TempDir};
 
@@ -170,6 +170,7 @@ fn kill_point_sweep_over_decay_record_boundaries() {
     let dir = tmp.join("shard-0000");
     let mut wal = ShardWal::open(
         dir.clone(),
+        IoHandle::std(),
         0,
         FsyncPolicy::Never,
         Duration::from_millis(50),

@@ -21,7 +21,7 @@ use mcprioq::chain::{ChainConfig, McPrioQ};
 use mcprioq::config::{PersistSection, ServerConfig};
 use mcprioq::coordinator::{Client, Engine, Request, Response, Server};
 use mcprioq::persist::wal::{self, ShardWal};
-use mcprioq::persist::{codec, open_engine, FsyncPolicy};
+use mcprioq::persist::{codec, open_engine, FsyncPolicy, IoHandle};
 use mcprioq::testutil::{Rng64, TempDir};
 
 /// A skewed stream with frequent same-src runs (as the batch tests use).
@@ -97,6 +97,7 @@ fn kill_point_recovery_matches_surviving_prefix() {
     let dir = tmp.join("shard-0000");
     let mut wal = ShardWal::open(
         dir.clone(),
+        IoHandle::std(),
         0,
         FsyncPolicy::Never,
         std::time::Duration::from_millis(50),

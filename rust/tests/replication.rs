@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 use mcprioq::config::{PersistSection, ReplicateSection, ServerConfig};
 use mcprioq::coordinator::{Client, Engine, Request, Response, Server};
 use mcprioq::persist::{open_engine, wal};
-use mcprioq::replicate::{start_follower, FollowerHandle};
+use mcprioq::replicate::{start_follower, ChaosPlan, FollowerHandle};
 use mcprioq::testutil::{Rng64, TempDir};
 
 /// A skewed stream with frequent same-src runs (as the persist tests use).
@@ -342,6 +342,60 @@ fn snapshot_bootstrap_matches_full_stream_follower() {
 
     follower_b.engine.shutdown();
     leader.shutdown();
+}
+
+/// Link chaos (DESIGN.md §8): duplicated records, added latency, severed
+/// connections, and a no-redial partition window must never diverge the
+/// follower. Dedup by seq, reconnect-and-resume from applied seqs, and
+/// dial suppression all compose into byte-identical convergence.
+#[test]
+fn chaotic_link_still_converges() {
+    let plans = [
+        // Retransmits on a slow link: every 3rd record arrives twice
+        // (exercising the apply plane's `seq <= applied` dedup), 1ms of
+        // added latency per record.
+        ChaosPlan { dup_every: 3, delay_ms: 1, ..Default::default() },
+        // A flappy link with a real outage: every 5th record severs the
+        // connection mid-flight (the leader re-streams it after the
+        // handshake), and the 12th starts a 300ms partition during which
+        // redial is suppressed.
+        ChaosPlan {
+            drop_every: 5,
+            partition_after: 12,
+            partition_ms: 300,
+            ..Default::default()
+        },
+    ];
+    for (i, plan) in plans.into_iter().enumerate() {
+        let ltmp = TempDir::new(&format!("chaos-leader-{i}"));
+        let ftmp = TempDir::new(&format!("chaos-follower-{i}"));
+        let shards = 2usize;
+        let (leader, _) = open_engine(&durable_config(ltmp.path(), shards), 2).unwrap();
+        let server = Server::bind(Arc::clone(&leader), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let _lh = server.spawn();
+
+        let mut fcfg = durable_config(ftmp.path(), shards);
+        fcfg.replicate.chaos = Some(plan);
+        let follower = start_follower(fcfg, 1, &addr).unwrap();
+
+        let mut client = Client::connect(&addr).unwrap();
+        let pairs = stream(16_000, 0xC405 + i as u64);
+        for chunk in pairs.chunks(499) {
+            assert_eq!(client.observe_batch(chunk).unwrap(), chunk.len());
+        }
+        leader.quiesce();
+        catch_up(&leader, &follower, Duration::from_secs(30));
+        assert_eq!(
+            leader.export_quiesced(),
+            follower.engine.export_quiesced(),
+            "plan {plan:?}"
+        );
+        // Chaos is link noise, not a replication fault: nothing latches.
+        assert!(follower.state.fault().is_none(), "plan {plan:?}");
+        follower.engine.shutdown();
+        leader.shutdown();
+    }
 }
 
 #[test]
