@@ -217,6 +217,11 @@ pub struct ReadSweepRow {
     /// Hardware counters over the measurement window (inherited into the
     /// worker threads); `available == false` where perf is unavailable.
     pub perf: crate::metrics::PerfSample,
+    /// Per-query latency distribution from a short single-threaded pass
+    /// after the throughput window (recorded into the same `Histogram`
+    /// primitive the engine registry exposes) — the throughput loop stays
+    /// clock-free so the headline rate is unperturbed.
+    pub lat: crate::metrics::Snapshot,
 }
 
 /// The read-sweep fixture: one hot src node (0) with `fanout` Zipf(1.0)
@@ -282,7 +287,23 @@ pub fn read_topk_sweep(
             } else {
                 1.0
             };
-            rows.push(ReadSweepRow { mode, threads: t, topk_per_s: rate, vs_list_walk, perf });
+            // Latency pass: single-threaded, per-query timing into the
+            // registry's histogram primitive for the p50/p99 columns.
+            let hist = crate::metrics::Histogram::new();
+            let mut out = crate::chain::Recommendation::default();
+            for _ in 0..5_000 {
+                let t0 = Instant::now();
+                chain.infer_topk_into(0, k, &mut out);
+                hist.record(t0.elapsed().as_nanos() as u64);
+            }
+            rows.push(ReadSweepRow {
+                mode,
+                threads: t,
+                topk_per_s: rate,
+                vs_list_walk,
+                perf,
+                lat: hist.snapshot(),
+            });
         }
     }
     rows
@@ -789,6 +810,85 @@ pub fn replication_sweep(
         catchup_secs,
         converged,
     })
+}
+
+/// Result of the telemetry-overhead gate ([`telemetry_overhead_probe`]):
+/// wire read throughput with the per-query telemetry plane fully armed
+/// (span tracing on + slow-query log at a 1 µs threshold, so every query
+/// writes both rings — the worst case) vs fully disarmed. The CI bench
+/// smoke fails when `overhead_frac` exceeds 3%.
+pub struct TelemetryOverheadProbe {
+    pub reads_per_s_off: f64,
+    pub reads_per_s_on: f64,
+    /// `(off - on) / off`; can go negative when run-to-run noise favors
+    /// the armed windows.
+    pub overhead_frac: f64,
+}
+
+/// Boot a server on a hot-node engine, drive `threads` wire clients of
+/// `TOPK` through alternating disarmed/armed windows (best window per
+/// mode, to damp scheduler noise), and report the armed cost. The
+/// registry itself has no per-query toggle — counters and histograms are
+/// always on and part of the baseline; what arming adds is exactly the
+/// span/slow-log plane this probe prices.
+pub fn telemetry_overhead_probe(
+    bench: &Bench,
+    window: Duration,
+    threads: usize,
+    fanout: usize,
+) -> Result<TelemetryOverheadProbe, String> {
+    use crate::config::ServerConfig;
+    use crate::coordinator::{Client, Engine, Server};
+    use crate::metrics::trace;
+
+    let threads = threads.max(1);
+    let config =
+        ServerConfig { shards: 1, queue_capacity: 65_536, ..Default::default() };
+    let engine = Engine::new(&config, 1);
+    // Hot-node fixture, engine-side (same shape as hot_node_chain).
+    let zipf = crate::workload::Zipf::new(fanout.max(2), 1.0);
+    let mut rng = crate::testutil::Rng64::new(42);
+    let mut batch = Vec::with_capacity(1_000);
+    for _ in 0..50 {
+        batch.clear();
+        batch.extend((0..1_000).map(|_| (0u64, zipf.sample(&mut rng) as u64 + 1)));
+        engine.observe_batch(&batch);
+    }
+    engine.quiesce();
+    engine.repair();
+    let server = Server::bind(std::sync::Arc::clone(&engine), "127.0.0.1:0")
+        .map_err(|e| format!("bind: {e}"))?;
+    let addr = server.local_addr().to_string();
+    let _server = server.spawn();
+
+    let drive = |armed: bool| -> f64 {
+        if armed {
+            trace::set_enabled(true);
+            trace::set_slow_query_us(1);
+        } else {
+            trace::set_enabled(false);
+            trace::set_slow_query_us(0);
+        }
+        bench.run_threads(threads, window, |_| {
+            let mut client = Client::connect_with_backoff(&addr, Duration::from_secs(5))
+                .expect("probe client connects");
+            move || {
+                let _ = client.topk(0, 10);
+                1
+            }
+        })
+    };
+    let mut off = 0.0f64;
+    let mut on = 0.0f64;
+    for _ in 0..2 {
+        off = off.max(drive(false));
+        on = on.max(drive(true));
+    }
+    trace::set_enabled(false);
+    trace::set_slow_query_us(0);
+    engine.shutdown();
+    let overhead_frac = if off > 0.0 { (off - on) / off } else { 0.0 };
+    Ok(TelemetryOverheadProbe { reads_per_s_off: off, reads_per_s_on: on, overhead_frac })
 }
 
 /// One JSON value for [`JsonArtifact`] rows (serde is unavailable offline;

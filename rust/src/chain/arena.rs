@@ -37,7 +37,7 @@ use crate::prioq::Node;
 /// pointer is `ptr & !(BLOCK_BYTES - 1)`.
 pub(crate) const BLOCK_BYTES: usize = 64 * 1024;
 /// One cache line per node (`Node` is `#[repr(align(64))]`, size 64).
-const SLOT_BYTES: usize = 64;
+pub(crate) const SLOT_BYTES: usize = 64;
 /// Slot 0 holds the block header; the rest hold nodes.
 const SLOTS_PER_BLOCK: usize = BLOCK_BYTES / SLOT_BYTES;
 
@@ -213,6 +213,39 @@ pub(crate) fn stats() -> ArenaStats {
 /// Process-wide arena slack (see [`ArenaStats::slack_bytes`]).
 pub(crate) fn slack_bytes() -> u64 {
     stats().slack_bytes()
+}
+
+/// Register the process-wide arena gauges with a telemetry registry
+/// (DESIGN.md §9). The arena is global, so these are unlabeled; the
+/// per-shard occupancy series come from the engine (edge count × slot).
+pub(crate) fn register_metrics(reg: &crate::metrics::Registry) {
+    reg.counter_fn(
+        "mcprioq_arena_blocks_allocated_total",
+        "Edge-arena blocks ever allocated.",
+        &[],
+        || stats().blocks_allocated,
+    );
+    reg.counter_fn(
+        "mcprioq_arena_blocks_freed_total",
+        "Edge-arena blocks returned to the OS.",
+        &[],
+        || stats().blocks_freed,
+    );
+    reg.gauge_fn("mcprioq_arena_nodes_live", "Live edge nodes in the arena.", &[], || {
+        stats().nodes_live as f64
+    });
+    reg.gauge_fn(
+        "mcprioq_arena_resident_bytes",
+        "Bytes held by live arena blocks.",
+        &[],
+        || stats().resident_bytes() as f64,
+    );
+    reg.gauge_fn(
+        "mcprioq_arena_slack_bytes",
+        "Arena bytes not occupied by live nodes (headers, holes, tails).",
+        &[],
+        || stats().slack_bytes() as f64,
+    );
 }
 
 #[cfg(test)]

@@ -30,7 +30,7 @@ pub use state::NodeStats;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-use crate::metrics::{Counter, StripedCounter};
+use crate::metrics::{Counter, Histogram, StripedCounter};
 
 use crate::hashtable::PtrTable;
 use crate::prioq::IncrementOutcome;
@@ -126,6 +126,9 @@ struct ReadMetrics {
     snap_hits: StripedCounter,
     snap_rebuilds: Counter,
     snap_fallbacks: Counter,
+    /// Nanoseconds per successful snapshot rebuild (the read-tail stage
+    /// the telemetry plane attributes separately — DESIGN.md §9).
+    snap_rebuild_ns: Histogram,
 }
 
 /// Result of one `observe` call (consumed by E4's swap-rate experiment).
@@ -573,6 +576,28 @@ impl McPrioQ {
     /// Number of live edges (approximate under concurrency).
     pub fn edge_count(&self) -> usize {
         self.edges.load(Ordering::Relaxed)
+    }
+
+    /// Latency distribution of this chain's snapshot rebuilds — sampled
+    /// by the telemetry registry (one summary series per shard).
+    pub fn snap_rebuild_lat(&self) -> crate::metrics::Snapshot {
+        self.reads.snap_rebuild_ns.snapshot()
+    }
+
+    /// Transitions observed by this chain (O(1), unlike `stats`).
+    pub fn observe_count(&self) -> u64 {
+        self.observes.get()
+    }
+
+    /// Read-snapshot effectiveness counters `(hits, rebuilds, fallbacks)`
+    /// — the cheap accessors the telemetry closures sample (a full
+    /// `stats()` walks every node under an RCU pin).
+    pub fn snap_counters(&self) -> (u64, u64, u64) {
+        (
+            self.reads.snap_hits.get(),
+            self.reads.snap_rebuilds.get(),
+            self.reads.snap_fallbacks.get(),
+        )
     }
 
     pub fn stats(&self) -> ChainStats {

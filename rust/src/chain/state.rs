@@ -163,8 +163,15 @@ impl NodeState {
             // fallback — snapshots are simply not worth it here.
             return None;
         }
+        // Rebuild cost rides the *read* that found the snapshot stale
+        // (DESIGN.md §9): time successful rebuilds so the telemetry plane
+        // can attribute read-tail latency to rebuild storms instead of
+        // averaging them into the query histogram. Busy-ticket fallbacks
+        // are not rebuilds and stay out of the distribution.
+        let t0 = std::time::Instant::now();
         match self.try_rebuild_snapshot(guard, config) {
             Some(snap) => {
+                metrics.snap_rebuild_ns.record(t0.elapsed().as_nanos() as u64);
                 metrics.snap_rebuilds.inc();
                 Some(snap)
             }

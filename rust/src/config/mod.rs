@@ -16,6 +16,15 @@ use std::time::Duration;
 pub struct ServerConfig {
     /// TCP bind address for the line protocol front-end.
     pub listen: String,
+    /// Bind address for the HTTP metrics sidecar (`GET /metrics` serving
+    /// Prometheus text exposition, DESIGN.md §9); "" = sidecar off. The
+    /// same exposition is always reachable in-band via the `METRICS`
+    /// wire verb.
+    pub metrics_addr: String,
+    /// Slow-query capture threshold in microseconds: any TOPK/MTOPK/REC
+    /// whose total service time beats this lands in the slow-query log
+    /// with stage-level timing (`TRACE dump`). 0 = off.
+    pub slow_query_us: u64,
     /// Number of chain shards (0 = number of CPUs).
     pub shards: usize,
     /// Update-ingestion queue capacity per shard (backpressure bound).
@@ -190,6 +199,8 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             listen: "127.0.0.1:7171".to_string(),
+            metrics_addr: String::new(),
+            slow_query_us: 0,
             shards: 0,
             queue_capacity: 65_536,
             rate_limit_ops: 0,
@@ -222,6 +233,8 @@ impl ServerConfig {
         for (key, value) in doc.entries() {
             match key.as_str() {
                 "server.listen" => cfg.listen = value.as_str()?.to_string(),
+                "server.metrics_addr" => cfg.metrics_addr = value.as_str()?.to_string(),
+                "server.slow_query_us" => cfg.slow_query_us = value.as_u64()?,
                 "server.shards" => cfg.shards = value.as_usize()?,
                 "server.queue_capacity" => cfg.queue_capacity = value.as_usize()?,
                 "server.rate_limit_ops" => cfg.rate_limit_ops = value.as_u64()?,
@@ -548,6 +561,18 @@ decay_den = 4
         );
         // Chaos plans are not TOML-reachable by design.
         assert!(ServerConfig::from_toml("[replicate]\nchaos = \"x\"\n").is_err());
+    }
+
+    #[test]
+    fn telemetry_knobs_parse() {
+        let text = "[server]\nmetrics_addr = \"127.0.0.1:9100\"\nslow_query_us = 250\n";
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.metrics_addr, "127.0.0.1:9100");
+        assert_eq!(cfg.slow_query_us, 250);
+        // Defaults: sidecar off, slow-query capture off.
+        let cfg = ServerConfig::from_toml("").unwrap();
+        assert!(cfg.metrics_addr.is_empty());
+        assert_eq!(cfg.slow_query_us, 0);
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use crate::chain::{ChainConfig, McPrioQ, Recommendation};
 use crate::config::ServerConfig;
-use crate::metrics::{Counter, Histogram, Meter};
+use crate::metrics::{Counter, Histogram, Meter, Registry};
 use crate::persist::{codec, LogOutcome, PersistState};
 use crate::rcu;
 use crate::runtime::RetryPolicy;
@@ -66,8 +66,16 @@ pub struct EngineStats {
     /// Edges pruned by decay, summed over shards.
     pub pruned_edges: u64,
     pub queue_depth: usize,
+    /// Full query-latency summary (nanoseconds) from the engine's
+    /// log-bucketed histogram — the same snapshot the telemetry registry
+    /// exports as the `mcprioq_query_ns` summary family.
     pub query_ns_p50: u64,
+    pub query_ns_p90: u64,
     pub query_ns_p99: u64,
+    pub query_ns_p999: u64,
+    pub query_ns_min: u64,
+    pub query_ns_max: u64,
+    pub query_ns_mean: f64,
     /// Applied updates/sec over the window since the previous `stats()`
     /// call (wired to the ingest meter; no longer a placeholder).
     pub update_rate: f64,
@@ -120,24 +128,38 @@ pub struct Engine {
     queues: Vec<Arc<BoundedQueue<(u64, u64)>>>,
     workers: std::sync::Mutex<Vec<JoinHandle<u64>>>,
     stop: Arc<AtomicBool>,
-    queries: Counter,
-    dropped: Counter,
+    /// The engine's named metric registry (DESIGN.md §9). Every counter/
+    /// histogram field below is an `Arc` handed out by this registry, so
+    /// `METRICS`/`/metrics` exposition and the `STATS` verb read the very
+    /// same atomics — `EngineStats` is a *view* over the registry, not a
+    /// parallel set of private fields.
+    telemetry: Arc<Registry>,
+    queries: Arc<Counter>,
+    dropped: Arc<Counter>,
     /// Updates *submitted* to some shard queue. Incremented BEFORE the
     /// push, so any update visible in a queue is already counted — that
     /// ordering is what makes `quiesce` race-free against producers.
-    enqueued: Counter,
+    enqueued: Arc<Counter>,
     /// …updates actually applied by ingest workers…
-    applied: Counter,
+    applied: Arc<Counter>,
     /// …and submissions the queue refused (closed/full): counted so the
     /// pre-push `enqueued` increment is balanced and quiesce terminates.
-    rejected: Counter,
+    rejected: Arc<Counter>,
     /// Updates shed by the non-blocking admission path (`observe_shed` /
     /// `observe_batch_shed`): the queue was full and the server answered
     /// `ERR overload` instead of blocking the connection.
-    shed: Counter,
+    shed: Arc<Counter>,
     /// Write verbs refused by a connection's token bucket.
-    ratelimited: Counter,
-    query_lat: Histogram,
+    ratelimited: Arc<Counter>,
+    query_lat: Arc<Histogram>,
+    /// Per-stage pipeline timing (DESIGN.md §9): WAL append + fsync,
+    /// in-memory batch apply, whole checkpoints, and heal-drain passes.
+    /// (Ingest queue wait lives in the queues themselves; snapshot-rebuild
+    /// timing lives in each shard's `ReadMetrics`.)
+    wal_append_ns: Arc<Histogram>,
+    batch_apply_ns: Arc<Histogram>,
+    checkpoint_ns: Arc<Histogram>,
+    heal_drain_ns: Arc<Histogram>,
     update_meter: Meter,
     /// Durability state (WAL writers + checkpoint bookkeeping), armed once
     /// by `persist::open_engine` after recovery finishes. `None`/unset =
@@ -174,26 +196,57 @@ impl Engine {
         let chain_cfg: ChainConfig = config.to_chain_config();
         let queues: Vec<Arc<BoundedQueue<(u64, u64)>>> =
             (0..nshards).map(|_| Arc::new(BoundedQueue::new(config.queue_capacity))).collect();
+        // Every hot-path metric is created through the registry so the
+        // exposition reads the same atomics the engine records into.
+        let reg = Arc::new(Registry::new());
+        let c = |name: &str, help: &str| reg.counter(name, help, &[]);
+        let h = |name: &str, help: &str| reg.histogram(name, help, &[]);
+        // One queue-wait histogram shared by every shard queue: pops
+        // record the age of the oldest consumed cohort (ingest queue-wait
+        // stage, DESIGN.md §9).
+        let queue_wait =
+            h("mcprioq_queue_wait_ns", "Ingest queue wait per drained cohort (ns).");
+        for q in &queues {
+            q.set_wait_histogram(Arc::clone(&queue_wait));
+        }
         let engine = Arc::new(Engine {
             shards: (0..nshards).map(|_| McPrioQ::new(chain_cfg.clone())).collect(),
             queues,
             workers: std::sync::Mutex::new(Vec::new()),
             stop: Arc::new(AtomicBool::new(false)),
-            queries: Counter::new(),
-            dropped: Counter::new(),
-            enqueued: Counter::new(),
-            applied: Counter::new(),
-            rejected: Counter::new(),
-            shed: Counter::new(),
-            ratelimited: Counter::new(),
-            query_lat: Histogram::new(),
+            queries: c("mcprioq_queries_total", "Inference queries served."),
+            dropped: c(
+                "mcprioq_updates_dropped_total",
+                "Lossy-path updates dropped on queue overflow.",
+            ),
+            enqueued: c("mcprioq_updates_enqueued_total", "Updates submitted to shard queues."),
+            applied: c("mcprioq_updates_applied_total", "Updates applied by ingest workers."),
+            rejected: c(
+                "mcprioq_updates_rejected_total",
+                "Submissions refused by a closed or full queue.",
+            ),
+            shed: c(
+                "mcprioq_updates_shed_total",
+                "Updates shed by admission control (queue saturated).",
+            ),
+            ratelimited: c(
+                "mcprioq_ratelimited_total",
+                "Write verbs refused by a connection token bucket.",
+            ),
+            query_lat: h("mcprioq_query_ns", "Inference query service time (ns)."),
+            wal_append_ns: h("mcprioq_wal_append_ns", "WAL append + fsync per batch (ns)."),
+            batch_apply_ns: h("mcprioq_batch_apply_ns", "In-memory batch apply (ns)."),
+            checkpoint_ns: h("mcprioq_checkpoint_ns", "Whole checkpoint duration (ns)."),
+            heal_drain_ns: h("mcprioq_heal_drain_ns", "Heal-drain pass duration (ns)."),
             update_meter: Meter::new(),
+            telemetry: Arc::clone(&reg),
             persist: OnceLock::new(),
             ingest_gate: RwLock::new(()),
             replicate: config.replicate_config(),
             health: HealthState::new(),
             admission: (config.rate_limit_ops, config.rate_limit_burst),
         });
+        engine.register_derived_metrics();
         // Spawn shard-affine ingest workers. They hold their queue Arcs
         // plus a Weak to the engine, so dropping the last user Arc tears
         // everything down: Engine::drop closes the queues, workers wake,
@@ -231,6 +284,156 @@ impl Engine {
         engine
     }
 
+    /// Register every *derived* series: sampled closures evaluated only at
+    /// exposition time. Closures that need the engine capture a `Weak`
+    /// (the engine owns the registry, so a strong capture would cycle and
+    /// leak); per-shard queue closures clone the queue `Arc`s directly.
+    fn register_derived_metrics(self: &Arc<Engine>) {
+        let reg = &self.telemetry;
+        // Per-shard queue depth: over the queue Arcs, engine-independent.
+        for (i, q) in self.queues.iter().enumerate() {
+            let q = Arc::clone(q);
+            reg.gauge_fn(
+                "mcprioq_queue_depth",
+                "Pending updates in a shard's ingest queue.",
+                &[("shard", &i.to_string())],
+                move || q.len() as f64,
+            );
+        }
+        // Per-shard model shape, read-snapshot effectiveness, and arena
+        // occupancy (edge count × 64-byte slot — the per-shard arena-stats
+        // follow-on from ROADMAP; allocation attribution is address-based
+        // and cross-thread, so occupancy is derived, not counted).
+        for i in 0..self.shards.len() {
+            let shard_label = i.to_string();
+            let labels: &[(&str, &str)] = &[("shard", &shard_label)];
+            let w = Arc::downgrade(self);
+            reg.gauge_fn("mcprioq_nodes", "Distinct src nodes per shard.", labels, move || {
+                w.upgrade().map_or(0.0, |e| e.shards[i].node_count() as f64)
+            });
+            let w = Arc::downgrade(self);
+            reg.gauge_fn("mcprioq_edges", "Live edges per shard.", labels, move || {
+                w.upgrade().map_or(0.0, |e| e.shards[i].edge_count() as f64)
+            });
+            let w = Arc::downgrade(self);
+            reg.gauge_fn(
+                "mcprioq_arena_occupancy_bytes",
+                "Arena bytes occupied by a shard's edge nodes.",
+                labels,
+                move || {
+                    w.upgrade().map_or(0.0, |e| {
+                        (e.shards[i].edge_count() * crate::chain::arena::SLOT_BYTES) as f64
+                    })
+                },
+            );
+            let w = Arc::downgrade(self);
+            reg.counter_fn(
+                "mcprioq_observes_total",
+                "Transitions observed per shard.",
+                labels,
+                move || w.upgrade().map_or(0, |e| e.shards[i].observe_count()),
+            );
+            let w = Arc::downgrade(self);
+            reg.counter_fn(
+                "mcprioq_snap_hits_total",
+                "Queries served from a fresh read snapshot.",
+                labels,
+                move || w.upgrade().map_or(0, |e| e.shards[i].snap_counters().0),
+            );
+            let w = Arc::downgrade(self);
+            reg.counter_fn(
+                "mcprioq_snap_rebuilds_total",
+                "Read-snapshot rebuilds.",
+                labels,
+                move || w.upgrade().map_or(0, |e| e.shards[i].snap_counters().1),
+            );
+            let w = Arc::downgrade(self);
+            reg.counter_fn(
+                "mcprioq_snap_fallbacks_total",
+                "Queries that fell back to the list walk.",
+                labels,
+                move || w.upgrade().map_or(0, |e| e.shards[i].snap_counters().2),
+            );
+            let w = Arc::downgrade(self);
+            reg.summary_fn(
+                "mcprioq_snap_rebuild_ns",
+                "Read-snapshot rebuild duration (ns).",
+                labels,
+                move || {
+                    w.upgrade().map_or_else(Default::default, |e| e.shards[i].snap_rebuild_lat())
+                },
+            );
+        }
+        // Health ladder as a 0/1-per-rung labeled gauge timeline: exactly
+        // one of the three series is 1 at any instant, so a scrape series
+        // shows the ladder transitions (the chaos smoke asserts on this).
+        for rung in ["healthy", "degraded", "recovering"] {
+            let w = Arc::downgrade(self);
+            reg.gauge_fn(
+                "mcprioq_health_state",
+                "Degradation-ladder rung (1 = current).",
+                &[("state", rung)],
+                move || match w.upgrade() {
+                    Some(e) if e.health.health().as_str() == rung => 1.0,
+                    _ => 0.0,
+                },
+            );
+        }
+        let w = Arc::downgrade(self);
+        reg.counter_fn(
+            "mcprioq_wal_retry_total",
+            "Heal attempts by the WAL-retry task.",
+            &[],
+            move || w.upgrade().map_or(0, |e| e.health.wal_retry.get()),
+        );
+        let w = Arc::downgrade(self);
+        reg.gauge_fn(
+            "mcprioq_degraded_seconds",
+            "Total seconds spent off the healthy rung.",
+            &[],
+            move || w.upgrade().map_or(0.0, |e| e.health.degraded_seconds() as f64),
+        );
+        let w = Arc::downgrade(self);
+        reg.gauge_fn(
+            "mcprioq_update_rate",
+            "Applied updates/sec over the exposition window.",
+            &[],
+            move || w.upgrade().map_or(0.0, |e| e.update_meter.rate()),
+        );
+        // RCU reclamation: deferred-free backlog and grace-period age
+        // (process-global, like the collector itself).
+        reg.gauge_fn(
+            "mcprioq_rcu_pending",
+            "RCU deferred-free backlog (closures awaiting a grace period).",
+            &[],
+            || rcu::collector_stats().pending as f64,
+        );
+        reg.counter_fn("mcprioq_rcu_freed_total", "RCU deferred frees executed.", &[], || {
+            rcu::collector_stats().freed as u64
+        });
+        reg.counter_fn("mcprioq_rcu_advances_total", "Global RCU epoch advances.", &[], || {
+            rcu::collector_stats().advances
+        });
+        reg.gauge_fn(
+            "mcprioq_rcu_grace_age_seconds",
+            "Seconds since the RCU epoch last advanced.",
+            &[],
+            || rcu::grace_age_ns() as f64 / 1e9,
+        );
+        crate::chain::arena::register_metrics(reg);
+    }
+
+    /// The engine's telemetry registry (the `METRICS` verb and the HTTP
+    /// sidecar render through this).
+    pub fn telemetry(&self) -> &Arc<Registry> {
+        &self.telemetry
+    }
+
+    /// Append the full Prometheus text exposition to `out`.
+    pub fn render_metrics(&self, out: &mut String) {
+        self.telemetry.render_into(out);
+    }
+
     /// Drain-and-apply loop for one worker's shard set. Returns the number
     /// of updates this worker applied.
     fn ingest_loop(
@@ -259,7 +462,10 @@ impl Engine {
             let _gate =
                 engine.ingest_gate.read().unwrap_or_else(PoisonError::into_inner);
             if let Some(persist) = engine.persist.get() {
-                match persist.log_batch(shard, batch) {
+                let t0 = std::time::Instant::now();
+                let outcome = persist.log_batch(shard, batch);
+                engine.wal_append_ns.record(t0.elapsed().as_nanos() as u64);
+                match outcome {
                     LogOutcome::Logged => {}
                     LogOutcome::SyncDegraded(why) => engine.health.degrade(&why),
                     LogOutcome::Parked(why) => {
@@ -270,7 +476,9 @@ impl Engine {
                     }
                 }
             }
+            let t0 = std::time::Instant::now();
             engine.shards[shard].observe_batch(batch);
+            engine.batch_apply_ns.record(t0.elapsed().as_nanos() as u64);
             let n = batch.len() as u64;
             engine.update_meter.mark_n(n);
             engine.applied.add(n);
@@ -835,6 +1043,7 @@ impl Engine {
     /// spawns the WAL-retry heal task — durable engines are the only ones
     /// that can degrade, so in-memory engines never pay for the thread.
     pub(crate) fn attach_persist(self: &Arc<Self>, state: Arc<PersistState>) {
+        state.register_metrics(&self.telemetry);
         if self.persist.set(state).is_err() {
             panic!("persist state attached twice");
         }
@@ -895,6 +1104,7 @@ impl Engine {
     /// ops parked for the next attempt.
     fn try_heal(&self) -> Result<(), String> {
         let Some(persist) = self.persist.get() else { return Ok(()) };
+        let t0 = std::time::Instant::now();
         // Same lock order as the ingest workers (gate.read → quarantine →
         // wal), so the drain serializes cleanly against batch applies and
         // checkpoint pauses.
@@ -914,6 +1124,7 @@ impl Engine {
                 .sync_shard(shard)
                 .map_err(|e| format!("shard {shard} fsync probe failed: {e}"))?;
         }
+        self.heal_drain_ns.record(t0.elapsed().as_nanos() as u64);
         Ok(())
     }
 
@@ -925,7 +1136,12 @@ impl Engine {
     /// `rename`, manifest commit, WAL truncation). Errors if persistence
     /// is not enabled. Backs the wire `SAVE` command and the scheduler.
     pub fn checkpoint(&self) -> Result<crate::persist::CheckpointSummary, String> {
-        crate::persist::run_checkpoint(self)
+        let t0 = std::time::Instant::now();
+        let summary = crate::persist::run_checkpoint(self)?;
+        // Only committed checkpoints land in the histogram — a refused or
+        // failed cut would skew the duration summary with early exits.
+        self.checkpoint_ns.record(t0.elapsed().as_nanos() as u64);
+        Ok(summary)
     }
 
     pub fn stats(&self) -> EngineStats {
@@ -982,7 +1198,12 @@ impl Engine {
             pruned_edges,
             queue_depth: self.queues.iter().map(|q| q.len()).sum(),
             query_ns_p50: snap.p50,
+            query_ns_p90: snap.p90,
             query_ns_p99: snap.p99,
+            query_ns_p999: snap.p999,
+            query_ns_min: snap.min,
+            query_ns_max: snap.max,
+            query_ns_mean: snap.mean,
             update_rate: self.update_meter.rate(),
             snap_hits,
             snap_rebuilds,

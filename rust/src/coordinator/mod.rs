@@ -48,10 +48,10 @@ mod server;
 pub use decay::{DecayScheduler, RepairScheduler};
 pub use engine::{Engine, EngineStats};
 pub use health::Health;
-pub use protocol::{write_items_body, ItemsBody, Request, Response, MAX_WIRE_BATCH};
+pub use protocol::{write_items_body, ItemsBody, Request, Response, TraceCmd, MAX_WIRE_BATCH};
 pub use queue::BoundedQueue;
 pub(crate) use server::connect_backoff;
-pub use server::{Client, Server};
+pub use server::{Client, MetricsSidecar, Server};
 
 #[cfg(test)]
 mod tests;

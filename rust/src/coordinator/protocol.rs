@@ -16,6 +16,15 @@
 //! SAVE                       force a durability checkpoint (WAL cut +
 //!                            snapshot; ERR if persistence is disabled)
 //! STATS                      engine statistics
+//! METRICS                    full Prometheus text exposition of the
+//!                            telemetry registry (DESIGN.md §9). The ONLY
+//!                            multi-line response in the protocol: the
+//!                            body is terminated by a literal `# EOF`
+//!                            line, so pipelining clients know where it
+//!                            ends without a length prefix.
+//! TRACE on|off               arm / disarm per-thread span capture
+//! TRACE dump <n>             the newest <n> captured spans, one per
+//!                            response line token-packed (single line)
 //! HEALTH                     degradation-ladder probe: the current rung
 //!                            (healthy/degraded/recovering), the reason
 //!                            and retry hint when off the healthy rung,
@@ -34,7 +43,9 @@
 //! Responses: `OK ...`, `ITEMS <n> <dst>:<prob> ... cum=<c> scanned=<s>`,
 //! `MITEMS <m> ITEMS ... ITEMS ...` (one block per MTOPK src), or
 //! `ERR <message>`. Every request yields exactly one response line, so
-//! clients can pipeline arbitrarily many requests behind a single flush.
+//! clients can pipeline arbitrarily many requests behind a single flush —
+//! with the sole documented exception of `METRICS`, whose multi-line body
+//! runs until a `# EOF` sentinel line.
 
 use std::fmt;
 use std::fmt::Write as _;
@@ -56,6 +67,11 @@ pub enum Request {
     Repair,
     Save,
     Stats,
+    /// Prometheus text exposition of the whole telemetry registry
+    /// (multi-line response terminated by `# EOF`).
+    Metrics,
+    /// Span-capture control: `TRACE on`, `TRACE off`, `TRACE dump <n>`.
+    Trace(TraceCmd),
     Health,
     Ping,
     Quit,
@@ -65,13 +81,22 @@ pub enum Request {
     Promote,
 }
 
+/// The `TRACE` subcommands (DESIGN.md §9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceCmd {
+    On,
+    Off,
+    /// Return the newest `n` captured spans.
+    Dump(usize),
+}
+
 impl Request {
     pub fn parse(line: &str) -> Result<Request, String> {
         let mut it = line.split_ascii_whitespace();
         let cmd = it.next().ok_or("empty request")?;
         // Subcommand token, consumed up front (the `num` closure below
         // holds the iterator, so it cannot be advanced directly later).
-        let sub = if cmd == "REPL" { it.next() } else { None };
+        let sub = if cmd == "REPL" || cmd == "TRACE" { it.next() } else { None };
         let mut num = |name: &str| -> Result<u64, String> {
             it.next()
                 .ok_or(format!("{cmd}: missing {name}"))?
@@ -124,6 +149,13 @@ impl Request {
             "REPAIR" => Request::Repair,
             "SAVE" => Request::Save,
             "STATS" => Request::Stats,
+            "METRICS" => Request::Metrics,
+            "TRACE" => match sub {
+                Some("on") => Request::Trace(TraceCmd::On),
+                Some("off") => Request::Trace(TraceCmd::Off),
+                Some("dump") => Request::Trace(TraceCmd::Dump(num("n")? as usize)),
+                other => return Err(format!("TRACE: unknown subcommand {other:?}")),
+            },
             "HEALTH" => Request::Health,
             "PING" => Request::Ping,
             "QUIT" => Request::Quit,
@@ -172,6 +204,10 @@ impl Request {
             Request::Repair => "REPAIR".into(),
             Request::Save => "SAVE".into(),
             Request::Stats => "STATS".into(),
+            Request::Metrics => "METRICS".into(),
+            Request::Trace(TraceCmd::On) => "TRACE on".into(),
+            Request::Trace(TraceCmd::Off) => "TRACE off".into(),
+            Request::Trace(TraceCmd::Dump(n)) => format!("TRACE dump {n}"),
             Request::Health => "HEALTH".into(),
             Request::Ping => "PING".into(),
             Request::Quit => "QUIT".into(),

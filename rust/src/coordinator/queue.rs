@@ -19,11 +19,17 @@
 //! [`BoundedQueue::locked`]).
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::{Duration, Instant};
+
+use crate::metrics::Histogram;
 
 struct State<T> {
     items: VecDeque<T>,
+    /// Enqueue cohorts for queue-wait timing: `(items, enqueued_at)` per
+    /// push, FIFO like `items`. Only maintained while a wait histogram is
+    /// attached — the telemetry-off hot path never stamps a clock.
+    cohorts: VecDeque<(usize, Instant)>,
     closed: bool,
 }
 
@@ -32,6 +38,10 @@ pub struct BoundedQueue<T> {
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
+    /// Queue-wait histogram (ns), attached once post-construction by the
+    /// engine's telemetry registry. Each batch pop records the age of the
+    /// oldest cohort it consumed — one sample per drain, not per item.
+    wait_hist: OnceLock<Arc<Histogram>>,
 }
 
 impl<T> BoundedQueue<T> {
@@ -58,10 +68,56 @@ impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         BoundedQueue {
-            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            state: Mutex::new(State {
+                items: VecDeque::new(),
+                cohorts: VecDeque::new(),
+                closed: false,
+            }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
+            wait_hist: OnceLock::new(),
+        }
+    }
+
+    /// Attach the queue-wait histogram (idempotent; first caller wins).
+    /// Until this is called, pushes and pops skip cohort bookkeeping
+    /// entirely.
+    pub fn set_wait_histogram(&self, hist: Arc<Histogram>) {
+        let _ = self.wait_hist.set(hist);
+    }
+
+    /// Stamp an enqueue cohort of `n` items (under the state lock).
+    fn stamp(&self, s: &mut State<T>, n: usize) {
+        if n > 0 && self.wait_hist.get().is_some() {
+            s.cohorts.push_back((n, Instant::now()));
+        }
+    }
+
+    /// Consume `n` popped items from the cohort FIFO and record the age of
+    /// the oldest consumed cohort — the queue-wait of the batch's head,
+    /// which is the latency bound the drain loop is accountable for.
+    fn note_popped(&self, s: &mut State<T>, n: usize) {
+        let Some(hist) = self.wait_hist.get() else { return };
+        let mut remaining = n;
+        let mut oldest: Option<Instant> = None;
+        while remaining > 0 {
+            // `break`, not unwrap: items pushed before the histogram was
+            // attached have no cohort stamp.
+            let Some(front) = s.cohorts.front_mut() else { break };
+            if oldest.is_none() {
+                oldest = Some(front.1);
+            }
+            if front.0 <= remaining {
+                remaining -= front.0;
+                s.cohorts.pop_front();
+            } else {
+                front.0 -= remaining;
+                remaining = 0;
+            }
+        }
+        if let Some(t) = oldest {
+            hist.record(t.elapsed().as_nanos() as u64);
         }
     }
 
@@ -86,6 +142,7 @@ impl<T> BoundedQueue<T> {
             }
             if s.items.len() < self.capacity {
                 s.items.push_back(item);
+                self.stamp(&mut s, 1);
                 self.not_empty.notify_one();
                 return true;
             }
@@ -101,6 +158,7 @@ impl<T> BoundedQueue<T> {
             return Err(item);
         }
         s.items.push_back(item);
+        self.stamp(&mut s, 1);
         self.not_empty.notify_one();
         Ok(())
     }
@@ -110,6 +168,7 @@ impl<T> BoundedQueue<T> {
         let mut s = self.locked();
         loop {
             if let Some(item) = s.items.pop_front() {
+                self.note_popped(&mut s, 1);
                 self.not_full.notify_one();
                 return Some(item);
             }
@@ -127,6 +186,7 @@ impl<T> BoundedQueue<T> {
             if !s.items.is_empty() {
                 let take = s.items.len().min(max);
                 let out: Vec<T> = s.items.drain(..take).collect();
+                self.note_popped(&mut s, take);
                 self.not_full.notify_all();
                 return out;
             }
@@ -150,6 +210,8 @@ impl<T> BoundedQueue<T> {
             if s.closed {
                 return pushed;
             }
+            // One cohort stamp per capacity window, not per item.
+            let before = pushed;
             while s.items.len() < self.capacity {
                 match pending.take() {
                     Some(x) => {
@@ -158,11 +220,13 @@ impl<T> BoundedQueue<T> {
                         pending = it.next();
                     }
                     None => {
+                        self.stamp(&mut s, pushed - before);
                         self.not_empty.notify_all();
                         return pushed;
                     }
                 }
             }
+            self.stamp(&mut s, pushed - before);
             self.not_empty.notify_all();
             s = self.wait(&self.not_full, s);
         }
@@ -190,6 +254,7 @@ impl<T> BoundedQueue<T> {
             }
         }
         if take > 0 {
+            self.stamp(&mut s, take);
             self.not_empty.notify_all();
         }
         take
@@ -203,6 +268,7 @@ impl<T> BoundedQueue<T> {
         }
         let take = s.items.len().min(max);
         let out: Vec<T> = s.items.drain(..take).collect();
+        self.note_popped(&mut s, take);
         self.not_full.notify_all();
         out
     }
@@ -217,6 +283,7 @@ impl<T> BoundedQueue<T> {
             if !s.items.is_empty() {
                 let take = s.items.len().min(max);
                 let out: Vec<T> = s.items.drain(..take).collect();
+                self.note_popped(&mut s, take);
                 self.not_full.notify_all();
                 return out;
             }

@@ -18,12 +18,13 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::chain::Recommendation;
+use crate::metrics::trace;
 use crate::replicate::ReplicaState;
 
 use super::admission::TokenBucket;
 use super::engine::Engine;
 use super::health::Health;
-use super::protocol::{write_items_body, Request, Response, MAX_WIRE_BATCH};
+use super::protocol::{write_items_body, Request, Response, TraceCmd, MAX_WIRE_BATCH};
 
 pub struct Server {
     engine: Arc<Engine>,
@@ -135,6 +136,103 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Minimal HTTP sidecar serving the Prometheus text exposition on
+/// `GET /metrics` (`[server] metrics_addr`, DESIGN.md §9). Deliberately
+/// not a web server: one request line, headers skipped, body formatted
+/// into a per-connection buffer, `Connection: close`. Scrapers (and
+/// `curl`) need nothing more, and the line protocol's `METRICS` verb
+/// remains the first-class interface.
+pub struct MetricsSidecar {
+    engine: Arc<Engine>,
+    listener: TcpListener,
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl MetricsSidecar {
+    pub fn bind(engine: Arc<Engine>, addr: &str) -> Result<MetricsSidecar> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding metrics {addr}"))?;
+        let addr = listener.local_addr()?;
+        Ok(MetricsSidecar { engine, listener, addr, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Spawn the scrape loop; the returned handle stops and joins it on
+    /// drop, same contract as [`Server::spawn`].
+    pub fn spawn(self) -> ServerHandle {
+        let stop = Arc::clone(&self.stop);
+        let addr = self.addr;
+        let handle = std::thread::spawn(move || self.accept_loop());
+        ServerHandle { stop, addr, handle: Some(handle) }
+    }
+
+    fn accept_loop(self) {
+        self.listener.set_nonblocking(true).expect("nonblocking metrics listener");
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).ok();
+                    let engine = Arc::clone(&self.engine);
+                    // One thread per scrape: scrapes are rare (seconds
+                    // apart) and a stalled client must not block the
+                    // accept loop.
+                    std::thread::spawn(move || {
+                        let _ = serve_scrape(&engine, stream);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// Answer one HTTP scrape: `GET /metrics` (or `/`) renders the registry,
+/// anything else 404s. The exposition is formatted straight into a
+/// per-connection `String` and written with an explicit `Content-Length`.
+fn serve_scrape(engine: &Engine, stream: TcpStream) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(());
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    // Drain request headers up to the blank line; nothing in them matters.
+    let mut header = String::new();
+    loop {
+        header.clear();
+        if reader.read_line(&mut header)? == 0 || header.trim_end().is_empty() {
+            break;
+        }
+    }
+    if method == "GET" && (path == "/metrics" || path == "/") {
+        let mut body = String::with_capacity(4096);
+        engine.render_metrics(&mut body);
+        write!(
+            writer,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        )?;
+        writer.write_all(body.as_bytes())?;
+    } else {
+        writer.write_all(
+            b"HTTP/1.1 404 Not Found\r\nContent-Length: 0\r\nConnection: close\r\n\r\n",
+        )?;
+    }
+    writer.flush()?;
+    Ok(())
+}
+
 fn handle_connection(
     engine: Arc<Engine>,
     stream: TcpStream,
@@ -166,6 +264,9 @@ fn handle_connection(
             continue;
         }
         resp.clear();
+        // Trace arming is one relaxed load; the pre-parse timestamp lets a
+        // query span attribute parsing to its own stage (DESIGN.md §9).
+        let trace_t0 = trace::armed().then(std::time::Instant::now);
         match Request::parse(trimmed) {
             Err(e) => {
                 let _ = write!(resp, "ERR {e}");
@@ -198,6 +299,7 @@ fn handle_connection(
                 connections.load(Ordering::Relaxed),
                 replica.as_deref(),
                 &mut bucket,
+                trace_t0,
                 &mut rec,
                 &mut resp,
             ),
@@ -229,6 +331,7 @@ fn dispatch(
     live_connections: usize,
     replica: Option<&crate::replicate::ReplicaState>,
     bucket: &mut TokenBucket,
+    trace_t0: Option<std::time::Instant>,
     rec: &mut Recommendation,
     out: &mut String,
 ) {
@@ -330,21 +433,65 @@ fn dispatch(
             }
         }
         Request::Recommend { src, threshold } => {
+            // Spans only exist while tracing or the slow-query log is armed
+            // (`trace_t0` is None otherwise): the untraced hot path pays a
+            // single relaxed load per request, no clock reads.
+            let mut span = trace_t0.map(|t0| {
+                let mut s =
+                    trace::Span::start_at("REC", src, (threshold * 1e6) as u64, t0);
+                s.stage("parse");
+                s
+            });
             engine.infer_threshold_into(src, threshold, rec);
+            if let Some(s) = span.as_mut() {
+                s.stage("infer");
+            }
             let _ = write_items_body(out, &rec.items, rec.cumulative, rec.scanned);
+            if let Some(mut s) = span.take() {
+                s.stage("format");
+                s.finish();
+            }
         }
         Request::TopK { src, k } => {
+            let mut span = trace_t0.map(|t0| {
+                let mut s = trace::Span::start_at("TOPK", src, k as u64, t0);
+                s.stage("parse");
+                s
+            });
             engine.infer_topk_into(src, k, rec);
+            if let Some(s) = span.as_mut() {
+                s.stage("infer");
+            }
             let _ = write_items_body(out, &rec.items, rec.cumulative, rec.scanned);
+            if let Some(mut s) = span.take() {
+                s.stage("format");
+                s.finish();
+            }
         }
         Request::MultiTopK { srcs, k } => {
+            let mut span = trace_t0.map(|t0| {
+                let mut s = trace::Span::start_at(
+                    "MTOPK",
+                    srcs.first().copied().unwrap_or(0),
+                    k as u64,
+                    t0,
+                );
+                s.stage("parse");
+                s
+            });
             // One RCU guard for all n queries, every ITEMS block formatted
-            // into the same buffer, flushed once by the caller.
+            // into the same buffer, flushed once by the caller. Infer and
+            // format interleave per answer, so a trace span charges the
+            // whole loop to one combined stage.
             let _ = write!(out, "MITEMS {}", srcs.len());
             engine.infer_topk_batch(&srcs, k, rec, |r| {
                 out.push(' ');
                 let _ = write_items_body(out, &r.items, r.cumulative, r.scanned);
             });
+            if let Some(mut s) = span.take() {
+                s.stage("infer+format");
+                s.finish();
+            }
         }
         Request::Prob { src, dst } => match engine.shard(src).probability(src, dst) {
             Some(p) => {
@@ -364,8 +511,8 @@ fn dispatch(
             Ok(s) => {
                 let _ = write!(
                     out,
-                    "OK gen={} kind={} nodes={} bytes={} wal_freed={}",
-                    s.generation, s.kind, s.nodes, s.bytes, s.wal_freed
+                    "OK gen={} kind={} nodes={} bytes={} wal_freed={} elapsed_ms={}",
+                    s.generation, s.kind, s.nodes, s.bytes, s.wal_freed, s.elapsed_ms
                 );
             }
             Err(e) => {
@@ -398,6 +545,13 @@ fn dispatch(
                 s.ckpt_age_s,
                 s.recovered_batches,
                 s.wal_errors
+            );
+            // Full query-latency snapshot (q_p50/q_p99 stay where parsers
+            // expect them above; the long tail and extremes land here).
+            let _ = write!(
+                out,
+                " q_p90_ns={} q_p999_ns={} q_min_ns={} q_max_ns={} q_mean_ns={:.0}",
+                s.query_ns_p90, s.query_ns_p999, s.query_ns_min, s.query_ns_max, s.query_ns_mean
             );
             // Honest memory accounting (DESIGN.md §7): model bytes including
             // arena slack, plus resident arena block bytes.
@@ -511,6 +665,46 @@ fn dispatch(
                 );
             }
         }
+        Request::Metrics => {
+            // The one multi-line response in the protocol (DESIGN.md §10):
+            // Prometheus text exposition terminated by a lone `# EOF` line.
+            // `render_into` ends every sample with '\n'; the caller's
+            // trailing newline closes the sentinel line.
+            engine.render_metrics(out);
+            out.push_str("# EOF");
+        }
+        Request::Trace(cmd) => match cmd {
+            TraceCmd::On => {
+                trace::set_enabled(true);
+                out.push_str("OK trace=on");
+            }
+            TraceCmd::Off => {
+                trace::set_enabled(false);
+                out.push_str("OK trace=off");
+            }
+            TraceCmd::Dump(n) => {
+                // Single line: `OK n=<count>` then ` | `-separated span
+                // records, newest first, stages as name:nanoseconds.
+                let spans = trace::dump(n);
+                let _ = write!(out, "OK n={}", spans.len());
+                for r in &spans {
+                    let _ = write!(
+                        out,
+                        " | seq={} verb={} src={} k={} total_ns={} slow={} stages=",
+                        r.seq, r.verb, r.src, r.k, r.total_ns, r.slow as u8
+                    );
+                    if r.nstages == 0 {
+                        out.push('-');
+                    }
+                    for (i, (name, ns)) in r.stages.iter().take(r.nstages).enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        let _ = write!(out, "{name}:{ns}");
+                    }
+                }
+            }
+        },
         Request::Ping => out.push_str("OK pong"),
         Request::Promote => match replica {
             Some(r) => {
@@ -718,6 +912,34 @@ impl Client {
 
     pub fn stats(&mut self) -> Result<String> {
         match self.request(&Request::Stats)? {
+            Response::Ok(s) => Ok(s),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Fetch the Prometheus text exposition over the line protocol
+    /// (`METRICS`). The response is the protocol's one multi-line body,
+    /// read until the `# EOF` sentinel line.
+    pub fn metrics(&mut self) -> Result<String> {
+        writeln!(self.writer, "{}", Request::Metrics.encode())?;
+        self.writer.flush()?;
+        let mut body = String::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed connection mid-METRICS");
+            }
+            if line.trim_end() == "# EOF" {
+                return Ok(body);
+            }
+            body.push_str(&line);
+        }
+    }
+
+    /// `TRACE dump n`: the raw single-line span listing.
+    pub fn trace_dump(&mut self, n: usize) -> Result<String> {
+        match self.request(&Request::Trace(TraceCmd::Dump(n)))? {
             Response::Ok(s) => Ok(s),
             other => anyhow::bail!("unexpected response {other:?}"),
         }

@@ -774,6 +774,292 @@ fn tcp_overload_sheds_instead_of_blocking() {
     engine.shutdown();
 }
 
+// ---- telemetry: registry exposition, METRICS/TRACE wire, sidecar ----
+
+/// Value of the first sample line of `name` in a Prometheus text body
+/// (skips HELP/TYPE comments; tolerates a label block).
+fn metric_value(body: &str, name: &str) -> Option<f64> {
+    let plain = format!("{name} ");
+    let labeled = format!("{name}{{");
+    body.lines()
+        .find(|l| !l.starts_with('#') && (l.starts_with(&plain) || l.starts_with(&labeled)))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+}
+
+#[test]
+fn protocol_metrics_and_trace_roundtrip() {
+    for req in [
+        Request::Metrics,
+        Request::Trace(TraceCmd::On),
+        Request::Trace(TraceCmd::Off),
+        Request::Trace(TraceCmd::Dump(25)),
+    ] {
+        assert_eq!(Request::parse(&req.encode()).unwrap(), req, "{req:?}");
+    }
+    for bad in ["TRACE", "TRACE nope", "TRACE dump", "TRACE dump x", "TRACE on 1", "METRICS 1"] {
+        assert!(Request::parse(bad).is_err(), "{bad:?} should fail");
+    }
+}
+
+#[test]
+fn queue_wait_histogram_cohorts() {
+    let q = BoundedQueue::new(8);
+    // Items pushed before attachment have no cohort stamp and must not
+    // wedge or panic the pop-side accounting.
+    q.push(1);
+    q.push(2);
+    let hist = Arc::new(crate::metrics::Histogram::new());
+    q.set_wait_histogram(Arc::clone(&hist));
+    q.push(3);
+    std::thread::sleep(Duration::from_millis(5));
+    assert_eq!(q.pop_batch(100).len(), 3);
+    let s = hist.snapshot();
+    assert_eq!(s.count, 1, "one sample per batch pop");
+    assert!(s.min >= 2_000_000, "queue wait {}ns should cover the sleep", s.min);
+    // A second cycle records a second sample.
+    q.push(4);
+    assert_eq!(q.pop(), Some(4));
+    assert_eq!(hist.snapshot().count, 2);
+}
+
+/// The tentpole end-to-end: a durable engine serves `METRICS` over the
+/// wire covering query/ingest/WAL/checkpoint/health/arena/RCU families
+/// with per-shard labels, the body is structurally valid Prometheus text
+/// exposition, the HTTP sidecar serves the same thing on GET /metrics,
+/// and SAVE/STATS grew their new fields.
+#[test]
+fn tcp_metrics_exposition_and_sidecar() {
+    let dir = crate::testutil::TempDir::new("coord-metrics");
+    let cfg = ServerConfig {
+        shards: 2,
+        queue_capacity: 1024,
+        persist: crate::config::PersistSection {
+            data_dir: dir.path().to_string_lossy().into_owned(),
+            fsync: "never".into(),
+            checkpoint_interval_ms: 0,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (engine, _) = crate::persist::open_engine(&cfg, 2).unwrap();
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let mut client = Client::connect(addr).unwrap();
+
+    let pairs: Vec<(u64, u64)> = (0..600u64).map(|i| (i % 13, i % 7 + 1)).collect();
+    assert_eq!(client.observe_batch(&pairs).unwrap(), 600);
+    engine.quiesce();
+    for _ in 0..5 {
+        client.topk(1, 3).unwrap();
+    }
+    let save = client.save().unwrap();
+    assert!(save.contains("elapsed_ms="), "{save}");
+
+    let body = client.metrics().unwrap();
+    // Family coverage: query, ingest, WAL, checkpoint, health, arena, RCU,
+    // and the per-shard labeled gauges.
+    for family in [
+        "mcprioq_queries_total",
+        "mcprioq_updates_applied_total",
+        "mcprioq_query_ns",
+        "mcprioq_queue_wait_ns",
+        "mcprioq_batch_apply_ns",
+        "mcprioq_wal_append_ns",
+        "mcprioq_queue_depth{shard=\"0\"}",
+        "mcprioq_nodes{shard=\"1\"}",
+        "mcprioq_arena_occupancy_bytes{shard=\"0\"}",
+        "mcprioq_snap_hits_total{shard=\"0\"}",
+        "mcprioq_health_state{state=\"healthy\"} 1",
+        "mcprioq_health_state{state=\"degraded\"} 0",
+        "mcprioq_update_rate",
+        "mcprioq_rcu_pending",
+        "mcprioq_rcu_grace_age_seconds",
+        "mcprioq_arena_nodes_live",
+        "mcprioq_wal_bytes",
+        "mcprioq_wal_appends_total",
+        "mcprioq_wal_fsyncs_total",
+        "mcprioq_checkpoint_generation",
+        "mcprioq_checkpoint_age_seconds",
+        "mcprioq_query_ns{quantile=\"0.99\"}",
+    ] {
+        assert!(body.contains(family), "missing {family} in:\n{body}");
+    }
+    assert_eq!(metric_value(&body, "mcprioq_queries_total"), Some(5.0), "{body}");
+    assert!(metric_value(&body, "mcprioq_updates_applied_total").unwrap() >= 600.0);
+    assert!(metric_value(&body, "mcprioq_wal_appends_total").unwrap() > 0.0);
+    assert!(metric_value(&body, "mcprioq_queue_wait_ns_count").unwrap() > 0.0);
+    assert!(metric_value(&body, "mcprioq_checkpoint_generation").unwrap() >= 1.0);
+    // Text-format conformance: every line is a HELP/TYPE comment or
+    // `name[{labels}] value` with a numeric value.
+    for line in body.lines() {
+        if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        assert!(!name.is_empty(), "bad line {line:?}");
+        assert!(value.parse::<f64>().is_ok(), "non-numeric value in {line:?}");
+        if let Some(open) = line.find('{') {
+            assert!(line[open..].contains('}'), "unclosed labels in {line:?}");
+        }
+    }
+
+    // STATS grew the full query-latency snapshot.
+    let stats = client.stats().unwrap();
+    for key in ["q_p90_ns=", "q_p999_ns=", "q_min_ns=", "q_max_ns=", "q_mean_ns="] {
+        assert!(stats.contains(key), "{stats}");
+    }
+
+    // The HTTP sidecar serves the same exposition.
+    let sidecar = MetricsSidecar::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let maddr = sidecar.local_addr();
+    let _mh = sidecar.spawn();
+    use std::io::{Read as _, Write as _};
+    let mut s = std::net::TcpStream::connect(maddr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+    let mut http = String::new();
+    s.read_to_string(&mut http).unwrap();
+    assert!(http.starts_with("HTTP/1.1 200 OK"), "{http}");
+    assert!(http.contains("text/plain; version=0.0.4"), "{http}");
+    assert!(http.contains("mcprioq_queries_total"), "{http}");
+    let mut s = std::net::TcpStream::connect(maddr).unwrap();
+    s.write_all(b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
+    let mut http = String::new();
+    s.read_to_string(&mut http).unwrap();
+    assert!(http.starts_with("HTTP/1.1 404"), "{http}");
+
+    engine.shutdown();
+}
+
+/// Registry reads (renders) race live registration and recording: render
+/// repeatedly while ingest and query traffic runs, then check the final
+/// counters agree with the engine's own accounting.
+#[test]
+fn engine_registry_concurrent_with_traffic() {
+    let engine = Engine::new(&test_config(), 2);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writer = {
+        let engine = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            let pairs: Vec<(u64, u64)> = (0..100u64).map(|i| (i % 11, i % 5)).collect();
+            for _ in 0..200 {
+                engine.observe_batch(&pairs);
+            }
+        })
+    };
+    let reader = {
+        let engine = Arc::clone(&engine);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut n = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                engine.infer_topk(3, 4);
+                n += 1;
+            }
+            n
+        })
+    };
+    let mut out = String::new();
+    for _ in 0..100 {
+        out.clear();
+        engine.render_metrics(&mut out);
+        assert!(out.contains("mcprioq_queries_total"), "{out}");
+        assert!(out.ends_with('\n'), "render must end each sample line");
+    }
+    writer.join().unwrap();
+    stop.store(true, Ordering::Relaxed);
+    let queries = reader.join().unwrap();
+    engine.quiesce();
+    out.clear();
+    engine.render_metrics(&mut out);
+    assert_eq!(
+        metric_value(&out, "mcprioq_updates_applied_total"),
+        Some(20_000.0),
+        "{out}"
+    );
+    assert!(metric_value(&out, "mcprioq_queries_total").unwrap() >= queries as f64);
+    engine.shutdown();
+}
+
+/// Slow-query capture over TCP: with the threshold armed, a wire TOPK
+/// lands in the flight recorder with its parse/infer/format stage split,
+/// and `TRACE dump` returns it.
+#[test]
+fn tcp_trace_slow_query_capture() {
+    use crate::metrics::trace;
+    let _guard = trace::test_lock();
+    trace::reset();
+
+    let engine = Engine::new(&test_config(), 1);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let mut client = Client::connect(addr).unwrap();
+
+    for _ in 0..3 {
+        client.observe(1, 2).unwrap();
+    }
+    engine.quiesce();
+
+    // Disarmed: queries leave no spans.
+    client.topk(1, 2).unwrap();
+    assert!(trace::dump(10).is_empty());
+
+    // The armed threshold is process-global, so wire queries from tests
+    // running in parallel also land in the shared slow log and can crowd
+    // a single dump. Re-issue the query until our span shows in the
+    // newest records — its window (query → dump on one connection) is
+    // tiny, so one pass is the norm.
+    let find_record = |dump: &str, verb: &str| -> Option<String> {
+        dump.split(" | ").find(|seg| seg.contains(&format!("verb={verb}"))).map(str::to_string)
+    };
+
+    // 1 µs threshold: every wire query is "slow" — worst case for the
+    // capture path, deterministic for the test.
+    trace::set_slow_query_us(1);
+    let mut topk_rec = None;
+    for _ in 0..50 {
+        client.topk(1, 2).unwrap();
+        let dump = client.trace_dump(16).unwrap();
+        assert!(dump.starts_with("n="), "{dump}");
+        topk_rec = find_record(&dump, "TOPK");
+        if topk_rec.is_some() {
+            break;
+        }
+    }
+    let rec = topk_rec.expect("slow TOPK span never surfaced in TRACE dump");
+    assert!(rec.contains("slow=1"), "{rec}");
+    assert!(rec.contains("src=1"), "{rec}");
+    for stage in ["parse:", "infer:", "format:"] {
+        assert!(rec.contains(stage), "missing {stage} in {rec}");
+    }
+
+    // TRACE on/off round-trips over the wire; MTOPK spans carry the
+    // combined stage.
+    assert_eq!(
+        client.request(&Request::Trace(TraceCmd::On)).unwrap(),
+        Response::Ok("trace=on".into())
+    );
+    let mut mtopk_rec = None;
+    for _ in 0..50 {
+        client.topk_batch(&[1, 9], 2).unwrap();
+        mtopk_rec = find_record(&client.trace_dump(16).unwrap(), "MTOPK");
+        if mtopk_rec.is_some() {
+            break;
+        }
+    }
+    let rec = mtopk_rec.expect("traced MTOPK span never surfaced in TRACE dump");
+    assert!(rec.contains("infer+format:"), "{rec}");
+    assert_eq!(
+        client.request(&Request::Trace(TraceCmd::Off)).unwrap(),
+        Response::Ok("trace=off".into())
+    );
+
+    trace::reset();
+    engine.shutdown();
+}
+
 #[test]
 fn tcp_concurrent_clients() {
     let engine = Engine::new(&test_config(), 2);

@@ -6,7 +6,9 @@ use std::time::Duration;
 
 use mcprioq::cli::{App, Command, Matches, Opt};
 use mcprioq::config::ServerConfig;
-use mcprioq::coordinator::{Client, DecayScheduler, Engine, RepairScheduler, Request, Server};
+use mcprioq::coordinator::{
+    Client, DecayScheduler, Engine, MetricsSidecar, RepairScheduler, Request, Server,
+};
 
 fn app() -> App {
     App {
@@ -42,6 +44,18 @@ fn app() -> App {
                         name: "fault-plan",
                         help: "inject storage faults (chaos testing only), e.g. \
                                'seed=1;fail_fsync_every=3;enospc_after=65536'",
+                        default: Some(""),
+                    },
+                    Opt {
+                        name: "metrics-addr",
+                        help: "Prometheus exposition sidecar bind address \
+                               (overrides config; empty = off)",
+                        default: Some(""),
+                    },
+                    Opt {
+                        name: "slow-query-us",
+                        help: "slow-query capture threshold in microseconds \
+                               (overrides config; 0 = off)",
                         default: Some(""),
                     },
                 ],
@@ -165,7 +179,22 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
             eprintln!("[persist] FAULT INJECTION ACTIVE: {plan}");
         }
     }
+    if let Some(addr) = m.get("metrics-addr") {
+        if !addr.is_empty() {
+            config.metrics_addr = addr.to_string();
+        }
+    }
+    if let Some(us) = m.get("slow-query-us") {
+        if !us.is_empty() {
+            config.slow_query_us =
+                us.parse().map_err(|e| anyhow::anyhow!("bad --slow-query-us: {e}"))?;
+        }
+    }
     let workers = m.get_u64("workers").map_err(|e| anyhow::anyhow!(e))?.unwrap_or(2) as usize;
+
+    // Slow-query flight recorder ([server] slow_query_us, 0 = off): a
+    // process-global knob, armed before either serving mode starts.
+    mcprioq::metrics::trace::set_slow_query_us(config.slow_query_us);
 
     // Follower mode: bootstrap from the leader, serve reads, track lag.
     if let Some(leader) = m.get("follow").filter(|s| !s.is_empty()) {
@@ -230,6 +259,15 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
         }
     );
     let handle = server.spawn();
+    // Prometheus sidecar ([server] metrics_addr, empty = off): scrape
+    // GET /metrics without a line-protocol client.
+    let _metrics = if config.metrics_addr.is_empty() {
+        None
+    } else {
+        let sidecar = MetricsSidecar::bind(Arc::clone(&engine), &config.metrics_addr)?;
+        println!("metrics exposition on http://{}/metrics", sidecar.local_addr());
+        Some(sidecar.spawn())
+    };
 
     // Periodic stats until ^C.
     loop {
@@ -295,6 +333,15 @@ fn serve_follower(
         }
     );
     let _handle = server.spawn();
+    // Same sidecar as the leader: follower scrapes additionally expose the
+    // mcprioq_repl_* lag/link family registered by start_follower.
+    let _metrics = if config.metrics_addr.is_empty() {
+        None
+    } else {
+        let sidecar = MetricsSidecar::bind(Arc::clone(&engine), &config.metrics_addr)?;
+        println!("metrics exposition on http://{}/metrics", sidecar.local_addr());
+        Some(sidecar.spawn())
+    };
 
     let mut decay: Option<DecayScheduler> = None;
     let mut repair: Option<RepairScheduler> = None;
@@ -352,7 +399,14 @@ fn client(m: &Matches) -> anyhow::Result<()> {
     let line = m.positional(0).ok_or_else(|| anyhow::anyhow!("missing request argument"))?;
     let req = Request::parse(line).map_err(|e| anyhow::anyhow!(e))?;
     let mut client = Client::connect(addr)?;
-    println!("{}", client.request(&req)?);
+    if matches!(req, Request::Metrics) {
+        // The protocol's one multi-line response: print the exposition
+        // body with its terminating sentinel intact.
+        print!("{}", client.metrics()?);
+        println!("# EOF");
+    } else {
+        println!("{}", client.request(&req)?);
+    }
     Ok(())
 }
 
@@ -398,8 +452,10 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
     let path = if queued { "engine-queued" } else { "chain-direct" };
     println!("mcprioq bench: {path}, {threads} threads, {}ms/point", duration.as_millis());
     let mut update_json = JsonArtifact::new("update_batch_sweep");
-    let mut table =
-        Table::new("cli_batch_sweep", &["path", "threads", "batch", "updates_per_s", "vs_first"]);
+    let mut table = Table::new(
+        "cli_batch_sweep",
+        &["path", "threads", "batch", "updates_per_s", "vs_first", "apply_p50_ns", "apply_p99_ns"],
+    );
     let mut base = 0.0;
     for (point, &batch) in batches.iter().enumerate() {
         let chain = Arc::new(McPrioQ::new(ChainConfig::default()));
@@ -456,18 +512,31 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
         }
         let vs_first =
             if base > 0.0 { format!("{:.2}", rate / base) } else { "-".to_string() };
+        // Batch-apply latency straight from the engine's registry (the
+        // same histogram METRICS exposes); the direct path never touches
+        // the engine pipeline, so its columns stay empty.
+        let apply = queued.then(|| {
+            engine
+                .telemetry()
+                .histogram("mcprioq_batch_apply_ns", "Batch apply duration (ns).", &[])
+                .snapshot()
+        });
         table.row(&[
             path.to_string(),
             threads.to_string(),
             batch.to_string(),
             format!("{rate:.0}"),
             vs_first,
+            apply.map_or_else(|| "-".to_string(), |s| s.p50.to_string()),
+            apply.map_or_else(|| "-".to_string(), |s| s.p99.to_string()),
         ]);
         update_json.row(&[
             ("path", JsonVal::Str(path.to_string())),
             ("threads", JsonVal::Int(threads as u64)),
             ("batch", JsonVal::Int(batch as u64)),
             ("updates_per_s", JsonVal::Num(rate)),
+            ("apply_p50_ns", JsonVal::Num(apply.map_or(f64::NAN, |s| s.p50 as f64))),
+            ("apply_p99_ns", JsonVal::Num(apply.map_or(f64::NAN, |s| s.p99 as f64))),
         ]);
         println!("  batch {batch:>5}: {}", fmt_rate(rate));
         engine.shutdown();
@@ -488,7 +557,17 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
     let mut read_json = JsonArtifact::new("read_topk_sweep");
     let mut read_table = Table::new(
         "cli_read_sweep",
-        &["mode", "threads", "topk_per_s", "vs_list_walk", "ipc", "llc_pki", "br_pki"],
+        &[
+            "mode",
+            "threads",
+            "topk_per_s",
+            "vs_list_walk",
+            "p50_ns",
+            "p99_ns",
+            "ipc",
+            "llc_pki",
+            "br_pki",
+        ],
     );
     // Shared fixture (bench_harness::hot_node_chain, same as bench e9): a
     // single hot src node with `read_fanout` Zipf-weighted edges.
@@ -506,6 +585,8 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
             row.threads.to_string(),
             format!("{:.0}", row.topk_per_s),
             format!("{:.2}", row.vs_list_walk),
+            row.lat.p50.to_string(),
+            row.lat.p99.to_string(),
             fmt_opt(row.perf.ipc()),
             fmt_opt(row.perf.llc_per_kinst()),
             fmt_opt(row.perf.branch_miss_per_kinst()),
@@ -516,6 +597,8 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
             ("fanout", JsonVal::Int(read_fanout)),
             ("topk_per_s", JsonVal::Num(row.topk_per_s)),
             ("vs_list_walk", JsonVal::Num(row.vs_list_walk)),
+            ("p50_ns", JsonVal::Int(row.lat.p50)),
+            ("p99_ns", JsonVal::Int(row.lat.p99)),
             ("ipc", json_opt(row.perf.ipc())),
             ("llc_miss_per_kinst", json_opt(row.perf.llc_per_kinst())),
             ("branch_miss_per_kinst", json_opt(row.perf.branch_miss_per_kinst())),
@@ -576,6 +659,40 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
     layout_table.finish();
     let p = read_json.finish(&json_dir.join("BENCH_read.json"))?;
     println!("wrote {}", p.display());
+
+    // ---- telemetry-overhead gate: armed tracing must cost < 3% reads ----
+    {
+        use mcprioq::bench_harness::telemetry_overhead_probe;
+        let probe_threads = read_threads.iter().copied().max().unwrap_or(2).min(4);
+        println!(
+            "mcprioq bench: telemetry overhead, {probe_threads} wire clients, {}ms/window",
+            duration.as_millis()
+        );
+        let probe =
+            telemetry_overhead_probe(&bench, duration, probe_threads, read_fanout as usize)
+                .map_err(|e| anyhow::anyhow!(e))?;
+        let mut tel_json = JsonArtifact::new("telemetry_overhead");
+        tel_json.row(&[
+            ("threads", JsonVal::Int(probe_threads as u64)),
+            ("reads_per_s_off", JsonVal::Num(probe.reads_per_s_off)),
+            ("reads_per_s_on", JsonVal::Num(probe.reads_per_s_on)),
+            ("overhead_frac", JsonVal::Num(probe.overhead_frac)),
+        ]);
+        println!(
+            "  disarmed {} | armed {} | overhead {:.2}%",
+            fmt_rate(probe.reads_per_s_off),
+            fmt_rate(probe.reads_per_s_on),
+            100.0 * probe.overhead_frac
+        );
+        let p = tel_json.finish(&json_dir.join("BENCH_telemetry.json"))?;
+        println!("wrote {}", p.display());
+        if probe.overhead_frac > 0.03 {
+            anyhow::bail!(
+                "telemetry overhead gate: armed tracing costs {:.2}% read throughput (> 3%)",
+                100.0 * probe.overhead_frac
+            );
+        }
+    }
 
     // ---- durability sweep: WAL off vs fsync policies + recovery ----
     if m.flag("durability") {

@@ -18,7 +18,7 @@ pub struct Histogram {
 }
 
 /// Point-in-time summary of a histogram.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Snapshot {
     pub count: u64,
     pub sum: u64,
@@ -63,15 +63,31 @@ impl Histogram {
         (exp << SUB_BITS) as usize + sub
     }
 
-    /// Representative (upper-bound) value of a bucket.
+    /// Representative (upper-bound) value of a bucket. Total over every
+    /// index: monotonic non-decreasing and panic-free across the full
+    /// range, including the top exponents (the old `(sub+1) << exp >>
+    /// SUB_BITS` overflowed the up-shift for `exp > 63 - SUB_BITS`,
+    /// wrapping p999 of histograms holding values near `u64::MAX`).
     fn bucket_value(idx: usize) -> u64 {
-        let exp = idx >> SUB_BITS;
-        let sub = idx & (SUB - 1);
-        if exp < 1 {
+        if idx < SUB {
+            // Values below 2^SUB_BITS map 1:1 in `index`.
             return idx as u64;
         }
+        let exp = idx >> SUB_BITS;
+        let sub = (idx & (SUB - 1)) as u64;
+        if exp < SUB_BITS as usize {
+            // Dead zone: `index` never produces these slots (small values
+            // take the 1:1 branch above; values >= SUB land at exp >=
+            // SUB_BITS). Clamp to the 1:1 region's ceiling so a sweep
+            // over all indices stays monotonic.
+            return (SUB - 1) as u64;
+        }
+        // exp <= 63 because idx < BUCKETS = 64 * SUB. Shifting the sub
+        // offset by `exp - SUB_BITS` directly (instead of up by `exp`
+        // then down by SUB_BITS) keeps every intermediate in range:
+        // (sub+1) <= 2^SUB_BITS, so the shift tops out at 2^63.
         let base = 1u64 << exp;
-        base + ((sub as u64 + 1) << exp >> SUB_BITS).saturating_sub(1)
+        base.saturating_add(((sub + 1) << (exp - SUB_BITS as usize)) - 1)
     }
 
     #[inline]
@@ -224,5 +240,40 @@ mod tests {
         h.record(u64::MAX);
         h.record(u64::MAX / 2);
         assert_eq!(h.snapshot().max, u64::MAX);
+    }
+
+    #[test]
+    fn bucket_values_monotonic_and_panic_free_over_every_index() {
+        let mut prev = 0u64;
+        for idx in 0..BUCKETS {
+            let v = Histogram::bucket_value(idx);
+            assert!(
+                v >= prev,
+                "bucket_value({idx}) = {v} < bucket_value({}) = {prev}",
+                idx.saturating_sub(1)
+            );
+            prev = v;
+        }
+        // The top bucket's representative is the saturated ceiling — the
+        // old shift-then-correct order wrapped here instead.
+        assert_eq!(Histogram::bucket_value(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn bucket_value_is_an_upper_bound_of_its_bucket() {
+        // The representative of a value's bucket must never undershoot
+        // the value (that is what makes `percentile` an upper estimate).
+        // Sweep powers of two +-1 across the whole u64 range, including
+        // the exponents where the old formula overflowed.
+        for e in 0..64u32 {
+            for v in [1u64 << e, (1u64 << e).saturating_add(1), (1u64 << e).saturating_sub(1)] {
+                if v == 0 {
+                    continue;
+                }
+                let rep = Histogram::bucket_value(Histogram::index(v));
+                assert!(rep >= v, "bucket_value(index({v})) = {rep} < {v}");
+            }
+        }
+        assert!(Histogram::bucket_value(Histogram::index(u64::MAX)) >= u64::MAX / 2);
     }
 }

@@ -1,0 +1,448 @@
+//! Named metric registry + Prometheus text exposition (DESIGN.md §9).
+//!
+//! One [`Registry`] per engine holds every named family the process
+//! exports: counters, gauges, and latency histograms (exposed as
+//! Prometheus *summaries* — quantiles + sum + count — because the
+//! log-bucketed [`Histogram`] already computes percentiles and shipping
+//! 2048 raw buckets per family would swamp the scrape).
+//!
+//! Concurrency model: **registration and exposition are cold** (a mutex
+//! over the family list), **recording is hot and lock-free** — `counter`/
+//! `gauge`/`histogram` return the `Arc` of the underlying atomic metric,
+//! which the owning subsystem stores in a field and hits directly; the
+//! registry holds a clone of the same `Arc` purely for rendering. Derived
+//! values (queue depths, arena occupancy, RCU backlog, health rung) are
+//! registered as *sampled closures* evaluated only at exposition time, so
+//! they cost nothing between scrapes. Closures that need the engine hold
+//! a `Weak` (the engine owns the registry — a strong capture would leak
+//! the whole process).
+//!
+//! Exposition grammar (Prometheus text format 0.0.4): per family one
+//! `# HELP` + `# TYPE` line, then one sample line per labeled series.
+//! Label values escape `\`, `"`, and newline. Families render in
+//! registration order — deterministic output, stable diffs.
+
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use super::{Counter, Gauge, Histogram, Snapshot};
+
+type U64Fn = Box<dyn Fn() -> u64 + Send + Sync>;
+type F64Fn = Box<dyn Fn() -> f64 + Send + Sync>;
+type SnapFn = Box<dyn Fn() -> Snapshot + Send + Sync>;
+
+/// Prometheus metric family type (the `# TYPE` line).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Summary,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Summary => "summary",
+        }
+    }
+}
+
+/// How one labeled series produces its sample(s) at exposition time.
+enum Value {
+    Counter(Arc<Counter>),
+    CounterFn(U64Fn),
+    Gauge(Arc<Gauge>),
+    GaugeFn(F64Fn),
+    /// Rendered as a summary: quantile series + `_sum` + `_count`.
+    Histogram(Arc<Histogram>),
+    /// A summary sampled from a closure (histograms owned elsewhere,
+    /// e.g. the per-shard snapshot-rebuild timers inside the chain).
+    SummaryFn(SnapFn),
+}
+
+/// One labeled series inside a family. `labels` is the pre-rendered inner
+/// label block (`shard="3"`) — built once at registration so exposition
+/// does no per-scrape label formatting.
+struct Series {
+    labels: String,
+    value: Value,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    series: Vec<Series>,
+}
+
+/// Process/engine-wide named metric registry. See the module docs for the
+/// concurrency model. Cheap to share (`Arc<Registry>`).
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+/// Escape a label value per the Prometheus text format: `\` → `\\`,
+/// `"` → `\"`, newline → `\n`.
+pub fn escape_label_value(out: &mut String, value: &str) {
+    for c in value.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    let mut out = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        escape_label_value(&mut out, v);
+        out.push('"');
+    }
+    out
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.bytes().enumerate().all(|(i, b)| {
+            b.is_ascii_alphabetic() || b == b'_' || b == b':' || (i > 0 && b.is_ascii_digit())
+        })
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Non-poisoning lock (same discipline as the queues): a panic while
+    /// rendering must not wedge every later scrape.
+    fn locked(&self) -> MutexGuard<'_, Vec<Family>> {
+        self.families.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Find-or-create the family, then hand the (existing or new) series
+    /// slot to `reuse`/`fresh`. Returns whatever the callback produces.
+    fn series<R>(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        reuse: impl FnOnce(&mut Value) -> Option<R>,
+        fresh: impl FnOnce() -> (Value, R),
+    ) -> R {
+        debug_assert!(valid_name(name), "bad metric name {name:?}");
+        let rendered = render_labels(labels);
+        let mut families = self.locked();
+        let fam = match families.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert!(
+                    f.kind == kind,
+                    "metric {name:?} registered as {} and {}",
+                    f.kind.as_str(),
+                    kind.as_str()
+                );
+                f
+            }
+            None => {
+                families.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    series: Vec::new(),
+                });
+                families.last_mut().expect("just pushed")
+            }
+        };
+        if let Some(s) = fam.series.iter_mut().find(|s| s.labels == rendered) {
+            if let Some(r) = reuse(&mut s.value) {
+                return r;
+            }
+            // Same (name, labels) re-registered with a different value
+            // shape: the latest registration wins (restarted subsystems
+            // re-register their closures).
+            let (value, r) = fresh();
+            s.value = value;
+            return r;
+        }
+        let (value, r) = fresh();
+        fam.series.push(Series { labels: rendered, value });
+        r
+    }
+
+    /// Get-or-register a counter series. Recording goes through the
+    /// returned `Arc` — lock-free, no registry involvement.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        self.series(
+            name,
+            help,
+            Kind::Counter,
+            labels,
+            |v| match v {
+                Value::Counter(c) => Some(Arc::clone(c)),
+                _ => None,
+            },
+            || {
+                let c = Arc::new(Counter::new());
+                (Value::Counter(Arc::clone(&c)), c)
+            },
+        )
+    }
+
+    /// Get-or-register a gauge series (set/get through the returned `Arc`).
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        self.series(
+            name,
+            help,
+            Kind::Gauge,
+            labels,
+            |v| match v {
+                Value::Gauge(g) => Some(Arc::clone(g)),
+                _ => None,
+            },
+            || {
+                let g = Arc::new(Gauge::new());
+                (Value::Gauge(Arc::clone(&g)), g)
+            },
+        )
+    }
+
+    /// Get-or-register a latency histogram series, exposed as a summary.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        self.series(
+            name,
+            help,
+            Kind::Summary,
+            labels,
+            |v| match v {
+                Value::Histogram(h) => Some(Arc::clone(h)),
+                _ => None,
+            },
+            || {
+                let h = Arc::new(Histogram::new());
+                (Value::Histogram(Arc::clone(&h)), h)
+            },
+        )
+    }
+
+    /// Register a sampled counter: `f` is evaluated at exposition time.
+    /// For monotonic totals owned elsewhere (striped counters, WAL state).
+    pub fn counter_fn(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.series(name, help, Kind::Counter, labels, |_| None, || {
+            (Value::CounterFn(Box::new(f)), ())
+        })
+    }
+
+    /// Register a sampled gauge (queue depth, occupancy, rung, ages…).
+    pub fn gauge_fn(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        self.series(name, help, Kind::Gauge, labels, |_| None, || (Value::GaugeFn(Box::new(f)), ()))
+    }
+
+    /// Register a sampled summary (a histogram snapshot owned elsewhere).
+    pub fn summary_fn(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        f: impl Fn() -> Snapshot + Send + Sync + 'static,
+    ) {
+        self.series(name, help, Kind::Summary, labels, |_| None, || {
+            (Value::SummaryFn(Box::new(f)), ())
+        })
+    }
+
+    /// Render the whole registry in Prometheus text format into `out`
+    /// (appended; caller clears). Families in registration order.
+    pub fn render_into(&self, out: &mut String) {
+        fn sample(out: &mut String, name: &str, labels: &str, extra: Option<(&str, &str)>) {
+            out.push_str(name);
+            let has_extra = extra.is_some();
+            if !labels.is_empty() || has_extra {
+                out.push('{');
+                out.push_str(labels);
+                if let Some((k, v)) = extra {
+                    if !labels.is_empty() {
+                        out.push(',');
+                    }
+                    out.push_str(k);
+                    out.push_str("=\"");
+                    out.push_str(v);
+                    out.push('"');
+                }
+                out.push('}');
+            }
+            out.push(' ');
+        }
+        fn summary(out: &mut String, name: &str, labels: &str, s: Snapshot) {
+            for (q, v) in
+                [("0.5", s.p50), ("0.9", s.p90), ("0.99", s.p99), ("0.999", s.p999)]
+            {
+                sample(out, name, labels, Some(("quantile", q)));
+                let _ = writeln!(out, "{v}");
+            }
+            sample(out, &format!("{name}_sum"), labels, None);
+            let _ = writeln!(out, "{}", s.sum);
+            sample(out, &format!("{name}_count"), labels, None);
+            let _ = writeln!(out, "{}", s.count);
+        }
+        let families = self.locked();
+        for fam in families.iter() {
+            let _ = writeln!(out, "# HELP {} {}", fam.name, fam.help);
+            let _ = writeln!(out, "# TYPE {} {}", fam.name, fam.kind.as_str());
+            for s in &fam.series {
+                match &s.value {
+                    Value::Counter(c) => {
+                        sample(out, &fam.name, &s.labels, None);
+                        let _ = writeln!(out, "{}", c.get());
+                    }
+                    Value::CounterFn(f) => {
+                        sample(out, &fam.name, &s.labels, None);
+                        let _ = writeln!(out, "{}", f());
+                    }
+                    Value::Gauge(g) => {
+                        sample(out, &fam.name, &s.labels, None);
+                        let _ = writeln!(out, "{}", g.get());
+                    }
+                    Value::GaugeFn(f) => {
+                        sample(out, &fam.name, &s.labels, None);
+                        let v = f();
+                        let _ = writeln!(out, "{v}");
+                    }
+                    Value::Histogram(h) => summary(out, &fam.name, &s.labels, h.snapshot()),
+                    Value::SummaryFn(f) => summary(out, &fam.name, &s.labels, f()),
+                }
+            }
+        }
+    }
+
+    /// Convenience for tests / the wire verb: render to a fresh string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_get_or_register_returns_same_atomic() {
+        let r = Registry::new();
+        let a = r.counter("test_total", "help", &[("shard", "0")]);
+        let b = r.counter("test_total", "help", &[("shard", "0")]);
+        a.add(3);
+        assert_eq!(b.get(), 3, "same (name, labels) must share the atomic");
+        let c = r.counter("test_total", "help", &[("shard", "1")]);
+        c.inc();
+        assert_eq!(c.get(), 1);
+        assert_eq!(a.get(), 3, "different labels are distinct series");
+    }
+
+    #[test]
+    fn exposition_format_conformance() {
+        let r = Registry::new();
+        r.counter("mc_requests_total", "Requests served.", &[("shard", "0")]).add(7);
+        r.gauge("mc_depth", "Queue depth.", &[]).set(42);
+        r.gauge_fn("mc_rate", "Sampled.", &[("stage", "q\"w\\x\ny")], || 1.5);
+        let h = r.histogram("mc_lat_ns", "Latency.", &[]);
+        h.record(1000);
+        let text = r.render();
+        // One HELP + TYPE pair per family, in registration order.
+        assert!(text.contains("# HELP mc_requests_total Requests served.\n"));
+        assert!(text.contains("# TYPE mc_requests_total counter\n"));
+        assert!(text.contains("mc_requests_total{shard=\"0\"} 7\n"));
+        assert!(text.contains("# TYPE mc_depth gauge\n"));
+        assert!(text.contains("mc_depth 42\n"));
+        // Label escaping: backslash, quote, newline.
+        assert!(
+            text.contains("mc_rate{stage=\"q\\\"w\\\\x\\ny\"} 1.5\n"),
+            "escaped label missing in:\n{text}"
+        );
+        // Histograms render as summaries: quantiles + _sum + _count.
+        assert!(text.contains("# TYPE mc_lat_ns summary\n"));
+        assert!(text.contains("mc_lat_ns{quantile=\"0.5\"} "));
+        assert!(text.contains("mc_lat_ns{quantile=\"0.999\"} "));
+        assert!(text.contains("mc_lat_ns_sum 1000\n"));
+        assert!(text.contains("mc_lat_ns_count 1\n"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (head, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(!head.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_conflict_panics() {
+        let r = Registry::new();
+        let _ = r.counter("mc_thing", "h", &[]);
+        let _ = r.gauge("mc_thing", "h", &[]);
+    }
+
+    #[test]
+    fn concurrent_register_record_render() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let r = Arc::new(Registry::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200 {
+                    let shard = format!("{}", (t * 7 + i) % 5);
+                    let c = r.counter("mc_conc_total", "h", &[("shard", &shard)]);
+                    c.inc();
+                    let h = r.histogram("mc_conc_ns", "h", &[("shard", &shard)]);
+                    h.record(i as u64 + 1);
+                }
+            }));
+        }
+        {
+            let r = Arc::clone(&r);
+            let stop2 = Arc::clone(&stop);
+            handles.push(std::thread::spawn(move || {
+                let mut buf = String::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    buf.clear();
+                    r.render_into(&mut buf);
+                }
+            }));
+        }
+        for h in handles.drain(..4) {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 4 threads x 200 increments spread over 5 shards.
+        let total: u64 = (0..5)
+            .map(|s| r.counter("mc_conc_total", "h", &[("shard", &format!("{s}"))]).get())
+            .sum();
+        assert_eq!(total, 800);
+    }
+}

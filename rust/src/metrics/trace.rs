@@ -1,0 +1,315 @@
+//! Structured query tracing: per-thread fixed-size span rings + a global
+//! slow-query log (DESIGN.md §9).
+//!
+//! A *span* is one traced request (TOPK/MTOPK/REC) broken into stages
+//! (`parse` → `infer` → `format`). Recording is allocation-free: a
+//! [`SpanRecord`] is a fixed-size `Copy` struct written into a
+//! preallocated ring slot; stage names are `&'static str`. Each thread
+//! owns a ring (registered in a global list on first use, like the RCU
+//! participant registry), so recording threads never contend with each
+//! other — only a `TRACE dump` briefly locks each ring to copy it out.
+//!
+//! Two capture conditions, independently armed:
+//!
+//! * **Tracing on** (`TRACE on` wire verb): every span lands in its
+//!   thread's ring (newest overwrite oldest).
+//! * **Slow-query log** (`[server] slow_query_us`, 0 = off): any span
+//!   whose total exceeds the threshold is *also* copied into a global
+//!   ring that survives `TRACE off` — the flight recorder for tail
+//!   latency. Slow capture works even while tracing is off.
+//!
+//! Both knobs are process-global atomics: a span costs one relaxed load
+//! when nothing is armed, and the server only constructs [`Span`]s at
+//! all when [`armed`] says so.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// Spans kept per thread ring.
+pub const RING_SPANS: usize = 256;
+/// Spans kept in the global slow-query log.
+pub const SLOW_SPANS: usize = 128;
+/// Stage slots per span (excess stage marks are dropped, not grown).
+pub const MAX_STAGES: usize = 6;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SLOW_US: AtomicU64 = AtomicU64::new(0);
+/// Global finish-order sequence so `dump` can interleave rings.
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One completed span: verb, subject, total, and per-stage nanoseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRecord {
+    /// Finish-order sequence number (process-global, monotonic).
+    pub seq: u64,
+    pub verb: &'static str,
+    /// Src node of the query (first src for MTOPK).
+    pub src: u64,
+    /// `k` for top-k verbs; threshold-in-millionths for REC; batch size
+    /// semantics are per-verb — it is a free detail slot.
+    pub k: u64,
+    pub total_ns: u64,
+    /// True if this span exceeded the slow-query threshold.
+    pub slow: bool,
+    pub nstages: usize,
+    pub stages: [(&'static str, u64); MAX_STAGES],
+}
+
+impl Default for SpanRecord {
+    fn default() -> Self {
+        SpanRecord {
+            seq: 0,
+            verb: "",
+            src: 0,
+            k: 0,
+            total_ns: 0,
+            slow: false,
+            nstages: 0,
+            stages: [("", 0); MAX_STAGES],
+        }
+    }
+}
+
+/// Fixed-capacity overwrite ring of spans.
+struct Ring {
+    slots: Vec<SpanRecord>,
+    next: usize,
+    len: usize,
+    cap: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { slots: vec![SpanRecord::default(); cap], next: 0, len: 0, cap }
+    }
+
+    fn push(&mut self, rec: SpanRecord) {
+        self.slots[self.next] = rec;
+        self.next = (self.next + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    fn copy_into(&self, out: &mut Vec<SpanRecord>) {
+        out.extend(self.slots.iter().take(self.len).copied());
+    }
+}
+
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Registry of every thread's ring. Rings are never removed (a few KB per
+/// serving thread, bounded by the thread pool); a dead thread's ring just
+/// stops receiving spans.
+fn rings() -> &'static Mutex<Vec<std::sync::Arc<Mutex<Ring>>>> {
+    static RINGS: OnceLock<Mutex<Vec<std::sync::Arc<Mutex<Ring>>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn slow_log() -> &'static Mutex<Ring> {
+    static SLOW: OnceLock<Mutex<Ring>> = OnceLock::new();
+    SLOW.get_or_init(|| Mutex::new(Ring::new(SLOW_SPANS)))
+}
+
+thread_local! {
+    static MY_RING: std::sync::Arc<Mutex<Ring>> = {
+        let ring = std::sync::Arc::new(Mutex::new(Ring::new(RING_SPANS)));
+        lock_clean(rings()).push(std::sync::Arc::clone(&ring));
+        ring
+    };
+}
+
+/// Turn span capture into per-thread rings on/off (`TRACE on|off`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Set the slow-query threshold in microseconds (0 disables the log).
+pub fn set_slow_query_us(us: u64) {
+    SLOW_US.store(us, Ordering::Relaxed);
+}
+
+pub fn slow_query_us() -> u64 {
+    SLOW_US.load(Ordering::Relaxed)
+}
+
+/// Should the caller build a [`Span`] at all? One relaxed load each.
+#[inline]
+pub fn armed() -> bool {
+    enabled() || slow_query_us() > 0
+}
+
+/// An in-flight span. Build with [`Span::start`], mark stage boundaries
+/// with [`Span::stage`], commit with [`Span::finish`]. Stack-only.
+pub struct Span {
+    rec: SpanRecord,
+    start: Instant,
+    mark: Instant,
+}
+
+impl Span {
+    pub fn start(verb: &'static str, src: u64, k: u64) -> Span {
+        Self::start_at(verb, src, k, Instant::now())
+    }
+
+    /// Start a span back-dated to `started` — for callers that measured a
+    /// leading stage (request parsing) before they knew the verb and so
+    /// could not construct the span yet.
+    pub fn start_at(verb: &'static str, src: u64, k: u64, started: Instant) -> Span {
+        Span {
+            rec: SpanRecord { verb, src, k, ..SpanRecord::default() },
+            start: started,
+            mark: started,
+        }
+    }
+
+    /// Close the current stage: everything since the previous mark (or
+    /// the span start) is attributed to `name`.
+    pub fn stage(&mut self, name: &'static str) {
+        let now = Instant::now();
+        if self.rec.nstages < MAX_STAGES {
+            self.rec.stages[self.rec.nstages] =
+                (name, now.duration_since(self.mark).as_nanos() as u64);
+            self.rec.nstages += 1;
+        }
+        self.mark = now;
+    }
+
+    /// Commit the span: into this thread's ring when tracing is on, and
+    /// into the slow log when it beat the threshold.
+    pub fn finish(mut self) {
+        self.rec.total_ns = self.start.elapsed().as_nanos() as u64;
+        let slow_us = slow_query_us();
+        self.rec.slow = slow_us > 0 && self.rec.total_ns >= slow_us.saturating_mul(1000);
+        if !self.rec.slow && !enabled() {
+            return;
+        }
+        self.rec.seq = SEQ.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.rec.slow {
+            lock_clean(slow_log()).push(self.rec);
+        }
+        if enabled() {
+            MY_RING.with(|r| lock_clean(r).push(self.rec));
+        }
+    }
+}
+
+/// The most recent `n` captured spans (slow log + every thread ring),
+/// newest first by finish order.
+pub fn dump(n: usize) -> Vec<SpanRecord> {
+    let mut out = Vec::new();
+    lock_clean(slow_log()).copy_into(&mut out);
+    for ring in lock_clean(rings()).iter() {
+        lock_clean(ring).copy_into(&mut out);
+    }
+    out.sort_unstable_by(|a, b| b.seq.cmp(&a.seq));
+    // A span can sit in both its thread ring and the slow log.
+    out.dedup_by_key(|r| r.seq);
+    out.truncate(n);
+    out
+}
+
+/// Serialize tests that touch the process-global capture state (the
+/// knobs, rings, and slow log are shared by every test thread).
+#[cfg(test)]
+pub(crate) fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    lock_clean(LOCK.get_or_init(|| Mutex::new(())))
+}
+
+/// Reset capture state (tests share the process-global rings).
+pub fn reset() {
+    set_enabled(false);
+    set_slow_query_us(0);
+    for ring in lock_clean(rings()).iter() {
+        let mut r = lock_clean(ring);
+        r.len = 0;
+        r.next = 0;
+    }
+    let mut s = lock_clean(slow_log());
+    s.len = 0;
+    s.next = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The rings/knobs are process-global: every assertion about capture
+    // volume lives in this one test so parallel test threads cannot race
+    // the shared state.
+    #[test]
+    fn spans_stages_slow_log_and_dump() {
+        let _guard = test_lock();
+        reset();
+        assert!(!armed());
+
+        // Tracing off + no slow threshold: finish is a no-op.
+        let s = Span::start("TOPK", 1, 8);
+        s.finish();
+        assert!(dump(10).is_empty());
+
+        // Tracing on: spans land in the thread ring with stage splits.
+        set_enabled(true);
+        let mut s = Span::start("TOPK", 7, 8);
+        s.stage("parse");
+        std::thread::sleep(std::time::Duration::from_micros(200));
+        s.stage("infer");
+        s.stage("format");
+        s.finish();
+        let spans = dump(10);
+        assert_eq!(spans.len(), 1);
+        let r = &spans[0];
+        assert_eq!(r.verb, "TOPK");
+        assert_eq!(r.src, 7);
+        assert_eq!(r.nstages, 3);
+        assert_eq!(r.stages[1].0, "infer");
+        assert!(r.stages[1].1 >= 100_000, "infer stage {}ns", r.stages[1].1);
+        assert!(r.total_ns >= r.stages.iter().take(3).map(|s| s.1).sum::<u64>());
+        assert!(!r.slow);
+
+        // Slow log captures past-threshold spans even with tracing OFF.
+        set_enabled(false);
+        set_slow_query_us(50); // 50 µs
+        let mut s = Span::start("MTOPK", 3, 4);
+        s.stage("parse");
+        std::thread::sleep(std::time::Duration::from_micros(300));
+        s.stage("infer");
+        s.finish();
+        let spans = dump(10);
+        assert_eq!(spans.len(), 2, "slow span + earlier traced span");
+        assert!(spans[0].slow, "newest span must be the slow one");
+        assert_eq!(spans[0].verb, "MTOPK");
+
+        // A fast span under the threshold with tracing off: dropped.
+        let s = Span::start("TOPK", 9, 1);
+        s.finish();
+        assert_eq!(dump(10).len(), 2);
+
+        // dump(n) truncates newest-first.
+        assert_eq!(dump(1).len(), 1);
+        assert_eq!(dump(1)[0].verb, "MTOPK");
+
+        reset();
+        assert!(dump(10).is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_at_capacity() {
+        let mut r = Ring::new(4);
+        for i in 0..10u64 {
+            r.push(SpanRecord { seq: i, ..SpanRecord::default() });
+        }
+        assert_eq!(r.len, 4);
+        let mut out = Vec::new();
+        r.copy_into(&mut out);
+        let mut seqs: Vec<u64> = out.iter().map(|s| s.seq).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+    }
+}

@@ -59,6 +59,9 @@ pub struct CheckpointSummary {
     pub bytes: u64,
     /// WAL bytes freed by truncation.
     pub wal_freed: u64,
+    /// Wall-clock duration of the whole checkpoint (pause + encode +
+    /// commit + truncate), in milliseconds.
+    pub elapsed_ms: u64,
 }
 
 /// The committed-checkpoint pointer (`checkpoint/MANIFEST`), in the same
@@ -204,6 +207,7 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
     let persist = Arc::clone(
         engine.persist_state().ok_or("persistence is not enabled (no data dir)")?,
     );
+    let t0 = std::time::Instant::now();
     let _serial = persist.serialize_checkpoints();
 
     // A degraded engine has acked batches parked outside the WAL (and its
@@ -348,6 +352,7 @@ pub fn run_checkpoint(engine: &Engine) -> Result<CheckpointSummary, String> {
         nodes: payload.len(),
         bytes: bytes.len() as u64,
         wal_freed,
+        elapsed_ms: t0.elapsed().as_millis() as u64,
     })
 }
 

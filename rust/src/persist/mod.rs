@@ -50,7 +50,7 @@ pub use recover::{open_engine, RecoveryReport};
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::metrics::Counter;
@@ -486,6 +486,79 @@ impl PersistState {
 
     pub fn wal_errors(&self) -> u64 {
         self.errors.get()
+    }
+
+    /// Successful fsyncs across all shard logs.
+    pub fn wal_fsyncs(&self) -> u64 {
+        self.wals.iter().map(|w| lock_clean(w).fsync_count()).sum()
+    }
+
+    /// Register the durability families with the engine's telemetry
+    /// registry (DESIGN.md §9) — sampled closures over this state, called
+    /// once from `Engine::attach_persist`. The closures hold a strong
+    /// `Arc<PersistState>`: the registry and the persist state share the
+    /// engine's lifetime and neither points back at it, so no cycle.
+    pub fn register_metrics(self: &Arc<PersistState>, reg: &crate::metrics::Registry) {
+        let fam: [(&str, &str, Box<dyn Fn(&PersistState) -> u64 + Send + Sync>); 7] = [
+            ("mcprioq_wal_bytes", "Live WAL bytes on disk.", Box::new(|p| p.wal_bytes())),
+            (
+                "mcprioq_wal_appends_total",
+                "WAL records appended.",
+                Box::new(|p| p.wal_appends()),
+            ),
+            (
+                "mcprioq_wal_errors_total",
+                "Failed WAL appends or fsyncs.",
+                Box::new(|p| p.wal_errors()),
+            ),
+            ("mcprioq_wal_fsyncs_total", "Successful WAL fsyncs.", Box::new(|p| p.wal_fsyncs())),
+            (
+                "mcprioq_checkpoint_generation",
+                "Last committed checkpoint generation.",
+                Box::new(|p| p.generation()),
+            ),
+            (
+                "mcprioq_delta_chain_len",
+                "Differential checkpoints on the committed chain.",
+                Box::new(|p| p.delta_chain().len as u64),
+            ),
+            (
+                "mcprioq_recovered_batches_total",
+                "Batches replayed from the WAL at startup.",
+                Box::new(|p| p.recovered_batches()),
+            ),
+        ];
+        for (name, help, f) in fam {
+            let p = Arc::clone(self);
+            // Counters and point-in-time values share the u64 shape; the
+            // monotonic ones register as counters below by name suffix.
+            if name.ends_with("_total") {
+                reg.counter_fn(name, help, &[], move || f(&p));
+            } else {
+                reg.gauge_fn(name, help, &[], move || f(&p) as f64);
+            }
+        }
+        let p = Arc::clone(self);
+        reg.gauge_fn(
+            "mcprioq_checkpoint_age_seconds",
+            "Seconds since the last committed checkpoint.",
+            &[],
+            move || p.checkpoint_age().as_secs_f64(),
+        );
+        let p = Arc::clone(self);
+        reg.gauge_fn(
+            "mcprioq_repl_followers",
+            "Live follower replication streams (retention pins).",
+            &[],
+            move || p.pin_count() as f64,
+        );
+        let p = Arc::clone(self);
+        reg.gauge_fn(
+            "mcprioq_parked_updates",
+            "Updates parked in WAL quarantines (degraded writes).",
+            &[],
+            move || p.parked_updates() as f64,
+        );
     }
 
     pub fn generation(&self) -> u64 {

@@ -68,6 +68,9 @@ pub struct ShardWal {
     frame: Vec<u8>,
     /// Bytes appended minus bytes truncated (the engine's `wal_bytes=`).
     live_bytes: u64,
+    /// Successful fsyncs (policy-driven, seal, and heal probes) — the
+    /// `mcprioq_wal_fsyncs_total` telemetry series.
+    fsyncs: u64,
     /// A policy-driven fsync failed *after* its record was framed into
     /// the segment. The append itself is not failed (the record would
     /// replay; un-acking it and retrying would write it twice), but the
@@ -103,6 +106,7 @@ impl ShardWal {
             dirty: false,
             frame: Vec::with_capacity(4096),
             live_bytes,
+            fsyncs: 0,
             sync_error: None,
         })
     }
@@ -205,10 +209,16 @@ impl ShardWal {
             if let Some(seg) = &mut self.seg {
                 seg.file.sync_data()?;
             }
+            self.fsyncs += 1;
             self.dirty = false;
             self.last_sync = Instant::now();
         }
         Ok(())
+    }
+
+    /// Successful fsyncs on this shard's log so far.
+    pub fn fsync_count(&self) -> u64 {
+        self.fsyncs
     }
 
     /// Take the deferred fsync error from the newest policy-driven sync
@@ -243,6 +253,7 @@ impl ShardWal {
             // segment stays open so the seal can be retried, instead of
             // losing track of an unsynced sealed file.
             seg.file.sync_data()?;
+            self.fsyncs += 1;
         }
         if self.seg.take().is_some() {
             self.io.sync_dir(&self.dir);

@@ -73,6 +73,29 @@ static REGISTRY: AtomicPtr<Participant> = AtomicPtr::new(std::ptr::null_mut());
 static PENDING: AtomicUsize = AtomicUsize::new(0);
 static FREED: AtomicUsize = AtomicUsize::new(0);
 static ADVANCES: AtomicU64 = AtomicU64::new(0);
+/// Nanoseconds (since the process epoch below) of the last successful
+/// epoch advance. 0 = never advanced.
+static LAST_ADVANCE_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Monotonic process epoch for the grace-age clock (Instant is not
+/// representable as an atomic, so ages are stored as offsets from here).
+fn process_epoch() -> std::time::Instant {
+    static EPOCH: std::sync::OnceLock<std::time::Instant> = std::sync::OnceLock::new();
+    *EPOCH.get_or_init(std::time::Instant::now)
+}
+
+fn now_ns() -> u64 {
+    process_epoch().elapsed().as_nanos() as u64
+}
+
+/// Age of the current grace period: nanoseconds since the global epoch
+/// last advanced (or since this was first asked, if it never has). A
+/// stalled reader shows up as this climbing while `pending` stays flat —
+/// the telemetry plane exports it as `mcprioq_rcu_grace_age_seconds`.
+pub fn grace_age_ns() -> u64 {
+    let last = LAST_ADVANCE_NS.load(Ordering::Relaxed);
+    now_ns().saturating_sub(last)
+}
 
 pub(super) fn global_epoch(order: Ordering) -> u64 {
     GLOBAL_EPOCH.load(order)
@@ -167,6 +190,7 @@ pub fn try_advance() -> bool {
         .is_ok();
     if ok {
         ADVANCES.fetch_add(1, Ordering::Relaxed);
+        LAST_ADVANCE_NS.store(now_ns(), Ordering::Relaxed);
     }
     ok
 }

@@ -30,7 +30,7 @@
 mod collector;
 mod guard;
 
-pub use collector::{collector_stats, try_advance, CollectorStats};
+pub use collector::{collector_stats, grace_age_ns, try_advance, CollectorStats};
 pub use guard::{pin, Guard};
 
 use std::sync::atomic::Ordering;

@@ -212,6 +212,9 @@ pub fn start_follower(
     if snapshot_bootstrap {
         state.set_snapshot_bootstrap();
     }
+    // Follower-link telemetry joins the engine's registry so METRICS /
+    // the HTTP sidecar expose lag and link state (DESIGN.md §9).
+    state.register_metrics(engine.telemetry());
     let stop = Arc::new(AtomicBool::new(false));
     let queues: Vec<Arc<BoundedQueue<ReplRecord>>> = (0..engine.shard_count())
         .map(|_| Arc::new(BoundedQueue::new(APPLY_QUEUE_RECORDS)))

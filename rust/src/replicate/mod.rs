@@ -235,6 +235,61 @@ impl ReplicaState {
     pub fn fault(&self) -> Option<String> {
         lock_clean(&self.fault).clone()
     }
+
+    /// Register follower-link telemetry into `reg` (DESIGN.md §9). The
+    /// closures hold a strong `Arc<ReplicaState>` — the replica state does
+    /// not point back at the engine or registry, so there is no cycle.
+    pub fn register_metrics(self: &std::sync::Arc<ReplicaState>, reg: &crate::metrics::Registry) {
+        let r = std::sync::Arc::clone(self);
+        reg.counter_fn(
+            "mcprioq_repl_records_total",
+            "WAL records applied through the replication link.",
+            &[],
+            move || r.applied_records(),
+        );
+        let r = std::sync::Arc::clone(self);
+        reg.counter_fn(
+            "mcprioq_repl_updates_total",
+            "Individual updates applied through the replication link.",
+            &[],
+            move || r.applied_updates(),
+        );
+        let r = std::sync::Arc::clone(self);
+        reg.gauge_fn(
+            "mcprioq_repl_lag_records",
+            "WAL records this follower trails the leader by (all shards).",
+            &[],
+            move || r.lag_records() as f64,
+        );
+        let r = std::sync::Arc::clone(self);
+        reg.gauge_fn(
+            "mcprioq_repl_lag_seconds",
+            "Worst-shard staleness in seconds (0 while caught up).",
+            &[],
+            move || r.lag_seconds() as f64,
+        );
+        let r = std::sync::Arc::clone(self);
+        reg.gauge_fn(
+            "mcprioq_repl_connected",
+            "1 while the leader link is up.",
+            &[],
+            move || if r.connected() { 1.0 } else { 0.0 },
+        );
+        let r = std::sync::Arc::clone(self);
+        reg.gauge_fn(
+            "mcprioq_repl_promoted",
+            "1 once promotion has been latched on this node.",
+            &[],
+            move || if r.promoted() { 1.0 } else { 0.0 },
+        );
+        let r = std::sync::Arc::clone(self);
+        reg.gauge_fn(
+            "mcprioq_repl_fault",
+            "1 when the replication link latched a fatal fault.",
+            &[],
+            move || if r.fault().is_some() { 1.0 } else { 0.0 },
+        );
+    }
 }
 
 #[cfg(test)]
