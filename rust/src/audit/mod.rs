@@ -1,0 +1,458 @@
+//! Correctness observatory (DESIGN.md §10).
+//!
+//! The paper's contract is *approximate correctness*: reads served from a
+//! bounded-staleness snapshot may be slightly stale or rank-inverted
+//! mid-swap, but never wrong-by-construction. The telemetry plane
+//! (DESIGN.md §9) measures how fast every stage is; this module measures
+//! how *right* the answers are, continuously and cheaply, and turns the
+//! result into registry families, events, and health escalations:
+//!
+//! - **Approximation-error auditor** ([`Auditor::error_round`]): for
+//!   sampled snapshot-bearing (hot) nodes, compare the snapshot-served
+//!   top-k against a fresh exact walk ([`McPrioQ::audit_samples`]) and
+//!   record rank inversions + Kendall-tau-style displacement
+//!   (`mcprioq_audit_rank_error{stat=...}`), probability-mass error in
+//!   ppm (`mcprioq_audit_mass_error`), and the snapshot staleness each
+//!   sample was taken at (`mcprioq_audit_staleness`) — the correlation
+//!   bench plots as a staleness-vs-error curve.
+//! - **Invariant watchdog** ([`Auditor::watchdog_round`]): a rotating
+//!   schedule of cheap structural checks, each surfaced as
+//!   `mcprioq_invariant_violations_total{check=...}`. A violation is a
+//!   contract breach, not load: the engine escalates the health ladder
+//!   and the event ring captures it.
+//!
+//! The watchdog checks are designed to be *sound under full concurrency*
+//! — a check that cannot distinguish a racing writer from corruption
+//! skips (counted in `mcprioq_audit_unstable_skips_total`) rather than
+//! cry wolf, because the chaos CI gate asserts zero violations while
+//! faults fly.
+
+use std::sync::Arc;
+
+use crate::chain::{AuditSample, McPrioQ};
+use crate::metrics::events::{self, Level};
+use crate::metrics::{Counter, Histogram, Registry};
+
+/// Invariant catalog (the `{check=...}` label values, DESIGN.md §10).
+pub const CHECK_CUM: &str = "cum_monotone";
+pub const CHECK_EDGE_SUM: &str = "edge_sum";
+pub const CHECK_ARENA: &str = "arena_refcount";
+pub const CHECK_WAL_SEQ: &str = "wal_seq_continuity";
+pub const CHECK_CKPT_CHAIN: &str = "ckpt_chain";
+pub const CHECK_REPL_LAG: &str = "repl_lag";
+
+pub const CHECKS: [&str; 6] = [
+    CHECK_CUM,
+    CHECK_EDGE_SUM,
+    CHECK_ARENA,
+    CHECK_WAL_SEQ,
+    CHECK_CKPT_CHAIN,
+    CHECK_REPL_LAG,
+];
+
+/// `[audit]` knobs (config/mod.rs). Defaults keep the armed auditor well
+/// under the bench gate's 2% read-throughput budget: one round touches
+/// `sample_nodes` probes (each a bounded walk of one hot node) plus a
+/// `check_nodes`-node structural window, every `interval_ms`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditConfig {
+    /// Arm the background audit thread (`[audit] enabled`).
+    pub enabled: bool,
+    /// Pause between audit rounds, milliseconds.
+    pub interval_ms: u64,
+    /// Snapshot-bearing nodes probed for approximation error per round.
+    pub sample_nodes: usize,
+    /// Top-k depth each error probe compares.
+    pub topk: usize,
+    /// Nodes per structural-watchdog window (cum + edge-sum checks).
+    pub check_nodes: usize,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig {
+            enabled: true,
+            interval_ms: 200,
+            sample_nodes: 8,
+            topk: 16,
+            check_nodes: 64,
+        }
+    }
+}
+
+/// Persistence coordinates the watchdog's WAL/checkpoint checks read —
+/// assembled by the engine from [`crate::persist::PersistState`] so the
+/// audit plane needs no storage handle of its own.
+#[derive(Debug, Clone, Default)]
+pub struct PersistView {
+    /// WAL epoch; an epoch change legitimately resets per-shard seqs.
+    pub epoch: u64,
+    /// Per-shard last appended WAL seq (monotone within an epoch).
+    pub last_seqs: Vec<u64>,
+    /// Current checkpoint generation (0 = none yet).
+    pub generation: u64,
+    /// Delta-chain base generation.
+    pub chain_base: u64,
+    /// Delta-chain length (deltas on top of the base).
+    pub chain_len: u64,
+}
+
+/// Summary of one error-audit round (logging, tests, bench rows).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ErrorRound {
+    pub probed: usize,
+    pub max_staleness: u64,
+    pub max_mass_error: f64,
+    pub rank_inversions: u64,
+    pub displacement: u64,
+}
+
+/// The observatory's state machine: registry handles plus rotating
+/// cursors. One `Auditor` per engine, owned by the audit thread (rounds
+/// take `&mut self`; all recording sinks are internally thread-safe).
+pub struct Auditor {
+    cfg: AuditConfig,
+    rank_inversions: Arc<Histogram>,
+    rank_displacement: Arc<Histogram>,
+    mass_error_ppm: Arc<Histogram>,
+    staleness: Arc<Histogram>,
+    samples_total: Arc<Counter>,
+    rounds_total: Arc<Counter>,
+    unstable_skips: Arc<Counter>,
+    /// One counter per catalog entry, index-aligned with [`CHECKS`].
+    violations: Vec<Arc<Counter>>,
+    /// Rotating cursor into the snapshot-bearing node walk (error audit).
+    sample_cursor: usize,
+    /// Rotating cursor into the full node walk (structural window).
+    check_cursor: usize,
+    /// Which non-chain check runs this watchdog round.
+    rotation: usize,
+    /// WAL continuity memory: (epoch, per-shard seqs) from the last round.
+    wal_state: Option<(u64, Vec<u64>)>,
+}
+
+impl Auditor {
+    pub fn new(reg: &Registry, cfg: AuditConfig) -> Auditor {
+        let violations = CHECKS
+            .iter()
+            .map(|&check| {
+                reg.counter(
+                    "mcprioq_invariant_violations_total",
+                    "Structural invariant violations detected by the audit watchdog",
+                    &[("check", check)],
+                )
+            })
+            .collect();
+        Auditor {
+            rank_inversions: reg.histogram(
+                "mcprioq_audit_rank_error",
+                "Snapshot-vs-exact top-k rank error per audit probe \
+                 (stat=inversions: strict out-of-order pairs; \
+                 stat=displacement: Spearman-footrule rank distance)",
+                &[("stat", "inversions")],
+            ),
+            rank_displacement: reg.histogram(
+                "mcprioq_audit_rank_error",
+                "Snapshot-vs-exact top-k rank error per audit probe \
+                 (stat=inversions: strict out-of-order pairs; \
+                 stat=displacement: Spearman-footrule rank distance)",
+                &[("stat", "displacement")],
+            ),
+            mass_error_ppm: reg.histogram(
+                "mcprioq_audit_mass_error",
+                "Probability mass the snapshot-served top-k misses vs the \
+                 exact top-k, parts per million of live mass",
+                &[],
+            ),
+            staleness: reg.histogram(
+                "mcprioq_audit_staleness",
+                "Snapshot staleness (mutation epochs behind the live list) \
+                 at each audit probe",
+                &[],
+            ),
+            samples_total: reg.counter(
+                "mcprioq_audit_samples_total",
+                "Approximation-error probes taken by the auditor",
+                &[],
+            ),
+            rounds_total: reg.counter(
+                "mcprioq_audit_rounds_total",
+                "Audit rounds completed (error sampling + watchdog)",
+                &[],
+            ),
+            unstable_skips: reg.counter(
+                "mcprioq_audit_unstable_skips_total",
+                "Watchdog node checks skipped because the node mutated \
+                 mid-scan (retried on a later round)",
+                &[],
+            ),
+            violations,
+            cfg,
+            sample_cursor: 0,
+            check_cursor: 0,
+            rotation: 0,
+            wal_state: None,
+        }
+    }
+
+    pub fn config(&self) -> &AuditConfig {
+        &self.cfg
+    }
+
+    fn violate(&self, idx: usize, n: u64, a: u64, b: u64) {
+        if n == 0 {
+            return;
+        }
+        self.violations[idx].add(n);
+        events::emit(Level::Error, "audit", CHECKS[idx], a, b);
+    }
+
+    /// One approximation-error round over the given chains (one per
+    /// shard): probe up to `sample_nodes` hot nodes, feed the registry
+    /// histograms, return the round summary.
+    pub fn error_round(&mut self, chains: &[&McPrioQ]) -> ErrorRound {
+        let mut samples: Vec<AuditSample> = Vec::with_capacity(self.cfg.sample_nodes);
+        let per_chain = self.cfg.sample_nodes.div_ceil(chains.len().max(1)).max(1);
+        let mut eligible_total = 0usize;
+        for chain in chains {
+            let before = samples.len();
+            let eligible =
+                chain.audit_samples(self.sample_cursor, per_chain, self.cfg.topk, &mut samples);
+            eligible_total += eligible;
+            // Wrapped past this chain's hot set: restart the window so the
+            // next round begins at its head again.
+            if eligible > 0 && samples.len() == before && self.sample_cursor >= eligible {
+                chain.audit_samples(0, per_chain, self.cfg.topk, &mut samples);
+            }
+        }
+        self.sample_cursor = if eligible_total == 0 {
+            0
+        } else {
+            (self.sample_cursor + samples.len()) % eligible_total.max(1)
+        };
+        let mut round = ErrorRound { probed: samples.len(), ..ErrorRound::default() };
+        for s in &samples {
+            self.staleness.record(s.staleness);
+            self.rank_inversions.record(s.rank_inversions);
+            self.rank_displacement.record(s.displacement);
+            self.mass_error_ppm.record((s.mass_error * 1e6).round() as u64);
+            round.max_staleness = round.max_staleness.max(s.staleness);
+            round.max_mass_error = round.max_mass_error.max(s.mass_error);
+            round.rank_inversions += s.rank_inversions;
+            round.displacement += s.displacement;
+        }
+        self.samples_total.add(samples.len() as u64);
+        round
+    }
+
+    /// One watchdog round: a structural window over the chains (snapshot
+    /// `cum` monotonicity + tolerant edge-sum) every round, plus one
+    /// rotating non-chain check (arena refcounts, WAL seq continuity,
+    /// checkpoint chain, replication lag). Returns the escalation-worthy
+    /// violations detected this round (replication lag is counted and
+    /// event-logged but never escalates the health ladder).
+    pub fn watchdog_round(
+        &mut self,
+        chains: &[&McPrioQ],
+        persist: Option<&PersistView>,
+        repl_lag: Option<(u64, u64)>,
+    ) -> u64 {
+        self.rounds_total.inc();
+        let mut violations = 0u64;
+        // Chain structural window, rotating over all nodes of all shards.
+        let total_nodes: usize = chains.iter().map(|c| c.node_count()).sum();
+        let mut skip = if total_nodes == 0 { 0 } else { self.check_cursor % total_nodes };
+        let mut budget = self.cfg.check_nodes;
+        for chain in chains {
+            if budget == 0 {
+                break;
+            }
+            let nodes = chain.node_count();
+            if skip >= nodes {
+                skip -= nodes;
+                continue;
+            }
+            let rep = chain.audit_structural(skip, budget);
+            skip = 0;
+            budget = budget.saturating_sub(rep.checked);
+            self.unstable_skips.add(rep.unstable_skips);
+            self.violate(0, rep.cum_violations, rep.cum_violations, 0);
+            self.violate(1, rep.edge_sum_violations, rep.edge_sum_violations, 0);
+            violations += rep.cum_violations + rep.edge_sum_violations;
+        }
+        self.check_cursor =
+            (self.check_cursor + self.cfg.check_nodes.min(total_nodes.max(1))) % total_nodes.max(1);
+        // One rotating non-chain check per round: each is a handful of
+        // atomic loads, but rotation keeps the schedule honest as the
+        // catalog grows.
+        match self.rotation % 4 {
+            0 => {
+                let s = crate::chain::arena::stats();
+                violations += self.check_arena(s.blocks_allocated, s.blocks_freed);
+            }
+            1 => {
+                if let Some(p) = persist {
+                    violations += self.check_wal_seqs(p.epoch, &p.last_seqs);
+                }
+            }
+            2 => {
+                if let Some(p) = persist {
+                    violations += self.check_ckpt_chain(p.generation, p.chain_base, p.chain_len);
+                }
+            }
+            _ => {
+                if let Some((lag, bound)) = repl_lag {
+                    // Counted and event-logged, but deliberately excluded
+                    // from the escalation total: lag is an operating
+                    // condition the HEALTH verb already widens for, not
+                    // structural corruption.
+                    let _ = self.check_repl_lag(lag, bound);
+                }
+            }
+        }
+        self.rotation = self.rotation.wrapping_add(1);
+        violations
+    }
+
+    /// Arena refcount sanity: more blocks freed than allocated means a
+    /// double release. The stats are relaxed-read gauges, so only the
+    /// direction that racy skew cannot produce is flagged (allocations
+    /// are counted before frees ever see the block).
+    pub fn check_arena(&self, blocks_allocated: u64, blocks_freed: u64) -> u64 {
+        let bad = u64::from(blocks_freed > blocks_allocated);
+        self.violate(2, bad, blocks_allocated, blocks_freed);
+        bad
+    }
+
+    /// Per-shard WAL seq continuity: within one epoch, a shard's last
+    /// appended seq never regresses between rounds. An epoch change
+    /// (recovery, follower re-bootstrap) legitimately resets the seqs.
+    pub fn check_wal_seqs(&mut self, epoch: u64, last_seqs: &[u64]) -> u64 {
+        let mut bad = 0u64;
+        match &self.wal_state {
+            Some((prev_epoch, prev)) if *prev_epoch == epoch && prev.len() == last_seqs.len() => {
+                for (shard, (&now, &before)) in last_seqs.iter().zip(prev.iter()).enumerate() {
+                    if now < before {
+                        self.violate(3, 1, shard as u64, now);
+                        bad += 1;
+                    }
+                }
+            }
+            _ => {}
+        }
+        self.wal_state = Some((epoch, last_seqs.to_vec()));
+        bad
+    }
+
+    /// Checkpoint chain well-formedness: once a checkpoint exists, the
+    /// current generation must equal the chain's base + delta count —
+    /// anything else means the manifest and the chain disagree.
+    pub fn check_ckpt_chain(&self, generation: u64, chain_base: u64, chain_len: u64) -> u64 {
+        let bad = u64::from(generation > 0 && generation != chain_base + chain_len);
+        self.violate(4, bad, generation, chain_base + chain_len);
+        bad
+    }
+
+    /// Replication lag bound (`[replicate] max_lag_records`): counted and
+    /// event-logged, but this is a *condition*, not corruption — the
+    /// HEALTH verb already widens the rung for it, so the engine does not
+    /// escalate on this check (DESIGN.md §10).
+    pub fn check_repl_lag(&self, lag_records: u64, bound: u64) -> u64 {
+        let bad = u64::from(bound > 0 && lag_records > bound);
+        self.violate(5, bad, lag_records, bound);
+        bad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::ChainConfig;
+
+    fn hot_chain() -> McPrioQ {
+        let chain = McPrioQ::new(ChainConfig::default());
+        // One hot src with 32 distinct-count edges, then a read to build
+        // and publish the snapshot the auditor probes.
+        for dst in 0..32u64 {
+            for _ in 0..(64 - dst) {
+                chain.observe(1, dst);
+            }
+        }
+        let _ = chain.infer_topk(1, 8);
+        chain
+    }
+
+    #[test]
+    fn error_round_is_exact_at_quiescence() {
+        let reg = Registry::new();
+        let mut auditor = Auditor::new(&reg, AuditConfig::default());
+        let chain = hot_chain();
+        let round = auditor.error_round(&[&chain]);
+        assert_eq!(round.probed, 1);
+        assert_eq!(round.rank_inversions, 0, "quiesced snapshot must be exact");
+        assert_eq!(round.displacement, 0);
+        assert_eq!(round.max_mass_error, 0.0);
+    }
+
+    #[test]
+    fn error_round_sees_staleness_after_writes() {
+        let reg = Registry::new();
+        let mut auditor = Auditor::new(&reg, AuditConfig::default());
+        let chain = hot_chain();
+        // Age the snapshot under its staleness bound: reads still serve
+        // it, and the audit must attribute the drift to it.
+        for _ in 0..100 {
+            chain.observe(1, 31);
+        }
+        let round = auditor.error_round(&[&chain]);
+        assert_eq!(round.probed, 1);
+        assert!(round.max_staleness >= 100, "staleness {}", round.max_staleness);
+        // dst 31 rose from rank 31 to a top rank; the served snapshot
+        // still shows the old order, so displacement must be nonzero.
+        assert!(round.displacement > 0);
+    }
+
+    #[test]
+    fn watchdog_clean_chain_no_violations() {
+        let reg = Registry::new();
+        let mut auditor = Auditor::new(&reg, AuditConfig::default());
+        let chain = hot_chain();
+        // Several rounds so the rotation covers every catalog entry.
+        let mut total = 0;
+        for _ in 0..8 {
+            total += auditor.watchdog_round(&[&chain], None, None);
+        }
+        assert_eq!(total, 0);
+        let text = reg.render();
+        assert!(text.contains("mcprioq_invariant_violations_total"), "{text}");
+        assert!(text.contains("mcprioq_audit_rank_error"), "{text}");
+    }
+
+    #[test]
+    fn wal_seq_regression_detected_and_epoch_reset_forgiven() {
+        let reg = Registry::new();
+        let mut auditor = Auditor::new(&reg, AuditConfig::default());
+        assert_eq!(auditor.check_wal_seqs(1, &[5, 7]), 0, "first round only records");
+        assert_eq!(auditor.check_wal_seqs(1, &[6, 7]), 0, "monotone is clean");
+        assert_eq!(auditor.check_wal_seqs(1, &[4, 7]), 1, "shard 0 regressed");
+        // Epoch bump: seqs legitimately restart from anywhere.
+        assert_eq!(auditor.check_wal_seqs(2, &[0, 0]), 0);
+        assert_eq!(auditor.check_wal_seqs(2, &[1, 1]), 0);
+    }
+
+    #[test]
+    fn ckpt_chain_and_arena_and_lag_checks() {
+        let reg = Registry::new();
+        let auditor = Auditor::new(&reg, AuditConfig::default());
+        assert_eq!(auditor.check_ckpt_chain(0, 0, 0), 0, "no checkpoint yet");
+        assert_eq!(auditor.check_ckpt_chain(5, 3, 2), 0);
+        assert_eq!(auditor.check_ckpt_chain(5, 3, 1), 1);
+        assert_eq!(auditor.check_arena(10, 10), 0);
+        assert_eq!(auditor.check_arena(10, 11), 1);
+        assert_eq!(auditor.check_repl_lag(100, 0), 0, "bound off");
+        assert_eq!(auditor.check_repl_lag(100, 1000), 0);
+        assert_eq!(auditor.check_repl_lag(1001, 1000), 1);
+        let text = reg.render();
+        assert!(text.contains("check=\"ckpt_chain\""), "{text}");
+    }
+}

@@ -891,6 +891,192 @@ pub fn telemetry_overhead_probe(
     Ok(TelemetryOverheadProbe { reads_per_s_off: off, reads_per_s_on: on, overhead_frac })
 }
 
+/// Result of the audit-overhead gate ([`audit_overhead_probe`]): wire read
+/// throughput with the correctness observatory armed at a 1 ms cadence —
+/// far hotter than the production default — vs disarmed. The CI bench
+/// smoke fails when `overhead_frac` exceeds 2% (DESIGN.md §10).
+pub struct AuditOverheadProbe {
+    pub reads_per_s_off: f64,
+    pub reads_per_s_on: f64,
+    /// `(off - on) / off`; can go negative when run-to-run noise favors
+    /// the armed windows.
+    pub overhead_frac: f64,
+    /// Audit rounds completed across the armed windows, so the artifact
+    /// records how much auditing the gate actually priced.
+    pub audit_rounds: u64,
+}
+
+/// Boot a server on a hot-node engine (same fixture as
+/// [`telemetry_overhead_probe`]), drive `threads` wire clients of `TOPK`
+/// through alternating windows, and price the armed auditor: a sidecar
+/// thread running error sampling plus the invariant watchdog every
+/// millisecond during the armed windows only.
+pub fn audit_overhead_probe(
+    bench: &Bench,
+    window: Duration,
+    threads: usize,
+    fanout: usize,
+) -> Result<AuditOverheadProbe, String> {
+    use crate::audit::{AuditConfig, Auditor};
+    use crate::config::ServerConfig;
+    use crate::coordinator::{Client, Engine, Server};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    let threads = threads.max(1);
+    let config = ServerConfig { shards: 1, queue_capacity: 65_536, ..Default::default() };
+    let engine = Engine::new(&config, 1);
+    let zipf = crate::workload::Zipf::new(fanout.max(2), 1.0);
+    let mut rng = crate::testutil::Rng64::new(42);
+    let mut batch = Vec::with_capacity(1_000);
+    for _ in 0..50 {
+        batch.clear();
+        batch.extend((0..1_000).map(|_| (0u64, zipf.sample(&mut rng) as u64 + 1)));
+        engine.observe_batch(&batch);
+    }
+    engine.quiesce();
+    engine.repair();
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0")
+        .map_err(|e| format!("bind: {e}"))?;
+    let addr = server.local_addr().to_string();
+    let _server = server.spawn();
+
+    let armed = Arc::new(AtomicBool::new(false));
+    let stop = Arc::new(AtomicBool::new(false));
+    let rounds = Arc::new(AtomicU64::new(0));
+    let auditor_thread = {
+        let engine = Arc::clone(&engine);
+        let armed = Arc::clone(&armed);
+        let stop = Arc::clone(&stop);
+        let rounds = Arc::clone(&rounds);
+        std::thread::spawn(move || {
+            let mut auditor = Auditor::new(
+                engine.telemetry(),
+                AuditConfig {
+                    interval_ms: 1,
+                    sample_nodes: 32,
+                    topk: 10,
+                    check_nodes: 4096,
+                    ..AuditConfig::default()
+                },
+            );
+            while !stop.load(Ordering::SeqCst) {
+                if armed.load(Ordering::SeqCst) {
+                    engine.audit_round(&mut auditor, None);
+                    rounds.fetch_add(1, Ordering::Relaxed);
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+    };
+
+    let drive = |on: bool| -> f64 {
+        armed.store(on, Ordering::SeqCst);
+        bench.run_threads(threads, window, |_| {
+            let mut client = Client::connect_with_backoff(&addr, Duration::from_secs(5))
+                .expect("probe client connects");
+            move || {
+                let _ = client.topk(0, 10);
+                1
+            }
+        })
+    };
+    let mut off = 0.0f64;
+    let mut on = 0.0f64;
+    for _ in 0..2 {
+        off = off.max(drive(false));
+        on = on.max(drive(true));
+    }
+    armed.store(false, Ordering::SeqCst);
+    stop.store(true, Ordering::SeqCst);
+    let _ = auditor_thread.join();
+    engine.shutdown();
+    let overhead_frac = if off > 0.0 { (off - on) / off } else { 0.0 };
+    Ok(AuditOverheadProbe {
+        reads_per_s_off: off,
+        reads_per_s_on: on,
+        overhead_frac,
+        audit_rounds: rounds.load(Ordering::Relaxed),
+    })
+}
+
+/// One point of the staleness-vs-error curve ([`staleness_error_curve`]):
+/// the approximation error the audit probe measured against a snapshot
+/// aged by roughly `target_staleness` edge-list mutations.
+pub struct StalenessErrorPoint {
+    /// Mutations applied after the snapshot was published.
+    pub target_staleness: u64,
+    /// Staleness the audit probe actually observed (swaps and splices age
+    /// the snapshot beyond the applied increments).
+    pub staleness: u64,
+    /// Max absolute probability-mass error across the samples.
+    pub mass_error: f64,
+    pub rank_inversions: u64,
+    pub displacement: u64,
+    pub samples: usize,
+}
+
+/// Publish a fresh snapshot of one hot Zipf node, age it by a controlled
+/// number of mutations, and read the audit probe — one row per target in
+/// `targets`. This is the observability contract of DESIGN.md §10: the
+/// `snap_staleness` serving bound is the x-axis knob that trades read
+/// freshness for rebuild rate, and this curve prices that trade in
+/// rank/mass error terms.
+pub fn staleness_error_curve(targets: &[u64], fanout: usize) -> Vec<StalenessErrorPoint> {
+    use crate::config::ServerConfig;
+    use crate::coordinator::Engine;
+
+    let mut config = ServerConfig { shards: 1, queue_capacity: 65_536, ..Default::default() };
+    // Bound 0: every wire read republishes, so each curve point starts
+    // from a perfectly fresh snapshot before its aging writes land.
+    config.chain.snap_staleness = 0;
+    let engine = Engine::new(&config, 1);
+    let zipf = crate::workload::Zipf::new(fanout.max(2), 1.0);
+    let mut rng = crate::testutil::Rng64::new(7);
+    let mut batch = Vec::with_capacity(1_024);
+    for _ in 0..50 {
+        batch.clear();
+        batch.extend((0..1_000).map(|_| (0u64, zipf.sample(&mut rng) as u64 + 1)));
+        engine.observe_batch(&batch);
+    }
+    engine.quiesce();
+    engine.repair();
+
+    let mut out = Vec::with_capacity(targets.len());
+    for &target in targets {
+        // Fresh snapshot, then age it by ~target mutations (one increment
+        // per observed pair, plus whatever swaps the reorder path adds).
+        engine.infer_topk(0, 10);
+        let mut left = target;
+        while left > 0 {
+            let n = left.min(1_024) as usize;
+            batch.clear();
+            batch.extend((0..n).map(|_| (0u64, zipf.sample(&mut rng) as u64 + 1)));
+            engine.observe_batch(&batch);
+            left -= n as u64;
+        }
+        engine.quiesce();
+        let samples = engine.audit_error_samples(8, 10);
+        let mut point = StalenessErrorPoint {
+            target_staleness: target,
+            staleness: 0,
+            mass_error: 0.0,
+            rank_inversions: 0,
+            displacement: 0,
+            samples: samples.len(),
+        };
+        for s in &samples {
+            point.staleness = point.staleness.max(s.staleness);
+            point.mass_error = point.mass_error.max(s.mass_error);
+            point.rank_inversions += s.rank_inversions;
+            point.displacement += s.displacement;
+        }
+        out.push(point);
+    }
+    engine.shutdown();
+    out
+}
+
 /// One JSON value for [`JsonArtifact`] rows (serde is unavailable offline;
 /// the bench artifacts only need numbers, strings, and booleans).
 #[derive(Debug, Clone)]

@@ -203,6 +203,42 @@ impl Default for Recommendation {
     }
 }
 
+/// One audited node (DESIGN.md §10): how far the snapshot-served top-k
+/// strayed from a fresh exact walk, correlated with the snapshot's
+/// staleness so bench can plot a staleness-vs-error curve.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct AuditSample {
+    pub src: u64,
+    /// Mutations the served snapshot trails the live list by (the quantity
+    /// `snap_staleness` bounds).
+    pub staleness: u64,
+    /// Entries the snapshot actually served (`min(k, snapshot len)`).
+    pub served_k: usize,
+    /// Served pairs ordered against their live counts (strict inversions;
+    /// equal counts are interchangeable).
+    pub rank_inversions: u64,
+    /// Kendall-tau-style (Spearman-footrule) displacement: summed distance
+    /// of each served position from its count's exact rank class.
+    pub displacement: u64,
+    /// Probability mass the served top-k misses vs the exact top-k, as a
+    /// fraction of live mass. Exactly 0 at quiescence.
+    pub mass_error: f64,
+}
+
+/// One structural-watchdog sweep over a bounded node window (DESIGN.md
+/// §10): per-snapshot `cum` monotonicity and tolerant edge-sum == total.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StructuralAudit {
+    /// Nodes the sweep examined.
+    pub checked: usize,
+    /// Snapshot prefix-sum entries violating monotone/closing invariants.
+    pub cum_violations: u64,
+    /// Nodes whose stable edge sum grossly mismatched their total.
+    pub edge_sum_violations: u64,
+    /// Nodes skipped because they mutated mid-scan (retried next round).
+    pub unstable_skips: u64,
+}
+
 /// Aggregate structure statistics (metrics endpoint, EXPERIMENTS.md).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct ChainStats {
@@ -559,6 +595,64 @@ impl McPrioQ {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+
+    /// Error-audit sampling hook (DESIGN.md §10): probe up to `max`
+    /// snapshot-bearing nodes (the hot set — only snapshots serve
+    /// approximate answers), skipping the first `skip` so a rotating
+    /// cursor spreads successive rounds across the whole hot set, and
+    /// append one [`AuditSample`] per probed node. Returns the total
+    /// number of snapshot-bearing nodes seen, for cursor wraparound.
+    pub fn audit_samples(
+        &self,
+        skip: usize,
+        max: usize,
+        k: usize,
+        out: &mut Vec<AuditSample>,
+    ) -> usize {
+        let guard = rcu::pin();
+        let mut eligible = 0usize;
+        let mut taken = 0usize;
+        self.src.for_each(&guard, |_, state_ptr| {
+            let state = unsafe { &*state_ptr };
+            if !state.has_snapshot() {
+                return;
+            }
+            eligible += 1;
+            if eligible <= skip || taken >= max {
+                return;
+            }
+            if let Some(s) = state.audit_probe(&guard, k) {
+                out.push(s);
+                taken += 1;
+            }
+        });
+        eligible
+    }
+
+    /// Structural-watchdog sweep (DESIGN.md §10) over up to `max` nodes
+    /// starting `skip` nodes into the walk: snapshot `cum` monotonicity
+    /// plus the tolerant edge-sum check. Safe under full concurrency —
+    /// nodes that mutate mid-scan are skipped, not misjudged.
+    pub fn audit_structural(&self, skip: usize, max: usize) -> StructuralAudit {
+        let guard = rcu::pin();
+        let mut rep = StructuralAudit::default();
+        let mut seen = 0usize;
+        self.src.for_each(&guard, |_, state_ptr| {
+            seen += 1;
+            if seen <= skip || rep.checked >= max {
+                return;
+            }
+            let state = unsafe { &*state_ptr };
+            rep.cum_violations += state.audit_cum(&guard);
+            match state.audit_edge_sum(&guard) {
+                None => rep.unstable_skips += 1,
+                Some(true) => {}
+                Some(false) => rep.edge_sum_violations += 1,
+            }
+            rep.checked += 1;
+        });
+        rep
     }
 
     /// Per-node statistics (None if the src node is unknown).

@@ -410,6 +410,126 @@ impl NodeState {
         self.edges.top(guard, usize::MAX)
     }
 
+    /// Whether a read snapshot is currently published — the audit plane
+    /// probes only these nodes (no snapshot = reads are exact walks, so
+    /// there is no approximation to measure).
+    pub(super) fn has_snapshot(&self) -> bool {
+        !self.snap.load(Ordering::Acquire).is_null()
+    }
+
+    /// Approximation-error probe (DESIGN.md §10): compare the top-`k` the
+    /// published snapshot *serves* against a fresh exact walk of the live
+    /// list, under the caller's guard. Returns `None` when no snapshot is
+    /// published. Ties in live counts are rank-classes: a served position
+    /// anywhere inside its count's class contributes no error.
+    pub(super) fn audit_probe(&self, guard: &Guard, k: usize) -> Option<super::AuditSample> {
+        let ptr = self.snap.load(Ordering::Acquire);
+        if ptr.is_null() {
+            return None;
+        }
+        // Guard-protected: a concurrently swapped-out snapshot stays
+        // readable until the grace period ends.
+        let snap = unsafe { &*ptr };
+        let staleness = self.edges.mutations().wrapping_sub(snap.epoch);
+        // Fresh exact reference: live counts, sorted by count (the order
+        // the list converges to at quiescence).
+        let live = self.edges.top(guard, usize::MAX);
+        let live_total: u64 = live.iter().map(|&(_, c)| c).sum();
+        let counts: std::collections::HashMap<u64, u64> = live.iter().copied().collect();
+        let mut exact = live;
+        exact.sort_unstable_by(|a, b| b.1.cmp(&a.1));
+        let served_k = k.min(snap.entries.len());
+        // Live count of each served dst (0 = pruned since the snapshot).
+        let served: Vec<(u64, u64)> = snap.entries[..served_k]
+            .iter()
+            .map(|&(dst, _, _)| (dst, counts.get(&dst).copied().unwrap_or(0)))
+            .collect();
+        // Rank inversions: served pairs ordered against their live counts
+        // (strict — equal counts are interchangeable). O(k²), k is small.
+        let mut rank_inversions = 0u64;
+        for i in 0..served.len() {
+            for j in (i + 1)..served.len() {
+                if served[i].1 < served[j].1 {
+                    rank_inversions += 1;
+                }
+            }
+        }
+        // Spearman-footrule displacement: distance from each served
+        // position to its count's rank class [lo, hi) in the exact order.
+        let mut displacement = 0u64;
+        for (i, &(_, c)) in served.iter().enumerate() {
+            let lo = exact.partition_point(|e| e.1 > c);
+            let hi = exact.partition_point(|e| e.1 >= c);
+            let target = i.clamp(lo, hi.max(lo + 1) - 1);
+            displacement += i.abs_diff(target) as u64;
+        }
+        // Probability mass the served answer misses against the exact
+        // top-k, in live mass. 0 when the served set is the exact set.
+        let mass_error = if live_total == 0 {
+            0.0
+        } else {
+            let exact_mass: u64 = exact.iter().take(k).map(|&(_, c)| c).sum();
+            let served_mass: u64 = served.iter().map(|&(_, c)| c).sum();
+            exact_mass.saturating_sub(served_mass) as f64 / live_total as f64
+        };
+        Some(super::AuditSample {
+            src: self.id,
+            staleness,
+            served_k,
+            rank_inversions,
+            displacement,
+            mass_error,
+        })
+    }
+
+    /// Watchdog check (DESIGN.md §10): the published snapshot's inclusive
+    /// prefix sums must ascend and close at the snapshot total. Snapshots
+    /// are immutable after publish, so any violation is construction
+    /// corruption, never a benign race. Returns the violation count.
+    pub(super) fn audit_cum(&self, _guard: &Guard) -> u64 {
+        let ptr = self.snap.load(Ordering::Acquire);
+        if ptr.is_null() {
+            return 0;
+        }
+        let snap = unsafe { &*ptr };
+        let mut violations = 0u64;
+        let mut prev = 0u64;
+        for &(_, count, cum) in snap.entries.iter() {
+            if cum < prev || cum.wrapping_sub(prev) != count {
+                violations += 1;
+            }
+            prev = cum;
+        }
+        if snap.entries.last().map(|e| e.2) != Some(snap.total) {
+            violations += 1;
+        }
+        violations
+    }
+
+    /// Watchdog edge-sum check (DESIGN.md §10). `None`: the node mutated
+    /// mid-scan (comparison meaningless; the watchdog retries next round).
+    /// `Some(true)`: the stable edge sum matches the total within the
+    /// in-flight skew bound. `Some(false)`: a stable gross mismatch —
+    /// structural corruption (lost edge, double count), not racing
+    /// arithmetic. The bound exists because maintenance racing a writer
+    /// legitimately leaves a few increments of skew until the next repair
+    /// rebase (see [`NodeState::decay`]); corruption is orders larger.
+    pub(super) fn audit_edge_sum(&self, guard: &Guard) -> Option<bool> {
+        let m0 = self.edges.mutations();
+        let t0 = self.total.load(Ordering::Acquire);
+        let mut sum = 0u64;
+        self.edges.scan(guard, |_, c| {
+            sum += c;
+            true
+        });
+        let t1 = self.total.load(Ordering::Acquire);
+        if t0 != t1 || self.edges.mutations() != m0 {
+            return None;
+        }
+        let bound = 64.max(t1 / 256);
+        Some(sum.abs_diff(t1) <= bound)
+    }
+
     /// Caller must hold an RCU guard (the published snapshot is
     /// dereferenced to account its bytes).
     pub(super) fn stats(&self, _guard: &Guard) -> NodeStats {

@@ -49,6 +49,40 @@ pub struct ServerConfig {
     pub replicate: ReplicateSection,
     /// Thread-placement parameters (DESIGN.md §7).
     pub runtime: RuntimeSection,
+    /// Correctness-observatory parameters (DESIGN.md §10).
+    pub audit: AuditSection,
+}
+
+/// `[audit]` — the correctness observatory (DESIGN.md §10): background
+/// approximation-error sampling plus the invariant watchdog. On by
+/// default because every check is bounded (a few dozen nodes per round);
+/// `enabled = false` removes the thread entirely.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditSection {
+    /// Arm the background audit thread at serve time.
+    pub enabled: bool,
+    /// Pause between observatory rounds.
+    pub interval_ms: u64,
+    /// Snapshot-bearing nodes sampled per error round (across all shards).
+    pub sample_nodes: usize,
+    /// Top-k depth compared between the snapshot read path and the exact
+    /// list walk.
+    pub topk: usize,
+    /// Nodes structurally checked per watchdog round (rotating cursor).
+    pub check_nodes: usize,
+}
+
+impl Default for AuditSection {
+    fn default() -> Self {
+        let d = crate::audit::AuditConfig::default();
+        AuditSection {
+            enabled: d.enabled,
+            interval_ms: d.interval_ms,
+            sample_nodes: d.sample_nodes,
+            topk: d.topk,
+            check_nodes: d.check_nodes,
+        }
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -221,6 +255,7 @@ impl Default for ServerConfig {
             persist: PersistSection::default(),
             replicate: ReplicateSection::default(),
             runtime: RuntimeSection::default(),
+            audit: AuditSection::default(),
         }
     }
 }
@@ -297,6 +332,11 @@ impl ServerConfig {
                 "replicate.max_pin_lag_bytes" => {
                     cfg.replicate.max_pin_lag_bytes = value.as_u64()?
                 }
+                "audit.enabled" => cfg.audit.enabled = value.as_bool()?,
+                "audit.interval_ms" => cfg.audit.interval_ms = value.as_u64()?,
+                "audit.sample_nodes" => cfg.audit.sample_nodes = value.as_usize()?,
+                "audit.topk" => cfg.audit.topk = value.as_usize()?,
+                "audit.check_nodes" => cfg.audit.check_nodes = value.as_usize()?,
                 other => return Err(format!("unknown config key: {other}")),
             }
         }
@@ -314,6 +354,9 @@ impl ServerConfig {
         }
         if !(cfg.persist.delta_dirty_ratio > 0.0 && cfg.persist.delta_dirty_ratio <= 1.0) {
             return Err("persist.delta_dirty_ratio must be in (0, 1]".to_string());
+        }
+        if cfg.audit.interval_ms == 0 {
+            return Err("audit.interval_ms must be positive".to_string());
         }
         if !cfg.persist.fault_plan.is_empty() {
             crate::persist::FaultPlan::parse(&cfg.persist.fault_plan)
@@ -361,6 +404,17 @@ impl ServerConfig {
             ),
             max_pin_lag_bytes: self.replicate.max_pin_lag_bytes,
             chaos: self.replicate.chaos,
+        }
+    }
+
+    /// Resolve the `[audit]` section (always valid after parsing).
+    pub fn audit_config(&self) -> crate::audit::AuditConfig {
+        crate::audit::AuditConfig {
+            enabled: self.audit.enabled,
+            interval_ms: self.audit.interval_ms.max(1),
+            sample_nodes: self.audit.sample_nodes,
+            topk: self.audit.topk,
+            check_nodes: self.audit.check_nodes,
         }
     }
 
@@ -573,6 +627,26 @@ decay_den = 4
         let cfg = ServerConfig::from_toml("").unwrap();
         assert!(cfg.metrics_addr.is_empty());
         assert_eq!(cfg.slow_query_us, 0);
+    }
+
+    #[test]
+    fn audit_knobs_parse() {
+        let text = "[audit]\nenabled = false\ninterval_ms = 50\nsample_nodes = 32\n\
+                    topk = 4\ncheck_nodes = 128\n";
+        let cfg = ServerConfig::from_toml(text).unwrap();
+        assert!(!cfg.audit.enabled);
+        let a = cfg.audit_config();
+        assert!(!a.enabled);
+        assert_eq!(a.interval_ms, 50);
+        assert_eq!(a.sample_nodes, 32);
+        assert_eq!(a.topk, 4);
+        assert_eq!(a.check_nodes, 128);
+        // Defaults: observatory armed, matching the library defaults.
+        let cfg = ServerConfig::from_toml("").unwrap();
+        assert!(cfg.audit.enabled);
+        assert_eq!(cfg.audit_config(), crate::audit::AuditConfig::default());
+        // A zero cadence would spin the audit thread; reject at parse time.
+        assert!(ServerConfig::from_toml("[audit]\ninterval_ms = 0\n").is_err());
     }
 
     #[test]

@@ -21,11 +21,14 @@ use std::sync::{Arc, OnceLock, PoisonError, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::audit::{AuditConfig, Auditor, PersistView};
 use crate::chain::{ChainConfig, McPrioQ, Recommendation};
 use crate::config::ServerConfig;
+use crate::metrics::events::{self, Level};
 use crate::metrics::{Counter, Histogram, Meter, Registry};
 use crate::persist::{codec, LogOutcome, PersistState};
 use crate::rcu;
+use crate::replicate::ReplicaState;
 use crate::runtime::RetryPolicy;
 
 use super::health::{Health, HealthState};
@@ -180,6 +183,11 @@ pub struct Engine {
     /// control off). Stored here so the server can build per-connection
     /// token buckets without re-threading the config.
     admission: (u64, u64),
+    /// Resolved `[audit]` knobs for the correctness observatory
+    /// (DESIGN.md §10).
+    audit: AuditConfig,
+    /// Latch so [`Engine::spawn_audit`] arms at most one audit thread.
+    audit_armed: AtomicBool,
 }
 
 impl Engine {
@@ -245,6 +253,8 @@ impl Engine {
             replicate: config.replicate_config(),
             health: HealthState::new(),
             admission: (config.rate_limit_ops, config.rate_limit_burst),
+            audit: config.audit_config(),
+            audit_armed: AtomicBool::new(false),
         });
         engine.register_derived_metrics();
         // Spawn shard-affine ingest workers. They hold their queue Arcs
@@ -420,6 +430,14 @@ impl Engine {
             &[],
             || rcu::grace_age_ns() as f64 / 1e9,
         );
+        // Structured event log (DESIGN.md §10): the ring is process-global
+        // like RCU; the counter makes event production rate scrapeable.
+        reg.counter_fn(
+            "mcprioq_events_emitted_total",
+            "Structured events recorded in the event ring.",
+            &[],
+            events::emitted,
+        );
         crate::chain::arena::register_metrics(reg);
     }
 
@@ -469,6 +487,13 @@ impl Engine {
                     LogOutcome::Logged => {}
                     LogOutcome::SyncDegraded(why) => engine.health.degrade(&why),
                     LogOutcome::Parked(why) => {
+                        events::emit(
+                            Level::Warn,
+                            "persist",
+                            "parked",
+                            shard as u64,
+                            batch.len() as u64,
+                        );
                         engine.health.degrade(&why);
                         // Parked, not applied: the heal task re-logs and
                         // applies it in order once the disk recovers.
@@ -1132,6 +1157,86 @@ impl Engine {
         self.persist.get()
     }
 
+    /// Arm the correctness observatory (DESIGN.md §10): one background
+    /// thread alternating approximation-error sampling with invariant
+    /// watchdog rounds. Idempotent; no-op when `[audit] enabled = false`.
+    /// On a follower, `replica` feeds the lag-bound check.
+    pub fn spawn_audit(self: &Arc<Self>, replica: Option<Arc<ReplicaState>>) {
+        if !self.audit.enabled || self.audit_armed.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let weak = Arc::downgrade(self);
+        std::thread::spawn(move || Engine::audit_loop(weak, replica));
+    }
+
+    /// The audit thread: same lifetime rules as [`Engine::heal_loop`] —
+    /// holds only a `Weak`, and the upgraded Arc is out of scope before
+    /// every sleep so a parked auditor never keeps a dropped engine alive.
+    fn audit_loop(weak: std::sync::Weak<Engine>, replica: Option<Arc<ReplicaState>>) {
+        let mut auditor: Option<Auditor> = None;
+        loop {
+            let pause = {
+                let Some(engine) = weak.upgrade() else { return };
+                if engine.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let auditor = auditor.get_or_insert_with(|| {
+                    Auditor::new(&engine.telemetry, engine.audit.clone())
+                });
+                engine.audit_round(auditor, replica.as_deref());
+                Duration::from_millis(engine.audit.interval_ms.max(1))
+            };
+            std::thread::sleep(pause);
+        }
+    }
+
+    /// One observatory round (also driven directly by the bench overhead
+    /// probe): error sampling over the hot set, then the watchdog's
+    /// rotating invariant checks. An escalation-worthy violation degrades
+    /// the health ladder — a structure that failed a structural check
+    /// must not ack more writes until the heal task (or an operator)
+    /// intervenes — and is stamped into both the event ring and the
+    /// slow-query flight recorder. Returns that violation count.
+    pub fn audit_round(&self, auditor: &mut Auditor, replica: Option<&ReplicaState>) -> u64 {
+        let chains: Vec<&McPrioQ> = self.shards.iter().collect();
+        auditor.error_round(&chains);
+        let persist_view = self.persist.get().map(|p| {
+            // Generation is re-read around the chain snapshot: a checkpoint
+            // committing mid-capture would otherwise pair an old generation
+            // with a new chain and read as a phantom violation. Generation 0
+            // makes the ckpt-chain check skip this round.
+            let before = p.generation();
+            let chain = p.delta_chain();
+            let generation = if p.generation() == before { before } else { 0 };
+            PersistView {
+                epoch: p.epoch(),
+                last_seqs: p.last_seqs(),
+                generation,
+                chain_base: chain.base,
+                chain_len: chain.len as u64,
+            }
+        });
+        let repl_lag = replica.map(|r| (r.lag_records(), self.replicate.max_lag_records));
+        let violations = auditor.watchdog_round(&chains, persist_view.as_ref(), repl_lag);
+        if violations > 0 {
+            self.health
+                .degrade(&format!("invariant violations: {violations} this round"));
+            crate::metrics::trace::record_mark("AUDIT", violations, 0);
+        }
+        violations
+    }
+
+    /// Approximation-error samples across all shards (up to `max` per
+    /// shard, top-`k` deep) — the bench's staleness-vs-error curve reads
+    /// these without arming the background thread.
+    pub fn audit_error_samples(&self, max: usize, k: usize) -> Vec<crate::chain::AuditSample> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            s.audit_samples(0, max, k, &mut out);
+        }
+        out
+    }
+
     /// Write a checkpoint now (quiesce + pause, snapshot to `tmp` +
     /// `rename`, manifest commit, WAL truncation). Errors if persistence
     /// is not enabled. Backs the wire `SAVE` command and the scheduler.
@@ -1141,6 +1246,7 @@ impl Engine {
         // Only committed checkpoints land in the histogram — a refused or
         // failed cut would skew the duration summary with early exits.
         self.checkpoint_ns.record(t0.elapsed().as_nanos() as u64);
+        events::emit(Level::Info, "checkpoint", summary.kind, summary.generation, summary.bytes);
         Ok(summary)
     }
 

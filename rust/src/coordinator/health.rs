@@ -23,6 +23,7 @@ use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Mutex, PoisonError};
 use std::time::Instant;
 
+use crate::metrics::events::{self, Level};
 use crate::metrics::Counter;
 
 /// The three rungs of the degradation ladder.
@@ -104,6 +105,8 @@ impl HealthState {
                 let mut reason = lock_clean(&self.reason);
                 reason.clear();
                 reason.push_str(why);
+                // One event per outage, matching the sticky first reason.
+                events::emit(Level::Error, "health", "degraded", 0, 0);
             }
         }
         self.state.store(1, Ordering::Release);
@@ -112,7 +115,9 @@ impl HealthState {
     /// `DegradedReadOnly → Recovering` (no-op from any other rung, so a
     /// racing `degrade()` is never overwritten by a stale heal attempt).
     pub(crate) fn begin_recovery(&self) {
-        let _ = self.state.compare_exchange(1, 2, Ordering::AcqRel, Ordering::Acquire);
+        if self.state.compare_exchange(1, 2, Ordering::AcqRel, Ordering::Acquire).is_ok() {
+            events::emit(Level::Warn, "health", "recovering", 0, 0);
+        }
     }
 
     /// Back to `Healthy`: clears the reason and banks the outage time.
@@ -122,6 +127,7 @@ impl HealthState {
             if let Some(t) = since.take() {
                 let ns = t.elapsed().as_nanos().min(u64::MAX as u128) as u64;
                 self.degraded_ns.fetch_add(ns, Ordering::Relaxed);
+                events::emit(Level::Info, "health", "healed", ns / 1_000_000, 0);
             }
             lock_clean(&self.reason).clear();
         }

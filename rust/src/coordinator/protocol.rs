@@ -25,6 +25,9 @@
 //! TRACE on|off               arm / disarm per-thread span capture
 //! TRACE dump <n>             the newest <n> captured spans, one per
 //!                            response line token-packed (single line)
+//! EVENTS [n]                 the newest <n> structured event records
+//!                            (whole ring when omitted), token-packed on
+//!                            one response line (DESIGN.md §10)
 //! HEALTH                     degradation-ladder probe: the current rung
 //!                            (healthy/degraded/recovering), the reason
 //!                            and retry hint when off the healthy rung,
@@ -40,9 +43,16 @@
 //! PROMOTE                    follower only: stop following, accept writes
 //! ```
 //!
+//! `TOPK`, `MTOPK` and `OBSERVEB` accept one optional trailing
+//! `id=<token>` request tag (≤ 64 chars, no whitespace). The tag is
+//! echoed back on the response line and stamped into any slow-query
+//! flight-recorder entry the request produces, so an operator can join a
+//! client-side request id against `TRACE dump` output.
+//!
 //! Responses: `OK ...`, `ITEMS <n> <dst>:<prob> ... cum=<c> scanned=<s>`,
 //! `MITEMS <m> ITEMS ... ITEMS ...` (one block per MTOPK src), or
-//! `ERR <message>`. Every request yields exactly one response line, so
+//! `ERR <message>`. Tagged requests suffix their response line with
+//! ` id=<token>`. Every request yields exactly one response line, so
 //! clients can pipeline arbitrarily many requests behind a single flush —
 //! with the sole documented exception of `METRICS`, whose multi-line body
 //! runs until a `# EOF` sentinel line.
@@ -58,10 +68,10 @@ pub const MAX_WIRE_BATCH: usize = 65_536;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Observe { src: u64, dst: u64 },
-    ObserveBatch { pairs: Vec<(u64, u64)> },
+    ObserveBatch { pairs: Vec<(u64, u64)>, id: Option<String> },
     Recommend { src: u64, threshold: f64 },
-    TopK { src: u64, k: usize },
-    MultiTopK { srcs: Vec<u64>, k: usize },
+    TopK { src: u64, k: usize, id: Option<String> },
+    MultiTopK { srcs: Vec<u64>, k: usize, id: Option<String> },
     Prob { src: u64, dst: u64 },
     Decay,
     Repair,
@@ -72,6 +82,9 @@ pub enum Request {
     Metrics,
     /// Span-capture control: `TRACE on`, `TRACE off`, `TRACE dump <n>`.
     Trace(TraceCmd),
+    /// Drain the newest `n` structured event records (`usize::MAX` = the
+    /// whole ring) from the event log (DESIGN.md §10).
+    Events(usize),
     Health,
     Ping,
     Quit,
@@ -120,9 +133,9 @@ impl Request {
                 for _ in 0..n {
                     pairs.push((num("src")?, num("dst")?));
                 }
-                Request::ObserveBatch { pairs }
+                Request::ObserveBatch { pairs, id: None }
             }
-            "TOPK" => Request::TopK { src: num("src")?, k: num("k")? as usize },
+            "TOPK" => Request::TopK { src: num("src")?, k: num("k")? as usize, id: None },
             "MTOPK" => {
                 let n = batch_len(num("count")?).map_err(|e| format!("MTOPK: {e}"))?;
                 let k = num("k")? as usize;
@@ -130,7 +143,7 @@ impl Request {
                 for _ in 0..n {
                     srcs.push(num("src")?);
                 }
-                Request::MultiTopK { srcs, k }
+                Request::MultiTopK { srcs, k, id: None }
             }
             "PROB" => Request::Prob { src: num("src")?, dst: num("dst")? },
             "REC" => {
@@ -156,6 +169,13 @@ impl Request {
                 Some("dump") => Request::Trace(TraceCmd::Dump(num("n")? as usize)),
                 other => return Err(format!("TRACE: unknown subcommand {other:?}")),
             },
+            "EVENTS" => match it.next() {
+                // Count omitted = drain the whole ring.
+                None => Request::Events(usize::MAX),
+                Some(t) => Request::Events(
+                    t.parse::<u64>().map_err(|_| "EVENTS: bad n")? as usize,
+                ),
+            },
             "HEALTH" => Request::Health,
             "PING" => Request::Ping,
             "QUIT" => Request::Quit,
@@ -174,7 +194,26 @@ impl Request {
             "PROMOTE" => Request::Promote,
             other => return Err(format!("unknown command {other:?}")),
         };
-        if it.next().is_some() {
+        // Optional trailing `id=<token>` request tag on the taggable
+        // verbs; anything else after the grammar above is still an error.
+        let mut req = req;
+        let mut trailing = it.next();
+        if let (
+            Some(tok),
+            Request::TopK { id, .. }
+            | Request::MultiTopK { id, .. }
+            | Request::ObserveBatch { id, .. },
+        ) = (trailing, &mut req)
+        {
+            if let Some(tag) = tok.strip_prefix("id=") {
+                if tag.is_empty() || tag.len() > 64 {
+                    return Err(format!("{cmd}: id tag must be 1..=64 chars"));
+                }
+                *id = Some(tag.to_string());
+                trailing = it.next();
+            }
+        }
+        if trailing.is_some() {
             return Err(format!("{cmd}: trailing arguments"));
         }
         Ok(req)
@@ -183,19 +222,31 @@ impl Request {
     pub fn encode(&self) -> String {
         match self {
             Request::Observe { src, dst } => format!("OBS {src} {dst}"),
-            Request::ObserveBatch { pairs } => {
+            Request::ObserveBatch { pairs, id } => {
                 let mut s = format!("OBSERVEB {}", pairs.len());
                 for (src, dst) in pairs {
                     let _ = write!(s, " {src} {dst}");
                 }
+                if let Some(tag) = id {
+                    let _ = write!(s, " id={tag}");
+                }
                 s
             }
             Request::Recommend { src, threshold } => format!("REC {src} {threshold}"),
-            Request::TopK { src, k } => format!("TOPK {src} {k}"),
-            Request::MultiTopK { srcs, k } => {
+            Request::TopK { src, k, id } => {
+                let mut s = format!("TOPK {src} {k}");
+                if let Some(tag) = id {
+                    let _ = write!(s, " id={tag}");
+                }
+                s
+            }
+            Request::MultiTopK { srcs, k, id } => {
                 let mut s = format!("MTOPK {} {k}", srcs.len());
                 for src in srcs {
                     let _ = write!(s, " {src}");
+                }
+                if let Some(tag) = id {
+                    let _ = write!(s, " id={tag}");
                 }
                 s
             }
@@ -208,6 +259,8 @@ impl Request {
             Request::Trace(TraceCmd::On) => "TRACE on".into(),
             Request::Trace(TraceCmd::Off) => "TRACE off".into(),
             Request::Trace(TraceCmd::Dump(n)) => format!("TRACE dump {n}"),
+            Request::Events(n) if *n == usize::MAX => "EVENTS".into(),
+            Request::Events(n) => format!("EVENTS {n}"),
             Request::Health => "HEALTH".into(),
             Request::Ping => "PING".into(),
             Request::Quit => "QUIT".into(),

@@ -136,12 +136,14 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Minimal HTTP sidecar serving the Prometheus text exposition on
-/// `GET /metrics` (`[server] metrics_addr`, DESIGN.md §9). Deliberately
-/// not a web server: one request line, headers skipped, body formatted
-/// into a per-connection buffer, `Connection: close`. Scrapers (and
-/// `curl`) need nothing more, and the line protocol's `METRICS` verb
-/// remains the first-class interface.
+/// Minimal HTTP sidecar (`[server] metrics_addr`): the Prometheus text
+/// exposition on `GET /metrics` (DESIGN.md §9), a load-balancer health
+/// probe on `GET /healthz` (200 on the healthy rung, 503 otherwise), and
+/// the structured event log on `GET /events` (DESIGN.md §10).
+/// Deliberately not a web server: one request line, headers skipped, body
+/// formatted into a per-connection buffer, `Connection: close`. Scrapers
+/// (and `curl`) need nothing more, and the line protocol's `METRICS` /
+/// `HEALTH` / `EVENTS` verbs remain the first-class interface.
 pub struct MetricsSidecar {
     engine: Arc<Engine>,
     listener: TcpListener,
@@ -194,8 +196,10 @@ impl MetricsSidecar {
 }
 
 /// Answer one HTTP scrape: `GET /metrics` (or `/`) renders the registry,
-/// anything else 404s. The exposition is formatted straight into a
-/// per-connection `String` and written with an explicit `Content-Length`.
+/// `GET /healthz` answers 200/503 off the health rung, `GET /events`
+/// renders the event ring, anything else 404s. Bodies are formatted
+/// straight into a per-connection `String` and written with an explicit
+/// `Content-Length`.
 fn serve_scrape(engine: &Engine, stream: TcpStream) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -220,6 +224,30 @@ fn serve_scrape(engine: &Engine, stream: TcpStream) -> Result<()> {
         write!(
             writer,
             "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        )?;
+        writer.write_all(body.as_bytes())?;
+    } else if method == "GET" && path == "/healthz" {
+        // The rung IS the wire status: load balancers route on the code
+        // alone, the one-line body is for humans reading `curl -i`.
+        let (status, body) = match engine.health() {
+            Health::Healthy => ("200 OK", "healthy\n".to_string()),
+            rung => ("503 Service Unavailable", format!("{}\n", rung.as_str())),
+        };
+        write!(
+            writer,
+            "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        )?;
+        writer.write_all(body.as_bytes())?;
+    } else if method == "GET" && path == "/events" {
+        let mut body = String::with_capacity(4096);
+        crate::metrics::events::render_text(&mut body, usize::MAX);
+        write!(
+            writer,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; charset=utf-8\r\n\
              Content-Length: {}\r\nConnection: close\r\n\r\n",
             body.len()
         )?;
@@ -386,7 +414,7 @@ fn dispatch(
     // so batching cannot dodge the limit. Reads are never charged.
     if is_write {
         let cost = match &req {
-            Request::ObserveBatch { pairs } => pairs.len() as u64,
+            Request::ObserveBatch { pairs, .. } => pairs.len() as u64,
             _ => 1,
         };
         if let Err(retry_ms) = bucket.admit(cost) {
@@ -414,7 +442,7 @@ fn dispatch(
                 out.push_str("ERR shutting down");
             }
         }
-        Request::ObserveBatch { pairs } => {
+        Request::ObserveBatch { pairs, id } => {
             if shedding {
                 let (accepted, shed) = engine.observe_batch_shed(&pairs);
                 if shed == 0 {
@@ -430,6 +458,9 @@ fn dispatch(
                     let _ =
                         write!(out, "ERR shutting down (accepted {accepted}/{})", pairs.len());
                 }
+            }
+            if let Some(tag) = id {
+                let _ = write!(out, " id={tag}");
             }
         }
         Request::Recommend { src, threshold } => {
@@ -452,9 +483,12 @@ fn dispatch(
                 s.finish();
             }
         }
-        Request::TopK { src, k } => {
+        Request::TopK { src, k, id } => {
             let mut span = trace_t0.map(|t0| {
                 let mut s = trace::Span::start_at("TOPK", src, k as u64, t0);
+                if let Some(tag) = id.as_deref() {
+                    s.set_id(tag);
+                }
                 s.stage("parse");
                 s
             });
@@ -463,12 +497,15 @@ fn dispatch(
                 s.stage("infer");
             }
             let _ = write_items_body(out, &rec.items, rec.cumulative, rec.scanned);
+            if let Some(tag) = id {
+                let _ = write!(out, " id={tag}");
+            }
             if let Some(mut s) = span.take() {
                 s.stage("format");
                 s.finish();
             }
         }
-        Request::MultiTopK { srcs, k } => {
+        Request::MultiTopK { srcs, k, id } => {
             let mut span = trace_t0.map(|t0| {
                 let mut s = trace::Span::start_at(
                     "MTOPK",
@@ -476,6 +513,9 @@ fn dispatch(
                     k as u64,
                     t0,
                 );
+                if let Some(tag) = id.as_deref() {
+                    s.set_id(tag);
+                }
                 s.stage("parse");
                 s
             });
@@ -488,6 +528,9 @@ fn dispatch(
                 out.push(' ');
                 let _ = write_items_body(out, &r.items, r.cumulative, r.scanned);
             });
+            if let Some(tag) = id {
+                let _ = write!(out, " id={tag}");
+            }
             if let Some(mut s) = span.take() {
                 s.stage("infer+format");
                 s.finish();
@@ -666,7 +709,7 @@ fn dispatch(
             }
         }
         Request::Metrics => {
-            // The one multi-line response in the protocol (DESIGN.md §10):
+            // The one multi-line response in the protocol (DESIGN.md §11):
             // Prometheus text exposition terminated by a lone `# EOF` line.
             // `render_into` ends every sample with '\n'; the caller's
             // trailing newline closes the sentinel line.
@@ -702,9 +745,24 @@ fn dispatch(
                         }
                         let _ = write!(out, "{name}:{ns}");
                     }
+                    // Client request tag, only when the request carried one
+                    // (existing dump parsers see an unchanged line).
+                    if r.id_len > 0 {
+                        let _ = write!(out, " id={}", r.id_str());
+                    }
                 }
             }
         },
+        Request::Events(n) => {
+            // Single line, mirroring `TRACE dump`: `OK n=<count>` then
+            // ` | `-separated event records, newest first (DESIGN.md §10).
+            let events = crate::metrics::events::dump(n);
+            let _ = write!(out, "OK n={}", events.len());
+            for r in &events {
+                out.push_str(" | ");
+                crate::metrics::events::render_record(out, r);
+            }
+        }
         Request::Ping => out.push_str("OK pong"),
         Request::Promote => match replica {
             Some(r) => {
@@ -809,7 +867,7 @@ impl Client {
             writeln!(
                 self.writer,
                 "{}",
-                Request::ObserveBatch { pairs: chunk.to_vec() }.encode()
+                Request::ObserveBatch { pairs: chunk.to_vec(), id: None }.encode()
             )?;
             nchunks += 1;
         }
@@ -856,7 +914,7 @@ impl Client {
             writeln!(
                 self.writer,
                 "{}",
-                Request::MultiTopK { srcs: chunk.to_vec(), k }.encode()
+                Request::MultiTopK { srcs: chunk.to_vec(), k, id: None }.encode()
             )?;
             nchunks += 1;
         }
@@ -904,7 +962,7 @@ impl Client {
     }
 
     pub fn topk(&mut self, src: u64, k: usize) -> Result<Vec<(u64, f64)>> {
-        match self.request(&Request::TopK { src, k })? {
+        match self.request(&Request::TopK { src, k, id: None })? {
             Response::Items { items, .. } => Ok(items),
             other => anyhow::bail!("unexpected response {other:?}"),
         }
@@ -940,6 +998,14 @@ impl Client {
     /// `TRACE dump n`: the raw single-line span listing.
     pub fn trace_dump(&mut self, n: usize) -> Result<String> {
         match self.request(&Request::Trace(TraceCmd::Dump(n)))? {
+            Response::Ok(s) => Ok(s),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// `EVENTS n`: the raw single-line event-record listing.
+    pub fn events(&mut self, n: usize) -> Result<String> {
+        match self.request(&Request::Events(n))? {
             Response::Ok(s) => Ok(s),
             other => anyhow::bail!("unexpected response {other:?}"),
         }

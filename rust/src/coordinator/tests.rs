@@ -323,10 +323,15 @@ fn engine_meters_per_update_not_per_batch() {
 fn protocol_request_roundtrip() {
     for req in [
         Request::Observe { src: 1, dst: 2 },
-        Request::ObserveBatch { pairs: vec![(1, 2), (3, 4), (5, 6)] },
+        Request::ObserveBatch { pairs: vec![(1, 2), (3, 4), (5, 6)], id: None },
         Request::Recommend { src: 3, threshold: 0.9 },
-        Request::TopK { src: 4, k: 7 },
-        Request::MultiTopK { srcs: vec![4, 9, 11], k: 3 },
+        Request::TopK { src: 4, k: 7, id: None },
+        Request::TopK { src: 4, k: 7, id: Some("req-77".into()) },
+        Request::MultiTopK { srcs: vec![4, 9, 11], k: 3, id: None },
+        Request::MultiTopK { srcs: vec![4, 9, 11], k: 3, id: Some("batch.1".into()) },
+        Request::ObserveBatch { pairs: vec![(1, 2)], id: Some("w1".into()) },
+        Request::Events(usize::MAX),
+        Request::Events(16),
         Request::Prob { src: 1, dst: 9 },
         Request::Decay,
         Request::Repair,
@@ -363,6 +368,11 @@ fn protocol_rejects_malformed() {
         "MTOPK 0 3",
         "MTOPK 2 3 7",          // truncated
         "MTOPK 1 3 7 8",        // trailing
+        "TOPK 1 3 id=",         // empty id tag
+        "TOPK 1 3 id=a b",      // trailing after tag
+        "REC 1 0.5 id=x",       // tag on an untaggable verb
+        "EVENTS x",
+        "EVENTS 4 5",
         "REPL",
         "REPL GOODBYE",
         "REPL HELLO 1",         // missing shard count
@@ -642,7 +652,7 @@ fn tcp_degraded_rejects_writes_serves_reads_then_heals() {
     // Every mutation is refused with reason + retry hint…
     for req in [
         Request::Observe { src: 1, dst: 2 },
-        Request::ObserveBatch { pairs: vec![(1, 2), (3, 4)] },
+        Request::ObserveBatch { pairs: vec![(1, 2), (3, 4)], id: None },
         Request::Decay,
         Request::Repair,
     ] {
@@ -713,7 +723,7 @@ fn tcp_admission_ratelimits_writes_not_reads() {
         other => panic!("4th write must be throttled, got {other:?}"),
     }
     // OBSERVEB costs its pair count — batching cannot dodge the limit.
-    match client.request(&Request::ObserveBatch { pairs: vec![(1, 2); 100] }).unwrap() {
+    match client.request(&Request::ObserveBatch { pairs: vec![(1, 2); 100], id: None }).unwrap() {
         Response::Err(e) => assert!(e.starts_with("ratelimited"), "{e}"),
         other => panic!("batch must be throttled, got {other:?}"),
     }
@@ -760,7 +770,7 @@ fn tcp_overload_sheds_instead_of_blocking() {
         Response::Err(e) => assert_eq!(e, "overload shed=1"),
         other => panic!("a saturated queue must shed, got {other:?}"),
     }
-    match client.request(&Request::ObserveBatch { pairs: vec![(1, 2); 8] }).unwrap() {
+    match client.request(&Request::ObserveBatch { pairs: vec![(1, 2); 8], id: None }).unwrap() {
         Response::Err(e) => {
             assert!(e.starts_with("overload shed=8"), "{e}");
             assert!(e.contains("accepted=0"), "{e}");
@@ -1057,6 +1067,127 @@ fn tcp_trace_slow_query_capture() {
     );
 
     trace::reset();
+    engine.shutdown();
+}
+
+/// The `id=` request tag (DESIGN.md §10): echoed on TOPK/MTOPK/OBSERVEB
+/// response lines and stamped into the slow-query flight recorder.
+#[test]
+fn tcp_request_id_echo_and_flight_recorder_stamp() {
+    use crate::metrics::trace;
+    let _guard = trace::test_lock();
+    trace::reset();
+
+    let engine = Engine::new(&test_config(), 1);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let mut client = Client::connect(addr).unwrap();
+
+    // OBSERVEB echoes the tag on its ack.
+    match client
+        .request(&Request::ObserveBatch { pairs: vec![(1, 2), (1, 3)], id: Some("w7".into()) })
+        .unwrap()
+    {
+        Response::Ok(msg) => assert_eq!(msg, "n=2 id=w7"),
+        other => panic!("{other:?}"),
+    }
+    engine.quiesce();
+
+    // Untagged requests stay byte-identical to the old wire format.
+    match client.request(&Request::TopK { src: 1, k: 2, id: None }).unwrap() {
+        Response::Items { .. } => {}
+        other => panic!("{other:?}"),
+    }
+
+    // Tagged TOPK answers normally (the trailing id= token is ignored by
+    // the ITEMS parser) and, once slow capture is armed, the tag shows up
+    // in TRACE dump. MTOPK takes the same path.
+    trace::set_slow_query_us(1);
+    let mut tagged = None;
+    for _ in 0..50 {
+        client.request(&Request::TopK { src: 1, k: 2, id: Some("req-42".into()) }).unwrap();
+        let dump = client.trace_dump(16).unwrap();
+        tagged = dump.split(" | ").find(|seg| seg.contains("id=req-42")).map(str::to_string);
+        if tagged.is_some() {
+            break;
+        }
+    }
+    let rec = tagged.expect("tagged TOPK span never surfaced in TRACE dump");
+    assert!(rec.contains("verb=TOPK"), "{rec}");
+    assert!(rec.contains("src=1"), "{rec}");
+    match client
+        .request(&Request::MultiTopK { srcs: vec![1, 9], k: 2, id: Some("m1".into()) })
+        .unwrap()
+    {
+        Response::MultiItems(bodies) => assert_eq!(bodies.len(), 2),
+        other => panic!("{other:?}"),
+    }
+
+    trace::reset();
+    engine.shutdown();
+}
+
+/// The EVENTS wire verb and the sidecar's /healthz + /events routes
+/// (DESIGN.md §10).
+#[test]
+fn tcp_events_verb_and_sidecar_health_routes() {
+    use crate::metrics::events;
+    let _eguard = events::test_lock();
+    events::reset();
+
+    let engine = Engine::new(&test_config(), 1);
+    let server = Server::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let _handle = server.spawn();
+    let mut client = Client::connect(addr).unwrap();
+
+    // The ring is process-global, so parallel tests may land events here
+    // too — assert on the verb's shape and on our own records, never on
+    // exact counts.
+    assert!(client.events(8).unwrap().starts_with("n="));
+
+    // A health transition is an event; EVENTS drains it newest-first with
+    // the full record grammar.
+    engine.degrade_for_test("injected for events test");
+    let listing = client.events(8).unwrap();
+    assert!(listing.starts_with("n="), "{listing}");
+    let rec = listing
+        .split(" | ")
+        .find(|seg| seg.contains("kind=health"))
+        .unwrap_or_else(|| panic!("no health event in {listing}"));
+    for field in ["ts_ms=", "seq=", "level=error", "what=degraded"] {
+        assert!(rec.contains(field), "missing {field} in {rec}");
+    }
+
+    // Sidecar: /healthz follows the rung, /events renders the ring, and
+    // unknown paths still 404.
+    let sidecar = MetricsSidecar::bind(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let maddr = sidecar.local_addr();
+    let _mh = sidecar.spawn();
+    use std::io::{Read as _, Write as _};
+    let http_get = |path: &str| -> String {
+        let mut s = std::net::TcpStream::connect(maddr).unwrap();
+        s.write_all(format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes()).unwrap();
+        let mut http = String::new();
+        s.read_to_string(&mut http).unwrap();
+        http
+    };
+    let http = http_get("/healthz");
+    assert!(http.starts_with("HTTP/1.1 503"), "{http}");
+    assert!(http.contains("degraded"), "{http}");
+    engine.heal_for_test();
+    let http = http_get("/healthz");
+    assert!(http.starts_with("HTTP/1.1 200 OK"), "{http}");
+    assert!(http.contains("healthy"), "{http}");
+    let http = http_get("/events");
+    assert!(http.starts_with("HTTP/1.1 200 OK"), "{http}");
+    assert!(http.contains("kind=health"), "{http}");
+    assert!(http.contains("what=healed"), "{http}");
+    let http = http_get("/eventz");
+    assert!(http.starts_with("HTTP/1.1 404"), "{http}");
+
+    events::reset();
     engine.shutdown();
 }
 

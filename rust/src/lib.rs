@@ -4,6 +4,7 @@
 //! markov-chains"* (Derehag & Johansson, 2023). See DESIGN.md for the system
 //! inventory and EXPERIMENTS.md for the measured reproduction of every claim.
 
+pub mod audit;
 pub mod baselines;
 pub mod bench_harness;
 pub mod chain;

@@ -246,6 +246,9 @@ fn serve(m: &Matches) -> anyhow::Result<()> {
         }),
         None => None,
     };
+    // Correctness observatory ([audit], DESIGN.md §10): error sampling +
+    // invariant watchdog in one background thread.
+    engine.spawn_audit(None);
     let server = Server::bind(Arc::clone(&engine), &config.listen)?;
     println!(
         "mcprioq serving on {} ({} shards, {} ingest workers, decay {:?}, durability {})",
@@ -320,6 +323,9 @@ fn serve_follower(
         }),
         None => None,
     };
+    // Observatory on the follower too, with the replica's lag feeding the
+    // repl_lag watchdog check (DESIGN.md §10).
+    engine.spawn_audit(Some(Arc::clone(&handle.state)));
     let server =
         Server::bind_replica(Arc::clone(&engine), &config.listen, Arc::clone(&handle.state))?;
     println!(
@@ -657,8 +663,80 @@ fn bench(m: &Matches) -> anyhow::Result<()> {
         );
     }
     layout_table.finish();
+
+    // ---- correctness observatory: staleness-vs-error curve ----
+    // One row per target staleness, so the artifact records what the
+    // `chain.snap_staleness` serving bound costs in rank/mass error
+    // (DESIGN.md §10).
+    let audit_overhead = {
+        use mcprioq::bench_harness::{audit_overhead_probe, staleness_error_curve};
+        println!("mcprioq bench: audit staleness-vs-error curve, fanout {read_fanout}");
+        let mut stale0_mass_error = 0.0f64;
+        for pt in staleness_error_curve(&[0, 16, 64, 256, 1024], read_fanout as usize) {
+            if pt.target_staleness == 0 {
+                stale0_mass_error = pt.mass_error;
+            }
+            read_json.row(&[
+                ("mode", JsonVal::Str("audit_staleness_curve".to_string())),
+                ("fanout", JsonVal::Int(read_fanout)),
+                ("target_staleness", JsonVal::Int(pt.target_staleness)),
+                ("staleness", JsonVal::Int(pt.staleness)),
+                ("mass_error", JsonVal::Num(pt.mass_error)),
+                ("rank_inversions", JsonVal::Int(pt.rank_inversions)),
+                ("displacement", JsonVal::Int(pt.displacement)),
+                ("samples", JsonVal::Int(pt.samples as u64)),
+            ]);
+            println!(
+                "  staleness {:>5} (target {:>4}): mass err {:.3e}, inversions {}, displacement {}",
+                pt.staleness,
+                pt.target_staleness,
+                pt.mass_error,
+                pt.rank_inversions,
+                pt.displacement
+            );
+        }
+
+        // ---- audit-overhead gate: armed auditor must cost < 2% reads ----
+        let probe_threads = read_threads.iter().copied().max().unwrap_or(2).min(4);
+        println!(
+            "mcprioq bench: audit overhead, {probe_threads} wire clients, {}ms/window",
+            duration.as_millis()
+        );
+        let probe = audit_overhead_probe(&bench, duration, probe_threads, read_fanout as usize)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        read_json.row(&[
+            ("mode", JsonVal::Str("audit_overhead".to_string())),
+            ("threads", JsonVal::Int(probe_threads as u64)),
+            ("reads_per_s_off", JsonVal::Num(probe.reads_per_s_off)),
+            ("reads_per_s_on", JsonVal::Num(probe.reads_per_s_on)),
+            ("overhead_frac", JsonVal::Num(probe.overhead_frac)),
+            ("audit_rounds", JsonVal::Int(probe.audit_rounds)),
+        ]);
+        println!(
+            "  disarmed {} | armed {} | overhead {:.2}% ({} audit rounds)",
+            fmt_rate(probe.reads_per_s_off),
+            fmt_rate(probe.reads_per_s_on),
+            100.0 * probe.overhead_frac,
+            probe.audit_rounds
+        );
+        (probe.overhead_frac, stale0_mass_error)
+    };
     let p = read_json.finish(&json_dir.join("BENCH_read.json"))?;
     println!("wrote {}", p.display());
+    // Gates bail after the artifact is written, so a failed run still
+    // leaves the evidence on disk.
+    if audit_overhead.1 != 0.0 {
+        anyhow::bail!(
+            "audit exactness gate: mass error {:.3e} at staleness 0 (must be exactly 0)",
+            audit_overhead.1
+        );
+    }
+    if audit_overhead.0 > 0.02 {
+        anyhow::bail!(
+            "audit overhead gate: armed auditor costs {:.2}% read throughput (> 2%)",
+            100.0 * audit_overhead.0
+        );
+    }
 
     // ---- telemetry-overhead gate: armed tracing must cost < 3% reads ----
     {

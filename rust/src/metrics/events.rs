@@ -1,0 +1,243 @@
+//! Structured event log (DESIGN.md §10): a bounded in-process ring of
+//! timestamped, leveled, `Copy` event records — health transitions,
+//! quarantine/heal, promotion, checkpoint/compaction, chaos injections,
+//! audit violations. The ring is the system's black box: when a scrape
+//! shows `mcprioq_invariant_violations_total` ticking, `EVENTS` (wire)
+//! or `GET /events` (sidecar) answers *what happened around then* without
+//! grepping logs.
+//!
+//! Design mirrors [`super::trace`]: fixed-capacity ring, `Copy` records
+//! with `&'static str` identity (no allocation on the emit path beyond
+//! the one-time ring), newest-first dumps, and poisoning-tolerant locks.
+//! Unlike trace spans, events are rare (transitions, not requests), so a
+//! single process-wide ring behind a mutex is cheap — emit is a lock,
+//! two stores, and a timestamp, and it is called on paths that already
+//! do I/O or take maintenance locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Ring capacity: enough for hours of transition-rate events; a chaos
+/// run emitting one event per injected fault stays well inside it.
+const RING_EVENTS: usize = 1024;
+
+/// Severity of an event. `Warn` marks degradations the system absorbs
+/// (quarantine, shed bursts, chaos injections); `Error` marks contract
+/// breaches (invariant violations, replication faults).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// One event. `Copy` + `'static` identity so records move through the
+/// ring and out of dumps without allocation. `kind` names the subsystem
+/// edge ("health", "checkpoint", "promotion", "audit", "chaos", ...),
+/// `what` the specific transition or check; `a`/`b` carry two
+/// kind-specific integers (documented per emitter — e.g. checkpoint
+/// generation + bytes, violation count + shard).
+#[derive(Clone, Copy, Debug)]
+pub struct EventRecord {
+    /// Global emit order (1-based); later seq = later event.
+    pub seq: u64,
+    /// Milliseconds since process start (monotonic clock, not wall time:
+    /// events correlate with each other and with uptime, not calendars).
+    pub ts_ms: u64,
+    pub level: Level,
+    pub kind: &'static str,
+    pub what: &'static str,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Default for EventRecord {
+    fn default() -> Self {
+        EventRecord { seq: 0, ts_ms: 0, level: Level::Info, kind: "", what: "", a: 0, b: 0 }
+    }
+}
+
+/// Fixed-capacity overwrite ring (same shape as the trace ring): `next`
+/// is the write cursor, `len` saturates at capacity.
+struct Ring {
+    slots: Vec<EventRecord>,
+    next: usize,
+    len: usize,
+    cap: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { slots: vec![EventRecord::default(); cap], next: 0, len: 0, cap }
+    }
+
+    fn push(&mut self, rec: EventRecord) {
+        self.slots[self.next] = rec;
+        self.next = (self.next + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    /// Append the newest `n` records into `out`, newest first.
+    fn copy_newest(&self, n: usize, out: &mut Vec<EventRecord>) {
+        let take = n.min(self.len);
+        for i in 0..take {
+            // next-1 is the newest slot; walk backwards with wraparound.
+            let idx = (self.next + self.cap - 1 - i) % self.cap;
+            out.push(self.slots[idx]);
+        }
+    }
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(Ring::new(RING_EVENTS)))
+}
+
+/// A panicking emitter must not wedge the event log for everyone else;
+/// records are `Copy`, so a poisoned ring is still structurally sound.
+fn lock_clean(m: &Mutex<Ring>) -> MutexGuard<'_, Ring> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Record one event. Cheap enough for any transition path (one short
+/// critical section, no allocation), but not meant for per-request use —
+/// that is what trace spans are for.
+pub fn emit(level: Level, kind: &'static str, what: &'static str, a: u64, b: u64) {
+    let rec = EventRecord {
+        seq: SEQ.fetch_add(1, Ordering::Relaxed) + 1,
+        ts_ms: epoch().elapsed().as_millis() as u64,
+        level,
+        kind,
+        what,
+        a,
+        b,
+    };
+    lock_clean(ring()).push(rec);
+}
+
+/// Total events emitted since process start (monotone; feeds the
+/// `mcprioq_events_emitted_total` registry counter).
+pub fn emitted() -> u64 {
+    SEQ.load(Ordering::Relaxed)
+}
+
+/// The newest `n` events, newest first.
+pub fn dump(n: usize) -> Vec<EventRecord> {
+    let mut out = Vec::new();
+    lock_clean(ring()).copy_newest(n, &mut out);
+    out
+}
+
+/// Render one record in the event grammar (DESIGN.md §10):
+/// `ts_ms=<u64> seq=<u64> level=<info|warn|error> kind=<word> what=<word> a=<u64> b=<u64>`.
+pub fn render_record(out: &mut String, r: &EventRecord) {
+    use std::fmt::Write as _;
+    let _ = write!(
+        out,
+        "ts_ms={} seq={} level={} kind={} what={} a={} b={}",
+        r.ts_ms,
+        r.seq,
+        r.level.as_str(),
+        r.kind,
+        r.what,
+        r.a,
+        r.b
+    );
+}
+
+/// Render the newest `n` events one-per-line, newest first — the body of
+/// the sidecar's `GET /events`.
+pub fn render_text(out: &mut String, n: usize) {
+    for r in dump(n) {
+        render_record(out, &r);
+        out.push('\n');
+    }
+}
+
+/// Drop all buffered events (tests; the seq counter keeps running so
+/// ordering stays globally monotone across a reset).
+pub fn reset() {
+    let mut g = lock_clean(ring());
+    g.next = 0;
+    g.len = 0;
+}
+
+/// Serializes tests that share the process-wide ring.
+#[cfg(test)]
+pub(crate) fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_and_dump_newest_first() {
+        let _g = test_lock();
+        reset();
+        emit(Level::Info, "health", "healthy->degraded", 1, 0);
+        emit(Level::Warn, "chaos", "enospc", 2, 0);
+        emit(Level::Error, "audit", "cum_monotone", 3, 7);
+        let got = dump(10);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].kind, "audit");
+        assert_eq!(got[0].what, "cum_monotone");
+        assert_eq!(got[0].a, 3);
+        assert_eq!(got[0].b, 7);
+        assert_eq!(got[1].kind, "chaos");
+        assert_eq!(got[2].kind, "health");
+        assert!(got[0].seq > got[1].seq && got[1].seq > got[2].seq);
+    }
+
+    #[test]
+    fn dump_respects_n_and_ring_wraps() {
+        let _g = test_lock();
+        reset();
+        for i in 0..(RING_EVENTS as u64 + 10) {
+            emit(Level::Info, "fill", "wrap", i, 0);
+        }
+        let newest = dump(2);
+        assert_eq!(newest.len(), 2);
+        assert_eq!(newest[0].a, RING_EVENTS as u64 + 9);
+        assert_eq!(newest[1].a, RING_EVENTS as u64 + 8);
+        // Saturated: a full dump returns exactly the capacity, and the
+        // oldest surviving record is capacity slots behind the newest.
+        let all = dump(usize::MAX);
+        assert_eq!(all.len(), RING_EVENTS);
+        assert_eq!(all.last().unwrap().a, 10);
+    }
+
+    #[test]
+    fn render_grammar_round_trips_fields() {
+        let _g = test_lock();
+        reset();
+        emit(Level::Warn, "checkpoint", "commit", 4, 4096);
+        let mut s = String::new();
+        render_text(&mut s, 1);
+        assert!(s.contains("level=warn"), "{s}");
+        assert!(s.contains("kind=checkpoint"), "{s}");
+        assert!(s.contains("what=commit"), "{s}");
+        assert!(s.contains("a=4 b=4096"), "{s}");
+        assert!(s.ends_with('\n'));
+    }
+}

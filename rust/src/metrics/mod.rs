@@ -2,6 +2,7 @@
 //! recorders. Lock-free recording (atomics only) so metrics can sit on the
 //! serving hot path.
 
+pub mod events;
 mod histogram;
 mod perf_counters;
 pub mod registry;

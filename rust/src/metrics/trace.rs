@@ -32,6 +32,8 @@ pub const RING_SPANS: usize = 256;
 pub const SLOW_SPANS: usize = 128;
 /// Stage slots per span (excess stage marks are dropped, not grown).
 pub const MAX_STAGES: usize = 6;
+/// Inline bytes kept of a request's `id=` tag (longer tags truncate).
+pub const MAX_ID_BYTES: usize = 16;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 static SLOW_US: AtomicU64 = AtomicU64::new(0);
@@ -54,6 +56,10 @@ pub struct SpanRecord {
     pub slow: bool,
     pub nstages: usize,
     pub stages: [(&'static str, u64); MAX_STAGES],
+    /// Client request tag (`id=<token>` on the wire), truncated to the
+    /// inline capacity — fixed bytes keep the record `Copy`.
+    pub id: [u8; MAX_ID_BYTES],
+    pub id_len: u8,
 }
 
 impl Default for SpanRecord {
@@ -67,7 +73,16 @@ impl Default for SpanRecord {
             slow: false,
             nstages: 0,
             stages: [("", 0); MAX_STAGES],
+            id: [0; MAX_ID_BYTES],
+            id_len: 0,
         }
+    }
+}
+
+impl SpanRecord {
+    /// The request tag as text ("" when the request was untagged).
+    pub fn id_str(&self) -> &str {
+        std::str::from_utf8(&self.id[..self.id_len as usize]).unwrap_or("")
     }
 }
 
@@ -168,6 +183,17 @@ impl Span {
         }
     }
 
+    /// Stamp the client's request tag onto the span (truncated to
+    /// [`MAX_ID_BYTES`] on a character boundary).
+    pub fn set_id(&mut self, tag: &str) {
+        let mut end = tag.len().min(MAX_ID_BYTES);
+        while end > 0 && !tag.is_char_boundary(end) {
+            end -= 1;
+        }
+        self.rec.id[..end].copy_from_slice(&tag.as_bytes()[..end]);
+        self.rec.id_len = end as u8;
+    }
+
     /// Close the current stage: everything since the previous mark (or
     /// the span start) is attributed to `name`.
     pub fn stage(&mut self, name: &'static str) {
@@ -197,6 +223,22 @@ impl Span {
             MY_RING.with(|r| lock_clean(r).push(self.rec));
         }
     }
+}
+
+/// Drop a synthetic zero-duration marker straight into the slow-query
+/// flight recorder, regardless of the armed knobs — for events that must
+/// be visible in the next `TRACE dump` (invariant violations, audit
+/// escalations). `src`/`k` carry verb-specific detail, like on a span.
+pub fn record_mark(verb: &'static str, src: u64, k: u64) {
+    let rec = SpanRecord {
+        seq: SEQ.fetch_add(1, Ordering::Relaxed) + 1,
+        verb,
+        src,
+        k,
+        slow: true,
+        ..SpanRecord::default()
+    };
+    lock_clean(slow_log()).push(rec);
 }
 
 /// The most recent `n` captured spans (slow log + every thread ring),
@@ -297,6 +339,36 @@ mod tests {
 
         reset();
         assert!(dump(10).is_empty());
+    }
+
+    #[test]
+    fn id_tags_and_marks_reach_the_flight_recorder() {
+        let _guard = test_lock();
+        reset();
+        // A mark lands in the slow log with nothing armed at all.
+        record_mark("AUDIT", 3, 0);
+        let spans = dump(10);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].verb, "AUDIT");
+        assert_eq!(spans[0].src, 3);
+        assert!(spans[0].slow);
+        assert_eq!(spans[0].id_str(), "");
+
+        // set_id round-trips and truncates on a char boundary.
+        set_enabled(true);
+        let mut s = Span::start("TOPK", 1, 2);
+        s.set_id("req-42");
+        s.finish();
+        assert_eq!(dump(1)[0].id_str(), "req-42");
+        let mut s = Span::start("TOPK", 1, 2);
+        s.set_id("0123456789abcdefOVERFLOW");
+        s.finish();
+        assert_eq!(dump(1)[0].id_str(), "0123456789abcdef");
+        let mut s = Span::start("TOPK", 1, 2);
+        s.set_id("0123456789abcdeé"); // é straddles the 16-byte cut
+        s.finish();
+        assert_eq!(dump(1)[0].id_str(), "0123456789abcde");
+        reset();
     }
 
     #[test]

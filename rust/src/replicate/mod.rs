@@ -202,7 +202,15 @@ impl ReplicaState {
     /// drain their queues and exit). Writes are admitted only once that
     /// wind-down completes — see [`ReplicaState::writable`].
     pub fn promote(&self) {
-        self.promoted.store(true, Ordering::Release);
+        if !self.promoted.swap(true, Ordering::AcqRel) {
+            crate::metrics::events::emit(
+                crate::metrics::events::Level::Warn,
+                "replicate",
+                "promoted",
+                self.lag_records(),
+                0,
+            );
+        }
     }
 
     pub fn promoted(&self) -> bool {
@@ -229,7 +237,20 @@ impl ReplicaState {
 
     pub(crate) fn set_fault(&self, msg: String) {
         eprintln!("[replicate] follower fault: {msg}");
-        lock_clean(&self.fault).get_or_insert(msg);
+        let mut fault = lock_clean(&self.fault);
+        if fault.is_none() {
+            // First fault wins (and is the one event-logged), matching the
+            // sticky message the HEALTH verb reports.
+            *fault = Some(msg);
+            drop(fault);
+            crate::metrics::events::emit(
+                crate::metrics::events::Level::Error,
+                "replicate",
+                "fault",
+                self.lag_records(),
+                0,
+            );
+        }
     }
 
     pub fn fault(&self) -> Option<String> {

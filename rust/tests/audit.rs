@@ -1,0 +1,184 @@
+//! Correctness-observatory integration tests (DESIGN.md §10): the
+//! approximation-error auditor must read exactly zero at quiescence, and
+//! the invariant watchdog must stay silent through interleaved
+//! maintenance and through the PR 7 storage-fault chaos plans.
+
+use std::time::{Duration, Instant};
+
+use mcprioq::audit::{AuditConfig, Auditor};
+use mcprioq::config::{PersistSection, ServerConfig};
+use mcprioq::coordinator::{Engine, Health};
+use mcprioq::persist::open_engine;
+use mcprioq::testutil::TempDir;
+
+/// Deterministic xorshift stream for the interleaved workload.
+fn stream(n: u64, mut seed: u64) -> Vec<(u64, u64)> {
+    (0..n)
+        .map(|_| {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            (seed % 31, (seed >> 8) % 17 + 1)
+        })
+        .collect()
+}
+
+fn audit_cfg() -> AuditConfig {
+    AuditConfig { sample_nodes: 64, topk: 8, check_nodes: 4096, ..AuditConfig::default() }
+}
+
+fn wait_healthy(engine: &Engine, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    while engine.health() != Health::Healthy {
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    true
+}
+
+/// Property: total probability mass is conserved across interleaved
+/// decay / repair / observe — once quiescent (and after a repair rebases
+/// any increment-vs-decay fused-sum skew), every node's full-depth read
+/// sums to 1, the audit probe's mass error reads exactly 0, and the
+/// watchdog sees zero violations. At 1, 2, and 8 shards.
+#[test]
+fn mass_conserved_across_interleaved_maintenance() {
+    for shards in [1usize, 2, 8] {
+        let mut cfg = ServerConfig { shards, queue_capacity: 65_536, ..Default::default() };
+        // Staleness bound 0: every read rebuilds its snapshot, so a
+        // quiescent probe compares two views of identical state.
+        cfg.chain.snap_staleness = 0;
+        let engine = Engine::new(&cfg, 2);
+
+        let pairs = stream(15_000, 0x5EED ^ shards as u64);
+        for (round, chunk) in pairs.chunks(500).enumerate() {
+            engine.observe_batch(chunk);
+            match round % 5 {
+                3 => {
+                    engine.decay();
+                }
+                4 => {
+                    engine.repair();
+                }
+                _ => {}
+            }
+            // Reads interleave too: they publish the snapshots the
+            // auditor probes (and the paper's read path serves).
+            engine.infer_topk(chunk[0].0, 4);
+        }
+        engine.quiesce();
+        // Rebase any fused-sum skew left by increments racing decay's
+        // total halving, then publish fresh snapshots everywhere.
+        engine.repair();
+        for src in 0..31u64 {
+            engine.infer_topk(src, 8);
+        }
+
+        // Full-depth mass: every live src's probabilities sum to 1.
+        let mut live_srcs = 0;
+        for src in 0..31u64 {
+            let rec = engine.infer_topk(src, 64);
+            if rec.items.is_empty() {
+                continue;
+            }
+            live_srcs += 1;
+            assert!(
+                (rec.cumulative - 1.0).abs() < 1e-9,
+                "shards={shards} src={src}: mass {} != 1",
+                rec.cumulative
+            );
+        }
+        assert!(live_srcs > 0, "shards={shards}: workload left no live nodes");
+
+        // The audit probe agrees: exact at quiescence.
+        let samples = engine.audit_error_samples(64, 8);
+        assert!(!samples.is_empty(), "shards={shards}: no snapshot-bearing nodes to probe");
+        for s in &samples {
+            assert_eq!(s.staleness, 0, "shards={shards} src={}: stale snapshot", s.src);
+            assert_eq!(s.rank_inversions, 0, "shards={shards} src={}", s.src);
+            assert_eq!(s.displacement, 0, "shards={shards} src={}", s.src);
+            assert_eq!(s.mass_error, 0.0, "shards={shards} src={}", s.src);
+        }
+
+        // And the watchdog stays silent over the whole structure.
+        let mut auditor = Auditor::new(engine.telemetry(), audit_cfg());
+        let mut violations = 0;
+        for _ in 0..8 {
+            violations += engine.audit_round(&mut auditor, None);
+        }
+        assert_eq!(violations, 0, "shards={shards}: invariant violations at quiescence");
+        assert_eq!(engine.health(), Health::Healthy);
+        engine.shutdown();
+    }
+}
+
+/// The PR 7 chaos suite under the watchdog: a seeded ENOSPC window parks
+/// batches and degrades the engine, but no structural invariant may ever
+/// break — the audit total must be exactly zero before, during, and
+/// after the fault, and the engine must still heal.
+#[test]
+fn chaos_fault_plan_yields_zero_invariant_violations() {
+    for shards in [1usize, 2, 8] {
+        let tmp = TempDir::new(&format!("audit-chaos-{shards}"));
+        let config = ServerConfig {
+            shards,
+            queue_capacity: 65_536,
+            persist: PersistSection {
+                data_dir: tmp.join("run").to_string_lossy().into_owned(),
+                fsync: "never".into(),
+                checkpoint_interval_ms: 0,
+                fault_plan: "seed=11;enospc_after=16384;enospc_window_ms=200".into(),
+                ..PersistSection::default()
+            },
+            ..Default::default()
+        };
+        let (engine, _) = open_engine(&config, 2).unwrap();
+        let mut auditor = Auditor::new(engine.telemetry(), audit_cfg());
+
+        let pairs = stream(30_000, 0xC0FFEE ^ shards as u64);
+        let mut violations = 0u64;
+        for chunk in pairs.chunks(256) {
+            engine.observe_batch(chunk);
+            engine.infer_topk(chunk[0].0, 4);
+            violations += engine.audit_round(&mut auditor, None);
+        }
+        engine.quiesce();
+        assert!(
+            wait_healthy(&engine, Duration::from_secs(30)),
+            "shards={shards}: never healed; reason={}",
+            engine.health_reason()
+        );
+        // Post-heal: checkpoint so the ckpt-chain check sees a real
+        // generation, then keep auditing through decay + repair.
+        engine.checkpoint().unwrap();
+        engine.decay();
+        engine.repair();
+        for _ in 0..16 {
+            violations += engine.audit_round(&mut auditor, None);
+        }
+        assert_eq!(violations, 0, "shards={shards}: chaos run broke an invariant");
+        assert_eq!(engine.health(), Health::Healthy, "{}", engine.health_reason());
+
+        // The exposition carries the observatory families with every
+        // violation counter at zero.
+        let mut body = String::new();
+        engine.render_metrics(&mut body);
+        for family in [
+            "mcprioq_audit_rank_error",
+            "mcprioq_audit_mass_error",
+            "mcprioq_audit_staleness",
+            "mcprioq_invariant_violations_total",
+        ] {
+            assert!(body.contains(family), "missing {family} in exposition");
+        }
+        for line in body.lines() {
+            if line.starts_with("mcprioq_invariant_violations_total") {
+                let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert_eq!(v, 0.0, "nonzero violation counter: {line}");
+            }
+        }
+        engine.shutdown();
+    }
+}

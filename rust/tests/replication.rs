@@ -126,7 +126,7 @@ fn follower_full_stream_matches_leader_across_layouts() {
             client.topk(hot, 5).unwrap(),
             "{shards} shards replica read"
         );
-        match fclient.request(&Request::ObserveBatch { pairs: vec![(1, 2)] }).unwrap() {
+        match fclient.request(&Request::ObserveBatch { pairs: vec![(1, 2)], id: None }).unwrap() {
             Response::Err(e) => assert!(e.contains("read-only"), "{e}"),
             other => panic!("write on follower must fail, got {other:?}"),
         }
@@ -173,7 +173,7 @@ fn promote_flips_follower_writable() {
     let _fh = fsrv.spawn();
     let mut fclient = Client::connect(faddr).unwrap();
     assert!(matches!(
-        fclient.request(&Request::ObserveBatch { pairs: vec![(7, 8)] }).unwrap(),
+        fclient.request(&Request::ObserveBatch { pairs: vec![(7, 8)], id: None }).unwrap(),
         Response::Err(_)
     ));
     match fclient.request(&Request::Promote).unwrap() {
