@@ -16,12 +16,12 @@
 //!
 //! Run: `cargo run --release --example paging_sim`
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use mcprioq::config::ServerConfig;
 use mcprioq::coordinator::{DecayScheduler, Engine};
+use mcprioq::sync::shim::{AtomicBool, AtomicU64, Ordering};
 use mcprioq::testutil::Rng64;
 use mcprioq::workload::{MobilityConfig, MobilityTrace, TransitionStream};
 

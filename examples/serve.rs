@@ -4,12 +4,12 @@
 //!
 //! Run: `cargo run --release --example serve`
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use mcprioq::config::ServerConfig;
 use mcprioq::coordinator::{Client, DecayScheduler, Engine, Server};
+use mcprioq::sync::shim::{AtomicU64, Ordering};
 use mcprioq::metrics::Histogram;
 use mcprioq::testutil::Rng64;
 use mcprioq::workload::{TransitionStream, ZipfChainStream};

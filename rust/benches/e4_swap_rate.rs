@@ -8,12 +8,12 @@
 //! loads are the adversarial cases. Also measures ticket-skip rate under
 //! concurrency (the price of never blocking).
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use mcprioq::bench_harness::{bench_mode_from_env, Table};
 use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::sync::shim::{AtomicU64, Ordering};
 use mcprioq::testutil::Rng64;
 use mcprioq::workload::{TransitionStream, ZipfChainStream};
 

@@ -9,11 +9,11 @@
 //! This is the measured counterpart of the swap design in Fig. 2.
 
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use mcprioq::bench_harness::{bench_mode_from_env, Table};
 use mcprioq::chain::{ChainConfig, McPrioQ};
+use mcprioq::sync::shim::{AtomicBool, Ordering};
 use mcprioq::workload::{TransitionStream, ZipfChainStream};
 
 const FANOUT: u64 = 64;

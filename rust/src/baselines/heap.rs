@@ -4,11 +4,11 @@
 //! not for cumulative-probability scans.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::RwLock;
 
 use super::{recommend_threshold, recommend_topk, MarkovModel};
 use crate::chain::Recommendation;
+use crate::sync::shim::{AtomicUsize, Ordering};
 
 #[derive(Default)]
 struct HeapNode {

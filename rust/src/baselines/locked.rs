@@ -2,11 +2,11 @@
 //! reader-writer-lock chain.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, RwLock};
 
 use super::{recommend_threshold, recommend_topk, MarkovModel};
 use crate::chain::Recommendation;
+use crate::sync::shim::{AtomicUsize, Ordering};
 
 /// Per-node state used by both locked baselines: counts map + a sorted view
 /// rebuilt lazily (dirty flag) so inference matches MCPrioQ's head-first

@@ -9,11 +9,11 @@
 //! *structural* costs and E1/E3 the locking overhead.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::RwLock;
 
 use super::{recommend_threshold, recommend_topk, MarkovModel};
 use crate::chain::Recommendation;
+use crate::sync::shim::{AtomicUsize, Ordering};
 
 const MAX_LEVEL: usize = 12;
 

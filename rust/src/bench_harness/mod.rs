@@ -920,7 +920,7 @@ pub fn audit_overhead_probe(
     use crate::audit::{AuditConfig, Auditor};
     use crate::config::ServerConfig;
     use crate::coordinator::{Client, Engine, Server};
-    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use crate::sync::shim::{AtomicBool, AtomicU64, Ordering};
     use std::sync::Arc;
 
     let threads = threads.max(1);

@@ -29,9 +29,9 @@
 
 use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
 use std::cell::RefCell;
-use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
 
 use crate::prioq::Node;
+use crate::sync::shim::{fence, AtomicU64, AtomicUsize, Ordering};
 
 /// Block size == block alignment: the owning block of any interior
 /// pointer is `ptr & !(BLOCK_BYTES - 1)`.
@@ -67,10 +67,13 @@ fn block_layout() -> Layout {
 /// Allocate a block whose header starts at `initial_live`.
 fn new_block(initial_live: usize) -> *mut u8 {
     let layout = block_layout();
+    // SAFETY: `layout` has non-zero size (BLOCK_BYTES).
     let ptr = unsafe { alloc(layout) };
     if ptr.is_null() {
         handle_alloc_error(layout);
     }
+    // SAFETY: `ptr` is a fresh, aligned allocation of BLOCK_BYTES, large
+    // enough for the header (static-asserted above).
     unsafe {
         (ptr as *mut BlockHeader).write(BlockHeader { live: AtomicUsize::new(initial_live) })
     };
@@ -78,22 +81,34 @@ fn new_block(initial_live: usize) -> *mut u8 {
     ptr
 }
 
+/// # Safety
+/// `ptr_in_block` must point into a live arena block (header initialized,
+/// not yet deallocated).
 #[inline]
 unsafe fn header<'a>(ptr_in_block: *mut u8) -> &'a BlockHeader {
     let block = (ptr_in_block as usize & !(BLOCK_BYTES - 1)) as *mut BlockHeader;
-    &*block
+    // SAFETY: size == align, so masking recovers the block base; the
+    // caller guarantees the block (and thus its slot-0 header) is live.
+    unsafe { &*block }
 }
 
 /// Drop one reference (a node or the open ref) on the block owning
 /// `ptr_in_block`; frees the block when it was the last.
+///
+/// # Safety
+/// `ptr_in_block` must point into a live arena block, and the caller must
+/// own one reference (node or open ref) that it gives up with this call.
 unsafe fn release_ref(ptr_in_block: *mut u8) {
-    let hdr = header(ptr_in_block);
+    // SAFETY: the block is live per this function's contract.
+    let hdr = unsafe { header(ptr_in_block) };
     if hdr.live.fetch_sub(1, Ordering::Release) == 1 {
         // Acquire the other releasers' writes before the block memory is
         // handed back (classic refcount teardown fence).
         fence(Ordering::Acquire);
         let block = (ptr_in_block as usize & !(BLOCK_BYTES - 1)) as *mut u8;
-        dealloc(block, block_layout());
+        // SAFETY: the count hit zero, so we hold the last reference; the
+        // block came from `alloc` with this exact layout.
+        unsafe { dealloc(block, block_layout()) };
         BLOCKS_FREED.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -111,11 +126,14 @@ impl ThreadArena {
     fn alloc_slot(&mut self) -> *mut u8 {
         if self.block.is_null() || self.next_slot >= SLOTS_PER_BLOCK {
             if !self.block.is_null() {
+                // SAFETY: dropping this thread's open ref on a live block.
                 unsafe { release_ref(self.block) };
             }
             self.block = new_block(1); // 1 = the open ref
             self.next_slot = 1; // slot 0 is the header
         }
+        // SAFETY: `next_slot < SLOTS_PER_BLOCK`, so the offset stays inside
+        // the block allocation.
         let p = unsafe { self.block.add(self.next_slot * SLOT_BYTES) };
         self.next_slot += 1;
         p
@@ -125,6 +143,7 @@ impl ThreadArena {
 impl Drop for ThreadArena {
     fn drop(&mut self) {
         if !self.block.is_null() {
+            // SAFETY: dropping this thread's open ref on a live block.
             unsafe { release_ref(self.block) };
         }
     }
@@ -143,6 +162,7 @@ pub(crate) fn alloc(init: Node) -> *mut Node {
         let mut a = a.borrow_mut();
         let p = a.alloc_slot();
         // Count the node before the pointer escapes this thread.
+        // SAFETY: `p` points into this thread's live open block.
         unsafe { header(p) }.live.fetch_add(1, Ordering::Relaxed);
         p
     });
@@ -151,10 +171,12 @@ pub(crate) fn alloc(init: Node) -> *mut Node {
         // TLS teardown (a detached thread dropping an EdgeList during its
         // own exit): a one-off block owned solely by this node. live = 1 is
         // the node itself — no open ref, the release frees the block.
+        // SAFETY: slot 1 is in bounds (SLOTS_PER_BLOCK > 1).
         Err(_) => unsafe { new_block(1).add(SLOT_BYTES) },
     };
     NODES_LIVE.fetch_add(1, Ordering::Relaxed);
     let node = p as *mut Node;
+    // SAFETY: `p` is a fresh, 64-byte-aligned slot sized for one Node.
     unsafe { node.write(init) };
     node
 }
@@ -169,9 +191,12 @@ pub(crate) fn alloc(init: Node) -> *mut Node {
 /// remaining references (outside the RCU grace period that deferred this
 /// call).
 pub(crate) unsafe fn release(node: *mut Node) {
-    std::ptr::drop_in_place(node); // no-op today; future-proofs Node fields
+    // SAFETY: `node` came from `alloc` (initialized, live) and is released
+    // exactly once per this function's contract.
+    unsafe { std::ptr::drop_in_place(node) }; // no-op today; future-proofs Node fields
     NODES_LIVE.fetch_sub(1, Ordering::Relaxed);
-    release_ref(node as *mut u8);
+    // SAFETY: `node` holds one block reference, given up here.
+    unsafe { release_ref(node as *mut u8) };
 }
 
 /// Process-wide arena gauges (STATS / `EngineStats`).
@@ -268,12 +293,14 @@ mod tests {
             nodes.push(n);
         }
         for (i, n) in nodes.iter().enumerate() {
+            // SAFETY: live nodes from `alloc`, exclusively ours.
             unsafe {
                 assert_eq!((**n).key, i as u64);
                 assert_eq!((**n).count(), i as u64 + 1);
             }
         }
         for n in nodes {
+            // SAFETY: from `alloc`, released exactly once.
             unsafe { release(n) };
         }
         // Gauges are process-global (other tests allocate concurrently);
@@ -295,6 +322,7 @@ mod tests {
         }
         let held = stats();
         for n in nodes {
+            // SAFETY: from `alloc`, released exactly once.
             unsafe { release(n) };
         }
         let after = stats();
@@ -312,6 +340,8 @@ mod tests {
         let nodes: Vec<usize> = (0..200u64).map(|i| alloc(Node::new(i, 1)) as usize).collect();
         std::thread::spawn(move || {
             for n in nodes {
+                // SAFETY: from `alloc`, released exactly once (the vec was
+                // moved here, so no other reference remains).
                 unsafe { release(n as *mut Node) };
             }
         })

@@ -28,9 +28,8 @@ mod state;
 
 pub use state::NodeStats;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-
 use crate::metrics::{Counter, Histogram, StripedCounter};
+use crate::sync::shim::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::hashtable::PtrTable;
 use crate::prioq::IncrementOutcome;
@@ -383,13 +382,18 @@ impl McPrioQ {
                         if inserted {
                             new_src = true;
                         } else {
-                            // Lost the publish race; the fresh state was
-                            // never shared.
+                            // SAFETY: we lost the publish race; the fresh
+                            // state was never shared, so this is the only
+                            // reference to it.
                             unsafe { NodeState::free_unshared(fresh) };
                         }
                         winner
                     }
                 };
+                // SAFETY: node states are never removed from the src table
+                // (decay prunes edges, not nodes), so a published pointer
+                // stays valid until `McPrioQ::drop` — which requires `&mut
+                // self`, excluded by the `&self` we hold.
                 let state = unsafe { &*state_ptr };
                 *cached = Some((src, state));
                 state
@@ -434,6 +438,8 @@ impl McPrioQ {
         out: &mut Recommendation,
     ) {
         out.reset();
+        // SAFETY: node states are never removed from the src table; see
+        // `observe_pinned`.
         if let Some(state) = unsafe { self.src.get(guard, src).map(|p| &*p) } {
             state.infer_threshold_into(guard, threshold, &self.config, &self.reads, out);
         }
@@ -456,6 +462,7 @@ impl McPrioQ {
     /// [`infer_topk_into`] under a caller-held guard (one pin per batch).
     pub fn infer_topk_with(&self, guard: &Guard, src: u64, k: usize, out: &mut Recommendation) {
         out.reset();
+        // SAFETY: see `observe_pinned` — node states are never unpublished.
         if let Some(state) = unsafe { self.src.get(guard, src).map(|p| &*p) } {
             state.infer_topk_into(guard, k, &self.config, &self.reads, out);
         }
@@ -465,6 +472,7 @@ impl McPrioQ {
     /// does not exist). O(1) with the dst table enabled.
     pub fn probability(&self, src: u64, dst: u64) -> Option<f64> {
         let guard = rcu::pin();
+        // SAFETY: see `observe_pinned` — node states are never unpublished.
         let state = unsafe { self.src.get(&guard, src).map(|p| &*p) }?;
         state.probability(&guard, dst)
     }
@@ -504,6 +512,7 @@ impl McPrioQ {
             if !pred(id) {
                 return;
             }
+            // SAFETY: see `observe_pinned` — never unpublished.
             let state = unsafe { &*state_ptr };
             let (sum, p) = state.decay(&guard, num, den);
             // Stamp only nodes the sweep actually changed: a node already
@@ -529,6 +538,7 @@ impl McPrioQ {
         let mark = self.ckpt_mark.load(Ordering::Relaxed);
         let mut swaps = 0u64;
         self.src.for_each(&guard, |_, state_ptr| {
+            // SAFETY: see `observe_pinned` — never unpublished.
             let state = unsafe { &*state_ptr };
             let s = state.repair(&guard);
             // Dirty only on reorder: an already-sorted node serves the
@@ -570,6 +580,7 @@ impl McPrioQ {
         let guard = rcu::pin();
         let mut out = Vec::new();
         self.src.for_each(&guard, |id, state_ptr| {
+            // SAFETY: see `observe_pinned` — never unpublished.
             let state = unsafe { &*state_ptr };
             if state.dirty_mark() >= since {
                 out.push((id, state.total(), state.edges_snapshot(&guard)));
@@ -587,6 +598,7 @@ impl McPrioQ {
             if err.is_some() {
                 return;
             }
+            // SAFETY: see `observe_pinned` — never unpublished.
             if let Err(e) = unsafe { &*state_ptr }.check_invariants() {
                 err = Some(format!("node {id}: {e}"));
             }
@@ -614,6 +626,7 @@ impl McPrioQ {
         let mut eligible = 0usize;
         let mut taken = 0usize;
         self.src.for_each(&guard, |_, state_ptr| {
+            // SAFETY: see `observe_pinned` — never unpublished.
             let state = unsafe { &*state_ptr };
             if !state.has_snapshot() {
                 return;
@@ -643,6 +656,7 @@ impl McPrioQ {
             if seen <= skip || rep.checked >= max {
                 return;
             }
+            // SAFETY: see `observe_pinned` — never unpublished.
             let state = unsafe { &*state_ptr };
             rep.cum_violations += state.audit_cum(&guard);
             match state.audit_edge_sum(&guard) {
@@ -658,6 +672,7 @@ impl McPrioQ {
     /// Per-node statistics (None if the src node is unknown).
     pub fn node_stats(&self, src: u64) -> Option<NodeStats> {
         let guard = rcu::pin();
+        // SAFETY: see `observe_pinned` — never unpublished.
         let state = unsafe { self.src.get(&guard, src).map(|p| &*p) }?;
         Some(state.stats(&guard))
     }
@@ -701,6 +716,7 @@ impl McPrioQ {
         let mut edges = 0usize;
         let mut bytes = std::mem::size_of::<Self>();
         self.src.for_each(&guard, |_, state_ptr| {
+            // SAFETY: see `observe_pinned` — never unpublished.
             let s = unsafe { &*state_ptr }.stats(&guard);
             swaps += s.swaps;
             skips += s.swap_skips;
@@ -729,6 +745,7 @@ impl McPrioQ {
         let guard = rcu::pin();
         let mut out = Vec::with_capacity(self.src.len());
         self.src.for_each(&guard, |id, state_ptr| {
+            // SAFETY: see `observe_pinned` — never unpublished.
             let state = unsafe { &*state_ptr };
             out.push((id, state.total(), state.edges_snapshot(&guard)));
         });
@@ -759,6 +776,9 @@ impl Drop for McPrioQ {
         self.src.for_each(&guard, |_, p| ptrs.push(p));
         drop(guard);
         for p in ptrs {
+            // SAFETY: `&mut self` proves no concurrent users; every state
+            // was allocated by `NodeState::boxed` and published exactly
+            // once, so each pointer is freed exactly once here.
             drop(unsafe { Box::from_raw(p) });
         }
     }

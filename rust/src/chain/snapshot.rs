@@ -201,7 +201,9 @@ mod simd {
     pub(super) fn copy_probs(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
         debug_assert_eq!(dsts.len(), counts.len());
         out.reserve(dsts.len());
-        #[cfg(target_arch = "x86_64")]
+        // Under Miri the vendor kernels are skipped (the interpreter does
+        // not model every intrinsic); the scalar loop is bit-identical.
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
         {
             if is_x86_feature_detected!("avx2") {
                 // SAFETY: AVX2 presence just checked (std caches the cpuid).
@@ -212,7 +214,7 @@ mod simd {
             }
             return;
         }
-        #[cfg(target_arch = "aarch64")]
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
         {
             // SAFETY: NEON is aarch64 baseline.
             unsafe { copy_probs_neon(dsts, counts, totf, out) };
@@ -222,7 +224,10 @@ mod simd {
         copy_probs_scalar(dsts, counts, totf, out)
     }
 
-    #[cfg_attr(any(target_arch = "x86_64", target_arch = "aarch64"), allow(dead_code))]
+    #[cfg_attr(
+        all(any(target_arch = "x86_64", target_arch = "aarch64"), not(miri)),
+        allow(dead_code)
+    )]
     fn copy_probs_scalar(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
         for (&dst, &count) in dsts.iter().zip(counts) {
             out.push((dst, count as f64 / totf));
@@ -232,81 +237,111 @@ mod simd {
     /// Exponent bits of 2^52: OR-ing them over a sub-2^52 integer yields
     /// the bit pattern of the double `2^52 + v`; subtracting 2^52 strips
     /// the bias exactly (no rounding — the sum is representable).
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     const MAGIC_BITS: i64 = 0x4330_0000_0000_0000;
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     const MAGIC: f64 = 4_503_599_627_370_496.0; // 2^52
 
-    #[cfg(target_arch = "x86_64")]
+    /// # Safety
+    ///
+    /// SSE2 is the x86_64 baseline, so the target-feature requirement is
+    /// met by construction; callers must keep `dsts.len() == counts.len()`
+    /// (the in-bounds contract of the lane loads).
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     #[target_feature(enable = "sse2")]
+    #[allow(unused_unsafe)] // non-pointer intrinsics are safe on newer toolchains
     unsafe fn copy_probs_sse2(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
         use std::arch::x86_64::*;
-        let tot = _mm_set1_pd(totf);
-        let magic_i = _mm_set1_epi64x(MAGIC_BITS);
-        let magic_d = _mm_set1_pd(MAGIC);
-        let n = counts.len();
-        let mut buf = [0f64; 2];
-        let mut i = 0usize;
-        while i + 2 <= n {
-            let v = _mm_loadu_si128(counts.as_ptr().add(i) as *const __m128i);
-            let f = _mm_sub_pd(_mm_castsi128_pd(_mm_or_si128(v, magic_i)), magic_d);
-            _mm_storeu_pd(buf.as_mut_ptr(), _mm_div_pd(f, tot));
-            out.push((dsts[i], buf[0]));
-            out.push((dsts[i + 1], buf[1]));
-            i += 2;
-        }
-        while i < n {
-            out.push((dsts[i], counts[i] as f64 / totf));
-            i += 1;
+        // SAFETY: SSE2 is enabled (target_feature + caller's check); the
+        // unaligned load reads `i..i+2 <= n` lanes inside `counts`, and the
+        // store targets the 2-lane stack buffer.
+        unsafe {
+            let tot = _mm_set1_pd(totf);
+            let magic_i = _mm_set1_epi64x(MAGIC_BITS);
+            let magic_d = _mm_set1_pd(MAGIC);
+            let n = counts.len();
+            let mut buf = [0f64; 2];
+            let mut i = 0usize;
+            while i + 2 <= n {
+                let v = _mm_loadu_si128(counts.as_ptr().add(i) as *const __m128i);
+                let f = _mm_sub_pd(_mm_castsi128_pd(_mm_or_si128(v, magic_i)), magic_d);
+                _mm_storeu_pd(buf.as_mut_ptr(), _mm_div_pd(f, tot));
+                out.push((dsts[i], buf[0]));
+                out.push((dsts[i + 1], buf[1]));
+                i += 2;
+            }
+            while i < n {
+                out.push((dsts[i], counts[i] as f64 / totf));
+                i += 1;
+            }
         }
     }
 
-    #[cfg(target_arch = "x86_64")]
+    /// # Safety
+    ///
+    /// The caller must have runtime-detected AVX2 (`is_x86_feature_
+    /// detected!`) and keep `dsts.len() == counts.len()`.
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     #[target_feature(enable = "avx2")]
+    #[allow(unused_unsafe)] // non-pointer intrinsics are safe on newer toolchains
     unsafe fn copy_probs_avx2(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
         use std::arch::x86_64::*;
-        let tot = _mm256_set1_pd(totf);
-        let magic_i = _mm256_set1_epi64x(MAGIC_BITS);
-        let magic_d = _mm256_set1_pd(MAGIC);
-        let n = counts.len();
-        let mut buf = [0f64; 4];
-        let mut i = 0usize;
-        while i + 4 <= n {
-            let v = _mm256_loadu_si256(counts.as_ptr().add(i) as *const __m256i);
-            let f = _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(v, magic_i)), magic_d);
-            _mm256_storeu_pd(buf.as_mut_ptr(), _mm256_div_pd(f, tot));
-            for (j, &p) in buf.iter().enumerate() {
-                out.push((dsts[i + j], p));
+        // SAFETY: AVX2 was runtime-detected by the caller; the unaligned
+        // load reads `i..i+4 <= n` lanes inside `counts`, and the store
+        // targets the 4-lane stack buffer.
+        unsafe {
+            let tot = _mm256_set1_pd(totf);
+            let magic_i = _mm256_set1_epi64x(MAGIC_BITS);
+            let magic_d = _mm256_set1_pd(MAGIC);
+            let n = counts.len();
+            let mut buf = [0f64; 4];
+            let mut i = 0usize;
+            while i + 4 <= n {
+                let v = _mm256_loadu_si256(counts.as_ptr().add(i) as *const __m256i);
+                let f = _mm256_sub_pd(_mm256_castsi256_pd(_mm256_or_si256(v, magic_i)), magic_d);
+                _mm256_storeu_pd(buf.as_mut_ptr(), _mm256_div_pd(f, tot));
+                for (j, &p) in buf.iter().enumerate() {
+                    out.push((dsts[i + j], p));
+                }
+                i += 4;
             }
-            i += 4;
-        }
-        while i < n {
-            out.push((dsts[i], counts[i] as f64 / totf));
-            i += 1;
+            while i < n {
+                out.push((dsts[i], counts[i] as f64 / totf));
+                i += 1;
+            }
         }
     }
 
-    #[cfg(target_arch = "aarch64")]
+    /// # Safety
+    ///
+    /// NEON is the aarch64 baseline, so the target-feature requirement is
+    /// met by construction; callers must keep `dsts.len() == counts.len()`.
+    #[cfg(all(target_arch = "aarch64", not(miri)))]
     #[target_feature(enable = "neon")]
+    #[allow(unused_unsafe)] // non-pointer intrinsics are safe on newer toolchains
     unsafe fn copy_probs_neon(dsts: &[u64], counts: &[u64], totf: f64, out: &mut Vec<(u64, f64)>) {
         use std::arch::aarch64::*;
-        let tot = vdupq_n_f64(totf);
-        let n = counts.len();
-        let mut buf = [0f64; 2];
-        let mut i = 0usize;
-        while i + 2 <= n {
-            let v = vld1q_u64(counts.as_ptr().add(i));
-            // ucvtf is exact for sub-2^52 values (and correctly rounded
-            // beyond — but the caller's guard keeps us below anyway).
-            let f = vcvtq_f64_u64(v);
-            vst1q_f64(buf.as_mut_ptr(), vdivq_f64(f, tot));
-            out.push((dsts[i], buf[0]));
-            out.push((dsts[i + 1], buf[1]));
-            i += 2;
-        }
-        while i < n {
-            out.push((dsts[i], counts[i] as f64 / totf));
-            i += 1;
+        // SAFETY: NEON is aarch64 baseline; the load reads `i..i+2 <= n`
+        // lanes inside `counts`, the store targets the 2-lane buffer.
+        unsafe {
+            let tot = vdupq_n_f64(totf);
+            let n = counts.len();
+            let mut buf = [0f64; 2];
+            let mut i = 0usize;
+            while i + 2 <= n {
+                let v = vld1q_u64(counts.as_ptr().add(i));
+                // ucvtf is exact for sub-2^52 values (and correctly rounded
+                // beyond — but the caller's guard keeps us below anyway).
+                let f = vcvtq_f64_u64(v);
+                vst1q_f64(buf.as_mut_ptr(), vdivq_f64(f, tot));
+                out.push((dsts[i], buf[0]));
+                out.push((dsts[i + 1], buf[1]));
+                i += 2;
+            }
+            while i < n {
+                out.push((dsts[i], counts[i] as f64 / totf));
+                i += 1;
+            }
         }
     }
 }

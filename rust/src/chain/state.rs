@@ -1,13 +1,12 @@
 //! Per-src-node state: total counter + optional dst table + edge list +
 //! RCU-published read snapshot (see `snapshot.rs`).
 
-use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
-
 use super::snapshot::{cum_reaches, dyadic, EdgeSnapshot};
 use super::{ChainConfig, ReadMetrics, Recommendation};
 use crate::hashtable::PtrTable;
 use crate::prioq::{EdgeList, IncrementOutcome, Node};
 use crate::rcu::{self, Guard};
+use crate::sync::shim::{AtomicPtr, AtomicU64, Ordering};
 use crate::sync::CachePadded;
 
 /// Statistics for one src node.
@@ -72,7 +71,9 @@ impl NodeState {
     /// Only for states that lost the src-table publish race and were never
     /// shared with other threads.
     pub(super) unsafe fn free_unshared(ptr: *mut NodeState) {
-        drop(Box::from_raw(ptr));
+        // SAFETY: per this function's contract the state was never shared,
+        // and it came from `boxed`'s Box::into_raw.
+        drop(unsafe { Box::from_raw(ptr) });
     }
 
     pub(super) fn total(&self) -> u64 {
@@ -99,6 +100,8 @@ impl NodeState {
                     Some(node) => {
                         // Normal case (§II.A.2): two O(1) lookups + one
                         // wait-free increment, reorder only on inversion.
+                        // SAFETY: the dst table only holds nodes of this
+                        // edge list, alive under `guard`.
                         let out = unsafe { self.edges.increment(guard, node, weight) };
                         (false, out)
                     }
@@ -111,7 +114,11 @@ impl NodeState {
                             self.edges.insert_node(guard, fresh);
                             (true, IncrementOutcome { count: weight, swaps: 0, skipped: false })
                         } else {
+                            // SAFETY: `fresh` lost the publish race — it
+                            // was never inserted or shared.
                             unsafe { EdgeList::free_unshared(fresh) };
+                            // SAFETY: `winner` is the table's node for this
+                            // edge list, alive under `guard`.
                             let out = unsafe { self.edges.increment(guard, winner, weight) };
                             (false, out)
                         }
@@ -126,6 +133,8 @@ impl NodeState {
                 if inserted {
                     (true, IncrementOutcome { count: weight, swaps: 0, skipped: false })
                 } else {
+                    // SAFETY: `node` came from this list's find_or_insert,
+                    // alive under `guard`.
                     let out = unsafe { self.edges.increment(guard, node, weight) };
                     (false, out)
                 }
@@ -150,8 +159,8 @@ impl NodeState {
         }
         let ptr = self.snap.load(Ordering::Acquire);
         if !ptr.is_null() {
-            // Guard-protected: a swapped-out snapshot is freed only after
-            // the current grace period.
+            // SAFETY: guard-protected — a swapped-out snapshot is freed
+            // only after the current grace period.
             let snap = unsafe { &*ptr };
             if self.edges.mutations().wrapping_sub(snap.epoch) <= config.snap_staleness {
                 metrics.snap_hits.inc();
@@ -214,8 +223,13 @@ impl NodeState {
                     )));
                     let old = self.snap.swap(fresh, Ordering::AcqRel);
                     if !old.is_null() {
+                        // SAFETY: `old` was unpublished by the swap and is
+                        // retired exactly once; it came from Box::into_raw.
                         unsafe { rcu::defer_free(guard, old) };
                     }
+                    // SAFETY: `fresh` is alive at least until the caller's
+                    // guard drops (it can only be retired after a swap +
+                    // grace period).
                     Some(unsafe { &*fresh })
                 },
             )
@@ -229,6 +243,8 @@ impl NodeState {
     fn invalidate_snapshot(&self, guard: &Guard) {
         let old = self.snap.swap(std::ptr::null_mut(), Ordering::AcqRel);
         if !old.is_null() {
+            // SAFETY: unpublished by the swap, retired exactly once, from
+            // Box::into_raw.
             unsafe { rcu::defer_free(guard, old) };
         }
     }
@@ -321,6 +337,8 @@ impl NodeState {
         match &self.dst {
             Some(table) => {
                 let node = table.get(guard, dst)?;
+                // SAFETY: table nodes belong to this edge list, alive under
+                // `guard`.
                 Some(unsafe { &*node }.count() as f64 / total as f64)
             }
             None => {
@@ -427,8 +445,8 @@ impl NodeState {
         if ptr.is_null() {
             return None;
         }
-        // Guard-protected: a concurrently swapped-out snapshot stays
-        // readable until the grace period ends.
+        // SAFETY: guard-protected — a concurrently swapped-out snapshot
+        // stays readable until the grace period ends.
         let snap = unsafe { &*ptr };
         let staleness = self.edges.mutations().wrapping_sub(snap.epoch);
         // Fresh exact reference: live counts, sorted by count (the order
@@ -491,6 +509,7 @@ impl NodeState {
         if ptr.is_null() {
             return 0;
         }
+        // SAFETY: the caller's guard keeps a swapped-out snapshot alive.
         let snap = unsafe { &*ptr };
         let mut violations = 0u64;
         let mut prev = 0u64;
@@ -535,6 +554,7 @@ impl NodeState {
     pub(super) fn stats(&self, _guard: &Guard) -> NodeStats {
         let ls = self.edges.stats();
         let snap = self.snap.load(Ordering::Acquire);
+        // SAFETY: the caller's guard (see doc) keeps the snapshot alive.
         let snap_bytes = if snap.is_null() { 0 } else { unsafe { &*snap }.approx_bytes() };
         let bytes = std::mem::size_of::<NodeState>()
             + ls.len * (std::mem::size_of::<Node>() + 48) // node + table entry
@@ -560,6 +580,8 @@ impl Drop for NodeState {
     fn drop(&mut self) {
         let snap = *self.snap.get_mut();
         if !snap.is_null() {
+            // SAFETY: `&mut self` — no readers; the current snapshot is
+            // owned solely by this state (swapped-out ones were deferred).
             drop(unsafe { Box::from_raw(snap) });
         }
     }

@@ -2,8 +2,8 @@
 //! concurrent stress over the full structure (tables + queue + counters).
 
 use super::*;
+use crate::sync::shim::{AtomicBool, AtomicU64, Ordering};
 use crate::testutil::{forall, PropConfig, Rng64, U64Range, VecGen};
-use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 fn default_chain() -> McPrioQ {
@@ -173,7 +173,7 @@ fn no_dst_table_variant_behaves_identically() {
     let with = default_chain();
     let without = no_dst_chain();
     let mut rng = Rng64::new(11);
-    for _ in 0..2_000 {
+    for _ in 0..if cfg!(miri) { 300 } else { 2_000 } {
         let src = rng.next_below(5);
         let dst = rng.next_below(20);
         with.observe(src, dst);
@@ -199,7 +199,7 @@ fn no_dst_table_variant_behaves_identically() {
 fn export_import_roundtrip() {
     let c = default_chain();
     let mut rng = Rng64::new(3);
-    for _ in 0..1_000 {
+    for _ in 0..if cfg!(miri) { 200 } else { 1_000 } {
         c.observe(rng.next_below(8), rng.next_below(30));
     }
     let snap = c.export();
@@ -226,8 +226,8 @@ fn stats_accumulate() {
 /// quiescing + repair, totals match edge sums exactly and order is exact.
 #[test]
 fn concurrent_observe_preserves_counts() {
-    const THREADS: u64 = 8;
-    const OPS: u64 = 10_000;
+    const THREADS: u64 = if cfg!(miri) { 4 } else { 8 };
+    const OPS: u64 = if cfg!(miri) { 200 } else { 10_000 };
     let c = Arc::new(default_chain());
     let handles: Vec<_> = (0..THREADS)
         .map(|t| {
@@ -272,7 +272,7 @@ fn concurrent_read_write_decay() {
             let stop = Arc::clone(&stop);
             std::thread::spawn(move || {
                 let mut rng = Rng64::new(t);
-                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                while !stop.load(Ordering::Relaxed) {
                     let u = rng.next_f64();
                     c.observe(1, ((u * u * u) * 50.0) as u64);
                 }
@@ -283,13 +283,13 @@ fn concurrent_read_write_decay() {
         let c = Arc::clone(&c);
         let stop = Arc::clone(&stop);
         std::thread::spawn(move || {
-            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+            while !stop.load(Ordering::Relaxed) {
                 c.decay();
                 std::thread::yield_now();
             }
         })
     };
-    for _ in 0..3_000 {
+    for _ in 0..if cfg!(miri) { 50 } else { 3_000 } {
         let r = c.infer_threshold(1, 0.9);
         // Well-formed: probabilities positive and finite. No numeric bound
         // on the cumulative: a slow reader racing decays and writers sums
@@ -301,7 +301,7 @@ fn concurrent_read_write_decay() {
         let rt = c.infer_topk(1, 5);
         assert!(rt.items.len() <= 5);
     }
-    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    stop.store(true, Ordering::SeqCst);
     for w in writers {
         w.join().unwrap();
     }
@@ -317,7 +317,7 @@ fn observe_batch_matches_single_path() {
     let batched = default_chain();
     let one_go = default_chain();
     let mut rng = Rng64::new(0xBA7C);
-    let stream: Vec<(u64, u64)> = (0..5_000)
+    let stream: Vec<(u64, u64)> = (0..if cfg!(miri) { 500 } else { 5_000 })
         .map(|_| {
             // Skewed srcs so batches contain same-src runs (the cached-node
             // fast path) as well as src switches.
@@ -367,8 +367,8 @@ fn observe_batch_weighted_and_empty() {
 /// lose or duplicate updates under contention).
 #[test]
 fn concurrent_batch_and_single_writers() {
-    const THREADS: u64 = 8;
-    const OPS: u64 = 8_000;
+    const THREADS: u64 = if cfg!(miri) { 4 } else { 8 };
+    const OPS: u64 = if cfg!(miri) { 200 } else { 8_000 };
     let c = Arc::new(default_chain());
     let handles: Vec<_> = (0..THREADS)
         .map(|t| {
@@ -444,7 +444,7 @@ fn snapshot_reads_match_list_walk_at_quiescence() {
     let on = default_chain();
     let off = McPrioQ::new(ChainConfig { snap_enabled: false, ..Default::default() });
     let mut rng = Rng64::new(0x54A9);
-    for _ in 0..20_000 {
+    for _ in 0..if cfg!(miri) { 2_000 } else { 20_000 } {
         let src = rng.next_below(4);
         let u = rng.next_f64();
         let dst = ((u * u) * 64.0) as u64;
@@ -498,7 +498,6 @@ fn snapshot_never_serves_pruned_edges_after_grace_period() {
 /// decay's prune has synchronized, no pruned edge may appear.
 #[test]
 fn concurrent_reads_during_decay_bounded_and_prune_safe() {
-    use std::sync::atomic::AtomicU64;
     let c = Arc::new(default_chain());
     // Read node 1: heavy edges survive ~20 decays, weight-1 edges are
     // pruned by the first. Inserted in descending weight so the list is
@@ -515,7 +514,7 @@ fn concurrent_reads_during_decay_bounded_and_prune_safe() {
         let stop = Arc::clone(&stop);
         std::thread::spawn(move || {
             let mut rng = Rng64::new(0xF00);
-            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+            while !stop.load(Ordering::Relaxed) {
                 c.observe(2, rng.next_below(40));
             }
         })
@@ -524,11 +523,11 @@ fn concurrent_reads_during_decay_bounded_and_prune_safe() {
         let c = Arc::clone(&c);
         let gen = Arc::clone(&pruned_gen);
         std::thread::spawn(move || {
-            for i in 0..10 {
+            for i in 0..if cfg!(miri) { 3 } else { 10 } {
                 c.decay();
                 if i == 0 {
                     crate::rcu::synchronize();
-                    gen.store(1, std::sync::atomic::Ordering::SeqCst);
+                    gen.store(1, Ordering::SeqCst);
                 }
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
@@ -541,8 +540,8 @@ fn concurrent_reads_during_decay_bounded_and_prune_safe() {
             let gen = Arc::clone(&pruned_gen);
             std::thread::spawn(move || {
                 let mut out = Recommendation::default();
-                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                    let g = gen.load(std::sync::atomic::Ordering::SeqCst);
+                while !stop.load(Ordering::Relaxed) {
+                    let g = gen.load(Ordering::SeqCst);
                     c.infer_topk_into(1, 32, &mut out);
                     assert!(out.cumulative <= 1.0 + 1e-9, "cum {}", out.cumulative);
                     if g >= 1 {
@@ -559,7 +558,7 @@ fn concurrent_reads_during_decay_bounded_and_prune_safe() {
         })
         .collect();
     decayer.join().unwrap();
-    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    stop.store(true, Ordering::SeqCst);
     for r in readers {
         r.join().unwrap();
     }
@@ -609,7 +608,7 @@ fn infer_into_reuses_buffers_and_matches() {
 #[test]
 fn prop_threshold_minimal_sorted_prefix() {
     forall(
-        PropConfig { cases: 128, ..Default::default() },
+        PropConfig { cases: if cfg!(miri) { 16 } else { 128 }, ..Default::default() },
         &VecGen { elem: U64Range { lo: 0, hi: 15 }, max_len: 200 },
         |dsts| {
             let c = default_chain();
@@ -647,7 +646,7 @@ fn prop_threshold_minimal_sorted_prefix() {
 #[test]
 fn prop_decay_preserves_order() {
     forall(
-        PropConfig { cases: 128, ..Default::default() },
+        PropConfig { cases: if cfg!(miri) { 16 } else { 128 }, ..Default::default() },
         &VecGen { elem: U64Range { lo: 0, hi: 9 }, max_len: 300 },
         |dsts| {
             let c = default_chain();

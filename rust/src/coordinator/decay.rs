@@ -1,9 +1,10 @@
 //! The maintenance scheduler: periodic model decay (§II.C) plus the order
 //! repair sweep, on a dedicated thread.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
+
+use crate::sync::shim::{AtomicBool, AtomicU64, Ordering};
 
 use super::engine::Engine;
 

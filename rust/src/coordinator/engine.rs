@@ -16,7 +16,6 @@
 //!   lookups, with the worker staying inside one shard's working set
 //!   (cache locality).
 
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, OnceLock, PoisonError, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -30,6 +29,7 @@ use crate::persist::{codec, LogOutcome, PersistState};
 use crate::rcu;
 use crate::replicate::ReplicaState;
 use crate::runtime::RetryPolicy;
+use crate::sync::shim::{AtomicBool, Ordering};
 
 use super::health::{Health, HealthState};
 use super::queue::BoundedQueue;

@@ -19,12 +19,12 @@
 //! *during* recovery simply calls `degrade()` again — the ladder never
 //! panics and never deadlocks, it just changes what the wire says.
 
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Mutex, PoisonError};
 use std::time::Instant;
 
 use crate::metrics::events::{self, Level};
 use crate::metrics::Counter;
+use crate::sync::shim::{AtomicU64, AtomicU8, Ordering};
 
 /// The three rungs of the degradation ladder.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

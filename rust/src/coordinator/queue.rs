@@ -19,10 +19,11 @@
 //! [`BoundedQueue::locked`]).
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::sync::{Arc, OnceLock, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::metrics::Histogram;
+use crate::sync::shim::{Condvar, Mutex, MutexGuard};
 
 struct State<T> {
     items: VecDeque<T>,

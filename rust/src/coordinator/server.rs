@@ -11,7 +11,6 @@
 use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -20,6 +19,7 @@ use anyhow::{Context, Result};
 use crate::chain::Recommendation;
 use crate::metrics::trace;
 use crate::replicate::ReplicaState;
+use crate::sync::shim::{AtomicBool, AtomicUsize, Ordering};
 
 use super::admission::TokenBucket;
 use super::engine::Engine;
@@ -709,7 +709,7 @@ fn dispatch(
             }
         }
         Request::Metrics => {
-            // The one multi-line response in the protocol (DESIGN.md §11):
+            // The one multi-line response in the protocol (DESIGN.md §12):
             // Prometheus text exposition terminated by a lone `# EOF` line.
             // `render_into` ends every sample with '\n'; the caller's
             // trailing newline closes the sentinel line.

@@ -3,7 +3,7 @@
 
 use super::*;
 use crate::config::ServerConfig;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::shim::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -948,7 +948,7 @@ fn tcp_metrics_exposition_and_sidecar() {
 #[test]
 fn engine_registry_concurrent_with_traffic() {
     let engine = Engine::new(&test_config(), 2);
-    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop = Arc::new(AtomicBool::new(false));
     let writer = {
         let engine = Arc::clone(&engine);
         std::thread::spawn(move || {

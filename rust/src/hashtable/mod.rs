@@ -35,7 +35,12 @@ pub struct PtrTable<T> {
     _marker: std::marker::PhantomData<*mut T>,
 }
 
+// SAFETY: the table never dereferences the stored pointers — it only moves
+// the bits — so sharing/sending the wrapper is as safe as sharing the
+// underlying `HashTable` of u64 values. Dereferencing is the caller's
+// responsibility at the call site.
 unsafe impl<T> Send for PtrTable<T> {}
+// SAFETY: see the `Send` justification above.
 unsafe impl<T> Sync for PtrTable<T> {}
 
 impl<T> PtrTable<T> {

@@ -19,9 +19,8 @@
 //!   period expires — they merely miss entries inserted after migration,
 //!   which is the paper's "approximately correct" contract).
 
-use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
-
 use crate::rcu::{self, Guard};
+use crate::sync::shim::{fence, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
 use crate::sync::{Backoff, SpinLock};
 
 const FIB: u64 = 0x9E37_79B9_7F4A_7C15;
@@ -70,7 +69,11 @@ pub struct HashTable {
     resizes: AtomicUsize,
 }
 
+// SAFETY: the raw Entry/Array pointers are only dereferenced under an RCU
+// guard (reads) or the table spinlock (remove/resize); keys and values are
+// plain u64s, so entries are freely sendable between threads.
 unsafe impl Send for HashTable {}
+// SAFETY: all mutation goes through atomics or the internal spinlock.
 unsafe impl Sync for HashTable {}
 
 /// Counters exposed for tests and the metrics endpoint.
@@ -107,10 +110,14 @@ impl HashTable {
     /// Wait-free lookup under the RCU guard.
     #[inline]
     pub fn get(&self, _guard: &Guard, key: u64) -> Option<u64> {
-        // The guard keeps both the array and the entry shells alive.
+        // SAFETY: the guard keeps both the array and the entry shells alive
+        // (resize/remove only free them after a grace period), and the
+        // array pointer is never null after construction.
         let arr = unsafe { &*self.array.load(Ordering::Acquire) };
         let mut cur = arr.bucket(key).load(Ordering::Acquire);
         while !cur.is_null() {
+            // SAFETY: non-null chain pointer read under the guard; entries
+            // are retired through RCU, never freed in place.
             let e = unsafe { &*cur };
             if e.key == key {
                 return Some(e.value.load(Ordering::Acquire));
@@ -127,6 +134,7 @@ impl HashTable {
         loop {
             // Wait out any in-flight migration so we operate on a stable array.
             let s1 = self.stable_seq(&mut backoff);
+            // SAFETY: guard held by the caller keeps the array alive.
             let arr = unsafe { &*self.array.load(Ordering::Acquire) };
             let bucket = arr.bucket(key);
             let head = bucket.load(Ordering::Acquire);
@@ -135,6 +143,7 @@ impl HashTable {
             let mut cur = head;
             let mut found = None;
             while !cur.is_null() {
+                // SAFETY: non-null chain pointer, alive under the guard.
                 let e = unsafe { &*cur };
                 if e.key == key {
                     found = Some(e.value.load(Ordering::Acquire));
@@ -147,7 +156,8 @@ impl HashTable {
                 // entry existed, so its copy (same key/value) exists after
                 // migration too.
                 if !shell.is_null() {
-                    // We allocated on a previous iteration; nobody has seen it.
+                    // SAFETY: we allocated the shell on a previous iteration
+                    // and its CAS never succeeded — nobody else has seen it.
                     drop(unsafe { Box::from_raw(shell) });
                 }
                 return (v, false);
@@ -160,6 +170,7 @@ impl HashTable {
                     next: AtomicPtr::new(head),
                 }));
             } else {
+                // SAFETY: the shell is ours until the CAS below succeeds.
                 unsafe { (*shell).next.store(head, Ordering::Relaxed) };
             }
             if bucket
@@ -170,7 +181,17 @@ impl HashTable {
                 continue; // head changed under us: re-walk
             }
 
-            // CAS landed. If no migration raced, we're done.
+            // CAS landed. If no migration raced, we're done. The SeqCst
+            // fence is load-bearing: the CAS is a release store, and a
+            // release store followed by a load of a *different* location
+            // may be reordered (StoreLoad) — without the fence, a migrator
+            // could bump `seq` to odd, scan this bucket *before* our CAS
+            // drains, and miss the shell, while we still read the old even
+            // `seq` and conclude no migration raced: the key would silently
+            // vanish from the new array. The fence pairs with the
+            // migrator's SeqCst `seq` RMW (single total order): either our
+            // store is visible to the scan, or its bump is visible to `s2`.
+            fence(Ordering::SeqCst);
             let s2 = self.seq.load(Ordering::SeqCst);
             if s1 == s2 {
                 self.len.fetch_add(1, Ordering::Relaxed);
@@ -184,10 +205,12 @@ impl HashTable {
             // freed wholesale by the migrator's deferred closure.
             loop {
                 let s1b = self.stable_seq(&mut backoff);
+                // SAFETY: guard held by the caller keeps the array alive.
                 let arr2 = unsafe { &*self.array.load(Ordering::Acquire) };
                 let mut cur = arr2.bucket(key).load(Ordering::Acquire);
                 let mut winner = None;
                 while !cur.is_null() {
+                    // SAFETY: non-null chain pointer, alive under the guard.
                     let e = unsafe { &*cur };
                     if e.key == key {
                         winner = Some(e.value.load(Ordering::Acquire));
@@ -223,13 +246,15 @@ impl HashTable {
     /// (cold path: decay/prune only).
     pub fn remove(&self, guard: &Guard, key: u64) -> Option<u64> {
         let _l = self.lock.lock();
-        // Holding the lock excludes resize, so the array is stable.
+        // SAFETY: holding the lock excludes resize, so the array is stable;
+        // the guard keeps entries alive.
         let arr = unsafe { &*self.array.load(Ordering::Acquire) };
         let bucket = arr.bucket(key);
         'retry: loop {
             let mut prev: Option<&Entry> = None;
             let mut cur = bucket.load(Ordering::Acquire);
             while !cur.is_null() {
+                // SAFETY: non-null chain pointer, alive under the guard.
                 let e = unsafe { &*cur };
                 if e.key == key {
                     let next = e.next.load(Ordering::Acquire);
@@ -246,6 +271,10 @@ impl HashTable {
                     }
                     let v = e.value.load(Ordering::Acquire);
                     self.len.fetch_sub(1, Ordering::Relaxed);
+                    // SAFETY: `cur` was unlinked by the successful CAS above
+                    // under the single-remover lock, so it is retired
+                    // exactly once; readers that still hold it are covered
+                    // by the grace period.
                     unsafe { rcu::defer_free(guard, cur) };
                     return Some(v);
                 }
@@ -258,10 +287,12 @@ impl HashTable {
 
     /// Iterate all live entries (approximately-correct snapshot).
     pub fn for_each<F: FnMut(u64, u64)>(&self, _guard: &Guard, mut f: F) {
+        // SAFETY: the guard keeps the array and entries alive.
         let arr = unsafe { &*self.array.load(Ordering::Acquire) };
         for b in arr.buckets.iter() {
             let mut cur = b.load(Ordering::Acquire);
             while !cur.is_null() {
+                // SAFETY: non-null chain pointer, alive under the guard.
                 let e = unsafe { &*cur };
                 f(e.key, e.value.load(Ordering::Acquire));
                 cur = e.next.load(Ordering::Acquire);
@@ -271,6 +302,8 @@ impl HashTable {
 
     pub fn stats(&self) -> TableStats {
         let guard = rcu::pin();
+        // SAFETY: `guard` (pinned above, dropped after the scan) keeps the
+        // array and every chain entry alive.
         let arr = unsafe { &*self.array.load(Ordering::Acquire) };
         let mut max_chain = 0;
         for b in arr.buckets.iter() {
@@ -278,6 +311,7 @@ impl HashTable {
             let mut cur = b.load(Ordering::Acquire);
             while !cur.is_null() {
                 n += 1;
+                // SAFETY: non-null chain pointer, alive under `guard`.
                 cur = unsafe { &*cur }.next.load(Ordering::Acquire);
             }
             max_chain = max_chain.max(n);
@@ -304,6 +338,7 @@ impl HashTable {
     }
 
     fn maybe_resize(&self, guard: &Guard) {
+        // SAFETY: guard held by the caller keeps the array alive.
         let arr = unsafe { &*self.array.load(Ordering::Acquire) };
         if self.len() * LOAD_DEN <= arr.cap() * LOAD_NUM {
             return;
@@ -313,6 +348,8 @@ impl HashTable {
         };
         // Re-check under the lock.
         let old_ptr = self.array.load(Ordering::Acquire);
+        // SAFETY: under the lock no other thread can retire the array, and
+        // the caller's guard covers it besides.
         let old = unsafe { &*old_ptr };
         if self.len() * LOAD_DEN <= old.cap() * LOAD_NUM {
             return;
@@ -325,6 +362,8 @@ impl HashTable {
         for b in old.buckets.iter() {
             let mut cur = b.load(Ordering::Acquire);
             while !cur.is_null() {
+                // SAFETY: entries can only be removed under the lock we
+                // hold, so every chain pointer stays valid during the scan.
                 let e = unsafe { &*cur };
                 // Fresh shell: readers keep traversing the intact old chains.
                 let shell = Box::into_raw(Box::new(Entry {
@@ -333,6 +372,7 @@ impl HashTable {
                     next: AtomicPtr::new(std::ptr::null_mut()),
                 }));
                 let nb = new.bucket(e.key);
+                // SAFETY: the shell is ours; the new array is unpublished.
                 unsafe { (*shell).next.store(nb.load(Ordering::Relaxed), Ordering::Relaxed) };
                 nb.store(shell, Ordering::Relaxed);
                 migrated += 1;
@@ -347,13 +387,22 @@ impl HashTable {
 
         // Retire the old array and every shell it owns after a grace period.
         let old_addr = old_ptr as usize;
-        rcu::defer(guard, move || unsafe {
-            let old = Box::from_raw(old_addr as *mut Array);
-            for b in old.buckets.iter() {
-                let mut cur = b.load(Ordering::Relaxed);
-                while !cur.is_null() {
-                    let e = Box::from_raw(cur);
-                    cur = e.next.load(Ordering::Relaxed);
+        rcu::defer(guard, move || {
+            // SAFETY: the old array was unpublished by the `array.store`
+            // above and the grace period has expired, so no reader can
+            // still traverse it; the array and its shells are freed
+            // exactly once (entries were *copied*, not moved, into the new
+            // array). Late-CAS orphan shells that landed in these chains
+            // after the migration scan are freed here too — that is the
+            // only reference to them.
+            unsafe {
+                let old = Box::from_raw(old_addr as *mut Array);
+                for b in old.buckets.iter() {
+                    let mut cur = b.load(Ordering::Relaxed);
+                    while !cur.is_null() {
+                        let e = Box::from_raw(cur);
+                        cur = e.next.load(Ordering::Relaxed);
+                    }
                 }
             }
         });
@@ -367,6 +416,9 @@ impl Drop for HashTable {
         if arr_ptr.is_null() {
             return;
         }
+        // SAFETY: `&mut self` proves no concurrent readers exist, so the
+        // array and all chain entries can be freed eagerly; each is owned
+        // by exactly one chain link.
         unsafe {
             let arr = Box::from_raw(arr_ptr);
             for b in arr.buckets.iter() {

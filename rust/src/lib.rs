@@ -4,6 +4,12 @@
 //! markov-chains"* (Derehag & Johansson, 2023). See DESIGN.md for the system
 //! inventory and EXPERIMENTS.md for the measured reproduction of every claim.
 
+// Unsafe-audit gate (DESIGN.md § Concurrency verification): the body of an
+// `unsafe fn` gets no blanket license — every unsafe operation must sit in
+// an explicit `unsafe {}` block with its own `// SAFETY:` justification,
+// which `tools/unsafe_audit.py` enforces in CI.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod audit;
 pub mod baselines;
 pub mod bench_harness;

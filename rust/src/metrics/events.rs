@@ -14,9 +14,10 @@
 //! two stores, and a timestamp, and it is called on paths that already
 //! do I/O or take maintenance locks.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
+
+use crate::sync::shim::{AtomicU64, Ordering};
 
 /// Ring capacity: enough for hours of transition-rate events; a chaos
 /// run emitting one event per injected fault stays well inside it.

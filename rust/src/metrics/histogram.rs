@@ -1,7 +1,7 @@
 //! Log-bucketed concurrent histogram (HdrHistogram-lite): 2.5%-precision
 //! buckets over the full u64 range, lock-free recording, mergeable.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::shim::{AtomicU64, Ordering};
 
 /// Sub-buckets per power of two (higher = finer percentiles).
 const SUB_BITS: u32 = 5;

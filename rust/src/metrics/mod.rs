@@ -14,8 +14,9 @@ pub use perf_counters::{PerfCounters, PerfSample};
 pub use registry::Registry;
 pub use striped::StripedCounter;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
+
+use crate::sync::shim::{AtomicBool, AtomicU64, Ordering};
 
 /// Monotonic event counter.
 #[derive(Debug, Default)]
@@ -142,7 +143,7 @@ impl Meter {
     /// STATS/exposition readers ever contend here.
     pub fn rate(&self) -> f64 {
         while self.window_lock.swap(true, Ordering::Acquire) {
-            std::hint::spin_loop();
+            crate::sync::shim::hint::spin_loop();
         }
         let now = self.epoch.elapsed().as_nanos() as u64;
         let cur = self.count.load(Ordering::Relaxed);

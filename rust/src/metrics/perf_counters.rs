@@ -115,7 +115,13 @@ impl Drop for PerfCounters {
     }
 }
 
-#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+// Not under Miri: raw-syscall inline asm cannot be interpreted, so Miri
+// takes the always-unavailable stub below.
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64"),
+    not(miri)
+))]
 mod imp {
     use super::PerfCounters;
 
@@ -159,37 +165,55 @@ mod imp {
         pub const CLOSE: i64 = 57;
     }
 
+    /// # Safety
+    ///
+    /// `nr` must be a valid syscall number and `a1..a5` arguments valid
+    /// for it — in particular any pointer argument must point to memory
+    /// of the size that syscall reads or writes.
     #[cfg(target_arch = "x86_64")]
     unsafe fn syscall5(nr: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64) -> i64 {
         let ret: i64;
-        std::arch::asm!(
-            "syscall",
-            inlateout("rax") nr => ret,
-            in("rdi") a1,
-            in("rsi") a2,
-            in("rdx") a3,
-            in("r10") a4,
-            in("r8") a5,
-            lateout("rcx") _,
-            lateout("r11") _,
-            options(nostack),
-        );
+        // SAFETY: the Linux syscall ABI clobbers only rcx/r11 (declared);
+        // argument validity is the caller's contract above.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") nr => ret,
+                in("rdi") a1,
+                in("rsi") a2,
+                in("rdx") a3,
+                in("r10") a4,
+                in("r8") a5,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
         ret
     }
 
+    /// # Safety
+    ///
+    /// Same contract as the x86_64 variant: valid syscall number, valid
+    /// arguments (pointers sized for what the syscall accesses).
     #[cfg(target_arch = "aarch64")]
     unsafe fn syscall5(nr: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64) -> i64 {
         let ret: i64;
-        std::arch::asm!(
-            "svc #0",
-            in("x8") nr,
-            inlateout("x0") a1 => ret,
-            in("x1") a2,
-            in("x2") a3,
-            in("x3") a4,
-            in("x4") a5,
-            options(nostack),
-        );
+        // SAFETY: `svc #0` follows the aarch64 syscall ABI (x8 = nr,
+        // x0-x4 = args, x0 = ret); argument validity is the caller's
+        // contract above.
+        unsafe {
+            std::arch::asm!(
+                "svc #0",
+                in("x8") nr,
+                inlateout("x0") a1 => ret,
+                in("x1") a2,
+                in("x2") a3,
+                in("x3") a4,
+                in("x4") a5,
+                options(nostack),
+            );
+        }
         ret
     }
 
@@ -210,6 +234,9 @@ mod imp {
             };
             // perf_event_open(&attr, pid=0 (this process), cpu=-1 (any),
             //                 group_fd=-1, flags=0)
+            // SAFETY: `attr` is a live, correctly-sized perf_event_attr
+            // (the kernel reads exactly `size` bytes of it); the scalar
+            // arguments match the syscall signature.
             let fd = unsafe {
                 syscall5(nr::PERF_EVENT_OPEN, &attr as *const _ as i64, 0, -1, -1, 0)
             };
@@ -228,6 +255,8 @@ mod imp {
 
     pub(super) fn read_u64(fd: i64) -> Option<u64> {
         let mut buf = 0u64;
+        // SAFETY: `buf` is 8 writable bytes and we ask read(2) for
+        // exactly 8; a bad fd just returns -EBADF.
         let n = unsafe {
             syscall5(nr::READ, fd, &mut buf as *mut u64 as i64, 8, 0, 0)
         };
@@ -235,11 +264,16 @@ mod imp {
     }
 
     pub(super) fn close(fd: i64) {
+        // SAFETY: close(2) takes no pointers; a bad fd is a benign error.
         unsafe { syscall5(nr::CLOSE, fd, 0, 0, 0, 0) };
     }
 }
 
-#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+#[cfg(not(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64"),
+    not(miri)
+)))]
 mod imp {
     use super::PerfCounters;
 

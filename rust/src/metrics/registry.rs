@@ -405,7 +405,7 @@ mod tests {
 
     #[test]
     fn concurrent_register_record_render() {
-        use std::sync::atomic::{AtomicBool, Ordering};
+        use crate::sync::shim::{AtomicBool, Ordering};
         let r = Arc::new(Registry::new());
         let stop = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::new();

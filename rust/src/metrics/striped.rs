@@ -2,8 +2,7 @@
 //! instead of one global line, so hot-path accounting never serializes
 //! writers (perf-pass finding, EXPERIMENTS.md §Perf).
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-
+use crate::sync::shim::{AtomicU64, AtomicUsize, Ordering};
 use crate::sync::CachePadded;
 
 const STRIPES: usize = 16;

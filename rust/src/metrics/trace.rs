@@ -22,9 +22,10 @@
 //! when nothing is armed, and the server only constructs [`Span`]s at
 //! all when [`armed`] says so.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::Instant;
+
+use crate::sync::shim::{AtomicBool, AtomicU64, Ordering};
 
 /// Spans kept per thread ring.
 pub const RING_SPANS: usize = 256;

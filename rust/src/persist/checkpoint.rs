@@ -34,7 +34,6 @@
 use std::fs;
 use std::io;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -42,6 +41,7 @@ use std::time::{Duration, Instant};
 use crate::config::TomlDoc;
 use crate::coordinator::{Engine, Health};
 use crate::runtime::RetryPolicy;
+use crate::sync::shim::{AtomicBool, AtomicU64, Ordering};
 
 use super::io::IoHandle;
 use super::{codec, DeltaChain};

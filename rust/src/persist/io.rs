@@ -31,9 +31,10 @@ use std::fmt;
 use std::fs::{self, File, OpenOptions};
 use std::io::{self, Write as _};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+use crate::sync::shim::{AtomicU64, Ordering};
 
 /// One writable file produced by [`StorageIo::create`] (a WAL segment or
 /// a checkpoint tmp file). Only the two operations the writers need.

@@ -49,11 +49,11 @@ pub use recover::{open_engine, RecoveryReport};
 
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::metrics::Counter;
+use crate::sync::shim::{AtomicU64, Ordering};
 
 use wal::ShardWal;
 

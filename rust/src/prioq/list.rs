@@ -1,8 +1,7 @@
 //! Implementation of the sorted doubly-linked edge list.
 
-use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicU8, AtomicUsize, Ordering};
-
 use crate::rcu::{self, Guard};
+use crate::sync::shim::{fence, AtomicPtr, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use crate::sync::{Backoff, SpinLock};
 
 /// Link state of a node.
@@ -110,7 +109,11 @@ pub struct EdgeList {
     mutations: AtomicU64,
 }
 
+// SAFETY: all fields are atomics or a SpinLock; the raw node pointers are
+// only dereferenced under the RCU guard / structural-ticket protocol that
+// every method documents, so the list may be shared and sent freely.
 unsafe impl Send for EdgeList {}
+// SAFETY: see the `Send` justification above.
 unsafe impl Sync for EdgeList {}
 
 impl Default for EdgeList {
@@ -189,6 +192,7 @@ impl EdgeList {
         // Writer-side scan (ticket held, so the chain is stable).
         let mut cur = self.head.load(Ordering::Acquire);
         while !cur.is_null() {
+            // SAFETY: ticket held — no node can be unlinked/retired under us.
             let n = unsafe { &*cur };
             if n.key == key {
                 drop(t);
@@ -211,25 +215,41 @@ impl EdgeList {
     /// The node must have come from [`EdgeList::alloc_node`] and must never
     /// have been passed to [`EdgeList::insert_node`] or published anywhere.
     pub unsafe fn free_unshared(node: *mut Node) {
-        crate::chain::arena::release(node);
+        // SAFETY: per this function's contract the node was never shared,
+        // so no reader can hold it and it is released exactly once.
+        unsafe { crate::chain::arena::release(node) };
     }
 
     fn push_pending(&self, node: *mut Node) {
         let mut backoff = Backoff::new();
         let mut head = self.pending.load(Ordering::Acquire);
         loop {
+            // SAFETY: `node` is not yet published (our exclusive allocation
+            // or, on retry, still only reachable through this loop).
             unsafe { (*node).stack.store(head, Ordering::Relaxed) };
             match self
                 .pending
                 .compare_exchange_weak(head, node, Ordering::AcqRel, Ordering::Acquire)
             {
-                Ok(_) => return,
+                Ok(_) => break,
                 Err(h) => {
                     head = h;
                     backoff.spin();
                 }
             }
         }
+        // Helping-protocol handshake, part 1 of 2 (part 2 is in
+        // `try_maintain`). Our pending push must become visible before we
+        // probe the ticket, and the holder's ticket release must become
+        // visible before it re-probes `pending` — otherwise both sides can
+        // read stale values (store-buffering): we see the ticket still held
+        // and leave, the holder sees `pending` empty and leaves, and the
+        // node is stranded until an unrelated mutation drains it. The
+        // paired SeqCst fences put both stores in one total order, so at
+        // least one side must observe the other. Regression model:
+        // `loom_models::pending_handoff_never_strands`.
+        fence(Ordering::SeqCst);
+        // Callers follow up with `try_maintain()`, which performs the probe.
     }
 
     /// Try to acquire the ticket and drain pending inserts. Never blocks.
@@ -238,6 +258,10 @@ impl EdgeList {
             let Some(t) = self.ticket.try_lock() else { return };
             self.drain_pending();
             drop(t);
+            // Helping-protocol handshake, part 2 of 2: order our ticket
+            // release before the `pending` re-probe (pairs with the fence
+            // in `push_pending`; see the comment there).
+            fence(Ordering::SeqCst);
             // Close the push-after-drain race: if new nodes arrived while we
             // held the ticket's tail end, loop and try again (helping).
             if self.pending.load(Ordering::Acquire).is_null() {
@@ -254,6 +278,8 @@ impl EdgeList {
         let mut nodes: Vec<*mut Node> = Vec::new();
         while !top.is_null() {
             nodes.push(top);
+            // SAFETY: nodes on the pending stack are unpublished to readers
+            // and only the ticket holder (us) pops them.
             top = unsafe { &*top }.stack.load(Ordering::Acquire);
         }
         for &node in nodes.iter().rev() {
@@ -269,10 +295,13 @@ impl EdgeList {
 
     /// Append `node` at the tail. Caller holds the ticket.
     fn splice_tail(&self, node: *mut Node) {
+        // SAFETY: `node` came off the pending stack (or was just allocated
+        // under the ticket) — not yet reachable by readers.
         let n = unsafe { &*node };
         n.next.store(std::ptr::null_mut(), Ordering::Relaxed);
         let tail = self.tail.load(Ordering::Relaxed);
         n.ceil.store(
+            // SAFETY: linked nodes stay alive while the ticket is held.
             if tail.is_null() { u64::MAX } else { unsafe { &*tail }.count.load(Ordering::Acquire) },
             Ordering::Relaxed,
         );
@@ -282,6 +311,7 @@ impl EdgeList {
             // Empty list: publish as head; readers acquire through `head`.
             self.head.store(node, Ordering::Release);
         } else {
+            // SAFETY: the tail node is linked and alive under the ticket.
             unsafe { &*tail }.next.store(node, Ordering::Release);
         }
         self.tail.store(node, Ordering::Release);
@@ -294,7 +324,9 @@ impl EdgeList {
     /// # Safety
     /// `node` must be a node of *this* list, protected by `guard`.
     pub unsafe fn increment(&self, guard: &Guard, node: *mut Node, delta: u64) -> IncrementOutcome {
-        let n = &*node;
+        // SAFETY: per this function's contract, `node` belongs to this list
+        // and the caller's guard keeps it alive.
+        let n = unsafe { &*node };
         let count = n.count.fetch_add(delta, Ordering::AcqRel) + delta;
         self.mutations.fetch_add(1, Ordering::Relaxed);
 
@@ -310,7 +342,9 @@ impl EdgeList {
             n.ceil.store(u64::MAX, Ordering::Relaxed); // at head
             return IncrementOutcome { count, swaps: 0, skipped: false };
         }
-        let pc = (*prev).count.load(Ordering::Acquire);
+        // SAFETY: `prev` was a linked neighbour of `node`; even if it has
+        // been unlinked since the load, the guard delays its reclamation.
+        let pc = unsafe { &*prev }.count.load(Ordering::Acquire);
         if pc >= count {
             // Refresh the ceiling so future increments up to `pc` stay on
             // the fast path.
@@ -349,6 +383,8 @@ impl EdgeList {
 
     /// Guard-less variant for internal use while holding the ticket.
     fn bubble_up_ptr(&self, node: *mut Node) -> u32 {
+        // SAFETY: caller holds the ticket, so no node can be unlinked or
+        // retired while we restructure.
         let n = unsafe { &*node };
         if n.link.load(Ordering::Acquire) != LINK_LINKED {
             return 0;
@@ -359,6 +395,7 @@ impl EdgeList {
             if prev.is_null() {
                 break;
             }
+            // SAFETY: linked predecessor, stable under the ticket.
             let p = unsafe { &*prev };
             if p.count.load(Ordering::Acquire) >= n.count.load(Ordering::Acquire) {
                 break;
@@ -385,7 +422,11 @@ impl EdgeList {
     /// proven in the module docs (hides only P, never cycles).
     fn swap_with_prev(&self, node: *mut Node, prev: *mut Node) {
         self.mutations.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: applies to every deref in this function — the caller
+        // holds the structural ticket, so E, P, Q and N are linked nodes
+        // that cannot be unlinked or retired until we return.
         let e = unsafe { &*node };
+        // SAFETY: see above.
         let p = unsafe { &*prev };
         let q = p.prev.load(Ordering::Relaxed);
         let next = e.next.load(Ordering::Relaxed);
@@ -395,6 +436,7 @@ impl EdgeList {
         if q.is_null() {
             self.head.store(node, Ordering::Release);
         } else {
+            // SAFETY: see the function-level comment above.
             unsafe { &*q }.next.store(node, Ordering::Release);
         }
         // 2. P.next = N
@@ -409,17 +451,20 @@ impl EdgeList {
             // E was the tail; P is now.
             self.tail.store(prev, Ordering::Release);
         } else {
+            // SAFETY: see the function-level comment above.
             unsafe { &*next }.prev.store(prev, Ordering::Relaxed);
         }
 
         // --- order ceilings (see Node::ceil) ---
         e.ceil.store(
+            // SAFETY: see the function-level comment above.
             if q.is_null() { u64::MAX } else { unsafe { &*q }.count.load(Ordering::Acquire) },
             Ordering::Relaxed,
         );
         p.ceil.store(e.count.load(Ordering::Acquire), Ordering::Relaxed);
         if !next.is_null() {
             // N's predecessor weakened from E to P: the ceiling must drop.
+            // SAFETY: see the function-level comment above.
             unsafe { &*next }.ceil.store(p.count.load(Ordering::Acquire), Ordering::Relaxed);
         }
     }
@@ -440,10 +485,15 @@ impl EdgeList {
         // Arena nodes are not Boxes: retire through a deferred closure that
         // returns the slot to its block after the grace period.
         let p = node as usize;
+        // SAFETY: the node was unlinked above and (per this function's
+        // contract) every other route to it is gone, so after the grace
+        // period no reader can hold it; it is released exactly once.
         rcu::defer(guard, move || unsafe { crate::chain::arena::release(p as *mut Node) });
     }
 
     fn unlink_locked(&self, node: *mut Node) {
+        // SAFETY: ticket held; `node` is linked (debug-asserted below) and
+        // cannot be retired before the unlink completes.
         let n = unsafe { &*node };
         debug_assert_eq!(n.link.load(Ordering::Acquire), LINK_LINKED);
         let prev = n.prev.load(Ordering::Relaxed);
@@ -453,17 +503,20 @@ impl EdgeList {
         if prev.is_null() {
             self.head.store(next, Ordering::Release);
         } else {
+            // SAFETY: linked neighbour, stable under the ticket.
             unsafe { &*prev }.next.store(next, Ordering::Release);
         }
         if next.is_null() {
             self.tail.store(prev, Ordering::Release);
         } else {
+            // SAFETY: linked neighbour, stable under the ticket.
             let nx = unsafe { &*next };
             nx.prev.store(prev, Ordering::Relaxed);
             nx.ceil.store(
                 if prev.is_null() {
                     u64::MAX
                 } else {
+                    // SAFETY: linked neighbour, stable under the ticket.
                     unsafe { &*prev }.count.load(Ordering::Acquire)
                 },
                 Ordering::Relaxed,
@@ -493,6 +546,7 @@ impl EdgeList {
         let mut prev_new_count = u64::MAX; // head has no predecessor
         let mut cur = self.head.load(Ordering::Acquire);
         while !cur.is_null() {
+            // SAFETY: ticket held — the chain is stable for the walk.
             let n = unsafe { &*cur };
             let next = n.next.load(Ordering::Acquire);
             // fetch_update so racing increments are not lost (they may be
@@ -508,6 +562,9 @@ impl EdgeList {
                 self.unlink_locked(cur);
                 on_prune(n.key, cur);
                 let p = cur as usize;
+                // SAFETY: unlinked above; `on_prune` removed the dst-table
+                // route before we retire, so the grace period covers every
+                // remaining reader and the node is released exactly once.
                 rcu::defer(guard, move || unsafe {
                     crate::chain::arena::release(p as *mut Node)
                 });
@@ -554,6 +611,7 @@ impl EdgeList {
         while !cur.is_null() {
             // Save the successor before bubbling (bubbling moves `cur`
             // toward the head, never past its old successor).
+            // SAFETY: ticket held — the chain is stable for the walk.
             let n = unsafe { &*cur };
             let next = n.next.load(Ordering::Acquire);
             sum += n.count.load(Ordering::Acquire);
@@ -587,6 +645,7 @@ impl EdgeList {
         let mut out = Vec::with_capacity(self.len());
         let mut cur = self.head.load(Ordering::Acquire);
         while !cur.is_null() {
+            // SAFETY: ticket held — the chain is stable for the walk.
             let n = unsafe { &*cur };
             out.push(each(n.key, n.count.load(Ordering::Acquire)));
             cur = n.next.load(Ordering::Acquire);
@@ -608,6 +667,8 @@ impl EdgeList {
         let bound = 4 * self.len.load(Ordering::Relaxed) + 64;
         let mut cur = self.head.load(Ordering::Acquire);
         while !cur.is_null() && visited < bound {
+            // SAFETY: the caller's guard keeps every reachable node alive
+            // (unlinked nodes are retired only after the grace period).
             let n = unsafe { &*cur };
             visited += 1;
             if !f(n.key, n.count.load(Ordering::Acquire)) {
@@ -650,6 +711,7 @@ impl EdgeList {
         let mut last = u64::MAX;
         let mut n_seen = 0usize;
         while !cur.is_null() {
+            // SAFETY: ticket held — the chain is stable for the walk.
             let n = unsafe { &*cur };
             let c = n.count.load(Ordering::Acquire);
             if c > last {
@@ -681,13 +743,19 @@ impl Drop for EdgeList {
         // Exclusive access: free linked chain and pending stack directly.
         let mut cur = *self.head.get_mut();
         while !cur.is_null() {
+            // SAFETY: `&mut self` proves no reader or mutator exists; each
+            // node is reachable from exactly one chain link, so it is
+            // released exactly once.
             let next = unsafe { &*cur }.next.load(Ordering::Relaxed);
+            // SAFETY: see above.
             unsafe { crate::chain::arena::release(cur) };
             cur = next;
         }
         let mut cur = *self.pending.get_mut();
         while !cur.is_null() {
+            // SAFETY: same exclusivity argument as the linked chain above.
             let next = unsafe { &*cur }.stack.load(Ordering::Relaxed);
+            // SAFETY: see above.
             unsafe { crate::chain::arena::release(cur) };
             cur = next;
         }

@@ -3,8 +3,8 @@
 
 use super::*;
 use crate::rcu;
+use crate::sync::shim::{AtomicBool, Ordering};
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 fn drain_all(l: &EdgeList, g: &rcu::Guard) -> Vec<(u64, u64)> {
@@ -33,6 +33,8 @@ fn increment_bubbles_to_correct_position() {
     let c = l.insert(&g, 30, 1);
     let _ = (a, b);
     // c: 1 -> 6, must bubble above both.
+    // SAFETY: `c` is a node of `l`, protected by `g` (same for every
+    // increment/unlink call in this file).
     let out = unsafe { l.increment(&g, c, 5) };
     assert_eq!(out.count, 6);
     assert_eq!(out.swaps, 2);
@@ -49,6 +51,7 @@ fn increment_no_swap_when_order_kept() {
     let a = l.insert(&g, 1, 10);
     let b = l.insert(&g, 2, 5);
     let _ = a;
+    // SAFETY: node of `l` under `g`.
     let out = unsafe { l.increment(&g, b, 1) }; // 6 < 10: no swap
     assert_eq!(out.swaps, 0);
     l.check_sorted().unwrap();
@@ -60,6 +63,7 @@ fn ties_are_stable_no_swap() {
     let g = rcu::pin();
     let _a = l.insert(&g, 1, 5);
     let b = l.insert(&g, 2, 4);
+    // SAFETY: node of `l` under `g`.
     let out = unsafe { l.increment(&g, b, 1) }; // equal counts: stay put
     assert_eq!(out.swaps, 0);
     assert_eq!(drain_all(&l, &g), vec![(1, 5), (2, 5)]);
@@ -72,6 +76,7 @@ fn swap_at_head_and_tail_updates_ends() {
     let _a = l.insert(&g, 1, 2);
     let b = l.insert(&g, 2, 1);
     // b is the tail; bubbling to head exercises both end fixups.
+    // SAFETY: node of `l` under `g`.
     unsafe { l.increment(&g, b, 10) };
     assert_eq!(drain_all(&l, &g), vec![(2, 11), (1, 2)]);
     l.check_sorted().unwrap();
@@ -87,12 +92,16 @@ fn unlink_middle_head_tail() {
     let a = l.insert(&g, 1, 30);
     let b = l.insert(&g, 2, 20);
     let c = l.insert(&g, 3, 10);
+    // SAFETY: linked nodes of `l` under `g`, each unlinked exactly once
+    // and never reachable through any other index.
     unsafe { l.unlink(&g, b) };
     assert_eq!(drain_all(&l, &g), vec![(1, 30), (3, 10)]);
     l.check_sorted().unwrap();
+    // SAFETY: see above.
     unsafe { l.unlink(&g, a) };
     assert_eq!(drain_all(&l, &g), vec![(3, 10)]);
     l.check_sorted().unwrap();
+    // SAFETY: see above.
     unsafe { l.unlink(&g, c) };
     assert!(l.is_empty());
     assert_eq!(drain_all(&l, &g), vec![]);
@@ -159,6 +168,7 @@ fn stats_track_swaps_and_splices() {
     let g = rcu::pin();
     let _a = l.insert(&g, 1, 2);
     let b = l.insert(&g, 2, 1);
+    // SAFETY: node of `l` under `g`.
     unsafe { l.increment(&g, b, 5) };
     let s = l.stats();
     assert_eq!(s.len, 2);
@@ -176,11 +186,12 @@ fn random_ops_stay_sorted_single_thread() {
     let l = EdgeList::new();
     let g = rcu::pin();
     let mut nodes = Vec::new();
-    for i in 0..2000 {
+    for i in 0..if cfg!(miri) { 300 } else { 2000 } {
         if nodes.is_empty() || rng.next_below(10) == 0 {
             nodes.push(l.insert(&g, i, 1 + rng.next_below(4)));
         } else {
             let n = nodes[rng.next_below(nodes.len() as u64) as usize];
+            // SAFETY: node of `l` under `g`.
             unsafe { l.increment(&g, n, 1 + rng.next_below(3)) };
         }
     }
@@ -218,6 +229,7 @@ fn concurrent_swaps_readers_terminate_and_see_hot_keys() {
                     let u = rng.next_f64();
                     let k = ((u * u * u) * KEYS as f64) as u64;
                     let n = nodes[k.min(KEYS - 1) as usize] as *mut Node;
+                    // SAFETY: node of `l`, never unlinked, under `g`.
                     unsafe { l.increment(&g, n, 1) };
                 }
             })
@@ -227,7 +239,7 @@ fn concurrent_swaps_readers_terminate_and_see_hot_keys() {
     let mut total_seen = 0u64;
     let mut total_scans = 0u64;
     let mut complete_scans = 0u64;
-    for _ in 0..2_000 {
+    for _ in 0..if cfg!(miri) { 40 } else { 2_000 } {
         let g = rcu::pin();
         let mut seen = HashSet::new();
         l.scan(&g, |k, _| {
@@ -263,8 +275,8 @@ fn concurrent_swaps_readers_terminate_and_see_hot_keys() {
 /// the sum of all increments.
 #[test]
 fn stress_insert_increment_consistency() {
-    const THREADS: u64 = 6;
-    const OPS: u64 = 5_000;
+    const THREADS: u64 = if cfg!(miri) { 3 } else { 6 };
+    const OPS: u64 = if cfg!(miri) { 200 } else { 5_000 };
     let l = Arc::new(EdgeList::new());
     let handles: Vec<_> = (0..THREADS)
         .map(|t| {
@@ -283,6 +295,8 @@ fn stress_insert_increment_consistency() {
                     } else {
                         let n = mine[rng.next_below(mine.len() as u64) as usize];
                         let d = 1 + rng.next_below(4);
+                        // SAFETY: node this thread inserted into `l`, under
+                        // `g`; nothing ever unlinks it.
                         unsafe { l.increment(&g, n, d) };
                         delta_sum += d;
                     }
@@ -334,12 +348,14 @@ fn decay_races_with_increments() {
                 while !stop.load(Ordering::Relaxed) {
                     let g = rcu::pin();
                     let n = nodes[rng.next_below(KEYS) as usize] as *mut Node;
+                    // SAFETY: node of `l`, never pruned (counts stay
+                    // positive), under `g`.
                     unsafe { l.increment(&g, n, 1) };
                 }
             })
         })
         .collect();
-    for _ in 0..20 {
+    for _ in 0..if cfg!(miri) { 5 } else { 20 } {
         let g = rcu::pin();
         // Gentle decay: counts stay >> 0 so no node is pruned while writers
         // still hold raw pointers to them.
@@ -361,7 +377,7 @@ fn decay_races_with_increments() {
 fn repair_fixes_arbitrary_disorder() {
     use crate::testutil::{forall, PropConfig, VecGen, U64Range};
     forall(
-        PropConfig { cases: 64, ..Default::default() },
+        PropConfig { cases: if cfg!(miri) { 12 } else { 64 }, ..Default::default() },
         &VecGen { elem: U64Range { lo: 0, hi: 50 }, max_len: 40 },
         |counts| {
             let l = EdgeList::new();
@@ -374,6 +390,7 @@ fn repair_fixes_arbitrary_disorder() {
             // Manufacture disorder: bump counts behind the queue's back.
             for (i, &n) in nodes.iter().enumerate() {
                 if i % 3 == 0 {
+                    // SAFETY: node of `l` under `g`.
                     unsafe { &*n }.count.fetch_add(17, Ordering::Relaxed);
                 }
             }
@@ -386,7 +403,9 @@ fn repair_fixes_arbitrary_disorder() {
 #[test]
 fn alloc_free_unshared_roundtrip() {
     let n = EdgeList::alloc_node(9, 3);
+    // SAFETY: freshly allocated, exclusively ours.
     assert_eq!(unsafe { &*n }.key, 9);
+    // SAFETY: from alloc_node, never shared or inserted.
     unsafe { EdgeList::free_unshared(n) };
 }
 
@@ -398,6 +417,7 @@ fn repair_returns_swaps_and_sum() {
     let g = rcu::pin();
     let nodes: Vec<_> = (0..4u64).map(|k| l.insert(&g, k, 10 - k)).collect();
     // Disorder behind the queue's back: last node becomes the hottest.
+    // SAFETY: node of `l` under `g`.
     unsafe { &*nodes[3] }.count.store(100, Ordering::Relaxed);
     let (swaps, sum) = l.repair(&g);
     assert_eq!(swaps, 3, "tail node must bubble to the head");
@@ -429,11 +449,13 @@ fn mutation_epoch_advances_on_every_change() {
     let a = l.insert(&g, 1, 3);
     let e1 = l.mutations();
     assert!(e1 > e0, "splice must advance the epoch");
+    // SAFETY: node of `l` under `g`.
     unsafe { l.increment(&g, a, 1) };
     let e2 = l.mutations();
     assert!(e2 > e1, "increment must advance the epoch");
     let b = l.insert(&g, 2, 1);
     let e3 = l.mutations();
+    // SAFETY: node of `l` under `g`.
     unsafe { l.increment(&g, b, 10) }; // bubbles above a: swap
     let e4 = l.mutations();
     assert!(e4 > e3 + 1, "increment + swap must advance the epoch twice");

@@ -7,9 +7,7 @@
 //! `try_advance`'s registry scan simple and safe without reclamation cycles
 //! in the reclaimer itself.
 
-use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
-
+use crate::sync::shim::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Mutex, Ordering};
 use crate::sync::CachePadded;
 
 /// Local-epoch encoding: `epoch << 1 | ACTIVE`.
@@ -31,6 +29,7 @@ pub(super) struct Participant {
 
 // SAFETY: all fields are Sync; bag contents are Send closures.
 unsafe impl Send for Participant {}
+// SAFETY: see the `Send` justification above.
 unsafe impl Sync for Participant {}
 
 impl Participant {
@@ -107,6 +106,10 @@ pub(super) fn register() -> &'static Participant {
     // Try to adopt an abandoned record first.
     let mut cur = REGISTRY.load(Ordering::Acquire);
     while !cur.is_null() {
+        // SAFETY: registry records are never freed (dead ones are recycled,
+        // not removed), so any non-null pointer read from the list stays
+        // valid for the process lifetime; Acquire on the list loads orders
+        // them after the record's initialization.
         let p = unsafe { &*cur };
         if !p.owned.load(Ordering::Acquire)
             && p.owned
@@ -121,8 +124,12 @@ pub(super) fn register() -> &'static Participant {
     let rec = Box::into_raw(Box::new(Participant::new()));
     let mut head = REGISTRY.load(Ordering::Acquire);
     loop {
+        // SAFETY: `rec` came from Box::into_raw above and is not yet
+        // published, so this thread has exclusive access to it.
         unsafe { (*rec).next.store(head, Ordering::Relaxed) };
         match REGISTRY.compare_exchange_weak(head, rec, Ordering::AcqRel, Ordering::Acquire) {
+            // SAFETY: `rec` is a live heap allocation that is never freed
+            // (see module docs), so promoting it to &'static is sound.
             Ok(_) => return unsafe { &*rec },
             Err(h) => head = h,
         }
@@ -178,6 +185,7 @@ pub fn try_advance() -> bool {
     let global = GLOBAL_EPOCH.load(Ordering::SeqCst);
     let mut cur = REGISTRY.load(Ordering::Acquire);
     while !cur.is_null() {
+        // SAFETY: registry records are never freed; see `register`.
         let p = unsafe { &*cur };
         let local = p.local.load(Ordering::SeqCst);
         if local & ACTIVE != 0 && (local >> 1) != global {
@@ -210,6 +218,7 @@ pub fn collector_stats() -> CollectorStats {
     let mut cur = REGISTRY.load(Ordering::Acquire);
     while !cur.is_null() {
         participants += 1;
+        // SAFETY: registry records are never freed; see `register`.
         cur = unsafe { &*cur }.next.load(Ordering::Acquire);
     }
     CollectorStats {
@@ -226,6 +235,7 @@ pub fn collector_stats() -> CollectorStats {
 pub(super) fn collect_all() {
     let mut cur = REGISTRY.load(Ordering::Acquire);
     while !cur.is_null() {
+        // SAFETY: registry records are never freed; see `register`.
         let p = unsafe { &*cur };
         collect(p);
         cur = p.next.load(Ordering::Acquire);

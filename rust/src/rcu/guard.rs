@@ -1,7 +1,8 @@
 //! Thread-local handles and read-side critical-section guards.
 
 use std::cell::{Cell, RefCell};
-use std::sync::atomic::Ordering;
+
+use crate::sync::shim::Ordering;
 
 use super::collector::{self, Participant};
 

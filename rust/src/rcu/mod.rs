@@ -33,7 +33,7 @@ mod guard;
 pub use collector::{collector_stats, grace_age_ns, try_advance, CollectorStats};
 pub use guard::{pin, Guard};
 
-use std::sync::atomic::Ordering;
+use crate::sync::shim::Ordering;
 
 /// Retire a raw pointer allocated with `Box::into_raw`. The pointed-to value
 /// is dropped and freed after a full grace period has elapsed.
@@ -46,7 +46,10 @@ use std::sync::atomic::Ordering;
 pub unsafe fn defer_free<T: Send + 'static>(guard: &Guard, ptr: *mut T) {
     let ptr = ptr as usize;
     guard.defer(move || {
-        drop(Box::from_raw(ptr as *mut T));
+        // SAFETY: per this function's contract, `ptr` came from
+        // `Box::into_raw` and is retired exactly once; the grace period
+        // guarantees no reader still holds it when the closure runs.
+        drop(unsafe { Box::from_raw(ptr as *mut T) });
     });
 }
 
@@ -68,7 +71,7 @@ pub fn synchronize() {
     let start = collector::global_epoch(Ordering::SeqCst);
     while collector::global_epoch(Ordering::SeqCst) < start + 2 {
         collector::try_advance();
-        std::hint::spin_loop();
+        crate::sync::shim::hint::spin_loop();
     }
     // Give reclamation a nudge so callers that synchronize-then-inspect see
     // freed garbage actually freed.

@@ -24,9 +24,10 @@
 //! tests and the bench harness construct one, so a production config
 //! cannot ship with a chaotic link.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, PoisonError};
 use std::time::{Duration, Instant};
+
+use crate::sync::shim::{AtomicU64, Ordering};
 
 /// Counter-scheduled link-fault plan. The default plan is null (no
 /// faults); `Option<ChaosPlan>::None` in the config means the same.

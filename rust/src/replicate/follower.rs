@@ -28,7 +28,6 @@
 
 use std::io::{self, BufRead, BufReader, Read, Write as _};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -38,6 +37,7 @@ use crate::coordinator::{connect_backoff, BoundedQueue, Engine, Request};
 use crate::persist::codec::WalOp;
 use crate::persist::{codec, install_snapshot, open_engine};
 use crate::runtime::RetryPolicy;
+use crate::sync::shim::{AtomicBool, Ordering};
 
 use super::chaos::{ChaosState, ChaosVerdict};
 use super::{wire, ReplicaState};

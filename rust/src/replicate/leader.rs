@@ -25,13 +25,13 @@
 
 use std::io::{self, BufWriter, Write as _};
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::Engine;
 use crate::persist::wal::WalCursor;
 use crate::persist::{codec, PersistState};
+use crate::sync::shim::{AtomicBool, Ordering};
 
 use super::wire;
 

@@ -39,11 +39,11 @@ pub use chaos::{ChaosPlan, ChaosState, ChaosVerdict};
 pub use follower::{start_follower, FollowerHandle};
 pub use leader::serve_follower;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 use crate::metrics::Counter;
+use crate::sync::shim::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)

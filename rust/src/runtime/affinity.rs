@@ -16,7 +16,13 @@
 
 /// Pin the calling thread to `cpu` (logical CPU index). Returns the
 /// negated errno on failure; `Err` is always recoverable.
-#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+// Not under Miri: inline asm cannot be interpreted, so Miri takes the
+// ENOSYS stub below (affinity is an optimization, never correctness).
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64"),
+    not(miri)
+))]
 pub fn pin_current_thread(cpu: usize) -> Result<(), i64> {
     // cpu_set_t is 1024 bits; one u64 word per 64 CPUs.
     let mut mask = [0u64; 16];
@@ -25,46 +31,68 @@ pub fn pin_current_thread(cpu: usize) -> Result<(), i64> {
     }
     mask[cpu / 64] = 1u64 << (cpu % 64);
     // sched_setaffinity(pid = 0 → calling thread, len, mask)
+    // SAFETY: `mask` is a live 128-byte buffer and `len` is its exact
+    // size; the kernel only reads it.
     let ret = unsafe {
         sched_setaffinity_raw(0, std::mem::size_of_val(&mask), mask.as_ptr() as usize)
     };
     if ret == 0 { Ok(()) } else { Err(ret) }
 }
 
-#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+#[cfg(not(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64"),
+    not(miri)
+)))]
 pub fn pin_current_thread(_cpu: usize) -> Result<(), i64> {
     Err(-38) // ENOSYS: unsupported platform, caller treats as "not pinned"
 }
 
-#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+/// # Safety
+///
+/// `mask_ptr` must point to at least `len` readable bytes (the kernel
+/// reads the cpu mask from it).
+#[cfg(all(target_os = "linux", target_arch = "x86_64", not(miri)))]
 unsafe fn sched_setaffinity_raw(pid: i64, len: usize, mask_ptr: usize) -> i64 {
     let nr: i64 = 203; // __NR_sched_setaffinity
     let ret: i64;
-    std::arch::asm!(
-        "syscall",
-        inlateout("rax") nr => ret,
-        in("rdi") pid,
-        in("rsi") len,
-        in("rdx") mask_ptr,
-        lateout("rcx") _,
-        lateout("r11") _,
-        options(nostack),
-    );
+    // SAFETY: the Linux syscall ABI clobbers only rcx/r11 (declared);
+    // mask validity is the caller's contract above.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") nr => ret,
+            in("rdi") pid,
+            in("rsi") len,
+            in("rdx") mask_ptr,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
     ret
 }
 
-#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+/// # Safety
+///
+/// `mask_ptr` must point to at least `len` readable bytes (the kernel
+/// reads the cpu mask from it).
+#[cfg(all(target_os = "linux", target_arch = "aarch64", not(miri)))]
 unsafe fn sched_setaffinity_raw(pid: i64, len: usize, mask_ptr: usize) -> i64 {
     let nr: i64 = 122; // __NR_sched_setaffinity
     let ret: i64;
-    std::arch::asm!(
-        "svc #0",
-        in("x8") nr,
-        inlateout("x0") pid => ret,
-        in("x1") len,
-        in("x2") mask_ptr,
-        options(nostack),
-    );
+    // SAFETY: `svc #0` follows the aarch64 syscall ABI; mask validity is
+    // the caller's contract above.
+    unsafe {
+        std::arch::asm!(
+            "svc #0",
+            in("x8") nr,
+            inlateout("x0") pid => ret,
+            in("x1") len,
+            in("x2") mask_ptr,
+            options(nostack),
+        );
+    }
     ret
 }
 
@@ -73,7 +101,11 @@ mod tests {
     use super::*;
 
     #[test]
-    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[cfg(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64"),
+        not(miri)
+    ))]
     fn pinning_succeeds_for_some_cpu() {
         // Containers/cpusets may forbid individual CPUs, so require only
         // that at least one of the first N logical CPUs accepts the pin.

@@ -45,6 +45,7 @@ struct Inner {
 // SAFETY: all xla wrapper objects (and their internal Rc) are only ever
 // touched while holding `inner`'s mutex; see the struct docs.
 unsafe impl Send for XlaRuntime {}
+// SAFETY: see the `Send` justification above.
 unsafe impl Sync for XlaRuntime {}
 
 /// A device buffer slot owned by the runtime's confinement domain. Obtain
@@ -77,6 +78,7 @@ impl BufferBox {
 // the client's Rc from an unlocked context (see `impl Drop`), so no code
 // path can race the reference count.
 unsafe impl Send for BufferBox {}
+// SAFETY: see the `Send` justification above.
 unsafe impl Sync for BufferBox {}
 
 impl Drop for BufferBox {

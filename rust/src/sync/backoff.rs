@@ -1,6 +1,6 @@
 //! Exponential backoff for CAS retry loops (crossbeam-style).
 
-use std::hint;
+use super::shim;
 
 const SPIN_LIMIT: u32 = 6;
 const YIELD_LIMIT: u32 = 10;
@@ -17,8 +17,13 @@ impl Backoff {
 
     /// Back off after a failed CAS in a lock-free loop (spin only).
     pub fn spin(&mut self) {
+        // Under loom every spin hint is a scheduling point; one is enough
+        // (more would only burn the model's op budget).
+        #[cfg(loom)]
+        shim::hint::spin_loop();
+        #[cfg(not(loom))]
         for _ in 0..1u32 << self.step.min(SPIN_LIMIT) {
-            hint::spin_loop();
+            shim::hint::spin_loop();
         }
         if self.step <= SPIN_LIMIT {
             self.step += 1;
@@ -28,12 +33,15 @@ impl Backoff {
     /// Back off while waiting for another thread to make progress
     /// (spin, then yield to the scheduler).
     pub fn snooze(&mut self) {
+        #[cfg(loom)]
+        shim::thread::yield_now();
+        #[cfg(not(loom))]
         if self.step <= SPIN_LIMIT {
             for _ in 0..1u32 << self.step {
-                hint::spin_loop();
+                shim::hint::spin_loop();
             }
         } else {
-            std::thread::yield_now();
+            shim::thread::yield_now();
         }
         if self.step <= YIELD_LIMIT {
             self.step += 1;

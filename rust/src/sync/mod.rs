@@ -2,6 +2,7 @@
 //! crates available offline — these replace `crossbeam_utils` equivalents).
 
 mod backoff;
+pub mod shim;
 mod spinlock;
 
 pub use backoff::Backoff;
@@ -49,8 +50,8 @@ impl<T: std::fmt::Debug> std::fmt::Debug for CachePadded<T> {
 
 #[cfg(test)]
 mod tests {
+    use super::shim::{AtomicU64, Ordering};
     use super::*;
-    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn cache_padded_is_aligned() {

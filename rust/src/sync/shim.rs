@@ -1,0 +1,93 @@
+//! The synchronization facade: the single place the crate is allowed to
+//! import atomics, low-level interior mutability, and blocking primitives
+//! from (enforced by `tools/unsafe_audit.py` in CI).
+//!
+//! Normally everything re-exports `std`, so the facade is zero-cost. Under
+//! `RUSTFLAGS="--cfg loom"` the same names resolve to the vendored loom
+//! model checker (`vendor/loom`), which turns every operation into a
+//! scheduling point with vector-clock race checking — the protocol models
+//! in `rust/tests/loom_models.rs` run the *production* code paths through
+//! it. See DESIGN.md §"Concurrency verification".
+//!
+//! Import rules for the rest of the crate:
+//!
+//! - atomics, `Ordering`, `fence`: `use crate::sync::shim::{...}`;
+//! - interior mutability behind a lock/protocol: [`UnsafeCell`] (closure
+//!   API, so loom can record exactly when each access happens);
+//! - blocking used by modeled code (ingest queue, RCU bags):
+//!   [`Mutex`]/[`Condvar`];
+//! - spin hints and yields inside retry loops: [`hint::spin_loop`] /
+//!   [`thread::yield_now`] — under loom these deschedule, which is what
+//!   lets a model containing a spin loop terminate.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{
+    fence, AtomicBool, AtomicPtr, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+};
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{
+    fence, AtomicBool, AtomicPtr, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+};
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(loom)]
+pub use loom::cell::UnsafeCell;
+
+/// `std` twin of `loom::cell::UnsafeCell`: same closure-scoped API (loom
+/// needs the closure to know exactly when the access happens; the `std`
+/// build inlines to a plain pointer access).
+#[cfg(not(loom))]
+#[derive(Debug, Default)]
+#[repr(transparent)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    pub const fn new(v: T) -> Self {
+        UnsafeCell(std::cell::UnsafeCell::new(v))
+    }
+
+    /// Shared access. The pointer must not outlive the closure, and the
+    /// caller upholds the usual aliasing rules when dereferencing it.
+    #[inline(always)]
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    /// Exclusive access; same contract as [`Self::with`], plus the caller
+    /// guarantees no concurrent access for the closure's duration.
+    #[inline(always)]
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    pub fn get_mut(&mut self) -> &mut T {
+        self.0.get_mut()
+    }
+
+    pub fn into_inner(self) -> T {
+        self.0.into_inner()
+    }
+}
+
+pub mod hint {
+    #[cfg(not(loom))]
+    pub use std::hint::spin_loop;
+
+    #[cfg(loom)]
+    pub use loom::hint::spin_loop;
+}
+
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+}

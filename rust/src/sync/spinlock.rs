@@ -4,10 +4,9 @@
 //! bookkeeping) — never on the read or increment hot paths, which stay
 //! wait-free. See DESIGN.md §2 for where locking is and is not permitted.
 
-use std::cell::UnsafeCell;
 use std::ops::{Deref, DerefMut};
-use std::sync::atomic::{AtomicBool, Ordering};
 
+use super::shim::{AtomicBool, Ordering, UnsafeCell};
 use super::Backoff;
 
 pub struct SpinLock<T> {
@@ -15,7 +14,12 @@ pub struct SpinLock<T> {
     value: UnsafeCell<T>,
 }
 
+// SAFETY: the lock serializes every access to `value`, so moving or
+// sharing the SpinLock only ever hands the inner `T` to one thread at a
+// time — `T: Send` is exactly the bound that permits (same as std Mutex;
+// `T: Sync` is not required because no two threads view the T at once).
 unsafe impl<T: Send> Send for SpinLock<T> {}
+// SAFETY: see the `Send` justification above.
 unsafe impl<T: Send> Sync for SpinLock<T> {}
 
 impl<T> SpinLock<T> {
@@ -71,13 +75,18 @@ pub struct SpinLockGuard<'a, T> {
 impl<T> Deref for SpinLockGuard<'_, T> {
     type Target = T;
     fn deref(&self) -> &T {
-        unsafe { &*self.lock.value.get() }
+        // SAFETY: the guard holds the lock, so no mutable access exists;
+        // the reference cannot outlive the guard (and thus the lock). Under
+        // loom the `with` records a read access for race checking.
+        self.lock.value.with(|p| unsafe { &*p })
     }
 }
 
 impl<T> DerefMut for SpinLockGuard<'_, T> {
     fn deref_mut(&mut self) -> &mut T {
-        unsafe { &mut *self.lock.value.get() }
+        // SAFETY: the guard holds the lock exclusively, and `&mut self`
+        // prevents a concurrent `deref` through the same guard.
+        self.lock.value.with_mut(|p| unsafe { &mut *p })
     }
 }
 

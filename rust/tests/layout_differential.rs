@@ -138,7 +138,7 @@ fn layouts_agree_through_decay_storms() {
 /// invariants, not equality.
 #[test]
 fn eytzinger_reads_survive_a_live_decay_storm() {
-    use std::sync::atomic::{AtomicBool, Ordering};
+    use mcprioq::sync::shim::{AtomicBool, Ordering};
     let chain = std::sync::Arc::new(McPrioQ::new(ChainConfig {
         snap_min_edges: 2,
         ..Default::default()

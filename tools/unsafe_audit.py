@@ -1,0 +1,226 @@
+#!/usr/bin/env python3
+"""Unsafe-code audit gate (DESIGN.md § Concurrency verification).
+
+Statically enforces the crate's two unsafe-code rules over rust/ and
+examples/ (vendor/ is third-party and exempt):
+
+1. Every `unsafe` occurrence is justified where it appears:
+   - `unsafe { ... }` blocks and `unsafe impl` items need a `// SAFETY:`
+     comment on the same line or in the contiguous comment block
+     immediately above;
+   - `unsafe fn` declarations need a `# Safety` section in their doc
+     comment (the caller-facing contract; their *bodies* get no blanket
+     license — `#![deny(unsafe_op_in_unsafe_fn)]` in lib.rs forces inner
+     blocks, which rule 1 then covers individually).
+
+2. The sync facade is the only door to atomics and to loom:
+   `std::sync::atomic` / `core::sync::atomic` may appear only in
+   rust/src/sync/shim.rs, and `loom::` only there and in the loom model
+   harness rust/tests/loom_models.rs. Everything else must import from
+   `crate::sync::shim` (or `mcprioq::sync::shim` outside the crate), so
+   `--cfg loom` builds model the real synchronization, not a bypass.
+
+Comment text, strings, and char literals are stripped before keyword
+matching, so prose like "no unsafe" or a quoted "std::sync::atomic" never
+trips the gate. Exit status is non-zero iff violations are found; each is
+reported as file:line: message.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Directories scanned for .rs files. vendor/ is deliberately absent.
+SCAN_ROOTS = ["rust", "examples"]
+
+SHIM = "rust/src/sync/shim.rs"
+LOOM_HARNESS = "rust/tests/loom_models.rs"
+
+ATOMIC_RE = re.compile(r"\b(?:std|core)::sync::atomic\b")
+LOOM_RE = re.compile(r"\bloom::")
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+
+
+def strip_code(text: str) -> list[str]:
+    """Return the file's lines with comments, strings, and char literals
+    blanked out (replaced by spaces, preserving line structure)."""
+    out = []
+    i = 0
+    n = len(text)
+    state = "code"  # code | line_comment | block_comment | string | rawstring | char
+    depth = 0  # nested block comments
+    hashes = 0  # raw string delimiter
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if state == "code":
+            if c == "/" and nxt == "/":
+                state = "line_comment"
+                out.append("  ")
+                i += 2
+                continue
+            if c == "/" and nxt == "*":
+                state = "block_comment"
+                depth = 1
+                out.append("  ")
+                i += 2
+                continue
+            if c == '"':
+                state = "string"
+                out.append(" ")
+                i += 1
+                continue
+            m = re.match(r"r(#*)\"", text[i:])
+            if m and (i == 0 or not (text[i - 1].isalnum() or text[i - 1] == "_")):
+                state = "rawstring"
+                hashes = len(m.group(1))
+                out.append(" " * len(m.group(0)))
+                i += len(m.group(0))
+                continue
+            if c == "'":
+                # Lifetime ('a) vs char literal ('x'): a lifetime is never
+                # closed by a quote within a few chars; chars are 'x' or
+                # an escape like '\n' / '\u{..}'.
+                m = re.match(r"'(\\[^']*|[^'\\])'", text[i:])
+                if m:
+                    out.append(" " * len(m.group(0)))
+                    i += len(m.group(0))
+                    continue
+            out.append(c)
+            i += 1
+        elif state == "line_comment":
+            if c == "\n":
+                state = "code"
+                out.append(c)
+            else:
+                out.append(" ")
+            i += 1
+        elif state == "block_comment":
+            if c == "/" and nxt == "*":
+                depth += 1
+                out.append("  ")
+                i += 2
+            elif c == "*" and nxt == "/":
+                depth -= 1
+                out.append("  ")
+                i += 2
+                if depth == 0:
+                    state = "code"
+            else:
+                out.append(c if c == "\n" else " ")
+                i += 1
+        elif state == "string":
+            if c == "\\":
+                out.append("  ")
+                i += 2
+            elif c == '"':
+                state = "code"
+                out.append(" ")
+                i += 1
+            else:
+                out.append(c if c == "\n" else " ")
+                i += 1
+        elif state == "rawstring":
+            if c == '"' and text[i + 1 : i + 1 + hashes] == "#" * hashes:
+                state = "code"
+                out.append(" " * (1 + hashes))
+                i += 1 + hashes
+            else:
+                out.append(c if c == "\n" else " ")
+                i += 1
+    return "".join(out).split("\n")
+
+
+def is_comment_or_attr(line: str) -> bool:
+    s = line.strip()
+    return s.startswith("//") or s.startswith("#[") or s.startswith("#!")
+
+
+def has_safety_comment(raw: list[str], lineno: int, before_col: int) -> bool:
+    """SAFETY: on the unsafe's own line (before the keyword) or anywhere in
+    the contiguous comment/attribute block above it."""
+    if "SAFETY:" in raw[lineno][:before_col]:
+        return True
+    i = lineno - 1
+    while i >= 0 and is_comment_or_attr(raw[i]):
+        if "SAFETY:" in raw[i]:
+            return True
+        i -= 1
+    return False
+
+
+def has_safety_doc(raw: list[str], lineno: int) -> bool:
+    """`# Safety` section in the doc/attribute block above an unsafe fn
+    (also accepts a `// SAFETY:` comment for private helpers)."""
+    i = lineno - 1
+    while i >= 0 and is_comment_or_attr(raw[i]):
+        if "# Safety" in raw[i] or "SAFETY:" in raw[i]:
+            return True
+        i -= 1
+    return False
+
+
+def audit_file(path: Path, rel: str) -> list[str]:
+    text = path.read_text()
+    raw = text.split("\n")
+    code = strip_code(text)
+    problems = []
+
+    for lineno, line in enumerate(code):
+        if rel != SHIM and ATOMIC_RE.search(line):
+            problems.append(
+                f"{rel}:{lineno + 1}: bare atomic import/path (use crate::sync::shim)"
+            )
+        if rel not in (SHIM, LOOM_HARNESS) and LOOM_RE.search(line):
+            problems.append(
+                f"{rel}:{lineno + 1}: direct loom reference outside the sync facade"
+            )
+
+        for m in UNSAFE_RE.finditer(line):
+            after = line[m.end() :].lstrip()
+            rest = after if after else next(
+                (code[j].lstrip() for j in range(lineno + 1, len(code)) if code[j].strip()),
+                "",
+            )
+            if rest.startswith("fn"):
+                if not has_safety_doc(raw, lineno):
+                    problems.append(
+                        f"{rel}:{lineno + 1}: unsafe fn without a `# Safety` doc section"
+                    )
+            elif rest.startswith("trait") or rest.startswith("impl"):
+                if not has_safety_comment(raw, lineno, m.start()):
+                    problems.append(
+                        f"{rel}:{lineno + 1}: unsafe impl/trait without a `// SAFETY:` comment"
+                    )
+            else:
+                # An unsafe block (incl. `let x = unsafe { ... }`).
+                if not has_safety_comment(raw, lineno, m.start()):
+                    problems.append(
+                        f"{rel}:{lineno + 1}: unsafe block without a `// SAFETY:` comment"
+                    )
+    return problems
+
+
+def main() -> int:
+    problems = []
+    scanned = 0
+    for root in SCAN_ROOTS:
+        for path in sorted((REPO / root).rglob("*.rs")):
+            rel = path.relative_to(REPO).as_posix()
+            scanned += 1
+            problems.extend(audit_file(path, rel))
+    if problems:
+        for p in problems:
+            print(p)
+        print(f"\nunsafe_audit: {len(problems)} violation(s) in {scanned} files")
+        return 1
+    print(f"unsafe_audit: OK ({scanned} files clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,230 @@
+//! Model-checked atomic types. Each wraps the real `std` atomic (so `new`
+//! stays `const` and statics in the code under test keep working); the
+//! happens-before metadata lives in a side table keyed by address inside
+//! the active execution. Outside a model (or on a thread the scheduler
+//! does not know about, e.g. TLS destructors at thread exit) every
+//! operation falls through to the plain `std` op.
+
+use std::sync::atomic::Ordering;
+
+use crate::rt;
+
+/// Ops every atomic type supports (load/store/swap/CAS/fetch_update).
+macro_rules! atomic_base {
+    ($name:ident, $std:ty, $prim:ty) => {
+        #[derive(Debug, Default)]
+        pub struct $name {
+            v: $std,
+        }
+
+        impl $name {
+            pub const fn new(v: $prim) -> Self {
+                Self { v: <$std>::new(v) }
+            }
+
+            fn addr(&self) -> usize {
+                self as *const _ as usize
+            }
+
+            pub fn load(&self, order: Ordering) -> $prim {
+                rt::atomic_load(self.addr(), order, || self.v.load(Ordering::SeqCst))
+                    .unwrap_or_else(|| self.v.load(order))
+            }
+
+            pub fn store(&self, val: $prim, order: Ordering) {
+                rt::atomic_store(self.addr(), order, || self.v.store(val, Ordering::SeqCst))
+                    .unwrap_or_else(|| self.v.store(val, order))
+            }
+
+            pub fn swap(&self, val: $prim, order: Ordering) -> $prim {
+                rt::atomic_rmw(self.addr(), order, order, || {
+                    (self.v.swap(val, Ordering::SeqCst), true)
+                })
+                .unwrap_or_else(|| self.v.swap(val, order))
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                rt::atomic_rmw(self.addr(), success, failure, || {
+                    let r = self.v.compare_exchange(
+                        current,
+                        new,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    );
+                    let ok = r.is_ok();
+                    (r, ok)
+                })
+                .unwrap_or_else(|| self.v.compare_exchange(current, new, success, failure))
+            }
+
+            /// Under the model a weak CAS only fails on a real value
+            /// mismatch (no spurious failures — a strict subset of the
+            /// allowed behaviours, so models stay small).
+            pub fn compare_exchange_weak(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                self.compare_exchange(current, new, success, failure)
+            }
+
+            /// `f` must be pure (no synchronization inside — it runs under
+            /// the scheduler lock), matching loom's own restriction.
+            pub fn fetch_update<F>(
+                &self,
+                set_order: Ordering,
+                fetch_order: Ordering,
+                mut f: F,
+            ) -> Result<$prim, $prim>
+            where
+                F: FnMut($prim) -> Option<$prim>,
+            {
+                match rt::atomic_rmw(self.addr(), set_order, fetch_order, || {
+                    // Serialized under the scheduler: load-compute-store is
+                    // atomic here by construction.
+                    let cur = self.v.load(Ordering::SeqCst);
+                    match f(cur) {
+                        Some(next) => {
+                            self.v.store(next, Ordering::SeqCst);
+                            (Ok(cur), true)
+                        }
+                        None => (Err(cur), false),
+                    }
+                }) {
+                    Some(r) => r,
+                    None => self.v.fetch_update(set_order, fetch_order, f),
+                }
+            }
+
+            pub fn get_mut(&mut self) -> &mut $prim {
+                self.v.get_mut()
+            }
+
+            pub fn into_inner(self) -> $prim {
+                self.v.into_inner()
+            }
+        }
+    };
+}
+
+/// Arithmetic / min-max RMWs (integer types only — std `AtomicBool` does
+/// not have them).
+macro_rules! atomic_int_ops {
+    ($name:ident, $prim:ty, [$($method:ident),+ $(,)?]) => {
+        impl $name {
+            $(
+                pub fn $method(&self, val: $prim, order: Ordering) -> $prim {
+                    rt::atomic_rmw(self.addr(), order, order, || {
+                        (self.v.$method(val, Ordering::SeqCst), true)
+                    })
+                    .unwrap_or_else(|| self.v.$method(val, order))
+                }
+            )+
+        }
+    };
+}
+
+macro_rules! atomic_int {
+    ($name:ident, $std:ty, $prim:ty) => {
+        atomic_base!($name, $std, $prim);
+        atomic_int_ops!(
+            $name,
+            $prim,
+            [fetch_add, fetch_sub, fetch_max, fetch_min, fetch_and, fetch_or, fetch_xor]
+        );
+    };
+}
+
+atomic_base!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+atomic_int_ops!(AtomicBool, bool, [fetch_and, fetch_or, fetch_xor]);
+
+atomic_int!(AtomicU8, std::sync::atomic::AtomicU8, u8);
+atomic_int!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+atomic_int!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+atomic_int!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+atomic_int!(AtomicI64, std::sync::atomic::AtomicI64, i64);
+
+/// Model-checked `AtomicPtr<T>` (same side-table scheme).
+#[derive(Debug)]
+pub struct AtomicPtr<T> {
+    v: std::sync::atomic::AtomicPtr<T>,
+}
+
+impl<T> Default for AtomicPtr<T> {
+    fn default() -> Self {
+        Self::new(std::ptr::null_mut())
+    }
+}
+
+impl<T> AtomicPtr<T> {
+    pub const fn new(p: *mut T) -> Self {
+        Self { v: std::sync::atomic::AtomicPtr::new(p) }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const _ as usize
+    }
+
+    pub fn load(&self, order: Ordering) -> *mut T {
+        rt::atomic_load(self.addr(), order, || self.v.load(Ordering::SeqCst))
+            .unwrap_or_else(|| self.v.load(order))
+    }
+
+    pub fn store(&self, p: *mut T, order: Ordering) {
+        rt::atomic_store(self.addr(), order, || self.v.store(p, Ordering::SeqCst))
+            .unwrap_or_else(|| self.v.store(p, order))
+    }
+
+    pub fn swap(&self, p: *mut T, order: Ordering) -> *mut T {
+        rt::atomic_rmw(self.addr(), order, order, || (self.v.swap(p, Ordering::SeqCst), true))
+            .unwrap_or_else(|| self.v.swap(p, order))
+    }
+
+    pub fn compare_exchange(
+        &self,
+        current: *mut T,
+        new: *mut T,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        rt::atomic_rmw(self.addr(), success, failure, || {
+            let r = self.v.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst);
+            let ok = r.is_ok();
+            (r, ok)
+        })
+        .unwrap_or_else(|| self.v.compare_exchange(current, new, success, failure))
+    }
+
+    pub fn compare_exchange_weak(
+        &self,
+        current: *mut T,
+        new: *mut T,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        self.compare_exchange(current, new, success, failure)
+    }
+
+    pub fn get_mut(&mut self) -> &mut *mut T {
+        self.v.get_mut()
+    }
+
+    pub fn into_inner(self) -> *mut T {
+        self.v.into_inner()
+    }
+}
+
+/// Model-checked memory fence.
+pub fn fence(order: Ordering) {
+    if rt::fence(order).is_none() {
+        std::sync::atomic::fence(order);
+    }
+}

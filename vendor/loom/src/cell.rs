@@ -1,0 +1,41 @@
+//! Race-checked interior mutability. Under an active model every access is
+//! recorded against the access history of the cell's address and checked
+//! for happens-before with all concurrent accesses; a conflict panics with
+//! a race report. Outside a model the wrappers are zero-cost.
+//!
+//! API note: like real loom, access is closure-scoped (`with`/`with_mut`)
+//! instead of `get()` — the access is recorded exactly when it happens.
+
+use crate::rt;
+
+#[derive(Debug, Default)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+impl<T> UnsafeCell<T> {
+    pub const fn new(v: T) -> Self {
+        UnsafeCell(std::cell::UnsafeCell::new(v))
+    }
+
+    /// Immutable access: records a read, panics on a racing write.
+    /// The closure receives a raw pointer; dereferencing it is the caller's
+    /// unsafe obligation (the model only validates the synchronization).
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        let _ = rt::cell_access(self.0.get() as usize, false);
+        f(self.0.get())
+    }
+
+    /// Mutable access: records a write, panics on any racing access.
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        let _ = rt::cell_access(self.0.get() as usize, true);
+        f(self.0.get())
+    }
+
+    pub fn get_mut(&mut self) -> &mut T {
+        // Exclusive borrow: statically race-free.
+        self.0.get_mut()
+    }
+
+    pub fn into_inner(self) -> T {
+        self.0.into_inner()
+    }
+}

@@ -1,0 +1,11 @@
+//! Spin hints. Under a model a spin hint is a scheduling point — a spin
+//! loop that waits on another thread *must* deschedule, or the model would
+//! burn its op budget without ever running the thread it waits for.
+
+use crate::rt;
+
+pub fn spin_loop() {
+    if rt::yield_point().is_none() {
+        std::hint::spin_loop();
+    }
+}

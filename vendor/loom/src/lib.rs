@@ -1,0 +1,153 @@
+//! Vendored, offline stand-in for the [`loom`] concurrency model checker.
+//!
+//! The build container has no network access, so this crate reimplements
+//! the slice of loom's API that `mcprioq` uses — `loom::model` /
+//! [`Builder`], [`thread`], [`sync::atomic`], [`sync::Mutex`] /
+//! [`sync::Condvar`], [`cell::UnsafeCell`], [`hint::spin_loop`] — with the
+//! same semantics contract, so `rust/src/sync/shim.rs` and the models in
+//! `rust/tests/loom_models.rs` compile unchanged against the real crate.
+//!
+//! # What this implementation checks
+//!
+//! Each call to [`model`] runs the closure many times. Within one run,
+//! every synchronization operation (atomic op, fence, mutex/condvar op,
+//! spawn/join, yield/spin hint) is a *scheduling point*: exactly one thread
+//! runs between two points, and a seeded RNG picks which thread runs next.
+//! Randomized schedule exploration (in the style of shuttle / PCT) replaces
+//! real loom's exhaustive DFS: the code under test has process-global state
+//! (RCU registry, arena counters) that persists across runs, which breaks
+//! the deterministic replay exhaustive search depends on — random seeds
+//! per-iteration have no such requirement and still drive the probability
+//! of missing a schedule-dependent bug toward zero as iterations grow.
+//!
+//! On top of the schedule, the runtime maintains vector clocks with
+//! release/acquire transfer rules (including release sequences via RMWs and
+//! release/acquire *fences*) and flags:
+//!
+//! - **data races**: `cell::UnsafeCell` accesses not ordered by
+//!   happens-before panic with a race report;
+//! - **deadlocks**: all live threads blocked panics with a state dump;
+//! - **livelocks**: an execution exceeding its op budget panics;
+//! - **lost wakeups / leaked threads**: a model that completes with a
+//!   spawned thread never finished panics.
+//!
+//! # What it does not check
+//!
+//! Operations execute sequentially-consistently at their scheduling point;
+//! weak-memory *value* outcomes (a relaxed load observing a stale value, as
+//! on real ARM) are not simulated — `Relaxed` vs `Acquire` differences are
+//! observed through the happens-before race detector, not through stale
+//! reads. This is the same trade-off made by shuttle, and it still catches
+//! ordering bugs whenever they manifest as an unsynchronized `UnsafeCell`
+//! access or a broken protocol invariant asserted by the model.
+//!
+//! # Environment knobs
+//!
+//! - `LOOM_ITERATIONS`: override the iteration count (CI uses a larger
+//!   value than the local default).
+//! - `LOOM_SEED`: override the base seed to reproduce a reported failure
+//!   (each iteration `i` runs with seed `base + i`; failures print both).
+
+pub mod cell;
+pub mod hint;
+pub mod sync;
+pub mod thread;
+
+pub(crate) mod atomic;
+pub(crate) mod rt;
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+/// Model-exploration configuration. Mirrors loom's `Builder` shape;
+/// `iterations`/`seed`/`op_budget` are the knobs this implementation uses.
+#[derive(Debug, Clone)]
+pub struct Builder {
+    /// Schedules to explore per model (`LOOM_ITERATIONS` overrides).
+    pub iterations: usize,
+    /// Base RNG seed; iteration `i` uses `seed + i` (`LOOM_SEED` overrides).
+    pub seed: u64,
+    /// Scheduling points allowed per execution before it is declared a
+    /// livelock.
+    pub op_budget: u64,
+    /// Accepted for loom API compatibility; the scheduler has no intrinsic
+    /// thread limit.
+    pub max_threads: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        Builder { iterations: 256, seed: 0x5EED_CAFE, op_budget: 1 << 20, max_threads: 8 }
+    }
+
+    fn env_u64(name: &str) -> Option<u64> {
+        std::env::var(name).ok()?.trim().parse().ok()
+    }
+
+    /// Run `f` under the scheduler, once per iteration, each with a fresh
+    /// execution (clocks, access histories) and a distinct seed.
+    pub fn check<F>(&self, f: F)
+    where
+        F: Fn() + Sync + Send + 'static,
+    {
+        let iterations = Self::env_u64("LOOM_ITERATIONS")
+            .map(|n| n as usize)
+            .unwrap_or(self.iterations)
+            .max(1);
+        let base_seed = Self::env_u64("LOOM_SEED").unwrap_or(self.seed);
+
+        for it in 0..iterations {
+            let seed = base_seed.wrapping_add(it as u64);
+            let exec = rt::Execution::new(seed, self.op_budget);
+            let main = exec.register_thread(None);
+            rt::set_ctx(std::sync::Arc::clone(&exec), main);
+
+            let result = catch_unwind(AssertUnwindSafe(&f));
+
+            // Leak check before finishing: every spawned thread must have
+            // been joined (a parked leftover thread means the model lost a
+            // wakeup or forgot a join — both bugs).
+            let leaked: Vec<usize> = {
+                let st = exec.lock();
+                st.threads
+                    .iter()
+                    .enumerate()
+                    .skip(1)
+                    .filter(|(_, t)| t.run != rt::Run::Finished)
+                    .map(|(i, _)| i)
+                    .collect()
+            };
+
+            rt::clear_ctx();
+            if let Err(payload) = result {
+                eprintln!(
+                    "loom: model failed at iteration {it} (seed {seed:#x}); rerun with \
+                     LOOM_SEED={seed} LOOM_ITERATIONS=1 to reproduce"
+                );
+                resume_unwind(payload);
+            }
+            // Assert before `finish`: finishing main reschedules, and a
+            // leaked runnable thread would start executing concurrently
+            // with the next iteration.
+            assert!(
+                leaked.is_empty(),
+                "loom: model completed but threads {leaked:?} were never joined \
+                 (iteration {it}, seed {seed:#x})"
+            );
+            exec.finish(main);
+        }
+    }
+}
+
+/// Explore the interleavings of `f` with the default [`Builder`].
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    Builder::new().check(f)
+}

@@ -1,0 +1,495 @@
+//! The execution runtime: a cooperative scheduler that serializes model
+//! threads (exactly one runs between two scheduling points), a seeded RNG
+//! that picks which thread runs next, and the vector-clock machinery that
+//! tracks happens-before so `cell::UnsafeCell` accesses can be checked for
+//! data races.
+//!
+//! Every synchronization operation (atomic op, fence, mutex op, condvar op,
+//! spawn/join, yield) is a *scheduling point*: the running thread offers the
+//! scheduler the chance to run somebody else first. Because the operations
+//! themselves execute under the runtime's own lock, exploring all
+//! interleavings of scheduling points explores all interleavings of the
+//! operations.
+//!
+//! Threads are real OS threads, parked on a condvar while descheduled, so
+//! `thread_local!` state in the code under test (RCU participant handles,
+//! arena blocks) behaves exactly as in production.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+// ---------------------------------------------------------------------------
+// Vector clocks
+// ---------------------------------------------------------------------------
+
+/// A vector clock: `clock[tid]` is the last tick of thread `tid` known to
+/// happen-before the owner's current point.
+pub(crate) type VClock = Vec<u64>;
+
+pub(crate) fn vjoin(into: &mut VClock, from: &VClock) {
+    if into.len() < from.len() {
+        into.resize(from.len(), 0);
+    }
+    for (i, &v) in from.iter().enumerate() {
+        if into[i] < v {
+            into[i] = v;
+        }
+    }
+}
+
+/// Does the event `(tid, tick)` happen-before a thread whose clock is
+/// `clock`?
+pub(crate) fn happens_before(event: (usize, u64), clock: &VClock) -> bool {
+    clock.get(event.0).copied().unwrap_or(0) >= event.1
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread / per-object runtime state
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub(crate) enum Run {
+    Runnable,
+    Blocked,
+    Finished,
+}
+
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub(crate) enum Blocked {
+    None,
+    /// Waiting for thread `tid` to finish.
+    Join(usize),
+    /// Waiting to acquire the mutex keyed by this address.
+    Mutex(usize),
+    /// Waiting on a condvar (keyed by address), holding nothing.
+    Condvar { cv: usize, timed: bool },
+}
+
+pub(crate) struct ThreadCtl {
+    pub run: Run,
+    pub blocked_on: Blocked,
+    pub clock: VClock,
+    /// Sync clocks observed by relaxed loads since the last acquire fence
+    /// (consumed by `fence(Acquire)`).
+    pub pending_acquire: VClock,
+    /// This thread's clock as of its last release fence (transferred by
+    /// subsequent relaxed stores).
+    pub release_fence: VClock,
+    /// Set when a timed condvar wait was woken by the deadlock-avoidance
+    /// timeout path rather than a notify.
+    pub timed_out: bool,
+}
+
+impl ThreadCtl {
+    fn new(clock: VClock) -> Self {
+        ThreadCtl {
+            run: Run::Runnable,
+            blocked_on: Blocked::None,
+            clock,
+            pending_acquire: Vec::new(),
+            release_fence: Vec::new(),
+            timed_out: false,
+        }
+    }
+}
+
+/// Happens-before state of one atomic variable (keyed by address).
+#[derive(Default)]
+pub(crate) struct AtomicMeta {
+    /// The clock transferred to acquiring loads (set by release stores,
+    /// extended by RMWs — release sequences).
+    pub sync: VClock,
+}
+
+/// Access history of one `cell::UnsafeCell` (keyed by address).
+#[derive(Default)]
+pub(crate) struct CellMeta {
+    pub last_write: Option<(usize, u64)>,
+    /// Reads since the last write (one entry per thread).
+    pub reads: Vec<(usize, u64)>,
+}
+
+/// State of one `sync::Mutex` (keyed by address).
+#[derive(Default)]
+pub(crate) struct MutexMeta {
+    pub held_by: Option<usize>,
+    /// Clock of the last unlocker (transferred to the next locker).
+    pub sync: VClock,
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+pub(crate) struct ExecState {
+    rng: u64,
+    pub threads: Vec<ThreadCtl>,
+    pub active: usize,
+    ops: u64,
+    op_budget: u64,
+    pub atomics: HashMap<usize, AtomicMeta>,
+    pub cells: HashMap<usize, CellMeta>,
+    pub mutexes: HashMap<usize, MutexMeta>,
+}
+
+impl ExecState {
+    fn splitmix(&mut self) -> u64 {
+        self.rng = self.rng.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.rng;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform choice in `0..n` (n > 0).
+    pub(crate) fn choose(&mut self, n: usize) -> usize {
+        (self.splitmix() % n as u64) as usize
+    }
+
+    fn tick(&mut self, tid: usize) -> u64 {
+        let clock = &mut self.threads[tid].clock;
+        if clock.len() <= tid {
+            clock.resize(tid + 1, 0);
+        }
+        clock[tid] += 1;
+        clock[tid]
+    }
+}
+
+/// One model execution: shared between all its threads.
+pub(crate) struct Execution {
+    state: Mutex<ExecState>,
+    cv: Condvar,
+}
+
+impl Execution {
+    pub(crate) fn new(seed: u64, op_budget: u64) -> Arc<Execution> {
+        Arc::new(Execution {
+            state: Mutex::new(ExecState {
+                rng: seed,
+                threads: Vec::new(),
+                active: 0,
+                ops: 0,
+                op_budget,
+                atomics: HashMap::new(),
+                cells: HashMap::new(),
+                mutexes: HashMap::new(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Non-poisoning lock: a panic in one model thread (a failed assertion
+    /// or a reported race) must not wedge the others while it unwinds.
+    pub(crate) fn lock(&self) -> MutexGuard<'_, ExecState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Register a new thread; returns its tid. `parent` (if any) donates its
+    /// clock — spawn happens-before everything the child does.
+    pub(crate) fn register_thread(&self, parent: Option<usize>) -> usize {
+        let mut st = self.lock();
+        let clock = match parent {
+            Some(p) => st.threads[p].clock.clone(),
+            None => Vec::new(),
+        };
+        st.threads.push(ThreadCtl::new(clock));
+        st.threads.len() - 1
+    }
+
+    /// Pick the next active thread among the runnable ones and wake it.
+    /// Called with the state lock held, by a thread that is about to wait
+    /// or exit. Panics on deadlock (live threads, none runnable).
+    pub(crate) fn reschedule(&self, st: &mut ExecState) {
+        loop {
+            let runnable: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.run == Run::Runnable)
+                .map(|(i, _)| i)
+                .collect();
+            if !runnable.is_empty() {
+                let pick = runnable[st.choose(runnable.len())];
+                st.active = pick;
+                self.cv.notify_all();
+                return;
+            }
+            // Nobody is runnable. Fire timed condvar waits (models a timeout
+            // elapsing once nothing else can make progress), else deadlock.
+            let mut woke = false;
+            for t in st.threads.iter_mut() {
+                if t.run == Run::Blocked {
+                    if let Blocked::Condvar { timed: true, .. } = t.blocked_on {
+                        t.run = Run::Runnable;
+                        t.blocked_on = Blocked::None;
+                        t.timed_out = true;
+                        woke = true;
+                    }
+                }
+            }
+            if woke {
+                continue;
+            }
+            let live = st.threads.iter().filter(|t| t.run != Run::Finished).count();
+            if live == 0 {
+                return; // execution fully drained
+            }
+            let states: Vec<String> = st
+                .threads
+                .iter()
+                .enumerate()
+                .map(|(i, t)| format!("t{}: {:?} {:?}", i, t.run, t.blocked_on))
+                .collect();
+            panic!("loom: deadlock — every live thread is blocked [{}]", states.join(", "));
+        }
+    }
+
+    /// Park the calling thread until it is runnable *and* scheduled.
+    pub(crate) fn wait_for_turn<'a>(
+        &'a self,
+        mut st: MutexGuard<'a, ExecState>,
+        me: usize,
+    ) -> MutexGuard<'a, ExecState> {
+        while !(st.active == me && st.threads[me].run == Run::Runnable) {
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        st
+    }
+
+    /// A scheduling point: offer the scheduler the chance to run another
+    /// thread before the caller's next operation. Returns with the lock
+    /// held and the caller active; callers then perform their operation
+    /// under the lock (operations are therefore serialized — sequentially
+    /// consistent — while interleavings are explored at these points).
+    pub(crate) fn schedule<'a>(
+        &'a self,
+        mut st: MutexGuard<'a, ExecState>,
+        me: usize,
+    ) -> MutexGuard<'a, ExecState> {
+        st.ops += 1;
+        if st.ops > st.op_budget {
+            panic!(
+                "loom: op budget ({}) exceeded — livelock, or the model is too large \
+                 (shrink it or raise Builder.op_budget)",
+                st.op_budget
+            );
+        }
+        self.reschedule(&mut st);
+        self.wait_for_turn(st, me)
+    }
+
+    /// Block the calling thread on `why` until another thread makes it
+    /// runnable again (unlock, notify, join target finishing).
+    pub(crate) fn block<'a>(
+        &'a self,
+        mut st: MutexGuard<'a, ExecState>,
+        me: usize,
+        why: Blocked,
+    ) -> MutexGuard<'a, ExecState> {
+        st.threads[me].run = Run::Blocked;
+        st.threads[me].blocked_on = why;
+        self.reschedule(&mut st);
+        self.wait_for_turn(st, me)
+    }
+
+    /// Mark `me` finished, wake joiners, and hand the schedule on.
+    pub(crate) fn finish(&self, me: usize) {
+        let mut st = self.lock();
+        st.threads[me].run = Run::Finished;
+        let final_clock = st.threads[me].clock.clone();
+        for t in st.threads.iter_mut() {
+            if t.run == Run::Blocked && t.blocked_on == Blocked::Join(me) {
+                t.run = Run::Runnable;
+                t.blocked_on = Blocked::None;
+                // join(t) happens-after everything t did.
+                vjoin(&mut t.clock, &final_clock);
+            }
+        }
+        self.reschedule(&mut st);
+    }
+
+    /// Wake every thread blocked on the mutex at `addr`.
+    pub(crate) fn wake_mutex_waiters(st: &mut ExecState, addr: usize) {
+        for t in st.threads.iter_mut() {
+            if t.run == Run::Blocked && t.blocked_on == Blocked::Mutex(addr) {
+                t.run = Run::Runnable;
+                t.blocked_on = Blocked::None;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread context (TLS)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Execution>, usize)>> = const { RefCell::new(None) };
+}
+
+pub(crate) fn set_ctx(exec: Arc<Execution>, tid: usize) {
+    CTX.with(|c| *c.borrow_mut() = Some((exec, tid)));
+}
+
+pub(crate) fn clear_ctx() {
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+pub(crate) fn ctx() -> Option<(Arc<Execution>, usize)> {
+    // `try_with`: TLS destructors (RCU participant unregister, arena-block
+    // close) may run loom-shimmed atomics after CTX is gone — they fall
+    // back to plain execution, which is exactly right for teardown.
+    CTX.try_with(|c| c.borrow().clone()).ok().flatten()
+}
+
+// ---------------------------------------------------------------------------
+// Operation hooks used by atomic.rs / cell.rs / sync.rs / thread.rs
+// ---------------------------------------------------------------------------
+
+/// Memory-order effect classification for the clock transfer rules.
+pub(crate) fn is_acquire(o: Ordering) -> bool {
+    matches!(o, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+pub(crate) fn is_release(o: Ordering) -> bool {
+    matches!(o, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// Run `op` as a scheduled atomic **load** of the variable at `addr`.
+/// Returns `op()`'s result, or `None` if no model is active (caller falls
+/// back to the plain operation).
+pub(crate) fn atomic_load<R>(addr: usize, order: Ordering, op: impl FnOnce() -> R) -> Option<R> {
+    let (exec, me) = ctx()?;
+    let st = exec.lock();
+    let mut st = exec.schedule(st, me);
+    st.tick(me);
+    let r = op();
+    let sync = st.atomics.entry(addr).or_default().sync.clone();
+    let t = &mut st.threads[me];
+    if is_acquire(order) {
+        vjoin(&mut t.clock, &sync);
+    } else {
+        vjoin(&mut t.pending_acquire, &sync);
+    }
+    Some(r)
+}
+
+/// Run `op` as a scheduled atomic **store**.
+pub(crate) fn atomic_store<R>(addr: usize, order: Ordering, op: impl FnOnce() -> R) -> Option<R> {
+    let (exec, me) = ctx()?;
+    let st = exec.lock();
+    let mut st = exec.schedule(st, me);
+    st.tick(me);
+    let r = op();
+    let mut sync = st.threads[me].release_fence.clone();
+    if is_release(order) {
+        let clock = st.threads[me].clock.clone();
+        vjoin(&mut sync, &clock);
+    }
+    // A pure store starts a fresh release sequence: replace, don't join.
+    st.atomics.entry(addr).or_default().sync = sync;
+    Some(r)
+}
+
+/// Run `op` as a scheduled atomic **read-modify-write**. `op` returns
+/// `(result, wrote)`; when `wrote` is false (failed compare_exchange) only
+/// the load side applies, with `failure_order`.
+pub(crate) fn atomic_rmw<R>(
+    addr: usize,
+    success: Ordering,
+    failure: Ordering,
+    op: impl FnOnce() -> (R, bool),
+) -> Option<R> {
+    let (exec, me) = ctx()?;
+    let st = exec.lock();
+    let mut st = exec.schedule(st, me);
+    st.tick(me);
+    let (r, wrote) = op();
+    let order = if wrote { success } else { failure };
+    let sync = st.atomics.entry(addr).or_default().sync.clone();
+    {
+        let t = &mut st.threads[me];
+        if is_acquire(order) {
+            vjoin(&mut t.clock, &sync);
+        } else {
+            vjoin(&mut t.pending_acquire, &sync);
+        }
+    }
+    if wrote {
+        // RMWs extend the release sequence: join into the existing sync
+        // clock (even a relaxed RMW preserves prior release heads).
+        let mut contrib = st.threads[me].release_fence.clone();
+        if is_release(success) {
+            let clock = st.threads[me].clock.clone();
+            vjoin(&mut contrib, &clock);
+        }
+        vjoin(&mut st.atomics.entry(addr).or_default().sync, &contrib);
+    }
+    Some(r)
+}
+
+/// Scheduled memory fence.
+pub(crate) fn fence(order: Ordering) -> Option<()> {
+    let (exec, me) = ctx()?;
+    let st = exec.lock();
+    let mut st = exec.schedule(st, me);
+    st.tick(me);
+    let t = &mut st.threads[me];
+    if is_acquire(order) {
+        let pending = std::mem::take(&mut t.pending_acquire);
+        vjoin(&mut t.clock, &pending);
+    }
+    if is_release(order) {
+        t.release_fence = t.clock.clone();
+    }
+    Some(())
+}
+
+/// Scheduled access to an `UnsafeCell`; checks for data races against the
+/// recorded access history. Panics with a race report on conflict.
+pub(crate) fn cell_access(addr: usize, write: bool) -> Option<()> {
+    let (exec, me) = ctx()?;
+    let st = exec.lock();
+    let mut st = exec.schedule(st, me);
+    let now = st.tick(me);
+    let clock = st.threads[me].clock.clone();
+    let meta = st.cells.entry(addr).or_default();
+    if let Some(w) = meta.last_write {
+        if w.0 != me && !happens_before(w, &clock) {
+            panic!(
+                "loom: data race on UnsafeCell {:#x}: {} by t{} is concurrent with write by t{}",
+                addr,
+                if write { "write" } else { "read" },
+                me,
+                w.0
+            );
+        }
+    }
+    if write {
+        for &r in &meta.reads {
+            if r.0 != me && !happens_before(r, &clock) {
+                panic!(
+                    "loom: data race on UnsafeCell {:#x}: write by t{} is concurrent with read by t{}",
+                    addr, me, r.0
+                );
+            }
+        }
+        meta.last_write = Some((me, now));
+        meta.reads.clear();
+    } else {
+        meta.reads.retain(|r| r.0 != me);
+        meta.reads.push((me, now));
+    }
+    Some(())
+}
+
+/// Plain scheduling point (yield / spin hint).
+pub(crate) fn yield_point() -> Option<()> {
+    let (exec, me) = ctx()?;
+    let st = exec.lock();
+    let _st = exec.schedule(st, me);
+    Some(())
+}

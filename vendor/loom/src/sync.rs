@@ -1,0 +1,308 @@
+//! Model-aware `Mutex`/`Condvar` (used by the shim for the bounded ingest
+//! queue). Inside a model, blocking is cooperative: a contended `lock` or a
+//! `wait` parks the thread in the scheduler, which then explores the other
+//! threads; lost-wakeup and lock-ordering deadlocks surface as a model
+//! panic instead of a hung test. Lock/unlock transfer happens-before via
+//! the mutex's clock, like a release/acquire pair.
+//!
+//! `Arc` is re-exported from std: its internal synchronization is not under
+//! test, and real `Arc` keeps the models allocation-faithful.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{LockResult, PoisonError};
+
+use crate::rt::{self, vjoin, Blocked, Run};
+
+pub use std::sync::Arc;
+
+pub mod atomic {
+    pub use crate::atomic::{
+        fence, AtomicBool, AtomicI64, AtomicPtr, AtomicU32, AtomicU64, AtomicU8, AtomicUsize,
+    };
+    pub use std::sync::atomic::Ordering;
+}
+
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+}
+
+pub struct MutexGuard<'a, T> {
+    mx: &'a Mutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    /// True when acquired under an active model (scheduler bookkeeping on
+    /// drop); captured at acquisition so teardown stays consistent even if
+    /// the model ends while a guard is alive.
+    model: bool,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(value: T) -> Self {
+        Mutex { inner: std::sync::Mutex::new(value) }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const _ as usize
+    }
+
+    /// Acquire the scheduler-level ownership of this mutex (model path).
+    fn model_acquire(&self, exec: &std::sync::Arc<rt::Execution>, me: usize) {
+        let addr = self.addr();
+        let st = exec.lock();
+        let mut st = exec.schedule(st, me);
+        loop {
+            let meta = st.mutexes.entry(addr).or_default();
+            if meta.held_by.is_none() {
+                meta.held_by = Some(me);
+                let sync = meta.sync.clone();
+                vjoin(&mut st.threads[me].clock, &sync);
+                return;
+            }
+            st = exec.block(st, me, Blocked::Mutex(addr));
+        }
+    }
+
+    /// Release the scheduler-level ownership (model path). The real inner
+    /// guard must already be dropped.
+    fn model_release(&self, exec: &std::sync::Arc<rt::Execution>, me: usize) {
+        let addr = self.addr();
+        let mut st = exec.lock();
+        let clock = st.threads[me].clock.clone();
+        let meta = st.mutexes.entry(addr).or_default();
+        meta.held_by = None;
+        meta.sync = clock;
+        rt::Execution::wake_mutex_waiters(&mut st, addr);
+    }
+
+    fn take_inner(&self) -> std::sync::MutexGuard<'_, T> {
+        match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => {
+                unreachable!("loom: scheduler granted a mutex that is still held")
+            }
+        }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match rt::ctx() {
+            Some((exec, me)) => {
+                self.model_acquire(&exec, me);
+                Ok(MutexGuard { mx: self, inner: Some(self.take_inner()), model: true })
+            }
+            None => {
+                let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+                Ok(MutexGuard { mx: self, inner: Some(g), model: false })
+            }
+        }
+    }
+
+    pub fn try_lock(&self) -> Result<MutexGuard<'_, T>, std::sync::TryLockError<MutexGuard<'_, T>>>
+    {
+        match rt::ctx() {
+            Some((exec, me)) => {
+                let addr = self.addr();
+                let st = exec.lock();
+                let mut st = exec.schedule(st, me);
+                let meta = st.mutexes.entry(addr).or_default();
+                if meta.held_by.is_none() {
+                    meta.held_by = Some(me);
+                    let sync = meta.sync.clone();
+                    vjoin(&mut st.threads[me].clock, &sync);
+                    drop(st);
+                    Ok(MutexGuard { mx: self, inner: Some(self.take_inner()), model: true })
+                } else {
+                    Err(std::sync::TryLockError::WouldBlock)
+                }
+            }
+            None => match self.inner.try_lock() {
+                Ok(g) => Ok(MutexGuard { mx: self, inner: Some(g), model: false }),
+                Err(std::sync::TryLockError::Poisoned(p)) => {
+                    Ok(MutexGuard { mx: self, inner: Some(p.into_inner()), model: false })
+                }
+                Err(std::sync::TryLockError::WouldBlock) => {
+                    Err(std::sync::TryLockError::WouldBlock)
+                }
+            },
+        }
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        Ok(self.inner.get_mut().unwrap_or_else(PoisonError::into_inner))
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        Ok(self.inner.into_inner().unwrap_or_else(PoisonError::into_inner))
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard accessed after release")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard accessed after release")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the real lock first, then the scheduler-level ownership:
+        // the next model thread only touches the inner mutex after the
+        // scheduler grants it, so this order can never produce WouldBlock.
+        self.inner = None;
+        if self.model {
+            if let Some((exec, me)) = rt::ctx() {
+                self.mx.model_release(&exec, me);
+            }
+        }
+    }
+}
+
+/// Result of [`Condvar::wait_timeout`]. (Own type: std's cannot be
+/// constructed outside std.)
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Condvar { inner: std::sync::Condvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const _ as usize
+    }
+
+    fn model_wait<'a, T>(
+        &self,
+        exec: std::sync::Arc<rt::Execution>,
+        me: usize,
+        mut guard: MutexGuard<'a, T>,
+        timed: bool,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        let mx = guard.mx;
+        // Atomically (w.r.t. the scheduler) release the mutex and park on
+        // the condvar: both happen under one state lock, so a notify cannot
+        // slip between them (no lost wakeups by construction).
+        guard.inner = None;
+        guard.model = false; // neutralize the guard's Drop bookkeeping
+        {
+            let mut st = exec.lock();
+            let clock = st.threads[me].clock.clone();
+            let addr = mx.addr();
+            let meta = st.mutexes.entry(addr).or_default();
+            meta.held_by = None;
+            meta.sync = clock;
+            rt::Execution::wake_mutex_waiters(&mut st, addr);
+            st = exec.block(st, me, Blocked::Condvar { cv: self.addr(), timed });
+            let t = &mut st.threads[me];
+            let timed_out = std::mem::take(&mut t.timed_out);
+            drop(st);
+            drop(guard);
+            // Re-acquire the mutex before returning, like std.
+            mx.model_acquire(&exec, me);
+            (
+                MutexGuard { mx, inner: Some(mx.take_inner()), model: true },
+                WaitTimeoutResult(timed_out),
+            )
+        }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match rt::ctx() {
+            Some((exec, me)) => {
+                let (g, _) = self.model_wait(exec, me, guard, false);
+                Ok(g)
+            }
+            None => {
+                let mut guard = guard;
+                let inner = guard.inner.take().expect("guard accessed after release");
+                let inner = self.inner.wait(inner).unwrap_or_else(PoisonError::into_inner);
+                guard.inner = Some(inner);
+                Ok(guard)
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match rt::ctx() {
+            Some((exec, me)) => {
+                // Models have no clock: the timeout fires exactly when no
+                // other thread can make progress (see rt::reschedule).
+                Ok(self.model_wait(exec, me, guard, true))
+            }
+            None => {
+                let mut guard = guard;
+                let inner = guard.inner.take().expect("guard accessed after release");
+                let (inner, tr) =
+                    self.inner.wait_timeout(inner, dur).unwrap_or_else(PoisonError::into_inner);
+                guard.inner = Some(inner);
+                Ok((guard, WaitTimeoutResult(tr.timed_out())))
+            }
+        }
+    }
+
+    fn model_notify(&self, all: bool) -> Option<()> {
+        let (exec, me) = rt::ctx()?;
+        let st = exec.lock();
+        let mut st = exec.schedule(st, me);
+        let cv = self.addr();
+        let mut waiters: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                t.run == Run::Blocked
+                    && matches!(t.blocked_on, Blocked::Condvar { cv: c, .. } if c == cv)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if waiters.is_empty() {
+            return Some(());
+        }
+        if !all {
+            let pick = st.choose(waiters.len());
+            waiters = vec![waiters[pick]];
+        }
+        for w in waiters {
+            st.threads[w].run = Run::Runnable;
+            st.threads[w].blocked_on = Blocked::None;
+        }
+        Some(())
+    }
+
+    pub fn notify_one(&self) {
+        if self.model_notify(false).is_none() {
+            self.inner.notify_one();
+        }
+    }
+
+    pub fn notify_all(&self) {
+        if self.model_notify(true).is_none() {
+            self.inner.notify_all();
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Model-aware threads. Inside a model, `spawn` registers the child with
+//! the scheduler (spawn happens-before everything the child does, and
+//! `join` happens-after everything it did) and runs it on a real OS thread
+//! so `thread_local!` state behaves as in production. Outside a model this
+//! is plain `std::thread`.
+
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::rt::{self, Blocked, Run};
+
+enum Handle<T> {
+    /// Spawned inside a model.
+    Model {
+        exec: Arc<crate::rt::Execution>,
+        tid: usize,
+        result: Arc<Mutex<Option<std::thread::Result<T>>>>,
+        os: std::thread::JoinHandle<()>,
+    },
+    /// Spawned outside any model: plain std thread.
+    Plain(std::thread::JoinHandle<T>),
+}
+
+pub struct JoinHandle<T> {
+    inner: Handle<T>,
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let Some((exec, me)) = rt::ctx() else {
+        return JoinHandle { inner: Handle::Plain(std::thread::spawn(f)) };
+    };
+
+    // Spawning is itself a scheduling point; tick the parent so the
+    // child's inherited clock includes it.
+    {
+        let st = exec.lock();
+        let mut st = exec.schedule(st, me);
+        let t = &mut st.threads[me];
+        if t.clock.len() <= me {
+            t.clock.resize(me + 1, 0);
+        }
+        t.clock[me] += 1;
+    }
+    let tid = exec.register_thread(Some(me));
+
+    let result: Arc<Mutex<Option<std::thread::Result<T>>>> = Arc::new(Mutex::new(None));
+    let slot = Arc::clone(&result);
+    let child_exec = Arc::clone(&exec);
+    let os = std::thread::spawn(move || {
+        rt::set_ctx(Arc::clone(&child_exec), tid);
+        // Park until first scheduled.
+        {
+            let st = child_exec.lock();
+            let _st = child_exec.wait_for_turn(st, tid);
+        }
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+        *slot.lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
+        // Clear the context *before* finishing so this thread's TLS
+        // destructors (which run after) fall back to plain execution
+        // instead of asking a scheduler that no longer tracks the thread.
+        rt::clear_ctx();
+        child_exec.finish(tid);
+    });
+
+    JoinHandle { inner: Handle::Model { exec, tid, result, os } }
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.inner {
+            Handle::Plain(h) => h.join(),
+            Handle::Model { exec, tid, result, os } => {
+                let me = rt::ctx().map(|(_, tid)| tid);
+                if let Some(me) = me {
+                    let st = exec.lock();
+                    let mut st = exec.schedule(st, me);
+                    if st.threads[tid].run != Run::Finished {
+                        st = exec.block(st, me, Blocked::Join(tid));
+                    }
+                    // `finish(tid)` already joined the target's final clock
+                    // into ours if we blocked; if it was already finished,
+                    // join it here.
+                    let target_clock = st.threads[tid].clock.clone();
+                    crate::rt::vjoin(&mut st.threads[me].clock, &target_clock);
+                }
+                // The scheduler-level join happened; wait out OS-level
+                // termination too so thread_local destructors (RCU
+                // unregister, arena-block close) have fully run before the
+                // model continues — mirrors std join semantics.
+                let _ = os.join();
+                result
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .take()
+                    .expect("loom: joined thread produced no result")
+            }
+        }
+    }
+}
+
+/// Scheduling point (and a plain yield outside a model).
+pub fn yield_now() {
+    if rt::yield_point().is_none() {
+        std::thread::yield_now();
+    }
+}
